@@ -1,0 +1,116 @@
+//! End-to-end driver (DESIGN.md §E2E): exercises every layer of the stack
+//! on a real small workload.
+//!
+//! 1. Generates the synthetic digits dataset (or real MNIST if present).
+//! 2. Trains the 1-layer softmax classifier with the pure-Rust SGD trainer,
+//!    logging the loss curve.
+//! 3. Sweeps quantized inference accuracy over k for the three rounding
+//!    schemes (the paper's Fig 9/13 shape) using the Rust engines.
+//! 4. Loads the AOT-compiled JAX/Pallas artifact via PJRT and serves
+//!    batched requests through the L3 engine, comparing its predictions
+//!    with the native path and reporting latency/throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example mnist_e2e`
+//! Results recorded in EXPERIMENTS.md §End-to-end.
+
+use dither::coordinator::Engine;
+use dither::data::{Dataset, Task};
+use dither::linalg::Variant;
+use dither::nn::{quantized_accuracy, ActivationRanges, Mlp, QuantInferenceConfig};
+use dither::rounding::RoundingMode;
+use dither::train::{train, TrainConfig};
+use dither::util::rng::Xoshiro256pp;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. data -------------------------------------------------------
+    let (train_set, test_set, source) =
+        Dataset::load_or_synthesize(Task::Digits, 4000, 1000, 0xE2E);
+    println!(
+        "dataset: {} ({} train / {} test, classes {:?})",
+        source,
+        train_set.len(),
+        test_set.len(),
+        train_set.class_histogram()
+    );
+
+    // ---- 2. train ------------------------------------------------------
+    let mut rng = Xoshiro256pp::new(0xE2E);
+    let mut mlp = Mlp::single_layer(784, 10, &mut rng);
+    let cfg = TrainConfig {
+        epochs: 10,
+        batch_size: 64,
+        lr: 0.15,
+        momentum: 0.9,
+        seed: 0xE2E,
+        verbose: false,
+    };
+    println!("\ntraining 1-layer softmax (784x10) with SGD+momentum:");
+    let t = Instant::now();
+    let history = train(&mut mlp, &train_set, &cfg);
+    for h in &history {
+        println!("  epoch {:>2}  loss {:.4}  train acc {:.4}", h.epoch, h.loss, h.accuracy);
+    }
+    mlp.normalize_weights();
+    let float_acc = mlp.accuracy(&test_set.images, &test_set.labels);
+    println!(
+        "trained in {:.1}s; float test accuracy {:.4}",
+        t.elapsed().as_secs_f64(),
+        float_acc
+    );
+
+    // ---- 3. quantized inference sweep (native Rust engines) -------------
+    println!("\nquantized accuracy vs k (separate placement, 5 trials):\n");
+    println!("  {:>3} {:>14} {:>14} {:>14}", "k", "deterministic", "dither", "stochastic");
+    let ranges = ActivationRanges::calibrate(&mlp, &test_set.images);
+    for k in 1..=8u32 {
+        let mut row = Vec::new();
+        for mode in RoundingMode::ALL {
+            let trials = if mode == RoundingMode::Deterministic { 1 } else { 5 };
+            let mut acc = 0.0;
+            for t in 0..trials {
+                let qcfg = QuantInferenceConfig {
+                    bits: k,
+                    mode,
+                    variant: Variant::Separate,
+                    seed: 0x5EED ^ (t << 16) ^ k as u64,
+                };
+                acc += quantized_accuracy(&mlp, &test_set.images, &test_set.labels, &ranges, &qcfg)
+                    / trials as f64;
+            }
+            row.push(acc);
+        }
+        println!("  {k:>3} {:>14.4} {:>14.4} {:>14.4}", row[0], row[1], row[2]);
+    }
+
+    // ---- 4. serve through the AOT artifact (PJRT) -----------------------
+    println!("\nserving through the AOT JAX/Pallas artifact (PJRT CPU):");
+    let engine = Engine::new("artifacts", 2000, 0xE2E)?;
+    let batch: Vec<&[f64]> = (0..256.min(test_set.len()))
+        .map(|i| test_set.images.row(i))
+        .collect();
+    // Warmup (compiles the executable).
+    let _ = engine.infer_batch("digits_linear", 4, RoundingMode::Dither, &batch[..1])?;
+    let t = Instant::now();
+    let outputs = engine.infer_batch("digits_linear", 4, RoundingMode::Dither, &batch)?;
+    let elapsed = t.elapsed().as_secs_f64();
+    let correct = outputs
+        .iter()
+        .zip(&test_set.labels)
+        .filter(|(o, &l)| o.pred == l)
+        .count();
+    println!(
+        "  {} requests in {:.1} ms  ({:.0} req/s, {:.2} ms/req batched)",
+        batch.len(),
+        elapsed * 1e3,
+        batch.len() as f64 / elapsed,
+        elapsed * 1e3 / batch.len() as f64
+    );
+    println!(
+        "  artifact-path accuracy @ k=4 dither: {:.4} (engine model, batch {})",
+        correct as f64 / batch.len() as f64,
+        batch.len()
+    );
+    println!("\nall layers compose: data -> SGD -> quantized engines -> PJRT artifact ✓");
+    Ok(())
+}

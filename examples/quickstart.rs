@@ -1,0 +1,74 @@
+//! Quickstart: the bitstream computing API in five minutes.
+//!
+//! Encodes real numbers as pulse sequences under the three schemes,
+//! multiplies and averages them, and prints the accuracy comparison that
+//! motivates the paper.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dither::bitstream::{
+    average, evaluate, multiply, represent, EvalConfig, Op, Scheme,
+};
+use dither::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut rng = Xoshiro256pp::new(42);
+    let (x, y) = (0.3721, 0.8164);
+    let n = 256;
+
+    println!("Representing x = {x} with N = {n} pulses\n");
+    for scheme in Scheme::ALL {
+        let est = represent(scheme, x, n, &mut rng);
+        println!(
+            "  {:<14} X_s = {est:.5}   error {:+.5}",
+            scheme.name(),
+            est - x
+        );
+    }
+
+    println!("\nMultiplying x*y = {:.5} (bitwise AND of the sequences)\n", x * y);
+    for scheme in Scheme::ALL {
+        let est = multiply(scheme, x, y, n, &mut rng);
+        println!(
+            "  {:<14} Z_s = {est:.5}   error {:+.5}",
+            scheme.name(),
+            est - x * y
+        );
+    }
+
+    println!(
+        "\nAveraging (x+y)/2 = {:.5} (MUX with a control sequence)\n",
+        (x + y) / 2.0
+    );
+    for scheme in Scheme::ALL {
+        let est = average(scheme, x, y, n, &mut rng);
+        println!(
+            "  {:<14} U_s = {est:.5}   error {:+.5}",
+            scheme.name(),
+            est - (x + y) / 2.0
+        );
+    }
+
+    // The paper's headline: dither computing gets the deterministic
+    // variant's O(1/N²) EMSE *and* stochastic computing's zero bias.
+    println!("\nEMSE for representing x ~ U[0,1] (100 pairs x 100 trials):\n");
+    let cfg = EvalConfig {
+        pairs: 100,
+        trials: 100,
+        seed: 7,
+    };
+    let pairs = cfg.draw_pairs();
+    println!("  {:>6} {:>14} {:>14} {:>14}", "N", "stochastic", "determ.", "dither");
+    for n in [16usize, 64, 256] {
+        let row: Vec<f64> = Scheme::ALL
+            .iter()
+            .map(|&s| evaluate(s, Op::Represent, n, &pairs, &cfg).emse)
+            .collect();
+        println!(
+            "  {n:>6} {:>14.3e} {:>14.3e} {:>14.3e}",
+            row[0], row[1], row[2]
+        );
+    }
+    println!("\nstochastic falls ~1/N; deterministic & dither fall ~1/N².");
+    println!("dither is additionally unbiased — the best of both (Table I).");
+}

@@ -1,0 +1,59 @@
+//! Client for the dither inference server: sends a handful of requests with
+//! different rounding configurations over the newline-JSON protocol and
+//! prints the responses plus the server's metrics snapshot.
+//!
+//! Start the server first:  `dither serve --addr 127.0.0.1:7878`
+//! Then: `cargo run --release --example serve_client [-- --addr 127.0.0.1:7878]`
+
+use dither::data::{Dataset, Task};
+use dither::util::cli::Args;
+use dither::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let stream = TcpStream::connect(&addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+
+    let ds = Dataset::synthesize(Task::Digits, 8, 0xC11E);
+    let mut line = String::new();
+
+    // Ping.
+    writeln!(writer, "{{\"cmd\":\"ping\"}}")?;
+    reader.read_line(&mut line)?;
+    print!("ping -> {line}");
+
+    // A/B the rounding schemes on the same images.
+    for (id, mode, k) in [
+        (1u64, "dither", 2u32),
+        (2, "stochastic", 2),
+        (3, "deterministic", 2),
+        (4, "dither", 8),
+    ] {
+        let img = ds.images.row((id as usize - 1) % ds.len());
+        let pixels = Json::nums(img);
+        let req = format!(
+            "{{\"id\":{id},\"model\":\"digits_linear\",\"k\":{k},\"mode\":\"{mode}\",\"pixels\":{pixels}}}"
+        );
+        writeln!(writer, "{req}")?;
+        line.clear();
+        reader.read_line(&mut line)?;
+        let resp = Json::parse(line.trim()).unwrap();
+        println!(
+            "id={id} mode={mode:<14} k={k}  pred={} latency={}us batch={}",
+            resp.get("pred").and_then(Json::as_f64).unwrap_or(-1.0),
+            resp.get("latency_us").and_then(Json::as_f64).unwrap_or(-1.0),
+            resp.get("batch").and_then(Json::as_f64).unwrap_or(-1.0),
+        );
+    }
+
+    // Metrics.
+    writeln!(writer, "{{\"cmd\":\"stats\"}}")?;
+    line.clear();
+    reader.read_line(&mut line)?;
+    println!("\nserver stats: {}", line.trim());
+    Ok(())
+}

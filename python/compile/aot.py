@@ -1,0 +1,141 @@
+"""AOT lowering: JAX models -> HLO text artifacts for the Rust runtime.
+
+Interchange is HLO *text*, not a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts]
+
+Emits one artifact per (model, batch size) plus ``manifest.json`` recording
+each artifact's input signature, which the Rust runtime validates at load.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Batch sizes baked into the serving artifacts (one executable each).
+BATCH_SIZES = (1, 32, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def scalar(dtype):
+    return jax.ShapeDtypeStruct((), dtype)
+
+
+def model_specs(batch):
+    """(name, fn, example-arg specs, human input signature) per artifact."""
+    i32 = jnp.int32
+    u32 = jnp.uint32
+    return [
+        (
+            f"digits_linear_b{batch}",
+            model.digits_linear_forward,
+            (
+                f32(batch, 784),
+                f32(784, 10),
+                f32(10),
+                scalar(i32),
+                scalar(i32),
+                scalar(u32),
+            ),
+            ["x(b,784)f32", "w(784,10)f32", "b(10)f32", "k()i32", "mode()i32", "seed()u32"],
+        ),
+        (
+            f"fashion_mlp_b{batch}",
+            model.fashion_mlp_forward,
+            (
+                f32(batch, 784),
+                f32(784, 128),
+                f32(128),
+                f32(128, 64),
+                f32(64),
+                f32(64, 10),
+                f32(10),
+                scalar(i32),
+                scalar(i32),
+                scalar(u32),
+                scalar(jnp.float32),
+                scalar(jnp.float32),
+            ),
+            [
+                "x(b,784)f32",
+                "w1(784,128)f32",
+                "b1(128)f32",
+                "w2(128,64)f32",
+                "b2(64)f32",
+                "w3(64,10)f32",
+                "b3(10)f32",
+                "k()i32",
+                "mode()i32",
+                "seed()u32",
+                "r1()f32",
+                "r2()f32",
+            ],
+        ),
+        (
+            f"digits_linear_float_b{batch}",
+            model.digits_linear_float,
+            (f32(batch, 784), f32(784, 10), f32(10)),
+            ["x(b,784)f32", "w(784,10)f32", "b(10)f32"],
+        ),
+    ]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--batches", default=",".join(str(b) for b in BATCH_SIZES),
+        help="comma-separated batch sizes",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",") if b]
+
+    manifest = {"format": "hlo-text", "dither_n": model.DITHER_N, "artifacts": []}
+    for batch in batches:
+        for name, fn, specs, signature in model_specs(batch):
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "batch": batch,
+                    "inputs": signature,
+                    "outputs": ["logits(b,10)f32"],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Counter-based PRNG used inside the Pallas kernels (Layer 1).
+
+Stateless uniform randomness from (seed, counter) pairs via a murmur3-style
+uint32 finalizer. Being counter-based means the kernel needs no PRNG state
+threaded through the grid: every (element, use) pair hashes its own index,
+mirroring `counter_hash` in `rust/src/util/rng.rs` (structurally — the Rust
+side uses the 64-bit SplitMix finalizer; both are stateless mixes of
+seed and counter).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# numpy scalars, not jnp arrays: module-level jnp arrays would be captured
+# as constants (rejected by pallas_call), and bare Python ints this large
+# overflow JAX's weak-int32 parsing.
+_C1 = np.uint32(0x9E3779B9)
+_C2 = np.uint32(0x85EBCA6B)
+_C3 = np.uint32(0xC2B2AE35)
+
+
+def hash_u32(seed, counter):
+    """Mix a uint32 seed with a uint32 counter array -> uint32 array.
+
+    murmur3 fmix32 applied to ``seed ^ (counter * phi32)``; passes basic
+    avalanche expectations (each input bit flips ~half the output bits),
+    which is plenty for rounding decisions.
+    """
+    seed = seed.astype(jnp.uint32) if hasattr(seed, "astype") else jnp.uint32(seed)
+    x = counter.astype(jnp.uint32) * _C1 ^ seed
+    x = (x ^ (x >> 16)) * _C2
+    x = (x ^ (x >> 13)) * _C3
+    return x ^ (x >> 16)
+
+
+def uniform01(seed, counter):
+    """Uniform float32 in [0, 1) from (seed, counter)."""
+    return hash_u32(seed, counter).astype(jnp.float32) * (1.0 / 2**32)

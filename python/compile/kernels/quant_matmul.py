@@ -1,0 +1,160 @@
+"""Layer 1: Pallas kernels for k-bit quantized matmul with dither rounding.
+
+Two kernels:
+
+* :func:`quantize_pallas` — elementwise k-bit quantization with a runtime-
+  selectable rounding mode (deterministic / stochastic / dither), gridded
+  over row blocks. This is the `Separate`-placement building block (§VIII).
+* :func:`quant_matmul_pallas` — the fused hot path: per grid step an
+  ``(TI × q)`` activation block is quantized on the VPU and multiplied
+  against the (pre-quantized, resident) weight matrix on the MXU.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): quantization is elementwise
+VPU work on VMEM-resident blocks; the MXU consumes the *dequantized* f32
+blocks. Rounding randomness is a counter hash of the element's flat index —
+no PRNG state crosses grid steps, so the grid can be executed in any order
+(exactly how dither rounding's sequential index generalizes to a
+data-parallel device). ``interpret=True`` everywhere: the CPU PJRT client
+cannot run Mosaic custom-calls; real-TPU numbers are estimated in DESIGN.md.
+
+The quantizer parameters ``k`` (bit width), ``mode`` (rounding scheme),
+``seed``, and the source range ``(lo, hi)`` are all *runtime* inputs, so a
+single compiled artifact serves every configuration the coordinator asks
+for. All kernels share their arithmetic with ``ref.py`` (the pure-jnp
+oracle); pytest asserts elementwise equality.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import prng, ref
+
+
+def _quantize_block(x, k, mode, seed, lo, hi, n, row_base, cols, axis):
+    """Shared in-kernel quantization arithmetic (same math as ref.py).
+
+    ``row_base`` is the block's first *global* row (grid offset); dither
+    positions stratify the contraction axis with a per-line rotation —
+    see ``ref.dither_positions`` for the rationale.
+    """
+    levels = jnp.exp2(k) - 1.0
+    step = (hi - lo) / levels
+    s = jnp.clip((x - lo) / (hi - lo) * levels, 0.0, levels)
+    fl = jnp.floor(s)
+    frac = s - fl
+    rows_idx = row_base + jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0)
+    cols_idx = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+    flat = rows_idx * jnp.uint32(cols) + cols_idx
+    u = prng.uniform01(seed, flat)
+    if axis == 1:
+        rot = prng.hash_u32(seed + jnp.uint32(0x51), rows_idx)
+        pos = (cols_idx + rot) % jnp.uint32(n)
+    else:
+        rot = prng.hash_u32(seed + jnp.uint32(0x51), cols_idx)
+        pos = (rows_idx + rot) % jnp.uint32(n)
+    bit = ref.round_bits(frac, mode, n, pos, u)
+    return lo + (fl + bit.astype(jnp.float32)) * step
+
+
+def _scalar_args(k, mode, seed, rng):
+    """Normalize runtime scalars to the shapes the kernels expect."""
+    k = jnp.asarray(k, jnp.int32).reshape(1)
+    mode = jnp.asarray(mode, jnp.int32).reshape(1)
+    seed = jnp.asarray(seed, jnp.uint32).reshape(1)
+    rng = jnp.asarray(rng, jnp.float32).reshape(2)
+    return k, mode, seed, rng
+
+
+def _quantize_kernel(
+    x_ref, k_ref, mode_ref, seed_ref, range_ref, o_ref, *, n, block_rows, cols, axis
+):
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    k = k_ref[0].astype(jnp.float32)
+    mode = mode_ref[0]
+    seed = seed_ref[0].astype(jnp.uint32)
+    lo = range_ref[0]
+    hi = range_ref[1]
+    row_base = pid.astype(jnp.uint32) * jnp.uint32(block_rows)
+    o_ref[...] = _quantize_block(x, k, mode, seed, lo, hi, n, row_base, cols, axis)
+
+
+def quantize_pallas(x, k, mode, seed, lo, hi, n=64, block_rows=128, axis=1):
+    """Quantize ``x`` once per element with the k-bit quantizer (§VII).
+
+    ``k``, ``mode``, ``seed``, ``lo``/``hi`` are runtime scalars; ``n`` (the
+    dither period), the block shape and the dither sweep ``axis`` are
+    static. Rows are processed in VMEM blocks of ``block_rows``.
+    """
+    rows, cols = x.shape
+    k, mode, seed, rng = _scalar_args(k, mode, seed, jnp.stack([jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32)]))
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    kernel = functools.partial(
+        _quantize_kernel, n=n, block_rows=block_rows, cols=cols, axis=axis
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), k, mode, seed, rng)
+
+
+def _matmul_kernel(
+    x_ref, w_ref, k_ref, mode_ref, seed_ref, range_ref, o_ref, *, n, block_rows, q
+):
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    w = w_ref[...]  # already quantized, VMEM-resident
+    k = k_ref[0].astype(jnp.float32)
+    mode = mode_ref[0]
+    seed = seed_ref[0].astype(jnp.uint32)
+    lo = range_ref[0]
+    hi = range_ref[1]
+    row_base = pid.astype(jnp.uint32) * jnp.uint32(block_rows)
+    x_hat = _quantize_block(x, k, mode, seed, lo, hi, n, row_base, q, 1)
+    # MXU consumes the dequantized block.
+    o_ref[...] = jnp.dot(x_hat, w, preferred_element_type=jnp.float32)
+
+
+def quant_matmul_pallas(x, w_hat, k, mode, seed, lo_a, hi_a, n=64, block_rows=128):
+    """Fused quantize-and-matmul: ``quantize(x) @ w_hat``.
+
+    ``w_hat`` must already be quantized (weights are rounded once and stay
+    resident — §VI: "the weight can be precoded"). The activation block is
+    quantized in-kernel and fed to the MXU.
+    """
+    p, q = x.shape
+    q2, r = w_hat.shape
+    assert q == q2, f"inner dims mismatch: {q} vs {q2}"
+    k, mode, seed, rng = _scalar_args(k, mode, seed, jnp.stack([jnp.asarray(lo_a, jnp.float32), jnp.asarray(hi_a, jnp.float32)]))
+    block_rows = min(block_rows, p)
+    grid = (pl.cdiv(p, block_rows),)
+    kernel = functools.partial(_matmul_kernel, n=n, block_rows=block_rows, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, q), lambda i: (i, 0)),
+            pl.BlockSpec((q, r), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_rows, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, r), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w_hat.astype(jnp.float32), k, mode, seed, rng)

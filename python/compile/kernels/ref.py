@@ -1,0 +1,112 @@
+"""Pure-jnp oracle for the quantized-matmul kernels (no Pallas).
+
+Implements exactly the same arithmetic as ``quant_matmul.py`` — k-bit affine
+quantization with deterministic / stochastic / dither rounding (paper §VII),
+`Separate` placement (both operands rounded once, §VIII) — using plain
+jax.numpy, so pytest can compare the Pallas kernel against it elementwise.
+
+Rounding-mode encoding (shared with the kernel and the Rust runtime):
+    0 = deterministic, 1 = stochastic, 2 = dither.
+"""
+
+import jax.numpy as jnp
+
+from . import prng
+
+MODE_DETERMINISTIC = 0
+MODE_STOCHASTIC = 1
+MODE_DITHER = 2
+
+
+def dither_bit(frac, pos, u, n):
+    """The dither-representation bit (paper §II-D) for residue ``frac``.
+
+    ``pos`` is the (already randomized) index in the length-``n`` dither
+    sequence; ``u`` a fresh uniform in [0,1). Lower branch (frac <= 1/2):
+    ``n_l = floor(N·frac)`` sure ones plus Bernoulli(delta) elsewhere;
+    upper branch: ``n_u = ceil(N·frac)`` Bernoulli(1-delta) plus sure zeros.
+    """
+    nf = jnp.float32(n)
+    posf = pos.astype(jnp.float32)
+    # Lower branch.
+    n_l = jnp.floor(nf * frac)
+    delta_l = jnp.where(n_l >= nf, 0.0, (nf * frac - n_l) / (nf - n_l))
+    bit_l = jnp.logical_or(posf < n_l, u < delta_l)
+    # Upper branch.
+    n_u = jnp.ceil(nf * frac)
+    delta_u = jnp.where(n_u <= 0, 0.0, (n_u - nf * frac) / n_u)
+    bit_u = jnp.logical_and(posf < n_u, u < 1.0 - delta_u)
+    return jnp.where(frac <= 0.5, bit_l, bit_u)
+
+
+def round_bits(frac, mode, n, pos, u):
+    """Rounding bit per element under ``mode`` (a traced scalar int)."""
+    det = frac >= 0.5
+    sto = u < frac
+    dit = dither_bit(frac, pos, u, n)
+    return jnp.where(
+        mode == MODE_DETERMINISTIC, det, jnp.where(mode == MODE_STOCHASTIC, sto, dit)
+    )
+
+
+def dither_positions(shape, seed, n, axis):
+    """Stratified dither positions for a 2-D element grid.
+
+    Positions SWEEP the period along the matmul's *contraction* axis (the
+    paper's global ``i_s`` counter semantics): every window of N contracted
+    elements covers the whole dither sequence, so rounding errors cancel
+    exactly where the matmul sums them. Each line perpendicular to the
+    sweep gets its own random rotation — a single shared phase would give
+    every row the same error pattern, coherently aligned with the other
+    operand (worse than stochastic rounding; see EXPERIMENTS.md).
+
+    ``axis=1``: sweep along each row (left/activation operand).
+    ``axis=0``: sweep along each column (right/weight operand).
+    """
+    rows_idx = jnp.arange(shape[0], dtype=jnp.uint32)[:, None]
+    cols_idx = jnp.arange(shape[1], dtype=jnp.uint32)[None, :]
+    seed = jnp.asarray(seed, jnp.uint32)
+    if axis == 1:
+        rot = prng.hash_u32(seed + jnp.uint32(0x51), rows_idx)
+        pos = (cols_idx + rot) % jnp.uint32(n)
+    else:
+        rot = prng.hash_u32(seed + jnp.uint32(0x51), cols_idx)
+        pos = (rows_idx + rot) % jnp.uint32(n)
+    return jnp.broadcast_to(pos, shape)
+
+
+def quantize_once_ref(x, k, mode, seed, lo, hi, n=64, axis=1):
+    """Quantize a matrix once per element (the `Separate` building block).
+
+    ``k`` may be a traced scalar (int32); levels = 2^k - 1. Elements scale
+    into [0, levels], the rounding bit picks floor vs ceil, and the result
+    is dequantized back to source units. ``axis`` selects the dither sweep
+    direction (see :func:`dither_positions`).
+    """
+    x = x.astype(jnp.float32)
+    kf = jnp.asarray(k, jnp.float32)
+    levels = jnp.exp2(kf) - 1.0
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    step = (hi - lo) / levels
+    s = jnp.clip((x - lo) / (hi - lo) * levels, 0.0, levels)
+    fl = jnp.floor(s)
+    frac = s - fl
+    flat = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)
+    u = prng.uniform01(seed, flat)
+    pos = dither_positions(x.shape, seed, n, axis)
+    bit = round_bits(frac, mode, n, pos, u)
+    return lo + (fl + bit.astype(jnp.float32)) * step
+
+
+def quant_matmul_ref(a, b, k, mode, seed, range_a, range_b, n=64):
+    """`Separate`-placement quantized matmul oracle: round once, multiply.
+
+    ``a`` sweeps along its rows (axis=1), ``b`` along its columns (axis=0) —
+    both stratify the contraction dimension of ``a @ b``.
+    """
+    a_hat = quantize_once_ref(a, k, mode, seed, range_a[0], range_a[1], n, axis=1)
+    b_hat = quantize_once_ref(
+        b, k, mode, jnp.uint32(seed) + jnp.uint32(0xB1B1), range_b[0], range_b[1], n, axis=0
+    )
+    return jnp.dot(a_hat, b_hat, preferred_element_type=jnp.float32)

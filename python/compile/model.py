@@ -1,0 +1,75 @@
+"""Layer 2: the JAX evaluation models, built on the Layer-1 Pallas kernels.
+
+Two architectures, matching the paper's evaluation networks and the Rust
+model zoo (`rust/src/train/zoo.rs`):
+
+* ``digits_linear`` — single 784→10 softmax layer (§VII MNIST experiments).
+* ``fashion_mlp``  — 784→128→64→10 ReLU MLP (§VIII Fashion experiments).
+
+Every matmul is the quantized Pallas kernel with `Separate` placement:
+weights are quantized once per call ("precoded", §VI), activations are
+quantized inside the fused matmul kernel. Quantizer bit-width ``k``,
+rounding ``mode`` (0=deterministic, 1=stochastic, 2=dither), ``seed`` and
+the calibrated hidden activation half-ranges are *runtime* scalars, so one
+AOT artifact serves every experimental configuration.
+
+Weights are runtime inputs too: the Rust coordinator feeds weights trained
+by its own SGD trainer — Python never sees training or serving traffic.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.quant_matmul import quant_matmul_pallas, quantize_pallas
+
+#: Dither period baked into the kernels (paper's N; see DESIGN.md).
+DITHER_N = 64
+
+
+def _quant_dense(h, w, b, k, mode, seed, lo_a, hi_a, relu):
+    """One quantized dense layer: round weights once, fused matmul, bias.
+
+    Weights sweep dither positions along axis 0 (their contraction axis);
+    the activation block sweeps axis 1 inside the fused matmul kernel.
+    """
+    w_hat = quantize_pallas(
+        w, k, mode, seed + jnp.uint32(0xB1B1), -1.0, 1.0, n=DITHER_N, axis=0
+    )
+    out = quant_matmul_pallas(h, w_hat, k, mode, seed, lo_a, hi_a, n=DITHER_N)
+    out = out + b[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def digits_linear_forward(x, w, b, k, mode, seed):
+    """Quantized single-layer classifier. Returns logits ``(batch, 10)``.
+
+    Inputs: ``x (batch,784) f32`` in [0,1]; ``w (784,10) f32`` in [-1,1];
+    ``b (10,) f32``; scalars ``k i32``, ``mode i32``, ``seed u32``.
+    The input shares the weight quantizer's [-1, 1] range (the paper's
+    deliberately wasteful setting).
+    """
+    return _quant_dense(x, w, b, k, mode, seed, -1.0, 1.0, relu=False)
+
+
+def fashion_mlp_forward(x, w1, b1, w2, b2, w3, b3, k, mode, seed, r1, r2):
+    """Quantized 3-layer MLP. Returns logits ``(batch, 10)``.
+
+    ``r1``/``r2`` are the calibrated half-ranges of the two hidden
+    activations (runtime f32 scalars supplied by the Rust coordinator).
+    """
+    h = _quant_dense(x, w1, b1, k, mode, seed, -1.0, 1.0, relu=True)
+    h = _quant_dense(h, w2, b2, k, mode, seed + jnp.uint32(1), -r1, r1, relu=True)
+    return _quant_dense(h, w3, b3, k, mode, seed + jnp.uint32(2), -r2, r2, relu=False)
+
+
+def digits_linear_float(x, w, b):
+    """Full-precision reference forward (baseline artifact)."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+
+
+def fashion_mlp_float(x, w1, b1, w2, b2, w3, b3):
+    """Full-precision 3-layer reference forward."""
+    h = jnp.maximum(jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1[None, :], 0.0)
+    h = jnp.maximum(jnp.dot(h, w2, preferred_element_type=jnp.float32) + b2[None, :], 0.0)
+    return jnp.dot(h, w3, preferred_element_type=jnp.float32) + b3[None, :]

@@ -1,0 +1,8 @@
+"""Pytest path setup: make `compile` importable when pytest runs from the
+repository root (the Makefile runs from python/, the final validation
+command from the root — support both)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,47 @@
+"""AOT pipeline tests: lowering produces loadable HLO text + manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_to_hlo_text_roundtrips_through_xla_parser():
+    lowered = jax.jit(model.digits_linear_float).lower(
+        jax.ShapeDtypeStruct((4, 784), jnp.float32),
+        jax.ShapeDtypeStruct((784, 10), jnp.float32),
+        jax.ShapeDtypeStruct((10,), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[4,784]" in text
+
+
+def test_quantized_model_lowers():
+    specs = aot.model_specs(8)
+    name, fn, arg_specs, signature = specs[0]
+    assert name == "digits_linear_b8"
+    text = aot.to_hlo_text(jax.jit(fn).lower(*arg_specs))
+    assert "ENTRY" in text
+    assert len(signature) == len(arg_specs)
+
+
+def test_cli_writes_artifacts_and_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--batches", "2"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert names == {"digits_linear_b2", "fashion_mlp_b2", "digits_linear_float_b2"}
+    for a in manifest["artifacts"]:
+        content = (out / a["file"]).read_text()
+        assert content.startswith("HloModule"), a["file"]
+        assert len(a["inputs"]) >= 3

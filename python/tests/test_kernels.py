@@ -1,0 +1,152 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+The Pallas kernels must agree elementwise with the pure-jnp oracle in
+``ref.py`` across shapes, modes, bit widths, seeds and ranges (hypothesis
+sweeps), and the rounding schemes must satisfy the paper's §II/§VII
+statistical properties (unbiasedness, variance ordering).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import prng, ref
+from compile.kernels.quant_matmul import quant_matmul_pallas, quantize_pallas
+
+TOL = 2e-6  # one-ulp-ish slack at the [-1, 1] scale
+
+
+def rand(shape, lo, hi, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- prng
+
+
+def test_hash_deterministic_and_sensitive():
+    c = jnp.arange(1000, dtype=jnp.uint32)
+    a = prng.hash_u32(jnp.uint32(1), c)
+    b = prng.hash_u32(jnp.uint32(1), c)
+    assert (a == b).all()
+    c2 = prng.hash_u32(jnp.uint32(2), c)
+    assert (a != c2).mean() > 0.99
+
+
+def test_uniform01_range_and_mean():
+    c = jnp.arange(200_000, dtype=jnp.uint32)
+    u = prng.uniform01(jnp.uint32(3), c)
+    assert float(u.min()) >= 0.0 and float(u.max()) < 1.0
+    assert abs(float(u.mean()) - 0.5) < 0.005
+    # Rough uniformity: decile counts within 5% of each other.
+    hist, _ = np.histogram(np.asarray(u), bins=10, range=(0, 1))
+    assert hist.max() - hist.min() < 0.05 * len(c) / 10 * 10
+
+
+# ------------------------------------------------- quantize: oracle match
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 130),
+    cols=st.integers(1, 40),
+    k=st.integers(1, 8),
+    mode=st.integers(0, 2),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_quantize_pallas_matches_ref(rows, cols, k, mode, seed):
+    x = rand((rows, cols), -1.0, 1.0, seed % 1000)
+    got = quantize_pallas(jnp.array(x), k, mode, seed, -1.0, 1.0, block_rows=64)
+    want = ref.quantize_once_ref(
+        jnp.array(x), jnp.int32(k), jnp.int32(mode), jnp.uint32(seed), -1.0, 1.0
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.integers(1, 80),
+    q=st.integers(1, 50),
+    r=st.integers(1, 20),
+    k=st.integers(1, 8),
+    mode=st.integers(0, 2),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_quant_matmul_pallas_matches_ref(p, q, r, k, mode, seed):
+    x = rand((p, q), 0.0, 1.0, seed % 997)
+    w = rand((q, r), -1.0, 1.0, (seed + 1) % 997)
+    w_hat = ref.quantize_once_ref(
+        jnp.array(w), jnp.int32(k), jnp.int32(0), jnp.uint32(5), -1.0, 1.0
+    )
+    got = quant_matmul_pallas(jnp.array(x), w_hat, k, mode, seed, -1.0, 1.0, block_rows=32)
+    x_hat = ref.quantize_once_ref(
+        jnp.array(x), jnp.int32(k), jnp.int32(mode), jnp.uint32(seed), -1.0, 1.0
+    )
+    want = jnp.dot(x_hat, w_hat, preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-5)
+
+
+def test_quantize_respects_runtime_range():
+    x = rand((16, 8), 0.0, 4.0, 1)
+    got = quantize_pallas(jnp.array(x), 8, 0, 0, 0.0, 4.0)
+    np.testing.assert_allclose(np.asarray(got), x, atol=4.0 / 255 / 2 + 1e-6)
+
+
+# --------------------------------------------- statistical properties
+
+
+def test_quantizer_levels_exact_at_high_k():
+    x = rand((64, 16), -1.0, 1.0, 2)
+    out = quantize_pallas(jnp.array(x), 8, 0, 0, -1.0, 1.0)
+    err = np.abs(np.asarray(out) - x)
+    assert err.max() <= (2.0 / 255) / 2 + 1e-6
+
+
+@pytest.mark.parametrize("mode", [ref.MODE_STOCHASTIC, ref.MODE_DITHER])
+def test_unbiased_modes_have_zero_mean_error(mode):
+    x = np.full((1, 256), 0.3, dtype=np.float32)
+    outs = []
+    for seed in range(200):
+        out = quantize_pallas(jnp.array(x), 1, mode, seed, 0.0, 1.0)
+        outs.append(np.asarray(out).mean())
+    mean = float(np.mean(outs))
+    assert abs(mean - 0.3) < 0.01, mean
+
+
+def test_deterministic_mode_is_biased_at_k1():
+    # k=1: round(0.3 * 1) = 0 everywhere -> mean error 0.3 (the §VII
+    # information-loss regime).
+    x = np.full((4, 64), 0.3, dtype=np.float32)
+    out = quantize_pallas(jnp.array(x), 1, ref.MODE_DETERMINISTIC, 0, 0.0, 1.0)
+    assert float(np.abs(np.asarray(out)).max()) == 0.0
+
+
+def test_dither_variance_below_stochastic():
+    # Per-matrix mean of the quantized values: dither's deterministic
+    # component cancels most of the variance (§II-D vs §II-A).
+    x = np.full((1, 1024), 0.37, dtype=np.float32)
+
+    def spread(mode):
+        means = [
+            float(np.asarray(quantize_pallas(jnp.array(x), 1, mode, s, 0.0, 1.0)).mean())
+            for s in range(100)
+        ]
+        return np.var(means)
+
+    v_sto = spread(ref.MODE_STOCHASTIC)
+    v_dit = spread(ref.MODE_DITHER)
+    assert v_dit < v_sto / 2, (v_dit, v_sto)
+
+
+def test_dither_bit_branch_consistency():
+    # Exact rationals m/N are represented deterministically (delta = 0).
+    n = 64
+    for m in (0, 8, 16, 32, 33, 63, 64):
+        frac = jnp.full((128,), m / n, dtype=jnp.float32)
+        pos = jnp.arange(128, dtype=jnp.uint32) % n
+        u = prng.uniform01(jnp.uint32(9), jnp.arange(128, dtype=jnp.uint32))
+        bits = ref.dither_bit(frac, pos, u, n)
+        got = int(bits.sum())
+        want = int((np.asarray(pos) < m).sum())
+        assert got == want, (m, got, want)

@@ -1,0 +1,103 @@
+"""L2 model tests: shapes, float-reference agreement at high k, and the
+paper's rounding-mode ordering on a synthetic classification task.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_linear(seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(-1, 1, (784, 10)).astype(np.float32)
+    b = rng.uniform(-0.1, 0.1, (10,)).astype(np.float32)
+    x = rng.uniform(0, 1, (32, 784)).astype(np.float32)
+    return jnp.array(x), jnp.array(w), jnp.array(b)
+
+
+def make_mlp(seed=0):
+    rng = np.random.default_rng(seed)
+    def u(*s, lim=1.0):
+        return jnp.array(rng.uniform(-lim, lim, s).astype(np.float32))
+    x = jnp.array(rng.uniform(0, 1, (16, 784)).astype(np.float32))
+    return (
+        x,
+        u(784, 128), u(128, lim=0.1),
+        u(128, 64), u(64, lim=0.1),
+        u(64, 10), u(10, lim=0.1),
+    )
+
+
+def test_digits_linear_shapes():
+    x, w, b = make_linear()
+    out = model.digits_linear_forward(x, w, b, jnp.int32(8), jnp.int32(2), jnp.uint32(1))
+    assert out.shape == (32, 10)
+    assert out.dtype == jnp.float32
+
+
+def test_digits_linear_high_k_matches_float():
+    x, w, b = make_linear()
+    out = model.digits_linear_forward(x, w, b, jnp.int32(16), jnp.int32(0), jnp.uint32(1))
+    want = model.digits_linear_float(x, w, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=0.05, rtol=1e-3)
+    # Argmax (the classification decision) should agree almost everywhere.
+    agree = (np.argmax(np.asarray(out), 1) == np.argmax(np.asarray(want), 1)).mean()
+    assert agree > 0.9
+
+
+def test_fashion_mlp_shapes_and_finite():
+    args = make_mlp()
+    out = model.fashion_mlp_forward(
+        *args,
+        jnp.int32(8), jnp.int32(2), jnp.uint32(3),
+        jnp.float32(20.0), jnp.float32(20.0),
+    )
+    assert out.shape == (16, 10)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_fashion_mlp_high_k_matches_float():
+    args = make_mlp()
+    out = model.fashion_mlp_forward(
+        *args,
+        jnp.int32(16), jnp.int32(0), jnp.uint32(3),
+        jnp.float32(40.0), jnp.float32(40.0),
+    )
+    want = model.fashion_mlp_float(*args)
+    agree = (np.argmax(np.asarray(out), 1) == np.argmax(np.asarray(want), 1)).mean()
+    assert agree > 0.85, agree
+
+
+@pytest.mark.parametrize("mode", [ref.MODE_STOCHASTIC, ref.MODE_DITHER])
+def test_unbiased_modes_track_float_in_expectation(mode):
+    x, w, b = make_linear(7)
+    want = np.asarray(model.digits_linear_float(x, w, b))
+    acc = np.zeros_like(want)
+    trials = 30
+    for s in range(trials):
+        out = model.digits_linear_forward(
+            x, w, b, jnp.int32(2), jnp.int32(mode), jnp.uint32(s)
+        )
+        acc += np.asarray(out) / trials
+    # The trial-mean at k=2 approaches the float output; a single
+    # deterministic rounding at k=2 does not.
+    mean_err = np.abs(acc - want).mean()
+    det = np.asarray(
+        model.digits_linear_forward(x, w, b, jnp.int32(2), jnp.int32(0), jnp.uint32(0))
+    )
+    det_err = np.abs(det - want).mean()
+    assert mean_err < det_err / 2, (mean_err, det_err)
+
+
+def test_seed_changes_output_for_stochastic_modes():
+    x, w, b = make_linear(9)
+    a = model.digits_linear_forward(x, w, b, jnp.int32(2), jnp.int32(2), jnp.uint32(1))
+    c = model.digits_linear_forward(x, w, b, jnp.int32(2), jnp.int32(2), jnp.uint32(2))
+    assert not np.allclose(np.asarray(a), np.asarray(c))
+    # Deterministic mode ignores the seed.
+    d1 = model.digits_linear_forward(x, w, b, jnp.int32(2), jnp.int32(0), jnp.uint32(1))
+    d2 = model.digits_linear_forward(x, w, b, jnp.int32(2), jnp.int32(0), jnp.uint32(2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))

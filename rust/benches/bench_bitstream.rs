@@ -1,0 +1,53 @@
+//! Bitstream hot-path benchmarks: encoding and arithmetic throughput per
+//! scheme. These are the perf-pass probes for the §II–§IV substrate
+//! (results logged in EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench bench_bitstream`
+
+use dither::bitstream::{average, multiply, represent, BitSeq, Scheme};
+use dither::util::benchmark::{black_box, Bench};
+use dither::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut bench = Bench::new();
+    let mut rng = Xoshiro256pp::new(42);
+
+    for n in [64usize, 1024, 16384] {
+        for scheme in Scheme::ALL {
+            let name = format!("bitstream/encode/{}/N={n}", scheme.name());
+            let mut x = 0.1f64;
+            bench.bench_items(&name, n as f64, || {
+                x = (x + 0.137).fract();
+                black_box(represent(scheme, x, n, &mut rng))
+            });
+        }
+    }
+
+    for n in [1024usize, 16384] {
+        for scheme in Scheme::ALL {
+            let name = format!("bitstream/multiply/{}/N={n}", scheme.name());
+            bench.bench_items(&name, n as f64, || {
+                black_box(multiply(scheme, 0.371, 0.816, n, &mut rng))
+            });
+            let name = format!("bitstream/average/{}/N={n}", scheme.name());
+            bench.bench_items(&name, n as f64, || {
+                black_box(average(scheme, 0.371, 0.816, n, &mut rng))
+            });
+        }
+    }
+
+    // Raw word-parallel ops (roofline reference for the encoders).
+    let n = 16384;
+    let a = BitSeq::from_fn(n, |i| i % 3 == 0);
+    let b = BitSeq::from_fn(n, |i| i % 5 == 0);
+    bench.bench_items(&format!("bitstream/raw_and/N={n}"), n as f64, || {
+        black_box(a.and(&b).count_ones())
+    });
+    bench.bench_items(&format!("bitstream/raw_popcount/N={n}"), n as f64, || {
+        black_box(a.count_ones())
+    });
+
+    bench
+        .write_json("results/bench_bitstream.json")
+        .expect("write bench json");
+}

@@ -1,0 +1,70 @@
+//! End-to-end serving benchmark: batched quantized inference through the
+//! PJRT artifact path (the L3→L2→L1 request path), plus the native-Rust
+//! engine for comparison. Reported in EXPERIMENTS.md §Perf.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench bench_e2e`
+
+use dither::coordinator::Engine;
+use dither::data::{Dataset, Task};
+use dither::linalg::Variant;
+use dither::nn::{quantized_predict, ActivationRanges, QuantInferenceConfig};
+use dither::rounding::RoundingMode;
+use dither::train::{trained_model, ModelSpec};
+use dither::util::benchmark::{black_box, Bench};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping bench_e2e: artifacts/manifest.json missing (run `make artifacts`)");
+        return;
+    }
+    let mut bench = Bench::new();
+    let engine = Engine::new("artifacts", 2000, 7).expect("engine");
+    let ds = Dataset::synthesize(Task::Digits, 256, 99);
+
+    for &batch in &[1usize, 32, 256] {
+        let pixels: Vec<&[f64]> = (0..batch).map(|i| ds.images.row(i)).collect();
+        // Warmup compiles the executable outside the timed region.
+        let _ = engine
+            .infer_batch("digits_linear", 4, RoundingMode::Dither, &pixels)
+            .expect("warmup");
+        let name = format!("e2e/pjrt_digits_linear/k=4/dither/batch={batch}");
+        bench.bench_items(&name, batch as f64, || {
+            black_box(
+                engine
+                    .infer_batch("digits_linear", 4, RoundingMode::Dither, &pixels)
+                    .expect("infer"),
+            )
+        });
+    }
+
+    // Fashion MLP through PJRT.
+    let fds = Dataset::synthesize(Task::Fashion, 32, 98);
+    let pixels: Vec<&[f64]> = (0..32).map(|i| fds.images.row(i)).collect();
+    let _ = engine
+        .infer_batch("fashion_mlp", 4, RoundingMode::Dither, &pixels)
+        .expect("warmup");
+    bench.bench_items("e2e/pjrt_fashion_mlp/k=4/dither/batch=32", 32.0, || {
+        black_box(
+            engine
+                .infer_batch("fashion_mlp", 4, RoundingMode::Dither, &pixels)
+                .expect("infer"),
+        )
+    });
+
+    // Native-Rust engine reference (same model, same batch).
+    let (mlp, test, _) = trained_model(ModelSpec::DigitsLinear, 2000, 256, 7);
+    let ranges = ActivationRanges::calibrate(&mlp, &test.images);
+    let qcfg = QuantInferenceConfig {
+        bits: 4,
+        mode: RoundingMode::Dither,
+        variant: Variant::Separate,
+        seed: 3,
+    };
+    bench.bench_items("e2e/native_digits_linear/k=4/dither/batch=256", 256.0, || {
+        black_box(quantized_predict(&mlp, &test.images, &ranges, &qcfg))
+    });
+
+    bench
+        .write_json("results/bench_e2e.json")
+        .expect("write bench json");
+}

@@ -1,0 +1,39 @@
+//! Quantized-matmul benchmarks: throughput of the three rounding placements
+//! × three rounding modes, vs the exact f64 matmul baseline. The perf-pass
+//! probes for the §VII–§VIII engines.
+//!
+//! Run: `cargo bench --bench bench_matmul`
+
+use dither::linalg::{quant_matmul, Matrix, QuantMatmulConfig, Variant};
+use dither::rounding::RoundingMode;
+use dither::util::benchmark::{black_box, Bench};
+use dither::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut bench = Bench::new();
+    let dim = 100usize;
+    let mut rng = Xoshiro256pp::new(7);
+    let a = Matrix::random_uniform(dim, dim, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_uniform(dim, dim, 0.0, 1.0, &mut rng);
+    let flops = (2 * dim * dim * dim) as f64;
+
+    bench.bench_items(&format!("matmul/f64_exact/{dim}^3"), flops, || {
+        black_box(a.matmul(&b))
+    });
+
+    let mut seed = 0u64;
+    for variant in Variant::ALL {
+        for mode in RoundingMode::ALL {
+            let name = format!("matmul/{}/{}/{dim}^3", variant.name(), mode.name());
+            bench.bench_items(&name, flops, || {
+                seed += 1;
+                let cfg = QuantMatmulConfig::unit(4, mode, variant, seed);
+                black_box(quant_matmul(&a, &b, &cfg))
+            });
+        }
+    }
+
+    bench
+        .write_json("results/bench_matmul.json")
+        .expect("write bench json");
+}

@@ -1,0 +1,42 @@
+//! Paper-table bench harness: regenerates EVERY table and figure of the
+//! paper at bench scale (one section per table/figure; same code paths as
+//! `dither experiment`, reduced settings so `cargo bench` stays minutes).
+//!
+//! Sections:
+//!   figs 1-6  — EMSE/|bias| of repr/mult/avg vs N (§V)
+//!   table I   — asymptotic slopes
+//!   fig 8     — matmul e_f vs k
+//!   figs 9-16 — quantized-inference accuracy mean/variance vs k
+//!
+//! Run: `cargo bench --bench bench_paper`
+//! Full-scale equivalents: `dither experiment all --paper-scale`.
+
+use dither::experiments::{run_experiment, ExperimentArgs};
+use std::time::Instant;
+
+fn main() {
+    let args = ExperimentArgs {
+        pairs: 60,
+        trials: 60,
+        ns: vec![8, 32, 128, 512],
+        ks: vec![1, 2, 3, 4, 6, 8],
+        matmul_pairs: 4,
+        dim: 64,
+        nn_trials: 4,
+        train_n: 1200,
+        test_n: 240,
+        seed: 0xBE7C,
+        out_dir: "results/bench".to_string(),
+    };
+    let t0 = Instant::now();
+    for id in dither::experiments::EXPERIMENT_IDS {
+        let t = Instant::now();
+        run_experiment(id, &args).expect(id);
+        println!(">> {id} regenerated in {:.2}s\n", t.elapsed().as_secs_f64());
+    }
+    println!(
+        "== all {} paper results regenerated in {:.1}s (bench scale) ==",
+        dither::experiments::EXPERIMENT_IDS.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

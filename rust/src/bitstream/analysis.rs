@@ -1,0 +1,266 @@
+//! Bias / variance / EMSE estimation harness — the machinery behind the
+//! paper's §V evaluation (Figs 1–6, Table I).
+//!
+//! For each operand pair `(x, y)` drawn from `U[0,1]²`, we run `T` trials of
+//! a scheme+operation, conditioning on the pair as the paper does:
+//!
+//! * per-pair sample bias `b̂(x,y) = mean_t(est_t) - truth`
+//! * per-pair EMSE contribution `L̂(x,y) = mean_t((est_t - truth)²)`
+//!
+//! and then aggregate over pairs: `L = E(L̂)`, `|Bias| = E(|b̂|)`, plus the
+//! decomposed variance `Var = E(L̂ - b̂²)`. Deterministic-variant runs use a
+//! single trial (the estimate never changes — §V footnote 2).
+
+use crate::bitstream::ops::{Op, Scheme};
+use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool::parallel_map;
+
+/// Aggregated error statistics for one (scheme, op, N) cell.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorStats {
+    /// Expected MSE `L = E_X(L_x)` — what Figs 1/3/5 plot.
+    pub emse: f64,
+    /// Mean absolute per-pair sample bias — what Figs 2/4/6 plot.
+    pub bias_abs: f64,
+    /// Mean signed bias (should be ≈0 for unbiased schemes).
+    pub bias_signed: f64,
+    /// Mean per-pair variance (EMSE minus squared bias).
+    pub variance: f64,
+}
+
+/// Configuration for an evaluation sweep.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    /// Number of operand pairs drawn from U[0,1]².
+    pub pairs: usize,
+    /// Trials per pair (deterministic scheme always uses 1).
+    pub trials: usize,
+    /// Master seed; pairs and trials are derived deterministically.
+    pub seed: u64,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self {
+            pairs: 200,
+            trials: 200,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+impl EvalConfig {
+    /// The paper's full-scale configuration (1000 pairs × 1000 trials).
+    pub fn paper_scale() -> Self {
+        Self {
+            pairs: 1000,
+            trials: 1000,
+            seed: 0xA11CE,
+        }
+    }
+
+    /// Draw the operand pairs (shared across schemes, as in the paper:
+    /// "the set of pairs (x,y) are the same for the 3 schemes").
+    pub fn draw_pairs(&self) -> Vec<(f64, f64)> {
+        let mut rng = Xoshiro256pp::new(self.seed);
+        (0..self.pairs)
+            .map(|_| (rng.next_f64(), rng.next_f64()))
+            .collect()
+    }
+}
+
+/// Evaluate one (scheme, op, N) cell over the given operand pairs.
+pub fn evaluate(
+    scheme: Scheme,
+    op: Op,
+    n: usize,
+    pairs: &[(f64, f64)],
+    cfg: &EvalConfig,
+) -> ErrorStats {
+    let trials = if scheme.is_deterministic() { 1 } else { cfg.trials };
+    // Parallel over pairs with order-preserving map; each pair gets an
+    // independent RNG stream derived from (seed, scheme, op, n, pair index),
+    // and the final reduction is sequential — results are therefore
+    // bit-identical regardless of thread count.
+    let per_pair = parallel_map(pairs, |idx, &(x, y)| {
+        let mut rng = Xoshiro256pp::new(
+            cfg.seed
+                ^ (idx as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ ((scheme as u64) << 56)
+                ^ ((op as u64) << 48)
+                ^ ((n as u64) << 32),
+        );
+        let truth = op.truth(x, y);
+        let mut sum = 0.0;
+        let mut sum_sq = 0.0;
+        for _ in 0..trials {
+            let e = op.estimate(scheme, x, y, n, &mut rng);
+            let d = e - truth;
+            sum += d;
+            sum_sq += d * d;
+        }
+        let t = trials as f64;
+        (sum_sq / t, sum / t)
+    });
+    let mut emse = 0.0;
+    let mut bias_abs = 0.0;
+    let mut bias_signed = 0.0;
+    for &(l_x, bias) in &per_pair {
+        emse += l_x;
+        bias_abs += bias.abs();
+        bias_signed += bias;
+    }
+    let m = per_pair.len() as f64;
+    let emse = emse / m;
+    let bias_abs = bias_abs / m;
+    let bias_signed = bias_signed / m;
+    ErrorStats {
+        emse,
+        bias_abs,
+        bias_signed,
+        variance: (emse - bias_signed * bias_signed).max(0.0),
+    }
+}
+
+/// Sweep an operation over `ns` for all three schemes.
+///
+/// Returns `results[scheme_index][n_index]` in `Scheme::ALL` order.
+pub fn sweep(op: Op, ns: &[usize], cfg: &EvalConfig) -> Vec<Vec<ErrorStats>> {
+    let pairs = cfg.draw_pairs();
+    Scheme::ALL
+        .iter()
+        .map(|&scheme| {
+            ns.iter()
+                .map(|&n| evaluate(scheme, op, n, &pairs, cfg))
+                .collect()
+        })
+        .collect()
+}
+
+/// Theoretical EMSE of stochastic computing representation under U[0,1]:
+/// `L = 1/(6N)` (§II-A).
+pub fn theory_stochastic_repr_emse(n: usize) -> f64 {
+    1.0 / (6.0 * n as f64)
+}
+
+/// Theoretical EMSE of the deterministic variant's representation under
+/// U[0,1]: `L = 1/(12N²)` (§II-B) — also the §II lower bound.
+pub fn theory_deterministic_repr_emse(n: usize) -> f64 {
+    1.0 / (12.0 * (n * n) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> EvalConfig {
+        EvalConfig {
+            pairs: 60,
+            trials: 120,
+            seed: 0xBEEF,
+        }
+    }
+
+    #[test]
+    fn stochastic_repr_emse_matches_theory() {
+        let cfg = small_cfg();
+        let pairs = cfg.draw_pairs();
+        for &n in &[32usize, 128] {
+            let s = evaluate(Scheme::Stochastic, Op::Represent, n, &pairs, &cfg);
+            let th = theory_stochastic_repr_emse(n);
+            assert!(
+                (s.emse - th).abs() < 0.35 * th,
+                "n={n} emse={} theory={th}",
+                s.emse
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_repr_emse_matches_theory() {
+        let cfg = small_cfg();
+        let pairs = cfg.draw_pairs();
+        for &n in &[32usize, 128] {
+            let s = evaluate(Scheme::DeterministicVariant, Op::Represent, n, &pairs, &cfg);
+            let th = theory_deterministic_repr_emse(n);
+            assert!(
+                (s.emse - th).abs() < 0.5 * th,
+                "n={n} emse={} theory={th}",
+                s.emse
+            );
+        }
+    }
+
+    #[test]
+    fn dither_emse_near_optimal_rate() {
+        let cfg = small_cfg();
+        let pairs = cfg.draw_pairs();
+        for &n in &[32usize, 128] {
+            let s = evaluate(Scheme::Dither, Op::Represent, n, &pairs, &cfg);
+            // EMSE ≤ 2/N² (the §II-D variance bound; bias = 0).
+            assert!(
+                s.emse <= 2.2 / (n * n) as f64,
+                "n={n} emse={}",
+                s.emse
+            );
+        }
+    }
+
+    #[test]
+    fn ordering_stochastic_worst_for_emse() {
+        let cfg = small_cfg();
+        let n = 64;
+        for op in Op::ALL {
+            let pairs = cfg.draw_pairs();
+            let sc = evaluate(Scheme::Stochastic, op, n, &pairs, &cfg);
+            let di = evaluate(Scheme::Dither, op, n, &pairs, &cfg);
+            assert!(
+                di.emse < sc.emse / 3.0,
+                "{op:?}: dither {0} vs stochastic {1}",
+                di.emse,
+                sc.emse
+            );
+        }
+    }
+
+    #[test]
+    fn dither_bias_below_stochastic_bias() {
+        // SEM argument of §V: sample |bias| for dither shrinks faster.
+        let cfg = small_cfg();
+        let pairs = cfg.draw_pairs();
+        let n = 128;
+        let sc = evaluate(Scheme::Stochastic, Op::Represent, n, &pairs, &cfg);
+        let di = evaluate(Scheme::Dither, Op::Represent, n, &pairs, &cfg);
+        assert!(
+            di.bias_abs < sc.bias_abs,
+            "dither {} vs stochastic {}",
+            di.bias_abs,
+            sc.bias_abs
+        );
+    }
+
+    #[test]
+    fn results_reproducible_across_thread_counts() {
+        let cfg = small_cfg();
+        let pairs = cfg.draw_pairs();
+        std::env::set_var("DITHER_THREADS", "1");
+        let a = evaluate(Scheme::Dither, Op::Multiply, 64, &pairs, &cfg);
+        std::env::set_var("DITHER_THREADS", "4");
+        let b = evaluate(Scheme::Dither, Op::Multiply, 64, &pairs, &cfg);
+        std::env::remove_var("DITHER_THREADS");
+        assert_eq!(a.emse, b.emse);
+        assert_eq!(a.bias_abs, b.bias_abs);
+    }
+
+    #[test]
+    fn sweep_shape() {
+        let cfg = EvalConfig {
+            pairs: 10,
+            trials: 10,
+            seed: 1,
+        };
+        let out = sweep(Op::Represent, &[8, 16], &cfg);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|row| row.len() == 2));
+    }
+}

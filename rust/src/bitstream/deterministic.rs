@@ -1,0 +1,142 @@
+//! Deterministic variant of stochastic computing (Jenson & Riedel, ICCAD'16)
+//! — paper §II-B, §III-B, §IV-B.
+//!
+//! Two operand formats:
+//!
+//! * **Format 1 (unary)**: the first `R = round(N·x)` pulses are 1. Used for
+//!   the left multiplication operand and both averaging operands.
+//! * **Format 2 (clock division)**: pulse `i` is 1 iff
+//!   `⌊(i+1)·y⌋ ≠ ⌊i·y⌋`, which spreads `⌊N·y⌋` ones evenly. Used for the
+//!   right multiplication operand so the AND of the two formats counts
+//!   `≈ N·x·y` ones.
+//!
+//! Both are deterministic: `Var(X_s) = 0`, but the representation is biased
+//! (`Θ(1/N)` bias), which is exactly the deficiency dither computing fixes.
+
+use crate::bitstream::sequence::BitSeq;
+
+/// Encoder for the deterministic variant's two formats.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeterministicEncoder;
+
+impl DeterministicEncoder {
+    /// Format 1 (unary): first `round(n·x)` pulses are 1.
+    pub fn encode_unary(&self, x: f64, n: usize) -> BitSeq {
+        let x = x.clamp(0.0, 1.0);
+        let r = (n as f64 * x).round() as usize;
+        let r = r.min(n);
+        let mut seq = BitSeq::zeros(n);
+        let words = seq.words_mut();
+        let full = r / 64;
+        for w in words.iter_mut().take(full) {
+            *w = u64::MAX;
+        }
+        let rem = r % 64;
+        if rem != 0 {
+            words[full] = (1u64 << rem) - 1;
+        }
+        seq
+    }
+
+    /// Format 2 (clock division): pulse `i` is 1 iff `⌊(i+1)y⌋ ≠ ⌊iy⌋`.
+    /// Exactly `⌊n·y⌋` ones, spread as evenly as possible.
+    pub fn encode_clock_div(&self, y: f64, n: usize) -> BitSeq {
+        let y = y.clamp(0.0, 1.0);
+        BitSeq::from_fn(n, |i| {
+            let a = (i as f64 * y).floor();
+            let b = ((i + 1) as f64 * y).floor();
+            a != b
+        })
+    }
+
+    /// Deterministic alternating control sequence for scaled addition
+    /// (§IV-B): `W_i = 1` for even `i`.
+    pub fn control(&self, n: usize) -> BitSeq {
+        BitSeq::from_fn(n, |i| i % 2 == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unary_count_is_rounded() {
+        let enc = DeterministicEncoder;
+        assert_eq!(enc.encode_unary(0.5, 100).count_ones(), 50);
+        assert_eq!(enc.encode_unary(0.504, 100).count_ones(), 50);
+        assert_eq!(enc.encode_unary(0.505, 100).count_ones(), 51);
+        assert_eq!(enc.encode_unary(0.0, 100).count_ones(), 0);
+        assert_eq!(enc.encode_unary(1.0, 100).count_ones(), 100);
+    }
+
+    #[test]
+    fn unary_is_prefix() {
+        let enc = DeterministicEncoder;
+        let s = enc.encode_unary(0.37, 200);
+        let r = s.count_ones() as usize;
+        for i in 0..200 {
+            assert_eq!(s.get(i), i < r);
+        }
+    }
+
+    #[test]
+    fn unary_bias_bound() {
+        // |X_s - x| <= 1/(2N) for unary rounding.
+        let enc = DeterministicEncoder;
+        let n = 128;
+        for k in 0..100 {
+            let x = k as f64 / 99.0;
+            let err = (enc.encode_unary(x, n).value() - x).abs();
+            assert!(err <= 0.5 / n as f64 + 1e-12, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn clock_div_count() {
+        let enc = DeterministicEncoder;
+        for &y in &[0.0, 0.1, 0.33, 0.5, 0.77, 1.0] {
+            let s = enc.encode_clock_div(y, 128);
+            assert_eq!(s.count_ones(), (128.0 * y).floor() as u64, "y={y}");
+        }
+    }
+
+    #[test]
+    fn clock_div_spreads_evenly() {
+        // For y = 0.5 the ones should land on every other pulse.
+        let enc = DeterministicEncoder;
+        let s = enc.encode_clock_div(0.5, 64);
+        let mut gaps = Vec::new();
+        let mut last: Option<usize> = None;
+        for i in 0..64 {
+            if s.get(i) {
+                if let Some(l) = last {
+                    gaps.push(i - l);
+                }
+                last = Some(i);
+            }
+        }
+        assert!(gaps.iter().all(|&g| g == 2), "gaps={gaps:?}");
+    }
+
+    #[test]
+    fn unary_and_clock_div_multiply() {
+        // AND of Format1(x) and Format2(y) counts ≈ N·x·y ones (§III-B:
+        // |Z_s - xy| <= 2/N).
+        let enc = DeterministicEncoder;
+        let n = 256;
+        for &(x, y) in &[(0.3, 0.7), (0.9, 0.2), (0.55, 0.55), (1.0, 0.4)] {
+            let z = enc.encode_unary(x, n).and(&enc.encode_clock_div(y, n));
+            let err = (z.value() - x * y).abs();
+            assert!(err <= 2.0 / n as f64 + 1e-12, "x={x} y={y} err={err}");
+        }
+    }
+
+    #[test]
+    fn control_alternates() {
+        let enc = DeterministicEncoder;
+        let c = enc.control(101);
+        assert_eq!(c.count_ones(), 51); // ceil(101/2) even indices 0,2,..,100
+        assert!(c.get(0) && !c.get(1) && c.get(2));
+    }
+}

@@ -1,0 +1,575 @@
+//! Dither computing encoder — the paper's contribution (§II-D, §III-C).
+//!
+//! The idea: approximate `x` *deterministically* as closely as the length-N
+//! sequence allows, and approximate only the remaining sub-1/N residue
+//! *stochastically*, so the estimator is exactly unbiased (like stochastic
+//! computing) while the variance collapses to `O(1/N²)` (like the
+//! deterministic variant's EMSE):
+//!
+//! * `x ∈ [0, ½]`: `n = ⌊Nx⌋` pulses are deterministically 1, the other
+//!   `N-n` are Bernoulli(δ) with `δ = Nr/(N-n)`, `r = x - n/N ∈ [0, 1/N)`.
+//!   Then `E(X_s) = x` and `Var(X_s) ≤ 2/N²`.
+//! * `x ∈ (½, 1]`: `n = ⌈Nx⌉` pulses are Bernoulli(1-δ) with `δ = rN/n`,
+//!   `r = n/N - x`, the rest deterministically 0.
+//!
+//! Where the `n` "deterministic" pulses sit is governed by a permutation σ:
+//! [`Placement::Prefix`] (σ = identity, used for the left operand and for
+//! averaging) or [`Placement::Spread`] (σ spreads them evenly with a random
+//! phase, §III-C's σ_y, used for the right multiplication operand).
+
+use crate::bitstream::sequence::BitSeq;
+use crate::util::rng::Xoshiro256pp;
+
+/// Where the deterministic pulses of a dither encoding are placed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// σ = identity: deterministic pulses occupy a prefix (Format 1 analog).
+    Prefix,
+    /// σ spreads deterministic pulses evenly over the sequence with a random
+    /// rotation `T` (Format 2 analog; §III-C's σ_y).
+    Spread,
+}
+
+/// How the stochastic residual pulses are drawn.
+///
+/// §II-D specifies iid Bernoulli(δ) residuals, whose *count* is Binomial —
+/// that alone contributes ≈ 0.5/N² to the representation EMSE, which is
+/// enough to push dither's multiply/average EMSE *above* the deterministic
+/// variant's, contradicting the paper's Figs 3–6. [`Systematic`] sampling
+/// draws `⌊mδ⌋ + Bernoulli(frac(mδ))` ones placed evenly with a random
+/// rotation: every slot still has inclusion probability exactly δ (the
+/// estimator stays exactly unbiased and every §II-D bound still holds) but
+/// the count variance collapses to ≤ 1/4 — realizing "stochastically
+/// approximate the remaining difference" with the smallest possible noise,
+/// and reproducing the paper's ordering. Ablation: `bench_ablation`
+/// compares both (DESIGN.md §Ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidualSampling {
+    /// iid Bernoulli(δ) per slot (the paper's literal construction).
+    Iid,
+    /// Stratified: exact-count-in-expectation, evenly placed (default).
+    Systematic,
+}
+
+/// The (n, δ, branch) parameterization of a dither encoding of `x`.
+///
+/// `lower_branch == true` means the `x ≤ ½` case: `n` sure ones plus
+/// `N-n` Bernoulli(δ) pulses. `false` means the `x > ½` case: `n`
+/// Bernoulli(1-δ) pulses plus `N-n` sure zeros.
+#[derive(Clone, Copy, Debug)]
+pub struct DitherParams {
+    /// Number of "deterministic slot" pulses (meaning depends on branch).
+    pub n: usize,
+    /// Residual Bernoulli parameter δ ∈ [0, 2/N].
+    pub delta: f64,
+    /// Which half of the unit interval `x` fell in.
+    pub lower_branch: bool,
+}
+
+impl DitherParams {
+    /// Compute the encoding parameters for `x` (clamped to [0,1]) at length
+    /// `len`. This is the arithmetic heart of §II-D.
+    pub fn of(x: f64, len: usize) -> DitherParams {
+        let x = x.clamp(0.0, 1.0);
+        let nf = len as f64;
+        if x <= 0.5 {
+            let n = (nf * x).floor() as usize;
+            let r = x - n as f64 / nf;
+            let delta = if n >= len { 0.0 } else { (nf * r) / (nf - n as f64) };
+            DitherParams {
+                n,
+                // Guard fp dust: δ must lie in [0, 1].
+                delta: delta.clamp(0.0, 1.0),
+                lower_branch: true,
+            }
+        } else {
+            let n = (nf * x).ceil() as usize;
+            let r = n as f64 / nf - x;
+            let delta = if n == 0 { 0.0 } else { (r * nf) / n as f64 };
+            DitherParams {
+                n: n.min(len),
+                delta: delta.clamp(0.0, 1.0),
+                lower_branch: false,
+            }
+        }
+    }
+
+    /// The exact expectation of `X_s` under these parameters (= x, §II-D).
+    pub fn expectation(&self, len: usize) -> f64 {
+        let nf = len as f64;
+        if self.lower_branch {
+            (self.n as f64 + self.delta * (nf - self.n as f64)) / nf
+        } else {
+            self.n as f64 * (1.0 - self.delta) / nf
+        }
+    }
+
+    /// The exact variance of `X_s` under these parameters (§II-D).
+    pub fn variance(&self, len: usize) -> f64 {
+        let nf = len as f64;
+        let d = self.delta;
+        if self.lower_branch {
+            (nf - self.n as f64) * d * (1.0 - d) / (nf * nf)
+        } else {
+            self.n as f64 * d * (1.0 - d) / (nf * nf)
+        }
+    }
+}
+
+/// Encoder for the dither computing format.
+#[derive(Clone, Copy, Debug)]
+pub struct DitherEncoder {
+    /// Placement of the deterministic pulses (σ).
+    pub placement: Placement,
+    /// Residual-pulse sampling strategy.
+    pub residual: ResidualSampling,
+}
+
+impl Default for DitherEncoder {
+    fn default() -> Self {
+        Self {
+            placement: Placement::Prefix,
+            residual: ResidualSampling::Systematic,
+        }
+    }
+}
+
+impl DitherEncoder {
+    /// Prefix-placement encoder (σ = identity).
+    pub fn prefix() -> Self {
+        Self {
+            placement: Placement::Prefix,
+            residual: ResidualSampling::Systematic,
+        }
+    }
+
+    /// Spread-placement encoder (σ_y of §III-C).
+    pub fn spread() -> Self {
+        Self {
+            placement: Placement::Spread,
+            residual: ResidualSampling::Systematic,
+        }
+    }
+
+    /// Switch the residual sampling strategy (for ablations).
+    pub fn with_residual(mut self, residual: ResidualSampling) -> Self {
+        self.residual = residual;
+        self
+    }
+
+    /// Encode `x` as a length-`len` dither sequence.
+    pub fn encode(&self, x: f64, len: usize, rng: &mut Xoshiro256pp) -> BitSeq {
+        if len == 0 {
+            return BitSeq::zeros(0);
+        }
+        let p = DitherParams::of(x, len);
+        match self.placement {
+            Placement::Prefix => encode_prefix(&p, len, self.residual, rng),
+            Placement::Spread => encode_spread(&p, len, self.residual, rng),
+        }
+    }
+
+    /// Dither control sequence for scaled addition (§IV-C): the alternating
+    /// sequence `s_i = [i odd]` or its complement, each with probability ½.
+    pub fn control(&self, len: usize, rng: &mut Xoshiro256pp) -> BitSeq {
+        let flip = rng.bernoulli(0.5);
+        BitSeq::from_fn(len, |i| (i % 2 == 1) ^ flip)
+    }
+}
+
+/// Prefix placement: deterministic slots are positions `0..n`.
+fn encode_prefix(
+    p: &DitherParams,
+    len: usize,
+    residual: ResidualSampling,
+    rng: &mut Xoshiro256pp,
+) -> BitSeq {
+    let mut seq = BitSeq::zeros(len);
+    if p.lower_branch {
+        // Ones on 0..n (word-filled — §Perf), residual(δ) on n..len.
+        fill_prefix_ones(&mut seq, p.n);
+        if p.delta > 0.0 {
+            fill_range(&mut seq, p.n, len, p.delta, residual, rng);
+        }
+    } else {
+        // Residual(1-δ) on 0..n, zeros elsewhere.
+        if p.delta == 0.0 {
+            fill_prefix_ones(&mut seq, p.n);
+        } else {
+            fill_range(&mut seq, 0, p.n, 1.0 - p.delta, residual, rng);
+        }
+    }
+    seq
+}
+
+/// Set bits `0..n` word-parallel (64 bits per store).
+fn fill_prefix_ones(seq: &mut BitSeq, n: usize) {
+    let words = seq.words_mut();
+    let full = n / 64;
+    for w in words.iter_mut().take(full) {
+        *w = u64::MAX;
+    }
+    let rem = n % 64;
+    if rem != 0 {
+        words[full] |= (1u64 << rem) - 1;
+    }
+}
+
+/// Spread placement: the `n` deterministic slots are spread evenly with a
+/// random rotation; the stochastic slots are the complement.
+fn encode_spread(
+    p: &DitherParams,
+    len: usize,
+    residual: ResidualSampling,
+    rng: &mut Xoshiro256pp,
+) -> BitSeq {
+    let mut seq = BitSeq::zeros(len);
+    let slots = spread_slots(p.n, len, rng);
+    if p.lower_branch {
+        // Deterministic ones on the spread slots...
+        let mut is_slot = vec![false; len];
+        for &s in &slots {
+            seq.set(s, true);
+            is_slot[s] = true;
+        }
+        // ...residual(δ) on the complement.
+        if p.delta > 0.0 {
+            let complement: Vec<usize> = (0..len).filter(|&i| !is_slot[i]).collect();
+            fill_slots(&mut seq, &complement, p.delta, residual, rng);
+        }
+    } else {
+        // Residual(1-δ) on the spread slots, zero elsewhere.
+        if p.delta == 0.0 {
+            for &s in &slots {
+                seq.set(s, true);
+            }
+        } else {
+            fill_slots(&mut seq, &slots, 1.0 - p.delta, residual, rng);
+        }
+    }
+    seq
+}
+
+/// Fill a contiguous range with residual pulses of inclusion probability `p`.
+fn fill_range(
+    seq: &mut BitSeq,
+    lo: usize,
+    hi: usize,
+    p: f64,
+    residual: ResidualSampling,
+    rng: &mut Xoshiro256pp,
+) {
+    match residual {
+        ResidualSampling::Iid => fill_bernoulli(seq, lo, hi, p, rng),
+        ResidualSampling::Systematic => {
+            let m = hi - lo;
+            if m == 0 {
+                return;
+            }
+            if p > 0.5 {
+                // Dense case (the x > ½ branch has p = 1-δ ≈ 1): word-fill
+                // ones, then systematically CLEAR the few zeros — O(m/64 +
+                // zeros) instead of O(m) single-bit sets (§Perf).
+                let first_full = lo.div_ceil(64);
+                let last_full = hi / 64;
+                if first_full < last_full {
+                    for w in &mut seq.words_mut()[first_full..last_full] {
+                        *w = u64::MAX;
+                    }
+                }
+                for i in lo..(first_full * 64).min(hi) {
+                    seq.set(i, true);
+                }
+                for i in (last_full * 64).max(lo)..hi {
+                    seq.set(i, true);
+                }
+                fill_systematic(
+                    |i, s: &mut BitSeq| s.set(lo + i, false),
+                    seq,
+                    m,
+                    1.0 - p,
+                    rng,
+                );
+            } else {
+                fill_systematic(|i, s: &mut BitSeq| s.set(lo + i, true), seq, m, p, rng);
+            }
+        }
+    }
+}
+
+/// Fill an arbitrary slot list with residual pulses of probability `p`.
+fn fill_slots(
+    seq: &mut BitSeq,
+    slots: &[usize],
+    p: f64,
+    residual: ResidualSampling,
+    rng: &mut Xoshiro256pp,
+) {
+    match residual {
+        ResidualSampling::Iid => {
+            if p <= 0.0 {
+                return;
+            }
+            if p >= 1.0 {
+                for &s in slots {
+                    seq.set(s, true);
+                }
+                return;
+            }
+            let threshold = (p * 18446744073709551616.0) as u64;
+            for &s in slots {
+                if rng.next_u64() < threshold {
+                    seq.set(s, true);
+                }
+            }
+        }
+        ResidualSampling::Systematic => {
+            fill_systematic(
+                |i, s: &mut BitSeq| s.set(slots[i], true),
+                seq,
+                slots.len(),
+                p,
+                rng,
+            );
+        }
+    }
+}
+
+/// Systematic (stratified) sampling core: choose `⌊mp⌋ + Bernoulli(frac)`
+/// of `m` slots, evenly spaced with a uniformly random rotation. Every slot
+/// has inclusion probability exactly `p`; the count varies by at most 1.
+fn fill_systematic(
+    mut set: impl FnMut(usize, &mut BitSeq),
+    seq: &mut BitSeq,
+    m: usize,
+    p: f64,
+    rng: &mut Xoshiro256pp,
+) {
+    if m == 0 || p <= 0.0 {
+        return;
+    }
+    let target = p.min(1.0) * m as f64;
+    let mut count = target.floor() as usize;
+    if rng.bernoulli(target - count as f64) {
+        count += 1;
+    }
+    let count = count.min(m);
+    if count == 0 {
+        return;
+    }
+    let offset = rng.below(m as u64) as usize;
+    for i in 0..count {
+        set(((i * m) / count + offset) % m, seq);
+    }
+}
+
+/// Evenly-spaced slot positions: `σ(i) = (⌊i·len/m⌋ + offset) mod len` for
+/// `i < m`, with a uniformly random rotation `offset`. Distinct because the
+/// stride `len/m ≥ 1`.
+pub fn spread_slots(m: usize, len: usize, rng: &mut Xoshiro256pp) -> Vec<usize> {
+    if m == 0 || len == 0 {
+        return Vec::new();
+    }
+    let m = m.min(len);
+    let offset = rng.below(len as u64) as usize;
+    (0..m)
+        .map(|i| ((i * len) / m + offset) % len)
+        .collect()
+}
+
+/// Fill positions `[lo, hi)` with iid Bernoulli(p) pulses.
+fn fill_bernoulli(seq: &mut BitSeq, lo: usize, hi: usize, p: f64, rng: &mut Xoshiro256pp) {
+    if p <= 0.0 {
+        return;
+    }
+    if p >= 1.0 {
+        for i in lo..hi {
+            seq.set(i, true);
+        }
+        return;
+    }
+    let threshold = (p * 18446744073709551616.0) as u64;
+    for i in lo..hi {
+        if rng.next_u64() < threshold {
+            seq.set(i, true);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+
+    #[test]
+    fn params_expectation_equals_x() {
+        for len in [8usize, 64, 100, 127] {
+            for k in 0..=200 {
+                let x = k as f64 / 200.0;
+                let p = DitherParams::of(x, len);
+                assert!(
+                    (p.expectation(len) - x).abs() < 1e-12,
+                    "len={len} x={x} p={p:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn params_delta_bound() {
+        // §II-D: δ ≤ 2/N on both branches.
+        for len in [16usize, 64, 256] {
+            for k in 0..=1000 {
+                let x = k as f64 / 1000.0;
+                let p = DitherParams::of(x, len);
+                assert!(
+                    p.delta <= 2.0 / len as f64 + 1e-12,
+                    "len={len} x={x} delta={}",
+                    p.delta
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn params_variance_bound() {
+        // §II-D: Var(X_s) ≤ 2/N².
+        for len in [16usize, 64, 256] {
+            for k in 0..=1000 {
+                let x = k as f64 / 1000.0;
+                let p = DitherParams::of(x, len);
+                let bound = 2.0 / (len as f64 * len as f64);
+                assert!(p.variance(len) <= bound + 1e-15, "len={len} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_is_unbiased() {
+        let enc = DitherEncoder::prefix();
+        let mut rng = Xoshiro256pp::new(10);
+        for &x in &[0.05, 0.31, 0.5, 0.52, 0.77, 0.99] {
+            let mut w = Welford::new();
+            for _ in 0..4000 {
+                w.push(enc.encode(x, 64, &mut rng).value());
+            }
+            // SEM here is ~ (2/N)/sqrt(T) ≈ 5e-4; allow 5 sigma.
+            assert!((w.mean() - x).abs() < 3e-3, "x={x} mean={}", w.mean());
+        }
+    }
+
+    #[test]
+    fn encode_error_within_one_pulse() {
+        // Every sample satisfies |X_s - x| < 1/N + 1/N (det part is within
+        // 1/N and the stochastic part only adds/removes ≤ N Bernoulli(2/N)).
+        // We check the much tighter empirical bound that errors are O(1/N).
+        let enc = DitherEncoder::prefix();
+        let mut rng = Xoshiro256pp::new(11);
+        let n = 256;
+        for &x in &[0.2, 0.5, 0.8] {
+            for _ in 0..200 {
+                let v = enc.encode(x, n, &mut rng).value();
+                assert!(
+                    (v - x).abs() < 20.0 / n as f64,
+                    "x={x} v={v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn variance_is_order_inverse_n_squared() {
+        let enc = DitherEncoder::prefix();
+        let mut rng = Xoshiro256pp::new(12);
+        let x = 0.37;
+        for &n in &[32usize, 128, 512] {
+            let mut w = Welford::new();
+            for _ in 0..3000 {
+                w.push(enc.encode(x, n, &mut rng).value());
+            }
+            let bound = 2.0 / (n as f64 * n as f64);
+            // Sample variance within 40% of the analytic bound's scale.
+            assert!(
+                w.variance() <= 1.4 * bound,
+                "n={n} var={} bound={bound}",
+                w.variance()
+            );
+        }
+    }
+
+    #[test]
+    fn endpoints_exact() {
+        let enc = DitherEncoder::prefix();
+        let mut rng = Xoshiro256pp::new(13);
+        assert_eq!(enc.encode(0.0, 128, &mut rng).value(), 0.0);
+        assert_eq!(enc.encode(1.0, 128, &mut rng).value(), 1.0);
+    }
+
+    #[test]
+    fn exact_rationals_are_deterministic() {
+        // x = m/N has r = 0, δ = 0: the encoding is fully deterministic.
+        let enc = DitherEncoder::prefix();
+        let mut rng = Xoshiro256pp::new(14);
+        let n = 64;
+        for m in 0..=n {
+            let x = m as f64 / n as f64;
+            let a = enc.encode(x, n, &mut rng).value();
+            let b = enc.encode(x, n, &mut rng).value();
+            assert_eq!(a, x);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn spread_slots_are_distinct_and_even() {
+        let mut rng = Xoshiro256pp::new(15);
+        let slots = spread_slots(16, 64, &mut rng);
+        assert_eq!(slots.len(), 16);
+        let mut sorted = slots.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 16, "slots must be distinct");
+        // Gaps between consecutive sorted slots ≈ 64/16 = 4.
+        for pair in sorted.windows(2) {
+            assert!(pair[1] - pair[0] <= 5);
+        }
+    }
+
+    #[test]
+    fn spread_encoding_also_unbiased() {
+        let enc = DitherEncoder::spread();
+        let mut rng = Xoshiro256pp::new(16);
+        for &x in &[0.23, 0.5, 0.81] {
+            let mut w = Welford::new();
+            for _ in 0..4000 {
+                w.push(enc.encode(x, 64, &mut rng).value());
+            }
+            assert!((w.mean() - x).abs() < 3e-3, "x={x} mean={}", w.mean());
+        }
+    }
+
+    #[test]
+    fn control_alternates_with_random_phase() {
+        let enc = DitherEncoder::prefix();
+        let mut rng = Xoshiro256pp::new(17);
+        let mut phases = [0u32; 2];
+        for _ in 0..200 {
+            let c = enc.control(64, &mut rng);
+            // Exactly half the pulses are 1 and they alternate.
+            assert_eq!(c.count_ones(), 32);
+            for i in 0..63 {
+                assert_ne!(c.get(i), c.get(i + 1));
+            }
+            phases[c.get(0) as usize] += 1;
+        }
+        // Both phases occur (probability each ~ 1/2).
+        assert!(phases[0] > 50 && phases[1] > 50, "{phases:?}");
+    }
+
+    #[test]
+    fn zero_length_is_safe() {
+        let enc = DitherEncoder::prefix();
+        let mut rng = Xoshiro256pp::new(18);
+        assert_eq!(enc.encode(0.5, 0, &mut rng).len(), 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Bitstream computing core: the three schemes of the paper and the
+//! arithmetic (§II–§IV) plus the evaluation harness (§V).
+//!
+//! * [`sequence::BitSeq`] — packed pulse sequences.
+//! * [`stochastic::StochasticEncoder`] — classic stochastic computing (§II-A).
+//! * [`deterministic::DeterministicEncoder`] — Jenson–Riedel deterministic
+//!   variant, unary Format 1 + clock-division Format 2 (§II-B).
+//! * [`dither::DitherEncoder`] — dither computing, the paper's contribution
+//!   (§II-D), with prefix or spread placement of the deterministic pulses.
+//! * [`ops`] — represent / multiply / average under a [`ops::Scheme`].
+//! * [`analysis`] — bias/variance/EMSE estimation used by Figs 1–6, Table I.
+
+pub mod analysis;
+pub mod deterministic;
+pub mod dither;
+pub mod ops;
+pub mod sequence;
+pub mod stochastic;
+
+pub use analysis::{
+    evaluate, sweep, theory_deterministic_repr_emse, theory_stochastic_repr_emse, ErrorStats,
+    EvalConfig,
+};
+pub use deterministic::DeterministicEncoder;
+pub use dither::{DitherEncoder, DitherParams, Placement, ResidualSampling};
+pub use ops::{average, control, encode_x, encode_y, multiply, represent, Op, Scheme};
+pub use sequence::BitSeq;
+pub use stochastic::StochasticEncoder;

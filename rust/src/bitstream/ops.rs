@@ -1,0 +1,260 @@
+//! Scheme-level arithmetic: represent, multiply (§III), scaled-add (§IV).
+//!
+//! [`Scheme`] selects one of the three computing frameworks the paper
+//! compares; the free functions produce the estimator value for one trial,
+//! using the operand formats the paper prescribes per operation:
+//!
+//! | op        | left operand         | right operand        | control |
+//! |-----------|----------------------|----------------------|---------|
+//! | represent | scheme's x-format    | —                    | —       |
+//! | multiply  | Format 1 / σ=prefix  | Format 2 / σ=spread  | —       |
+//! | average   | Format 1 / σ=prefix  | Format 1 / σ=prefix  | scheme's W |
+
+use crate::bitstream::deterministic::DeterministicEncoder;
+use crate::bitstream::dither::DitherEncoder;
+use crate::bitstream::sequence::BitSeq;
+use crate::bitstream::stochastic::StochasticEncoder;
+use crate::util::rng::Xoshiro256pp;
+
+/// The three computing schemes compared throughout the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Classic unipolar stochastic computing (§II-A).
+    Stochastic,
+    /// Jenson–Riedel deterministic variant (§II-B).
+    DeterministicVariant,
+    /// The paper's dither computing (§II-D).
+    Dither,
+}
+
+impl Scheme {
+    /// All schemes, in the paper's comparison order.
+    pub const ALL: [Scheme; 3] = [
+        Scheme::Stochastic,
+        Scheme::DeterministicVariant,
+        Scheme::Dither,
+    ];
+
+    /// Display name matching the paper's figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Stochastic => "stochastic",
+            Scheme::DeterministicVariant => "deterministic",
+            Scheme::Dither => "dither",
+        }
+    }
+
+    /// Parse from CLI spelling.
+    pub fn from_str(s: &str) -> Option<Scheme> {
+        match s {
+            "stochastic" | "sc" => Some(Scheme::Stochastic),
+            "deterministic" | "det" => Some(Scheme::DeterministicVariant),
+            "dither" => Some(Scheme::Dither),
+            _ => None,
+        }
+    }
+
+    /// Whether one trial fully determines the estimate (footnote 2 of §V:
+    /// the deterministic variant needs only a single trial).
+    pub fn is_deterministic(&self) -> bool {
+        matches!(self, Scheme::DeterministicVariant)
+    }
+}
+
+/// Encode `x` in the scheme's representation format (left-operand format).
+pub fn encode_x(scheme: Scheme, x: f64, n: usize, rng: &mut Xoshiro256pp) -> BitSeq {
+    match scheme {
+        Scheme::Stochastic => StochasticEncoder.encode(x, n, rng),
+        Scheme::DeterministicVariant => DeterministicEncoder.encode_unary(x, n),
+        Scheme::Dither => DitherEncoder::prefix().encode(x, n, rng),
+    }
+}
+
+/// Encode `y` in the scheme's right-multiplicand format.
+pub fn encode_y(scheme: Scheme, y: f64, n: usize, rng: &mut Xoshiro256pp) -> BitSeq {
+    match scheme {
+        Scheme::Stochastic => StochasticEncoder.encode(y, n, rng),
+        Scheme::DeterministicVariant => DeterministicEncoder.encode_clock_div(y, n),
+        Scheme::Dither => DitherEncoder::spread().encode(y, n, rng),
+    }
+}
+
+/// One-trial estimate of `x` (the §II representation experiment).
+pub fn represent(scheme: Scheme, x: f64, n: usize, rng: &mut Xoshiro256pp) -> f64 {
+    encode_x(scheme, x, n, rng).value()
+}
+
+/// One-trial estimate of `z = x·y` via bitwise AND (§III).
+pub fn multiply(scheme: Scheme, x: f64, y: f64, n: usize, rng: &mut Xoshiro256pp) -> f64 {
+    let xs = encode_x(scheme, x, n, rng);
+    let ys = encode_y(scheme, y, n, rng);
+    xs.and(&ys).value()
+}
+
+/// The scheme's control sequence `W` for scaled addition (§IV).
+pub fn control(scheme: Scheme, n: usize, rng: &mut Xoshiro256pp) -> BitSeq {
+    match scheme {
+        Scheme::Stochastic => StochasticEncoder.control(n, rng),
+        Scheme::DeterministicVariant => DeterministicEncoder.control(n),
+        Scheme::Dither => DitherEncoder::prefix().control(n, rng),
+    }
+}
+
+/// One-trial estimate of `u = (x+y)/2` via MUX (§IV).
+pub fn average(scheme: Scheme, x: f64, y: f64, n: usize, rng: &mut Xoshiro256pp) -> f64 {
+    let xs = encode_x(scheme, x, n, rng);
+    let ys = encode_x(scheme, y, n, rng);
+    let w = control(scheme, n, rng);
+    BitSeq::mux(&w, &xs, &ys).value()
+}
+
+/// The arithmetic operations the evaluation section sweeps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Representation of x (Figs 1–2).
+    Represent,
+    /// Product z = x·y (Figs 3–4).
+    Multiply,
+    /// Scaled addition u = (x+y)/2 (Figs 5–6).
+    Average,
+}
+
+impl Op {
+    /// All ops in figure order.
+    pub const ALL: [Op; 3] = [Op::Represent, Op::Multiply, Op::Average];
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Represent => "represent",
+            Op::Multiply => "multiply",
+            Op::Average => "average",
+        }
+    }
+
+    /// Ground-truth value for operands (x, y).
+    pub fn truth(&self, x: f64, y: f64) -> f64 {
+        match self {
+            Op::Represent => x,
+            Op::Multiply => x * y,
+            Op::Average => 0.5 * (x + y),
+        }
+    }
+
+    /// One-trial estimate under `scheme`.
+    pub fn estimate(
+        &self,
+        scheme: Scheme,
+        x: f64,
+        y: f64,
+        n: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> f64 {
+        match self {
+            Op::Represent => represent(scheme, x, n, rng),
+            Op::Multiply => multiply(scheme, x, y, n, rng),
+            Op::Average => average(scheme, x, y, n, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+
+    fn mean_estimate(scheme: Scheme, op: Op, x: f64, y: f64, n: usize, trials: usize) -> f64 {
+        let mut rng = Xoshiro256pp::new(99);
+        let mut w = Welford::new();
+        for _ in 0..trials {
+            w.push(op.estimate(scheme, x, y, n, &mut rng));
+        }
+        w.mean()
+    }
+
+    #[test]
+    fn multiply_means_converge_to_product() {
+        for scheme in Scheme::ALL {
+            let m = mean_estimate(scheme, Op::Multiply, 0.7, 0.6, 128, 3000);
+            let tol = match scheme {
+                Scheme::Stochastic => 0.01,
+                // deterministic bias is O(1/N); dither mean error small.
+                _ => 2.5 / 128.0,
+            };
+            assert!((m - 0.42).abs() < tol, "{scheme:?} mean={m}");
+        }
+    }
+
+    #[test]
+    fn average_means_converge() {
+        for scheme in Scheme::ALL {
+            let m = mean_estimate(scheme, Op::Average, 0.3, 0.8, 128, 3000);
+            assert!((m - 0.55).abs() < 0.02, "{scheme:?} mean={m}");
+        }
+    }
+
+    #[test]
+    fn deterministic_multiply_error_bound() {
+        // §III-B: |Z_s - xy| <= 2/N.
+        let mut rng = Xoshiro256pp::new(7);
+        let n = 256;
+        for k in 0..50 {
+            let x = (k as f64 + 0.5) / 50.0;
+            let y = ((k * 7 % 50) as f64 + 0.5) / 50.0;
+            let z = multiply(Scheme::DeterministicVariant, x, y, n, &mut rng);
+            assert!((z - x * y).abs() <= 2.0 / n as f64 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn dither_multiply_error_is_order_inverse_n() {
+        // §III-C: |Z_s - z| <= c/N for a constant c.
+        let mut rng = Xoshiro256pp::new(8);
+        let n = 256;
+        for k in 0..50 {
+            let x = (k as f64 + 0.5) / 50.0;
+            let y = ((k * 13 % 50) as f64 + 0.5) / 50.0;
+            let z = multiply(Scheme::Dither, x, y, n, &mut rng);
+            assert!(
+                (z - x * y).abs() <= 8.0 / n as f64,
+                "x={x} y={y} err={}",
+                (z - x * y).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn dither_variance_beats_stochastic() {
+        let n = 128;
+        let (x, y) = (0.6, 0.7);
+        let var = |scheme: Scheme| {
+            let mut rng = Xoshiro256pp::new(9);
+            let mut w = Welford::new();
+            for _ in 0..3000 {
+                w.push(Op::Multiply.estimate(scheme, x, y, n, &mut rng));
+            }
+            w.variance()
+        };
+        let vs = var(Scheme::Stochastic);
+        let vd = var(Scheme::Dither);
+        assert!(
+            vd < vs / 4.0,
+            "dither var {vd} should be well below stochastic {vs}"
+        );
+    }
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(Scheme::from_str("dither"), Some(Scheme::Dither));
+        assert_eq!(Scheme::from_str("sc"), Some(Scheme::Stochastic));
+        assert_eq!(Scheme::from_str("det"), Some(Scheme::DeterministicVariant));
+        assert_eq!(Scheme::from_str("nope"), None);
+    }
+
+    #[test]
+    fn op_truth_values() {
+        assert_eq!(Op::Represent.truth(0.3, 0.9), 0.3);
+        assert_eq!(Op::Multiply.truth(0.5, 0.5), 0.25);
+        assert_eq!(Op::Average.truth(0.2, 0.6), 0.4);
+    }
+}

@@ -1,0 +1,253 @@
+//! Packed binary pulse sequences.
+//!
+//! A [`BitSeq`] is the length-`N` sequence of pulses `X_1..X_N` from the
+//! paper (§II), stored 64 bits per `u64` word so the arithmetic operations
+//! (bitwise-AND multiply, MUX scaled-add) and the value estimate
+//! `X_s = (1/N)·Σ X_i` (a popcount) run word-parallel.
+
+/// A fixed-length sequence of binary pulses, bit-packed into u64 words.
+///
+/// Bit `i` of the sequence lives at word `i / 64`, bit `i % 64`. Bits at
+/// positions `>= len` in the last word are always kept zero (the invariant
+/// every constructor and operation maintains), so `count_ones` is a plain
+/// word-wise popcount.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSeq {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSeq {
+    /// All-zero sequence of length `len`.
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// All-one sequence of length `len`.
+    pub fn ones(len: usize) -> Self {
+        let mut s = Self::zeros(len);
+        for w in &mut s.words {
+            *w = u64::MAX;
+        }
+        s.mask_tail();
+        s
+    }
+
+    /// Build from a predicate over bit index.
+    pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> bool) -> Self {
+        let mut s = Self::zeros(len);
+        for i in 0..len {
+            if f(i) {
+                s.set(i, true);
+            }
+        }
+        s
+    }
+
+    /// Build from a bool slice.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        Self::from_fn(bits.len(), |i| bits[i])
+    }
+
+    /// Sequence length `N`.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if `N == 0`.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Get bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        let m = 1u64 << (i % 64);
+        if v {
+            *w |= m;
+        } else {
+            *w &= !m;
+        }
+    }
+
+    /// Number of 1-pulses, word-parallel popcount.
+    #[inline]
+    pub fn count_ones(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// The value estimate `X_s = count_ones / N` (§II).
+    #[inline]
+    pub fn value(&self) -> f64 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.count_ones() as f64 / self.len as f64
+        }
+    }
+
+    /// Bitwise AND — the stochastic-computing multiplier (§III).
+    pub fn and(&self, other: &BitSeq) -> BitSeq {
+        assert_eq!(self.len, other.len, "sequence lengths must match");
+        let words = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| a & b)
+            .collect();
+        BitSeq {
+            words,
+            len: self.len,
+        }
+    }
+
+    /// MUX select — the scaled-addition operator (§IV):
+    /// `U_i = W_i·X_i + (1-W_i)·Y_i`, computed word-parallel as
+    /// `(w & x) | (!w & y)`.
+    pub fn mux(control: &BitSeq, x: &BitSeq, y: &BitSeq) -> BitSeq {
+        assert_eq!(control.len, x.len, "sequence lengths must match");
+        assert_eq!(control.len, y.len, "sequence lengths must match");
+        let words = control
+            .words
+            .iter()
+            .zip(x.words.iter().zip(&y.words))
+            .map(|(w, (a, b))| (w & a) | (!w & b))
+            .collect();
+        let mut s = BitSeq {
+            words,
+            len: control.len,
+        };
+        // `!w` may set tail bits; re-mask to preserve the invariant.
+        s.mask_tail();
+        s
+    }
+
+    /// Raw words (read-only; used by the perf-critical encoders).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Mutable raw words. Callers must uphold the tail-zero invariant or
+    /// call [`BitSeq::mask_tail`] afterwards.
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Zero any bits at positions `>= len` in the final word.
+    #[inline]
+    pub fn mask_tail(&mut self) {
+        let rem = self.len % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    /// Iterate bits as bools.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_ones_counts() {
+        for n in [0usize, 1, 63, 64, 65, 130, 1024] {
+            assert_eq!(BitSeq::zeros(n).count_ones(), 0);
+            assert_eq!(BitSeq::ones(n).count_ones(), n as u64);
+        }
+    }
+
+    #[test]
+    fn ones_value_is_one() {
+        assert_eq!(BitSeq::ones(100).value(), 1.0);
+        assert_eq!(BitSeq::zeros(100).value(), 0.0);
+        assert_eq!(BitSeq::zeros(0).value(), 0.0);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut s = BitSeq::zeros(130);
+        s.set(0, true);
+        s.set(63, true);
+        s.set(64, true);
+        s.set(129, true);
+        assert!(s.get(0) && s.get(63) && s.get(64) && s.get(129));
+        assert!(!s.get(1) && !s.get(65));
+        assert_eq!(s.count_ones(), 4);
+        s.set(63, false);
+        assert_eq!(s.count_ones(), 3);
+    }
+
+    #[test]
+    fn from_fn_matches_get() {
+        let s = BitSeq::from_fn(200, |i| i % 3 == 0);
+        for i in 0..200 {
+            assert_eq!(s.get(i), i % 3 == 0);
+        }
+    }
+
+    #[test]
+    fn and_is_bitwise_product() {
+        let a = BitSeq::from_fn(150, |i| i % 2 == 0);
+        let b = BitSeq::from_fn(150, |i| i % 3 == 0);
+        let c = a.and(&b);
+        for i in 0..150 {
+            assert_eq!(c.get(i), i % 6 == 0);
+        }
+    }
+
+    #[test]
+    fn mux_selects_per_bit() {
+        let w = BitSeq::from_fn(100, |i| i % 2 == 0);
+        let x = BitSeq::ones(100);
+        let y = BitSeq::zeros(100);
+        let u = BitSeq::mux(&w, &x, &y);
+        for i in 0..100 {
+            assert_eq!(u.get(i), i % 2 == 0);
+        }
+    }
+
+    #[test]
+    fn mux_preserves_tail_invariant() {
+        // control all-zero selects y = ones; tail bits must stay zero.
+        let w = BitSeq::zeros(70);
+        let x = BitSeq::zeros(70);
+        let y = BitSeq::ones(70);
+        let u = BitSeq::mux(&w, &x, &y);
+        assert_eq!(u.count_ones(), 70);
+        assert_eq!(u.value(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "lengths must match")]
+    fn and_length_mismatch_panics() {
+        let _ = BitSeq::zeros(10).and(&BitSeq::zeros(11));
+    }
+
+    #[test]
+    fn value_of_half() {
+        let s = BitSeq::from_fn(128, |i| i < 64);
+        assert_eq!(s.value(), 0.5);
+    }
+}

@@ -1,0 +1,146 @@
+//! Classic (unipolar) stochastic computing encoder — paper §II-A.
+//!
+//! A value `x ∈ [0,1]` is represented by `N` iid Bernoulli trials with
+//! `P(X_i = 1) = x`. The estimator `X_s` is unbiased with
+//! `Var(X_s) = x(1-x)/N = Ω(1/N)`, which is the suboptimal rate the paper's
+//! dither scheme improves on.
+
+use crate::bitstream::sequence::BitSeq;
+use crate::util::rng::Xoshiro256pp;
+
+/// Encoder for the unipolar stochastic-computing format.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StochasticEncoder;
+
+impl StochasticEncoder {
+    /// Encode `x` (clamped to [0,1]) as `n` iid Bernoulli(x) pulses.
+    ///
+    /// Perf: each `next_u64` supplies TWO Bernoulli trials by comparing its
+    /// high and low 32-bit halves against a 32-bit threshold (xoshiro's
+    /// halves are independently uniform). The threshold granularity of
+    /// 2⁻³² introduces a bias ≤ 2.4e-10 — five orders below anything the
+    /// EMSE experiments resolve — and halves the generator work, which
+    /// dominates this encoder (§Perf: 0.49 → ~1 G pulses/s).
+    pub fn encode(&self, x: f64, n: usize, rng: &mut Xoshiro256pp) -> BitSeq {
+        let x = x.clamp(0.0, 1.0);
+        if x <= 0.0 {
+            return BitSeq::zeros(n);
+        }
+        if x >= 1.0 {
+            return BitSeq::ones(n);
+        }
+        let threshold = (x * 4294967296.0) as u32; // x · 2^32
+        let mut seq = BitSeq::zeros(n);
+        let words = seq.words_mut();
+        let full_words = n / 64;
+        for w in words.iter_mut().take(full_words) {
+            let mut word = 0u64;
+            for b in 0..32 {
+                let r = rng.next_u64();
+                word |= u64::from((r as u32) < threshold) << (2 * b);
+                word |= u64::from(((r >> 32) as u32) < threshold) << (2 * b + 1);
+            }
+            *w = word;
+        }
+        let rem = n % 64;
+        if rem != 0 {
+            let mut word = 0u64;
+            let mut b = 0;
+            while b + 1 < rem {
+                let r = rng.next_u64();
+                word |= u64::from((r as u32) < threshold) << b;
+                word |= u64::from(((r >> 32) as u32) < threshold) << (b + 1);
+                b += 2;
+            }
+            if b < rem {
+                word |= u64::from((rng.next_u64() as u32) < threshold) << b;
+            }
+            words[full_words] = word;
+        }
+        seq
+    }
+
+    /// The N iid Bernoulli(1/2) control sequence for scaled addition (§IV-A).
+    pub fn control(&self, n: usize, rng: &mut Xoshiro256pp) -> BitSeq {
+        // p = 1/2 is exactly one random bit per pulse: take whole words.
+        let mut seq = BitSeq::zeros(n);
+        for w in seq.words_mut() {
+            *w = rng.next_u64();
+        }
+        seq.mask_tail();
+        seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+
+    #[test]
+    fn unbiased_mean() {
+        let enc = StochasticEncoder;
+        let mut rng = Xoshiro256pp::new(1);
+        for &x in &[0.1, 0.25, 0.5, 0.73, 0.9] {
+            let mut w = Welford::new();
+            for _ in 0..2000 {
+                w.push(enc.encode(x, 64, &mut rng).value());
+            }
+            assert!(
+                (w.mean() - x).abs() < 0.01,
+                "x={x} mean={}",
+                w.mean()
+            );
+        }
+    }
+
+    #[test]
+    fn variance_matches_binomial() {
+        let enc = StochasticEncoder;
+        let mut rng = Xoshiro256pp::new(2);
+        let (x, n) = (0.3, 128usize);
+        let mut w = Welford::new();
+        for _ in 0..5000 {
+            w.push(enc.encode(x, n, &mut rng).value());
+        }
+        let expected = x * (1.0 - x) / n as f64;
+        assert!(
+            (w.variance() - expected).abs() < 0.2 * expected,
+            "var={} expected={expected}",
+            w.variance()
+        );
+    }
+
+    #[test]
+    fn endpoints_are_exact() {
+        let enc = StochasticEncoder;
+        let mut rng = Xoshiro256pp::new(3);
+        assert_eq!(enc.encode(0.0, 100, &mut rng).value(), 0.0);
+        assert_eq!(enc.encode(1.0, 100, &mut rng).value(), 1.0);
+        // Out-of-range inputs clamp.
+        assert_eq!(enc.encode(-0.5, 100, &mut rng).value(), 0.0);
+        assert_eq!(enc.encode(1.5, 100, &mut rng).value(), 1.0);
+    }
+
+    #[test]
+    fn control_is_half_on_average() {
+        let enc = StochasticEncoder;
+        let mut rng = Xoshiro256pp::new(4);
+        let mut w = Welford::new();
+        for _ in 0..2000 {
+            w.push(enc.control(100, &mut rng).value());
+        }
+        assert!((w.mean() - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn non_multiple_of_64_lengths() {
+        let enc = StochasticEncoder;
+        let mut rng = Xoshiro256pp::new(5);
+        for n in [1usize, 7, 63, 65, 127, 200] {
+            let s = enc.encode(0.5, n, &mut rng);
+            assert_eq!(s.len(), n);
+            assert!(s.count_ones() <= n as u64);
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Dynamic batcher: groups same-configuration requests into batches.
+//!
+//! Requests arriving within `max_wait` that share `(model, k, mode)` are
+//! coalesced up to `max_batch` and executed in one artifact call — the
+//! classic dynamic-batching policy. Each request carries a oneshot-style
+//! channel for its response line.
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::protocol::{format_error, format_response, InferenceRequest};
+use crate::rounding::RoundingMode;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A queued request with its response channel.
+pub struct Pending {
+    /// The request.
+    pub req: InferenceRequest,
+    /// Where the response line is sent.
+    pub respond_to: Sender<String>,
+    /// Enqueue time (for latency accounting).
+    pub enqueued: Instant,
+}
+
+/// Batch key: requests with equal keys can share one executable call.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct BatchKey {
+    /// Model family.
+    pub model: String,
+    /// Bit width.
+    pub k: u32,
+    /// Rounding scheme.
+    pub mode: RoundingMode,
+}
+
+/// Shared state between submitters and the batching worker.
+pub struct Batcher {
+    queue: Mutex<VecDeque<Pending>>,
+    notify: Condvar,
+    shutdown: AtomicBool,
+    /// Maximum batch size per executable call.
+    pub max_batch: usize,
+    /// How long to linger for more same-key requests.
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    /// New batcher with the given policy.
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
+        Batcher {
+            queue: Mutex::new(VecDeque::new()),
+            notify: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            max_batch,
+            max_wait,
+        }
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&self, p: Pending) {
+        self.queue.lock().unwrap().push_back(p);
+        self.notify.notify_one();
+    }
+
+    /// Request worker shutdown (drains nothing; pending requests error out
+    /// when their channels drop).
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.notify.notify_all();
+    }
+
+    /// True once `stop` has been called.
+    pub fn is_stopped(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Pull the next batch: blocks until at least one request is queued,
+    /// lingers up to `max_wait` for same-key company, then drains up to
+    /// `max_batch` matching requests (preserving arrival order of the
+    /// rest). Returns `None` on shutdown.
+    pub fn next_batch(&self) -> Option<(BatchKey, Vec<Pending>)> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if self.is_stopped() {
+                return None;
+            }
+            if !q.is_empty() {
+                break;
+            }
+            q = self.notify.wait(q).unwrap();
+        }
+        let key = {
+            let first = q.front().unwrap();
+            BatchKey {
+                model: first.req.model.clone(),
+                k: first.req.k,
+                mode: first.req.mode,
+            }
+        };
+        // Linger for stragglers while the batch is not full.
+        let deadline = Instant::now() + self.max_wait;
+        loop {
+            let matching = q
+                .iter()
+                .filter(|p| {
+                    p.req.model == key.model && p.req.k == key.k && p.req.mode == key.mode
+                })
+                .count();
+            if matching >= self.max_batch || Instant::now() >= deadline || self.is_stopped() {
+                break;
+            }
+            let (guard, _timeout) = self
+                .notify
+                .wait_timeout(q, deadline.saturating_duration_since(Instant::now()))
+                .unwrap();
+            q = guard;
+        }
+        // Drain matching requests.
+        let mut batch = Vec::new();
+        let mut rest = VecDeque::with_capacity(q.len());
+        while let Some(p) = q.pop_front() {
+            let matches = p.req.model == key.model && p.req.k == key.k && p.req.mode == key.mode;
+            if matches && batch.len() < self.max_batch {
+                batch.push(p);
+            } else {
+                rest.push_back(p);
+            }
+        }
+        *q = rest;
+        Some((key, batch))
+    }
+}
+
+/// The batching worker loop: pull → execute → respond. Returns on shutdown.
+pub fn worker_loop(batcher: &Batcher, engine: &Engine, metrics: &Metrics) {
+    while let Some((key, batch)) = batcher.next_batch() {
+        let pixel_refs: Vec<&[f64]> = batch.iter().map(|p| p.req.pixels.as_slice()).collect();
+        metrics.record_batch(batch.len());
+        match engine.infer_batch(&key.model, key.k, key.mode, &pixel_refs) {
+            Ok(outputs) => {
+                for (p, out) in batch.iter().zip(outputs) {
+                    let latency_us = p.enqueued.elapsed().as_micros() as u64;
+                    metrics.record_request(latency_us);
+                    let line = format_response(
+                        p.req.id,
+                        out.pred,
+                        &out.logits,
+                        latency_us,
+                        batch.len(),
+                    );
+                    let _ = p.respond_to.send(line);
+                }
+            }
+            Err(e) => {
+                for p in &batch {
+                    metrics.record_error();
+                    let _ = p.respond_to.send(format_error(p.req.id, &e.to_string()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn req(model: &str, k: u32, mode: RoundingMode, id: u64) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            model: model.to_string(),
+            k,
+            mode,
+            pixels: vec![0.0; 784],
+        }
+    }
+
+    fn pending(model: &str, k: u32, mode: RoundingMode, id: u64) -> (Pending, std::sync::mpsc::Receiver<String>) {
+        let (tx, rx) = channel();
+        (
+            Pending {
+                req: req(model, k, mode, id),
+                respond_to: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn groups_same_key_requests() {
+        let b = Batcher::new(8, Duration::from_millis(1));
+        for i in 0..3 {
+            let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
+            b.submit(p);
+        }
+        let (p, _rx) = pending("digits_linear", 2, RoundingMode::Dither, 99);
+        b.submit(p);
+        let (key, batch) = b.next_batch().unwrap();
+        assert_eq!(key.k, 4);
+        assert_eq!(batch.len(), 3);
+        // The k=2 request stays queued.
+        let (key2, batch2) = b.next_batch().unwrap();
+        assert_eq!(key2.k, 2);
+        assert_eq!(batch2.len(), 1);
+        assert_eq!(batch2[0].req.id, 99);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let b = Batcher::new(2, Duration::from_millis(1));
+        for i in 0..5 {
+            let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
+            b.submit(p);
+        }
+        let (_, batch) = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        let (_, batch) = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        let (_, batch) = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn preserves_arrival_order_within_key() {
+        let b = Batcher::new(8, Duration::from_millis(1));
+        for i in 0..4 {
+            let (p, _rx) = pending("digits_linear", 4, RoundingMode::Stochastic, i);
+            b.submit(p);
+        }
+        let (_, batch) = b.next_batch().unwrap();
+        let ids: Vec<u64> = batch.iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn stop_unblocks_worker() {
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(1)));
+        let b2 = b.clone();
+        let handle = std::thread::spawn(move || b2.next_batch().is_none());
+        std::thread::sleep(Duration::from_millis(20));
+        b.stop();
+        assert!(handle.join().unwrap());
+    }
+
+    #[test]
+    fn lingers_to_fill_batch() {
+        let b = Arc::new(Batcher::new(4, Duration::from_millis(200)));
+        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 0);
+        b.submit(p);
+        let b2 = b.clone();
+        let submitter = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            for i in 1..4 {
+                let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
+                b2.submit(p);
+                std::mem::forget(rx);
+            }
+        });
+        let (_, batch) = b.next_batch().unwrap();
+        submitter.join().unwrap();
+        assert_eq!(batch.len(), 4, "linger should capture the stragglers");
+    }
+}

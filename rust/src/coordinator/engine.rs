@@ -1,0 +1,154 @@
+//! Inference engine: owns the trained models and the PJRT runtime, and
+//! executes batches against the AOT artifacts.
+//!
+//! The engine is the boundary between L3 (request coordination) and L2/L1
+//! (the compiled JAX/Pallas computation): it marshals a batch of requests
+//! into input literals — weights, scalars, calibrated ranges — and reads
+//! back logits. Python is never involved.
+
+use crate::coordinator::protocol::mode_code;
+use crate::data::{Dataset, Task};
+use crate::nn::{ActivationRanges, Mlp};
+use crate::rounding::RoundingMode;
+use crate::runtime::client::{
+    f32_scalar, i32_scalar, matrix_literal, padded_batch_literal, u32_scalar, vec_literal,
+};
+use crate::runtime::Runtime;
+use crate::train::{trained_model, ModelSpec};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One model family's serving state.
+struct ModelState {
+    mlp: Mlp,
+    /// Hidden-layer half-ranges (fashion only; empty for linear).
+    hidden_half_ranges: Vec<f64>,
+    /// Float test accuracy at load time (reported in logs).
+    float_accuracy: f64,
+}
+
+/// The serving engine.
+pub struct Engine {
+    runtime: Runtime,
+    digits: ModelState,
+    fashion: ModelState,
+    seed_counter: AtomicU64,
+}
+
+/// Result of one request within a batch.
+#[derive(Clone, Debug)]
+pub struct InferenceOutput {
+    /// Predicted class.
+    pub pred: u8,
+    /// Raw logits.
+    pub logits: Vec<f64>,
+}
+
+impl Engine {
+    /// Build the engine: PJRT client + artifacts + trained models (cached
+    /// under `artifacts/weights/`, trained on first run).
+    pub fn new(artifacts_dir: &str, train_n: usize, seed: u64) -> Result<Engine> {
+        let runtime = Runtime::cpu(artifacts_dir)?;
+        let digits = load_state(ModelSpec::DigitsLinear, train_n, seed)?;
+        let fashion = load_state(ModelSpec::FashionMlp, train_n, seed)?;
+        Ok(Engine {
+            runtime,
+            digits,
+            fashion,
+            seed_counter: AtomicU64::new(seed),
+        })
+    }
+
+    /// The underlying runtime (for reporting).
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Float (unquantized) test accuracy of a model family.
+    pub fn float_accuracy(&self, model: &str) -> Option<f64> {
+        match model {
+            "digits_linear" => Some(self.digits.float_accuracy),
+            "fashion_mlp" => Some(self.fashion.float_accuracy),
+            _ => None,
+        }
+    }
+
+    /// Execute a batch of same-(model, k, mode) requests.
+    pub fn infer_batch(
+        &self,
+        model: &str,
+        k: u32,
+        mode: RoundingMode,
+        pixels: &[&[f64]],
+    ) -> Result<Vec<InferenceOutput>> {
+        if pixels.is_empty() {
+            return Ok(Vec::new());
+        }
+        let artifact = self.runtime.pick_batch_artifact(model, pixels.len())?;
+        let loaded = self.runtime.load(&artifact)?;
+        let batch = loaded.meta.batch;
+        // Oversized batches are split recursively.
+        if pixels.len() > batch {
+            let (head, tail) = pixels.split_at(batch);
+            let mut out = self.infer_batch(model, k, mode, head)?;
+            out.extend(self.infer_batch(model, k, mode, tail)?);
+            return Ok(out);
+        }
+        let seed = self.seed_counter.fetch_add(1, Ordering::Relaxed) as u32;
+        let x = padded_batch_literal(pixels, 784, batch)?;
+        let state = match model {
+            "digits_linear" => &self.digits,
+            "fashion_mlp" => &self.fashion,
+            other => bail!("unknown model family {other:?}"),
+        };
+        let mut inputs: Vec<xla::Literal> = vec![x];
+        for layer in &state.mlp.layers {
+            inputs.push(matrix_literal(&layer.weights)?);
+            inputs.push(vec_literal(&layer.bias));
+        }
+        inputs.push(i32_scalar(k as i32));
+        inputs.push(i32_scalar(mode_code(mode)));
+        inputs.push(u32_scalar(seed));
+        for &r in &state.hidden_half_ranges {
+            inputs.push(f32_scalar(r as f32));
+        }
+        let (_rows, cols, data) = loaded.run_f32(&inputs)?;
+        let mut out = Vec::with_capacity(pixels.len());
+        for i in 0..pixels.len() {
+            let logits: Vec<f64> = data[i * cols..(i + 1) * cols]
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j as u8)
+                .unwrap_or(0);
+            out.push(InferenceOutput { pred, logits });
+        }
+        Ok(out)
+    }
+}
+
+fn load_state(spec: ModelSpec, train_n: usize, seed: u64) -> Result<ModelState> {
+    let (mlp, _test, float_accuracy) = trained_model(spec, train_n, train_n / 5, seed);
+    // Calibrate hidden ranges on a small synthetic batch.
+    let calib = Dataset::synthesize(spec.task(), 64, seed ^ 0xCA11B);
+    let ranges = ActivationRanges::calibrate(&mlp, &calib.images);
+    let hidden_half_ranges: Vec<f64> =
+        ranges.per_layer[1..].iter().map(|&(_, hi)| hi).collect();
+    let _ = Task::Digits; // (Task used via spec.task())
+    Ok(ModelState {
+        mlp,
+        hidden_half_ranges,
+        float_accuracy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests live in rust/tests/integration_serving.rs (they need the
+    // artifacts directory built by `make artifacts`). Unit coverage for the
+    // pieces lives in runtime::client and coordinator::protocol.
+}

@@ -1,0 +1,126 @@
+//! Serving metrics: counters and latency percentiles for the coordinator.
+
+use crate::util::json::Json;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe metrics registry.
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    errors: u64,
+    batches: u64,
+    batched_requests: u64,
+    latencies_us: Vec<u64>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    /// Fresh registry.
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one completed request with its end-to-end latency.
+    pub fn record_request(&self, latency_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        // Reservoir-less cap: keep the most recent 100k latencies.
+        if g.latencies_us.len() >= 100_000 {
+            g.latencies_us.clear();
+        }
+        g.latencies_us.push(latency_us);
+    }
+
+    /// Record a protocol or execution error.
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Record one executed batch of the given size.
+    pub fn record_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_requests += size as u64;
+    }
+
+    /// Snapshot as a JSON line (the `stats` command response).
+    pub fn snapshot_json(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies_us.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            let idx = ((lat.len() - 1) as f64 * p).round() as usize;
+            lat[idx] as f64
+        };
+        let mean_batch = if g.batches == 0 {
+            0.0
+        } else {
+            g.batched_requests as f64 / g.batches as f64
+        };
+        let uptime = self.started.elapsed().as_secs_f64();
+        let throughput = if uptime > 0.0 {
+            g.requests as f64 / uptime
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("requests", Json::Num(g.requests as f64)),
+            ("errors", Json::Num(g.errors as f64)),
+            ("batches", Json::Num(g.batches as f64)),
+            ("mean_batch", Json::Num(mean_batch)),
+            ("p50_us", Json::Num(pct(0.50))),
+            ("p95_us", Json::Num(pct(0.95))),
+            ("p99_us", Json::Num(pct(0.99))),
+            ("uptime_s", Json::Num(uptime)),
+            ("throughput_rps", Json::Num(throughput)),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.record_request(i * 10);
+        }
+        m.record_batch(8);
+        m.record_batch(4);
+        m.record_error();
+        let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
+        assert_eq!(json.get("requests").unwrap().as_f64(), Some(100.0));
+        assert_eq!(json.get("errors").unwrap().as_f64(), Some(1.0));
+        assert_eq!(json.get("mean_batch").unwrap().as_f64(), Some(6.0));
+        let p50 = json.get("p50_us").unwrap().as_f64().unwrap();
+        assert!((400.0..=600.0).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn empty_snapshot_is_valid() {
+        let m = Metrics::new();
+        let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
+        assert_eq!(json.get("p95_us").unwrap().as_f64(), Some(0.0));
+    }
+}

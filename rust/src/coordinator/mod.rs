@@ -1,0 +1,23 @@
+//! L3 coordinator: the serving stack around the compiled artifacts.
+//!
+//! The paper's contribution is a numeric format, so the coordinator is a
+//! focused (but real) inference server: newline-JSON TCP protocol
+//! ([`protocol`]), dynamic batching by `(model, k, rounding-mode)`
+//! ([`batcher`]), model + runtime glue ([`engine`]), serving metrics
+//! ([`metrics`]), and the threaded TCP front-end ([`server`]).
+//!
+//! Per-request rounding configuration is the point: a client can A/B
+//! deterministic vs dither rounding at any bit width against the same
+//! loaded model with one JSON field.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{Batcher, Pending};
+pub use engine::{Engine, InferenceOutput};
+pub use metrics::Metrics;
+pub use protocol::{parse_message, InferenceRequest, Message};
+pub use server::{serve, ServerConfig};

@@ -1,0 +1,195 @@
+//! Wire protocol for the inference server: newline-delimited JSON.
+//!
+//! Request:
+//! ```json
+//! {"id": 1, "model": "digits_linear", "k": 4, "mode": "dither",
+//!  "pixels": [784 floats in 0..1]}
+//! ```
+//! Response:
+//! ```json
+//! {"id": 1, "pred": 7, "logits": [...], "latency_us": 412, "batch": 8}
+//! ```
+//! Control: `{"cmd": "ping"}`, `{"cmd": "stats"}`, `{"cmd": "shutdown"}`.
+
+use crate::rounding::RoundingMode;
+use crate::util::json::Json;
+
+/// A parsed inference request.
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    /// Client-chosen id echoed back in the response.
+    pub id: u64,
+    /// Model family: `digits_linear` or `fashion_mlp`.
+    pub model: String,
+    /// Quantizer bit width.
+    pub k: u32,
+    /// Rounding scheme.
+    pub mode: RoundingMode,
+    /// Flattened image pixels.
+    pub pixels: Vec<f64>,
+}
+
+/// A parsed incoming message.
+#[derive(Clone, Debug)]
+pub enum Message {
+    /// Run inference.
+    Infer(InferenceRequest),
+    /// Liveness check.
+    Ping,
+    /// Metrics snapshot request.
+    Stats,
+    /// Graceful shutdown.
+    Shutdown,
+}
+
+/// Parse one request line.
+pub fn parse_message(line: &str) -> Result<Message, String> {
+    let json = Json::parse(line).map_err(|e| e.to_string())?;
+    if let Some(cmd) = json.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "ping" => Ok(Message::Ping),
+            "stats" => Ok(Message::Stats),
+            "shutdown" => Ok(Message::Shutdown),
+            other => Err(format!("unknown cmd {other:?}")),
+        };
+    }
+    let id = json
+        .get("id")
+        .and_then(Json::as_f64)
+        .map(|v| v as u64)
+        .unwrap_or(0);
+    let model = json
+        .get("model")
+        .and_then(Json::as_str)
+        .unwrap_or("digits_linear")
+        .to_string();
+    let k = json
+        .get("k")
+        .and_then(Json::as_usize)
+        .ok_or("missing 'k'")? as u32;
+    if !(1..=16).contains(&k) {
+        return Err(format!("k={k} out of range 1..=16"));
+    }
+    let mode = json
+        .get("mode")
+        .and_then(Json::as_str)
+        .and_then(RoundingMode::from_str)
+        .ok_or("missing or invalid 'mode'")?;
+    let pixels = json
+        .get("pixels")
+        .and_then(Json::as_f64_vec)
+        .ok_or("missing 'pixels'")?;
+    if pixels.len() != 784 {
+        return Err(format!("expected 784 pixels, got {}", pixels.len()));
+    }
+    Ok(Message::Infer(InferenceRequest {
+        id,
+        model,
+        k,
+        mode,
+        pixels,
+    }))
+}
+
+/// Successful inference response line.
+pub fn format_response(id: u64, pred: u8, logits: &[f64], latency_us: u64, batch: usize) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("pred", Json::Num(pred as f64)),
+        ("logits", Json::nums(logits)),
+        ("latency_us", Json::Num(latency_us as f64)),
+        ("batch", Json::Num(batch as f64)),
+    ])
+    .to_string()
+}
+
+/// Error response line.
+pub fn format_error(id: u64, error: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("error", Json::Str(error.to_string())),
+    ])
+    .to_string()
+}
+
+/// The rounding-mode wire encoding shared with the Pallas kernel
+/// (0 = deterministic, 1 = stochastic, 2 = dither).
+pub fn mode_code(mode: RoundingMode) -> i32 {
+    match mode {
+        RoundingMode::Deterministic => 0,
+        RoundingMode::Stochastic => 1,
+        RoundingMode::Dither => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request(k: u32) -> String {
+        let pixels: Vec<String> = (0..784).map(|i| format!("{}", i as f64 / 784.0)).collect();
+        format!(
+            "{{\"id\": 42, \"model\": \"digits_linear\", \"k\": {k}, \"mode\": \"dither\", \"pixels\": [{}]}}",
+            pixels.join(",")
+        )
+    }
+
+    #[test]
+    fn parse_inference_request() {
+        let msg = parse_message(&sample_request(4)).unwrap();
+        match msg {
+            Message::Infer(r) => {
+                assert_eq!(r.id, 42);
+                assert_eq!(r.k, 4);
+                assert_eq!(r.mode, RoundingMode::Dither);
+                assert_eq!(r.pixels.len(), 784);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_control_messages() {
+        assert!(matches!(parse_message("{\"cmd\":\"ping\"}"), Ok(Message::Ping)));
+        assert!(matches!(
+            parse_message("{\"cmd\":\"stats\"}"),
+            Ok(Message::Stats)
+        ));
+        assert!(matches!(
+            parse_message("{\"cmd\":\"shutdown\"}"),
+            Ok(Message::Shutdown)
+        ));
+        assert!(parse_message("{\"cmd\":\"nope\"}").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_message("not json").is_err());
+        assert!(parse_message("{\"k\": 4}").is_err()); // no pixels
+        assert!(parse_message(&sample_request(0)).is_err()); // k out of range
+        assert!(parse_message(&sample_request(17)).is_err());
+        // wrong pixel count
+        assert!(parse_message(
+            "{\"id\":1,\"k\":4,\"mode\":\"dither\",\"pixels\":[1,2,3]}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let line = format_response(7, 3, &[0.1, 0.9], 250, 4);
+        let json = Json::parse(&line).unwrap();
+        assert_eq!(json.get("id").unwrap().as_f64(), Some(7.0));
+        assert_eq!(json.get("pred").unwrap().as_f64(), Some(3.0));
+        assert_eq!(json.get("batch").unwrap().as_f64(), Some(4.0));
+        let err = format_error(7, "bad");
+        assert!(Json::parse(&err).unwrap().get("error").is_some());
+    }
+
+    #[test]
+    fn mode_codes_match_kernel_encoding() {
+        assert_eq!(mode_code(RoundingMode::Deterministic), 0);
+        assert_eq!(mode_code(RoundingMode::Stochastic), 1);
+        assert_eq!(mode_code(RoundingMode::Dither), 2);
+    }
+}

@@ -1,0 +1,166 @@
+//! The TCP inference server: accept loop, per-connection readers, and the
+//! batching workers. Plain threads — the request path is CPU-bound model
+//! execution, so an async runtime would buy nothing here.
+
+use crate::coordinator::batcher::{worker_loop, Batcher, Pending};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::protocol::{format_error, parse_message, Message};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Listen address, e.g. `127.0.0.1:7878`.
+    pub addr: String,
+    /// Maximum dynamic-batch size.
+    pub max_batch: usize,
+    /// Batch linger time in microseconds.
+    pub max_wait_us: u64,
+    /// Artifacts directory for the engine.
+    pub artifacts_dir: String,
+    /// Training-set size for the on-demand model zoo.
+    pub train_n: usize,
+    /// Engine seed.
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".to_string(),
+            max_batch: 32,
+            max_wait_us: 2_000,
+            artifacts_dir: "artifacts".to_string(),
+            train_n: 2000,
+            seed: 7,
+        }
+    }
+}
+
+/// Run the server until a `shutdown` command arrives. Blocks.
+///
+/// The PJRT handles in [`Engine`] are not `Send` (the `xla` crate wraps
+/// them in `Rc`), so the engine is constructed and driven entirely on one
+/// dedicated worker thread; connection threads talk to it only through the
+/// [`Batcher`] queue. PJRT's CPU executor parallelizes inside a call, so a
+/// single execution thread does not serialize the math.
+pub fn serve(cfg: &ServerConfig) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    listener.set_nonblocking(true)?;
+    let metrics = Arc::new(Metrics::new());
+    let batcher = Arc::new(Batcher::new(
+        cfg.max_batch,
+        Duration::from_micros(cfg.max_wait_us),
+    ));
+
+    // Engine thread: builds the engine (training/loading models, compiling
+    // artifacts) and then runs the batch loop until shutdown.
+    let (ready_tx, ready_rx) = channel();
+    let engine_thread = {
+        let b = batcher.clone();
+        let m = metrics.clone();
+        let cfg = cfg.clone();
+        std::thread::spawn(move || {
+            let engine = match Engine::new(&cfg.artifacts_dir, cfg.train_n, cfg.seed) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(format!(
+                        "platform={} digits_acc={:.3} fashion_acc={:.3}",
+                        e.runtime().platform(),
+                        e.float_accuracy("digits_linear").unwrap_or(0.0),
+                        e.float_accuracy("fashion_mlp").unwrap_or(0.0),
+                    )));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            worker_loop(&b, &engine, &m);
+        })
+    };
+    match ready_rx.recv() {
+        Ok(Ok(info)) => println!(
+            "dither-serve listening on {} ({info}, max_batch={})",
+            cfg.addr, cfg.max_batch
+        ),
+        Ok(Err(e)) => anyhow::bail!("engine init failed: {e}"),
+        Err(_) => anyhow::bail!("engine thread died during init"),
+    }
+
+    let mut conn_handles = Vec::new();
+    while !batcher.is_stopped() {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let b = batcher.clone();
+                let m = metrics.clone();
+                conn_handles.push(std::thread::spawn(move || {
+                    let _ = handle_connection(stream, &b, &m);
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let _ = engine_thread.join();
+    for h in conn_handles {
+        let _ = h.join();
+    }
+    println!("dither-serve stopped");
+    Ok(())
+}
+
+/// Read request lines, dispatch, write response lines. One thread per
+/// connection; inference requests are answered in submission order.
+fn handle_connection(stream: TcpStream, batcher: &Batcher, metrics: &Metrics) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_message(&line) {
+            Ok(Message::Ping) => writeln!(writer, "{{\"pong\":true}}")?,
+            Ok(Message::Stats) => writeln!(writer, "{}", metrics.snapshot_json())?,
+            Ok(Message::Shutdown) => {
+                writeln!(writer, "{{\"stopping\":true}}")?;
+                batcher.stop();
+                break;
+            }
+            Ok(Message::Infer(req)) => {
+                let (tx, rx) = channel();
+                batcher.submit(Pending {
+                    req,
+                    respond_to: tx,
+                    enqueued: Instant::now(),
+                });
+                // Wait for this request's response before reading the next
+                // line (pipelining happens across connections).
+                match rx.recv_timeout(Duration::from_secs(120)) {
+                    Ok(response) => writeln!(writer, "{response}")?,
+                    Err(_) => {
+                        metrics.record_error();
+                        writeln!(writer, "{}", format_error(0, "timeout"))?;
+                    }
+                }
+            }
+            Err(e) => {
+                metrics.record_error();
+                writeln!(writer, "{}", format_error(0, &e))?;
+            }
+        }
+        writer.flush()?;
+    }
+    Ok(())
+}

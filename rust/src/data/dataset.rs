@@ -1,0 +1,192 @@
+//! Labeled image datasets: container, procedural generators, and the
+//! real-data escape hatch (IDX files are used automatically when present).
+
+use crate::data::idx;
+use crate::data::synth_digits::render_digit;
+use crate::data::synth_fashion::render_fashion;
+use crate::linalg::Matrix;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool::parallel_map;
+
+/// A labeled image dataset; images are rows of an `n × d` matrix with pixel
+/// values in [0, 1].
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `n × d` image matrix (row per sample).
+    pub images: Matrix,
+    /// `n` class labels.
+    pub labels: Vec<u8>,
+    /// Number of classes.
+    pub num_classes: usize,
+}
+
+/// Which evaluation task to generate (DESIGN.md §4 substitutions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// MNIST-class: synth-digits, or real MNIST when IDX files exist.
+    Digits,
+    /// Fashion-class: synth-fashion, or real Fashion-MNIST when present.
+    Fashion,
+}
+
+impl Task {
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Digits => "digits",
+            Task::Fashion => "fashion",
+        }
+    }
+
+    /// Directory searched for real IDX files.
+    pub fn idx_dir(&self) -> &'static str {
+        match self {
+            Task::Digits => "data/mnist",
+            Task::Fashion => "data/fashion",
+        }
+    }
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Generate a synthetic dataset of `n` samples with balanced classes.
+    pub fn synthesize(task: Task, n: usize, seed: u64) -> Dataset {
+        let indices: Vec<usize> = (0..n).collect();
+        let rows = parallel_map(&indices, |_, &i| {
+            let mut rng = Xoshiro256pp::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let label = (i % 10) as u8;
+            let img = match task {
+                Task::Digits => render_digit(label, &mut rng),
+                Task::Fashion => render_fashion(label, &mut rng),
+            };
+            (img, label)
+        });
+        let d = rows.first().map(|(img, _)| img.len()).unwrap_or(784);
+        let mut images = Matrix::zeros(n, d);
+        let mut labels = Vec::with_capacity(n);
+        for (i, (img, label)) in rows.into_iter().enumerate() {
+            images.row_mut(i).copy_from_slice(&img);
+            labels.push(label);
+        }
+        // Shuffle sample order (labels were generated round-robin).
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Xoshiro256pp::new(seed ^ 0x5117FF1E);
+        rng.shuffle(&mut order);
+        let mut shuffled = Matrix::zeros(n, d);
+        let mut shuffled_labels = Vec::with_capacity(n);
+        for (new_i, &old_i) in order.iter().enumerate() {
+            shuffled.row_mut(new_i).copy_from_slice(images.row(old_i));
+            shuffled_labels.push(labels[old_i]);
+        }
+        Dataset {
+            images: shuffled,
+            labels: shuffled_labels,
+            num_classes: 10,
+        }
+    }
+
+    /// Load train+test for a task: real IDX data when available under
+    /// `data/{mnist,fashion}/`, synthetic otherwise.
+    ///
+    /// Returns `(train, test, source_description)`.
+    pub fn load_or_synthesize(
+        task: Task,
+        train_n: usize,
+        test_n: usize,
+        seed: u64,
+    ) -> (Dataset, Dataset, &'static str) {
+        if let Some((train, test)) = idx::try_load_idx_pair(task.idx_dir()) {
+            return (train.truncated(train_n), test.truncated(test_n), "idx");
+        }
+        (
+            Dataset::synthesize(task, train_n, seed),
+            Dataset::synthesize(task, test_n, seed ^ 0x7E57),
+            "synthetic",
+        )
+    }
+
+    /// First `n` samples (all of them if `n >= len`).
+    pub fn truncated(&self, n: usize) -> Dataset {
+        let n = n.min(self.len());
+        let d = self.images.cols;
+        let mut images = Matrix::zeros(n, d);
+        for i in 0..n {
+            images.row_mut(i).copy_from_slice(self.images.row(i));
+        }
+        Dataset {
+            images,
+            labels: self.labels[..n].to_vec(),
+            num_classes: self.num_classes,
+        }
+    }
+
+    /// Per-class sample counts.
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.num_classes];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesize_shapes_and_balance() {
+        let ds = Dataset::synthesize(Task::Digits, 100, 1);
+        assert_eq!(ds.len(), 100);
+        assert_eq!(ds.images.rows, 100);
+        assert_eq!(ds.images.cols, 784);
+        let h = ds.class_histogram();
+        assert!(h.iter().all(|&c| c == 10), "balanced classes: {h:?}");
+    }
+
+    #[test]
+    fn shuffle_mixes_labels() {
+        let ds = Dataset::synthesize(Task::Digits, 50, 2);
+        // Not in round-robin order after shuffling.
+        let round_robin: Vec<u8> = (0..50).map(|i| (i % 10) as u8).collect();
+        assert_ne!(ds.labels, round_robin);
+    }
+
+    #[test]
+    fn pixel_range_valid() {
+        for task in [Task::Digits, Task::Fashion] {
+            let ds = Dataset::synthesize(task, 30, 3);
+            assert!(ds
+                .images
+                .data()
+                .iter()
+                .all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn truncated_keeps_prefix() {
+        let ds = Dataset::synthesize(Task::Fashion, 40, 4);
+        let t = ds.truncated(10);
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.labels[..], ds.labels[..10]);
+        assert_eq!(t.images.row(3), ds.images.row(3));
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Dataset::synthesize(Task::Digits, 20, 7);
+        let b = Dataset::synthesize(Task::Digits, 20, 7);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images, b.images);
+    }
+}

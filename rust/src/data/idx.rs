@@ -1,0 +1,172 @@
+//! IDX-format loader (the MNIST/Fashion-MNIST container format).
+//!
+//! When the real datasets are available (`data/mnist/`, `data/fashion/`
+//! holding the canonical `*-images-idx3-ubyte` / `*-labels-idx1-ubyte`
+//! files, optionally gzipped), [`try_load_idx_pair`] loads them and the
+//! experiments run on real data; otherwise the synthetic generators are
+//! used. This keeps the repository runnable offline while staying faithful
+//! to the paper when the data is present.
+
+use crate::data::dataset::Dataset;
+use crate::linalg::Matrix;
+use std::io::Read;
+use std::path::Path;
+
+/// Magic numbers for the two IDX record types we read.
+const MAGIC_IMAGES: u32 = 0x0000_0803;
+const MAGIC_LABELS: u32 = 0x0000_0801;
+
+/// Read a file, transparently gunzipping `.gz`.
+fn read_maybe_gz(path: &Path) -> std::io::Result<Vec<u8>> {
+    let raw = std::fs::read(path)?;
+    if path.extension().map(|e| e == "gz").unwrap_or(false) {
+        let mut out = Vec::new();
+        flate2::read::GzDecoder::new(&raw[..]).read_to_end(&mut out)?;
+        Ok(out)
+    } else {
+        Ok(raw)
+    }
+}
+
+fn be_u32(b: &[u8], off: usize) -> Option<u32> {
+    Some(u32::from_be_bytes([
+        *b.get(off)?,
+        *b.get(off + 1)?,
+        *b.get(off + 2)?,
+        *b.get(off + 3)?,
+    ]))
+}
+
+/// Parse an IDX3 image file into an `n × (rows·cols)` matrix in [0,1].
+pub fn parse_idx_images(bytes: &[u8]) -> Option<Matrix> {
+    if be_u32(bytes, 0)? != MAGIC_IMAGES {
+        return None;
+    }
+    let n = be_u32(bytes, 4)? as usize;
+    let rows = be_u32(bytes, 8)? as usize;
+    let cols = be_u32(bytes, 12)? as usize;
+    let d = rows * cols;
+    let pixels = bytes.get(16..16 + n * d)?;
+    let data: Vec<f64> = pixels.iter().map(|&p| p as f64 / 255.0).collect();
+    Some(Matrix::from_vec(n, d, data))
+}
+
+/// Parse an IDX1 label file.
+pub fn parse_idx_labels(bytes: &[u8]) -> Option<Vec<u8>> {
+    if be_u32(bytes, 0)? != MAGIC_LABELS {
+        return None;
+    }
+    let n = be_u32(bytes, 4)? as usize;
+    bytes.get(8..8 + n).map(|s| s.to_vec())
+}
+
+/// Find a file under `dir` whose name starts with `stem` (allowing `.gz`).
+fn find_file(dir: &Path, stem: &str) -> Option<std::path::PathBuf> {
+    for suffix in ["", ".gz"] {
+        let p = dir.join(format!("{stem}{suffix}"));
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Load one (images, labels) split.
+fn load_split(dir: &Path, img_stem: &str, lbl_stem: &str) -> Option<Dataset> {
+    let img_bytes = read_maybe_gz(&find_file(dir, img_stem)?).ok()?;
+    let lbl_bytes = read_maybe_gz(&find_file(dir, lbl_stem)?).ok()?;
+    let images = parse_idx_images(&img_bytes)?;
+    let labels = parse_idx_labels(&lbl_bytes)?;
+    if images.rows != labels.len() {
+        return None;
+    }
+    Some(Dataset {
+        images,
+        labels,
+        num_classes: 10,
+    })
+}
+
+/// Try to load the canonical train/test IDX pairs from `dir`.
+pub fn try_load_idx_pair(dir: &str) -> Option<(Dataset, Dataset)> {
+    let dir = Path::new(dir);
+    if !dir.is_dir() {
+        return None;
+    }
+    let train = load_split(dir, "train-images-idx3-ubyte", "train-labels-idx1-ubyte")?;
+    let test = load_split(dir, "t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")?;
+    Some((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_idx_images(n: usize, rows: usize, cols: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&MAGIC_IMAGES.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend_from_slice(&(rows as u32).to_be_bytes());
+        b.extend_from_slice(&(cols as u32).to_be_bytes());
+        for i in 0..n * rows * cols {
+            b.push((i % 256) as u8);
+        }
+        b
+    }
+
+    fn fake_idx_labels(n: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&MAGIC_LABELS.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            b.push((i % 10) as u8);
+        }
+        b
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let imgs = parse_idx_images(&fake_idx_images(3, 28, 28)).unwrap();
+        assert_eq!(imgs.rows, 3);
+        assert_eq!(imgs.cols, 784);
+        assert!((imgs.get(0, 255) - 255.0 / 255.0).abs() < 1e-12);
+        let labels = parse_idx_labels(&fake_idx_labels(3)).unwrap();
+        assert_eq!(labels, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = fake_idx_images(1, 2, 2);
+        b[3] = 0x99;
+        assert!(parse_idx_images(&b).is_none());
+        assert!(parse_idx_labels(&b).is_none());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let b = fake_idx_images(10, 28, 28);
+        assert!(parse_idx_images(&b[..100]).is_none());
+    }
+
+    #[test]
+    fn missing_dir_is_none() {
+        assert!(try_load_idx_pair("/nonexistent/dir").is_none());
+    }
+
+    #[test]
+    fn gz_roundtrip() {
+        use std::io::Write;
+        let raw = fake_idx_labels(5);
+        let mut enc =
+            flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::fast());
+        enc.write_all(&raw).unwrap();
+        let gz = enc.finish().unwrap();
+        let dir = std::env::temp_dir().join("dither_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("labels-test.gz");
+        std::fs::write(&p, &gz).unwrap();
+        let back = read_maybe_gz(&p).unwrap();
+        assert_eq!(back, raw);
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,12 @@
+//! Datasets for the evaluation workloads: procedural synth-digits /
+//! synth-fashion generators (DESIGN.md §4 substitutions for MNIST /
+//! Fashion-MNIST), the IDX loader for real data when present, and the
+//! rasterizer substrate.
+
+pub mod dataset;
+pub mod idx;
+pub mod raster;
+pub mod synth_digits;
+pub mod synth_fashion;
+
+pub use dataset::{Dataset, Task};

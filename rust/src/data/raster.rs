@@ -1,0 +1,290 @@
+//! Tiny software rasterizer for the procedural datasets.
+//!
+//! Draws anti-aliased strokes (polylines, ellipse arcs) and filled polygons
+//! into a 28×28 grayscale canvas, with per-sample affine jitter — enough
+//! expressive power to synthesize digit-like and garment-like glyph classes
+//! (DESIGN.md §4 substitution).
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Square grayscale canvas with values in [0, 1].
+#[derive(Clone, Debug)]
+pub struct Canvas {
+    /// Side length in pixels.
+    pub size: usize,
+    /// Row-major pixels.
+    pub pixels: Vec<f64>,
+}
+
+/// An affine transform of the unit square (jitter: shift/scale/rotate).
+#[derive(Clone, Copy, Debug)]
+pub struct Affine {
+    /// 2×2 linear part.
+    pub m: [f64; 4],
+    /// Translation.
+    pub t: [f64; 2],
+}
+
+impl Affine {
+    /// Identity transform.
+    pub fn identity() -> Self {
+        Self {
+            m: [1.0, 0.0, 0.0, 1.0],
+            t: [0.0, 0.0],
+        }
+    }
+
+    /// Random jitter: rotation ≤ `max_rot` radians, scale in
+    /// `[1-s, 1+s]`, translation ≤ `max_shift` (unit coords), all about the
+    /// glyph center (0.5, 0.5).
+    pub fn jitter(rng: &mut Xoshiro256pp, max_rot: f64, s: f64, max_shift: f64) -> Self {
+        let theta = rng.uniform(-max_rot, max_rot);
+        let scale_x = rng.uniform(1.0 - s, 1.0 + s);
+        let scale_y = rng.uniform(1.0 - s, 1.0 + s);
+        let (sin, cos) = theta.sin_cos();
+        let m = [
+            cos * scale_x,
+            -sin * scale_y,
+            sin * scale_x,
+            cos * scale_y,
+        ];
+        let dx = rng.uniform(-max_shift, max_shift);
+        let dy = rng.uniform(-max_shift, max_shift);
+        // Keep (0.5, 0.5) fixed up to the translation jitter.
+        let cx = 0.5 - (m[0] * 0.5 + m[1] * 0.5);
+        let cy = 0.5 - (m[2] * 0.5 + m[3] * 0.5);
+        Self {
+            m,
+            t: [cx + dx, cy + dy],
+        }
+    }
+
+    /// Apply to a unit-space point.
+    #[inline]
+    pub fn apply(&self, p: [f64; 2]) -> [f64; 2] {
+        [
+            self.m[0] * p[0] + self.m[1] * p[1] + self.t[0],
+            self.m[2] * p[0] + self.m[3] * p[1] + self.t[1],
+        ]
+    }
+}
+
+impl Canvas {
+    /// Blank canvas.
+    pub fn new(size: usize) -> Self {
+        Self {
+            size,
+            pixels: vec![0.0; size * size],
+        }
+    }
+
+    /// Deposit ink at a unit-space point with a Gaussian-ish splat of the
+    /// given radius (in unit coords) and intensity.
+    pub fn splat(&mut self, p: [f64; 2], radius: f64, intensity: f64) {
+        let n = self.size as f64;
+        let px = p[0] * n;
+        let py = p[1] * n;
+        let r = (radius * n).max(0.4);
+        let lo_x = ((px - 2.0 * r).floor().max(0.0)) as usize;
+        let hi_x = ((px + 2.0 * r).ceil().min(n - 1.0)) as usize;
+        let lo_y = ((py - 2.0 * r).floor().max(0.0)) as usize;
+        let hi_y = ((py + 2.0 * r).ceil().min(n - 1.0)) as usize;
+        for y in lo_y..=hi_y {
+            for x in lo_x..=hi_x {
+                let dx = x as f64 + 0.5 - px;
+                let dy = y as f64 + 0.5 - py;
+                let d2 = (dx * dx + dy * dy) / (r * r);
+                if d2 < 4.0 {
+                    let v = intensity * (-d2).exp();
+                    let cell = &mut self.pixels[y * self.size + x];
+                    *cell = (*cell + v).min(1.0);
+                }
+            }
+        }
+    }
+
+    /// Stroke a polyline given in unit coordinates.
+    pub fn stroke(&mut self, path: &[[f64; 2]], xf: &Affine, thickness: f64) {
+        for seg in path.windows(2) {
+            let a = xf.apply(seg[0]);
+            let b = xf.apply(seg[1]);
+            let len = ((b[0] - a[0]).powi(2) + (b[1] - a[1]).powi(2)).sqrt();
+            let steps = ((len * self.size as f64 * 2.0).ceil() as usize).max(1);
+            for s in 0..=steps {
+                let t = s as f64 / steps as f64;
+                let p = [a[0] + t * (b[0] - a[0]), a[1] + t * (b[1] - a[1])];
+                self.splat(p, thickness, 0.9);
+            }
+        }
+    }
+
+    /// Stroke an elliptical arc centered at `c` with radii `r`, from angle
+    /// `a0` to `a1` (radians).
+    pub fn arc(
+        &mut self,
+        c: [f64; 2],
+        r: [f64; 2],
+        a0: f64,
+        a1: f64,
+        xf: &Affine,
+        thickness: f64,
+    ) {
+        let steps = 48;
+        let pts: Vec<[f64; 2]> = (0..=steps)
+            .map(|s| {
+                let t = a0 + (a1 - a0) * s as f64 / steps as f64;
+                [c[0] + r[0] * t.cos(), c[1] + r[1] * t.sin()]
+            })
+            .collect();
+        self.stroke(&pts, xf, thickness);
+    }
+
+    /// Fill a convex polygon (unit coords) by scanline point-in-polygon.
+    pub fn fill_polygon(&mut self, poly: &[[f64; 2]], xf: &Affine, intensity: f64) {
+        let pts: Vec<[f64; 2]> = poly.iter().map(|&p| xf.apply(p)).collect();
+        let n = self.size as f64;
+        for y in 0..self.size {
+            for x in 0..self.size {
+                let p = [(x as f64 + 0.5) / n, (y as f64 + 0.5) / n];
+                if point_in_polygon(p, &pts) {
+                    let cell = &mut self.pixels[y * self.size + x];
+                    *cell = (*cell + intensity).min(1.0);
+                }
+            }
+        }
+    }
+
+    /// Add iid uniform noise in `[0, amp]` and clamp to [0,1].
+    pub fn add_noise(&mut self, amp: f64, rng: &mut Xoshiro256pp) {
+        for p in &mut self.pixels {
+            *p = (*p + rng.uniform(0.0, amp)).clamp(0.0, 1.0);
+        }
+    }
+
+    /// Multiplicative speckle texture (for the fashion classes).
+    pub fn speckle(&mut self, depth: f64, rng: &mut Xoshiro256pp) {
+        for p in &mut self.pixels {
+            if *p > 0.05 {
+                *p = (*p * rng.uniform(1.0 - depth, 1.0)).clamp(0.0, 1.0);
+            }
+        }
+    }
+
+    /// One pass of 3×3 box blur.
+    pub fn blur(&mut self) {
+        let s = self.size;
+        let src = self.pixels.clone();
+        for y in 0..s {
+            for x in 0..s {
+                let mut sum = 0.0;
+                let mut cnt = 0.0;
+                for dy in -1i64..=1 {
+                    for dx in -1i64..=1 {
+                        let ny = y as i64 + dy;
+                        let nx = x as i64 + dx;
+                        if ny >= 0 && ny < s as i64 && nx >= 0 && nx < s as i64 {
+                            sum += src[ny as usize * s + nx as usize];
+                            cnt += 1.0;
+                        }
+                    }
+                }
+                self.pixels[y * s + x] = sum / cnt;
+            }
+        }
+    }
+}
+
+fn point_in_polygon(p: [f64; 2], poly: &[[f64; 2]]) -> bool {
+    let mut inside = false;
+    let n = poly.len();
+    let mut j = n - 1;
+    for i in 0..n {
+        let (xi, yi) = (poly[i][0], poly[i][1]);
+        let (xj, yj) = (poly[j][0], poly[j][1]);
+        if ((yi > p[1]) != (yj > p[1]))
+            && (p[0] < (xj - xi) * (p[1] - yi) / (yj - yi) + xi)
+        {
+            inside = !inside;
+        }
+        j = i;
+    }
+    inside
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blank_canvas_is_zero() {
+        let c = Canvas::new(28);
+        assert_eq!(c.pixels.len(), 784);
+        assert!(c.pixels.iter().all(|&p| p == 0.0));
+    }
+
+    #[test]
+    fn stroke_deposits_ink_along_line() {
+        let mut c = Canvas::new(28);
+        c.stroke(
+            &[[0.2, 0.5], [0.8, 0.5]],
+            &Affine::identity(),
+            0.03,
+        );
+        // Ink at the midpoint row, none in the far corner.
+        let mid = c.pixels[14 * 28 + 14];
+        assert!(mid > 0.3, "mid={mid}");
+        assert_eq!(c.pixels[0], 0.0);
+    }
+
+    #[test]
+    fn fill_polygon_covers_interior() {
+        let mut c = Canvas::new(28);
+        c.fill_polygon(
+            &[[0.2, 0.2], [0.8, 0.2], [0.8, 0.8], [0.2, 0.8]],
+            &Affine::identity(),
+            0.8,
+        );
+        assert!(c.pixels[14 * 28 + 14] > 0.5);
+        assert_eq!(c.pixels[0], 0.0);
+    }
+
+    #[test]
+    fn pixels_stay_in_unit_range() {
+        let mut rng = Xoshiro256pp::new(1);
+        let mut c = Canvas::new(28);
+        for _ in 0..5 {
+            c.stroke(&[[0.1, 0.1], [0.9, 0.9]], &Affine::identity(), 0.1);
+        }
+        c.add_noise(0.3, &mut rng);
+        c.blur();
+        assert!(c.pixels.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn jitter_is_bounded() {
+        let mut rng = Xoshiro256pp::new(2);
+        for _ in 0..50 {
+            let xf = Affine::jitter(&mut rng, 0.2, 0.1, 0.05);
+            let p = xf.apply([0.5, 0.5]);
+            // Center moves at most by the shift bound.
+            assert!((p[0] - 0.5).abs() <= 0.05 + 1e-9);
+            assert!((p[1] - 0.5).abs() <= 0.05 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn arc_draws_closed_circle() {
+        let mut c = Canvas::new(28);
+        c.arc(
+            [0.5, 0.5],
+            [0.3, 0.3],
+            0.0,
+            std::f64::consts::TAU,
+            &Affine::identity(),
+            0.03,
+        );
+        // Ink on the circle (right edge), hole in the center.
+        assert!(c.pixels[14 * 28 + 22] > 0.2);
+        assert!(c.pixels[14 * 28 + 14] < 0.1);
+    }
+}

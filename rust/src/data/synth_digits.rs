@@ -1,0 +1,123 @@
+//! "synth-digits": a procedural 10-class MNIST substitute.
+//!
+//! Each class is a hand-designed glyph archetype (strokes/arcs in unit
+//! coordinates) rendered at 28×28 with per-sample affine jitter, stroke
+//! thickness variation, pixel noise and blur. See DESIGN.md §4 for why this
+//! preserves the behaviour the paper's MNIST experiments measure.
+
+use crate::data::raster::{Affine, Canvas};
+use crate::util::rng::Xoshiro256pp;
+
+const TAU: f64 = std::f64::consts::TAU;
+const PI: f64 = std::f64::consts::PI;
+
+/// Render one sample of digit class `label` (0–9) into 28×28 pixels.
+pub fn render_digit(label: u8, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    let mut c = Canvas::new(28);
+    let xf = Affine::jitter(rng, 0.22, 0.12, 0.06);
+    let th = rng.uniform(0.022, 0.042); // stroke thickness
+    match label {
+        0 => {
+            c.arc([0.5, 0.5], [0.22, 0.30], 0.0, TAU, &xf, th);
+        }
+        1 => {
+            c.stroke(&[[0.42, 0.28], [0.52, 0.18], [0.52, 0.82]], &xf, th);
+        }
+        2 => {
+            c.arc([0.5, 0.34], [0.18, 0.14], PI, TAU, &xf, th);
+            c.stroke(&[[0.68, 0.36], [0.32, 0.80]], &xf, th);
+            c.stroke(&[[0.32, 0.80], [0.70, 0.80]], &xf, th);
+        }
+        3 => {
+            c.arc([0.48, 0.35], [0.17, 0.15], -0.6 * PI, 0.5 * PI, &xf, th);
+            c.arc([0.48, 0.65], [0.19, 0.16], -0.5 * PI, 0.6 * PI, &xf, th);
+        }
+        4 => {
+            c.stroke(&[[0.60, 0.18], [0.30, 0.60], [0.74, 0.60]], &xf, th);
+            c.stroke(&[[0.60, 0.30], [0.60, 0.84]], &xf, th);
+        }
+        5 => {
+            c.stroke(&[[0.68, 0.20], [0.36, 0.20], [0.34, 0.48]], &xf, th);
+            c.arc([0.49, 0.63], [0.18, 0.17], -0.5 * PI, 0.7 * PI, &xf, th);
+        }
+        6 => {
+            c.stroke(&[[0.60, 0.16], [0.40, 0.44]], &xf, th);
+            c.arc([0.48, 0.64], [0.17, 0.17], 0.0, TAU, &xf, th);
+        }
+        7 => {
+            c.stroke(&[[0.30, 0.20], [0.70, 0.20], [0.44, 0.82]], &xf, th);
+        }
+        8 => {
+            c.arc([0.5, 0.34], [0.15, 0.13], 0.0, TAU, &xf, th);
+            c.arc([0.5, 0.66], [0.18, 0.16], 0.0, TAU, &xf, th);
+        }
+        9 => {
+            c.arc([0.52, 0.36], [0.17, 0.17], 0.0, TAU, &xf, th);
+            c.stroke(&[[0.69, 0.40], [0.62, 0.84]], &xf, th);
+        }
+        _ => panic!("digit label must be 0..=9, got {label}"),
+    }
+    if rng.bernoulli(0.5) {
+        c.blur();
+    }
+    c.add_noise(rng.uniform(0.02, 0.08), rng);
+    c.pixels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_classes_with_ink() {
+        let mut rng = Xoshiro256pp::new(1);
+        for label in 0..10u8 {
+            let img = render_digit(label, &mut rng);
+            assert_eq!(img.len(), 784);
+            let ink: f64 = img.iter().sum();
+            assert!(ink > 10.0, "class {label} too faint: {ink}");
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn samples_vary_within_class() {
+        let mut rng = Xoshiro256pp::new(2);
+        let a = render_digit(3, &mut rng);
+        let b = render_digit(3, &mut rng);
+        let diff: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1.0, "two samples should differ, diff={diff}");
+    }
+
+    #[test]
+    fn classes_are_distinguishable_on_average() {
+        // Mean images of different classes should differ far more than
+        // samples within a class — a sanity floor for learnability.
+        let mut rng = Xoshiro256pp::new(3);
+        let mean_img = |label: u8, rng: &mut Xoshiro256pp| {
+            let mut acc = vec![0.0; 784];
+            for _ in 0..40 {
+                for (a, v) in acc.iter_mut().zip(render_digit(label, rng)) {
+                    *a += v / 40.0;
+                }
+            }
+            acc
+        };
+        let m0 = mean_img(0, &mut rng);
+        let m1 = mean_img(1, &mut rng);
+        let m7 = mean_img(7, &mut rng);
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt()
+        };
+        assert!(dist(&m0, &m1) > 2.0);
+        assert!(dist(&m1, &m7) > 2.0);
+        assert!(dist(&m0, &m7) > 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "digit label")]
+    fn invalid_label_panics() {
+        let mut rng = Xoshiro256pp::new(4);
+        let _ = render_digit(10, &mut rng);
+    }
+}

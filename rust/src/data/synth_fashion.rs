@@ -1,0 +1,234 @@
+//! "synth-fashion": a procedural 10-class Fashion-MNIST substitute.
+//!
+//! Garment-like filled silhouettes with speckle texture, rendered with the
+//! same rasterizer as the digits but with *higher intra-class variance and
+//! more inter-class overlap* (e.g. pullover / coat / shirt share the torso
+//! silhouette; sneaker / sandal / ankle-boot share the sole) so the task is
+//! measurably harder — matching the paper's observation (§VIII) that the
+//! beneficial-k window narrows on the harder task.
+
+use crate::data::raster::{Affine, Canvas};
+use crate::util::rng::Xoshiro256pp;
+
+/// Class names in Fashion-MNIST order (for reports).
+pub const CLASS_NAMES: [&str; 10] = [
+    "tshirt", "trouser", "pullover", "dress", "coat", "sandal", "shirt", "sneaker", "bag",
+    "boot",
+];
+
+/// Render one sample of fashion class `label` (0–9) into 28×28 pixels.
+pub fn render_fashion(label: u8, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    let mut c = Canvas::new(28);
+    let xf = Affine::jitter(rng, 0.12, 0.16, 0.05);
+    let fill = rng.uniform(0.55, 0.95);
+    let w = rng.uniform(-0.04, 0.04); // width wobble shared by torso classes
+    match label {
+        // t-shirt: torso + short sleeves
+        0 => {
+            torso(&mut c, &xf, fill, w, 0.30);
+            sleeves(&mut c, &xf, fill, w, 0.42, 0.10);
+        }
+        // trouser: two legs
+        1 => {
+            c.fill_polygon(
+                &[[0.34 + w, 0.18], [0.48, 0.18], [0.46, 0.84], [0.34 + w, 0.84]],
+                &xf,
+                fill,
+            );
+            c.fill_polygon(
+                &[[0.52, 0.18], [0.66 - w, 0.18], [0.66 - w, 0.84], [0.54, 0.84]],
+                &xf,
+                fill,
+            );
+        }
+        // pullover: torso + long sleeves (overlaps coat/shirt)
+        2 => {
+            torso(&mut c, &xf, fill, w, 0.30);
+            sleeves(&mut c, &xf, fill, w, 0.72, 0.09);
+        }
+        // dress: narrow top flaring to hem
+        3 => {
+            c.fill_polygon(
+                &[
+                    [0.42 + w, 0.16],
+                    [0.58 - w, 0.16],
+                    [0.70, 0.84],
+                    [0.30, 0.84],
+                ],
+                &xf,
+                fill,
+            );
+        }
+        // coat: torso + long sleeves + open front line
+        4 => {
+            torso(&mut c, &xf, fill, w, 0.34);
+            sleeves(&mut c, &xf, fill, w, 0.74, 0.10);
+            c.stroke(&[[0.5, 0.2], [0.5, 0.8]], &xf, 0.012);
+        }
+        // sandal: sole + straps
+        5 => {
+            sole(&mut c, &xf, fill);
+            c.stroke(&[[0.35, 0.62], [0.52, 0.44], [0.68, 0.60]], &xf, 0.02);
+        }
+        // shirt: torso + medium sleeves + collar (overlaps 0/2/4)
+        6 => {
+            torso(&mut c, &xf, fill, w, 0.30);
+            sleeves(&mut c, &xf, fill, w, 0.56, 0.09);
+            c.stroke(&[[0.44, 0.18], [0.5, 0.26], [0.56, 0.18]], &xf, 0.015);
+        }
+        // sneaker: sole + low body
+        7 => {
+            sole(&mut c, &xf, fill);
+            c.fill_polygon(
+                &[
+                    [0.28, 0.62],
+                    [0.60, 0.62],
+                    [0.72, 0.52],
+                    [0.46, 0.44],
+                    [0.30, 0.50],
+                ],
+                &xf,
+                fill * 0.9,
+            );
+        }
+        // bag: rectangle + handle arc
+        8 => {
+            c.fill_polygon(
+                &[
+                    [0.26, 0.42],
+                    [0.74, 0.42],
+                    [0.72, 0.80],
+                    [0.28, 0.80],
+                ],
+                &xf,
+                fill,
+            );
+            c.arc(
+                [0.5, 0.40],
+                [0.16, 0.14],
+                std::f64::consts::PI,
+                std::f64::consts::TAU,
+                &xf,
+                0.02,
+            );
+        }
+        // ankle boot: sole + tall shaft
+        9 => {
+            sole(&mut c, &xf, fill);
+            c.fill_polygon(
+                &[
+                    [0.40, 0.24],
+                    [0.62, 0.24],
+                    [0.64, 0.62],
+                    [0.30, 0.62],
+                ],
+                &xf,
+                fill * 0.95,
+            );
+        }
+        _ => panic!("fashion label must be 0..=9, got {label}"),
+    }
+    c.speckle(rng.uniform(0.15, 0.45), rng);
+    if rng.bernoulli(0.7) {
+        c.blur();
+    }
+    c.add_noise(rng.uniform(0.03, 0.10), rng);
+    c.pixels
+}
+
+/// Shared torso silhouette.
+fn torso(c: &mut Canvas, xf: &Affine, fill: f64, w: f64, shoulder: f64) {
+    c.fill_polygon(
+        &[
+            [shoulder + w, 0.18],
+            [1.0 - shoulder - w, 0.18],
+            [0.68 - w, 0.82],
+            [0.32 + w, 0.82],
+        ],
+        xf,
+        fill,
+    );
+}
+
+/// Shared sleeve pair; `len` is sleeve length in unit y, `sw` the width.
+fn sleeves(c: &mut Canvas, xf: &Affine, fill: f64, w: f64, len: f64, sw: f64) {
+    c.fill_polygon(
+        &[
+            [0.30 + w, 0.18],
+            [0.18, len],
+            [0.18 + sw, len + 0.04],
+            [0.36 + w, 0.30],
+        ],
+        xf,
+        fill * 0.9,
+    );
+    c.fill_polygon(
+        &[
+            [0.70 - w, 0.18],
+            [0.82, len],
+            [0.82 - sw, len + 0.04],
+            [0.64 - w, 0.30],
+        ],
+        xf,
+        fill * 0.9,
+    );
+}
+
+/// Shared shoe sole.
+fn sole(c: &mut Canvas, xf: &Affine, fill: f64) {
+    c.fill_polygon(
+        &[
+            [0.24, 0.62],
+            [0.76, 0.62],
+            [0.78, 0.74],
+            [0.22, 0.74],
+        ],
+        xf,
+        fill,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_classes_with_ink() {
+        let mut rng = Xoshiro256pp::new(1);
+        for label in 0..10u8 {
+            let img = render_fashion(label, &mut rng);
+            assert_eq!(img.len(), 784);
+            let ink: f64 = img.iter().sum();
+            assert!(ink > 15.0, "class {label} too faint: {ink}");
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn harder_than_digits_by_overlap() {
+        // Torso classes (0, 2, 6) should be closer to each other than to
+        // the trouser class — the intended confusability structure.
+        let mut rng = Xoshiro256pp::new(2);
+        let mean_img = |label: u8, rng: &mut Xoshiro256pp| {
+            let mut acc = vec![0.0; 784];
+            for _ in 0..40 {
+                for (a, v) in acc.iter_mut().zip(render_fashion(label, rng)) {
+                    *a += v / 40.0;
+                }
+            }
+            acc
+        };
+        let d = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt()
+        };
+        let t0 = mean_img(0, &mut rng);
+        let t2 = mean_img(2, &mut rng);
+        let t1 = mean_img(1, &mut rng);
+        assert!(d(&t0, &t2) < d(&t0, &t1), "torso classes should overlap more");
+    }
+
+    #[test]
+    fn class_names_count() {
+        assert_eq!(CLASS_NAMES.len(), 10);
+    }
+}

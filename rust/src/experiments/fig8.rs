@@ -1,0 +1,205 @@
+//! Fig 8: Frobenius error `e_f = ‖C − Ĉ‖_F` of k-bit matrix multiplication
+//! under traditional / stochastic / dither rounding, for matrices with
+//! entries in `[0, 0.5)` (the narrow-range regime where unbiased rounding
+//! wins) and the per-partial-product placement of Fig 7.
+//!
+//! Paper setting: 100 pairs of 100×100 matrices, N = 100, k sweep; we
+//! default to a scaled-down pair count (CLI-overridable to paper scale).
+
+use crate::experiments::write_result;
+use crate::linalg::{frobenius_error, quant_matmul, Matrix, QuantMatmulConfig, Variant};
+use crate::rounding::RoundingMode;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool::parallel_map;
+
+/// Fig 8 configuration.
+#[derive(Clone, Debug)]
+pub struct Fig8Config {
+    /// Number of (A, B) matrix pairs.
+    pub pairs: usize,
+    /// Square matrix dimension (paper: 100).
+    pub dim: usize,
+    /// Bit widths to sweep.
+    pub ks: Vec<u32>,
+    /// Entry range upper bound (paper: 0.5).
+    pub hi: f64,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for Fig8Config {
+    fn default() -> Self {
+        Self {
+            pairs: 20,
+            dim: 100,
+            ks: (1..=8).collect(),
+            hi: 0.5,
+            seed: 0xF16_8,
+        }
+    }
+}
+
+/// Mean e_f per (mode, k).
+pub struct Fig8Result {
+    /// Bit widths.
+    pub ks: Vec<u32>,
+    /// `errors[mode_index][k_index]` in `RoundingMode::ALL` order.
+    pub errors: Vec<Vec<f64>>,
+}
+
+impl Fig8Result {
+    /// Series for one mode.
+    pub fn series(&self, mode: RoundingMode) -> &[f64] {
+        let idx = RoundingMode::ALL.iter().position(|&m| m == mode).unwrap();
+        &self.errors[idx]
+    }
+
+    /// Smallest k at which traditional rounding beats dither (the paper's
+    /// threshold k̃), if any within the sweep.
+    pub fn crossover_k(&self) -> Option<u32> {
+        let det = self.series(RoundingMode::Deterministic);
+        let dit = self.series(RoundingMode::Dither);
+        self.ks
+            .iter()
+            .zip(det.iter().zip(dit))
+            .find(|(_, (d, t))| d < t)
+            .map(|(&k, _)| k)
+    }
+}
+
+/// Run the Fig 8 sweep.
+pub fn compute(cfg: &Fig8Config) -> Fig8Result {
+    let pair_indices: Vec<usize> = (0..cfg.pairs).collect();
+    // Per-pair, per-mode, per-k errors (parallel over pairs).
+    let per_pair = parallel_map(&pair_indices, |_, &p| {
+        let mut rng = Xoshiro256pp::new(cfg.seed ^ (p as u64) << 20);
+        let a = Matrix::random_uniform(cfg.dim, cfg.dim, 0.0, cfg.hi, &mut rng);
+        let b = Matrix::random_uniform(cfg.dim, cfg.dim, 0.0, cfg.hi, &mut rng);
+        let c = a.matmul(&b);
+        let mut errs = vec![vec![0.0; cfg.ks.len()]; RoundingMode::ALL.len()];
+        for (mi, &mode) in RoundingMode::ALL.iter().enumerate() {
+            for (ki, &k) in cfg.ks.iter().enumerate() {
+                let mm = QuantMatmulConfig::unit(
+                    k,
+                    mode,
+                    Variant::PerPartial,
+                    cfg.seed ^ ((p as u64) << 8) ^ ((k as u64) << 3) ^ mi as u64,
+                );
+                let c_hat = quant_matmul(&a, &b, &mm);
+                errs[mi][ki] = frobenius_error(&c, &c_hat);
+            }
+        }
+        errs
+    });
+    let mut errors = vec![vec![0.0; cfg.ks.len()]; RoundingMode::ALL.len()];
+    for pp in &per_pair {
+        for (mi, row) in pp.iter().enumerate() {
+            for (ki, &e) in row.iter().enumerate() {
+                errors[mi][ki] += e / cfg.pairs as f64;
+            }
+        }
+    }
+    Fig8Result {
+        ks: cfg.ks.clone(),
+        errors,
+    }
+}
+
+/// Regenerate Fig 8: print the table and record JSON.
+pub fn run(cfg: &Fig8Config, out_dir: &str) -> Fig8Result {
+    println!(
+        "== Fig 8: matmul e_f vs k ({} pairs of {}x{} matrices, entries [0,{}), per-partial) ==\n",
+        cfg.pairs, cfg.dim, cfg.dim, cfg.hi
+    );
+    let result = compute(cfg);
+    print!("  {:>4}", "k");
+    for mode in RoundingMode::ALL {
+        print!("  {:>14}", mode.name());
+    }
+    println!();
+    for (ki, &k) in result.ks.iter().enumerate() {
+        print!("  {k:>4}");
+        for (mi, _) in RoundingMode::ALL.iter().enumerate() {
+            print!("  {:>14.4}", result.errors[mi][ki]);
+        }
+        println!();
+    }
+    match result.crossover_k() {
+        Some(k) => println!("\n  threshold k̃ (traditional beats dither) = {k}"),
+        None => println!("\n  no crossover within the sweep (traditional never wins)"),
+    }
+    let json = Json::obj(vec![
+        (
+            "ks",
+            Json::nums(&result.ks.iter().map(|&k| k as f64).collect::<Vec<_>>()),
+        ),
+        (
+            "deterministic",
+            Json::nums(result.series(RoundingMode::Deterministic)),
+        ),
+        ("dither", Json::nums(result.series(RoundingMode::Dither))),
+        (
+            "stochastic",
+            Json::nums(result.series(RoundingMode::Stochastic)),
+        ),
+    ]);
+    write_result(out_dir, "fig8", json);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Fig8Config {
+        Fig8Config {
+            pairs: 3,
+            dim: 32,
+            ks: vec![1, 2, 4, 8],
+            hi: 0.5,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn shape_of_fig8_reproduced() {
+        let r = compute(&tiny());
+        let det = r.series(RoundingMode::Deterministic);
+        let dit = r.series(RoundingMode::Dither);
+        let sto = r.series(RoundingMode::Stochastic);
+        // Small k: unbiased schemes beat traditional; dither <= stochastic.
+        assert!(dit[0] < det[0], "k=1: dither {} < det {}", dit[0], det[0]);
+        assert!(sto[0] < det[0], "k=1: stochastic beats det");
+        assert!(dit[0] <= sto[0] * 1.05, "k=1: dither ≲ stochastic");
+        assert!(dit[1] < det[1], "k=2");
+        // Errors decrease with k for every scheme.
+        for s in [det, dit, sto] {
+            assert!(s[3] < s[0] / 4.0, "error falls with k: {s:?}");
+        }
+    }
+
+    #[test]
+    fn k1_traditional_error_is_product_norm() {
+        // Footnote 3: at k=1 traditional rounding zeroes A and B.
+        let cfg = tiny();
+        let mut rng = Xoshiro256pp::new(cfg.seed ^ 0);
+        let a = Matrix::random_uniform(cfg.dim, cfg.dim, 0.0, cfg.hi, &mut rng);
+        let b = Matrix::random_uniform(cfg.dim, cfg.dim, 0.0, cfg.hi, &mut rng);
+        let c = a.matmul(&b);
+        let r = compute(&Fig8Config { pairs: 1, ..cfg });
+        let det_k1 = r.series(RoundingMode::Deterministic)[0];
+        assert!((det_k1 - c.frobenius_norm()).abs() / c.frobenius_norm() < 1e-9);
+    }
+
+    #[test]
+    fn crossover_exists_for_narrow_range() {
+        // With entries in [0, 0.5) the paper observes traditional rounding
+        // eventually winning at high k.
+        let r = compute(&Fig8Config {
+            ks: (1..=10).collect(),
+            ..tiny()
+        });
+        assert!(r.crossover_k().is_some(), "expected a crossover k̃");
+    }
+}

@@ -1,0 +1,181 @@
+//! Figs 1–6: EMSE `L` and sample |Bias| for representation (Figs 1–2),
+//! multiplication (Figs 3–4) and scaled addition (Figs 5–6), for the three
+//! schemes over a sweep of sequence lengths N.
+
+use crate::bitstream::{sweep, ErrorStats, EvalConfig, Op, Scheme};
+use crate::experiments::write_result;
+use crate::util::json::Json;
+use crate::util::stats::loglog_slope;
+
+/// One figure's regenerated series.
+pub struct FigureSeries {
+    /// The operation the figure measures.
+    pub op: Op,
+    /// Sequence lengths (x axis).
+    pub ns: Vec<usize>,
+    /// Per-scheme stats, `Scheme::ALL` order.
+    pub per_scheme: Vec<Vec<ErrorStats>>,
+}
+
+impl FigureSeries {
+    /// Run the sweep for one operation.
+    pub fn compute(op: Op, ns: &[usize], cfg: &EvalConfig) -> FigureSeries {
+        FigureSeries {
+            op,
+            ns: ns.to_vec(),
+            per_scheme: sweep(op, ns, cfg),
+        }
+    }
+
+    /// EMSE series for one scheme.
+    pub fn emse(&self, scheme: Scheme) -> Vec<f64> {
+        let idx = Scheme::ALL.iter().position(|&s| s == scheme).unwrap();
+        self.per_scheme[idx].iter().map(|s| s.emse).collect()
+    }
+
+    /// |Bias| series for one scheme.
+    pub fn bias(&self, scheme: Scheme) -> Vec<f64> {
+        let idx = Scheme::ALL.iter().position(|&s| s == scheme).unwrap();
+        self.per_scheme[idx].iter().map(|s| s.bias_abs).collect()
+    }
+
+    /// Log-log slope of a series vs N.
+    pub fn slope(&self, ys: &[f64]) -> Option<f64> {
+        let xs: Vec<f64> = self.ns.iter().map(|&n| n as f64).collect();
+        loglog_slope(&xs, ys)
+    }
+}
+
+/// Print one figure (EMSE or |bias|) as an aligned table + slopes.
+fn print_table(series: &FigureSeries, metric: &str) {
+    println!("\n  {} of {} vs N:", metric, series.op.name());
+    print!("  {:>6}", "N");
+    for scheme in Scheme::ALL {
+        print!("  {:>14}", scheme.name());
+    }
+    println!();
+    for (i, &n) in series.ns.iter().enumerate() {
+        print!("  {n:>6}");
+        for (si, _) in Scheme::ALL.iter().enumerate() {
+            let s = &series.per_scheme[si][i];
+            let v = if metric == "EMSE" { s.emse } else { s.bias_abs };
+            print!("  {v:>14.3e}");
+        }
+        println!();
+    }
+    print!("  {:>6}", "slope");
+    for scheme in Scheme::ALL {
+        let ys = if metric == "EMSE" {
+            series.emse(scheme)
+        } else {
+            series.bias(scheme)
+        };
+        match series.slope(&ys) {
+            Some(sl) => print!("  {sl:>14.2}"),
+            None => print!("  {:>14}", "-"),
+        }
+    }
+    println!();
+}
+
+fn series_json(series: &FigureSeries) -> Json {
+    let mut fields = vec![
+        ("op", Json::Str(series.op.name().to_string())),
+        (
+            "ns",
+            Json::nums(&series.ns.iter().map(|&n| n as f64).collect::<Vec<_>>()),
+        ),
+    ];
+    for (si, scheme) in Scheme::ALL.iter().enumerate() {
+        let emse: Vec<f64> = series.per_scheme[si].iter().map(|s| s.emse).collect();
+        let bias: Vec<f64> = series.per_scheme[si].iter().map(|s| s.bias_abs).collect();
+        fields.push((
+            match scheme {
+                Scheme::Stochastic => "stochastic_emse",
+                Scheme::DeterministicVariant => "deterministic_emse",
+                Scheme::Dither => "dither_emse",
+            },
+            Json::nums(&emse),
+        ));
+        fields.push((
+            match scheme {
+                Scheme::Stochastic => "stochastic_bias",
+                Scheme::DeterministicVariant => "deterministic_bias",
+                Scheme::Dither => "dither_bias",
+            },
+            Json::nums(&bias),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// Regenerate one of Figs 1–6. `fig` ∈ 1..=6.
+pub fn run(fig: u32, ns: &[usize], cfg: &EvalConfig, out_dir: &str) -> FigureSeries {
+    let (op, metric) = match fig {
+        1 => (Op::Represent, "EMSE"),
+        2 => (Op::Represent, "|Bias|"),
+        3 => (Op::Multiply, "EMSE"),
+        4 => (Op::Multiply, "|Bias|"),
+        5 => (Op::Average, "EMSE"),
+        6 => (Op::Average, "|Bias|"),
+        _ => panic!("fig must be 1..=6"),
+    };
+    println!(
+        "== Fig {fig}: {} of {} ({} pairs x {} trials) ==",
+        metric,
+        op.name(),
+        cfg.pairs,
+        cfg.trials
+    );
+    let series = FigureSeries::compute(op, ns, cfg);
+    print_table(&series, metric);
+    write_result(out_dir, &format!("fig{fig}"), series_json(&series));
+    series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> EvalConfig {
+        EvalConfig {
+            pairs: 30,
+            trials: 60,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn emse_slopes_match_paper_orders() {
+        // Stochastic ~ 1/N (slope ≈ -1); deterministic & dither ~ 1/N²
+        // (slope ≈ -2). Tolerances are loose for the tiny config.
+        let cfg = tiny_cfg();
+        let series = FigureSeries::compute(Op::Represent, &[16, 64, 256], &cfg);
+        let s_sto = series.slope(&series.emse(Scheme::Stochastic)).unwrap();
+        let s_det = series
+            .slope(&series.emse(Scheme::DeterministicVariant))
+            .unwrap();
+        let s_dit = series.slope(&series.emse(Scheme::Dither)).unwrap();
+        assert!((-1.3..=-0.7).contains(&s_sto), "stochastic slope {s_sto}");
+        assert!((-2.4..=-1.6).contains(&s_det), "deterministic slope {s_det}");
+        assert!((-2.4..=-1.6).contains(&s_dit), "dither slope {s_dit}");
+    }
+
+    #[test]
+    fn multiply_ordering_holds() {
+        let cfg = tiny_cfg();
+        let series = FigureSeries::compute(Op::Multiply, &[64], &cfg);
+        let sto = series.emse(Scheme::Stochastic)[0];
+        let dit = series.emse(Scheme::Dither)[0];
+        assert!(dit < sto / 3.0, "dither {dit} vs stochastic {sto}");
+    }
+
+    #[test]
+    fn json_record_is_valid() {
+        let cfg = tiny_cfg();
+        let series = FigureSeries::compute(Op::Average, &[16, 32], &cfg);
+        let json = series_json(&series);
+        assert!(json.get("dither_emse").is_some());
+        assert_eq!(json.get("ns").unwrap().as_f64_vec().unwrap(), vec![16.0, 32.0]);
+    }
+}

@@ -1,0 +1,36 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (DESIGN.md §3 experiment index).
+//!
+//! * [`figs_bitstream`] — Figs 1–6: EMSE and |bias| of representation,
+//!   multiplication and scaled addition vs N for the three schemes.
+//! * [`table1`] — Table I: empirical asymptotic orders via log-log slopes.
+//! * [`fig8`] — Fig 8: matmul Frobenius error vs bit width k.
+//! * [`nn_figs`] — Figs 9–16: quantized-inference accuracy mean/variance
+//!   vs k across rounding schemes, placements and the two tasks.
+//! * [`runner`] — id → experiment dispatch used by the CLI and benches.
+//!
+//! Every experiment prints the series it regenerates and writes a JSON
+//! record under `results/` for EXPERIMENTS.md.
+
+pub mod fig8;
+pub mod figs_bitstream;
+pub mod nn_figs;
+pub mod runner;
+pub mod table1;
+
+pub use runner::{run_experiment, ExperimentArgs, EXPERIMENT_IDS};
+
+use crate::util::json::Json;
+
+/// Write an experiment's JSON record under `out_dir` (best effort).
+pub fn write_result(out_dir: &str, id: &str, json: Json) {
+    let path = format!("{out_dir}/{id}.json");
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    if let Err(e) = std::fs::write(&path, json.to_string()) {
+        eprintln!("warning: could not write {path}: {e}");
+    } else {
+        println!("[wrote {path}]");
+    }
+}

@@ -1,0 +1,259 @@
+//! Figs 9–16: quantized-inference classification accuracy (mean and
+//! variance over trials) vs bit width k, for the three rounding schemes.
+//!
+//! | Figs  | task    | network        | rounding placement          |
+//! |-------|---------|----------------|-----------------------------|
+//! | 9/10  | digits  | 1-layer softmax| per-partial (2pqr, Fig 7)   |
+//! | 11/12 | digits  | 1-layer softmax| input rounded once (pq(r+1))|
+//! | 13/14 | digits  | 1-layer softmax| matrices separate ((p+r)q)  |
+//! | 15/16 | fashion | 3-layer MLP    | matrices separate           |
+//!
+//! Expected shapes: dither ≈ stochastic mean accuracy, both ≫ deterministic
+//! for small k ≥ 2; dither variance < stochastic variance; the fashion task
+//! shows a narrower beneficial-k window.
+
+use crate::experiments::write_result;
+use crate::linalg::Variant;
+use crate::nn::{quantized_accuracy, ActivationRanges, QuantInferenceConfig};
+use crate::rounding::RoundingMode;
+use crate::train::{trained_model, ModelSpec};
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+use crate::util::threadpool::parallel_map;
+
+/// Configuration for one accuracy-vs-k sweep.
+#[derive(Clone, Debug)]
+pub struct NnFigConfig {
+    /// Which evaluation model/task.
+    pub spec: ModelSpec,
+    /// Rounding placement.
+    pub variant: Variant,
+    /// Bit widths to sweep.
+    pub ks: Vec<u32>,
+    /// Trials per (mode, k) for the stochastic schemes (paper: 1000).
+    pub trials: usize,
+    /// Training set size (synthetic) for the model zoo.
+    pub train_n: usize,
+    /// Test set size.
+    pub test_n: usize,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl NnFigConfig {
+    /// Defaults scaled for minutes-long runs; the CLI can raise them.
+    pub fn new(spec: ModelSpec, variant: Variant) -> NnFigConfig {
+        NnFigConfig {
+            spec,
+            variant,
+            ks: (1..=8).collect(),
+            trials: 10,
+            train_n: 3000,
+            test_n: 500,
+            seed: 0x916,
+        }
+    }
+}
+
+/// Result: accuracy mean and variance per (mode, k).
+pub struct NnFigResult {
+    /// Bit widths.
+    pub ks: Vec<u32>,
+    /// Full-precision baseline accuracy.
+    pub float_acc: f64,
+    /// `mean[mode_index][k_index]` in `RoundingMode::ALL` order.
+    pub mean: Vec<Vec<f64>>,
+    /// Sample variance across trials.
+    pub var: Vec<Vec<f64>>,
+}
+
+impl NnFigResult {
+    /// Mean-accuracy series for one mode.
+    pub fn mean_series(&self, mode: RoundingMode) -> &[f64] {
+        let idx = RoundingMode::ALL.iter().position(|&m| m == mode).unwrap();
+        &self.mean[idx]
+    }
+
+    /// Variance series for one mode.
+    pub fn var_series(&self, mode: RoundingMode) -> &[f64] {
+        let idx = RoundingMode::ALL.iter().position(|&m| m == mode).unwrap();
+        &self.var[idx]
+    }
+}
+
+/// Run the sweep.
+pub fn compute(cfg: &NnFigConfig) -> NnFigResult {
+    let (mlp, test, float_acc) =
+        trained_model(cfg.spec, cfg.train_n, cfg.test_n, cfg.seed);
+    let ranges = ActivationRanges::calibrate(&mlp, &test.images);
+    // Work items: (mode index, k index, trial).
+    let mut items = Vec::new();
+    for (mi, &mode) in RoundingMode::ALL.iter().enumerate() {
+        let trials = if mode == RoundingMode::Deterministic {
+            1
+        } else {
+            cfg.trials
+        };
+        for (ki, &k) in cfg.ks.iter().enumerate() {
+            for t in 0..trials {
+                items.push((mi, ki, k, mode, t as u64));
+            }
+        }
+    }
+    let accs = parallel_map(&items, |_, &(_mi, _ki, k, mode, t)| {
+        let qcfg = QuantInferenceConfig {
+            bits: k,
+            mode,
+            variant: cfg.variant,
+            seed: cfg.seed ^ (t << 32) ^ ((k as u64) << 8) ^ mode as u64,
+        };
+        quantized_accuracy(&mlp, &test.images, &test.labels, &ranges, &qcfg)
+    });
+    let mut agg: Vec<Vec<Welford>> =
+        vec![vec![Welford::new(); cfg.ks.len()]; RoundingMode::ALL.len()];
+    for ((mi, ki, _, _, _), acc) in items.iter().zip(accs) {
+        agg[*mi][*ki].push(acc);
+    }
+    NnFigResult {
+        ks: cfg.ks.clone(),
+        float_acc,
+        mean: agg
+            .iter()
+            .map(|row| row.iter().map(Welford::mean).collect())
+            .collect(),
+        var: agg
+            .iter()
+            .map(|row| row.iter().map(Welford::variance).collect())
+            .collect(),
+    }
+}
+
+/// Figure-id → configuration mapping (Figs 9–16).
+pub fn config_for_figure(fig: u32) -> NnFigConfig {
+    match fig {
+        9 | 10 => NnFigConfig::new(ModelSpec::DigitsLinear, Variant::PerPartial),
+        11 | 12 => NnFigConfig::new(ModelSpec::DigitsLinear, Variant::InputOnce),
+        13 | 14 => NnFigConfig::new(ModelSpec::DigitsLinear, Variant::Separate),
+        15 | 16 => NnFigConfig::new(ModelSpec::FashionMlp, Variant::Separate),
+        _ => panic!("fig must be 9..=16"),
+    }
+}
+
+/// Regenerate one of Figs 9–16 (mean figures are odd ids 9/11/13/15,
+/// variance figures are 10/12/14/16 — both series are computed either way).
+pub fn run(fig: u32, cfg: &NnFigConfig, out_dir: &str) -> NnFigResult {
+    let metric = if fig % 2 == 1 { "mean accuracy" } else { "accuracy variance" };
+    println!(
+        "== Fig {fig}: {} on {:?} / {} placement ({} trials, test_n known at print) ==\n",
+        metric, cfg.spec, cfg.variant.name(), cfg.trials
+    );
+    let result = compute(cfg);
+    println!("  float baseline accuracy: {:.4}\n", result.float_acc);
+    print!("  {:>4}", "k");
+    for mode in RoundingMode::ALL {
+        print!("  {:>16}", mode.name());
+    }
+    println!();
+    for (ki, &k) in result.ks.iter().enumerate() {
+        print!("  {k:>4}");
+        for (mi, _) in RoundingMode::ALL.iter().enumerate() {
+            let v = if fig % 2 == 1 {
+                result.mean[mi][ki]
+            } else {
+                result.var[mi][ki]
+            };
+            print!("  {v:>16.6}");
+        }
+        println!();
+    }
+    let json = Json::obj(vec![
+        (
+            "ks",
+            Json::nums(&result.ks.iter().map(|&k| k as f64).collect::<Vec<_>>()),
+        ),
+        ("float_acc", Json::Num(result.float_acc)),
+        ("variant", Json::Str(cfg.variant.name().into())),
+        ("trials", Json::Num(cfg.trials as f64)),
+        (
+            "deterministic_mean",
+            Json::nums(result.mean_series(RoundingMode::Deterministic)),
+        ),
+        (
+            "dither_mean",
+            Json::nums(result.mean_series(RoundingMode::Dither)),
+        ),
+        (
+            "stochastic_mean",
+            Json::nums(result.mean_series(RoundingMode::Stochastic)),
+        ),
+        (
+            "dither_var",
+            Json::nums(result.var_series(RoundingMode::Dither)),
+        ),
+        (
+            "stochastic_var",
+            Json::nums(result.var_series(RoundingMode::Stochastic)),
+        ),
+    ]);
+    write_result(out_dir, &format!("fig{fig}"), json);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(spec: ModelSpec, variant: Variant) -> NnFigConfig {
+        NnFigConfig {
+            spec,
+            variant,
+            ks: vec![1, 8],
+            trials: 4,
+            train_n: 400,
+            test_n: 120,
+            seed: 0xAB,
+        }
+    }
+
+    #[test]
+    fn digits_shape_unbiased_beats_deterministic_at_small_k() {
+        // Per-partial placement: repeated roundings per element average out
+        // even at k=1 (separate's single binary rounding per pixel is too
+        // noisy for a reliable margin at this tiny test scale).
+        let cfg = tiny(ModelSpec::DigitsLinear, Variant::PerPartial);
+        let r = compute(&cfg);
+        // k=8: everyone near the float baseline.
+        let k8 = 1;
+        for mode in RoundingMode::ALL {
+            assert!(
+                r.mean_series(mode)[k8] > r.float_acc - 0.08,
+                "{mode:?} k=8 {}",
+                r.mean_series(mode)[k8]
+            );
+        }
+        // k=1: pixels in [0,1] inside the [-1,1] quantizer — deterministic
+        // rounding maps every pixel to +1 (total information loss, §VII);
+        // the unbiased schemes keep the class signal.
+        let k1 = 0;
+        let det = r.mean_series(RoundingMode::Deterministic)[k1];
+        let dit = r.mean_series(RoundingMode::Dither)[k1];
+        let sto = r.mean_series(RoundingMode::Stochastic)[k1];
+        assert!(dit > det + 0.1, "dither {dit} vs det {det} at k=1");
+        assert!(sto > det + 0.1, "stochastic {sto} vs det {det} at k=1");
+    }
+
+    #[test]
+    fn config_mapping_matches_paper() {
+        assert_eq!(config_for_figure(9).variant, Variant::PerPartial);
+        assert_eq!(config_for_figure(11).variant, Variant::InputOnce);
+        assert_eq!(config_for_figure(13).variant, Variant::Separate);
+        assert_eq!(config_for_figure(15).spec, ModelSpec::FashionMlp);
+        assert_eq!(config_for_figure(16).variant, Variant::Separate);
+    }
+
+    #[test]
+    #[should_panic(expected = "fig must be")]
+    fn bad_figure_panics() {
+        let _ = config_for_figure(8);
+    }
+}

@@ -1,0 +1,165 @@
+//! Experiment registry: id → regenerator, shared by the CLI and benches.
+
+use crate::bitstream::EvalConfig;
+use crate::experiments::{fig8, figs_bitstream, nn_figs, table1};
+use anyhow::{bail, Result};
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENT_IDS: [&str; 16] = [
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "table1", "fig8", "fig9", "fig10",
+    "fig11", "fig12", "fig13", "fig14", "fig15", "fig16",
+];
+
+/// Shared experiment arguments (populated from CLI flags).
+#[derive(Clone, Debug)]
+pub struct ExperimentArgs {
+    /// Operand pairs for Figs 1–6 / Table I.
+    pub pairs: usize,
+    /// Trials per pair for Figs 1–6 / Table I.
+    pub trials: usize,
+    /// N sweep for Figs 1–6 / Table I.
+    pub ns: Vec<usize>,
+    /// k sweep for Figs 8–16.
+    pub ks: Vec<u32>,
+    /// Matrix pairs for Fig 8.
+    pub matmul_pairs: usize,
+    /// Matrix dimension for Fig 8.
+    pub dim: usize,
+    /// Trials per (mode, k) for Figs 9–16.
+    pub nn_trials: usize,
+    /// Training set size for the model zoo.
+    pub train_n: usize,
+    /// Test set size for Figs 9–16.
+    pub test_n: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Output directory for JSON records.
+    pub out_dir: String,
+}
+
+impl Default for ExperimentArgs {
+    fn default() -> Self {
+        Self {
+            pairs: 200,
+            trials: 200,
+            ns: vec![4, 8, 16, 32, 64, 128, 256, 512, 1024],
+            ks: (1..=8).collect(),
+            matmul_pairs: 20,
+            dim: 100,
+            nn_trials: 10,
+            train_n: 3000,
+            test_n: 500,
+            seed: 0xA11CE,
+            out_dir: "results".to_string(),
+        }
+    }
+}
+
+impl ExperimentArgs {
+    /// The paper's full-scale settings (slow: hours).
+    pub fn paper_scale() -> Self {
+        Self {
+            pairs: 1000,
+            trials: 1000,
+            matmul_pairs: 100,
+            nn_trials: 1000,
+            train_n: 10_000,
+            test_n: 10_000,
+            ..Self::default()
+        }
+    }
+
+    fn eval_config(&self) -> EvalConfig {
+        EvalConfig {
+            pairs: self.pairs,
+            trials: self.trials,
+            seed: self.seed,
+        }
+    }
+}
+
+/// Run one experiment by id ("fig1".."fig16", "table1", or "all").
+pub fn run_experiment(id: &str, args: &ExperimentArgs) -> Result<()> {
+    match id {
+        "all" => {
+            for id in EXPERIMENT_IDS {
+                run_experiment(id, args)?;
+                println!();
+            }
+            Ok(())
+        }
+        "fig1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" => {
+            let fig: u32 = id[3..].parse().unwrap();
+            figs_bitstream::run(fig, &args.ns, &args.eval_config(), &args.out_dir);
+            Ok(())
+        }
+        "table1" => {
+            table1::run(&args.ns, &args.eval_config(), &args.out_dir);
+            Ok(())
+        }
+        "fig8" => {
+            let cfg = fig8::Fig8Config {
+                pairs: args.matmul_pairs,
+                dim: args.dim,
+                ks: args.ks.clone(),
+                hi: 0.5,
+                seed: args.seed,
+            };
+            fig8::run(&cfg, &args.out_dir);
+            Ok(())
+        }
+        "fig9" | "fig10" | "fig11" | "fig12" | "fig13" | "fig14" | "fig15" | "fig16" => {
+            let fig: u32 = id[3..].parse().unwrap();
+            let mut cfg = nn_figs::config_for_figure(fig);
+            cfg.ks = args.ks.clone();
+            cfg.trials = args.nn_trials;
+            cfg.train_n = args.train_n;
+            cfg.test_n = args.test_n;
+            cfg.seed = args.seed;
+            nn_figs::run(fig, &cfg, &args.out_dir);
+            Ok(())
+        }
+        other => bail!(
+            "unknown experiment {other:?}; available: all, {}",
+            EXPERIMENT_IDS.join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_errors() {
+        let args = ExperimentArgs::default();
+        assert!(run_experiment("fig99", &args).is_err());
+    }
+
+    #[test]
+    fn tiny_fig1_runs_end_to_end() {
+        let args = ExperimentArgs {
+            pairs: 10,
+            trials: 10,
+            ns: vec![8, 16],
+            out_dir: std::env::temp_dir()
+                .join("dither_results_test")
+                .to_string_lossy()
+                .into_owned(),
+            ..ExperimentArgs::default()
+        };
+        run_experiment("fig1", &args).unwrap();
+        let path = format!("{}/fig1.json", args.out_dir);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn paper_scale_settings() {
+        let p = ExperimentArgs::paper_scale();
+        assert_eq!(p.pairs, 1000);
+        assert_eq!(p.trials, 1000);
+        assert_eq!(p.nn_trials, 1000);
+    }
+}

@@ -1,0 +1,49 @@
+//! # dither — a hybrid deterministic–stochastic computing framework
+//!
+//! Production-grade reproduction of C. W. Wu, *"Dither computing: a hybrid
+//! deterministic-stochastic computing framework"* (ARITH 2021).
+//!
+//! The library implements, from the bit level up:
+//!
+//! * [`bitstream`] — the three pulse-sequence computing schemes (stochastic,
+//!   deterministic variant, dither) with AND-multiplication and MUX
+//!   scaled-addition, plus the bias/variance/EMSE analysis harness.
+//! * [`rounding`] — k-bit quantization with deterministic, stochastic and
+//!   dither rounding (§VII).
+//! * [`linalg`] — fixed-point matrix multiplication engines with the three
+//!   rounding-placement strategies of §VII–§VIII.
+//! * [`nn`] — dense network inference with quantized matmuls, and
+//!   [`train`] — a pure-Rust SGD trainer producing the evaluation models.
+//! * [`data`] — synthetic MNIST-class / Fashion-class datasets (procedural;
+//!   see DESIGN.md §4 for the substitution rationale) and an IDX loader.
+//! * [`runtime`] — PJRT bridge that loads the AOT-compiled JAX/Pallas
+//!   artifacts, and [`coordinator`] — the threaded batching inference server.
+//! * [`experiments`] — regenerators for every figure and table in the paper.
+//! * [`util`] — infrastructure substrates (PRNG, stats, JSON, CLI, thread
+//!   pool, bench harness, property testing) built in-tree because the
+//!   offline environment provides no third-party equivalents.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use dither::bitstream::{Op, Scheme, EvalConfig, evaluate};
+//!
+//! let cfg = EvalConfig { pairs: 50, trials: 50, seed: 7 };
+//! let pairs = cfg.draw_pairs();
+//! let d = evaluate(Scheme::Dither, Op::Multiply, 64, &pairs, &cfg);
+//! let s = evaluate(Scheme::Stochastic, Op::Multiply, 64, &pairs, &cfg);
+//! assert!(d.emse < s.emse); // dither: O(1/N²) vs stochastic Ω(1/N)
+//! ```
+
+#![warn(missing_docs)]
+
+pub mod bitstream;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod nn;
+pub mod rounding;
+pub mod runtime;
+pub mod train;
+pub mod util;

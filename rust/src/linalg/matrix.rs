@@ -1,0 +1,227 @@
+//! Dense row-major f64 matrices — the linear-algebra substrate under the
+//! quantized-matmul engines and the NN layers.
+
+use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool::parallel_chunks;
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    /// Row count.
+    pub rows: usize,
+    /// Column count.
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// From a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// From an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Uniform random entries in [lo, hi).
+    pub fn random_uniform(
+        rows: usize,
+        cols: usize,
+        lo: f64,
+        hi: f64,
+        rng: &mut Xoshiro256pp,
+    ) -> Self {
+        let data = (0..rows * cols).map(|_| rng.uniform(lo, hi)).collect();
+        Self { rows, cols, data }
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Element assignment.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Row as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Raw data (row-major).
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw data (row-major).
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Exact (f64) matrix product, parallel over row blocks with a
+    /// transposed-B inner kernel for contiguous access.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "inner dimensions must match");
+        let (p, q, r) = (self.rows, self.cols, other.cols);
+        let bt = other.transpose();
+        let mut out = Matrix::zeros(p, r);
+        // Compute disjoint row blocks in parallel, then stitch.
+        let blocks = parallel_chunks(p, |range| {
+            let mut block = vec![0.0f64; range.len() * r];
+            for (bi, i) in range.clone().enumerate() {
+                let arow = &self.data[i * q..(i + 1) * q];
+                for k in 0..r {
+                    let brow = &bt.data[k * q..(k + 1) * q];
+                    let mut acc = 0.0;
+                    for j in 0..q {
+                        acc += arow[j] * brow[j];
+                    }
+                    block[bi * r + k] = acc;
+                }
+            }
+            (range.start, block)
+        });
+        for (start, block) in blocks {
+            let rows_in_block = block.len() / r;
+            out.data[start * r..(start + rows_in_block) * r].copy_from_slice(&block);
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Elementwise difference.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    /// Frobenius norm ‖M‖_F (the paper's e_f metric base).
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+}
+
+/// Frobenius-norm error `e_f = ‖C − Ĉ‖_F` (§VII).
+pub fn frobenius_error(c: &Matrix, c_hat: &Matrix) -> f64 {
+    c.sub(c_hat).frobenius_norm()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        let eye = Matrix::from_fn(3, 3, |i, j| f64::from(i == j));
+        assert_eq!(a.matmul(&eye), a);
+        assert_eq!(eye.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known_product() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Matrix::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular_matches_naive() {
+        let mut rng = Xoshiro256pp::new(3);
+        let a = Matrix::random_uniform(17, 9, -1.0, 1.0, &mut rng);
+        let b = Matrix::random_uniform(9, 23, -1.0, 1.0, &mut rng);
+        let c = a.matmul(&b);
+        for i in 0..17 {
+            for k in 0..23 {
+                let naive: f64 = (0..9).map(|j| a.get(i, j) * b.get(j, k)).sum();
+                assert!((c.get(i, k) - naive).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256pp::new(4);
+        let a = Matrix::random_uniform(5, 8, 0.0, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().get(3, 2), a.get(2, 3));
+    }
+
+    #[test]
+    fn frobenius_norm_known() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((m.frobenius_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(frobenius_error(&m, &m), 0.0);
+    }
+
+    #[test]
+    fn row_access() {
+        let m = Matrix::from_fn(4, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.row(2), &[20.0, 21.0, 22.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimensions")]
+    fn matmul_dimension_mismatch() {
+        let _ = Matrix::zeros(2, 3).matmul(&Matrix::zeros(4, 2));
+    }
+}

@@ -1,0 +1,8 @@
+//! Dense linear algebra and the quantized (reduced-precision) matmul
+//! engines of §VII–§VIII.
+
+pub mod matmul;
+pub mod matrix;
+
+pub use matmul::{quant_matmul, quantize_matrix_once, QuantMatmulConfig, SweepAxis, Variant};
+pub use matrix::{frobenius_error, Matrix};

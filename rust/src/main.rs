@@ -1,0 +1,203 @@
+//! `dither` — CLI for the dither-computing framework.
+//!
+//! Subcommands:
+//!
+//! * `experiment <id>` — regenerate a paper table/figure (fig1..fig16,
+//!   table1, all). `--paper-scale` switches to the paper's full settings.
+//! * `train` — train and cache the evaluation models.
+//! * `serve` — run the batching inference server on the AOT artifacts.
+//! * `infer` — one-shot inference through the PJRT runtime (smoke path).
+//! * `info` — show artifacts manifest and platform.
+//!
+//! Run `dither help` for flag details.
+
+use anyhow::Result;
+use dither::coordinator::{serve, ServerConfig};
+use dither::data::{Dataset, Task};
+use dither::experiments::{run_experiment, ExperimentArgs, EXPERIMENT_IDS};
+use dither::rounding::RoundingMode;
+use dither::train::{trained_model, ModelSpec};
+use dither::util::cli::Args;
+
+const HELP: &str = "\
+dither — hybrid deterministic-stochastic computing framework (ARITH'21 repro)
+
+USAGE:
+    dither <command> [flags]
+
+COMMANDS:
+    experiment <id>   regenerate a paper result: fig1..fig6, table1, fig8,
+                      fig9..fig16, or 'all'
+    train             train + cache the evaluation models (model zoo)
+    serve             run the batching inference server (TCP, newline JSON)
+    infer             single quantized inference through the PJRT runtime
+    info              show artifact manifest + platform
+    help              this text
+
+EXPERIMENT FLAGS (defaults in parentheses):
+    --pairs N         operand pairs for fig1-6/table1 (200)
+    --trials N        trials per pair (200)
+    --ns a,b,c        N sweep (4..1024 powers of 2)
+    --ks a,b,c        k sweep for fig8-16 (1..8)
+    --matmul-pairs N  matrix pairs for fig8 (20)
+    --dim N           matrix dimension for fig8 (100)
+    --nn-trials N     trials per (mode,k) for fig9-16 (10)
+    --train-n N       training-set size (3000)
+    --test-n N        test-set size (500)
+    --seed S          master seed
+    --out DIR         JSON record directory (results)
+    --paper-scale     use the paper's full-scale settings (slow)
+
+SERVE FLAGS:
+    --addr HOST:PORT  listen address (127.0.0.1:7878)
+    --max-batch N     dynamic batch cap (32)
+    --max-wait-us N   batch linger (2000)
+    --artifacts DIR   artifacts directory (artifacts)
+
+INFER FLAGS:
+    --model NAME      digits_linear | fashion_mlp (digits_linear)
+    --k N             bit width (4)
+    --mode M          deterministic | stochastic | dither (dither)
+    --artifacts DIR   artifacts directory (artifacts)
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("info") => cmd_info(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn experiment_args(args: &Args) -> ExperimentArgs {
+    let base = if args.flag("paper-scale") {
+        ExperimentArgs::paper_scale()
+    } else {
+        ExperimentArgs::default()
+    };
+    ExperimentArgs {
+        pairs: args.parse_or("pairs", base.pairs),
+        trials: args.parse_or("trials", base.trials),
+        ns: args.parse_list_or("ns", base.ns.clone()),
+        ks: args.parse_list_or("ks", base.ks.clone()),
+        matmul_pairs: args.parse_or("matmul-pairs", base.matmul_pairs),
+        dim: args.parse_or("dim", base.dim),
+        nn_trials: args.parse_or("nn-trials", base.nn_trials),
+        train_n: args.parse_or("train-n", base.train_n),
+        test_n: args.parse_or("test-n", base.test_n),
+        seed: args.parse_or("seed", base.seed),
+        out_dir: args.str_or("out", &base.out_dir),
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    if id != "all" && !EXPERIMENT_IDS.contains(&id) {
+        eprintln!(
+            "unknown experiment {id:?}; available: all, {}",
+            EXPERIMENT_IDS.join(", ")
+        );
+        std::process::exit(2);
+    }
+    run_experiment(id, &experiment_args(args))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let train_n = args.parse_or("train-n", 3000usize);
+    let test_n = args.parse_or("test-n", 500usize);
+    let seed = args.parse_or("seed", 7u64);
+    for spec in [ModelSpec::DigitsLinear, ModelSpec::FashionMlp] {
+        if args.flag("retrain") {
+            let _ = std::fs::remove_file(spec.weights_path());
+        }
+        let (mlp, _test, acc) = trained_model(spec, train_n, test_n, seed);
+        println!(
+            "{:?}: {} params, float test accuracy {:.4} -> {}",
+            spec,
+            mlp.param_count(),
+            acc,
+            spec.weights_path()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = ServerConfig {
+        addr: args.str_or("addr", "127.0.0.1:7878"),
+        max_batch: args.parse_or("max-batch", 32usize),
+        max_wait_us: args.parse_or("max-wait-us", 2000u64),
+        artifacts_dir: args.str_or("artifacts", "artifacts"),
+        train_n: args.parse_or("train-n", 2000usize),
+        seed: args.parse_or("seed", 7u64),
+    };
+    serve(&cfg)
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    use dither::coordinator::Engine;
+    let model = args.str_or("model", "digits_linear");
+    let k = args.parse_or("k", 4u32);
+    let mode = RoundingMode::from_str(&args.str_or("mode", "dither"))
+        .ok_or_else(|| anyhow::anyhow!("invalid --mode"))?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let seed = args.parse_or("seed", 7u64);
+    let engine = Engine::new(&artifacts, args.parse_or("train-n", 2000usize), seed)?;
+    // One synthetic test image per class, report predictions.
+    let task = if model == "fashion_mlp" {
+        Task::Fashion
+    } else {
+        Task::Digits
+    };
+    let ds = Dataset::synthesize(task, 10, seed ^ 0x1E57);
+    let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
+    let t = std::time::Instant::now();
+    let outputs = engine.infer_batch(&model, k, mode, &pixels)?;
+    let elapsed = t.elapsed();
+    let mut correct = 0;
+    for (i, out) in outputs.iter().enumerate() {
+        let label = ds.labels[i];
+        if out.pred == label {
+            correct += 1;
+        }
+        println!("sample {i}: label={label} pred={}", out.pred);
+    }
+    println!(
+        "\n{}/{} correct | model={model} k={k} mode={} | {:.1} ms total",
+        correct,
+        outputs.len(),
+        mode.name(),
+        elapsed.as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    use dither::runtime::Runtime;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let rt = Runtime::cpu(&artifacts)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts dir: {artifacts}");
+    println!("dither N: {}", rt.manifest().dither_n);
+    println!("{:<28} {:>6}  inputs", "artifact", "batch");
+    for a in &rt.manifest().artifacts {
+        println!("{:<28} {:>6}  {}", a.name, a.batch, a.inputs.join(" "));
+    }
+    Ok(())
+}

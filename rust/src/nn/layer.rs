@@ -1,0 +1,167 @@
+//! Dense layers and activations for the evaluation networks.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Xoshiro256pp;
+
+/// A dense (fully connected) layer `y = x·W + b` with an optional ReLU.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    /// Weight matrix, `in_dim × out_dim`.
+    pub weights: Matrix,
+    /// Bias vector, `out_dim`.
+    pub bias: Vec<f64>,
+    /// Apply ReLU after the affine map.
+    pub relu: bool,
+}
+
+impl Dense {
+    /// He-initialized layer.
+    pub fn init(in_dim: usize, out_dim: usize, relu: bool, rng: &mut Xoshiro256pp) -> Dense {
+        let std = (2.0 / in_dim as f64).sqrt();
+        let weights = Matrix::from_fn(in_dim, out_dim, |_, _| rng.normal() * std);
+        Dense {
+            weights,
+            bias: vec![0.0; out_dim],
+            relu,
+        }
+    }
+
+    /// Forward pass on a batch (`n × in_dim` → `n × out_dim`).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let mut out = x.matmul(&self.weights);
+        self.finish(&mut out);
+        out
+    }
+
+    /// Add bias and apply the activation in place (shared with the
+    /// quantized path, which substitutes its own matmul).
+    pub fn finish(&self, out: &mut Matrix) {
+        let cols = out.cols;
+        for i in 0..out.rows {
+            let row = out.row_mut(i);
+            for j in 0..cols {
+                row[j] += self.bias[j];
+                if self.relu && row[j] < 0.0 {
+                    row[j] = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Input dimension.
+    pub fn in_dim(&self) -> usize {
+        self.weights.rows
+    }
+
+    /// Output dimension.
+    pub fn out_dim(&self) -> usize {
+        self.weights.cols
+    }
+
+    /// Largest |weight| (used to derive quantizer ranges).
+    pub fn weight_range(&self) -> f64 {
+        self.weights.max_abs().max(1e-9)
+    }
+}
+
+/// Row-wise softmax (numerically stabilized).
+pub fn softmax_rows(m: &mut Matrix) {
+    let cols = m.cols;
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        let max = row.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+        let _ = cols;
+    }
+}
+
+/// Argmax per row → predicted labels.
+pub fn argmax_rows(m: &Matrix) -> Vec<u8> {
+    (0..m.rows)
+        .map(|i| {
+            let row = m.row(i);
+            let mut best = 0usize;
+            for j in 1..row.len() {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            best as u8
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shape_and_bias() {
+        let mut rng = Xoshiro256pp::new(1);
+        let mut layer = Dense::init(4, 3, false, &mut rng);
+        layer.bias = vec![1.0, 2.0, 3.0];
+        let x = Matrix::zeros(2, 4);
+        let y = layer.forward(&x);
+        assert_eq!((y.rows, y.cols), (2, 3));
+        assert_eq!(y.row(0), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut rng = Xoshiro256pp::new(2);
+        let mut layer = Dense::init(2, 2, true, &mut rng);
+        layer.weights = Matrix::from_vec(2, 2, vec![1.0, -1.0, 0.0, 0.0]);
+        layer.bias = vec![0.0, 0.0];
+        let x = Matrix::from_vec(1, 2, vec![3.0, 0.0]);
+        let y = layer.forward(&x);
+        assert_eq!(y.row(0), &[3.0, 0.0]); // -3 clamped to 0
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        softmax_rows(&mut m);
+        for i in 0..2 {
+            let s: f64 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            assert!(m.row(i).iter().all(|&v| v > 0.0));
+        }
+        // Monotonic in the logits.
+        assert!(m.get(0, 2) > m.get(0, 1));
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let mut m = Matrix::from_vec(1, 2, vec![1000.0, 1001.0]);
+        softmax_rows(&mut m);
+        assert!(m.get(0, 1) > m.get(0, 0));
+        assert!((m.row(0).iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        let m = Matrix::from_vec(2, 3, vec![0.1, 0.7, 0.2, 0.9, 0.05, 0.05]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+
+    #[test]
+    fn he_init_scale() {
+        let mut rng = Xoshiro256pp::new(3);
+        let layer = Dense::init(1000, 10, false, &mut rng);
+        let var: f64 = layer
+            .weights
+            .data()
+            .iter()
+            .map(|w| w * w)
+            .sum::<f64>()
+            / layer.weights.data().len() as f64;
+        assert!((var - 0.002).abs() < 0.0005, "var={var}");
+    }
+}

@@ -1,0 +1,264 @@
+//! Multi-layer perceptron container with binary save/load.
+//!
+//! The evaluation networks are the paper's: a 1-layer softmax classifier
+//! for the MNIST-class task and a 3-layer ReLU MLP for the Fashion-class
+//! task (§VII–§VIII). Weights are produced by the pure-Rust trainer
+//! ([`crate::train`]) and stored under `artifacts/weights/` so the serving
+//! path and the experiments never need Python.
+
+use crate::linalg::Matrix;
+use crate::nn::layer::{argmax_rows, Dense};
+use crate::util::rng::Xoshiro256pp;
+use std::io::{Read, Write};
+
+/// A stack of dense layers (softmax is applied by the loss/argmax, not
+/// stored as a layer).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// Layers in forward order.
+    pub layers: Vec<Dense>,
+}
+
+const MAGIC: &[u8; 4] = b"DMLP";
+const VERSION: u32 = 1;
+
+impl Mlp {
+    /// The paper's MNIST network: single 784→10 softmax layer.
+    pub fn single_layer(in_dim: usize, classes: usize, rng: &mut Xoshiro256pp) -> Mlp {
+        Mlp {
+            layers: vec![Dense::init(in_dim, classes, false, rng)],
+        }
+    }
+
+    /// The paper's Fashion network: 3-layer ReLU MLP.
+    pub fn three_layer(
+        in_dim: usize,
+        hidden1: usize,
+        hidden2: usize,
+        classes: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Mlp {
+        Mlp {
+            layers: vec![
+                Dense::init(in_dim, hidden1, true, rng),
+                Dense::init(hidden1, hidden2, true, rng),
+                Dense::init(hidden2, classes, false, rng),
+            ],
+        }
+    }
+
+    /// Full-precision forward pass → logits.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let mut h = x.clone();
+        for layer in &self.layers {
+            h = layer.forward(&h);
+        }
+        h
+    }
+
+    /// Predicted labels.
+    pub fn predict(&self, x: &Matrix) -> Vec<u8> {
+        argmax_rows(&self.forward(x))
+    }
+
+    /// Classification accuracy on a labeled batch.
+    pub fn accuracy(&self, x: &Matrix, labels: &[u8]) -> f64 {
+        let preds = self.predict(x);
+        let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+        correct as f64 / labels.len() as f64
+    }
+
+    /// Rescale every layer's weights into `[-1, 1]` (the paper scales the
+    /// weight matrix to that range before quantization) while preserving
+    /// the network's predictions.
+    ///
+    /// Scaling layer ℓ's weights by `s_ℓ` scales its (ReLU-homogeneous)
+    /// output by the accumulated `c_ℓ = Π s_i`, so each bias must be scaled
+    /// by the *accumulated* factor for the pre-activation to remain a
+    /// positive multiple of the original — which keeps ReLUs and the final
+    /// argmax exact.
+    ///
+    /// Returns the per-layer scale factors applied to the weights.
+    pub fn normalize_weights(&mut self) -> Vec<f64> {
+        let mut accumulated = 1.0;
+        self.layers
+            .iter_mut()
+            .map(|layer| {
+                let s = 1.0 / layer.weight_range();
+                for w in layer.weights.data_mut() {
+                    *w *= s;
+                }
+                accumulated *= s;
+                for b in &mut layer.bias {
+                    *b *= accumulated;
+                }
+                s
+            })
+            .collect()
+    }
+
+    /// Serialize to a writer (little-endian binary).
+    pub fn save_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.layers.len() as u32).to_le_bytes())?;
+        for layer in &self.layers {
+            w.write_all(&(layer.in_dim() as u32).to_le_bytes())?;
+            w.write_all(&(layer.out_dim() as u32).to_le_bytes())?;
+            w.write_all(&[u8::from(layer.relu)])?;
+            for &v in layer.weights.data() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+            for &v in &layer.bias {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Save to a file path (creating parent directories).
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        self.save_to(&mut f)
+    }
+
+    /// Deserialize from a reader.
+    pub fn load_from(r: &mut impl Read) -> std::io::Result<Mlp> {
+        let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(err("bad magic"));
+        }
+        let mut u32buf = [0u8; 4];
+        r.read_exact(&mut u32buf)?;
+        if u32::from_le_bytes(u32buf) != VERSION {
+            return Err(err("unsupported version"));
+        }
+        r.read_exact(&mut u32buf)?;
+        let n_layers = u32::from_le_bytes(u32buf) as usize;
+        if n_layers > 64 {
+            return Err(err("implausible layer count"));
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            r.read_exact(&mut u32buf)?;
+            let in_dim = u32::from_le_bytes(u32buf) as usize;
+            r.read_exact(&mut u32buf)?;
+            let out_dim = u32::from_le_bytes(u32buf) as usize;
+            let mut relu_b = [0u8; 1];
+            r.read_exact(&mut relu_b)?;
+            let mut f64buf = [0u8; 8];
+            let mut wdata = Vec::with_capacity(in_dim * out_dim);
+            for _ in 0..in_dim * out_dim {
+                r.read_exact(&mut f64buf)?;
+                wdata.push(f64::from_le_bytes(f64buf));
+            }
+            let mut bias = Vec::with_capacity(out_dim);
+            for _ in 0..out_dim {
+                r.read_exact(&mut f64buf)?;
+                bias.push(f64::from_le_bytes(f64buf));
+            }
+            layers.push(Dense {
+                weights: Matrix::from_vec(in_dim, out_dim, wdata),
+                bias,
+                relu: relu_b[0] != 0,
+            });
+        }
+        Ok(Mlp { layers })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> std::io::Result<Mlp> {
+        let mut f = std::fs::File::open(path)?;
+        Self::load_from(&mut f)
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.in_dim() * l.out_dim() + l.out_dim())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Xoshiro256pp::new(1);
+        let mlp = Mlp::three_layer(20, 16, 8, 4, &mut rng);
+        let x = Matrix::zeros(5, 20);
+        let y = mlp.forward(&x);
+        assert_eq!((y.rows, y.cols), (5, 4));
+        assert_eq!(mlp.param_count(), 20 * 16 + 16 + 16 * 8 + 8 + 8 * 4 + 4);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Xoshiro256pp::new(2);
+        let mlp = Mlp::three_layer(6, 5, 4, 3, &mut rng);
+        let mut buf = Vec::new();
+        mlp.save_to(&mut buf).unwrap();
+        let back = Mlp::load_from(&mut &buf[..]).unwrap();
+        assert_eq!(back.layers.len(), 3);
+        for (a, b) in mlp.layers.iter().zip(&back.layers) {
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.relu, b.relu);
+        }
+        // Same predictions.
+        let x = Matrix::from_fn(4, 6, |i, j| ((i * 7 + j) as f64).sin());
+        assert_eq!(mlp.predict(&x), back.predict(&x));
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        assert!(Mlp::load_from(&mut &b"XXXX"[..]).is_err());
+        let mut buf = Vec::new();
+        Mlp::single_layer(4, 2, &mut Xoshiro256pp::new(3))
+            .save_to(&mut buf)
+            .unwrap();
+        buf[4] = 99; // version
+        assert!(Mlp::load_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn normalize_weights_bounds_range() {
+        let mut rng = Xoshiro256pp::new(4);
+        let mut mlp = Mlp::three_layer(10, 8, 6, 4, &mut rng);
+        // Inflate one weight to force a non-trivial scale.
+        mlp.layers[0].weights.set(0, 0, 7.5);
+        let x = Matrix::from_fn(3, 10, |i, j| ((i + j) as f64 * 0.1).cos().abs());
+        let before = mlp.layers[2].forward(
+            &mlp.layers[1].forward(&mlp.layers[0].forward(&x)),
+        );
+        let preds_before = argmax_rows(&before);
+        mlp.normalize_weights();
+        for layer in &mlp.layers {
+            assert!(layer.weight_range() <= 1.0 + 1e-12);
+        }
+        // Final-layer argmax is preserved for the single-layer case only in
+        // general; for deep ReLU nets positive rescaling preserves argmax
+        // per layer (ReLU is positive-homogeneous), so predictions match.
+        let preds_after = mlp.predict(&x);
+        assert_eq!(preds_before, preds_after);
+    }
+
+    #[test]
+    fn accuracy_computation() {
+        let mut rng = Xoshiro256pp::new(5);
+        let mut mlp = Mlp::single_layer(2, 2, &mut rng);
+        mlp.layers[0].weights = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        mlp.layers[0].bias = vec![0.0, 0.0];
+        let x = Matrix::from_vec(4, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(mlp.accuracy(&x, &[0, 1, 0, 1]), 1.0);
+        assert_eq!(mlp.accuracy(&x, &[1, 0, 0, 1]), 0.5);
+    }
+}

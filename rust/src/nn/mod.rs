@@ -1,0 +1,13 @@
+//! Neural-network inference: float reference path and the reduced-precision
+//! quantized path used by the paper's §VII–§VIII experiments.
+
+pub mod layer;
+pub mod mlp;
+pub mod quantized;
+
+pub use layer::{argmax_rows, softmax_rows, Dense};
+pub use mlp::Mlp;
+pub use quantized::{
+    quantized_accuracy, quantized_forward, quantized_predict, ActivationRanges,
+    QuantInferenceConfig,
+};

@@ -1,0 +1,227 @@
+//! Quantized (reduced-precision) MLP inference — the §VII–§VIII evaluation
+//! path.
+//!
+//! Every matmul in the forward pass is replaced by a k-bit fixed-point
+//! [`quant_matmul`] under a chosen [`RoundingMode`] and [`Variant`]. Per the
+//! paper: weights are normalized to `[-1, 1]`, the input shares the weight
+//! quantizer's `[-1, 1]` range even though pixels occupy only `[0, 1]`
+//! ("it did not fully utilize the full range of the quantizer" — the very
+//! regime where unbiased rounding wins), and for the 3-layer network the
+//! intermediate result matrices are rounded separately before each matmul,
+//! with activation ranges calibrated from a float forward pass.
+
+use crate::linalg::{quant_matmul, Matrix, QuantMatmulConfig, Variant};
+use crate::nn::layer::argmax_rows;
+use crate::nn::mlp::Mlp;
+use crate::rounding::RoundingMode;
+
+/// Configuration for quantized inference.
+#[derive(Clone, Debug)]
+pub struct QuantInferenceConfig {
+    /// Quantizer bit width `k`.
+    pub bits: u32,
+    /// Rounding scheme.
+    pub mode: RoundingMode,
+    /// Rounding placement within each matmul.
+    pub variant: Variant,
+    /// Trial seed (vary to sample the accuracy distribution).
+    pub seed: u64,
+}
+
+/// Per-layer input ranges used by the quantizers, calibrated once on the
+/// float model.
+#[derive(Clone, Debug)]
+pub struct ActivationRanges {
+    /// `(lo, hi)` for the input of each layer.
+    pub per_layer: Vec<(f64, f64)>,
+}
+
+impl ActivationRanges {
+    /// Calibrate on a batch: layer 0 uses the paper's fixed `[-1, 1]`;
+    /// deeper layers use the observed activation envelope with 10% headroom
+    /// (the paper's "conservatively scaled to lie well within the range").
+    pub fn calibrate(mlp: &Mlp, x: &Matrix) -> ActivationRanges {
+        let mut per_layer = vec![(-1.0, 1.0)];
+        let mut h = x.clone();
+        for (i, layer) in mlp.layers.iter().enumerate() {
+            h = layer.forward(&h);
+            if i + 1 < mlp.layers.len() {
+                let m = h.max_abs().max(1e-6) * 1.1;
+                per_layer.push((-m, m));
+            }
+        }
+        ActivationRanges { per_layer }
+    }
+}
+
+/// Quantized forward pass → logits.
+pub fn quantized_forward(
+    mlp: &Mlp,
+    x: &Matrix,
+    ranges: &ActivationRanges,
+    cfg: &QuantInferenceConfig,
+) -> Matrix {
+    assert_eq!(
+        ranges.per_layer.len(),
+        mlp.layers.len(),
+        "one activation range per layer"
+    );
+    let mut h = x.clone();
+    for (li, layer) in mlp.layers.iter().enumerate() {
+        let w_range = layer.weight_range();
+        let mm = QuantMatmulConfig {
+            bits: cfg.bits,
+            mode: cfg.mode,
+            variant: cfg.variant,
+            // Decorrelate layers and trials.
+            seed: cfg.seed ^ ((li as u64 + 1) << 40),
+            range_a: ranges.per_layer[li],
+            range_b: (-w_range, w_range),
+            n_a: None,
+            n_b: None,
+        };
+        let mut out = quant_matmul(&h, &layer.weights, &mm);
+        layer.finish(&mut out); // bias + ReLU in full precision (§VI: bias
+                                // is "precoded"; the multiplier is what is
+                                // reduced-precision)
+        h = out;
+    }
+    h
+}
+
+/// Quantized predictions.
+pub fn quantized_predict(
+    mlp: &Mlp,
+    x: &Matrix,
+    ranges: &ActivationRanges,
+    cfg: &QuantInferenceConfig,
+) -> Vec<u8> {
+    argmax_rows(&quantized_forward(mlp, x, ranges, cfg))
+}
+
+/// Quantized classification accuracy.
+pub fn quantized_accuracy(
+    mlp: &Mlp,
+    x: &Matrix,
+    labels: &[u8],
+    ranges: &ActivationRanges,
+    cfg: &QuantInferenceConfig,
+) -> f64 {
+    let preds = quantized_predict(mlp, x, ranges, cfg);
+    preds.iter().zip(labels).filter(|(p, l)| p == l).count() as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// A tiny separable problem: class = argmax of two pixel groups.
+    fn toy_problem() -> (Mlp, Matrix, Vec<u8>) {
+        let mut rng = Xoshiro256pp::new(1);
+        let mut mlp = Mlp::single_layer(4, 2, &mut rng);
+        mlp.layers[0].weights =
+            Matrix::from_vec(4, 2, vec![0.9, -0.9, 0.9, -0.9, -0.9, 0.9, -0.9, 0.9]);
+        mlp.layers[0].bias = vec![0.0, 0.0];
+        let mut x = Matrix::zeros(40, 4);
+        let mut labels = Vec::new();
+        let mut rng2 = Xoshiro256pp::new(2);
+        for i in 0..40 {
+            let class = (i % 2) as u8;
+            for j in 0..4 {
+                let group = usize::from(j >= 2);
+                let base = if group == class as usize { 0.8 } else { 0.2 };
+                x.set(i, j, (base + rng2.uniform(-0.1, 0.1)) as f64);
+            }
+            labels.push(class);
+        }
+        (mlp, x, labels)
+    }
+
+    #[test]
+    fn high_bits_match_float_accuracy() {
+        let (mlp, x, labels) = toy_problem();
+        let float_acc = mlp.accuracy(&x, &labels);
+        assert_eq!(float_acc, 1.0);
+        let ranges = ActivationRanges::calibrate(&mlp, &x);
+        for mode in RoundingMode::ALL {
+            let cfg = QuantInferenceConfig {
+                bits: 12,
+                mode,
+                variant: Variant::PerPartial,
+                seed: 3,
+            };
+            let acc = quantized_accuracy(&mlp, &x, &labels, &ranges, &cfg);
+            assert!(acc > 0.95, "{mode:?} acc={acc}");
+        }
+    }
+
+    #[test]
+    fn unbiased_modes_survive_low_bits() {
+        // The §VII narrow-range regime: inputs occupy [0.05, 0.45] inside a
+        // [-1, 1] quantizer at k=1 — deterministic rounding maps *every*
+        // pixel to the same level (all information lost), while dither /
+        // stochastic rounding keep the class signal in expectation.
+        let (mlp, _, _) = toy_problem();
+        let mut x = Matrix::zeros(40, 4);
+        let mut labels = Vec::new();
+        let mut rng = Xoshiro256pp::new(8);
+        for i in 0..40 {
+            let class = (i % 2) as u8;
+            for j in 0..4 {
+                let group = usize::from(j >= 2);
+                let base = if group == class as usize { 0.40 } else { 0.10 };
+                x.set(i, j, base + rng.uniform(-0.05, 0.05));
+            }
+            labels.push(class);
+        }
+        let ranges = ActivationRanges::calibrate(&mlp, &x);
+        let acc_of = |mode: RoundingMode| {
+            let mut total = 0.0;
+            for t in 0..10u64 {
+                let cfg = QuantInferenceConfig {
+                    bits: 1,
+                    mode,
+                    variant: Variant::PerPartial,
+                    seed: 50 + t,
+                };
+                total += quantized_accuracy(&mlp, &x, &labels, &ranges, &cfg);
+            }
+            total / 10.0
+        };
+        let dither = acc_of(RoundingMode::Dither);
+        let det = acc_of(RoundingMode::Deterministic);
+        assert!(
+            dither > det + 0.1,
+            "dither {dither} should beat deterministic {det} at k=1"
+        );
+    }
+
+    #[test]
+    fn calibration_shapes() {
+        let mut rng = Xoshiro256pp::new(4);
+        let mlp = Mlp::three_layer(6, 5, 4, 3, &mut rng);
+        let x = Matrix::from_fn(8, 6, |i, j| ((i + j) as f64 * 0.17).sin().abs());
+        let ranges = ActivationRanges::calibrate(&mlp, &x);
+        assert_eq!(ranges.per_layer.len(), 3);
+        assert_eq!(ranges.per_layer[0], (-1.0, 1.0));
+        for &(lo, hi) in &ranges.per_layer[1..] {
+            assert!(lo < 0.0 && hi > 0.0 && hi == -lo);
+        }
+    }
+
+    #[test]
+    fn deterministic_quantized_forward_is_reproducible() {
+        let (mlp, x, labels) = toy_problem();
+        let ranges = ActivationRanges::calibrate(&mlp, &x);
+        let cfg = QuantInferenceConfig {
+            bits: 4,
+            mode: RoundingMode::Dither,
+            variant: Variant::Separate,
+            seed: 9,
+        };
+        let a = quantized_accuracy(&mlp, &x, &labels, &ranges, &cfg);
+        let b = quantized_accuracy(&mlp, &x, &labels, &ranges, &cfg);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,56 @@
+//! Traditional round-to-nearest (§II-C's "deterministic rounding").
+//!
+//! `round(x) = ⌊x + 0.5⌋` — the paper's definition. Provably the minimal-
+//! EMSE rounding (§II-C) but biased: `E(round(α)) ≠ α` for non-half-integer
+//! fractional parts, which is what Figs 9–16 show hurting quantized
+//! inference at small k.
+
+/// Stateless round-to-nearest rounder.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeterministicRounder;
+
+impl DeterministicRounder {
+    /// Round a real to the nearest integer (half-up, per the paper).
+    #[inline]
+    pub fn round(&mut self, v: f64) -> i64 {
+        (v + 0.5).floor() as i64
+    }
+}
+
+/// Stateless deterministic-rounding bit: `1` iff `frac ≥ ½` (shared form
+/// with the matmul engines).
+#[inline]
+pub fn deterministic_bit(frac: f64) -> bool {
+    frac >= 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn half_up_rule() {
+        let mut r = DeterministicRounder;
+        assert_eq!(r.round(0.5), 1);
+        assert_eq!(r.round(1.5), 2);
+        assert_eq!(r.round(2.49), 2);
+        assert_eq!(r.round(-0.5), 0); // ⌊-0.5+0.5⌋ = 0
+        assert_eq!(r.round(-0.51), -1);
+    }
+
+    #[test]
+    fn integers_fixed() {
+        let mut r = DeterministicRounder;
+        for v in [-3i64, 0, 7, 100] {
+            assert_eq!(r.round(v as f64), v);
+        }
+    }
+
+    #[test]
+    fn bit_threshold() {
+        assert!(!deterministic_bit(0.49));
+        assert!(deterministic_bit(0.5));
+        assert!(deterministic_bit(0.99));
+        assert!(!deterministic_bit(0.0));
+    }
+}

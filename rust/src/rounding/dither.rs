@@ -1,0 +1,198 @@
+//! Dither rounding (§VII): stochastic rounding revisited with the dither
+//! computing representation driving the rounded bit.
+//!
+//! `d(α, i) = ⌊α⌋ + X_i` where `{X_i}` is the dither-computing
+//! representation (§II-D) of the fractional part `α − ⌊α⌋`, and the index
+//! `i = σ(i_s mod N)` advances with every rounding the rounder performs.
+//! Over any window of `N` roundings of the same value the deterministic part
+//! of the representation is reproduced *exactly*, so the time-averaged error
+//! falls as `Θ(1/N)` instead of stochastic rounding's `Θ(1/√N)`.
+
+use crate::bitstream::dither::DitherParams;
+use crate::util::rng::{counter_hash, u64_to_unit_f64, Xoshiro256pp};
+
+/// The dither-representation bit at (already permuted) position `pos`,
+/// with `u` a fresh uniform u64 supplying the stochastic residue.
+///
+/// This is the stateless core shared by the scalar rounder, the matmul
+/// engines and (structurally) the Pallas kernel.
+#[inline]
+pub fn dither_bit(params: &DitherParams, pos: usize, u: u64) -> bool {
+    if params.lower_branch {
+        // Deterministic 1s on the first n slots, Bernoulli(δ) elsewhere.
+        pos < params.n || u64_to_unit_f64(u) < params.delta
+    } else {
+        // Bernoulli(1-δ) on the first n slots, deterministic 0 elsewhere.
+        pos < params.n && u64_to_unit_f64(u) < 1.0 - params.delta
+    }
+}
+
+/// Stateful scalar dither rounder: tracks the application counter `i_s` and
+/// holds the fixed permutation σ (§VII: "we need to keep track of the index").
+#[derive(Clone, Debug)]
+pub struct DitherRounder {
+    /// Sequence length `N` (one full period covers the deterministic part).
+    pub n: usize,
+    sigma: Vec<usize>,
+    i_s: u64,
+    rng: Xoshiro256pp,
+    seed: u64,
+}
+
+impl DitherRounder {
+    /// New rounder with period `n` and a seeded random permutation σ.
+    pub fn new(n: usize, seed: u64) -> Self {
+        assert!(n >= 1, "dither period must be >= 1");
+        let mut rng = Xoshiro256pp::new(seed ^ 0xD17E);
+        let mut sigma: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut sigma);
+        Self {
+            n,
+            sigma,
+            i_s: 0,
+            rng,
+            seed,
+        }
+    }
+
+    /// New rounder with the identity permutation (useful in tests and in
+    /// contexts that already randomize the traversal order).
+    pub fn with_identity_sigma(n: usize, seed: u64) -> Self {
+        let mut r = Self::new(n, seed);
+        r.sigma = (0..n).collect();
+        r
+    }
+
+    /// Number of roundings performed so far.
+    pub fn count(&self) -> u64 {
+        self.i_s
+    }
+
+    /// Round a (possibly negative) real to an integer level.
+    pub fn round(&mut self, v: f64) -> i64 {
+        let fl = v.floor();
+        let frac = v - fl;
+        let params = DitherParams::of(frac, self.n);
+        let pos = self.sigma[(self.i_s % self.n as u64) as usize];
+        // Fresh stochastic residue per application, reproducible from
+        // (seed, i_s) — mirrors the Pallas kernel's counter PRNG.
+        let u = counter_hash(self.seed, self.i_s);
+        self.i_s += 1;
+        let bit = dither_bit(&params, pos, u);
+        fl as i64 + i64::from(bit)
+    }
+
+    /// Reset the application counter (start of a new period).
+    pub fn reset(&mut self) {
+        self.i_s = 0;
+    }
+
+    /// Re-randomize σ (e.g. between trials).
+    pub fn reshuffle(&mut self) {
+        let mut sigma: Vec<usize> = (0..self.n).collect();
+        self.rng.shuffle(&mut sigma);
+        self.sigma = sigma;
+        self.i_s = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_average_is_nearly_exact() {
+        // Rounding the same α for N consecutive applications reproduces the
+        // deterministic part exactly: |mean - α| ≤ δ-residue scale ~ 2/N.
+        for &alpha in &[3.14159, 0.731, 7.0, 0.08, 12.97] {
+            let n = 64;
+            let mut r = DitherRounder::new(n, 42);
+            let sum: i64 = (0..n).map(|_| r.round(alpha)).sum();
+            let mean = sum as f64 / n as f64;
+            assert!(
+                (mean - alpha).abs() <= 3.0 / n as f64 + 1e-9,
+                "alpha={alpha} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn unbiased_over_many_windows() {
+        let alpha = 2.3;
+        let n = 32;
+        let mut r = DitherRounder::new(n, 7);
+        let trials = 20_000;
+        let sum: i64 = (0..trials).map(|_| r.round(alpha)).sum();
+        let mean = sum as f64 / trials as f64;
+        assert!((mean - alpha).abs() < 5e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn output_is_floor_or_ceil() {
+        let mut r = DitherRounder::new(16, 3);
+        for i in 0..1000 {
+            let v = i as f64 * 0.137;
+            let out = r.round(v);
+            assert!(out == v.floor() as i64 || out == v.ceil() as i64, "v={v} out={out}");
+        }
+    }
+
+    #[test]
+    fn integers_round_exactly() {
+        let mut r = DitherRounder::new(16, 5);
+        for v in [0.0, 1.0, 5.0, 100.0, -3.0] {
+            assert_eq!(r.round(v), v as i64);
+        }
+    }
+
+    #[test]
+    fn negative_values_supported() {
+        // α < 0: floor/frac decomposition still yields an unbiased bit.
+        let alpha = -1.75;
+        let n = 32;
+        let mut r = DitherRounder::new(n, 9);
+        let trials = 20_000;
+        let sum: i64 = (0..trials).map(|_| r.round(alpha)).sum();
+        let mean = sum as f64 / trials as f64;
+        assert!((mean - alpha).abs() < 5e-3, "mean={mean}");
+        let out = r.round(alpha);
+        assert!(out == -2 || out == -1);
+    }
+
+    #[test]
+    fn variance_below_stochastic_rounding() {
+        // Sum of N ditherings of α has much lower variance than N
+        // independent stochastic roundings.
+        let alpha = 0.37;
+        let n = 64;
+        let mut dither_sums = Vec::new();
+        for t in 0..500 {
+            let mut r = DitherRounder::new(n, 1000 + t);
+            let s: i64 = (0..n).map(|_| r.round(alpha)).sum();
+            dither_sums.push(s as f64 / n as f64);
+        }
+        let mut w = crate::util::stats::Welford::new();
+        for &s in &dither_sums {
+            w.push(s);
+        }
+        // Stochastic rounding variance of the mean: p(1-p)/N ≈ 0.0036.
+        let stochastic_var = alpha * (1.0 - alpha) / n as f64;
+        assert!(
+            w.variance() < stochastic_var / 5.0,
+            "dither window var {} vs stochastic {}",
+            w.variance(),
+            stochastic_var
+        );
+    }
+
+    #[test]
+    fn reset_and_reshuffle() {
+        let mut r = DitherRounder::new(8, 1);
+        let _ = r.round(0.5);
+        assert_eq!(r.count(), 1);
+        r.reset();
+        assert_eq!(r.count(), 0);
+        r.reshuffle();
+        assert_eq!(r.count(), 0);
+    }
+}

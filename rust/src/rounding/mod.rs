@@ -1,0 +1,180 @@
+//! Rounding schemes for reduced-precision arithmetic (§II-C, §VII).
+//!
+//! Three ways to map a real level `α` to an integer level:
+//!
+//! * [`RoundingMode::Deterministic`] — `round(α)`; lowest per-application
+//!   EMSE (§II-C proves it minimal) but *biased*, which degrades iterated /
+//!   correlated computations and wastes quantizer levels on narrow data.
+//! * [`RoundingMode::Stochastic`] — `⌊α⌋ + Bernoulli(frac)`; unbiased,
+//!   `Θ(1/√N)` time-averaged error.
+//! * [`RoundingMode::Dither`] — the paper's scheme: the rounded bit follows
+//!   the dither-computing representation of `frac`, indexed by an
+//!   application counter; unbiased with `Θ(1/N)` time-averaged error.
+//!
+//! [`ScalarRounder`] is the stateful uniform front-end; the stateless
+//! `*_bit` functions are reused by the matmul engines and mirrored by the
+//! Pallas kernel.
+
+pub mod deterministic;
+pub mod dither;
+pub mod quantizer;
+pub mod stochastic;
+
+pub use deterministic::{deterministic_bit, DeterministicRounder};
+pub use dither::{dither_bit, DitherRounder};
+pub use quantizer::Quantizer;
+pub use stochastic::{stochastic_bit, StochasticRounder};
+
+/// Which rounding scheme to apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RoundingMode {
+    /// Traditional round-to-nearest.
+    Deterministic,
+    /// Stochastic rounding.
+    Stochastic,
+    /// Dither rounding (§VII).
+    Dither,
+}
+
+impl RoundingMode {
+    /// All modes in the paper's comparison order.
+    pub const ALL: [RoundingMode; 3] = [
+        RoundingMode::Deterministic,
+        RoundingMode::Dither,
+        RoundingMode::Stochastic,
+    ];
+
+    /// Display name matching the paper's figure legends.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoundingMode::Deterministic => "deterministic",
+            RoundingMode::Stochastic => "stochastic",
+            RoundingMode::Dither => "dither",
+        }
+    }
+
+    /// Parse from CLI spelling.
+    pub fn from_str(s: &str) -> Option<RoundingMode> {
+        match s {
+            "deterministic" | "det" | "traditional" => Some(RoundingMode::Deterministic),
+            "stochastic" | "sr" => Some(RoundingMode::Stochastic),
+            "dither" => Some(RoundingMode::Dither),
+            _ => None,
+        }
+    }
+}
+
+/// Uniform stateful scalar rounder over the three modes.
+#[derive(Clone, Debug)]
+pub enum ScalarRounder {
+    /// Round-to-nearest (stateless).
+    Deterministic(DeterministicRounder),
+    /// Stochastic rounding with a counter-seeded PRNG.
+    Stochastic(StochasticRounder),
+    /// Dither rounding with period `n` and permutation σ.
+    Dither(DitherRounder),
+}
+
+impl ScalarRounder {
+    /// Build a rounder. `n` is the dither period (ignored by the others).
+    pub fn new(mode: RoundingMode, n: usize, seed: u64) -> Self {
+        match mode {
+            RoundingMode::Deterministic => ScalarRounder::Deterministic(DeterministicRounder),
+            RoundingMode::Stochastic => ScalarRounder::Stochastic(StochasticRounder::new(seed)),
+            RoundingMode::Dither => ScalarRounder::Dither(DitherRounder::new(n, seed)),
+        }
+    }
+
+    /// Round a real to an integer level under this scheme.
+    #[inline]
+    pub fn round(&mut self, v: f64) -> i64 {
+        match self {
+            ScalarRounder::Deterministic(r) => r.round(v),
+            ScalarRounder::Stochastic(r) => r.round(v),
+            ScalarRounder::Dither(r) => r.round(v),
+        }
+    }
+
+    /// The mode this rounder implements.
+    pub fn mode(&self) -> RoundingMode {
+        match self {
+            ScalarRounder::Deterministic(_) => RoundingMode::Deterministic,
+            ScalarRounder::Stochastic(_) => RoundingMode::Stochastic,
+            ScalarRounder::Dither(_) => RoundingMode::Dither,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(
+            RoundingMode::from_str("traditional"),
+            Some(RoundingMode::Deterministic)
+        );
+        assert_eq!(RoundingMode::from_str("sr"), Some(RoundingMode::Stochastic));
+        assert_eq!(RoundingMode::from_str("dither"), Some(RoundingMode::Dither));
+        assert_eq!(RoundingMode::from_str("x"), None);
+    }
+
+    #[test]
+    fn all_rounders_hit_adjacent_integers() {
+        for mode in RoundingMode::ALL {
+            let mut r = ScalarRounder::new(mode, 16, 3);
+            for i in 0..200 {
+                let v = i as f64 * 0.173 - 5.0;
+                let out = r.round(v);
+                assert!(
+                    out == v.floor() as i64 || out == v.ceil() as i64,
+                    "{mode:?} v={v} out={out}"
+                );
+                assert_eq!(r.mode(), mode);
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased_modes_vs_biased_mode() {
+        // At α = 0.3 deterministic rounding is biased by -0.3; the unbiased
+        // schemes' means converge to α.
+        let alpha = 0.3;
+        for mode in RoundingMode::ALL {
+            let mut r = ScalarRounder::new(mode, 32, 5);
+            let mut w = Welford::new();
+            for _ in 0..20_000 {
+                w.push(r.round(alpha) as f64);
+            }
+            match mode {
+                RoundingMode::Deterministic => assert_eq!(w.mean(), 0.0),
+                _ => assert!((w.mean() - alpha).abs() < 0.01, "{mode:?} {}", w.mean()),
+            }
+        }
+    }
+
+    #[test]
+    fn dither_time_average_converges_fastest() {
+        // Error of the running mean after exactly one period N.
+        let alpha = 0.45;
+        let n = 64;
+        let mut dither = ScalarRounder::new(RoundingMode::Dither, n, 9);
+        let dither_mean: f64 =
+            (0..n).map(|_| dither.round(alpha) as f64).sum::<f64>() / n as f64;
+        // Repeat stochastic over many windows to estimate its typical error.
+        let mut sto_errs = Welford::new();
+        for t in 0..200 {
+            let mut s = ScalarRounder::new(RoundingMode::Stochastic, n, 100 + t);
+            let m: f64 = (0..n).map(|_| s.round(alpha) as f64).sum::<f64>() / n as f64;
+            sto_errs.push((m - alpha).abs());
+        }
+        assert!(
+            (dither_mean - alpha).abs() < sto_errs.mean(),
+            "dither window err {} vs stochastic mean err {}",
+            (dither_mean - alpha).abs(),
+            sto_errs.mean()
+        );
+    }
+}

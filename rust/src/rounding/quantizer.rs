@@ -1,0 +1,143 @@
+//! The k-bit fixed-point quantizer of §VII.
+//!
+//! `q(x) = round(x)` for `x ∈ [0, 2^k − 1]`, with underflow clamped to 0 and
+//! overflow clamped to `2^k − 1`. Real inputs are affinely rescaled from
+//! their source range into the quantizer's level range and (for error
+//! measurement) dequantized back.
+
+/// A k-bit quantizer over the level range `[0, 2^k − 1]` with an affine
+/// mapping from a source interval `[lo, hi]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    /// Bit width `k ≥ 1`.
+    pub bits: u32,
+    /// Source-range lower bound.
+    pub lo: f64,
+    /// Source-range upper bound (must exceed `lo`).
+    pub hi: f64,
+}
+
+impl Quantizer {
+    /// Quantizer for values already in `[0, 1]` (the Fig 8 setting).
+    pub fn unit(bits: u32) -> Self {
+        Self::new(bits, 0.0, 1.0)
+    }
+
+    /// Quantizer with an explicit source range (e.g. `[-1, 1]` weights, §VII).
+    pub fn new(bits: u32, lo: f64, hi: f64) -> Self {
+        assert!(bits >= 1 && bits <= 32, "bit width must be in 1..=32");
+        assert!(hi > lo, "source range must be non-degenerate");
+        Self { bits, lo, hi }
+    }
+
+    /// Highest level: `2^k − 1`.
+    #[inline]
+    pub fn max_level(&self) -> u32 {
+        if self.bits >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.bits) - 1
+        }
+    }
+
+    /// Rescale a source value into level space `[0, 2^k − 1]` (unclamped,
+    /// unrounded — the rounding schemes operate on this).
+    #[inline]
+    pub fn scale(&self, v: f64) -> f64 {
+        (v - self.lo) / (self.hi - self.lo) * self.max_level() as f64
+    }
+
+    /// Clamp an integer-valued level into `[0, 2^k − 1]` (the paper's
+    /// underflow/overflow rule).
+    #[inline]
+    pub fn clamp_level(&self, level: i64) -> u32 {
+        level.clamp(0, self.max_level() as i64) as u32
+    }
+
+    /// Map a level back to source space.
+    #[inline]
+    pub fn dequant(&self, level: u32) -> f64 {
+        self.lo + level as f64 / self.max_level() as f64 * (self.hi - self.lo)
+    }
+
+    /// Traditional (deterministic) quantization end-to-end:
+    /// scale → round → clamp.
+    #[inline]
+    pub fn quantize_round(&self, v: f64) -> u32 {
+        // round(x) = floor(x + 0.5), the paper's definition.
+        self.clamp_level((self.scale(v) + 0.5).floor() as i64)
+    }
+
+    /// Quantization step in source units.
+    #[inline]
+    pub fn step(&self) -> f64 {
+        (self.hi - self.lo) / self.max_level() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_range_k8() {
+        let q = Quantizer::unit(8);
+        assert_eq!(q.max_level(), 255);
+        assert_eq!(q.quantize_round(0.0), 0);
+        assert_eq!(q.quantize_round(1.0), 255);
+        assert_eq!(q.quantize_round(0.5), 128); // 127.5 rounds half-up
+        assert!((q.dequant(255) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamping_under_and_overflow() {
+        let q = Quantizer::unit(4);
+        assert_eq!(q.quantize_round(-0.3), 0);
+        assert_eq!(q.quantize_round(1.7), 15);
+        assert_eq!(q.clamp_level(-5), 0);
+        assert_eq!(q.clamp_level(99), 15);
+    }
+
+    #[test]
+    fn signed_range_weights() {
+        let q = Quantizer::new(8, -1.0, 1.0);
+        assert_eq!(q.quantize_round(-1.0), 0);
+        assert_eq!(q.quantize_round(1.0), 255);
+        let mid = q.quantize_round(0.0);
+        assert!((127..=128).contains(&mid));
+        // dequant(quantize(v)) within one step.
+        for i in 0..100 {
+            let v = -1.0 + 2.0 * i as f64 / 99.0;
+            let err = (q.dequant(q.quantize_round(v)) - v).abs();
+            assert!(err <= q.step() / 2.0 + 1e-12, "v={v} err={err}");
+        }
+    }
+
+    #[test]
+    fn k1_collapses_half_range_to_zero() {
+        // §VII: with k=1 and inputs in [0, 1/2), traditional rounding sends
+        // everything to level 0 (all information lost).
+        let q = Quantizer::unit(1);
+        assert_eq!(q.max_level(), 1);
+        for i in 0..50 {
+            let v = 0.4999 * i as f64 / 49.0;
+            assert_eq!(q.quantize_round(v), 0, "v={v}");
+        }
+        assert_eq!(q.quantize_round(0.51), 1);
+    }
+
+    #[test]
+    fn scale_dequant_inverse() {
+        let q = Quantizer::new(6, 2.0, 10.0);
+        for lvl in 0..=q.max_level() {
+            let v = q.dequant(lvl);
+            assert!((q.scale(v) - lvl as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bit width")]
+    fn zero_bits_rejected() {
+        let _ = Quantizer::unit(0);
+    }
+}

@@ -1,0 +1,185 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many times.
+
+use crate::linalg::Matrix;
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A PJRT CPU client plus a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedModel>>>,
+}
+
+/// A compiled model artifact ready to execute.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// The artifact's manifest entry.
+    pub meta: ArtifactMeta,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest from `dir`.
+    pub fn cpu(artifacts_dir: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The manifest describing available artifacts.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) an artifact by logical name, memoized.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedModel>> {
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let meta = self.manifest.find(name)?.clone();
+        let path = self.manifest.dir.join(&meta.file);
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let model = std::sync::Arc::new(LoadedModel { exe, meta });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+
+    /// Pick the smallest batch artifact in `family` that fits `batch` rows
+    /// (or the largest available if none fit).
+    pub fn pick_batch_artifact(&self, family: &str, batch: usize) -> Result<String> {
+        let fam = self.manifest.family(family);
+        if fam.is_empty() {
+            bail!("no artifacts for model family {family:?}");
+        }
+        let best = fam
+            .iter()
+            .find(|a| a.batch >= batch)
+            .or_else(|| fam.last())
+            .unwrap();
+        Ok(best.name.clone())
+    }
+}
+
+impl LoadedModel {
+    /// Execute with the given input literals; returns the first output of
+    /// the result tuple (our models return a 1-tuple).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.meta.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(out.to_tuple1()?)
+    }
+
+    /// Execute and read the output back as `(rows, cols, data)` of f32.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<(usize, usize, Vec<f32>)> {
+        let lit = self.run(inputs)?;
+        let shape = lit.array_shape()?;
+        let dims = shape.dims();
+        let data = lit.to_vec::<f32>()?;
+        let (rows, cols) = match dims.len() {
+            2 => (dims[0] as usize, dims[1] as usize),
+            1 => (1, dims[0] as usize),
+            _ => bail!("unexpected output rank {} for {}", dims.len(), self.meta.name),
+        };
+        Ok((rows, cols, data))
+    }
+}
+
+/// Build an f32 literal of shape `rows × cols` from an f64 matrix.
+pub fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+    let data: Vec<f32> = m.data().iter().map(|&v| v as f32).collect();
+    Ok(xla::Literal::vec1(&data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// Build an f32 literal from a batch slice of rows (padding with zeros up
+/// to `batch` rows, which the caller must discard from the output).
+pub fn padded_batch_literal(rows: &[&[f64]], cols: usize, batch: usize) -> Result<xla::Literal> {
+    let mut data = vec![0.0f32; batch * cols];
+    for (i, row) in rows.iter().enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            data[i * cols + j] = v as f32;
+        }
+    }
+    Ok(xla::Literal::vec1(&data).reshape(&[batch as i64, cols as i64])?)
+}
+
+/// Build an f32 vector literal.
+pub fn vec_literal(v: &[f64]) -> xla::Literal {
+    let data: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&data)
+}
+
+/// i32 scalar literal.
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// u32 scalar literal.
+pub fn u32_scalar(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// f32 scalar literal.
+pub fn f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_literal_roundtrip() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        let lit = matrix_literal(&m).unwrap();
+        let back = lit.to_vec::<f32>().unwrap();
+        assert_eq!(back.len(), 12);
+        assert_eq!(back[5], 5.0);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3, 4]);
+    }
+
+    #[test]
+    fn padded_batch_pads_with_zeros() {
+        let r0 = [1.0, 2.0];
+        let r1 = [3.0, 4.0];
+        let rows: Vec<&[f64]> = vec![&r0, &r1];
+        let lit = padded_batch_literal(&rows, 2, 4).unwrap();
+        let v = lit.to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        assert_eq!(i32_scalar(7).to_vec::<i32>().unwrap(), vec![7]);
+        assert_eq!(u32_scalar(9).to_vec::<u32>().unwrap(), vec![9]);
+        assert_eq!(f32_scalar(1.5).to_vec::<f32>().unwrap(), vec![1.5]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Artifact manifest: what `python/compile/aot.py` produced and how to
+//! feed it. Parsed with the in-tree JSON module and validated at load time
+//! so a stale `artifacts/` directory fails fast with a clear message.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Logical name, e.g. `digits_linear_b32`.
+    pub name: String,
+    /// HLO text file name within the artifacts directory.
+    pub file: String,
+    /// Batch size the executable was lowered for.
+    pub batch: usize,
+    /// Human-readable input signature (order matters).
+    pub inputs: Vec<String>,
+    /// Human-readable output signature.
+    pub outputs: Vec<String>,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// Dither period `N` baked into the kernels.
+    pub dither_n: usize,
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let json = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let format = json
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing 'format'"))?;
+        if format != "hlo-text" {
+            bail!("unsupported artifact format {format:?} (expected hlo-text)");
+        }
+        let dither_n = json
+            .get("dither_n")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing 'dither_n'"))?;
+        let raw = json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(raw.len());
+        for a in raw {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))?
+                    .to_string())
+            };
+            let strings = |k: &str| -> Vec<String> {
+                a.get(k)
+                    .and_then(Json::as_arr)
+                    .map(|v| {
+                        v.iter()
+                            .filter_map(Json::as_str)
+                            .map(str::to_string)
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                batch: a
+                    .get("batch")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact missing 'batch'"))?,
+                inputs: strings("inputs"),
+                outputs: strings("outputs"),
+            });
+        }
+        Ok(Manifest {
+            dir,
+            dither_n,
+            artifacts,
+        })
+    }
+
+    /// Find an artifact by logical name.
+    pub fn find(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact {name:?} not in manifest (have: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// All artifacts for a model family, e.g. `digits_linear`, keyed by
+    /// batch size.
+    pub fn family(&self, prefix: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.name
+                    .strip_prefix(prefix)
+                    .map(|rest| rest.starts_with("_b"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        v.sort_by_key(|a| a.batch);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text",
+        "dither_n": 64,
+        "artifacts": [
+            {"name": "digits_linear_b1", "file": "digits_linear_b1.hlo.txt",
+             "batch": 1, "inputs": ["x(1,784)f32"], "outputs": ["logits(1,10)f32"]},
+            {"name": "digits_linear_b32", "file": "digits_linear_b32.hlo.txt",
+             "batch": 32, "inputs": ["x(32,784)f32"], "outputs": ["logits(32,10)f32"]},
+            {"name": "fashion_mlp_b1", "file": "fashion_mlp_b1.hlo.txt",
+             "batch": 1, "inputs": ["x(1,784)f32"], "outputs": ["logits(1,10)f32"]}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_find() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.dither_n, 64);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.find("digits_linear_b32").unwrap().batch, 32);
+        assert!(m.find("nope").is_err());
+    }
+
+    #[test]
+    fn family_sorted_by_batch() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let fam = m.family("digits_linear");
+        assert_eq!(fam.len(), 2);
+        assert_eq!(fam[0].batch, 1);
+        assert_eq!(fam[1].batch, 32);
+        // prefix must match the family boundary, not a substring.
+        assert_eq!(m.family("digits").len(), 0);
+        assert_eq!(m.family("fashion_mlp").len(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("hlo-text", "protobuf");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+        assert!(Manifest::parse("{}", PathBuf::from("/tmp")).is_err());
+        assert!(Manifest::parse("not json", PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime bridge: load the AOT-compiled JAX/Pallas artifacts and run
+//! them from the Rust hot path.
+//!
+//! Python runs exactly once (`make artifacts`); afterwards this module is
+//! the only place the model executes: HLO text → `HloModuleProto` →
+//! `PjRtClient::compile` → `execute`. One compiled executable per
+//! (model, batch-size) artifact.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{LoadedModel, Runtime};
+pub use manifest::{ArtifactMeta, Manifest};

@@ -1,0 +1,8 @@
+//! Model training: a pure-Rust SGD trainer plus the "model zoo" helpers
+//! that produce (and cache) the trained networks the experiments quantize.
+
+pub mod sgd;
+pub mod zoo;
+
+pub use sgd::{train, EpochStats, TrainConfig};
+pub use zoo::{trained_model, ModelSpec};

@@ -1,0 +1,134 @@
+//! Model zoo: the two evaluation networks, trained on demand and cached
+//! under `artifacts/weights/` so experiments and the server start fast.
+
+use crate::data::{Dataset, Task};
+use crate::nn::Mlp;
+use crate::train::sgd::{train, TrainConfig};
+use crate::util::rng::Xoshiro256pp;
+
+/// Which evaluation model to produce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelSpec {
+    /// 1-layer 784→10 softmax classifier on the digits task (§VII).
+    DigitsLinear,
+    /// 3-layer ReLU MLP (784→128→64→10) on the fashion task (§VIII).
+    FashionMlp,
+}
+
+impl ModelSpec {
+    /// Cache file path.
+    pub fn weights_path(&self) -> &'static str {
+        match self {
+            ModelSpec::DigitsLinear => "artifacts/weights/digits_linear.bin",
+            ModelSpec::FashionMlp => "artifacts/weights/fashion_mlp.bin",
+        }
+    }
+
+    /// Task the model is trained on.
+    pub fn task(&self) -> Task {
+        match self {
+            ModelSpec::DigitsLinear => Task::Digits,
+            ModelSpec::FashionMlp => Task::Fashion,
+        }
+    }
+
+    /// Fresh untrained network.
+    pub fn build(&self, rng: &mut Xoshiro256pp) -> Mlp {
+        match self {
+            ModelSpec::DigitsLinear => Mlp::single_layer(784, 10, rng),
+            ModelSpec::FashionMlp => Mlp::three_layer(784, 128, 64, 10, rng),
+        }
+    }
+
+    /// Training configuration used by the zoo.
+    pub fn train_config(&self) -> TrainConfig {
+        match self {
+            ModelSpec::DigitsLinear => TrainConfig {
+                epochs: 12,
+                batch_size: 64,
+                lr: 0.15,
+                momentum: 0.9,
+                seed: 0xD161,
+                verbose: false,
+            },
+            ModelSpec::FashionMlp => TrainConfig {
+                epochs: 16,
+                batch_size: 64,
+                lr: 0.08,
+                momentum: 0.9,
+                seed: 0xFA51,
+                verbose: false,
+            },
+        }
+    }
+}
+
+/// Load the cached trained model, or train it now (then cache).
+///
+/// The returned model has weights normalized to `[-1, 1]` (the paper's
+/// precondition for the §VII quantizer). Returns `(model, test set,
+/// float test accuracy)`.
+pub fn trained_model(
+    spec: ModelSpec,
+    train_n: usize,
+    test_n: usize,
+    seed: u64,
+) -> (Mlp, Dataset, f64) {
+    let (train_set, test_set, _source) =
+        Dataset::load_or_synthesize(spec.task(), train_n, test_n, seed);
+    let path = spec.weights_path();
+    let mlp = match Mlp::load(path) {
+        Ok(m) if shapes_match(&m, spec) => m,
+        _ => {
+            let mut rng = Xoshiro256pp::new(seed ^ 0x200);
+            let mut m = spec.build(&mut rng);
+            train(&mut m, &train_set, &spec.train_config());
+            m.normalize_weights();
+            if let Err(e) = m.save(path) {
+                eprintln!("warning: could not cache weights at {path}: {e}");
+            }
+            m
+        }
+    };
+    let acc = mlp.accuracy(&test_set.images, &test_set.labels);
+    (mlp, test_set, acc)
+}
+
+fn shapes_match(m: &Mlp, spec: ModelSpec) -> bool {
+    let dims: Vec<(usize, usize)> = m
+        .layers
+        .iter()
+        .map(|l| (l.in_dim(), l.out_dim()))
+        .collect();
+    match spec {
+        ModelSpec::DigitsLinear => dims == vec![(784, 10)],
+        ModelSpec::FashionMlp => dims == vec![(784, 128), (128, 64), (64, 10)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_build_expected_shapes() {
+        let mut rng = Xoshiro256pp::new(1);
+        let lin = ModelSpec::DigitsLinear.build(&mut rng);
+        assert_eq!(lin.layers.len(), 1);
+        assert_eq!(lin.layers[0].in_dim(), 784);
+        let mlp = ModelSpec::FashionMlp.build(&mut rng);
+        assert_eq!(mlp.layers.len(), 3);
+        assert!(mlp.layers[0].relu && mlp.layers[1].relu && !mlp.layers[2].relu);
+        assert!(shapes_match(&lin, ModelSpec::DigitsLinear));
+        assert!(shapes_match(&mlp, ModelSpec::FashionMlp));
+        assert!(!shapes_match(&lin, ModelSpec::FashionMlp));
+    }
+
+    #[test]
+    fn paths_are_distinct() {
+        assert_ne!(
+            ModelSpec::DigitsLinear.weights_path(),
+            ModelSpec::FashionMlp.weights_path()
+        );
+    }
+}

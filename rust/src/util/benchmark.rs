@@ -1,0 +1,232 @@
+//! Micro/meso benchmark harness (no `criterion` in the offline crate set).
+//!
+//! `cargo bench` targets in `rust/benches/` use [`Bench`] with
+//! `harness = false`. The harness does warmup, adaptive iteration-count
+//! calibration, wall-clock sampling, and reports median / mean / p95 plus an
+//! optional throughput line. Results can be dumped as JSON for the perf log.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark's measured result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark id, e.g. `bitstream/encode_dither/N=1024`.
+    pub name: String,
+    /// Seconds per iteration, summarized over samples.
+    pub per_iter: Summary,
+    /// Items processed per iteration (for throughput), if declared.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Items/second based on median time (None without a throughput decl).
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.per_iter.median)
+    }
+
+    /// Render as a JSON object (used by `EXPERIMENTS.md §Perf` tooling).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("median_s", Json::Num(self.per_iter.median)),
+            ("mean_s", Json::Num(self.per_iter.mean)),
+            ("p95_s", Json::Num(self.per_iter.p95)),
+            ("samples", Json::Num(self.per_iter.count as f64)),
+        ];
+        if let Some(tp) = self.throughput() {
+            pairs.push(("items_per_s", Json::Num(tp)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Benchmark runner configuration + collected results.
+pub struct Bench {
+    /// Target time per measured sample batch.
+    pub sample_target_s: f64,
+    /// Number of samples per benchmark.
+    pub samples: usize,
+    /// Warmup duration.
+    pub warmup_s: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    /// Harness with defaults tuned for sub-second benches.
+    /// `DITHER_BENCH_FAST=1` shrinks everything for smoke runs.
+    pub fn new() -> Self {
+        let fast = std::env::var("DITHER_BENCH_FAST").is_ok();
+        Self {
+            sample_target_s: if fast { 0.01 } else { 0.05 },
+            samples: if fast { 5 } else { 15 },
+            warmup_s: if fast { 0.02 } else { 0.2 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark. `f` is the operation under test; its return value
+    /// is black-boxed to keep the optimizer honest.
+    pub fn bench<R, F: FnMut() -> R>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_with_items(name, None, f)
+    }
+
+    /// Run one benchmark declaring `items` processed per call (throughput).
+    pub fn bench_items<R, F: FnMut() -> R>(
+        &mut self,
+        name: &str,
+        items: f64,
+        f: F,
+    ) -> &BenchResult {
+        self.bench_with_items(name, Some(items), f)
+    }
+
+    fn bench_with_items<R, F: FnMut() -> R>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        mut f: F,
+    ) -> &BenchResult {
+        // Warmup + calibration: find iters/sample such that one sample batch
+        // takes ~sample_target_s.
+        let warmup_start = Instant::now();
+        let mut iters_per_sample = 1u64;
+        let mut one = 0.0;
+        while warmup_start.elapsed().as_secs_f64() < self.warmup_s {
+            let t = Instant::now();
+            black_box(f());
+            one = t.elapsed().as_secs_f64().max(1e-9);
+        }
+        if one > 0.0 {
+            iters_per_sample = ((self.sample_target_s / one).ceil() as u64).clamp(1, 1_000_000);
+        }
+
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            per_iter.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            per_iter: Summary::of(&per_iter),
+            items_per_iter: items,
+        };
+        print_result(&result);
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Dump all results as a JSON array string.
+    pub fn to_json(&self) -> String {
+        Json::Arr(self.results.iter().map(|r| r.to_json()).collect()).to_string()
+    }
+
+    /// Write results JSON to `path` (creating parent dirs).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let med = format_time(r.per_iter.median);
+    let p95 = format_time(r.per_iter.p95);
+    match r.throughput() {
+        Some(tp) => println!(
+            "{:<56} median {:>10}  p95 {:>10}  {:>12}/s",
+            r.name,
+            med,
+            p95,
+            format_count(tp)
+        ),
+        None => println!("{:<56} median {:>10}  p95 {:>10}", r.name, med, p95),
+    }
+}
+
+/// Human-readable seconds.
+pub fn format_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Human-readable count (K/M/G).
+pub fn format_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} K", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Opaque value sink — prevents the optimizer from deleting the benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        std::env::set_var("DITHER_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let r = b
+            .bench_items("test/sum", 1000.0, || (0..1000u64).sum::<u64>())
+            .clone();
+        assert!(r.per_iter.median > 0.0);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_output_parses() {
+        std::env::set_var("DITHER_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.bench("a", || 1 + 1);
+        b.bench_items("b", 5.0, || 2 + 2);
+        let parsed = crate::util::json::Json::parse(&b.to_json()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert!(arr[1].get("items_per_s").is_some());
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(format_time(2.5e-9).contains("ns"));
+        assert!(format_time(2.5e-5).contains("µs"));
+        assert!(format_time(2.5e-2).contains("ms"));
+        assert!(format_time(2.5).contains(" s"));
+        assert_eq!(format_count(1.5e9), "1.50 G");
+        assert_eq!(format_count(2.0e3), "2.00 K");
+    }
+}

@@ -1,0 +1,150 @@
+//! Tiny command-line argument parser (no `clap` in the offline crate set).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` style used by the `dither` binary and the examples.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positional args, and `--key value` opts.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (e.g. `experiment`).
+    pub command: Option<String>,
+    /// Remaining non-flag tokens.
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` options; boolean flags map to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token must NOT be argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    args.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else {
+                    // `--flag value` unless the next token is another flag.
+                    let is_value_next = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if is_value_next {
+                        args.options
+                            .insert(stripped.to_string(), it.next().unwrap());
+                    } else {
+                        args.options.insert(stripped.to_string(), "true".to_string());
+                    }
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Raw option lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag: present (and not "false") → true.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some(v) if v != "false")
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Parse an option as T, with default. Panics with a clear message on a
+    /// malformed value (CLI surface; fail fast is the right behaviour).
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse::<T>()
+                .unwrap_or_else(|_| panic!("invalid value for --{key}: {v:?}")),
+        }
+    }
+
+    /// Comma-separated list of T (e.g. `--ns 4,8,16`). Default on absence.
+    pub fn parse_list_or<T: std::str::FromStr>(&self, key: &str, default: Vec<T>) -> Vec<T> {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .unwrap_or_else(|_| panic!("invalid list item for --{key}: {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("experiment fig1 extra");
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig1", "extra"]);
+    }
+
+    #[test]
+    fn flag_styles() {
+        let a = parse("serve --port 9000 --threads=4 --verbose");
+        assert_eq!(a.parse_or("port", 0u16), 9000);
+        assert_eq!(a.parse_or("threads", 1usize), 4);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse("run --fast --n 8");
+        assert!(a.flag("fast"));
+        assert_eq!(a.parse_or("n", 0u32), 8);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.parse_or("n", 128usize), 128);
+        assert_eq!(a.str_or("mode", "dither"), "dither");
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("x --ns 4,8,16");
+        assert_eq!(a.parse_list_or("ns", vec![0usize]), vec![4, 8, 16]);
+        assert_eq!(a.parse_list_or("ks", vec![1u32, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn malformed_value_panics() {
+        let a = parse("x --n abc");
+        let _ = a.parse_or("n", 0usize);
+    }
+}

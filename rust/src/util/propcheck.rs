@@ -1,0 +1,242 @@
+//! Mini property-based-testing framework (no `proptest` in the offline set).
+//!
+//! [`check`] drives a property over many random cases generated from a
+//! deterministic PRNG, and on failure performs simple shrinking by retrying
+//! the property on "smaller" versions of the failing case supplied by the
+//! generator's [`Gen::shrink`]. Used by the `property_*.rs` integration tests
+//! on the coordinator-invariant and encoding-invariant properties.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// A random-case generator with optional shrinking.
+pub trait Gen {
+    /// The generated case type.
+    type Item: std::fmt::Debug + Clone;
+    /// Produce one random case.
+    fn gen(&self, rng: &mut Xoshiro256pp) -> Self::Item;
+    /// Candidate smaller cases (best-effort; empty = no shrinking).
+    fn shrink(&self, _item: &Self::Item) -> Vec<Self::Item> {
+        Vec::new()
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Seed for the case stream.
+    pub seed: u64,
+    /// Max shrink iterations after a failure.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 256,
+            seed: 0xD17E8_C0FFEE,
+            max_shrink: 200,
+        }
+    }
+}
+
+/// Check `prop` over random cases from `gen`; panics with the (shrunken)
+/// counterexample on failure.
+pub fn check<G: Gen>(gen: &G, prop: impl Fn(&G::Item) -> bool) {
+    check_with(Config::default(), gen, prop)
+}
+
+/// [`check`] with explicit configuration.
+pub fn check_with<G: Gen>(cfg: Config, gen: &G, prop: impl Fn(&G::Item) -> bool) {
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case = gen.gen(&mut rng);
+        if prop(&case) {
+            continue;
+        }
+        // Shrink: repeatedly take the first failing smaller candidate.
+        let mut worst = case;
+        let mut budget = cfg.max_shrink;
+        'outer: while budget > 0 {
+            for cand in gen.shrink(&worst) {
+                budget -= 1;
+                if !prop(&cand) {
+                    worst = cand;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed at case {case_idx} (seed {:#x})\ncounterexample: {worst:#?}",
+            cfg.seed
+        );
+    }
+}
+
+/// Generator for f64 uniform in [lo, hi); shrinks toward lo and midpoints.
+pub struct UnitF64 {
+    /// Inclusive lower bound.
+    pub lo: f64,
+    /// Exclusive upper bound.
+    pub hi: f64,
+}
+
+impl UnitF64 {
+    /// The unit interval [0,1).
+    pub fn unit() -> Self {
+        Self { lo: 0.0, hi: 1.0 }
+    }
+}
+
+impl Gen for UnitF64 {
+    type Item = f64;
+    fn gen(&self, rng: &mut Xoshiro256pp) -> f64 {
+        rng.uniform(self.lo, self.hi)
+    }
+    fn shrink(&self, &x: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if x != self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (x - self.lo) / 2.0);
+        }
+        out
+    }
+}
+
+/// Generator for usize in [lo, hi]; shrinks toward lo by halving.
+pub struct RangeUsize {
+    /// Inclusive lower bound.
+    pub lo: usize,
+    /// Inclusive upper bound.
+    pub hi: usize,
+}
+
+impl Gen for RangeUsize {
+    type Item = usize;
+    fn gen(&self, rng: &mut Xoshiro256pp) -> usize {
+        self.lo + rng.below((self.hi - self.lo + 1) as u64) as usize
+    }
+    fn shrink(&self, &n: &usize) -> Vec<usize> {
+        // Graded candidates from far (lo) to near (n-1): the check loop takes
+        // the first *failing* candidate, so this bisects toward the boundary.
+        let mut out = Vec::new();
+        if n > self.lo {
+            out.push(self.lo);
+            let mut delta = (n - self.lo) / 2;
+            while delta > 0 {
+                out.push(n - delta);
+                delta /= 2;
+            }
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Pair two generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Item = (A::Item, B::Item);
+    fn gen(&self, rng: &mut Xoshiro256pp) -> Self::Item {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+    fn shrink(&self, (a, b): &Self::Item) -> Vec<Self::Item> {
+        let mut out: Vec<Self::Item> = self
+            .0
+            .shrink(a)
+            .into_iter()
+            .map(|a2| (a2, b.clone()))
+            .collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+/// Vector of cases from an element generator, length in [min_len, max_len].
+pub struct VecOf<G> {
+    /// Element generator.
+    pub elem: G,
+    /// Minimum length.
+    pub min_len: usize,
+    /// Maximum length.
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Item = Vec<G::Item>;
+    fn gen(&self, rng: &mut Xoshiro256pp) -> Self::Item {
+        let len = self.min_len + rng.below((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..len).map(|_| self.elem.gen(rng)).collect()
+    }
+    fn shrink(&self, item: &Self::Item) -> Vec<Self::Item> {
+        let mut out = Vec::new();
+        if item.len() > self.min_len {
+            // Drop the second half, drop one element.
+            out.push(item[..self.min_len.max(item.len() / 2)].to_vec());
+            let mut one_less = item.clone();
+            one_less.pop();
+            out.push(one_less);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(&UnitF64::unit(), |&x| (0.0..1.0).contains(&x));
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check(&RangeUsize { lo: 0, hi: 1000 }, |&n| n < 500);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Shrinking should land at or near the boundary 500.
+        assert!(msg.contains("counterexample"), "{msg}");
+        let ce: usize = msg
+            .rsplit("counterexample:")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!((500..=750).contains(&ce), "shrunk to {ce}");
+    }
+
+    #[test]
+    fn pair_and_vec_generators() {
+        check(
+            &Pair(UnitF64::unit(), RangeUsize { lo: 1, hi: 64 }),
+            |&(x, n)| x < 1.0 && (1..=64).contains(&n),
+        );
+        check(
+            &VecOf {
+                elem: UnitF64::unit(),
+                min_len: 0,
+                max_len: 16,
+            },
+            |v| v.len() <= 16,
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = UnitF64::unit();
+        let mut r1 = Xoshiro256pp::new(1);
+        let mut r2 = Xoshiro256pp::new(1);
+        for _ in 0..10 {
+            assert_eq!(g.gen(&mut r1), g.gen(&mut r2));
+        }
+    }
+}

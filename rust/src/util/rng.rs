@@ -1,0 +1,264 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline environment has no `rand` crate, so this module provides the
+//! PRNG substrate used everywhere in the library:
+//!
+//! * [`SplitMix64`] — tiny, fast seeder / stream deriver.
+//! * [`Xoshiro256pp`] — the workhorse generator (xoshiro256++ by Blackman &
+//!   Vigna), with `jump()` for creating independent parallel streams.
+//! * [`counter_hash`] — a stateless counter-based hash (SplitMix64 finalizer)
+//!   used to mirror the in-kernel PRNG of the Pallas layer, so Rust-side
+//!   reference computations can reproduce kernel randomness bit-for-bit.
+//!
+//! All generators are deterministic from their seed; every experiment in this
+//! repository is reproducible given its `--seed` argument.
+
+/// SplitMix64: a 64-bit generator with a single u64 of state.
+///
+/// Primarily used to seed [`Xoshiro256pp`] and to derive independent
+/// sub-seeds from a master seed (one stream per thread / per matrix element).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a new generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Stateless mix of a counter and seed into a u64 (SplitMix64 finalizer).
+///
+/// `counter_hash(seed, i)` is the canonical per-index random word used by
+/// dither/stochastic rounding so that index `i` always sees the same bit
+/// stream for a given seed — matching the counter-based PRNG in the Pallas
+/// kernel (`python/compile/kernels/prng.py`).
+#[inline]
+pub fn counter_hash(seed: u64, counter: u64) -> u64 {
+    let mut z = seed ^ counter.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Convert a u64 to a uniform f64 in [0, 1) using the top 53 bits.
+#[inline]
+pub fn u64_to_unit_f64(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// xoshiro256++ — fast, high-quality 256-bit-state generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 (never produces the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        u64_to_unit_f64(self.next_u64())
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift (unbiased enough
+    /// for simulation use; n must be > 0).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (used by the NN weight initializer).
+    pub fn normal(&mut self) -> f64 {
+        // Avoid log(0) by nudging u1 away from zero.
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Jump ahead 2^128 steps: gives an independent stream for parallel use.
+    pub fn jump(&mut self) -> Self {
+        const JUMP: [u64; 4] = [
+            0x180EC6D33CFD0ABA,
+            0xD5A61266F0C9392C,
+            0xA9582618E03FC9AA,
+            0x39ABDC4529B1661C,
+        ];
+        let snapshot = self.clone();
+        let mut s = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j & (1 << b)) != 0 {
+                    s[0] ^= self.s[0];
+                    s[1] ^= self.s[1];
+                    s[2] ^= self.s[2];
+                    s[3] ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = s;
+        snapshot
+    }
+
+    /// Derive `n` independent generators (for per-thread streams).
+    pub fn split(&mut self, n: usize) -> Vec<Self> {
+        (0..n).map(|_| self.jump()).collect()
+    }
+
+    /// Fisher–Yates shuffle of a slice.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values for seed 0 (matches the published algorithm).
+        let mut g = SplitMix64::new(0);
+        assert_eq!(g.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(g.next_u64(), 0x6E789E6AA1B965F4);
+    }
+
+    #[test]
+    fn xoshiro_uniform_mean() {
+        let mut g = Xoshiro256pp::new(7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| g.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn xoshiro_unit_range() {
+        let mut g = Xoshiro256pp::new(3);
+        for _ in 0..10_000 {
+            let x = g.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bernoulli_frequency() {
+        let mut g = Xoshiro256pp::new(11);
+        let p = 0.3;
+        let n = 200_000;
+        let k = (0..n).filter(|_| g.bernoulli(p)).count();
+        let freq = k as f64 / n as f64;
+        assert!((freq - p).abs() < 0.01, "freq={freq}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut g = Xoshiro256pp::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = g.below(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn jump_streams_diverge() {
+        let mut g = Xoshiro256pp::new(9);
+        let mut a = g.jump();
+        let mut b = g.jump();
+        let overlaps = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(overlaps, 0);
+    }
+
+    #[test]
+    fn counter_hash_stateless_and_distinct() {
+        assert_eq!(counter_hash(1, 2), counter_hash(1, 2));
+        assert_ne!(counter_hash(1, 2), counter_hash(1, 3));
+        assert_ne!(counter_hash(1, 2), counter_hash(2, 2));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Xoshiro256pp::new(13);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut g = Xoshiro256pp::new(17);
+        let mut v: Vec<u32> = (0..100).collect();
+        g.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

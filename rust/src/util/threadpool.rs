@@ -1,0 +1,121 @@
+//! Scoped data-parallelism helpers (no `rayon` in the offline crate set).
+//!
+//! The experiment harness is embarrassingly parallel over (x, y) pairs and
+//! over trials; [`parallel_map`] and [`parallel_chunks`] split such work over
+//! `std::thread::scope` workers. Chunking is static — every work item in our
+//! use sites costs roughly the same, so static partitioning is within a few
+//! percent of work stealing at a fraction of the complexity.
+
+/// Number of worker threads to use: `DITHER_THREADS` env var if set,
+/// otherwise available parallelism (min 1).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("DITHER_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` in parallel, preserving order.
+///
+/// `f` receives `(index, &item)`. Falls back to a sequential loop for small
+/// inputs or single-thread configurations.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = num_threads().min(items.len().max(1));
+    if threads <= 1 || items.len() < 2 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (slot_chunk, (base, item_chunk)) in out
+            .chunks_mut(chunk)
+            .zip(items.chunks(chunk).enumerate().map(|(ci, c)| (ci * chunk, c)))
+        {
+            scope.spawn(move || {
+                for (off, (slot, item)) in slot_chunk.iter_mut().zip(item_chunk).enumerate() {
+                    *slot = Some(f(base + off, item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled slot")).collect()
+}
+
+/// Run `f` once per worker over a contiguous index range split into
+/// `num_threads()` chunks; `f(range)` returns a partial result, and the
+/// partials are returned in chunk order (for merging, e.g. Welford::merge).
+pub fn parallel_chunks<R, F>(len: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(std::ops::Range<usize>) -> R + Sync,
+{
+    let threads = num_threads().min(len.max(1));
+    if threads <= 1 {
+        return vec![f(0..len)];
+    }
+    let chunk = len.div_ceil(threads);
+    let ranges: Vec<_> = (0..threads)
+        .map(|t| (t * chunk).min(len)..((t + 1) * chunk).min(len))
+        .filter(|r| !r.is_empty())
+        .collect();
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| scope.spawn(move || f(r)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, |i, &x| x * 2 + i as u64);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, items[i] * 2 + i as u64);
+        }
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn chunks_cover_range_exactly() {
+        let partials = parallel_chunks(10_001, |r| r.len());
+        assert_eq!(partials.iter().sum::<usize>(), 10_001);
+    }
+
+    #[test]
+    fn chunks_zero_len() {
+        let partials = parallel_chunks(0, |r| r.len());
+        assert_eq!(partials.iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn chunk_sums_match_sequential() {
+        let partial: Vec<u64> =
+            parallel_chunks(5000, |r| r.map(|i| i as u64).sum::<u64>());
+        let total: u64 = partial.iter().sum();
+        assert_eq!(total, (0..5000u64).sum::<u64>());
+    }
+}

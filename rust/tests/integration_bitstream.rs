@@ -1,0 +1,168 @@
+//! Cross-module integration tests over the bitstream stack: the paper's
+//! §II–§V claims at medium scale (larger than unit tests, smaller than the
+//! CLI experiments).
+
+use dither::bitstream::{
+    evaluate, theory_deterministic_repr_emse, theory_stochastic_repr_emse, EvalConfig, Op,
+    Scheme,
+};
+use dither::util::stats::loglog_slope;
+
+fn cfg() -> EvalConfig {
+    EvalConfig {
+        pairs: 80,
+        trials: 150,
+        seed: 0x17E5,
+    }
+}
+
+#[test]
+fn table1_full_grid_orders() {
+    // Empirical EMSE slopes across ALL (op, scheme) cells match Table I.
+    let cfg = cfg();
+    let pairs = cfg.draw_pairs();
+    let ns = [16usize, 64, 256];
+    let xs: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    for op in Op::ALL {
+        for scheme in Scheme::ALL {
+            let emse: Vec<f64> = ns
+                .iter()
+                .map(|&n| evaluate(scheme, op, n, &pairs, &cfg).emse)
+                .collect();
+            let slope = loglog_slope(&xs, &emse).unwrap();
+            let expected = match scheme {
+                Scheme::Stochastic => -1.0,
+                _ => -2.0,
+            };
+            assert!(
+                (slope - expected).abs() < 0.5,
+                "{op:?}/{scheme:?}: EMSE slope {slope} (expected ~{expected}); series {emse:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn repr_emse_matches_closed_forms() {
+    // §II-A: L = 1/(6N) for stochastic; §II-B: L = 1/(12N²) deterministic.
+    let cfg = cfg();
+    let pairs = cfg.draw_pairs();
+    for &n in &[32usize, 128, 512] {
+        let sto = evaluate(Scheme::Stochastic, Op::Represent, n, &pairs, &cfg).emse;
+        let det = evaluate(Scheme::DeterministicVariant, Op::Represent, n, &pairs, &cfg).emse;
+        let sto_th = theory_stochastic_repr_emse(n);
+        let det_th = theory_deterministic_repr_emse(n);
+        assert!(
+            (sto - sto_th).abs() < 0.3 * sto_th,
+            "N={n} stochastic: {sto} vs theory {sto_th}"
+        );
+        assert!(
+            (det - det_th).abs() < 0.4 * det_th,
+            "N={n} deterministic: {det} vs theory {det_th}"
+        );
+    }
+}
+
+#[test]
+fn dither_emse_between_bound_and_zero_with_zero_bias() {
+    let cfg = cfg();
+    let pairs = cfg.draw_pairs();
+    for &n in &[32usize, 128, 512] {
+        let d = evaluate(Scheme::Dither, Op::Represent, n, &pairs, &cfg).emse;
+        let bound = 2.0 / (n * n) as f64;
+        assert!(d <= 1.2 * bound, "N={n}: dither EMSE {d} exceeds bound {bound}");
+        // §II lower bound for any N-pulse scheme: 1/(12N²).
+        let lower = 1.0 / (12.0 * (n * n) as f64);
+        assert!(d >= 0.5 * lower, "N={n}: dither EMSE {d} below plausibility");
+    }
+}
+
+#[test]
+fn dither_mult_and_avg_same_order_as_deterministic_variant() {
+    // §V claims dither's mult/avg EMSE beats the deterministic variant's.
+    // Both are Θ(1/N²); the *constant* ordering depends on implementation
+    // details the paper does not specify (see EXPERIMENTS.md §Deviations:
+    // our clock-division baseline is tighter than the paper's 2/N bound,
+    // and §IV-C's W-flip contributes irreducible O(1/N²) variance). What
+    // must hold in any faithful implementation — and what we assert — is:
+    //   (a) dither stays within a small constant of the deterministic
+    //       variant (same 1/N² order, constant ≤ 1.5× mult / ≤ 4× avg),
+    //   (b) dither is unbiased while the deterministic variant is not.
+    let cfg = cfg();
+    let pairs = cfg.draw_pairs();
+    let n = 128;
+    for (op, factor) in [(Op::Multiply, 1.5), (Op::Average, 4.0)] {
+        let dit = evaluate(Scheme::Dither, op, n, &pairs, &cfg);
+        let det = evaluate(Scheme::DeterministicVariant, op, n, &pairs, &cfg);
+        assert!(
+            dit.emse < det.emse * factor,
+            "{op:?} at N={n}: dither EMSE {} should be within {factor}x of deterministic {}",
+            dit.emse,
+            det.emse
+        );
+        assert!(
+            dit.bias_abs < det.bias_abs / 2.0,
+            "{op:?} at N={n}: dither |bias| {} ≪ deterministic {}",
+            dit.bias_abs,
+            det.bias_abs
+        );
+    }
+}
+
+#[test]
+fn sample_bias_ordering_and_sem_slopes() {
+    // Figs 2/4/6: |bias| lower for the unbiased schemes than the
+    // deterministic variant; dither's sample bias falls faster than
+    // stochastic's (SEM slope ≈ -1 vs -0.5).
+    let cfg = cfg();
+    let pairs = cfg.draw_pairs();
+    let ns = [16usize, 64, 256, 1024];
+    let xs: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    for op in Op::ALL {
+        let bias = |scheme: Scheme| -> Vec<f64> {
+            ns.iter()
+                .map(|&n| evaluate(scheme, op, n, &pairs, &cfg).bias_abs)
+                .collect()
+        };
+        let det = bias(Scheme::DeterministicVariant);
+        let dit = bias(Scheme::Dither);
+        let sto = bias(Scheme::Stochastic);
+        for i in 0..ns.len() {
+            assert!(
+                dit[i] < det[i],
+                "{op:?} N={}: dither |bias| {} vs deterministic {}",
+                ns[i],
+                dit[i],
+                det[i]
+            );
+        }
+        let s_dit = loglog_slope(&xs, &dit).unwrap();
+        let s_sto = loglog_slope(&xs, &sto).unwrap();
+        assert!(
+            s_dit < s_sto - 0.25,
+            "{op:?}: dither bias slope {s_dit} should be steeper than stochastic {s_sto}"
+        );
+    }
+}
+
+#[test]
+fn deterministic_variant_needs_single_trial() {
+    // Footnote 2: the deterministic estimate never changes across trials.
+    let cfg1 = EvalConfig {
+        pairs: 40,
+        trials: 1,
+        seed: 9,
+    };
+    let cfg2 = EvalConfig {
+        pairs: 40,
+        trials: 50,
+        seed: 9,
+    };
+    let pairs = cfg1.draw_pairs();
+    for op in Op::ALL {
+        let a = evaluate(Scheme::DeterministicVariant, op, 64, &pairs, &cfg1);
+        let b = evaluate(Scheme::DeterministicVariant, op, 64, &pairs, &cfg2);
+        assert_eq!(a.emse, b.emse, "{op:?}");
+        assert_eq!(a.bias_abs, b.bias_abs, "{op:?}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Integration: data → trainer → quantized inference, reproducing the
+//! §VII–§VIII accuracy shapes at test scale.
+
+use dither::data::{Dataset, Task};
+use dither::linalg::Variant;
+use dither::nn::{quantized_accuracy, ActivationRanges, Mlp, QuantInferenceConfig};
+use dither::rounding::RoundingMode;
+use dither::train::{train, TrainConfig};
+use dither::util::rng::Xoshiro256pp;
+
+fn trained_digits(train_n: usize) -> (Mlp, Dataset) {
+    let train_set = Dataset::synthesize(Task::Digits, train_n, 0xBEEF);
+    let test_set = Dataset::synthesize(Task::Digits, 300, 0xF00D);
+    let mut rng = Xoshiro256pp::new(1);
+    let mut mlp = Mlp::single_layer(784, 10, &mut rng);
+    train(
+        &mut mlp,
+        &train_set,
+        &TrainConfig {
+            epochs: 8,
+            batch_size: 64,
+            lr: 0.15,
+            momentum: 0.9,
+            seed: 2,
+            verbose: false,
+        },
+    );
+    mlp.normalize_weights();
+    (mlp, test_set)
+}
+
+#[test]
+fn float_model_learns_the_synthetic_task() {
+    let (mlp, test) = trained_digits(1500);
+    let acc = mlp.accuracy(&test.images, &test.labels);
+    assert!(acc > 0.75, "float accuracy {acc} too low — task or trainer broken");
+}
+
+#[test]
+fn high_k_quantized_matches_float_for_all_placements() {
+    let (mlp, test) = trained_digits(1200);
+    let float_acc = mlp.accuracy(&test.images, &test.labels);
+    let ranges = ActivationRanges::calibrate(&mlp, &test.images);
+    for variant in Variant::ALL {
+        for mode in RoundingMode::ALL {
+            let qcfg = QuantInferenceConfig {
+                bits: 8,
+                mode,
+                variant,
+                seed: 5,
+            };
+            let acc = quantized_accuracy(&mlp, &test.images, &test.labels, &ranges, &qcfg);
+            assert!(
+                acc > float_acc - 0.05,
+                "{variant:?}/{mode:?} k=8: {acc} vs float {float_acc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fig9_shape_small_k_ordering() {
+    // Figs 9/13: at k=1 deterministic collapses (pixels ∈ [0,1] inside the
+    // [-1,1] quantizer all round to +1); dither/stochastic stay usable.
+    let (mlp, test) = trained_digits(1200);
+    let ranges = ActivationRanges::calibrate(&mlp, &test.images);
+    let acc = |mode: RoundingMode, k: u32, variant: Variant| -> f64 {
+        let trials = if mode == RoundingMode::Deterministic { 1 } else { 4 };
+        (0..trials)
+            .map(|t| {
+                let qcfg = QuantInferenceConfig {
+                    bits: k,
+                    mode,
+                    variant,
+                    seed: 100 + t,
+                };
+                quantized_accuracy(&mlp, &test.images, &test.labels, &ranges, &qcfg)
+            })
+            .sum::<f64>()
+            / trials as f64
+    };
+    // Per-partial at k=1: repeated roundings per element keep the signal.
+    // Separate at k=2: one rounding per element needs one more bit before
+    // the unbiased-vs-deterministic gap is decisive (paper: "for small
+    // k > 1" in the separate-quantization figures).
+    for (variant, k) in [(Variant::PerPartial, 1), (Variant::Separate, 2)] {
+        let det = acc(RoundingMode::Deterministic, k, variant);
+        let dit = acc(RoundingMode::Dither, k, variant);
+        let sto = acc(RoundingMode::Stochastic, k, variant);
+        assert!(dit > det + 0.15, "{variant:?}: dither {dit} vs det {det} at k={k}");
+        assert!(sto > det + 0.15, "{variant:?}: stochastic {sto} vs det {det} at k={k}");
+        // Dither ≈ stochastic in mean (within a few points).
+        assert!(
+            (dit - sto).abs() < 0.12,
+            "{variant:?}: dither {dit} ≈ stochastic {sto}"
+        );
+    }
+}
+
+#[test]
+fn fig10_shape_dither_variance_not_higher() {
+    // Fig 10: dither rounding's accuracy variance ≤ stochastic rounding's.
+    let (mlp, test) = trained_digits(1200);
+    let ranges = ActivationRanges::calibrate(&mlp, &test.images);
+    let variance = |mode: RoundingMode| -> f64 {
+        let accs: Vec<f64> = (0..12)
+            .map(|t| {
+                let qcfg = QuantInferenceConfig {
+                    bits: 2,
+                    mode,
+                    variant: Variant::PerPartial,
+                    seed: 500 + t,
+                };
+                quantized_accuracy(&mlp, &test.images, &test.labels, &ranges, &qcfg)
+            })
+            .collect();
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        accs.iter().map(|a| (a - mean).powi(2)).sum::<f64>() / (accs.len() - 1) as f64
+    };
+    let v_dit = variance(RoundingMode::Dither);
+    let v_sto = variance(RoundingMode::Stochastic);
+    assert!(
+        v_dit <= v_sto * 1.5,
+        "dither accuracy variance {v_dit} should not exceed stochastic {v_sto} materially"
+    );
+}
+
+#[test]
+fn fashion_mlp_three_layer_pipeline() {
+    // The §VIII pipeline end-to-end on the harder task (reduced scale).
+    let train_set = Dataset::synthesize(Task::Fashion, 1500, 0xFA);
+    let test_set = Dataset::synthesize(Task::Fashion, 250, 0xFB);
+    let mut rng = Xoshiro256pp::new(3);
+    let mut mlp = Mlp::three_layer(784, 64, 32, 10, &mut rng);
+    train(
+        &mut mlp,
+        &train_set,
+        &TrainConfig {
+            epochs: 10,
+            batch_size: 64,
+            lr: 0.08,
+            momentum: 0.9,
+            seed: 4,
+            verbose: false,
+        },
+    );
+    mlp.normalize_weights();
+    let float_acc = mlp.accuracy(&test_set.images, &test_set.labels);
+    assert!(float_acc > 0.5, "fashion float accuracy {float_acc}");
+    let ranges = ActivationRanges::calibrate(&mlp, &test_set.images);
+    // k=8 separate ≈ float (the §VIII working regime).
+    let qcfg = QuantInferenceConfig {
+        bits: 8,
+        mode: RoundingMode::Dither,
+        variant: Variant::Separate,
+        seed: 6,
+    };
+    let acc8 = quantized_accuracy(&mlp, &test_set.images, &test_set.labels, &ranges, &qcfg);
+    assert!(
+        acc8 > float_acc - 0.07,
+        "fashion k=8 dither {acc8} vs float {float_acc}"
+    );
+}

@@ -1,0 +1,179 @@
+//! Serving-path integration: PJRT runtime + engine + TCP server, end to
+//! end over the real AOT artifacts. Skipped (with a notice) when
+//! `artifacts/manifest.json` is missing — run `make artifacts` first.
+
+use dither::coordinator::{serve, Engine, ServerConfig};
+use dither::data::{Dataset, Task};
+use dither::rounding::RoundingMode;
+use dither::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn artifacts_present() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn engine_agrees_with_native_path_at_high_k() {
+    if !artifacts_present() {
+        return;
+    }
+    let engine = Engine::new("artifacts", 1500, 7).expect("engine");
+    let ds = Dataset::synthesize(Task::Digits, 32, 0x7357);
+    let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
+    // k=8 dither ≈ float model predictions (bias+relu in both paths).
+    let outputs = engine
+        .infer_batch("digits_linear", 8, RoundingMode::Dither, &pixels)
+        .expect("infer");
+    assert_eq!(outputs.len(), 32);
+    let correct = outputs
+        .iter()
+        .zip(&ds.labels)
+        .filter(|(o, &l)| o.pred == l)
+        .count();
+    assert!(
+        correct >= 24,
+        "artifact-path accuracy {correct}/32 too low at k=8"
+    );
+    for out in &outputs {
+        assert_eq!(out.logits.len(), 10);
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn engine_mode_and_k_change_results() {
+    if !artifacts_present() {
+        return;
+    }
+    let engine = Engine::new("artifacts", 1500, 7).expect("engine");
+    let ds = Dataset::synthesize(Task::Digits, 4, 0x7358);
+    let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
+    let a = engine
+        .infer_batch("digits_linear", 2, RoundingMode::Dither, &pixels)
+        .unwrap();
+    let b = engine
+        .infer_batch("digits_linear", 2, RoundingMode::Dither, &pixels)
+        .unwrap();
+    // Seeds advance per batch: stochastic logits differ between calls.
+    let same = a
+        .iter()
+        .zip(&b)
+        .all(|(x, y)| x.logits == y.logits);
+    assert!(!same, "dither logits should vary across batches (seed advances)");
+    // Deterministic mode is stable.
+    let c = engine
+        .infer_batch("digits_linear", 2, RoundingMode::Deterministic, &pixels)
+        .unwrap();
+    let d = engine
+        .infer_batch("digits_linear", 2, RoundingMode::Deterministic, &pixels)
+        .unwrap();
+    assert!(c.iter().zip(&d).all(|(x, y)| x.logits == y.logits));
+}
+
+#[test]
+fn engine_splits_oversized_batches() {
+    if !artifacts_present() {
+        return;
+    }
+    let engine = Engine::new("artifacts", 1500, 7).expect("engine");
+    // 300 > largest artifact batch (256): must split and still answer all.
+    let ds = Dataset::synthesize(Task::Digits, 300, 0x7359);
+    let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
+    let outputs = engine
+        .infer_batch("digits_linear", 4, RoundingMode::Stochastic, &pixels)
+        .expect("infer");
+    assert_eq!(outputs.len(), 300);
+}
+
+#[test]
+fn fashion_mlp_serves() {
+    if !artifacts_present() {
+        return;
+    }
+    let engine = Engine::new("artifacts", 1500, 7).expect("engine");
+    let ds = Dataset::synthesize(Task::Fashion, 8, 0x735A);
+    let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
+    let outputs = engine
+        .infer_batch("fashion_mlp", 6, RoundingMode::Dither, &pixels)
+        .expect("infer");
+    assert_eq!(outputs.len(), 8);
+    assert!(outputs.iter().all(|o| o.logits.iter().all(|v| v.is_finite())));
+}
+
+#[test]
+fn tcp_server_end_to_end() {
+    if !artifacts_present() {
+        return;
+    }
+    let addr = "127.0.0.1:17979";
+    let cfg = ServerConfig {
+        addr: addr.to_string(),
+        max_batch: 8,
+        max_wait_us: 500,
+        artifacts_dir: "artifacts".to_string(),
+        train_n: 800,
+        seed: 7,
+    };
+    let server = std::thread::spawn(move || serve(&cfg));
+
+    // Wait for the listener + engine to come up (engine trains models).
+    let mut stream = None;
+    for _ in 0..600 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let stream = stream.expect("server did not come up");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+
+    // Ping (also confirms the engine finished initializing).
+    writeln!(writer, "{{\"cmd\":\"ping\"}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"), "{line}");
+
+    // Inference round-trip.
+    let ds = Dataset::synthesize(Task::Digits, 1, 0x7E57);
+    let req = format!(
+        "{{\"id\":5,\"model\":\"digits_linear\",\"k\":4,\"mode\":\"dither\",\"pixels\":{}}}",
+        Json::nums(ds.images.row(0))
+    );
+    writeln!(writer, "{req}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).expect("response json");
+    assert_eq!(resp.get("id").unwrap().as_f64(), Some(5.0));
+    assert!(resp.get("pred").is_some(), "{line}");
+    assert!(resp.get("error").is_none(), "{line}");
+
+    // Malformed request → error, connection stays usable.
+    writeln!(writer, "{{\"k\":4}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+
+    // Stats.
+    writeln!(writer, "{{\"cmd\":\"stats\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let stats = Json::parse(line.trim()).expect("stats json");
+    assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+
+    // Shutdown.
+    writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("stopping"), "{line}");
+    server.join().unwrap().expect("server exits cleanly");
+}

@@ -1,0 +1,216 @@
+//! Property-based tests (via the in-tree `propcheck` mini-framework) on the
+//! encoding, rounding, linalg and coordinator invariants.
+
+use dither::bitstream::{
+    encode_x, encode_y, BitSeq, DitherEncoder, DitherParams, Op, Scheme,
+};
+use dither::linalg::{quant_matmul, Matrix, QuantMatmulConfig, Variant};
+use dither::rounding::{Quantizer, RoundingMode, ScalarRounder};
+use dither::util::json::Json;
+use dither::util::propcheck::{check, check_with, Config, Gen, Pair, RangeUsize, UnitF64};
+use dither::util::rng::Xoshiro256pp;
+
+/// Generator for (value, sequence length).
+fn value_and_len() -> Pair<UnitF64, RangeUsize> {
+    Pair(UnitF64::unit(), RangeUsize { lo: 1, hi: 512 })
+}
+
+#[test]
+fn prop_estimates_stay_in_unit_interval() {
+    check(&value_and_len(), |&(x, n)| {
+        let mut rng = Xoshiro256pp::new(x.to_bits() ^ n as u64);
+        Scheme::ALL.iter().all(|&s| {
+            let v = encode_x(s, x, n, &mut rng).value();
+            (0.0..=1.0).contains(&v)
+        })
+    });
+}
+
+#[test]
+fn prop_dither_params_invariants() {
+    // For every (x, N): δ ∈ [0, min(1, 2/N)], E = x exactly, Var ≤ 2/N².
+    check(&value_and_len(), |&(x, n)| {
+        let p = DitherParams::of(x, n);
+        let delta_ok = p.delta >= 0.0 && p.delta <= (2.0 / n as f64).min(1.0) + 1e-12;
+        let exp_ok = (p.expectation(n) - x).abs() < 1e-9;
+        let var_ok = p.variance(n) <= 2.0 / (n * n) as f64 + 1e-12;
+        delta_ok && exp_ok && var_ok
+    });
+}
+
+#[test]
+fn prop_dither_error_bounded_by_one_pulse_plus_noise() {
+    // Dither sample error: deterministic part within 1/N of x; stochastic
+    // residue is Binomial(N, δ≤2/N)/N, so P(err > 10/N) is astronomically
+    // small. Checked as a hard bound with slack.
+    check(&value_and_len(), |&(x, n)| {
+        let mut rng = Xoshiro256pp::new(2 ^ x.to_bits() ^ (n as u64) << 1);
+        let enc = DitherEncoder::prefix();
+        let v = enc.encode(x, n, &mut rng).value();
+        (v - x).abs() <= 12.0 / n as f64 + 1e-9
+    });
+}
+
+#[test]
+fn prop_and_is_commutative_and_bounded() {
+    check(
+        &Pair(Pair(UnitF64::unit(), UnitF64::unit()), RangeUsize { lo: 1, hi: 256 }),
+        |&((x, y), n)| {
+            let mut rng = Xoshiro256pp::new(x.to_bits() ^ y.to_bits().rotate_left(17) ^ n as u64);
+            let a = encode_x(Scheme::Dither, x, n, &mut rng);
+            let b = encode_y(Scheme::Dither, y, n, &mut rng);
+            let ab = a.and(&b);
+            let ba = b.and(&a);
+            // commutative, and Z_s ≤ min(X_s, Y_s) (AND can't create ones)
+            ab == ba && ab.value() <= a.value().min(b.value()) + 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_mux_value_between_operands() {
+    // U_i selects per-pulse, so U_s ∈ [min(X_s,Y_s), max(X_s,Y_s)]… not in
+    // general (mix of disjoint index sets), but it IS bounded by the
+    // per-index envelope: U_s ≤ max over sequences' values + 1 pulse. We
+    // check the always-true invariant: U_s ∈ [0,1] and the exact identity
+    // U = W·X + (1-W)·Y per pulse.
+    check(
+        &Pair(Pair(UnitF64::unit(), UnitF64::unit()), RangeUsize { lo: 1, hi: 200 }),
+        |&((x, y), n)| {
+            let mut rng = Xoshiro256pp::new(4 ^ x.to_bits() ^ y.to_bits().rotate_left(23) ^ n as u64);
+            let xs = encode_x(Scheme::Dither, x, n, &mut rng);
+            let ys = encode_x(Scheme::Dither, y, n, &mut rng);
+            let w = BitSeq::from_fn(n, |i| i % 2 == 0);
+            let u = BitSeq::mux(&w, &xs, &ys);
+            (0..n).all(|i| u.get(i) == if w.get(i) { xs.get(i) } else { ys.get(i) })
+        },
+    );
+}
+
+#[test]
+fn prop_scalar_rounders_floor_or_ceil() {
+    struct Alpha;
+    impl Gen for Alpha {
+        type Item = f64;
+        fn gen(&self, rng: &mut Xoshiro256pp) -> f64 {
+            rng.uniform(-100.0, 100.0)
+        }
+    }
+    check(&Alpha, |&v| {
+        RoundingMode::ALL.iter().all(|&m| {
+            let mut r = ScalarRounder::new(m, 32, 5);
+            let out = r.round(v);
+            out == v.floor() as i64 || out == v.ceil() as i64
+        })
+    });
+}
+
+#[test]
+fn prop_quantizer_roundtrip_within_step() {
+    check(
+        &Pair(UnitF64 { lo: -1.0, hi: 1.0 }, RangeUsize { lo: 1, hi: 12 }),
+        |&(v, k)| {
+            let q = Quantizer::new(k as u32, -1.0, 1.0);
+            let deq = q.dequant(q.quantize_round(v));
+            (deq - v).abs() <= q.step() / 2.0 + 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_quant_matmul_error_bounded_by_step_budget() {
+    // |Ĉ - C|_∞ per entry ≤ q·(step_a + step_b + step_a·step_b) for any
+    // mode/variant (each factor moves by at most one quantization step).
+    let dims = RangeUsize { lo: 1, hi: 12 };
+    check_with(
+        Config {
+            cases: 40,
+            seed: 0xC0DE,
+            max_shrink: 50,
+        },
+        &Pair(Pair(dims, RangeUsize { lo: 1, hi: 12 }), RangeUsize { lo: 1, hi: 6 }),
+        |&((p, q), kbits)| {
+            let mut rng = Xoshiro256pp::new((p * 31 + q) as u64);
+            let a = Matrix::random_uniform(p, q, 0.0, 1.0, &mut rng);
+            let b = Matrix::random_uniform(q, p, 0.0, 1.0, &mut rng);
+            let c = a.matmul(&b);
+            let step = 1.0 / ((1u32 << kbits) - 1).max(1) as f64;
+            let budget = q as f64 * (2.0 * step + step * step) + 1e-9;
+            Variant::ALL.iter().all(|&variant| {
+                RoundingMode::ALL.iter().all(|&mode| {
+                    let cfg = QuantMatmulConfig::unit(kbits as u32, mode, variant, 1);
+                    let c_hat = quant_matmul(&a, &b, &cfg);
+                    c.sub(&c_hat).max_abs() <= budget
+                })
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_floats() {
+    struct Floats;
+    impl Gen for Floats {
+        type Item = Vec<f64>;
+        fn gen(&self, rng: &mut Xoshiro256pp) -> Vec<f64> {
+            (0..rng.below(20)).map(|_| rng.uniform(-1e6, 1e6)).collect()
+        }
+    }
+    check(&Floats, |xs| {
+        let j = Json::nums(xs);
+        let back = Json::parse(&j.to_string()).unwrap();
+        let ys = back.as_f64_vec().unwrap();
+        xs.iter().zip(&ys).all(|(a, b)| {
+            (a - b).abs() <= a.abs().max(1.0) * 1e-12
+        })
+    });
+}
+
+#[test]
+fn prop_protocol_parse_never_panics_on_fuzz() {
+    struct Garbage;
+    impl Gen for Garbage {
+        type Item = String;
+        fn gen(&self, rng: &mut Xoshiro256pp) -> String {
+            let len = rng.below(200) as usize;
+            (0..len)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 32;
+                    c as char
+                })
+                .collect()
+        }
+    }
+    check(&Garbage, |s| {
+        // Must return Ok or Err, never panic.
+        let _ = dither::coordinator::parse_message(s);
+        true
+    });
+}
+
+#[test]
+fn prop_op_truth_consistent_with_estimates_in_expectation() {
+    // Coarse statistical property over random (x, y): the trial-mean of
+    // dither estimates approaches the op truth for all ops.
+    let cases = Pair(UnitF64::unit(), UnitF64::unit());
+    check_with(
+        Config {
+            cases: 12,
+            seed: 0xFEED,
+            max_shrink: 0,
+        },
+        &cases,
+        |&(x, y)| {
+            let n = 128;
+            let trials = 300;
+            Op::ALL.iter().all(|&op| {
+                let mut rng = Xoshiro256pp::new(77);
+                let mean: f64 = (0..trials)
+                    .map(|_| op.estimate(Scheme::Dither, x, y, n, &mut rng))
+                    .sum::<f64>()
+                    / trials as f64;
+                (mean - op.truth(x, y)).abs() < 0.02
+            })
+        },
+    );
+}

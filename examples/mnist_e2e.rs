@@ -6,11 +6,11 @@
 //!    logging the loss curve.
 //! 3. Sweeps quantized inference accuracy over k for the three rounding
 //!    schemes (the paper's Fig 9/13 shape) using the Rust engines.
-//! 4. Loads the AOT-compiled JAX/Pallas artifact via PJRT and serves
-//!    batched requests through the L3 engine, comparing its predictions
-//!    with the native path and reporting latency/throughput.
+//! 4. Serves batched requests through the L3 serving engine (the model
+//!    zoo + quantized forward pass the sharded server runs), reporting
+//!    accuracy, latency and throughput.
 //!
-//! Run: `make artifacts && cargo run --release --example mnist_e2e`
+//! Run: `cargo run --release --example mnist_e2e`
 //! Results recorded in EXPERIMENTS.md §End-to-end.
 
 use dither::coordinator::Engine;
@@ -19,10 +19,11 @@ use dither::linalg::Variant;
 use dither::nn::{quantized_accuracy, ActivationRanges, Mlp, QuantInferenceConfig};
 use dither::rounding::RoundingMode;
 use dither::train::{train, TrainConfig};
+use dither::util::error::Result;
 use dither::util::rng::Xoshiro256pp;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // ---- 1. data -------------------------------------------------------
     let (train_set, test_set, source) =
         Dataset::load_or_synthesize(Task::Digits, 4000, 1000, 0xE2E);
@@ -83,13 +84,13 @@ fn main() -> anyhow::Result<()> {
         println!("  {k:>3} {:>14.4} {:>14.4} {:>14.4}", row[0], row[1], row[2]);
     }
 
-    // ---- 4. serve through the AOT artifact (PJRT) -----------------------
-    println!("\nserving through the AOT JAX/Pallas artifact (PJRT CPU):");
-    let engine = Engine::new("artifacts", 2000, 0xE2E)?;
+    // ---- 4. serve through the L3 engine ---------------------------------
+    println!("\nserving through the L3 engine (model zoo + quantized forward):");
+    let engine = Engine::new(2000, 0xE2E);
     let batch: Vec<&[f64]> = (0..256.min(test_set.len()))
         .map(|i| test_set.images.row(i))
         .collect();
-    // Warmup (compiles the executable).
+    // Warmup (first call may fault in the zoo weights).
     let _ = engine.infer_batch("digits_linear", 4, RoundingMode::Dither, &batch[..1])?;
     let t = Instant::now();
     let outputs = engine.infer_batch("digits_linear", 4, RoundingMode::Dither, &batch)?;
@@ -107,10 +108,10 @@ fn main() -> anyhow::Result<()> {
         elapsed * 1e3 / batch.len() as f64
     );
     println!(
-        "  artifact-path accuracy @ k=4 dither: {:.4} (engine model, batch {})",
+        "  serving-path accuracy @ k=4 dither: {:.4} (engine model, batch {})",
         correct as f64 / batch.len() as f64,
         batch.len()
     );
-    println!("\nall layers compose: data -> SGD -> quantized engines -> PJRT artifact ✓");
+    println!("\nall layers compose: data -> SGD -> quantized engines -> serving engine ✓");
     Ok(())
 }

@@ -5,13 +5,16 @@
 //! Start the server first:  `dither serve --addr 127.0.0.1:7878`
 //! Then: `cargo run --release --example serve_client [-- --addr 127.0.0.1:7878]`
 
+use dither::coordinator::format_request;
 use dither::data::{Dataset, Task};
+use dither::rounding::RoundingMode;
 use dither::util::cli::Args;
+use dither::util::error::Result;
 use dither::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
     let addr = args.str_or("addr", "127.0.0.1:7878");
     let stream = TcpStream::connect(&addr)?;
@@ -28,25 +31,23 @@ fn main() -> anyhow::Result<()> {
 
     // A/B the rounding schemes on the same images.
     for (id, mode, k) in [
-        (1u64, "dither", 2u32),
-        (2, "stochastic", 2),
-        (3, "deterministic", 2),
-        (4, "dither", 8),
+        (1u64, RoundingMode::Dither, 2u32),
+        (2, RoundingMode::Stochastic, 2),
+        (3, RoundingMode::Deterministic, 2),
+        (4, RoundingMode::Dither, 8),
     ] {
+        let scheme = mode.name();
         let img = ds.images.row((id as usize - 1) % ds.len());
-        let pixels = Json::nums(img);
-        let req = format!(
-            "{{\"id\":{id},\"model\":\"digits_linear\",\"k\":{k},\"mode\":\"{mode}\",\"pixels\":{pixels}}}"
-        );
-        writeln!(writer, "{req}")?;
+        writeln!(writer, "{}", format_request(id, "digits_linear", k, mode, img))?;
         line.clear();
         reader.read_line(&mut line)?;
         let resp = Json::parse(line.trim()).unwrap();
         println!(
-            "id={id} mode={mode:<14} k={k}  pred={} latency={}us batch={}",
+            "id={id} scheme={scheme:<14} k={k}  pred={} latency={}us batch={} shard={}",
             resp.get("pred").and_then(Json::as_f64).unwrap_or(-1.0),
             resp.get("latency_us").and_then(Json::as_f64).unwrap_or(-1.0),
             resp.get("batch").and_then(Json::as_f64).unwrap_or(-1.0),
+            resp.get("shard").and_then(Json::as_f64).unwrap_or(-1.0),
         );
     }
 

@@ -1,0 +1,55 @@
+"""Minimal drop-in for the slice of ``hypothesis`` the kernel tests use.
+
+The offline test environment may not provide ``hypothesis``; this shim
+implements ``@settings(max_examples=..., deadline=...)``, ``@given(**kw)``
+and ``strategies.integers(lo, hi)`` by sampling a fixed number of random
+cases from a seeded PRNG. It keeps the property-test *shape* (many sampled
+cases per test) at the cost of hypothesis's shrinking and case database —
+acceptable for a fallback; CI installs the real package when it can.
+"""
+
+import random
+
+_SEED = 0xD17E
+
+
+class _Integers:
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class st:  # noqa: N801 - mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+
+def settings(max_examples=20, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper():
+            examples = getattr(wrapper, "_max_examples", 20)
+            rng = random.Random(_SEED)
+            for _ in range(examples):
+                case = {name: s.sample(rng) for name, s in strategies.items()}
+                fn(**case)
+
+        # Copy test identity by hand: functools.wraps would expose the
+        # wrapped signature and make pytest treat the sampled parameters
+        # as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

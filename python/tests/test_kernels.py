@@ -9,7 +9,10 @@ statistical properties (unbiasedness, variance ordering).
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline environment: seeded-sampling fallback
+    from _hypothesis_compat import given, settings, st
 
 from compile.kernels import prng, ref
 from compile.kernels.quant_matmul import quant_matmul_pallas, quantize_pallas

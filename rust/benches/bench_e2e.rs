@@ -1,33 +1,32 @@
-//! End-to-end serving benchmark: batched quantized inference through the
-//! PJRT artifact path (the L3→L2→L1 request path), plus the native-Rust
-//! engine for comparison. Reported in EXPERIMENTS.md §Perf.
+//! End-to-end serving benchmarks: the native engine batch path, and the
+//! full TCP serving stack measured for 1 shard vs K shards (the sharding
+//! speedup is the headline number for the coordinator refactor).
 //!
-//! Requires `make artifacts`. Run: `cargo bench --bench bench_e2e`
+//! Run: `cargo bench --bench bench_e2e`   (`DITHER_BENCH_FAST=1` for a
+//! smoke run). Results are written to `results/bench_e2e.json`.
 
-use dither::coordinator::Engine;
+use dither::coordinator::{format_request, ping, serve, Engine, ServerConfig};
 use dither::data::{Dataset, Task};
-use dither::linalg::Variant;
-use dither::nn::{quantized_predict, ActivationRanges, QuantInferenceConfig};
 use dither::rounding::RoundingMode;
-use dither::train::{trained_model, ModelSpec};
-use dither::util::benchmark::{black_box, Bench};
+use dither::util::benchmark::{black_box, format_count, Bench};
+use dither::util::json::Json;
+use dither::util::threadpool::num_threads;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+const TRAIN_N: usize = 2000;
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping bench_e2e: artifacts/manifest.json missing (run `make artifacts`)");
-        return;
-    }
+    let fast = std::env::var("DITHER_BENCH_FAST").is_ok();
     let mut bench = Bench::new();
-    let engine = Engine::new("artifacts", 2000, 7).expect("engine");
-    let ds = Dataset::synthesize(Task::Digits, 256, 99);
 
+    // ---- native engine batch throughput --------------------------------
+    let engine = Engine::new(TRAIN_N, 7);
+    let ds = Dataset::synthesize(Task::Digits, 256, 99);
     for &batch in &[1usize, 32, 256] {
         let pixels: Vec<&[f64]> = (0..batch).map(|i| ds.images.row(i)).collect();
-        // Warmup compiles the executable outside the timed region.
-        let _ = engine
-            .infer_batch("digits_linear", 4, RoundingMode::Dither, &pixels)
-            .expect("warmup");
-        let name = format!("e2e/pjrt_digits_linear/k=4/dither/batch={batch}");
+        let name = format!("e2e/engine_digits_linear/k=4/dither/batch={batch}");
         bench.bench_items(&name, batch as f64, || {
             black_box(
                 engine
@@ -36,35 +35,135 @@ fn main() {
             )
         });
     }
-
-    // Fashion MLP through PJRT.
     let fds = Dataset::synthesize(Task::Fashion, 32, 98);
     let pixels: Vec<&[f64]> = (0..32).map(|i| fds.images.row(i)).collect();
-    let _ = engine
-        .infer_batch("fashion_mlp", 4, RoundingMode::Dither, &pixels)
-        .expect("warmup");
-    bench.bench_items("e2e/pjrt_fashion_mlp/k=4/dither/batch=32", 32.0, || {
+    bench.bench_items("e2e/engine_fashion_mlp/k=4/dither/batch=32", 32.0, || {
         black_box(
             engine
                 .infer_batch("fashion_mlp", 4, RoundingMode::Dither, &pixels)
                 .expect("infer"),
         )
     });
+    drop(engine);
 
-    // Native-Rust engine reference (same model, same batch).
-    let (mlp, test, _) = trained_model(ModelSpec::DigitsLinear, 2000, 256, 7);
-    let ranges = ActivationRanges::calibrate(&mlp, &test.images);
-    let qcfg = QuantInferenceConfig {
-        bits: 4,
-        mode: RoundingMode::Dither,
-        variant: Variant::Separate,
-        seed: 3,
-    };
-    bench.bench_items("e2e/native_digits_linear/k=4/dither/batch=256", 256.0, || {
-        black_box(quantized_predict(&mlp, &test.images, &ranges, &qcfg))
-    });
+    // ---- TCP serving throughput: 1 shard vs K shards -------------------
+    let k_shards = num_threads().clamp(2, 8);
+    let requests = if fast { 240 } else { 2400 };
+    let clients = 8;
+    let mut serving = Vec::new();
+    for (port, shards) in [(18011u16, 1usize), (18012, k_shards)] {
+        let rps = serving_throughput(port, shards, clients, requests, &ds);
+        let name = format!("e2e/serving/shards={shards}/k=4/dither");
+        let throughput = format_count(rps);
+        println!("{name:<56} {throughput:>12}/s  ({requests} reqs, {clients} clients)");
+        serving.push(Json::obj(vec![
+            ("name", Json::Str(name)),
+            ("shards", Json::Num(shards as f64)),
+            ("requests", Json::Num(requests as f64)),
+            ("clients", Json::Num(clients as f64)),
+            ("items_per_s", Json::Num(rps)),
+        ]));
+    }
+    if let (Some(one), Some(many)) = (serving.first(), serving.last()) {
+        let a = one.get("items_per_s").and_then(Json::as_f64).unwrap_or(0.0);
+        let b = many.get("items_per_s").and_then(Json::as_f64).unwrap_or(0.0);
+        if a > 0.0 {
+            println!(
+                "serving speedup {k_shards} shards vs 1 shard: {:.2}x",
+                b / a
+            );
+        }
+    }
 
-    bench
-        .write_json("results/bench_e2e.json")
+    // Merge the harness results with the serving measurements.
+    let mut all: Vec<Json> = Json::parse(&bench.to_json())
+        .expect("bench json")
+        .as_arr()
+        .expect("bench json array")
+        .to_vec();
+    all.extend(serving);
+    std::fs::create_dir_all("results").expect("results dir");
+    std::fs::write("results/bench_e2e.json", Json::Arr(all).to_string())
         .expect("write bench json");
+}
+
+/// Start a server with `shards` shards, drive it with `clients` concurrent
+/// connections issuing `requests` total k=4 dither requests, and return
+/// the measured requests/second (excluding startup/teardown).
+fn serving_throughput(
+    port: u16,
+    shards: usize,
+    clients: usize,
+    requests: usize,
+    ds: &Dataset,
+) -> f64 {
+    let addr = format!("127.0.0.1:{port}");
+    let cfg = ServerConfig {
+        addr: addr.clone(),
+        shards,
+        max_batch: 32,
+        max_wait_us: 500,
+        queue_cap: 1024,
+        train_n: TRAIN_N,
+        seed: 7,
+    };
+    let server = std::thread::spawn(move || serve(&cfg));
+
+    // Wait until the server answers a ping (the zoo may still be
+    // loading). Bounded so a failed startup (e.g. port already in use)
+    // aborts the bench instead of spinning forever.
+    let mut ready = false;
+    for _ in 0..600 {
+        if server.is_finished() {
+            break;
+        }
+        if ping(&addr) {
+            ready = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    if !ready {
+        let err = server
+            .join()
+            .map(|r| r.err().map(|e| e.to_string()).unwrap_or_default())
+            .unwrap_or_else(|_| "server thread panicked".to_string());
+        panic!("server on {addr} never became ready: {err}");
+    }
+
+    let per_client = requests.div_ceil(clients);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = addr.clone();
+            let img = ds.images.row(c % ds.len());
+            scope.spawn(move || {
+                let stream = TcpStream::connect(&addr).expect("connect");
+                stream.set_nodelay(true).ok();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let req = format_request(c as u64, "digits_linear", 4, RoundingMode::Dither, img);
+                let mut line = String::new();
+                for _ in 0..per_client {
+                    writeln!(writer, "{req}").expect("send");
+                    writer.flush().expect("flush");
+                    line.clear();
+                    reader.read_line(&mut line).expect("recv");
+                    assert!(!line.contains("\"error\""), "{line}");
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    // Graceful shutdown.
+    let stream = TcpStream::connect(&addr).expect("connect for shutdown");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{{\"cmd\":\"shutdown\"}}").expect("shutdown");
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+    server.join().expect("server thread").expect("server exits cleanly");
+
+    (per_client * clients) as f64 / elapsed
 }

@@ -1,12 +1,19 @@
-//! Dynamic batcher: groups same-configuration requests into batches.
+//! Per-shard dynamic batcher: a bounded queue that groups
+//! same-configuration requests into batches.
 //!
 //! Requests arriving within `max_wait` that share `(model, k, mode)` are
-//! coalesced up to `max_batch` and executed in one artifact call — the
+//! coalesced up to `max_batch` and executed in one engine call — the
 //! classic dynamic-batching policy. Each request carries a oneshot-style
-//! channel for its response line.
+//! channel for its response line. The queue is bounded (`capacity`):
+//! [`Batcher::submit`] rejects instead of growing without limit, which is
+//! the server's backpressure signal ([`SubmitError::Overloaded`]).
+//!
+//! Shutdown has two flavours: [`Batcher::close`] stops intake and lets the
+//! worker drain what is queued (graceful), [`Batcher::stop`] aborts after
+//! the in-flight batch.
 
 use crate::coordinator::engine::Engine;
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::protocol::{format_error, format_response, InferenceRequest};
 use crate::rounding::RoundingMode;
 use std::collections::VecDeque;
@@ -36,106 +43,187 @@ pub struct BatchKey {
     pub mode: RoundingMode,
 }
 
-/// Shared state between submitters and the batching worker.
-pub struct Batcher {
-    queue: Mutex<VecDeque<Pending>>,
-    notify: Condvar,
-    shutdown: AtomicBool,
-    /// Maximum batch size per executable call.
-    pub max_batch: usize,
-    /// How long to linger for more same-key requests.
-    pub max_wait: Duration,
-}
-
-impl Batcher {
-    /// New batcher with the given policy.
-    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
-        Batcher {
-            queue: Mutex::new(VecDeque::new()),
-            notify: Condvar::new(),
-            shutdown: AtomicBool::new(false),
-            max_batch,
-            max_wait,
+impl BatchKey {
+    fn of(req: &InferenceRequest) -> BatchKey {
+        BatchKey {
+            model: req.model.clone(),
+            k: req.k,
+            mode: req.mode,
         }
     }
 
-    /// Enqueue a request.
-    pub fn submit(&self, p: Pending) {
-        self.queue.lock().unwrap().push_back(p);
-        self.notify.notify_one();
+    fn matches(&self, req: &InferenceRequest) -> bool {
+        req.model == self.model && req.k == self.k && req.mode == self.mode
+    }
+}
+
+/// Why a [`Batcher::submit`] was refused. The rejected request is handed
+/// back so the caller can reply to its client.
+pub enum SubmitError {
+    /// The bounded queue is full — backpressure; client should retry.
+    Overloaded(Pending),
+    /// The batcher is closed or stopped (server shutting down).
+    Closed(Pending),
+}
+
+impl std::fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded(p) => write!(f, "Overloaded(id={})", p.req.id),
+            SubmitError::Closed(p) => write!(f, "Closed(id={})", p.req.id),
+        }
+    }
+}
+
+/// Shared state between submitters and one shard's batching worker.
+pub struct Batcher {
+    queue: Mutex<VecDeque<Pending>>,
+    notify: Condvar,
+    closed: AtomicBool,
+    stopped: AtomicBool,
+    /// Maximum batch size per engine call.
+    pub max_batch: usize,
+    /// How long to linger for more same-key requests.
+    pub max_wait: Duration,
+    /// Bounded queue capacity (backpressure threshold).
+    pub capacity: usize,
+}
+
+impl Batcher {
+    /// New batcher with the given policy. `capacity` bounds the queue;
+    /// submissions beyond it are rejected with
+    /// [`SubmitError::Overloaded`].
+    pub fn new(max_batch: usize, max_wait: Duration, capacity: usize) -> Batcher {
+        Batcher {
+            queue: Mutex::new(VecDeque::new()),
+            notify: Condvar::new(),
+            closed: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
+            max_batch: max_batch.max(1),
+            max_wait,
+            capacity: capacity.max(1),
+        }
     }
 
-    /// Request worker shutdown (drains nothing; pending requests error out
-    /// when their channels drop).
-    pub fn stop(&self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+    /// Enqueue a request; rejects when the queue is full or the batcher is
+    /// shutting down.
+    pub fn submit(&self, p: Pending) -> Result<(), SubmitError> {
+        let mut q = self.queue.lock().unwrap();
+        // Flag check under the queue lock: close()/stop() set their flag
+        // before taking this lock, so a submitter that sees the flags
+        // clear here is guaranteed to enqueue before the worker observes
+        // shutdown — the request is drained (close) or cleared (stop),
+        // never stranded in a dead queue.
+        if self.closed.load(Ordering::SeqCst) || self.stopped.load(Ordering::SeqCst) {
+            return Err(SubmitError::Closed(p));
+        }
+        if q.len() >= self.capacity {
+            return Err(SubmitError::Overloaded(p));
+        }
+        q.push_back(p);
+        drop(q);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Graceful shutdown: refuse new submissions, let the worker drain the
+    /// queue and then exit.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        // Take the queue lock before notifying: a worker that checked the
+        // flag but has not yet parked in `wait` still holds the lock, so
+        // this blocks until it parks and the wakeup cannot be lost.
+        let _guard = self.queue.lock().unwrap();
         self.notify.notify_all();
+    }
+
+    /// Hard shutdown: the worker exits after its in-flight batch; queued
+    /// requests are dropped here so their channels close and waiting
+    /// clients error out immediately.
+    pub fn stop(&self) {
+        self.stopped.store(true, Ordering::SeqCst);
+        self.closed.store(true, Ordering::SeqCst);
+        let mut q = self.queue.lock().unwrap();
+        q.clear(); // drop Pendings -> their Senders -> receivers unblock
+        self.notify.notify_all();
+    }
+
+    /// True once `close` or `stop` has been called.
+    pub fn is_shutting_down(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
     }
 
     /// True once `stop` has been called.
     pub fn is_stopped(&self) -> bool {
-        self.shutdown.load(Ordering::SeqCst)
+        self.stopped.load(Ordering::SeqCst)
+    }
+
+    /// Current queue depth (approximate under concurrency).
+    pub fn depth(&self) -> usize {
+        self.queue.lock().unwrap().len()
     }
 
     /// Pull the next batch: blocks until at least one request is queued,
     /// lingers up to `max_wait` for same-key company, then drains up to
     /// `max_batch` matching requests (preserving arrival order of the
-    /// rest). Returns `None` on shutdown.
+    /// rest). Returns `None` on stop, or on close once the queue is empty.
     pub fn next_batch(&self) -> Option<(BatchKey, Vec<Pending>)> {
         let mut q = self.queue.lock().unwrap();
         loop {
-            if self.is_stopped() {
-                return None;
+            loop {
+                if self.is_stopped() {
+                    return None;
+                }
+                if !q.is_empty() {
+                    break;
+                }
+                if self.closed.load(Ordering::SeqCst) {
+                    return None; // graceful drain complete
+                }
+                q = self.notify.wait(q).unwrap();
             }
-            if !q.is_empty() {
-                break;
+            let key = BatchKey::of(&q.front().unwrap().req);
+            // Linger for stragglers while the batch is not full (skipped
+            // when shutting down — drain as fast as possible).
+            let deadline = Instant::now() + self.max_wait;
+            loop {
+                let matching = q.iter().filter(|p| key.matches(&p.req)).count();
+                if matching >= self.max_batch
+                    || Instant::now() >= deadline
+                    || self.is_shutting_down()
+                {
+                    break;
+                }
+                let (guard, _timeout) = self
+                    .notify
+                    .wait_timeout(q, deadline.saturating_duration_since(Instant::now()))
+                    .unwrap();
+                q = guard;
             }
-            q = self.notify.wait(q).unwrap();
+            // Drain matching requests.
+            let mut batch = Vec::new();
+            let mut rest = VecDeque::with_capacity(q.len());
+            while let Some(p) = q.pop_front() {
+                if key.matches(&p.req) && batch.len() < self.max_batch {
+                    batch.push(p);
+                } else {
+                    rest.push_back(p);
+                }
+            }
+            *q = rest;
+            if !batch.is_empty() {
+                return Some((key, batch));
+            }
+            // stop() cleared the queue while we lingered without the lock;
+            // loop back (the stopped check above returns None).
         }
-        let key = {
-            let first = q.front().unwrap();
-            BatchKey {
-                model: first.req.model.clone(),
-                k: first.req.k,
-                mode: first.req.mode,
-            }
-        };
-        // Linger for stragglers while the batch is not full.
-        let deadline = Instant::now() + self.max_wait;
-        loop {
-            let matching = q
-                .iter()
-                .filter(|p| {
-                    p.req.model == key.model && p.req.k == key.k && p.req.mode == key.mode
-                })
-                .count();
-            if matching >= self.max_batch || Instant::now() >= deadline || self.is_stopped() {
-                break;
-            }
-            let (guard, _timeout) = self
-                .notify
-                .wait_timeout(q, deadline.saturating_duration_since(Instant::now()))
-                .unwrap();
-            q = guard;
-        }
-        // Drain matching requests.
-        let mut batch = Vec::new();
-        let mut rest = VecDeque::with_capacity(q.len());
-        while let Some(p) = q.pop_front() {
-            let matches = p.req.model == key.model && p.req.k == key.k && p.req.mode == key.mode;
-            if matches && batch.len() < self.max_batch {
-                batch.push(p);
-            } else {
-                rest.push_back(p);
-            }
-        }
-        *q = rest;
-        Some((key, batch))
     }
 }
 
-/// The batching worker loop: pull → execute → respond. Returns on shutdown.
-pub fn worker_loop(batcher: &Batcher, engine: &Engine, metrics: &Metrics) {
+/// One shard's batching worker loop: pull → execute → respond. Returns on
+/// shutdown (after draining, for a graceful close). `shard` tags response
+/// lines so clients can observe the routing.
+pub fn worker_loop(batcher: &Batcher, engine: &Engine, metrics: &ShardMetrics, shard: usize) {
     while let Some((key, batch)) = batcher.next_batch() {
         let pixel_refs: Vec<&[f64]> = batch.iter().map(|p| p.req.pixels.as_slice()).collect();
         metrics.record_batch(batch.len());
@@ -147,9 +235,11 @@ pub fn worker_loop(batcher: &Batcher, engine: &Engine, metrics: &Metrics) {
                     let line = format_response(
                         p.req.id,
                         out.pred,
+                        key.mode,
                         &out.logits,
                         latency_us,
                         batch.len(),
+                        shard,
                     );
                     let _ = p.respond_to.send(line);
                 }
@@ -180,7 +270,12 @@ mod tests {
         }
     }
 
-    fn pending(model: &str, k: u32, mode: RoundingMode, id: u64) -> (Pending, std::sync::mpsc::Receiver<String>) {
+    fn pending(
+        model: &str,
+        k: u32,
+        mode: RoundingMode,
+        id: u64,
+    ) -> (Pending, std::sync::mpsc::Receiver<String>) {
         let (tx, rx) = channel();
         (
             Pending {
@@ -194,13 +289,13 @@ mod tests {
 
     #[test]
     fn groups_same_key_requests() {
-        let b = Batcher::new(8, Duration::from_millis(1));
+        let b = Batcher::new(8, Duration::from_millis(1), 64);
         for i in 0..3 {
             let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
-            b.submit(p);
+            b.submit(p).unwrap();
         }
         let (p, _rx) = pending("digits_linear", 2, RoundingMode::Dither, 99);
-        b.submit(p);
+        b.submit(p).unwrap();
         let (key, batch) = b.next_batch().unwrap();
         assert_eq!(key.k, 4);
         assert_eq!(batch.len(), 3);
@@ -213,10 +308,10 @@ mod tests {
 
     #[test]
     fn respects_max_batch() {
-        let b = Batcher::new(2, Duration::from_millis(1));
+        let b = Batcher::new(2, Duration::from_millis(1), 64);
         for i in 0..5 {
             let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
-            b.submit(p);
+            b.submit(p).unwrap();
         }
         let (_, batch) = b.next_batch().unwrap();
         assert_eq!(batch.len(), 2);
@@ -228,10 +323,10 @@ mod tests {
 
     #[test]
     fn preserves_arrival_order_within_key() {
-        let b = Batcher::new(8, Duration::from_millis(1));
+        let b = Batcher::new(8, Duration::from_millis(1), 64);
         for i in 0..4 {
             let (p, _rx) = pending("digits_linear", 4, RoundingMode::Stochastic, i);
-            b.submit(p);
+            b.submit(p).unwrap();
         }
         let (_, batch) = b.next_batch().unwrap();
         let ids: Vec<u64> = batch.iter().map(|p| p.req.id).collect();
@@ -239,8 +334,56 @@ mod tests {
     }
 
     #[test]
+    fn bounded_queue_rejects_overload() {
+        let b = Batcher::new(8, Duration::from_millis(1), 2);
+        for i in 0..2 {
+            let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
+            b.submit(p).unwrap();
+        }
+        assert_eq!(b.depth(), 2);
+        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 9);
+        match b.submit(p) {
+            Err(SubmitError::Overloaded(back)) => assert_eq!(back.req.id, 9),
+            other => panic!("expected overload, got {other:?}"),
+        }
+        assert_eq!(b.depth(), 2, "rejected request must not occupy the queue");
+        // Draining frees capacity again.
+        let (_, batch) = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.depth(), 0);
+        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 10);
+        assert!(b.submit(p).is_ok());
+    }
+
+    #[test]
+    fn closed_batcher_rejects_submissions() {
+        let b = Batcher::new(8, Duration::from_millis(1), 8);
+        b.close();
+        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 1);
+        match b.submit(p) {
+            Err(SubmitError::Closed(back)) => assert_eq!(back.req.id, 1),
+            other => panic!("expected closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_drains_queue_then_ends() {
+        let b = Batcher::new(2, Duration::from_millis(1), 8);
+        for i in 0..3 {
+            let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
+            b.submit(p).unwrap();
+        }
+        b.close();
+        // Queued work is still handed out...
+        assert_eq!(b.next_batch().unwrap().1.len(), 2);
+        assert_eq!(b.next_batch().unwrap().1.len(), 1);
+        // ...then the worker is released.
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
     fn stop_unblocks_worker() {
-        let b = Arc::new(Batcher::new(8, Duration::from_millis(1)));
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(1), 8));
         let b2 = b.clone();
         let handle = std::thread::spawn(move || b2.next_batch().is_none());
         std::thread::sleep(Duration::from_millis(20));
@@ -249,16 +392,25 @@ mod tests {
     }
 
     #[test]
+    fn stop_discards_queued_requests() {
+        let b = Batcher::new(8, Duration::from_millis(1), 8);
+        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 1);
+        b.submit(p).unwrap();
+        b.stop();
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
     fn lingers_to_fill_batch() {
-        let b = Arc::new(Batcher::new(4, Duration::from_millis(200)));
+        let b = Arc::new(Batcher::new(4, Duration::from_millis(200), 64));
         let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 0);
-        b.submit(p);
+        b.submit(p).unwrap();
         let b2 = b.clone();
         let submitter = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(30));
             for i in 1..4 {
                 let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
-                b2.submit(p);
+                b2.submit(p).unwrap();
                 std::mem::forget(rx);
             }
         });

@@ -1,37 +1,27 @@
-//! Inference engine: owns the trained models and the PJRT runtime, and
-//! executes batches against the AOT artifacts.
+//! Inference engine: executes batches against the trained model zoo with
+//! the in-tree quantized engines.
 //!
-//! The engine is the boundary between L3 (request coordination) and L2/L1
-//! (the compiled JAX/Pallas computation): it marshals a batch of requests
-//! into input literals — weights, scalars, calibrated ranges — and reads
-//! back logits. Python is never involved.
+//! The engine is the boundary between L3 (request coordination) and the
+//! numeric core: it marshals a batch of same-`(model, k, scheme)` requests
+//! into one matrix, runs the reduced-precision forward pass
+//! ([`crate::nn::quantized_forward`]) under the requested rounding scheme,
+//! and reads back logits. Model state ([`Zoo`]) is shared across all
+//! serving shards behind an `Arc`; each shard owns its own `Engine`, whose
+//! per-engine seed counter decorrelates the stochastic/dither rounding
+//! streams between shards without any cross-shard synchronization.
 
-use crate::coordinator::protocol::mode_code;
-use crate::data::{Dataset, Task};
-use crate::nn::{ActivationRanges, Mlp};
+use crate::linalg::{Matrix, Variant};
+use crate::nn::{quantized_forward, QuantInferenceConfig};
 use crate::rounding::RoundingMode;
-use crate::runtime::client::{
-    f32_scalar, i32_scalar, matrix_literal, padded_batch_literal, u32_scalar, vec_literal,
-};
-use crate::runtime::Runtime;
-use crate::train::{trained_model, ModelSpec};
-use anyhow::{bail, Result};
+use crate::train::Zoo;
+use crate::util::error::Result;
+use crate::{bail, err};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-/// One model family's serving state.
-struct ModelState {
-    mlp: Mlp,
-    /// Hidden-layer half-ranges (fashion only; empty for linear).
-    hidden_half_ranges: Vec<f64>,
-    /// Float test accuracy at load time (reported in logs).
-    float_accuracy: f64,
-}
-
-/// The serving engine.
+/// The serving engine: shared model zoo + a private rounding-seed stream.
 pub struct Engine {
-    runtime: Runtime,
-    digits: ModelState,
-    fashion: ModelState,
+    zoo: Arc<Zoo>,
     seed_counter: AtomicU64,
 }
 
@@ -45,35 +35,39 @@ pub struct InferenceOutput {
 }
 
 impl Engine {
-    /// Build the engine: PJRT client + artifacts + trained models (cached
-    /// under `artifacts/weights/`, trained on first run).
-    pub fn new(artifacts_dir: &str, train_n: usize, seed: u64) -> Result<Engine> {
-        let runtime = Runtime::cpu(artifacts_dir)?;
-        let digits = load_state(ModelSpec::DigitsLinear, train_n, seed)?;
-        let fashion = load_state(ModelSpec::FashionMlp, train_n, seed)?;
-        Ok(Engine {
-            runtime,
-            digits,
-            fashion,
+    /// Engine over an already-loaded zoo (the serving path: one zoo, one
+    /// engine per shard). `seed` seeds this engine's rounding stream; give
+    /// each shard a distinct value.
+    pub fn from_zoo(zoo: Arc<Zoo>, seed: u64) -> Engine {
+        Engine {
+            zoo,
             seed_counter: AtomicU64::new(seed),
-        })
+        }
     }
 
-    /// The underlying runtime (for reporting).
-    pub fn runtime(&self) -> &Runtime {
-        &self.runtime
+    /// Standalone engine that loads (or trains + caches) its own zoo.
+    /// `train_n` is the training-set size used on cache miss.
+    pub fn new(train_n: usize, seed: u64) -> Engine {
+        Engine::from_zoo(Arc::new(Zoo::load(train_n, seed)), seed)
+    }
+
+    /// The shared model zoo.
+    pub fn zoo(&self) -> &Zoo {
+        &self.zoo
     }
 
     /// Float (unquantized) test accuracy of a model family.
     pub fn float_accuracy(&self, model: &str) -> Option<f64> {
-        match model {
-            "digits_linear" => Some(self.digits.float_accuracy),
-            "fashion_mlp" => Some(self.fashion.float_accuracy),
-            _ => None,
-        }
+        self.zoo.get(model).map(|m| m.float_accuracy)
     }
 
-    /// Execute a batch of same-(model, k, mode) requests.
+    /// Execute a batch of same-(model, k, scheme) requests.
+    ///
+    /// Deterministic rounding ignores the seed stream, so its outputs are
+    /// bit-reproducible across engines and calls; stochastic and dither
+    /// rounding consume one seed per batch, so repeated calls sample fresh
+    /// rounding noise (the unbiased-in-expectation serving behaviour the
+    /// paper's §VII comparison needs).
     pub fn infer_batch(
         &self,
         model: &str,
@@ -84,41 +78,37 @@ impl Engine {
         if pixels.is_empty() {
             return Ok(Vec::new());
         }
-        let artifact = self.runtime.pick_batch_artifact(model, pixels.len())?;
-        let loaded = self.runtime.load(&artifact)?;
-        let batch = loaded.meta.batch;
-        // Oversized batches are split recursively.
-        if pixels.len() > batch {
-            let (head, tail) = pixels.split_at(batch);
-            let mut out = self.infer_batch(model, k, mode, head)?;
-            out.extend(self.infer_batch(model, k, mode, tail)?);
-            return Ok(out);
+        if !(1..=16).contains(&k) {
+            bail!("k={k} out of range 1..=16");
         }
-        let seed = self.seed_counter.fetch_add(1, Ordering::Relaxed) as u32;
-        let x = padded_batch_literal(pixels, 784, batch)?;
-        let state = match model {
-            "digits_linear" => &self.digits,
-            "fashion_mlp" => &self.fashion,
-            other => bail!("unknown model family {other:?}"),
+        let state = self
+            .zoo
+            .get(model)
+            .ok_or_else(|| err!("unknown model family {model:?}"))?;
+        let dim = state.mlp.layers[0].in_dim();
+        let mut x = Matrix::zeros(pixels.len(), dim);
+        for (i, row) in pixels.iter().enumerate() {
+            if row.len() != dim {
+                bail!(
+                    "request {i}: expected {dim} pixels for {model}, got {}",
+                    row.len()
+                );
+            }
+            x.row_mut(i).copy_from_slice(row);
+        }
+        // One seed per batch: deterministic mode never reads it, the
+        // unbiased modes get a fresh rounding stream each call.
+        let seed = self.seed_counter.fetch_add(1, Ordering::Relaxed);
+        let cfg = QuantInferenceConfig {
+            bits: k,
+            mode,
+            variant: Variant::Separate,
+            seed,
         };
-        let mut inputs: Vec<xla::Literal> = vec![x];
-        for layer in &state.mlp.layers {
-            inputs.push(matrix_literal(&layer.weights)?);
-            inputs.push(vec_literal(&layer.bias));
-        }
-        inputs.push(i32_scalar(k as i32));
-        inputs.push(i32_scalar(mode_code(mode)));
-        inputs.push(u32_scalar(seed));
-        for &r in &state.hidden_half_ranges {
-            inputs.push(f32_scalar(r as f32));
-        }
-        let (_rows, cols, data) = loaded.run_f32(&inputs)?;
+        let logits_matrix = quantized_forward(&state.mlp, &x, &state.ranges, &cfg);
         let mut out = Vec::with_capacity(pixels.len());
         for i in 0..pixels.len() {
-            let logits: Vec<f64> = data[i * cols..(i + 1) * cols]
-                .iter()
-                .map(|&v| v as f64)
-                .collect();
+            let logits = logits_matrix.row(i).to_vec();
             let pred = logits
                 .iter()
                 .enumerate()
@@ -131,24 +121,61 @@ impl Engine {
     }
 }
 
-fn load_state(spec: ModelSpec, train_n: usize, seed: u64) -> Result<ModelState> {
-    let (mlp, _test, float_accuracy) = trained_model(spec, train_n, train_n / 5, seed);
-    // Calibrate hidden ranges on a small synthetic batch.
-    let calib = Dataset::synthesize(spec.task(), 64, seed ^ 0xCA11B);
-    let ranges = ActivationRanges::calibrate(&mlp, &calib.images);
-    let hidden_half_ranges: Vec<f64> =
-        ranges.per_layer[1..].iter().map(|&(_, hi)| hi).collect();
-    let _ = Task::Digits; // (Task used via spec.task())
-    Ok(ModelState {
-        mlp,
-        hidden_half_ranges,
-        float_accuracy,
-    })
-}
-
 #[cfg(test)]
 mod tests {
-    // Engine tests live in rust/tests/integration_serving.rs (they need the
-    // artifacts directory built by `make artifacts`). Unit coverage for the
-    // pieces lives in runtime::client and coordinator::protocol.
+    use super::*;
+
+    fn tiny_engine() -> Engine {
+        Engine::new(200, 7)
+    }
+
+    #[test]
+    fn deterministic_is_reproducible_and_unbiased_modes_vary() {
+        let engine = tiny_engine();
+        let ds = crate::data::Dataset::synthesize(crate::data::Task::Digits, 4, 0xE19);
+        let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
+        let a = engine
+            .infer_batch("digits_linear", 3, RoundingMode::Deterministic, &pixels)
+            .unwrap();
+        let b = engine
+            .infer_batch("digits_linear", 3, RoundingMode::Deterministic, &pixels)
+            .unwrap();
+        assert!(a.iter().zip(&b).all(|(x, y)| x.logits == y.logits));
+        let c = engine
+            .infer_batch("digits_linear", 3, RoundingMode::Dither, &pixels)
+            .unwrap();
+        let d = engine
+            .infer_batch("digits_linear", 3, RoundingMode::Dither, &pixels)
+            .unwrap();
+        assert!(
+            c.iter().zip(&d).any(|(x, y)| x.logits != y.logits),
+            "dither logits should vary across batches (seed advances)"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let engine = tiny_engine();
+        let short = vec![0.0f64; 10];
+        let rows: Vec<&[f64]> = vec![&short];
+        assert!(engine
+            .infer_batch("digits_linear", 4, RoundingMode::Dither, &rows)
+            .is_err());
+        let ok = vec![0.0f64; 784];
+        let rows: Vec<&[f64]> = vec![&ok];
+        assert!(engine
+            .infer_batch("no_such_model", 4, RoundingMode::Dither, &rows)
+            .is_err());
+        assert!(engine
+            .infer_batch("digits_linear", 0, RoundingMode::Dither, &rows)
+            .is_err());
+        assert!(engine
+            .infer_batch("digits_linear", 17, RoundingMode::Dither, &rows)
+            .is_err());
+        let empty: Vec<&[f64]> = Vec::new();
+        assert!(engine
+            .infer_batch("digits_linear", 4, RoundingMode::Dither, &empty)
+            .unwrap()
+            .is_empty());
+    }
 }

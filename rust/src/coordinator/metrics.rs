@@ -1,96 +1,209 @@
-//! Serving metrics: counters and latency percentiles for the coordinator.
+//! Serving metrics: per-shard lock-free counters, merged on scrape.
+//!
+//! The hot path (batch workers, connection threads) only touches its own
+//! shard's [`ShardMetrics`] — plain relaxed atomics, no shared lock — so
+//! counting never serializes shards against each other. The `stats`
+//! command walks every shard and merges counters plus the log₂ latency
+//! histograms into one JSON snapshot.
 
 use crate::util::json::Json;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
-/// Thread-safe metrics registry.
+/// Number of log₂ latency buckets: bucket `i` holds latencies in
+/// `[2^(i-1), 2^i)` µs (bucket 0 is exactly 0 µs). 2^38 µs ≈ 3 days, far
+/// beyond any request timeout.
+const BUCKETS: usize = 40;
+
+/// One shard's counters. All operations are relaxed atomics.
 #[derive(Debug)]
-pub struct Metrics {
-    inner: Mutex<Inner>,
-    started: Instant,
+pub struct ShardMetrics {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    rejected: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    latency_sum_us: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS],
 }
 
-#[derive(Debug, Default)]
-struct Inner {
-    requests: u64,
-    errors: u64,
-    batches: u64,
-    batched_requests: u64,
-    latencies_us: Vec<u64>,
-}
-
-impl Default for Metrics {
+impl Default for ShardMetrics {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl Metrics {
-    /// Fresh registry.
-    pub fn new() -> Metrics {
-        Metrics {
-            inner: Mutex::new(Inner::default()),
-            started: Instant::now(),
+impl ShardMetrics {
+    /// Fresh zeroed counters.
+    pub fn new() -> ShardMetrics {
+        ShardMetrics {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            latency_sum_us: AtomicU64::new(0),
+            latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 
     /// Record one completed request with its end-to-end latency.
     pub fn record_request(&self, latency_us: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.requests += 1;
-        // Reservoir-less cap: keep the most recent 100k latencies.
-        if g.latencies_us.len() >= 100_000 {
-            g.latencies_us.clear();
-        }
-        g.latencies_us.push(latency_us);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
+        self.latency_buckets[bucket_index(latency_us)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a protocol or execution error.
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an overload rejection (bounded queue full).
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one executed batch of the given size.
     pub fn record_batch(&self, size: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.batches += 1;
-        g.batched_requests += size as u64;
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
     }
 
-    /// Snapshot as a JSON line (the `stats` command response).
-    pub fn snapshot_json(&self) -> String {
-        let g = self.inner.lock().unwrap();
-        let mut lat = g.latencies_us.clone();
-        lat.sort_unstable();
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                return 0.0;
+    /// Requests completed so far.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    fn fold_into(&self, acc: &mut Merged) {
+        acc.requests += self.requests.load(Ordering::Relaxed);
+        acc.errors += self.errors.load(Ordering::Relaxed);
+        acc.rejected += self.rejected.load(Ordering::Relaxed);
+        acc.batches += self.batches.load(Ordering::Relaxed);
+        acc.batched_requests += self.batched_requests.load(Ordering::Relaxed);
+        acc.latency_sum_us += self.latency_sum_us.load(Ordering::Relaxed);
+        for (slot, bucket) in acc.buckets.iter_mut().zip(&self.latency_buckets) {
+            *slot += bucket.load(Ordering::Relaxed);
+        }
+    }
+}
+
+/// Map a latency to its log₂ bucket.
+fn bucket_index(latency_us: u64) -> usize {
+    ((u64::BITS - latency_us.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Upper edge (µs) of a bucket, used as the percentile estimate.
+fn bucket_upper(index: usize) -> u64 {
+    if index == 0 {
+        0
+    } else {
+        (1u64 << index) - 1
+    }
+}
+
+#[derive(Default)]
+struct Merged {
+    requests: u64,
+    errors: u64,
+    rejected: u64,
+    batches: u64,
+    batched_requests: u64,
+    latency_sum_us: u64,
+    buckets: [u64; BUCKETS],
+}
+
+impl Merged {
+    /// Percentile estimate from the merged histogram (upper bucket edge).
+    fn percentile_us(&self, p: f64) -> f64 {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((total as f64) * p).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &count) in self.buckets.iter().enumerate() {
+            seen += count;
+            if seen >= rank {
+                return bucket_upper(i) as f64;
             }
-            let idx = ((lat.len() - 1) as f64 * p).round() as usize;
-            lat[idx] as f64
-        };
-        let mean_batch = if g.batches == 0 {
+        }
+        bucket_upper(BUCKETS - 1) as f64
+    }
+}
+
+/// The registry: one [`ShardMetrics`] slot per serving shard.
+/// Connection-level events (parse errors, overload rejections) are
+/// recorded into the slot of the shard the connection is routed to.
+#[derive(Debug)]
+pub struct Metrics {
+    shards: Vec<Arc<ShardMetrics>>,
+    started: Instant,
+}
+
+impl Metrics {
+    /// Registry with `num_shards` shard slots (at least one).
+    pub fn new(num_shards: usize) -> Metrics {
+        Metrics {
+            shards: (0..num_shards.max(1)).map(|_| Arc::new(ShardMetrics::new())).collect(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Shard `i`'s counters (shared handle).
+    pub fn shard(&self, i: usize) -> Arc<ShardMetrics> {
+        self.shards[i % self.shards.len()].clone()
+    }
+
+    /// Number of shard slots.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total requests completed across all shards.
+    pub fn total_requests(&self) -> u64 {
+        self.shards.iter().map(|s| s.requests()).sum()
+    }
+
+    /// Snapshot as a JSON line (the `stats` command response), merging all
+    /// shards.
+    pub fn snapshot_json(&self) -> String {
+        let mut m = Merged::default();
+        for shard in &self.shards {
+            shard.fold_into(&mut m);
+        }
+        let mean_batch = if m.batches == 0 {
             0.0
         } else {
-            g.batched_requests as f64 / g.batches as f64
+            m.batched_requests as f64 / m.batches as f64
+        };
+        let mean_us = if m.requests == 0 {
+            0.0
+        } else {
+            m.latency_sum_us as f64 / m.requests as f64
         };
         let uptime = self.started.elapsed().as_secs_f64();
         let throughput = if uptime > 0.0 {
-            g.requests as f64 / uptime
+            m.requests as f64 / uptime
         } else {
             0.0
         };
+        let per_shard: Vec<f64> = self.shards.iter().map(|s| s.requests() as f64).collect();
         Json::obj(vec![
-            ("requests", Json::Num(g.requests as f64)),
-            ("errors", Json::Num(g.errors as f64)),
-            ("batches", Json::Num(g.batches as f64)),
+            ("requests", Json::Num(m.requests as f64)),
+            ("errors", Json::Num(m.errors as f64)),
+            ("rejected", Json::Num(m.rejected as f64)),
+            ("batches", Json::Num(m.batches as f64)),
             ("mean_batch", Json::Num(mean_batch)),
-            ("p50_us", Json::Num(pct(0.50))),
-            ("p95_us", Json::Num(pct(0.95))),
-            ("p99_us", Json::Num(pct(0.99))),
+            ("mean_us", Json::Num(mean_us)),
+            ("p50_us", Json::Num(m.percentile_us(0.50))),
+            ("p95_us", Json::Num(m.percentile_us(0.95))),
+            ("p99_us", Json::Num(m.percentile_us(0.99))),
             ("uptime_s", Json::Num(uptime)),
             ("throughput_rps", Json::Num(throughput)),
+            ("shards", Json::Num(self.shards.len() as f64)),
+            ("per_shard_requests", Json::nums(&per_shard)),
         ])
         .to_string()
     }
@@ -101,26 +214,57 @@ mod tests {
     use super::*;
 
     #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(495), 9);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(9), 511);
+    }
+
+    #[test]
     fn records_and_snapshots() {
-        let m = Metrics::new();
-        for i in 0..100 {
-            m.record_request(i * 10);
+        let m = Metrics::new(2);
+        for i in 0..100u64 {
+            m.shard((i % 2) as usize).record_request(i * 10);
         }
-        m.record_batch(8);
-        m.record_batch(4);
-        m.record_error();
+        m.shard(0).record_batch(8);
+        m.shard(1).record_batch(4);
+        m.shard(0).record_error();
+        m.shard(1).record_rejected();
         let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
         assert_eq!(json.get("requests").unwrap().as_f64(), Some(100.0));
         assert_eq!(json.get("errors").unwrap().as_f64(), Some(1.0));
+        assert_eq!(json.get("rejected").unwrap().as_f64(), Some(1.0));
         assert_eq!(json.get("mean_batch").unwrap().as_f64(), Some(6.0));
+        assert_eq!(json.get("shards").unwrap().as_f64(), Some(2.0));
+        // Latencies 0,10,..,990: p50 lands in the [256, 512) µs bucket.
         let p50 = json.get("p50_us").unwrap().as_f64().unwrap();
         assert!((400.0..=600.0).contains(&p50), "p50={p50}");
+        let p99 = json.get("p99_us").unwrap().as_f64().unwrap();
+        assert!(p99 >= p50, "p99={p99} < p50={p50}");
+        let per_shard = json.get("per_shard_requests").unwrap().as_f64_vec().unwrap();
+        assert_eq!(per_shard, vec![50.0, 50.0]);
     }
 
     #[test]
     fn empty_snapshot_is_valid() {
-        let m = Metrics::new();
+        let m = Metrics::new(4);
         let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
         assert_eq!(json.get("p95_us").unwrap().as_f64(), Some(0.0));
+        assert_eq!(json.get("requests").unwrap().as_f64(), Some(0.0));
+        assert_eq!(json.get("shards").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn shard_indexing_wraps() {
+        let m = Metrics::new(3);
+        m.shard(5).record_request(1); // 5 % 3 == 2
+        assert_eq!(m.shard(2).requests(), 1);
+        assert_eq!(m.total_requests(), 1);
     }
 }

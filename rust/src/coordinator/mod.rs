@@ -1,23 +1,28 @@
-//! L3 coordinator: the serving stack around the compiled artifacts.
+//! L3 coordinator: the sharded serving stack around the quantized engines.
 //!
 //! The paper's contribution is a numeric format, so the coordinator is a
 //! focused (but real) inference server: newline-JSON TCP protocol
-//! ([`protocol`]), dynamic batching by `(model, k, rounding-mode)`
-//! ([`batcher`]), model + runtime glue ([`engine`]), serving metrics
-//! ([`metrics`]), and the threaded TCP front-end ([`server`]).
+//! ([`protocol`]), K worker shards each owning an engine and a bounded
+//! dynamic batcher ([`shard`], [`batcher`]), the model zoo + numeric glue
+//! ([`engine`]), per-shard lock-free serving metrics ([`metrics`]), and
+//! the threaded TCP front-end with hash-routed connections and graceful
+//! shutdown ([`server`]).
 //!
 //! Per-request rounding configuration is the point: a client can A/B
-//! deterministic vs dither rounding at any bit width against the same
-//! loaded model with one JSON field.
+//! deterministic vs stochastic vs dither rounding at any bit width against
+//! the same loaded models with one JSON field — the paper's three-way
+//! comparison as a live serving scenario.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
+pub mod shard;
 
-pub use batcher::{Batcher, Pending};
+pub use batcher::{Batcher, Pending, SubmitError};
 pub use engine::{Engine, InferenceOutput};
-pub use metrics::Metrics;
-pub use protocol::{parse_message, InferenceRequest, Message};
-pub use server::{serve, ServerConfig};
+pub use metrics::{Metrics, ShardMetrics};
+pub use protocol::{format_request, parse_message, InferenceRequest, Message};
+pub use server::{ping, serve, wait_ready, ServerConfig};
+pub use shard::{ShardConfig, ShardPool};

@@ -2,14 +2,19 @@
 //!
 //! Request:
 //! ```json
-//! {"id": 1, "model": "digits_linear", "k": 4, "mode": "dither",
+//! {"id": 1, "model": "digits_linear", "k": 4, "scheme": "dither",
 //!  "pixels": [784 floats in 0..1]}
 //! ```
+//! `"mode"` is accepted as an alias for `"scheme"` (older clients).
 //! Response:
 //! ```json
-//! {"id": 1, "pred": 7, "logits": [...], "latency_us": 412, "batch": 8}
+//! {"id": 1, "pred": 7, "scheme": "dither", "logits": [...],
+//!  "latency_us": 412, "batch": 8, "shard": 2}
 //! ```
 //! Control: `{"cmd": "ping"}`, `{"cmd": "stats"}`, `{"cmd": "shutdown"}`.
+//! Overload (bounded shard queue full) is an error reply with an explicit
+//! marker so clients can back off: `{"id": 1, "error": "overloaded",
+//! "overloaded": true}`.
 
 use crate::rounding::RoundingMode;
 use crate::util::json::Json;
@@ -70,11 +75,13 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
     if !(1..=16).contains(&k) {
         return Err(format!("k={k} out of range 1..=16"));
     }
+    // "scheme" is the documented field; "mode" remains as an alias.
     let mode = json
-        .get("mode")
+        .get("scheme")
+        .or_else(|| json.get("mode"))
         .and_then(Json::as_str)
         .and_then(RoundingMode::from_str)
-        .ok_or("missing or invalid 'mode'")?;
+        .ok_or("missing or invalid 'scheme'")?;
     let pixels = json
         .get("pixels")
         .and_then(Json::as_f64_vec)
@@ -91,14 +98,38 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
     }))
 }
 
+/// Build a request line — the client side of [`parse_message`]. Every
+/// in-tree client (examples, load generator, tests, benches) goes through
+/// this so a protocol change cannot leave a stale hand-built copy behind.
+pub fn format_request(id: u64, model: &str, k: u32, mode: RoundingMode, pixels: &[f64]) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("model", Json::Str(model.to_string())),
+        ("k", Json::Num(k as f64)),
+        ("scheme", Json::Str(mode.name().to_string())),
+        ("pixels", Json::nums(pixels)),
+    ])
+    .to_string()
+}
+
 /// Successful inference response line.
-pub fn format_response(id: u64, pred: u8, logits: &[f64], latency_us: u64, batch: usize) -> String {
+pub fn format_response(
+    id: u64,
+    pred: u8,
+    mode: RoundingMode,
+    logits: &[f64],
+    latency_us: u64,
+    batch: usize,
+    shard: usize,
+) -> String {
     Json::obj(vec![
         ("id", Json::Num(id as f64)),
         ("pred", Json::Num(pred as f64)),
+        ("scheme", Json::Str(mode.name().to_string())),
         ("logits", Json::nums(logits)),
         ("latency_us", Json::Num(latency_us as f64)),
         ("batch", Json::Num(batch as f64)),
+        ("shard", Json::Num(shard as f64)),
     ])
     .to_string()
 }
@@ -112,8 +143,23 @@ pub fn format_error(id: u64, error: &str) -> String {
     .to_string()
 }
 
-/// The rounding-mode wire encoding shared with the Pallas kernel
-/// (0 = deterministic, 1 = stochastic, 2 = dither).
+/// Overload (backpressure) response line: the shard's bounded queue was
+/// full, the client should back off and retry.
+pub fn format_overloaded(id: u64) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("error", Json::Str("overloaded".to_string())),
+        ("overloaded", Json::Bool(true)),
+    ])
+    .to_string()
+}
+
+/// The rounding-mode wire encoding shared with the Pallas kernels
+/// (0 = deterministic, 1 = stochastic, 2 = dither). The Rust serving path
+/// no longer marshals these codes (the PJRT bridge is gone), but
+/// `python/compile/kernels/ref.py` and the AOT artifacts still take them
+/// as an input scalar — this function and its test pin the contract until
+/// an executable bridge returns (see ROADMAP "Open items").
 pub fn mode_code(mode: RoundingMode) -> i32 {
     match mode {
         RoundingMode::Deterministic => 0,
@@ -129,7 +175,7 @@ mod tests {
     fn sample_request(k: u32) -> String {
         let pixels: Vec<String> = (0..784).map(|i| format!("{}", i as f64 / 784.0)).collect();
         format!(
-            "{{\"id\": 42, \"model\": \"digits_linear\", \"k\": {k}, \"mode\": \"dither\", \"pixels\": [{}]}}",
+            "{{\"id\": 42, \"model\": \"digits_linear\", \"k\": {k}, \"scheme\": \"dither\", \"pixels\": [{}]}}",
             pixels.join(",")
         )
     }
@@ -144,6 +190,21 @@ mod tests {
                 assert_eq!(r.mode, RoundingMode::Dither);
                 assert_eq!(r.pixels.len(), 784);
             }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mode_is_accepted_as_scheme_alias() {
+        let line = sample_request(4).replace("\"scheme\"", "\"mode\"");
+        assert!(matches!(parse_message(&line), Ok(Message::Infer(_))));
+        // "scheme" wins when both are present.
+        let both = sample_request(4).replace(
+            "\"scheme\": \"dither\"",
+            "\"scheme\": \"stochastic\", \"mode\": \"dither\"",
+        );
+        match parse_message(&both).unwrap() {
+            Message::Infer(r) => assert_eq!(r.mode, RoundingMode::Stochastic),
             other => panic!("wrong message {other:?}"),
         }
     }
@@ -170,20 +231,52 @@ mod tests {
         assert!(parse_message(&sample_request(17)).is_err());
         // wrong pixel count
         assert!(parse_message(
-            "{\"id\":1,\"k\":4,\"mode\":\"dither\",\"pixels\":[1,2,3]}"
+            "{\"id\":1,\"k\":4,\"scheme\":\"dither\",\"pixels\":[1,2,3]}"
+        )
+        .is_err());
+        // bad scheme spelling
+        assert!(parse_message(
+            &sample_request(4).replace("\"dither\"", "\"fuzzy\"")
         )
         .is_err());
     }
 
     #[test]
+    fn request_roundtrip() {
+        let pixels: Vec<f64> = (0..784).map(|i| i as f64 / 784.0).collect();
+        let line = format_request(11, "fashion_mlp", 6, RoundingMode::Stochastic, &pixels);
+        match parse_message(&line).unwrap() {
+            Message::Infer(r) => {
+                assert_eq!(r.id, 11);
+                assert_eq!(r.model, "fashion_mlp");
+                assert_eq!(r.k, 6);
+                assert_eq!(r.mode, RoundingMode::Stochastic);
+                assert_eq!(r.pixels.len(), 784);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
     fn response_roundtrip() {
-        let line = format_response(7, 3, &[0.1, 0.9], 250, 4);
+        let line = format_response(7, 3, RoundingMode::Dither, &[0.1, 0.9], 250, 4, 2);
         let json = Json::parse(&line).unwrap();
         assert_eq!(json.get("id").unwrap().as_f64(), Some(7.0));
         assert_eq!(json.get("pred").unwrap().as_f64(), Some(3.0));
+        assert_eq!(json.get("scheme").unwrap().as_str(), Some("dither"));
         assert_eq!(json.get("batch").unwrap().as_f64(), Some(4.0));
+        assert_eq!(json.get("shard").unwrap().as_f64(), Some(2.0));
         let err = format_error(7, "bad");
         assert!(Json::parse(&err).unwrap().get("error").is_some());
+    }
+
+    #[test]
+    fn overload_reply_is_marked() {
+        let line = format_overloaded(9);
+        let json = Json::parse(&line).unwrap();
+        assert_eq!(json.get("id").unwrap().as_f64(), Some(9.0));
+        assert_eq!(json.get("overloaded").unwrap().as_bool(), Some(true));
+        assert_eq!(json.get("error").unwrap().as_str(), Some("overloaded"));
     }
 
     #[test]

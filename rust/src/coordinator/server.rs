@@ -1,12 +1,23 @@
 //! The TCP inference server: accept loop, per-connection readers, and the
-//! batching workers. Plain threads — the request path is CPU-bound model
-//! execution, so an async runtime would buy nothing here.
+//! sharded batching core. Plain threads — the request path is CPU-bound
+//! model execution, so an async runtime would buy nothing here.
+//!
+//! Scale shape: the accept loop hash-routes each connection onto one of K
+//! serving shards ([`crate::coordinator::shard`]); connection threads only
+//! touch their shard's bounded queue and metrics slot, so adding shards
+//! adds throughput without adding contention. Shutdown is graceful: the
+//! `shutdown` command stops intake everywhere, shards drain their queues,
+//! and every thread is joined before `serve` returns.
 
-use crate::coordinator::batcher::{worker_loop, Batcher, Pending};
-use crate::coordinator::engine::Engine;
+use crate::coordinator::batcher::{Pending, SubmitError};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::protocol::{format_error, parse_message, Message};
-use anyhow::{Context, Result};
+use crate::coordinator::protocol::{
+    format_error, format_overloaded, parse_message, Message,
+};
+use crate::coordinator::shard::{ShardConfig, ShardPool};
+use crate::train::Zoo;
+use crate::util::error::{Context, Result};
+use crate::util::threadpool::WorkerPool;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::channel;
@@ -18,15 +29,18 @@ use std::time::{Duration, Instant};
 pub struct ServerConfig {
     /// Listen address, e.g. `127.0.0.1:7878`.
     pub addr: String,
-    /// Maximum dynamic-batch size.
+    /// Number of serving shards (0 = one per core, capped at 16;
+    /// explicit values are clamped to 1..=64).
+    pub shards: usize,
+    /// Maximum dynamic-batch size per shard.
     pub max_batch: usize,
     /// Batch linger time in microseconds.
     pub max_wait_us: u64,
-    /// Artifacts directory for the engine.
-    pub artifacts_dir: String,
+    /// Bounded per-shard queue capacity (overload threshold).
+    pub queue_cap: usize,
     /// Training-set size for the on-demand model zoo.
     pub train_n: usize,
-    /// Engine seed.
+    /// Base seed for the per-shard engine rounding streams.
     pub seed: u64,
 }
 
@@ -34,133 +48,270 @@ impl Default for ServerConfig {
     fn default() -> Self {
         Self {
             addr: "127.0.0.1:7878".to_string(),
+            shards: 0,
             max_batch: 32,
             max_wait_us: 2_000,
-            artifacts_dir: "artifacts".to_string(),
+            queue_cap: 256,
             train_n: 2000,
             seed: 7,
         }
     }
 }
 
+impl ServerConfig {
+    fn shard_config(&self) -> ShardConfig {
+        let shards = if self.shards == 0 {
+            crate::util::threadpool::num_threads().clamp(1, 16)
+        } else {
+            // Each shard is an OS thread + engine seed stream; clamp
+            // explicit values so a config typo cannot exhaust the process.
+            self.shards.clamp(1, 64)
+        };
+        ShardConfig {
+            shards,
+            max_batch: self.max_batch,
+            max_wait: Duration::from_micros(self.max_wait_us),
+            queue_cap: self.queue_cap,
+            seed: self.seed,
+        }
+    }
+}
+
 /// Run the server until a `shutdown` command arrives. Blocks.
 ///
-/// The PJRT handles in [`Engine`] are not `Send` (the `xla` crate wraps
-/// them in `Rc`), so the engine is constructed and driven entirely on one
-/// dedicated worker thread; connection threads talk to it only through the
-/// [`Batcher`] queue. PJRT's CPU executor parallelizes inside a call, so a
-/// single execution thread does not serialize the math.
+/// The model zoo is trained/loaded once and shared read-only across all
+/// shards; each shard runs its own engine + batcher worker thread.
 pub fn serve(cfg: &ServerConfig) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
     listener.set_nonblocking(true)?;
-    let metrics = Arc::new(Metrics::new());
-    let batcher = Arc::new(Batcher::new(
-        cfg.max_batch,
-        Duration::from_micros(cfg.max_wait_us),
-    ));
+    let shard_cfg = cfg.shard_config();
+    let metrics = Arc::new(Metrics::new(shard_cfg.shards));
 
-    // Engine thread: builds the engine (training/loading models, compiling
-    // artifacts) and then runs the batch loop until shutdown.
-    let (ready_tx, ready_rx) = channel();
-    let engine_thread = {
-        let b = batcher.clone();
-        let m = metrics.clone();
-        let cfg = cfg.clone();
-        std::thread::spawn(move || {
-            let engine = match Engine::new(&cfg.artifacts_dir, cfg.train_n, cfg.seed) {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok(format!(
-                        "platform={} digits_acc={:.3} fashion_acc={:.3}",
-                        e.runtime().platform(),
-                        e.float_accuracy("digits_linear").unwrap_or(0.0),
-                        e.float_accuracy("fashion_mlp").unwrap_or(0.0),
-                    )));
-                    e
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e.to_string()));
-                    return;
-                }
-            };
-            worker_loop(&b, &engine, &m);
-        })
-    };
-    match ready_rx.recv() {
-        Ok(Ok(info)) => println!(
-            "dither-serve listening on {} ({info}, max_batch={})",
-            cfg.addr, cfg.max_batch
-        ),
-        Ok(Err(e)) => anyhow::bail!("engine init failed: {e}"),
-        Err(_) => anyhow::bail!("engine thread died during init"),
+    println!(
+        "dither-serve: loading model zoo (train_n={}) ...",
+        cfg.train_n
+    );
+    let zoo = Arc::new(Zoo::load(cfg.train_n, cfg.seed));
+    for m in zoo.models() {
+        println!(
+            "  {:<14} float test accuracy {:.3}",
+            m.spec.name(),
+            m.float_accuracy
+        );
     }
+    let pool = Arc::new(ShardPool::start(&shard_cfg, zoo, &metrics));
+    println!(
+        "dither-serve listening on {} ({} shards, max_batch={}, queue_cap={})",
+        cfg.addr,
+        pool.num_shards(),
+        cfg.max_batch,
+        cfg.queue_cap
+    );
 
-    let mut conn_handles = Vec::new();
-    while !batcher.is_stopped() {
+    let mut conns = WorkerPool::new();
+    let mut conn_id = 0u64;
+    while !pool.is_shutting_down() {
         match listener.accept() {
             Ok((stream, _addr)) => {
-                let b = batcher.clone();
-                let m = metrics.clone();
-                conn_handles.push(std::thread::spawn(move || {
-                    let _ = handle_connection(stream, &b, &m);
-                }));
+                conn_id += 1;
+                let id = conn_id;
+                let pool = pool.clone();
+                let metrics = metrics.clone();
+                conns.spawn(format!("dither-conn-{id}"), move || {
+                    let _ = handle_connection(stream, id, &pool, &metrics);
+                });
+                // Reap periodically under sustained accept load too, not
+                // just on idle ticks, so dead handles stay bounded.
+                if conn_id % 64 == 0 {
+                    conns.reap_finished();
+                }
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // Idle tick: reap finished connection threads so the
+                // handle list stays proportional to live connections.
+                conns.reap_finished();
                 std::thread::sleep(Duration::from_millis(5));
             }
-            Err(e) => return Err(e.into()),
+            Err(e) => {
+                pool.stop();
+                pool.join();
+                return Err(e.into());
+            }
         }
     }
-    let _ = engine_thread.join();
-    for h in conn_handles {
-        let _ = h.join();
-    }
+    let panicked = pool.join();
+    conns.join_all();
     println!("dither-serve stopped");
+    if panicked > 0 {
+        crate::bail!("{panicked} shard worker(s) panicked");
+    }
     Ok(())
 }
 
-/// Read request lines, dispatch, write response lines. One thread per
-/// connection; inference requests are answered in submission order.
-fn handle_connection(stream: TcpStream, batcher: &Batcher, metrics: &Metrics) -> Result<()> {
+/// One ping round-trip against a server at `addr`; true on a `pong`.
+/// Connect and read are both bounded by a 10 s timeout.
+pub fn ping(addr: &str) -> bool {
+    ping_within(addr, Duration::from_secs(10))
+}
+
+fn ping_within(addr: &str, io_timeout: Duration) -> bool {
+    use std::net::ToSocketAddrs;
+    let Ok(mut addrs) = addr.to_socket_addrs() else {
+        return false;
+    };
+    let Some(sock) = addrs.next() else {
+        return false;
+    };
+    let Ok(stream) = TcpStream::connect_timeout(&sock, io_timeout) else {
+        return false;
+    };
+    let Ok(clone) = stream.try_clone() else {
+        return false;
+    };
+    let mut reader = BufReader::new(clone);
+    let mut writer = stream;
+    if writer.set_read_timeout(Some(io_timeout)).is_err()
+        || writeln!(writer, "{{\"cmd\":\"ping\"}}").is_err()
+    {
+        return false;
+    }
+    let mut line = String::new();
+    reader.read_line(&mut line).is_ok() && line.contains("pong")
+}
+
+/// Block until the server at `addr` answers a ping, up to `timeout`
+/// (clients and tests use this to wait out the zoo's first-run training).
+/// Returns false if the deadline passes first; each attempt's I/O is
+/// bounded by the remaining budget so a blackholed address cannot
+/// overshoot the deadline by the OS connect timeout.
+pub fn wait_ready(addr: &str, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return false;
+        }
+        let budget = remaining
+            .min(Duration::from_secs(10))
+            .max(Duration::from_millis(100));
+        if ping_within(addr, budget) {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// Read request lines, dispatch to this connection's shard, write response
+/// lines. One thread per connection; inference requests are answered in
+/// submission order. The read loop ticks on a short timeout so the thread
+/// notices server shutdown even while a client keeps the socket open.
+fn handle_connection(
+    stream: TcpStream,
+    conn_id: u64,
+    pool: &ShardPool,
+    metrics: &Metrics,
+) -> Result<()> {
+    let shard = pool.route(conn_id);
+    let shard_metrics = metrics.shard(shard);
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    // Bounded writes too: a client that stops reading its socket would
+    // otherwise park this thread in writeln! forever once the TCP send
+    // buffer fills, and shutdown could never join it. On write timeout
+    // the `?` below abandons the connection.
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        // `read_line` appends, so a partial line survives a timeout tick
+        // and completes on the next read.
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if pool.is_shutting_down() {
+                    break;
+                }
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            line.clear();
             continue;
         }
-        match parse_message(&line) {
+        let mut stop = false;
+        match parse_message(trimmed) {
             Ok(Message::Ping) => writeln!(writer, "{{\"pong\":true}}")?,
             Ok(Message::Stats) => writeln!(writer, "{}", metrics.snapshot_json())?,
             Ok(Message::Shutdown) => {
                 writeln!(writer, "{{\"stopping\":true}}")?;
-                batcher.stop();
-                break;
+                pool.close();
+                stop = true;
             }
             Ok(Message::Infer(req)) => {
+                let id = req.id;
                 let (tx, rx) = channel();
-                batcher.submit(Pending {
-                    req,
-                    respond_to: tx,
-                    enqueued: Instant::now(),
-                });
-                // Wait for this request's response before reading the next
-                // line (pipelining happens across connections).
-                match rx.recv_timeout(Duration::from_secs(120)) {
-                    Ok(response) => writeln!(writer, "{response}")?,
-                    Err(_) => {
-                        metrics.record_error();
-                        writeln!(writer, "{}", format_error(0, "timeout"))?;
+                let submitted = pool.submit(
+                    shard,
+                    Pending {
+                        req,
+                        respond_to: tx,
+                        enqueued: Instant::now(),
+                    },
+                );
+                match submitted {
+                    Ok(()) => {
+                        // Wait for this request's response before reading
+                        // the next line (pipelining happens across
+                        // connections).
+                        use std::sync::mpsc::RecvTimeoutError;
+                        match rx.recv_timeout(Duration::from_secs(120)) {
+                            Ok(response) => writeln!(writer, "{response}")?,
+                            Err(RecvTimeoutError::Timeout) => {
+                                shard_metrics.record_error();
+                                writeln!(writer, "{}", format_error(id, "timeout"))?;
+                            }
+                            // Sender dropped: the shard was hard-stopped
+                            // with this request still queued.
+                            Err(RecvTimeoutError::Disconnected) => {
+                                shard_metrics.record_error();
+                                writeln!(writer, "{}", format_error(id, "cancelled"))?;
+                            }
+                        }
+                    }
+                    Err(SubmitError::Overloaded(p)) => {
+                        shard_metrics.record_rejected();
+                        writeln!(writer, "{}", format_overloaded(p.req.id))?;
+                    }
+                    Err(SubmitError::Closed(p)) => {
+                        shard_metrics.record_error();
+                        writeln!(writer, "{}", format_error(p.req.id, "shutting down"))?;
                     }
                 }
             }
             Err(e) => {
-                metrics.record_error();
+                shard_metrics.record_error();
                 writeln!(writer, "{}", format_error(0, &e))?;
             }
         }
         writer.flush()?;
+        line.clear();
+        if stop {
+            break;
+        }
     }
     Ok(())
 }

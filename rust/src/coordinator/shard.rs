@@ -1,0 +1,198 @@
+//! The sharded serving core: K worker shards, each owning an [`Engine`]
+//! and a bounded dynamic [`Batcher`], with connections hash-routed onto
+//! shards.
+//!
+//! Sharding is what lets the coordinator scale with cores: every shard has
+//! its own queue, its own batching worker, its own engine seed stream and
+//! its own metrics slot, so the request hot path shares no locks between
+//! shards (the model weights are shared read-only through `Arc<Zoo>`).
+//! Routing is by connection, not by request, so one client's pipelined
+//! requests stay ordered on a single shard.
+
+use crate::coordinator::batcher::{worker_loop, Batcher, Pending, SubmitError};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::train::Zoo;
+use crate::util::rng::counter_hash;
+use crate::util::threadpool::WorkerPool;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Shard-pool policy.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Number of worker shards (≥ 1).
+    pub shards: usize,
+    /// Maximum dynamic-batch size per shard.
+    pub max_batch: usize,
+    /// Batch linger time.
+    pub max_wait: Duration,
+    /// Bounded per-shard queue capacity (backpressure threshold).
+    pub queue_cap: usize,
+    /// Base seed for the per-shard engine rounding streams.
+    pub seed: u64,
+}
+
+/// K running serving shards plus their routing table.
+pub struct ShardPool {
+    batchers: Vec<Arc<Batcher>>,
+    workers: Mutex<WorkerPool>,
+}
+
+impl ShardPool {
+    /// Spawn `cfg.shards` worker shards over a shared model zoo. Each
+    /// shard gets its own engine (decorrelated seed stream) and the
+    /// matching [`Metrics`] slot.
+    pub fn start(cfg: &ShardConfig, zoo: Arc<Zoo>, metrics: &Metrics) -> ShardPool {
+        let shards = cfg.shards.max(1);
+        let mut workers = WorkerPool::new();
+        let mut batchers = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let batcher = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait, cfg.queue_cap));
+            let engine = Engine::from_zoo(zoo.clone(), cfg.seed ^ ((i as u64 + 1) << 32));
+            let shard_metrics = metrics.shard(i);
+            let b = batcher.clone();
+            workers.spawn(format!("dither-shard-{i}"), move || {
+                // Stop the batcher even if the worker panics: routed
+                // requests then get an immediate "shutting down" reply
+                // instead of queueing into a dead shard forever.
+                struct StopOnExit(Arc<Batcher>);
+                impl Drop for StopOnExit {
+                    fn drop(&mut self) {
+                        self.0.stop();
+                    }
+                }
+                let _guard = StopOnExit(b.clone());
+                worker_loop(&b, &engine, &shard_metrics, i);
+            });
+            batchers.push(batcher);
+        }
+        ShardPool {
+            batchers,
+            workers: Mutex::new(workers),
+        }
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.batchers.len()
+    }
+
+    /// Hash-route a connection id to a shard index (stable for the
+    /// connection's lifetime, uniform across shards).
+    pub fn route(&self, conn_id: u64) -> usize {
+        (counter_hash(0x5A4D_D17E, conn_id) % self.batchers.len() as u64) as usize
+    }
+
+    /// Submit a request to a shard's bounded queue.
+    pub fn submit(&self, shard: usize, p: Pending) -> Result<(), SubmitError> {
+        self.batchers[shard % self.batchers.len()].submit(p)
+    }
+
+    /// Graceful shutdown: every shard stops intake, drains its queue, then
+    /// its worker exits.
+    pub fn close(&self) {
+        for b in &self.batchers {
+            b.close();
+        }
+    }
+
+    /// Hard shutdown: workers exit after their in-flight batch; queued
+    /// requests error out when their channels drop.
+    pub fn stop(&self) {
+        for b in &self.batchers {
+            b.stop();
+        }
+    }
+
+    /// True once `close` or `stop` has been called.
+    pub fn is_shutting_down(&self) -> bool {
+        self.batchers[0].is_shutting_down()
+    }
+
+    /// Join every shard worker; returns how many panicked.
+    pub fn join(&self) -> usize {
+        self.workers.lock().unwrap().join_all()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::InferenceRequest;
+    use crate::rounding::RoundingMode;
+    use crate::util::json::Json;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn pool(shards: usize) -> (ShardPool, Metrics) {
+        let cfg = ShardConfig {
+            shards,
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+            queue_cap: 64,
+            seed: 7,
+        };
+        let metrics = Metrics::new(shards);
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let pool = ShardPool::start(&cfg, zoo, &metrics);
+        (pool, metrics)
+    }
+
+    fn infer_pending(id: u64) -> (Pending, std::sync::mpsc::Receiver<String>) {
+        let (tx, rx) = channel();
+        (
+            Pending {
+                req: InferenceRequest {
+                    id,
+                    model: "digits_linear".to_string(),
+                    k: 4,
+                    mode: RoundingMode::Dither,
+                    pixels: vec![0.3; 784],
+                },
+                respond_to: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn routing_is_stable_and_covers_shards() {
+        let (pool, _metrics) = pool(4);
+        let mut hit = [false; 4];
+        for conn in 0..64u64 {
+            let a = pool.route(conn);
+            assert_eq!(a, pool.route(conn), "routing must be stable");
+            hit[a] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "64 connections should cover 4 shards");
+        pool.close();
+        assert_eq!(pool.join(), 0);
+    }
+
+    #[test]
+    fn shards_serve_and_drain_on_close() {
+        let (pool, metrics) = pool(2);
+        let mut receivers = Vec::new();
+        for id in 0..6u64 {
+            let shard = pool.route(id);
+            let (p, rx) = infer_pending(id);
+            pool.submit(shard, p).unwrap();
+            receivers.push((id, rx));
+        }
+        pool.close(); // graceful: queued work is still answered
+        for (id, rx) in receivers {
+            let line = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("response before shutdown");
+            let json = Json::parse(&line).expect("valid response json");
+            assert_eq!(json.get("id").unwrap().as_f64(), Some(id as f64));
+            assert!(json.get("error").is_none(), "{line}");
+            let shard = json.get("shard").unwrap().as_f64().unwrap() as usize;
+            assert_eq!(shard, pool.route(id));
+        }
+        assert_eq!(pool.join(), 0);
+        assert!(metrics.total_requests() >= 6);
+    }
+}

@@ -1,8 +1,9 @@
 //! Experiment registry: id → regenerator, shared by the CLI and benches.
 
+use crate::bail;
 use crate::bitstream::EvalConfig;
 use crate::experiments::{fig8, figs_bitstream, nn_figs, table1};
-use anyhow::{bail, Result};
+use crate::util::error::Result;
 
 /// All experiment ids, in paper order.
 pub const EXPERIMENT_IDS: [&str; 16] = [

@@ -16,12 +16,16 @@
 //!   [`train`] — a pure-Rust SGD trainer producing the evaluation models.
 //! * [`data`] — synthetic MNIST-class / Fashion-class datasets (procedural;
 //!   see DESIGN.md §4 for the substitution rationale) and an IDX loader.
-//! * [`runtime`] — PJRT bridge that loads the AOT-compiled JAX/Pallas
-//!   artifacts, and [`coordinator`] — the threaded batching inference server.
+//! * [`coordinator`] — the sharded batching inference server: K worker
+//!   shards with bounded queues, hash-routed connections, per-request
+//!   rounding-scheme selection and lock-free per-shard metrics.
+//! * [`runtime`] — execution-environment descriptor + the AOT artifact
+//!   manifest emitted by the Python pipeline.
 //! * [`experiments`] — regenerators for every figure and table in the paper.
-//! * [`util`] — infrastructure substrates (PRNG, stats, JSON, CLI, thread
-//!   pool, bench harness, property testing) built in-tree because the
-//!   offline environment provides no third-party equivalents.
+//! * [`util`] — infrastructure substrates (PRNG, stats, JSON, CLI, errors,
+//!   thread pools, bench harness, property testing) built in-tree because
+//!   the offline environment provides no third-party equivalents — the
+//!   crate has zero external dependencies.
 //!
 //! ## Quickstart
 //!

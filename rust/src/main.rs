@@ -5,19 +5,20 @@
 //! * `experiment <id>` — regenerate a paper table/figure (fig1..fig16,
 //!   table1, all). `--paper-scale` switches to the paper's full settings.
 //! * `train` — train and cache the evaluation models.
-//! * `serve` — run the batching inference server on the AOT artifacts.
-//! * `infer` — one-shot inference through the PJRT runtime (smoke path).
-//! * `info` — show artifacts manifest and platform.
+//! * `serve` — run the sharded batching inference server.
+//! * `infer` — one-shot inference through the native engine (smoke path).
+//! * `info` — show runtime platform, model zoo and artifact manifest.
 //!
 //! Run `dither help` for flag details.
 
-use anyhow::Result;
 use dither::coordinator::{serve, ServerConfig};
 use dither::data::{Dataset, Task};
+use dither::err;
 use dither::experiments::{run_experiment, ExperimentArgs, EXPERIMENT_IDS};
 use dither::rounding::RoundingMode;
 use dither::train::{trained_model, ModelSpec};
 use dither::util::cli::Args;
+use dither::util::error::Result;
 
 const HELP: &str = "\
 dither — hybrid deterministic-stochastic computing framework (ARITH'21 repro)
@@ -29,9 +30,9 @@ COMMANDS:
     experiment <id>   regenerate a paper result: fig1..fig6, table1, fig8,
                       fig9..fig16, or 'all'
     train             train + cache the evaluation models (model zoo)
-    serve             run the batching inference server (TCP, newline JSON)
-    infer             single quantized inference through the PJRT runtime
-    info              show artifact manifest + platform
+    serve             run the sharded inference server (TCP, newline JSON)
+    infer             single quantized inference through the native engine
+    info              show runtime platform + model zoo + artifacts
     help              this text
 
 EXPERIMENT FLAGS (defaults in parentheses):
@@ -50,15 +51,17 @@ EXPERIMENT FLAGS (defaults in parentheses):
 
 SERVE FLAGS:
     --addr HOST:PORT  listen address (127.0.0.1:7878)
-    --max-batch N     dynamic batch cap (32)
+    --shards N        serving shards (0 = one per core, capped at 16;
+                      explicit values clamped to 1..=64)
+    --max-batch N     dynamic batch cap per shard (32)
     --max-wait-us N   batch linger (2000)
-    --artifacts DIR   artifacts directory (artifacts)
+    --queue-cap N     bounded per-shard queue depth (256)
+    --train-n N       model-zoo training-set size (2000)
 
 INFER FLAGS:
     --model NAME      digits_linear | fashion_mlp (digits_linear)
     --k N             bit width (4)
-    --mode M          deterministic | stochastic | dither (dither)
-    --artifacts DIR   artifacts directory (artifacts)
+    --scheme M        deterministic | stochastic | dither (dither)
 ";
 
 fn main() -> Result<()> {
@@ -123,8 +126,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let test_n = args.parse_or("test-n", 500usize);
     let seed = args.parse_or("seed", 7u64);
     for spec in [ModelSpec::DigitsLinear, ModelSpec::FashionMlp] {
+        let path = spec.weights_path(train_n, seed);
         if args.flag("retrain") {
-            let _ = std::fs::remove_file(spec.weights_path());
+            let _ = std::fs::remove_file(&path);
         }
         let (mlp, _test, acc) = trained_model(spec, train_n, test_n, seed);
         println!(
@@ -132,7 +136,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             spec,
             mlp.param_count(),
             acc,
-            spec.weights_path()
+            path
         );
     }
     Ok(())
@@ -141,9 +145,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7878"),
+        shards: args.parse_or("shards", 0usize),
         max_batch: args.parse_or("max-batch", 32usize),
         max_wait_us: args.parse_or("max-wait-us", 2000u64),
-        artifacts_dir: args.str_or("artifacts", "artifacts"),
+        queue_cap: args.parse_or("queue-cap", 256usize),
         train_n: args.parse_or("train-n", 2000usize),
         seed: args.parse_or("seed", 7u64),
     };
@@ -154,11 +159,11 @@ fn cmd_infer(args: &Args) -> Result<()> {
     use dither::coordinator::Engine;
     let model = args.str_or("model", "digits_linear");
     let k = args.parse_or("k", 4u32);
-    let mode = RoundingMode::from_str(&args.str_or("mode", "dither"))
-        .ok_or_else(|| anyhow::anyhow!("invalid --mode"))?;
-    let artifacts = args.str_or("artifacts", "artifacts");
+    let mode_str = args.str_or("scheme", &args.str_or("mode", "dither"));
+    let mode = RoundingMode::from_str(&mode_str)
+        .ok_or_else(|| err!("invalid --scheme {mode_str:?}"))?;
     let seed = args.parse_or("seed", 7u64);
-    let engine = Engine::new(&artifacts, args.parse_or("train-n", 2000usize), seed)?;
+    let engine = Engine::new(args.parse_or("train-n", 2000usize), seed);
     // One synthetic test image per class, report predictions.
     let task = if model == "fashion_mlp" {
         Task::Fashion
@@ -179,7 +184,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
         println!("sample {i}: label={label} pred={}", out.pred);
     }
     println!(
-        "\n{}/{} correct | model={model} k={k} mode={} | {:.1} ms total",
+        "\n{}/{} correct | model={model} k={k} scheme={} | {:.1} ms total",
         correct,
         outputs.len(),
         mode.name(),
@@ -189,15 +194,39 @@ fn cmd_infer(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    use dither::nn::Mlp;
     use dither::runtime::Runtime;
     let artifacts = args.str_or("artifacts", "artifacts");
-    let rt = Runtime::cpu(&artifacts)?;
+    let rt = Runtime::native(&artifacts)?;
     println!("platform: {}", rt.platform());
     println!("artifacts dir: {artifacts}");
-    println!("dither N: {}", rt.manifest().dither_n);
-    println!("{:<28} {:>6}  inputs", "artifact", "batch");
-    for a in &rt.manifest().artifacts {
-        println!("{:<28} {:>6}  {}", a.name, a.batch, a.inputs.join(" "));
+    // Read-only: report cached zoo weights without training on a miss.
+    let train_n = args.parse_or("train-n", 2000usize);
+    let seed = args.parse_or("seed", 7u64);
+    println!("\nmodel zoo (train_n={train_n}, seed={seed}):");
+    for spec in [ModelSpec::DigitsLinear, ModelSpec::FashionMlp] {
+        let path = spec.weights_path(train_n, seed);
+        match Mlp::load(&path) {
+            Ok(mlp) => println!(
+                "  {:<14} {:>7} params  cached at {path}",
+                spec.name(),
+                mlp.param_count()
+            ),
+            Err(_) => println!(
+                "  {:<14} not cached (run `dither train` or `dither serve`)",
+                spec.name()
+            ),
+        }
+    }
+    match rt.manifest() {
+        Some(manifest) => {
+            println!("\nAOT artifacts (dither N = {}):", manifest.dither_n);
+            println!("{:<28} {:>6}  inputs", "artifact", "batch");
+            for a in &manifest.artifacts {
+                println!("{:<28} {:>6}  {}", a.name, a.batch, a.inputs.join(" "));
+            }
+        }
+        None => println!("\nno AOT artifacts (run `make artifacts` for the Python pipeline)"),
     }
     Ok(())
 }

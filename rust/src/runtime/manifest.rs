@@ -2,8 +2,9 @@
 //! feed it. Parsed with the in-tree JSON module and validated at load time
 //! so a stale `artifacts/` directory fails fast with a clear message.
 
+use crate::bail;
+use crate::util::error::{Context, Error, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One AOT artifact's metadata.
@@ -44,28 +45,28 @@ impl Manifest {
 
     /// Parse manifest JSON (exposed for tests).
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
-        let json = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let json = Json::parse(text).map_err(|e| Error::msg(format!("manifest.json: {e}")))?;
         let format = json
             .get("format")
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("manifest missing 'format'"))?;
+            .context("manifest missing 'format'")?;
         if format != "hlo-text" {
             bail!("unsupported artifact format {format:?} (expected hlo-text)");
         }
         let dither_n = json
             .get("dither_n")
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest missing 'dither_n'"))?;
+            .context("manifest missing 'dither_n'")?;
         let raw = json
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+            .context("manifest missing 'artifacts'")?;
         let mut artifacts = Vec::with_capacity(raw.len());
         for a in raw {
             let get_str = |k: &str| -> Result<String> {
                 Ok(a.get(k)
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))?
+                    .with_context(|| format!("artifact missing '{k}'"))?
                     .to_string())
             };
             let strings = |k: &str| -> Vec<String> {
@@ -85,7 +86,7 @@ impl Manifest {
                 batch: a
                     .get("batch")
                     .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow!("artifact missing 'batch'"))?,
+                    .context("artifact missing 'batch'")?,
                 inputs: strings("inputs"),
                 outputs: strings("outputs"),
             });
@@ -103,14 +104,14 @@ impl Manifest {
             .iter()
             .find(|a| a.name == name)
             .ok_or_else(|| {
-                anyhow!(
+                Error::msg(format!(
                     "artifact {name:?} not in manifest (have: {})",
                     self.artifacts
                         .iter()
                         .map(|a| a.name.as_str())
                         .collect::<Vec<_>>()
                         .join(", ")
-                )
+                ))
             })
     }
 

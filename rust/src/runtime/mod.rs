@@ -1,13 +1,15 @@
-//! PJRT runtime bridge: load the AOT-compiled JAX/Pallas artifacts and run
-//! them from the Rust hot path.
+//! Runtime environment: artifact manifest handling and the native
+//! execution descriptor.
 //!
-//! Python runs exactly once (`make artifacts`); afterwards this module is
-//! the only place the model executes: HLO text → `HloModuleProto` →
-//! `PjRtClient::compile` → `execute`. One compiled executable per
-//! (model, batch-size) artifact.
+//! The Python AOT pipeline (`make artifacts`) still emits HLO-text
+//! artifacts plus `manifest.json` for the JAX/Pallas path; [`manifest`]
+//! parses and validates those. [`native`] describes the in-process
+//! execution environment the serving stack actually runs on — the
+//! pure-Rust quantized engines — since the external `xla`/PJRT crate is
+//! unavailable in the offline toolchain (see ROADMAP "Open items").
 
-pub mod client;
 pub mod manifest;
+pub mod native;
 
-pub use client::{LoadedModel, Runtime};
 pub use manifest::{ArtifactMeta, Manifest};
+pub use native::Runtime;

@@ -1,0 +1,76 @@
+//! Native runtime descriptor: where the serving stack executes and which
+//! AOT artifacts (if any) are on disk.
+//!
+//! The serving hot path runs the pure-Rust quantized engines
+//! ([`crate::nn::quantized`]) — the PJRT/xla bridge that previously lived
+//! here needed the external `xla` crate, which the offline toolchain does
+//! not provide, so model execution moved in-tree and this module keeps the
+//! environment/artifact introspection surface (`dither info`, manifest
+//! validation for the Python AOT outputs).
+
+use crate::runtime::manifest::Manifest;
+use crate::util::error::Result;
+use std::path::{Path, PathBuf};
+
+/// The execution environment: native CPU plus an optional artifacts
+/// directory produced by `python/compile/aot.py`.
+pub struct Runtime {
+    dir: PathBuf,
+    manifest: Option<Manifest>,
+}
+
+impl Runtime {
+    /// Describe the native runtime rooted at `artifacts_dir`. The manifest
+    /// is loaded when present; a missing manifest is not an error (the
+    /// native engines do not need it), but a *malformed* one is.
+    pub fn native(artifacts_dir: &str) -> Result<Runtime> {
+        let dir = PathBuf::from(artifacts_dir);
+        let manifest = if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir)?)
+        } else {
+            None
+        };
+        Ok(Runtime { dir, manifest })
+    }
+
+    /// Platform name reported in logs and `dither info`.
+    pub fn platform(&self) -> String {
+        format!(
+            "native-cpu ({} threads)",
+            crate::util::threadpool::num_threads()
+        )
+    }
+
+    /// The artifacts directory this runtime was rooted at.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The AOT artifact manifest, when `manifest.json` exists.
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_ok() {
+        let rt = Runtime::native("/nonexistent/artifacts").unwrap();
+        assert!(rt.manifest().is_none());
+        assert!(rt.platform().starts_with("native-cpu"));
+        assert_eq!(rt.artifacts_dir(), Path::new("/nonexistent/artifacts"));
+    }
+
+    #[test]
+    fn malformed_manifest_is_an_error() {
+        let dir = std::env::temp_dir().join("dither_rt_bad_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "not json").unwrap();
+        let res = Runtime::native(dir.to_str().unwrap());
+        assert!(res.is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

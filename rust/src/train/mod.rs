@@ -5,4 +5,4 @@ pub mod sgd;
 pub mod zoo;
 
 pub use sgd::{train, EpochStats, TrainConfig};
-pub use zoo::{trained_model, ModelSpec};
+pub use zoo::{trained_model, ModelSpec, Zoo, ZooModel};

@@ -1,8 +1,12 @@
 //! Model zoo: the two evaluation networks, trained on demand and cached
 //! under `artifacts/weights/` so experiments and the server start fast.
+//!
+//! [`Zoo`] is the serving-side container: both families trained/loaded
+//! once, with their activation ranges pre-calibrated, shared across the
+//! coordinator's worker shards behind an `Arc`.
 
 use crate::data::{Dataset, Task};
-use crate::nn::Mlp;
+use crate::nn::{ActivationRanges, Mlp};
 use crate::train::sgd::{train, TrainConfig};
 use crate::util::rng::Xoshiro256pp;
 
@@ -16,12 +20,32 @@ pub enum ModelSpec {
 }
 
 impl ModelSpec {
-    /// Cache file path.
-    pub fn weights_path(&self) -> &'static str {
+    /// Both evaluation models, in serving order.
+    pub const ALL: [ModelSpec; 2] = [ModelSpec::DigitsLinear, ModelSpec::FashionMlp];
+
+    /// Wire/CLI name of the model family.
+    pub fn name(&self) -> &'static str {
         match self {
-            ModelSpec::DigitsLinear => "artifacts/weights/digits_linear.bin",
-            ModelSpec::FashionMlp => "artifacts/weights/fashion_mlp.bin",
+            ModelSpec::DigitsLinear => "digits_linear",
+            ModelSpec::FashionMlp => "fashion_mlp",
         }
+    }
+
+    /// Parse a wire/CLI model-family name.
+    pub fn from_name(name: &str) -> Option<ModelSpec> {
+        match name {
+            "digits_linear" => Some(ModelSpec::DigitsLinear),
+            "fashion_mlp" => Some(ModelSpec::FashionMlp),
+            _ => None,
+        }
+    }
+
+    /// Cache file path, keyed by the full training configuration so a
+    /// cached model can never silently override a different requested
+    /// `train_n`/`seed` (training is deterministic given the key, so any
+    /// process that computes the same path holds bit-identical weights).
+    pub fn weights_path(&self, train_n: usize, seed: u64) -> String {
+        format!("artifacts/weights/{}.n{train_n}.s{seed}.bin", self.name())
     }
 
     /// Task the model is trained on.
@@ -76,15 +100,25 @@ pub fn trained_model(
 ) -> (Mlp, Dataset, f64) {
     let (train_set, test_set, _source) =
         Dataset::load_or_synthesize(spec.task(), train_n, test_n, seed);
-    let path = spec.weights_path();
-    let mlp = match Mlp::load(path) {
+    let path = spec.weights_path(train_n, seed);
+    let mlp = match Mlp::load(&path) {
         Ok(m) if shapes_match(&m, spec) => m,
         _ => {
             let mut rng = Xoshiro256pp::new(seed ^ 0x200);
             let mut m = spec.build(&mut rng);
             train(&mut m, &train_set, &spec.train_config());
             m.normalize_weights();
-            if let Err(e) = m.save(path) {
+            // Write-then-rename so concurrent readers (other shards or
+            // processes warming the same cache) never see a torn file; the
+            // tmp name is unique per writer.
+            static WRITER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+            let unique = WRITER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let tmp = format!("{path}.tmp.{}.{unique}", std::process::id());
+            let cached = m
+                .save(&tmp)
+                .and_then(|()| std::fs::rename(&tmp, &path));
+            if let Err(e) = cached {
+                let _ = std::fs::remove_file(&tmp);
                 eprintln!("warning: could not cache weights at {path}: {e}");
             }
             m
@@ -92,6 +126,60 @@ pub fn trained_model(
     };
     let acc = mlp.accuracy(&test_set.images, &test_set.labels);
     (mlp, test_set, acc)
+}
+
+/// One model family's serving state: the trained network, its calibrated
+/// activation ranges, and the float test accuracy measured at load time.
+pub struct ZooModel {
+    /// Which family this is.
+    pub spec: ModelSpec,
+    /// The trained (weight-normalized) network.
+    pub mlp: Mlp,
+    /// Per-layer quantizer input ranges, calibrated once on load.
+    pub ranges: ActivationRanges,
+    /// Float (unquantized) test accuracy at load time.
+    pub float_accuracy: f64,
+}
+
+/// Both evaluation models, trained/loaded once and shared (behind an
+/// `Arc`) by every serving shard.
+pub struct Zoo {
+    models: Vec<ZooModel>,
+}
+
+impl Zoo {
+    /// Load (or train and cache) every model family. `train_n` is the
+    /// training-set size for cache misses; `seed` drives data synthesis and
+    /// calibration.
+    pub fn load(train_n: usize, seed: u64) -> Zoo {
+        let models = ModelSpec::ALL
+            .iter()
+            .map(|&spec| {
+                let (mlp, _test, float_accuracy) =
+                    trained_model(spec, train_n, (train_n / 5).max(1), seed);
+                let calib = Dataset::synthesize(spec.task(), 64, seed ^ 0xCA11B);
+                let ranges = ActivationRanges::calibrate(&mlp, &calib.images);
+                ZooModel {
+                    spec,
+                    mlp,
+                    ranges,
+                    float_accuracy,
+                }
+            })
+            .collect();
+        Zoo { models }
+    }
+
+    /// Look up a family by wire name (`digits_linear` / `fashion_mlp`).
+    pub fn get(&self, name: &str) -> Option<&ZooModel> {
+        let spec = ModelSpec::from_name(name)?;
+        self.models.iter().find(|m| m.spec == spec)
+    }
+
+    /// All loaded models.
+    pub fn models(&self) -> &[ZooModel] {
+        &self.models
+    }
 }
 
 fn shapes_match(m: &Mlp, spec: ModelSpec) -> bool {
@@ -125,10 +213,40 @@ mod tests {
     }
 
     #[test]
-    fn paths_are_distinct() {
+    fn paths_are_keyed_by_family_and_config() {
         assert_ne!(
-            ModelSpec::DigitsLinear.weights_path(),
-            ModelSpec::FashionMlp.weights_path()
+            ModelSpec::DigitsLinear.weights_path(2000, 7),
+            ModelSpec::FashionMlp.weights_path(2000, 7)
         );
+        // Different training configurations must never share a cache file.
+        assert_ne!(
+            ModelSpec::DigitsLinear.weights_path(200, 7),
+            ModelSpec::DigitsLinear.weights_path(2000, 7)
+        );
+        assert_ne!(
+            ModelSpec::DigitsLinear.weights_path(2000, 7),
+            ModelSpec::DigitsLinear.weights_path(2000, 8)
+        );
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for spec in ModelSpec::ALL {
+            assert_eq!(ModelSpec::from_name(spec.name()), Some(spec));
+        }
+        assert_eq!(ModelSpec::from_name("nope"), None);
+    }
+
+    #[test]
+    fn zoo_serves_both_families() {
+        let zoo = Zoo::load(200, 11);
+        assert_eq!(zoo.models().len(), 2);
+        let digits = zoo.get("digits_linear").expect("digits served");
+        assert_eq!(digits.mlp.layers[0].in_dim(), 784);
+        assert_eq!(digits.ranges.per_layer.len(), digits.mlp.layers.len());
+        let fashion = zoo.get("fashion_mlp").expect("fashion served");
+        assert_eq!(fashion.mlp.layers.len(), 3);
+        assert_eq!(fashion.ranges.per_layer.len(), 3);
+        assert!(zoo.get("unknown").is_none());
     }
 }

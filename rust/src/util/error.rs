@@ -1,0 +1,227 @@
+//! In-tree error type: the crate's only error plumbing (no `anyhow` in the
+//! offline crate set).
+//!
+//! [`Error`] is a message plus an optional boxed source, [`Result`] is the
+//! crate-wide alias, and the [`Context`] extension trait adds the
+//! `.context(..)` / `.with_context(..)` helpers the call sites were written
+//! against. The [`bail!`](crate::bail) macro early-returns a formatted
+//! error.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message with an optional chained source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Error from a plain message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error {
+            msg: msg.into(),
+            source: None,
+        }
+    }
+
+    /// Error wrapping a source with a context message.
+    pub fn wrap(
+        msg: impl Into<String>,
+        source: impl std::error::Error + Send + Sync + 'static,
+    ) -> Error {
+        Error {
+            msg: msg.into(),
+            source: Some(Box::new(source)),
+        }
+    }
+
+    /// Add an outer context message, keeping `self` as the source.
+    pub fn context(self, msg: impl Into<String>) -> Error {
+        Error {
+            msg: msg.into(),
+            source: Some(Box::new(self)),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src: Option<&(dyn std::error::Error + 'static)> =
+            self.source.as_deref().map(|s| s as _);
+        while let Some(s) = src {
+            // A nested crate Error prints only its own message here — its
+            // Display would re-render the rest of the chain, duplicating
+            // every tail segment.
+            if let Some(e) = s.downcast_ref::<Error>() {
+                write!(f, ": {}", e.msg)?;
+                src = e.source.as_deref().map(|s| s as _);
+            } else {
+                write!(f, ": {s}")?;
+                src = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug (what `main -> Result` prints) shows the full chain too.
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source
+            .as_deref()
+            .map(|s| s as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::wrap("io error", e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Error {
+        Error::wrap("json error", e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error::msg(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options, mirroring the `anyhow` surface the call sites use.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a static context message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily-built context message.
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::wrap(msg, e))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.map_err(|e| Error::wrap(f(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`] (the `anyhow::bail!` shape).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Build a formatted [`Error`] value (the `anyhow::anyhow!` shape).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_missing() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_chains_sources() {
+        let e = Error::wrap("reading manifest", io_missing());
+        let s = e.to_string();
+        assert!(s.starts_with("reading manifest"), "{s}");
+        assert!(s.contains("no such file"), "{s}");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_missing());
+        let e = r.context("opening weights").unwrap_err();
+        assert!(e.to_string().contains("opening weights"));
+        assert!(e.to_string().contains("no such file"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing field {}", "k")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field k");
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn from_io_and_string() {
+        fn io_path() -> Result<()> {
+            Err(io_missing())?
+        }
+        assert!(io_path().unwrap_err().to_string().contains("no such file"));
+        let e: Error = "plain".into();
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_and_err_macros() {
+        fn f(x: u32) -> Result<u32> {
+            if x > 10 {
+                bail!("x too large: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(11).unwrap_err().to_string(), "x too large: 11");
+        let e = err!("k={} out of range", 99);
+        assert_eq!(e.to_string(), "k=99 out of range");
+    }
+
+    #[test]
+    fn error_context_method_nests() {
+        let inner = Error::msg("inner");
+        let outer = inner.context("outer");
+        assert_eq!(outer.to_string(), "outer: inner");
+        assert!(std::error::Error::source(&outer).is_some());
+    }
+
+    #[test]
+    fn nested_chain_prints_each_segment_once() {
+        let e = Error::wrap("outer", Error::wrap("inner", io_missing()));
+        assert_eq!(e.to_string(), "outer: inner: no such file");
+        let deeper = e.context("outermost");
+        assert_eq!(deeper.to_string(), "outermost: outer: inner: no such file");
+    }
+}

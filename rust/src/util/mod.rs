@@ -1,12 +1,14 @@
-//! Infrastructure substrates: PRNG, statistics, JSON, CLI parsing, thread
-//! pools, the bench harness and the property-testing mini-framework.
+//! Infrastructure substrates: PRNG, statistics, JSON, CLI parsing, error
+//! plumbing, thread pools, the bench harness and the property-testing
+//! mini-framework.
 //!
 //! These exist as first-class modules because the offline environment
-//! provides no `rand`, `serde`, `clap`, `rayon`, `criterion` or `proptest`;
-//! see DESIGN.md §2 (S2, S18–S23).
+//! provides no `rand`, `serde`, `clap`, `rayon`, `criterion`, `proptest`
+//! or `anyhow`; see DESIGN.md §2 (S2, S18–S23).
 
 pub mod benchmark;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod propcheck;
 pub mod rng;

@@ -1,10 +1,17 @@
-//! Scoped data-parallelism helpers (no `rayon` in the offline crate set).
+//! Thread-parallelism substrates (no `rayon` in the offline crate set).
 //!
-//! The experiment harness is embarrassingly parallel over (x, y) pairs and
-//! over trials; [`parallel_map`] and [`parallel_chunks`] split such work over
-//! `std::thread::scope` workers. Chunking is static — every work item in our
-//! use sites costs roughly the same, so static partitioning is within a few
-//! percent of work stealing at a fraction of the complexity.
+//! Two kinds of parallelism live here:
+//!
+//! * **Scoped data-parallelism** — the experiment harness is
+//!   embarrassingly parallel over (x, y) pairs and over trials;
+//!   [`parallel_map`] and [`parallel_chunks`] split such work over
+//!   `std::thread::scope` workers. Chunking is static — every work item in
+//!   our use sites costs roughly the same, so static partitioning is
+//!   within a few percent of work stealing at a fraction of the
+//!   complexity.
+//! * **Long-lived named workers** — [`WorkerPool`] owns detached service
+//!   threads (the coordinator's serving shards) and joins them on
+//!   shutdown.
 
 /// Number of worker threads to use: `DITHER_THREADS` env var if set,
 /// otherwise available parallelism (min 1).
@@ -79,6 +86,80 @@ where
     })
 }
 
+/// A set of long-lived named worker threads, joined on shutdown.
+///
+/// Unlike the scoped helpers above, these workers outlive the spawning
+/// scope (serving shards run until the server shuts down), so the pool
+/// owns their join handles and [`WorkerPool::join_all`] is the explicit
+/// rendezvous point.
+#[derive(Default)]
+pub struct WorkerPool {
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Empty pool.
+    pub fn new() -> WorkerPool {
+        WorkerPool::default()
+    }
+
+    /// Spawn one named worker running `f` to completion.
+    pub fn spawn(&mut self, name: impl Into<String>, f: impl FnOnce() + Send + 'static) {
+        let handle = std::thread::Builder::new()
+            .name(name.into())
+            .spawn(f)
+            .expect("spawning worker thread");
+        self.handles.push(handle);
+    }
+
+    /// Number of workers spawned so far (joined or not).
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// True when no workers have been spawned.
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Join every worker; returns how many panicked (panics are contained,
+    /// not propagated, so one crashed shard cannot take down shutdown).
+    pub fn join_all(&mut self) -> usize {
+        let mut panicked = 0;
+        for h in self.handles.drain(..) {
+            if h.join().is_err() {
+                panicked += 1;
+            }
+        }
+        panicked
+    }
+
+    /// Join (only) workers that have already finished, dropping their
+    /// handles; returns how many panicked. For long-lived owners that keep
+    /// spawning — e.g. the accept loop's per-connection threads — so the
+    /// handle list does not grow with every worker ever spawned.
+    pub fn reap_finished(&mut self) -> usize {
+        let mut panicked = 0;
+        let mut i = 0;
+        while i < self.handles.len() {
+            if self.handles[i].is_finished() {
+                if self.handles.swap_remove(i).join().is_err() {
+                    panicked += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        panicked
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        let _ = self.join_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +198,55 @@ mod tests {
             parallel_chunks(5000, |r| r.map(|i| i as u64).sum::<u64>());
         let total: u64 = partial.iter().sum();
         assert_eq!(total, (0..5000u64).sum::<u64>());
+    }
+
+    #[test]
+    fn worker_pool_runs_and_joins() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut pool = WorkerPool::new();
+        assert!(pool.is_empty());
+        for i in 0..4 {
+            let c = counter.clone();
+            pool.spawn(format!("worker-{i}"), move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(pool.len(), 4);
+        assert_eq!(pool.join_all(), 0);
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn worker_pool_contains_panics() {
+        let mut pool = WorkerPool::new();
+        pool.spawn("panicker", || panic!("worker crashed"));
+        pool.spawn("ok", || {});
+        assert_eq!(pool.join_all(), 1);
+    }
+
+    #[test]
+    fn worker_pool_reaps_finished_workers() {
+        use std::sync::mpsc::channel;
+        let mut pool = WorkerPool::new();
+        let (tx, rx) = channel::<()>();
+        pool.spawn("blocked", move || {
+            let _ = rx.recv(); // alive until tx drops
+        });
+        pool.spawn("quick", || {});
+        // Wait for the quick worker to finish, then reap: exactly one
+        // handle goes away, the blocked one stays.
+        for _ in 0..200 {
+            pool.reap_finished();
+            if pool.len() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(pool.len(), 1);
+        drop(tx);
+        assert_eq!(pool.join_all(), 0);
+        assert!(pool.is_empty());
     }
 }

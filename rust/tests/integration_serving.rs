@@ -1,32 +1,25 @@
-//! Serving-path integration: PJRT runtime + engine + TCP server, end to
-//! end over the real AOT artifacts. Skipped (with a notice) when
-//! `artifacts/manifest.json` is missing — run `make artifacts` first.
+//! Serving-path integration: model zoo + engine + sharded TCP server, end
+//! to end. The native engines need no AOT artifacts, so these tests always
+//! run (the zoo trains small models on first use and caches the weights
+//! under `artifacts/weights/`).
 
-use dither::coordinator::{serve, Engine, ServerConfig};
+use dither::coordinator::{format_request, serve, wait_ready, Engine, ServerConfig};
 use dither::data::{Dataset, Task};
 use dither::rounding::RoundingMode;
+use dither::train::Zoo;
 use dither::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
-fn artifacts_present() -> bool {
-    let ok = std::path::Path::new("artifacts/manifest.json").exists();
-    if !ok {
-        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
-    }
-    ok
-}
+const TRAIN_N: usize = 300;
 
 #[test]
-fn engine_agrees_with_native_path_at_high_k() {
-    if !artifacts_present() {
-        return;
-    }
-    let engine = Engine::new("artifacts", 1500, 7).expect("engine");
+fn engine_serves_accurately_at_high_k() {
+    let engine = Engine::new(TRAIN_N, 7);
     let ds = Dataset::synthesize(Task::Digits, 32, 0x7357);
     let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
-    // k=8 dither ≈ float model predictions (bias+relu in both paths).
+    // k=8 dither ≈ float model predictions.
     let outputs = engine
         .infer_batch("digits_linear", 8, RoundingMode::Dither, &pixels)
         .expect("infer");
@@ -36,10 +29,7 @@ fn engine_agrees_with_native_path_at_high_k() {
         .zip(&ds.labels)
         .filter(|(o, &l)| o.pred == l)
         .count();
-    assert!(
-        correct >= 24,
-        "artifact-path accuracy {correct}/32 too low at k=8"
-    );
+    assert!(correct >= 16, "serving accuracy {correct}/32 too low at k=8");
     for out in &outputs {
         assert_eq!(out.logits.len(), 10);
         assert!(out.logits.iter().all(|v| v.is_finite()));
@@ -47,11 +37,8 @@ fn engine_agrees_with_native_path_at_high_k() {
 }
 
 #[test]
-fn engine_mode_and_k_change_results() {
-    if !artifacts_present() {
-        return;
-    }
-    let engine = Engine::new("artifacts", 1500, 7).expect("engine");
+fn engine_mode_and_seed_change_results() {
+    let engine = Engine::new(TRAIN_N, 7);
     let ds = Dataset::synthesize(Task::Digits, 4, 0x7358);
     let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
     let a = engine
@@ -60,43 +47,26 @@ fn engine_mode_and_k_change_results() {
     let b = engine
         .infer_batch("digits_linear", 2, RoundingMode::Dither, &pixels)
         .unwrap();
-    // Seeds advance per batch: stochastic logits differ between calls.
-    let same = a
-        .iter()
-        .zip(&b)
-        .all(|(x, y)| x.logits == y.logits);
+    // Seeds advance per batch: dither logits differ between calls.
+    let same = a.iter().zip(&b).all(|(x, y)| x.logits == y.logits);
     assert!(!same, "dither logits should vary across batches (seed advances)");
-    // Deterministic mode is stable.
-    let c = engine
+    // Deterministic mode is stable across calls, and across engines with
+    // different seed streams (it never reads the seed).
+    let zoo = std::sync::Arc::new(Zoo::load(TRAIN_N, 7));
+    let e1 = Engine::from_zoo(zoo.clone(), 7);
+    let e2 = Engine::from_zoo(zoo, 99);
+    let c = e1
         .infer_batch("digits_linear", 2, RoundingMode::Deterministic, &pixels)
         .unwrap();
-    let d = engine
+    let d = e2
         .infer_batch("digits_linear", 2, RoundingMode::Deterministic, &pixels)
         .unwrap();
     assert!(c.iter().zip(&d).all(|(x, y)| x.logits == y.logits));
 }
 
 #[test]
-fn engine_splits_oversized_batches() {
-    if !artifacts_present() {
-        return;
-    }
-    let engine = Engine::new("artifacts", 1500, 7).expect("engine");
-    // 300 > largest artifact batch (256): must split and still answer all.
-    let ds = Dataset::synthesize(Task::Digits, 300, 0x7359);
-    let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
-    let outputs = engine
-        .infer_batch("digits_linear", 4, RoundingMode::Stochastic, &pixels)
-        .expect("infer");
-    assert_eq!(outputs.len(), 300);
-}
-
-#[test]
 fn fashion_mlp_serves() {
-    if !artifacts_present() {
-        return;
-    }
-    let engine = Engine::new("artifacts", 1500, 7).expect("engine");
+    let engine = Engine::new(TRAIN_N, 7);
     let ds = Dataset::synthesize(Task::Fashion, 8, 0x735A);
     let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
     let outputs = engine
@@ -106,56 +76,79 @@ fn fashion_mlp_serves() {
     assert!(outputs.iter().all(|o| o.logits.iter().all(|v| v.is_finite())));
 }
 
+fn connect_when_up(addr: &str) -> TcpStream {
+    assert!(
+        wait_ready(addr, Duration::from_secs(120)),
+        "server did not come up on {addr}"
+    );
+    TcpStream::connect(addr).expect("connect after ready")
+}
+
 #[test]
-fn tcp_server_end_to_end() {
-    if !artifacts_present() {
-        return;
-    }
+fn tcp_server_end_to_end_sharded() {
     let addr = "127.0.0.1:17979";
     let cfg = ServerConfig {
         addr: addr.to_string(),
+        shards: 4,
         max_batch: 8,
         max_wait_us: 500,
-        artifacts_dir: "artifacts".to_string(),
-        train_n: 800,
+        queue_cap: 64,
+        train_n: TRAIN_N,
         seed: 7,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 
-    // Wait for the listener + engine to come up (engine trains models).
-    let mut stream = None;
-    for _ in 0..600 {
-        match TcpStream::connect(addr) {
-            Ok(s) => {
-                stream = Some(s);
-                break;
-            }
-            Err(_) => std::thread::sleep(Duration::from_millis(100)),
-        }
-    }
-    let stream = stream.expect("server did not come up");
+    // Wait until the server answers a ping (the zoo may be training).
+    let stream = connect_when_up(addr);
     let mut reader = BufReader::new(stream.try_clone().unwrap());
     let mut writer = stream;
     let mut line = String::new();
 
-    // Ping (also confirms the engine finished initializing).
-    writeln!(writer, "{{\"cmd\":\"ping\"}}").unwrap();
-    reader.read_line(&mut line).unwrap();
-    assert!(line.contains("pong"), "{line}");
+    // Mixed-scheme inference round-trips on one connection; deterministic
+    // replies must match a local reference engine exactly. (Same train_n
+    // and seed as the server, so the reference model is identical even on
+    // a cold weight cache.)
+    let reference = Engine::new(TRAIN_N, 7);
+    let ds = Dataset::synthesize(Task::Digits, 4, 0x7E57);
+    let mut shard_seen = None;
+    for (id, mode) in [
+        (5u64, RoundingMode::Dither),
+        (6, RoundingMode::Stochastic),
+        (7, RoundingMode::Deterministic),
+    ] {
+        let pixels = ds.images.row((id - 5) as usize);
+        writeln!(writer, "{}", format_request(id, "digits_linear", 4, mode, pixels)).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).expect("response json");
+        assert_eq!(resp.get("id").unwrap().as_f64(), Some(id as f64), "{line}");
+        assert_eq!(resp.get("scheme").unwrap().as_str(), Some(mode.name()), "{line}");
+        assert!(resp.get("error").is_none(), "{line}");
+        let shard = resp.get("shard").unwrap().as_f64().unwrap();
+        match shard_seen {
+            None => shard_seen = Some(shard),
+            Some(s) => assert_eq!(s, shard, "connection must stay on one shard"),
+        }
+        if mode == RoundingMode::Deterministic {
+            let got = resp.get("logits").unwrap().as_f64_vec().unwrap();
+            let want = reference
+                .infer_batch("digits_linear", 4, mode, &[pixels])
+                .unwrap();
+            assert_eq!(got, want[0].logits, "deterministic logits must be exact");
+        }
+    }
 
-    // Inference round-trip.
-    let ds = Dataset::synthesize(Task::Digits, 1, 0x7E57);
-    let req = format!(
-        "{{\"id\":5,\"model\":\"digits_linear\",\"k\":4,\"mode\":\"dither\",\"pixels\":{}}}",
-        Json::nums(ds.images.row(0))
-    );
-    writeln!(writer, "{req}").unwrap();
+    // The legacy "mode" spelling still parses (hand-built on purpose —
+    // format_request emits the current wire format).
+    writeln!(
+        writer,
+        "{{\"id\":8,\"model\":\"digits_linear\",\"k\":4,\"mode\":\"dither\",\"pixels\":{}}}",
+        Json::nums(ds.images.row(3))
+    )
+    .unwrap();
     line.clear();
     reader.read_line(&mut line).unwrap();
-    let resp = Json::parse(line.trim()).expect("response json");
-    assert_eq!(resp.get("id").unwrap().as_f64(), Some(5.0));
-    assert!(resp.get("pred").is_some(), "{line}");
-    assert!(resp.get("error").is_none(), "{line}");
+    assert!(line.contains("\"pred\""), "{line}");
 
     // Malformed request → error, connection stays usable.
     writeln!(writer, "{{\"k\":4}}").unwrap();
@@ -163,17 +156,109 @@ fn tcp_server_end_to_end() {
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("error"), "{line}");
 
-    // Stats.
+    // A second connection lands on its own shard id deterministically and
+    // still gets served.
+    let stream2 = connect_when_up(addr);
+    let mut reader2 = BufReader::new(stream2.try_clone().unwrap());
+    let mut writer2 = stream2;
+    writeln!(
+        writer2,
+        "{}",
+        format_request(20, "fashion_mlp", 6, RoundingMode::Dither, ds.images.row(0))
+    )
+    .unwrap();
+    let mut line2 = String::new();
+    reader2.read_line(&mut line2).unwrap();
+    let resp2 = Json::parse(line2.trim()).expect("response json");
+    assert!(resp2.get("error").is_none(), "{line2}");
+    drop(writer2);
+    drop(reader2);
+
+    // Stats: merged counters across 4 shards.
     writeln!(writer, "{{\"cmd\":\"stats\"}}").unwrap();
     line.clear();
     reader.read_line(&mut line).unwrap();
     let stats = Json::parse(line.trim()).expect("stats json");
-    assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 5.0, "{line}");
+    assert_eq!(stats.get("shards").unwrap().as_f64(), Some(4.0), "{line}");
+    assert!(stats.get("errors").unwrap().as_f64().unwrap() >= 1.0, "{line}");
+    assert_eq!(
+        stats
+            .get("per_shard_requests")
+            .unwrap()
+            .as_f64_vec()
+            .unwrap()
+            .len(),
+        4,
+        "{line}"
+    );
 
-    // Shutdown.
+    // Graceful shutdown: ack, then the server joins cleanly.
     writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
     line.clear();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("stopping"), "{line}");
+    drop(writer);
+    drop(reader);
+    server.join().unwrap().expect("server exits cleanly");
+}
+
+#[test]
+fn tcp_requests_pipeline_across_connections() {
+    let addr = "127.0.0.1:17981";
+    let cfg = ServerConfig {
+        addr: addr.to_string(),
+        shards: 2,
+        max_batch: 16,
+        max_wait_us: 2_000,
+        queue_cap: 64,
+        train_n: TRAIN_N,
+        seed: 7,
+    };
+    let server = std::thread::spawn(move || serve(&cfg));
+    assert!(
+        wait_ready(addr, Duration::from_secs(120)),
+        "server did not come up on {addr}"
+    );
+
+    let ds = Dataset::synthesize(Task::Digits, 8, 0xC0C0);
+    let clients: Vec<std::thread::JoinHandle<usize>> = (0..6)
+        .map(|c| {
+            let ds = ds.clone();
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut ok = 0;
+                let mut line = String::new();
+                for j in 0..5u64 {
+                    let id = (c * 10) as u64 + j;
+                    let mode = RoundingMode::ALL[j as usize % 3];
+                    let px = ds.images.row(((c as u64 + j) % 8) as usize);
+                    writeln!(writer, "{}", format_request(id, "digits_linear", 4, mode, px))
+                        .unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    let resp = Json::parse(line.trim()).expect("json");
+                    if resp.get("error").is_none()
+                        && resp.get("id").and_then(Json::as_f64) == Some(id as f64)
+                    {
+                        ok += 1;
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let total: usize = clients.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 30, "all pipelined requests answered correctly");
+
+    // Shut down.
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
     server.join().unwrap().expect("server exits cleanly");
 }

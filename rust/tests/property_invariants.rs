@@ -166,6 +166,123 @@ fn prop_json_roundtrip_floats() {
     });
 }
 
+/// The [`BitSeq`] contract: every bit at position >= len in the last word
+/// is zero, so `count_ones` (a plain word-wise popcount) equals the
+/// per-index count.
+fn tail_invariant_holds(s: &BitSeq) -> bool {
+    let n = s.len();
+    let rem = n % 64;
+    let tail_clean = if rem == 0 {
+        true
+    } else {
+        s.words().last().map(|w| w & !((1u64 << rem) - 1) == 0).unwrap_or(true)
+    };
+    tail_clean
+        && s.words().len() == n.div_ceil(64)
+        && s.count_ones() == s.iter().filter(|&b| b).count() as u64
+        && s.count_ones() <= n as u64
+}
+
+#[test]
+fn prop_bitseq_ops_preserve_tail_invariant() {
+    // Every constructor and word-parallel op must keep bits past `len`
+    // zero — `ones` and `mux` write `u64::MAX` / `!w` patterns that would
+    // leak into the tail without `mask_tail`.
+    check(
+        &Pair(RangeUsize { lo: 1, hi: 320 }, RangeUsize { lo: 0, hi: 1 << 20 }),
+        |&(n, seed)| {
+            let mut rng = Xoshiro256pp::new(seed as u64);
+            let a = BitSeq::from_fn(n, |_| rng.bernoulli(0.5));
+            let b = BitSeq::from_fn(n, |_| rng.bernoulli(0.3));
+            let w = BitSeq::from_fn(n, |i| i % 3 == 0);
+            tail_invariant_holds(&BitSeq::zeros(n))
+                && tail_invariant_holds(&BitSeq::ones(n))
+                && tail_invariant_holds(&a)
+                && tail_invariant_holds(&a.and(&b))
+                && tail_invariant_holds(&BitSeq::mux(&w, &a, &b))
+                && tail_invariant_holds(&BitSeq::mux(&BitSeq::zeros(n), &a, &BitSeq::ones(n)))
+        },
+    );
+}
+
+#[test]
+fn prop_bitseq_mask_tail_repairs_raw_word_writes() {
+    // `words_mut` callers must restore the invariant with `mask_tail`; the
+    // repaired sequence reads all-ones below `len` and nothing above.
+    check(&RangeUsize { lo: 1, hi: 320 }, |&n| {
+        let mut s = BitSeq::zeros(n);
+        for w in s.words_mut() {
+            *w = u64::MAX;
+        }
+        s.mask_tail();
+        tail_invariant_holds(&s) && s.count_ones() == n as u64 && s.value() == 1.0
+    });
+}
+
+/// Structured request-message fuzz case: each field independently valid or
+/// invalid; `parse_message` must accept exactly the all-valid combinations.
+#[derive(Debug, Clone)]
+struct ReqCase {
+    k: i64,
+    scheme: usize,
+    pixels: usize,
+    with_pixels: bool,
+}
+
+const SCHEME_SPELLINGS: [&str; 8] = [
+    "dither",
+    "stochastic",
+    "deterministic",
+    "det",
+    "sr",
+    "traditional",
+    "fuzzy",
+    "",
+];
+const VALID_SCHEMES: usize = 6;
+
+struct ReqGen;
+impl Gen for ReqGen {
+    type Item = ReqCase;
+    fn gen(&self, rng: &mut Xoshiro256pp) -> ReqCase {
+        ReqCase {
+            k: rng.below(24) as i64 - 4,
+            scheme: rng.below(SCHEME_SPELLINGS.len() as u64) as usize,
+            pixels: if rng.bernoulli(0.5) {
+                784
+            } else {
+                rng.below(1000) as usize
+            },
+            with_pixels: rng.bernoulli(0.9),
+        }
+    }
+}
+
+#[test]
+fn prop_protocol_accepts_exactly_the_valid_requests() {
+    check(&ReqGen, |case| {
+        let scheme = SCHEME_SPELLINGS[case.scheme];
+        let mut line = format!("{{\"id\":1,\"k\":{},\"scheme\":\"{}\"", case.k, scheme);
+        if case.with_pixels {
+            line.push_str(",\"pixels\":[");
+            line.push_str(&vec!["0.5"; case.pixels].join(","));
+            line.push(']');
+        }
+        line.push('}');
+        let should_parse = (1..=16).contains(&case.k)
+            && case.scheme < VALID_SCHEMES
+            && case.with_pixels
+            && case.pixels == 784;
+        match dither::coordinator::parse_message(&line) {
+            Ok(dither::coordinator::Message::Infer(req)) => {
+                should_parse && req.k == case.k as u32 && req.pixels.len() == 784
+            }
+            Ok(_) => false,
+            Err(_) => !should_parse,
+        }
+    });
+}
+
 #[test]
 fn prop_protocol_parse_never_panics_on_fuzz() {
     struct Garbage;

@@ -1,6 +1,7 @@
-//! End-to-end serving benchmarks: the native engine batch path, and the
-//! full TCP serving stack measured for 1 shard vs K shards (the sharding
-//! speedup is the headline number for the coordinator refactor).
+//! End-to-end serving benchmarks: the native engine batch path, the
+//! plan-cache hit-vs-miss comparison (the plan/execute split's headline
+//! number), and the full TCP serving stack measured for 1 shard vs K
+//! shards (the sharding speedup from the coordinator refactor).
 //!
 //! Run: `cargo bench --bench bench_e2e`   (`DITHER_BENCH_FAST=1` for a
 //! smoke run). Results are written to `results/bench_e2e.json`.
@@ -8,11 +9,13 @@
 use dither::coordinator::{format_request, ping, serve, Engine, ServerConfig};
 use dither::data::{Dataset, Task};
 use dither::rounding::RoundingMode;
+use dither::train::Zoo;
 use dither::util::benchmark::{black_box, format_count, Bench};
 use dither::util::json::Json;
 use dither::util::threadpool::num_threads;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const TRAIN_N: usize = 2000;
@@ -22,7 +25,8 @@ fn main() {
     let mut bench = Bench::new();
 
     // ---- native engine batch throughput --------------------------------
-    let engine = Engine::new(TRAIN_N, 7);
+    let zoo = Arc::new(Zoo::load(TRAIN_N, 7));
+    let engine = Engine::from_zoo(zoo.clone(), 7);
     let ds = Dataset::synthesize(Task::Digits, 256, 99);
     for &batch in &[1usize, 32, 256] {
         let pixels: Vec<&[f64]> = (0..batch).map(|i| ds.images.row(i)).collect();
@@ -45,6 +49,43 @@ fn main() {
         )
     });
     drop(engine);
+
+    // ---- plan cache: hit vs miss ---------------------------------------
+    // Same zoo, same requests; the only difference is whether the
+    // weight-side plans are resident (prewarmed cache) or rebuilt per call
+    // (capacity 0). The ratio is the serving win of the plan/execute
+    // split.
+    let hit_engine = Engine::from_zoo(zoo.clone(), 7);
+    hit_engine.prewarm(&[4], &[RoundingMode::Dither]);
+    let miss_engine = Engine::with_plan_cache(zoo.clone(), 7, 0);
+    let mut cache_pairs: Vec<(String, f64, f64)> = Vec::new();
+    for &(model, batch) in &[("digits_linear", 1usize), ("fashion_mlp", 1), ("fashion_mlp", 8)] {
+        let src = if model == "fashion_mlp" { &fds } else { &ds };
+        let pixels: Vec<&[f64]> = (0..batch).map(|i| src.images.row(i % src.len())).collect();
+        let engines: [(&Engine, &str); 2] = [(&hit_engine, "hit"), (&miss_engine, "miss")];
+        let mut rates = [0.0f64; 2];
+        for (slot, (engine, label)) in engines.iter().enumerate() {
+            let name = format!("e2e/plan_cache_{label}/{model}/k=4/dither/batch={batch}");
+            let result = bench.bench_items(&name, batch as f64, || {
+                black_box(
+                    engine
+                        .infer_batch(model, 4, RoundingMode::Dither, &pixels)
+                        .expect("infer"),
+                )
+            });
+            rates[slot] = result.throughput().unwrap_or(0.0);
+        }
+        cache_pairs.push((format!("{model}/batch={batch}"), rates[0], rates[1]));
+    }
+    for (case, hit, miss) in &cache_pairs {
+        if *miss > 0.0 {
+            println!("plan cache speedup {case}: {:.2}x (hit vs miss)", hit / miss);
+        }
+    }
+    let hit_stats = hit_engine.plan_cache_stats();
+    assert_eq!(hit_stats.misses, 0, "prewarmed engine must never replan");
+    drop(hit_engine);
+    drop(miss_engine);
 
     // ---- TCP serving throughput: 1 shard vs K shards -------------------
     let k_shards = num_threads().clamp(2, 8);
@@ -75,12 +116,21 @@ fn main() {
         }
     }
 
-    // Merge the harness results with the serving measurements.
+    // Merge the harness results with the serving measurements and the
+    // plan-cache speedup ratios.
     let mut all: Vec<Json> = Json::parse(&bench.to_json())
         .expect("bench json")
         .as_arr()
         .expect("bench json array")
         .to_vec();
+    for (case, hit, miss) in &cache_pairs {
+        all.push(Json::obj(vec![
+            ("name", Json::Str(format!("e2e/plan_cache_speedup/{case}"))),
+            ("hit_items_per_s", Json::Num(*hit)),
+            ("miss_items_per_s", Json::Num(*miss)),
+            ("speedup", Json::Num(if *miss > 0.0 { hit / miss } else { 0.0 })),
+        ]));
+    }
     all.extend(serving);
     std::fs::create_dir_all("results").expect("results dir");
     std::fs::write("results/bench_e2e.json", Json::Arr(all).to_string())
@@ -106,6 +156,7 @@ fn serving_throughput(
         queue_cap: 1024,
         train_n: TRAIN_N,
         seed: 7,
+        prewarm_bits: vec![4],
     };
     let server = std::thread::spawn(move || serve(&cfg));
 

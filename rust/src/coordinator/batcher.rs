@@ -231,7 +231,7 @@ pub fn worker_loop(batcher: &Batcher, engine: &Engine, metrics: &ShardMetrics, s
             Ok(outputs) => {
                 for (p, out) in batch.iter().zip(outputs) {
                     let latency_us = p.enqueued.elapsed().as_micros() as u64;
-                    metrics.record_request(latency_us);
+                    metrics.record_request(key.mode, latency_us);
                     let line = format_response(
                         p.req.id,
                         out.pred,

@@ -3,26 +3,102 @@
 //!
 //! The engine is the boundary between L3 (request coordination) and the
 //! numeric core: it marshals a batch of same-`(model, k, scheme)` requests
-//! into one matrix, runs the reduced-precision forward pass
-//! ([`crate::nn::quantized_forward`]) under the requested rounding scheme,
-//! and reads back logits. Model state ([`Zoo`]) is shared across all
-//! serving shards behind an `Arc`; each shard owns its own `Engine`, whose
-//! per-engine seed counter decorrelates the stochastic/dither rounding
-//! streams between shards without any cross-shard synchronization.
+//! into one matrix, runs the reduced-precision forward pass under the
+//! requested rounding scheme, and reads back logits. Model state ([`Zoo`])
+//! is shared across all serving shards behind an `Arc`; each shard owns its
+//! own `Engine`, whose per-engine seed counter decorrelates the
+//! stochastic/dither rounding streams between shards without any
+//! cross-shard synchronization.
+//!
+//! Each engine additionally owns a **bounded LRU plan cache** of
+//! [`PreparedModel`]s keyed by [`PlanKey`] (the
+//! [`crate::nn::QuantInferenceConfig`] fingerprint): hot scheme/bit
+//! configurations skip all weight-side planning and requantization, paying
+//! only for the activation side of each request. The cache is per shard —
+//! shards specialize on the configurations their connections actually
+//! send, instead of all sharing one view of the zoo.
 
 use crate::linalg::{Matrix, Variant};
-use crate::nn::{quantized_forward, QuantInferenceConfig};
+use crate::nn::{quantized_forward, PlanKey, PreparedModel, QuantInferenceConfig};
 use crate::rounding::RoundingMode;
 use crate::train::Zoo;
 use crate::util::error::Result;
 use crate::{bail, err};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-/// The serving engine: shared model zoo + a private rounding-seed stream.
+/// Default per-engine plan-cache capacity (entries). Sized for the full
+/// prewarm grid (2 models × 3 schemes × a handful of bit widths) plus
+/// headroom for request-driven configurations.
+pub const DEFAULT_PLAN_CACHE: usize = 32;
+
+/// Bounded LRU over prepared models. Capacity 0 disables retention: every
+/// lookup is a miss that builds fresh plans (the cache-miss baseline the
+/// `bench_e2e` plan-cache comparison measures).
+struct PlanCache {
+    capacity: usize,
+    /// Front = most recently used.
+    entries: VecDeque<(PlanKey, Arc<PreparedModel>)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity,
+            entries: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn get(&mut self, key: &PlanKey) -> Option<Arc<PreparedModel>> {
+        let idx = self.entries.iter().position(|(k, _)| k == key)?;
+        let entry = self.entries.remove(idx).expect("index from position");
+        let plans = entry.1.clone();
+        self.entries.push_front(entry);
+        self.hits += 1;
+        Some(plans)
+    }
+
+    fn insert(&mut self, key: PlanKey, plans: Arc<PreparedModel>) {
+        if self.capacity == 0 {
+            return;
+        }
+        if let Some(idx) = self.entries.iter().position(|(k, _)| k == &key) {
+            self.entries.remove(idx);
+        }
+        self.entries.push_front((key, plans));
+        while self.entries.len() > self.capacity {
+            self.entries.pop_back();
+        }
+    }
+}
+
+/// Observable plan-cache counters (tests, benches, ops logging).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that built fresh plans.
+    pub misses: u64,
+    /// Resident entries.
+    pub len: usize,
+    /// Configured capacity (0 = caching disabled).
+    pub capacity: usize,
+}
+
+/// The serving engine: shared model zoo + a private rounding-seed stream +
+/// a per-engine prepared-plan cache.
 pub struct Engine {
     zoo: Arc<Zoo>,
     seed_counter: AtomicU64,
+    /// Seed for freezing dither weight draws in prepared plans (stable per
+    /// engine so repeated cache misses rebuild identical plans).
+    prep_seed: u64,
+    plans: Mutex<PlanCache>,
 }
 
 /// Result of one request within a batch.
@@ -39,10 +115,28 @@ impl Engine {
     /// engine per shard). `seed` seeds this engine's rounding stream; give
     /// each shard a distinct value.
     pub fn from_zoo(zoo: Arc<Zoo>, seed: u64) -> Engine {
+        Engine::with_plan_cache(zoo, seed, DEFAULT_PLAN_CACHE)
+    }
+
+    /// Engine with an explicit plan-cache capacity (entries; 0 disables
+    /// caching so every request replans the weight side — the cache-miss
+    /// baseline).
+    pub fn with_plan_cache(zoo: Arc<Zoo>, seed: u64, plan_cache_cap: usize) -> Engine {
         Engine {
             zoo,
             seed_counter: AtomicU64::new(seed),
+            prep_seed: seed,
+            plans: Mutex::new(PlanCache::new(plan_cache_cap)),
         }
+    }
+
+    /// Override the plan-preparation seed (the frozen dither weight draw).
+    /// The shard pool points every engine at the seed the zoo prewarmed
+    /// with, so a plan rebuilt after eviction is bit-identical to the
+    /// prewarmed one it replaces.
+    pub fn with_prep_seed(mut self, prep_seed: u64) -> Engine {
+        self.prep_seed = prep_seed;
+        self
     }
 
     /// Standalone engine that loads (or trains + caches) its own zoo.
@@ -61,23 +155,60 @@ impl Engine {
         self.zoo.get(model).map(|m| m.float_accuracy)
     }
 
-    /// Execute a batch of same-(model, k, scheme) requests.
-    ///
-    /// Deterministic rounding ignores the seed stream, so its outputs are
-    /// bit-reproducible across engines and calls; stochastic and dither
-    /// rounding consume one seed per batch, so repeated calls sample fresh
-    /// rounding noise (the unbiased-in-expectation serving behaviour the
-    /// paper's §VII comparison needs).
-    pub fn infer_batch(
-        &self,
+    /// Plan-cache counters.
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        let cache = self.plans.lock().unwrap();
+        PlanCacheStats {
+            hits: cache.hits,
+            misses: cache.misses,
+            len: cache.entries.len(),
+            capacity: cache.capacity,
+        }
+    }
+
+    /// Install an externally prepared model (zoo-level prewarming: build
+    /// the plans once at startup, share them across every shard's cache).
+    pub fn install_prepared(&self, key: PlanKey, plans: Arc<PreparedModel>) {
+        self.plans.lock().unwrap().insert(key, plans);
+    }
+
+    /// Prewarm this engine's cache for the given bit widths and schemes
+    /// across every zoo model (startup path for standalone engines).
+    pub fn prewarm(&self, bits: &[u32], modes: &[RoundingMode]) {
+        let prepared = self
+            .zoo
+            .prewarm_plans(bits, modes, Variant::Separate, self.prep_seed);
+        for (key, plans) in prepared {
+            self.install_prepared(key, plans);
+        }
+    }
+
+    /// Fetch the prepared model for a configuration, building (and caching,
+    /// capacity permitting) on miss.
+    fn prepared_for(&self, key: &PlanKey, mlp: &crate::nn::Mlp) -> Arc<PreparedModel> {
+        let mut cache = self.plans.lock().unwrap();
+        if let Some(plans) = cache.get(key) {
+            return plans;
+        }
+        cache.misses += 1;
+        let plans = Arc::new(PreparedModel::prepare(
+            mlp,
+            key.bits,
+            key.mode,
+            key.variant,
+            self.prep_seed,
+        ));
+        cache.insert(key.clone(), plans.clone());
+        plans
+    }
+
+    /// Validate a batch and marshal it into one input matrix.
+    fn marshal<'z>(
+        &'z self,
         model: &str,
         k: u32,
-        mode: RoundingMode,
         pixels: &[&[f64]],
-    ) -> Result<Vec<InferenceOutput>> {
-        if pixels.is_empty() {
-            return Ok(Vec::new());
-        }
+    ) -> Result<(&'z crate::train::ZooModel, Matrix)> {
         if !(1..=16).contains(&k) {
             bail!("k={k} out of range 1..=16");
         }
@@ -96,18 +227,27 @@ impl Engine {
             }
             x.row_mut(i).copy_from_slice(row);
         }
+        Ok((state, x))
+    }
+
+    /// Draw one batch seed and assemble the serving inference config (the
+    /// single derivation both the planned and unplanned paths share).
+    fn batch_config(&self, k: u32, mode: RoundingMode) -> QuantInferenceConfig {
         // One seed per batch: deterministic mode never reads it, the
         // unbiased modes get a fresh rounding stream each call.
         let seed = self.seed_counter.fetch_add(1, Ordering::Relaxed);
-        let cfg = QuantInferenceConfig {
+        QuantInferenceConfig {
             bits: k,
             mode,
             variant: Variant::Separate,
             seed,
-        };
-        let logits_matrix = quantized_forward(&state.mlp, &x, &state.ranges, &cfg);
-        let mut out = Vec::with_capacity(pixels.len());
-        for i in 0..pixels.len() {
+        }
+    }
+
+    /// Read logits back into per-request outputs.
+    fn read_back(logits_matrix: &Matrix) -> Vec<InferenceOutput> {
+        let mut out = Vec::with_capacity(logits_matrix.rows);
+        for i in 0..logits_matrix.rows {
             let logits = logits_matrix.row(i).to_vec();
             let pred = logits
                 .iter()
@@ -117,7 +257,50 @@ impl Engine {
                 .unwrap_or(0);
             out.push(InferenceOutput { pred, logits });
         }
-        Ok(out)
+        out
+    }
+
+    /// Execute a batch of same-(model, k, scheme) requests.
+    ///
+    /// Deterministic rounding ignores the seed stream, so its outputs are
+    /// bit-reproducible across engines and calls; stochastic and dither
+    /// rounding consume one seed per batch, so repeated calls sample fresh
+    /// rounding noise (the unbiased-in-expectation serving behaviour the
+    /// paper's §VII comparison needs). The weight side of every layer comes
+    /// from the plan cache; only the activation side is planned per call.
+    pub fn infer_batch(
+        &self,
+        model: &str,
+        k: u32,
+        mode: RoundingMode,
+        pixels: &[&[f64]],
+    ) -> Result<Vec<InferenceOutput>> {
+        if pixels.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (state, x) = self.marshal(model, k, pixels)?;
+        let cfg = self.batch_config(k, mode);
+        let prepared = self.prepared_for(&cfg.plan_key(model), &state.mlp);
+        let logits_matrix = prepared.forward(&state.mlp, &x, &state.ranges, cfg.seed);
+        Ok(Engine::read_back(&logits_matrix))
+    }
+
+    /// The direct (plan-both-sides-per-call) forward pass for one batch —
+    /// the pre-plan-cache serving path, kept for A/B checks and benches.
+    pub fn infer_batch_unplanned(
+        &self,
+        model: &str,
+        k: u32,
+        mode: RoundingMode,
+        pixels: &[&[f64]],
+    ) -> Result<Vec<InferenceOutput>> {
+        if pixels.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (state, x) = self.marshal(model, k, pixels)?;
+        let cfg = self.batch_config(k, mode);
+        let logits_matrix = quantized_forward(&state.mlp, &x, &state.ranges, &cfg);
+        Ok(Engine::read_back(&logits_matrix))
     }
 }
 
@@ -151,6 +334,98 @@ mod tests {
             c.iter().zip(&d).any(|(x, y)| x.logits != y.logits),
             "dither logits should vary across batches (seed advances)"
         );
+    }
+
+    #[test]
+    fn planned_deterministic_matches_direct_path() {
+        // The acceptance bit-identity at the serving boundary: cached plans
+        // must reproduce the plan-per-call path exactly for deterministic
+        // rounding.
+        let engine = tiny_engine();
+        let ds = crate::data::Dataset::synthesize(crate::data::Task::Fashion, 6, 0xE20);
+        let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
+        for k in [1u32, 4, 8] {
+            let planned = engine
+                .infer_batch("fashion_mlp", k, RoundingMode::Deterministic, &pixels)
+                .unwrap();
+            let direct = engine
+                .infer_batch_unplanned("fashion_mlp", k, RoundingMode::Deterministic, &pixels)
+                .unwrap();
+            assert!(
+                planned
+                    .iter()
+                    .zip(&direct)
+                    .all(|(p, d)| p.logits == d.logits && p.pred == d.pred),
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_cache_lru_evicts_oldest() {
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let engine = Engine::with_plan_cache(zoo, 7, 2);
+        let px = vec![0.3f64; 784];
+        let rows: Vec<&[f64]> = vec![&px];
+        for k in [2u32, 3, 4] {
+            engine
+                .infer_batch("digits_linear", k, RoundingMode::Deterministic, &rows)
+                .unwrap();
+        }
+        let stats = engine.plan_cache_stats();
+        assert_eq!(stats.capacity, 2);
+        assert_eq!(stats.len, 2, "bounded cache must not grow past capacity");
+        assert_eq!((stats.hits, stats.misses), (0, 3));
+        // k=3 and k=4 are resident; re-serving them hits.
+        for k in [3u32, 4] {
+            engine
+                .infer_batch("digits_linear", k, RoundingMode::Deterministic, &rows)
+                .unwrap();
+        }
+        assert_eq!(engine.plan_cache_stats().hits, 2);
+        // k=2 was the LRU victim: serving it again is a rebuild, and it
+        // evicts the now-oldest k=3.
+        engine
+            .infer_batch("digits_linear", 2, RoundingMode::Deterministic, &rows)
+            .unwrap();
+        let stats = engine.plan_cache_stats();
+        assert_eq!(stats.misses, 4, "evicted configuration must rebuild");
+        assert_eq!(stats.len, 2);
+        engine
+            .infer_batch("digits_linear", 4, RoundingMode::Deterministic, &rows)
+            .unwrap();
+        assert_eq!(engine.plan_cache_stats().hits, 3, "k=4 must still be resident");
+    }
+
+    #[test]
+    fn zero_capacity_disables_retention() {
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let engine = Engine::with_plan_cache(zoo, 7, 0);
+        let px = vec![0.3f64; 784];
+        let rows: Vec<&[f64]> = vec![&px];
+        for _ in 0..3 {
+            engine
+                .infer_batch("digits_linear", 4, RoundingMode::Dither, &rows)
+                .unwrap();
+        }
+        let stats = engine.plan_cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.len), (0, 3, 0));
+    }
+
+    #[test]
+    fn prewarm_populates_cache() {
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let engine = Engine::from_zoo(zoo, 7);
+        engine.prewarm(&[2, 4], &RoundingMode::ALL);
+        let stats = engine.plan_cache_stats();
+        assert_eq!(stats.len, 2 * 2 * 3, "models × bits × schemes");
+        let px = vec![0.3f64; 784];
+        let rows: Vec<&[f64]> = vec![&px];
+        engine
+            .infer_batch("digits_linear", 4, RoundingMode::Dither, &rows)
+            .unwrap();
+        let stats = engine.plan_cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 0), "prewarmed config must hit");
     }
 
     #[test]

@@ -5,7 +5,18 @@
 //! counting never serializes shards against each other. The `stats`
 //! command walks every shard and merges counters plus the log₂ latency
 //! histograms into one JSON snapshot.
+//!
+//! Two latency views coexist:
+//!
+//! * **lifetime** — cumulative log₂ buckets since startup (capacity
+//!   planning, long-run drift);
+//! * **recent** — rotating wall-clock windows ([`WINDOW_SLOTS`] slots of
+//!   [`WINDOW_SECS`] each, ~one minute total), kept *per rounding scheme*,
+//!   so `stats` reports what p50/p99 look like right now for
+//!   deterministic vs stochastic vs dither traffic rather than a
+//!   lifetime aggregate that stale load shapes dominate.
 
+use crate::rounding::RoundingMode;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -15,6 +26,96 @@ use std::time::Instant;
 /// `[2^(i-1), 2^i)` µs (bucket 0 is exactly 0 µs). 2^38 µs ≈ 3 days, far
 /// beyond any request timeout.
 const BUCKETS: usize = 40;
+
+/// Width of one rotating latency window.
+const WINDOW_SECS: u64 = 10;
+
+/// Number of rotating windows kept live (total span ≈ one minute).
+const WINDOW_SLOTS: usize = 6;
+
+/// One rotating slot: a histogram stamped with the epoch it belongs to.
+/// Writers of a new epoch zero the slot *before* publishing the epoch
+/// stamp, so a concurrent scrape sees either the (excluded) stale epoch
+/// or an already-reset histogram — aged-out data can never be read back
+/// as current. Writers racing the reset can lose a handful of counts at
+/// a window boundary, which is acceptable for approximate recent-latency
+/// metrics (no lock on the hot path).
+struct WindowSlot {
+    /// Epoch stamp (0 = never written; live epochs start at 1).
+    epoch: AtomicU64,
+    count: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl WindowSlot {
+    fn new() -> WindowSlot {
+        WindowSlot {
+            epoch: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Rotating wall-clock latency windows for one rounding scheme.
+struct SchemeWindows {
+    slots: [WindowSlot; WINDOW_SLOTS],
+}
+
+impl SchemeWindows {
+    fn new() -> SchemeWindows {
+        SchemeWindows {
+            slots: std::array::from_fn(|_| WindowSlot::new()),
+        }
+    }
+
+    /// Record one latency into the window for `epoch`.
+    fn record(&self, epoch: u64, latency_us: u64) {
+        let slot = &self.slots[(epoch % WINDOW_SLOTS as u64) as usize];
+        if slot.epoch.load(Ordering::Relaxed) != epoch {
+            // Zero first, then publish the new epoch: until the store the
+            // slot still carries its stale (excluded) stamp, so a scrape
+            // never mixes aged-out buckets into the current window.
+            for b in &slot.buckets {
+                b.store(0, Ordering::Relaxed);
+            }
+            slot.count.store(0, Ordering::Relaxed);
+            slot.epoch.store(epoch, Ordering::Relaxed);
+        }
+        slot.count.fetch_add(1, Ordering::Relaxed);
+        slot.buckets[bucket_index(latency_us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Merge every slot still inside the window (relative to `now_epoch`)
+    /// into `count` + `buckets`.
+    fn fold_recent(&self, now_epoch: u64, count: &mut u64, buckets: &mut [u64; BUCKETS]) {
+        for slot in &self.slots {
+            let e = slot.epoch.load(Ordering::Relaxed);
+            if e != 0 && now_epoch.saturating_sub(e) < WINDOW_SLOTS as u64 {
+                *count += slot.count.load(Ordering::Relaxed);
+                for (acc, b) in buckets.iter_mut().zip(&slot.buckets) {
+                    *acc += b.load(Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Stable index of a scheme in the per-scheme window arrays.
+fn scheme_index(mode: RoundingMode) -> usize {
+    match mode {
+        RoundingMode::Deterministic => 0,
+        RoundingMode::Stochastic => 1,
+        RoundingMode::Dither => 2,
+    }
+}
+
+/// Scheme order used for the `recent` stats section.
+const SCHEME_ORDER: [RoundingMode; 3] = [
+    RoundingMode::Deterministic,
+    RoundingMode::Stochastic,
+    RoundingMode::Dither,
+];
 
 /// One shard's counters. All operations are relaxed atomics.
 #[derive(Debug)]
@@ -26,6 +127,14 @@ pub struct ShardMetrics {
     batched_requests: AtomicU64,
     latency_sum_us: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
+    started: Instant,
+    windows: [SchemeWindows; 3],
+}
+
+impl std::fmt::Debug for SchemeWindows {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("SchemeWindows")
+    }
 }
 
 impl Default for ShardMetrics {
@@ -45,14 +154,23 @@ impl ShardMetrics {
             batched_requests: AtomicU64::new(0),
             latency_sum_us: AtomicU64::new(0),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            started: Instant::now(),
+            windows: [SchemeWindows::new(), SchemeWindows::new(), SchemeWindows::new()],
         }
     }
 
-    /// Record one completed request with its end-to-end latency.
-    pub fn record_request(&self, latency_us: u64) {
+    /// The current rotating-window epoch (1-based; 0 marks unused slots).
+    fn current_epoch(&self) -> u64 {
+        self.started.elapsed().as_secs() / WINDOW_SECS + 1
+    }
+
+    /// Record one completed request of the given scheme with its
+    /// end-to-end latency.
+    pub fn record_request(&self, mode: RoundingMode, latency_us: u64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
         self.latency_buckets[bucket_index(latency_us)].fetch_add(1, Ordering::Relaxed);
+        self.windows[scheme_index(mode)].record(self.current_epoch(), latency_us);
     }
 
     /// Record a protocol or execution error.
@@ -86,6 +204,10 @@ impl ShardMetrics {
         for (slot, bucket) in acc.buckets.iter_mut().zip(&self.latency_buckets) {
             *slot += bucket.load(Ordering::Relaxed);
         }
+        let epoch = self.current_epoch();
+        for (mode, (count, buckets)) in SCHEME_ORDER.iter().zip(acc.recent.iter_mut()) {
+            self.windows[scheme_index(*mode)].fold_recent(epoch, count, buckets);
+        }
     }
 }
 
@@ -103,7 +225,23 @@ fn bucket_upper(index: usize) -> u64 {
     }
 }
 
-#[derive(Default)]
+/// Percentile estimate from a merged histogram (upper bucket edge).
+fn percentile_from_buckets(buckets: &[u64; BUCKETS], p: f64) -> f64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = ((total as f64) * p).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    for (i, &count) in buckets.iter().enumerate() {
+        seen += count;
+        if seen >= rank {
+            return bucket_upper(i) as f64;
+        }
+    }
+    bucket_upper(BUCKETS - 1) as f64
+}
+
 struct Merged {
     requests: u64,
     errors: u64,
@@ -112,24 +250,30 @@ struct Merged {
     batched_requests: u64,
     latency_sum_us: u64,
     buckets: [u64; BUCKETS],
+    /// Recent-window (count, buckets) per scheme, in [`SCHEME_ORDER`].
+    recent: [(u64, [u64; BUCKETS]); 3],
+}
+
+// Manual impl: `Default` is not derivable for arrays longer than 32.
+impl Default for Merged {
+    fn default() -> Merged {
+        Merged {
+            requests: 0,
+            errors: 0,
+            rejected: 0,
+            batches: 0,
+            batched_requests: 0,
+            latency_sum_us: 0,
+            buckets: [0; BUCKETS],
+            recent: [(0, [0; BUCKETS]); 3],
+        }
+    }
 }
 
 impl Merged {
-    /// Percentile estimate from the merged histogram (upper bucket edge).
+    /// Percentile estimate from the merged lifetime histogram.
     fn percentile_us(&self, p: f64) -> f64 {
-        let total: u64 = self.buckets.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let rank = ((total as f64) * p).ceil().max(1.0) as u64;
-        let mut seen = 0u64;
-        for (i, &count) in self.buckets.iter().enumerate() {
-            seen += count;
-            if seen >= rank {
-                return bucket_upper(i) as f64;
-            }
-        }
-        bucket_upper(BUCKETS - 1) as f64
+        percentile_from_buckets(&self.buckets, p)
     }
 }
 
@@ -167,7 +311,8 @@ impl Metrics {
     }
 
     /// Snapshot as a JSON line (the `stats` command response), merging all
-    /// shards.
+    /// shards. Includes the recent per-scheme rotating-window percentiles
+    /// alongside the lifetime histogram.
     pub fn snapshot_json(&self) -> String {
         let mut m = Merged::default();
         for shard in &self.shards {
@@ -190,6 +335,20 @@ impl Metrics {
             0.0
         };
         let per_shard: Vec<f64> = self.shards.iter().map(|s| s.requests() as f64).collect();
+        let recent: Vec<(&str, Json)> = SCHEME_ORDER
+            .iter()
+            .zip(&m.recent)
+            .map(|(mode, (count, buckets))| {
+                (
+                    mode.name(),
+                    Json::obj(vec![
+                        ("requests", Json::Num(*count as f64)),
+                        ("p50_us", Json::Num(percentile_from_buckets(buckets, 0.50))),
+                        ("p99_us", Json::Num(percentile_from_buckets(buckets, 0.99))),
+                    ]),
+                )
+            })
+            .collect();
         Json::obj(vec![
             ("requests", Json::Num(m.requests as f64)),
             ("errors", Json::Num(m.errors as f64)),
@@ -200,6 +359,8 @@ impl Metrics {
             ("p50_us", Json::Num(m.percentile_us(0.50))),
             ("p95_us", Json::Num(m.percentile_us(0.95))),
             ("p99_us", Json::Num(m.percentile_us(0.99))),
+            ("recent_window_s", Json::Num((WINDOW_SECS * WINDOW_SLOTS as u64) as f64)),
+            ("recent", Json::obj(recent)),
             ("uptime_s", Json::Num(uptime)),
             ("throughput_rps", Json::Num(throughput)),
             ("shards", Json::Num(self.shards.len() as f64)),
@@ -230,7 +391,7 @@ mod tests {
     fn records_and_snapshots() {
         let m = Metrics::new(2);
         for i in 0..100u64 {
-            m.shard((i % 2) as usize).record_request(i * 10);
+            m.shard((i % 2) as usize).record_request(RoundingMode::Dither, i * 10);
         }
         m.shard(0).record_batch(8);
         m.shard(1).record_batch(4);
@@ -252,18 +413,78 @@ mod tests {
     }
 
     #[test]
+    fn recent_section_is_per_scheme() {
+        let m = Metrics::new(2);
+        for _ in 0..40 {
+            m.shard(0).record_request(RoundingMode::Dither, 100);
+        }
+        m.shard(1).record_request(RoundingMode::Deterministic, 1_000_000);
+        let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
+        assert_eq!(json.get("recent_window_s").unwrap().as_f64(), Some(60.0));
+        let recent = json.get("recent").expect("recent section");
+        let dither = recent.get("dither").expect("dither entry");
+        assert_eq!(dither.get("requests").unwrap().as_f64(), Some(40.0));
+        let dit_p99 = dither.get("p99_us").unwrap().as_f64().unwrap();
+        assert!(dit_p99 < 1000.0, "dither p99={dit_p99}");
+        let det = recent.get("deterministic").expect("deterministic entry");
+        assert_eq!(det.get("requests").unwrap().as_f64(), Some(1.0));
+        let det_p99 = det.get("p99_us").unwrap().as_f64().unwrap();
+        assert!(det_p99 >= 1_000_000.0 / 2.0, "det p99={det_p99}");
+        // A scheme with no recent traffic reports empty percentiles.
+        let sto = recent.get("stochastic").expect("stochastic entry");
+        assert_eq!(sto.get("requests").unwrap().as_f64(), Some(0.0));
+        assert_eq!(sto.get("p99_us").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn windows_rotate_out_old_epochs() {
+        let w = SchemeWindows::new();
+        w.record(1, 100);
+        w.record(1, 200);
+        let mut count = 0u64;
+        let mut buckets = [0u64; BUCKETS];
+        w.fold_recent(1, &mut count, &mut buckets);
+        assert_eq!(count, 2);
+        // Still visible near the end of the window span...
+        count = 0;
+        buckets = [0; BUCKETS];
+        w.fold_recent(WINDOW_SLOTS as u64, &mut count, &mut buckets);
+        assert_eq!(count, 2);
+        // ...aged out once the window has fully rotated past it.
+        count = 0;
+        buckets = [0; BUCKETS];
+        w.fold_recent(1 + WINDOW_SLOTS as u64, &mut count, &mut buckets);
+        assert_eq!(count, 0);
+        // Reusing the slot for a new epoch resets the stale histogram.
+        w.record(1 + WINDOW_SLOTS as u64, 50);
+        count = 0;
+        buckets = [0; BUCKETS];
+        w.fold_recent(1 + WINDOW_SLOTS as u64, &mut count, &mut buckets);
+        assert_eq!(count, 1);
+        assert_eq!(buckets[bucket_index(50)], 1);
+        assert_eq!(buckets[bucket_index(100)], 0, "old epoch data must be gone");
+    }
+
+    #[test]
     fn empty_snapshot_is_valid() {
         let m = Metrics::new(4);
         let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
         assert_eq!(json.get("p95_us").unwrap().as_f64(), Some(0.0));
         assert_eq!(json.get("requests").unwrap().as_f64(), Some(0.0));
         assert_eq!(json.get("shards").unwrap().as_f64(), Some(4.0));
+        let recent = json.get("recent").expect("recent section");
+        for scheme in ["deterministic", "stochastic", "dither"] {
+            assert_eq!(
+                recent.get(scheme).unwrap().get("requests").unwrap().as_f64(),
+                Some(0.0)
+            );
+        }
     }
 
     #[test]
     fn shard_indexing_wraps() {
         let m = Metrics::new(3);
-        m.shard(5).record_request(1); // 5 % 3 == 2
+        m.shard(5).record_request(RoundingMode::Stochastic, 1); // 5 % 3 == 2
         assert_eq!(m.shard(2).requests(), 1);
         assert_eq!(m.total_requests(), 1);
     }

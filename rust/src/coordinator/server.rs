@@ -42,6 +42,9 @@ pub struct ServerConfig {
     pub train_n: usize,
     /// Base seed for the per-shard engine rounding streams.
     pub seed: u64,
+    /// Bit widths prewarmed into every shard's plan cache at startup
+    /// (all schemes, every model). Empty disables prewarming.
+    pub prewarm_bits: Vec<u32>,
 }
 
 impl Default for ServerConfig {
@@ -54,6 +57,7 @@ impl Default for ServerConfig {
             queue_cap: 256,
             train_n: 2000,
             seed: 7,
+            prewarm_bits: vec![2, 4, 8],
         }
     }
 }
@@ -73,6 +77,7 @@ impl ServerConfig {
             max_wait: Duration::from_micros(self.max_wait_us),
             queue_cap: self.queue_cap,
             seed: self.seed,
+            prewarm_bits: self.prewarm_bits.clone(),
         }
     }
 }
@@ -98,6 +103,12 @@ pub fn serve(cfg: &ServerConfig) -> Result<()> {
             "  {:<14} float test accuracy {:.3}",
             m.spec.name(),
             m.float_accuracy
+        );
+    }
+    if !shard_cfg.prewarm_bits.is_empty() {
+        println!(
+            "dither-serve: prewarming plan caches for k in {:?} (all schemes) ...",
+            shard_cfg.prewarm_bits
         );
     }
     let pool = Arc::new(ShardPool::start(&shard_cfg, zoo, &metrics));

@@ -12,6 +12,8 @@
 use crate::coordinator::batcher::{worker_loop, Batcher, Pending, SubmitError};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
+use crate::linalg::Variant;
+use crate::rounding::RoundingMode;
 use crate::train::Zoo;
 use crate::util::rng::counter_hash;
 use crate::util::threadpool::WorkerPool;
@@ -31,6 +33,10 @@ pub struct ShardConfig {
     pub queue_cap: usize,
     /// Base seed for the per-shard engine rounding streams.
     pub seed: u64,
+    /// Bit widths whose weight-side plans are prewarmed (all three schemes,
+    /// every model) into each shard's plan cache before traffic is
+    /// accepted. Empty disables prewarming.
+    pub prewarm_bits: Vec<u32>,
 }
 
 /// K running serving shards plus their routing table.
@@ -45,11 +51,26 @@ impl ShardPool {
     /// matching [`Metrics`] slot.
     pub fn start(cfg: &ShardConfig, zoo: Arc<Zoo>, metrics: &Metrics) -> ShardPool {
         let shards = cfg.shards.max(1);
+        // Zoo-level prewarming: build the hot configurations' weight plans
+        // once and hand shared Arcs to every shard's cache, so the first
+        // request of a prewarmed configuration never pays planning.
+        let prewarmed = if cfg.prewarm_bits.is_empty() {
+            Vec::new()
+        } else {
+            zoo.prewarm_plans(&cfg.prewarm_bits, &RoundingMode::ALL, Variant::Separate, cfg.seed)
+        };
         let mut workers = WorkerPool::new();
         let mut batchers = Vec::with_capacity(shards);
         for i in 0..shards {
             let batcher = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait, cfg.queue_cap));
-            let engine = Engine::from_zoo(zoo.clone(), cfg.seed ^ ((i as u64 + 1) << 32));
+            // Distinct per-shard rounding streams, but one shared prep
+            // seed (the zoo prewarm seed): a plan evicted and rebuilt on
+            // any shard reproduces the prewarmed plan bit for bit.
+            let engine_seed = cfg.seed ^ ((i as u64 + 1) << 32);
+            let engine = Engine::from_zoo(zoo.clone(), engine_seed).with_prep_seed(cfg.seed);
+            for (key, plans) in &prewarmed {
+                engine.install_prepared(key.clone(), plans.clone());
+            }
             let shard_metrics = metrics.shard(i);
             let b = batcher.clone();
             workers.spawn(format!("dither-shard-{i}"), move || {
@@ -132,6 +153,7 @@ mod tests {
             max_wait: Duration::from_micros(500),
             queue_cap: 64,
             seed: 7,
+            prewarm_bits: vec![4],
         };
         let metrics = Metrics::new(shards);
         let zoo = Arc::new(Zoo::load(200, 7));

@@ -1,11 +1,19 @@
 //! Fixed-point matrix-multiplication engines with pluggable rounding —
-//! §VII (Fig 7) and the §VIII variants.
+//! §VII (Fig 7) and the §VIII variants — structured as an explicit
+//! **plan → execute** pipeline.
 //!
 //! `C = A·B` is computed as if only a k-bit fixed-point multiplier existed:
 //! each operand element is affinely rescaled into `[0, 2^k−1]`, rounded to
 //! an integer level by the configured [`RoundingMode`], dequantized, and the
 //! partial products accumulated exactly (the accumulator is not the paper's
 //! concern; the rounding of the multiplier inputs is).
+//!
+//! The paper's asymptotic win comes from the *encoding* of the operands, so
+//! the expensive per-element encoding state (quantizer scaling, floor/residue
+//! split, dither thresholds) is captured once per operand in a [`QuantPlan`]
+//! and reused across executions. [`execute`] consumes either prepared plans
+//! or raw matrices ([`Operand`]); [`quant_matmul`] is the thin
+//! plan-both-sides-per-call compatibility wrapper over it.
 //!
 //! Three rounding *placements* trade accuracy for rounding work:
 //!
@@ -21,9 +29,10 @@
 
 use crate::bitstream::dither::DitherParams;
 use crate::linalg::matrix::Matrix;
-use crate::rounding::{deterministic_bit, Quantizer, RoundingMode};
+use crate::rounding::{Quantizer, RoundingMode};
 use crate::util::rng::{counter_hash, u64_to_unit_f64, Xoshiro256pp};
 use crate::util::threadpool::parallel_chunks;
+use std::borrow::Cow;
 
 /// Rounding placement within the matmul (§VII–§VIII).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -107,8 +116,75 @@ impl QuantMatmulConfig {
 }
 
 /// Precomputed per-element quantization state: dequantized floor level, the
-/// fractional residue the rounding bit decides on, and the element's dither
-/// phase.
+/// fractional residue the rounding bit decides on, and (dither only) the
+/// branchless §II-D tables. Everything here depends only on
+/// `(matrix, quantizer, mode, n)` — never on a seed — which is what makes a
+/// [`QuantPlan`] reusable across requests with fresh randomness.
+struct PreMat {
+    /// `lo + floor(scale(v))·step` per element (row-major).
+    base: Vec<f64>,
+    /// `scale(v) − floor(scale(v))` per element.
+    frac: Vec<f64>,
+    /// Branchless-dither tables (perf): `pos < n_det[e]` is the
+    /// deterministic part of the dither bit; `u < u_thresh[e]` the residue
+    /// Bernoulli; `is_or[e]` selects the §II-D branch (lower: OR, upper:
+    /// AND). Precomputing these and evaluating the bit with pure bitwise
+    /// ops removed the unpredictable per-element branches that dominated
+    /// the per-partial inner loop. Empty for non-dither modes.
+    n_det: Vec<u32>,
+    u_thresh: Vec<u64>,
+    is_or: Vec<bool>,
+    step: f64,
+}
+
+impl PreMat {
+    fn build(m: &Matrix, q: &Quantizer, mode: RoundingMode, n: usize) -> PreMat {
+        let max = q.max_level() as f64;
+        let step = q.step();
+        let count = m.rows * m.cols;
+        let dither = mode == RoundingMode::Dither;
+        let mut base = Vec::with_capacity(count);
+        let mut frac = Vec::with_capacity(count);
+        let mut n_det = Vec::with_capacity(if dither { count } else { 0 });
+        let mut u_thresh = Vec::with_capacity(if dither { count } else { 0 });
+        let mut is_or = Vec::with_capacity(if dither { count } else { 0 });
+        for &v in m.data().iter() {
+            let s = q.scale(v).clamp(0.0, max);
+            let fl = s.floor();
+            let f = s - fl;
+            base.push(q.lo + fl * step);
+            frac.push(f);
+            if dither {
+                let p = DitherParams::of(f, n);
+                n_det.push(p.n as u32);
+                let residue_p = if p.lower_branch { p.delta } else { 1.0 - p.delta };
+                u_thresh.push((residue_p * 18446744073709551616.0) as u64);
+                is_or.push(p.lower_branch);
+            }
+        }
+        PreMat {
+            base,
+            frac,
+            n_det,
+            u_thresh,
+            is_or,
+            step,
+        }
+    }
+
+    /// Heap footprint of the tables (plan-cache accounting).
+    fn memory_bytes(&self) -> usize {
+        self.base.len() * 8
+            + self.frac.len() * 8
+            + self.n_det.len() * 4
+            + self.u_thresh.len() * 8
+            + self.is_or.len()
+    }
+}
+
+/// Per-element dither phases for one operand: element `e` starts its sweep
+/// at `ρ_e = hash(seed, e) mod n`. Seed-dependent but cheap (one hash per
+/// element), so it is derived per execution rather than stored in the plan.
 ///
 /// The phase deserves a note (DESIGN.md §Dither-index-alignment): §VII
 /// specifies the dither index as `σ(i_s mod N)` with a global application
@@ -121,75 +197,10 @@ impl QuantMatmulConfig {
 /// `σ((t + ρ_e) mod N)`. Each element still sweeps the full period across
 /// its `N` uses (the §VII `Θ(1/N)` time-average argument is untouched),
 /// while positions decorrelate across the contraction dimension.
-struct PreMat {
-    /// `lo + floor(scale(v))·step` per element (row-major).
-    base: Vec<f64>,
-    /// `scale(v) − floor(scale(v))` per element.
-    frac: Vec<f64>,
-    /// Per-element dither phase `ρ_e ∈ [0, N)`.
-    phase: Vec<u32>,
-    /// Branchless-dither tables (perf): `pos < n_det[e]` is the
-    /// deterministic part of the dither bit; `u < u_thresh[e]` the residue
-    /// Bernoulli; `is_or[e]` selects the §II-D branch (lower: OR, upper:
-    /// AND). Precomputing these and evaluating the bit with pure bitwise
-    /// ops removed the unpredictable per-element branches that dominated
-    /// the per-partial inner loop.
-    n_det: Vec<u32>,
-    u_thresh: Vec<u64>,
-    is_or: Vec<bool>,
-    step: f64,
-}
-
-impl PreMat {
-    fn build(m: &Matrix, q: &Quantizer, n: usize, seed: u64) -> PreMat {
-        let max = q.max_level() as f64;
-        let step = q.step();
-        let count = m.rows * m.cols;
-        let mut base = Vec::with_capacity(count);
-        let mut frac = Vec::with_capacity(count);
-        let mut phase = Vec::with_capacity(count);
-        let mut n_det = Vec::with_capacity(count);
-        let mut u_thresh = Vec::with_capacity(count);
-        let mut is_or = Vec::with_capacity(count);
-        for (e, &v) in m.data().iter().enumerate() {
-            let s = q.scale(v).clamp(0.0, max);
-            let fl = s.floor();
-            let f = s - fl;
-            base.push(q.lo + fl * step);
-            frac.push(f);
-            phase.push((counter_hash(seed ^ 0x9A5E, e as u64) % n as u64) as u32);
-            let p = DitherParams::of(f, n);
-            n_det.push(p.n as u32);
-            let residue_p = if p.lower_branch { p.delta } else { 1.0 - p.delta };
-            u_thresh.push((residue_p * 18446744073709551616.0) as u64);
-            is_or.push(p.lower_branch);
-        }
-        PreMat {
-            base,
-            frac,
-            phase,
-            n_det,
-            u_thresh,
-            is_or,
-            step,
-        }
-    }
-}
-
-/// The rounding bit for one use of one element.
-///
-/// `pos` is the (already permuted) dither index for this use; `u` the fresh
-/// uniform word. Deterministic/stochastic ignore `pos`.
-#[inline]
-fn round_bit(mode: RoundingMode, frac: f64, n: usize, pos: usize, u: u64) -> bool {
-    match mode {
-        RoundingMode::Deterministic => deterministic_bit(frac),
-        RoundingMode::Stochastic => u64_to_unit_f64(u) < frac,
-        RoundingMode::Dither => {
-            let params = DitherParams::of(frac, n);
-            crate::rounding::dither_bit(&params, pos, u)
-        }
-    }
+fn phases(count: usize, n: usize, seed: u64) -> Vec<u32> {
+    (0..count)
+        .map(|e| (counter_hash(seed ^ 0x9A5E, e as u64) % n as u64) as u32)
+        .collect()
 }
 
 /// Hot-loop rounding bit: parameters come precomputed from [`PreMat`] and
@@ -255,18 +266,207 @@ pub enum SweepAxis {
     Rows,
 }
 
-/// Quantize a whole matrix with one rounding per element (the `Separate` /
-/// `InputOnce` building block), returning the dequantized matrix.
+/// Prepared per-operand state for quantized multiplication: the quantizer,
+/// the seed-independent per-element tables ([`PreMat`]), the dither
+/// geometry (period + sweep axis), and — when the operand's rounded values
+/// are request-invariant (frozen weight operands) — the fully materialized
+/// quantized matrix.
 ///
-/// Dither positions SWEEP the period along the contraction axis (the
-/// paper's global `i_s` counter semantics): every window of N contracted
-/// elements covers the full dither sequence, so rounding errors are
-/// *stratified exactly where the matmul sums them* — this is what beats
-/// stochastic rounding's variance. Each line (row or column) gets its own
-/// random rotation: a single shared phase would make every line reproduce
-/// the *same* error pattern, coherently aligned with the other operand's
-/// structure (measurably worse than stochastic rounding — see EXPERIMENTS.md
-/// §Deviations); iid random positions degenerate to stochastic rounding.
+/// Building a plan is the expensive half of a quantized matmul at serving
+/// batch sizes (per-element scale/clamp/floor plus the §II-D dither
+/// parameter derivation); [`execute`] reuses a plan across calls and only
+/// derives the cheap seed-dependent state (phases, permutation, rotations)
+/// per call.
+///
+/// The dither period `n` is clamped to `≥ 1` here and nowhere else — every
+/// construction path flows through [`QuantPlan::plan_operand`], so a caller
+/// can never build tables for `n = 0`.
+pub struct QuantPlan {
+    quant: Quantizer,
+    mode: RoundingMode,
+    axis: SweepAxis,
+    n: usize,
+    rows: usize,
+    cols: usize,
+    /// Per-call quantization tables; dropped for frozen plans.
+    pre: Option<PreMat>,
+    /// Materialized quantized matrix (request-invariant operands only).
+    rounded: Option<Matrix>,
+}
+
+impl QuantPlan {
+    /// Prepare an operand for repeated quantized multiplication. `n` is the
+    /// dither period (clamped to `≥ 1`; this is the single clamp site for
+    /// the whole module) and `axis` the contraction sweep axis.
+    pub fn plan_operand(
+        m: &Matrix,
+        quant: &Quantizer,
+        mode: RoundingMode,
+        n: usize,
+        axis: SweepAxis,
+    ) -> QuantPlan {
+        let n = n.max(1);
+        QuantPlan {
+            quant: *quant,
+            mode,
+            axis,
+            n,
+            rows: m.rows,
+            cols: m.cols,
+            pre: Some(PreMat::build(m, quant, mode, n)),
+            rounded: None,
+        }
+    }
+
+    /// Prepare a *frozen* operand: the quantized matrix is materialized now
+    /// (with `seed` driving any dither/stochastic residue draws) and reused
+    /// verbatim by every execution, and the per-call tables are dropped.
+    ///
+    /// Correct for operands whose rounded values are request-invariant —
+    /// deterministic rounding (seed-free by definition) and dither weight
+    /// operands, whose representation is deterministic to first order
+    /// (§II-D): the serving path freezes one dither draw per weight matrix.
+    /// Frozen plans execute under [`Variant::Separate`] only (the
+    /// per-partial placements re-round per use by definition).
+    pub fn plan_frozen(
+        m: &Matrix,
+        quant: &Quantizer,
+        mode: RoundingMode,
+        n: usize,
+        axis: SweepAxis,
+        seed: u64,
+    ) -> QuantPlan {
+        let mut plan = QuantPlan::plan_operand(m, quant, mode, n, axis);
+        let rounded = plan.quantize_once(seed).into_owned();
+        plan.rounded = Some(rounded);
+        plan.pre = None;
+        plan
+    }
+
+    /// Quantize the whole operand with one rounding per element (the
+    /// `Separate` / `InputOnce` building block). Frozen plans return the
+    /// materialized matrix without touching `seed`.
+    pub fn quantize_once(&self, seed: u64) -> Cow<'_, Matrix> {
+        if let Some(rounded) = &self.rounded {
+            return Cow::Borrowed(rounded);
+        }
+        let pre = self.pre().expect("plan holds tables or a frozen matrix");
+        let (rows, cols) = (self.rows, self.cols);
+        let count = rows * cols;
+        let mut out = Matrix::zeros(rows, cols);
+        let data = out.data_mut();
+        match self.mode {
+            RoundingMode::Deterministic => {
+                for e in 0..count {
+                    let bit = pre.frac[e] >= 0.5;
+                    data[e] = pre.base[e] + f64::from(bit) * pre.step;
+                }
+            }
+            RoundingMode::Stochastic => {
+                for e in 0..count {
+                    let bit = u64_to_unit_f64(counter_hash(seed, e as u64)) < pre.frac[e];
+                    data[e] = pre.base[e] + f64::from(bit) * pre.step;
+                }
+            }
+            RoundingMode::Dither => {
+                // Dither positions SWEEP the period along the contraction
+                // axis (the paper's global `i_s` counter semantics): every
+                // window of N contracted elements covers the full dither
+                // sequence, so rounding errors are *stratified exactly
+                // where the matmul sums them* — this is what beats
+                // stochastic rounding's variance. Each line (row or column)
+                // gets its own random rotation: a single shared phase would
+                // make every line reproduce the *same* error pattern,
+                // coherently aligned with the other operand's structure
+                // (measurably worse than stochastic rounding — see
+                // EXPERIMENTS.md §Deviations); iid random positions
+                // degenerate to stochastic rounding.
+                let n = self.n;
+                let sigma = permutation(n, seed ^ 0x51);
+                let lines = match self.axis {
+                    SweepAxis::Cols => rows,
+                    SweepAxis::Rows => cols,
+                };
+                let rots: Vec<usize> = (0..lines)
+                    .map(|l| (counter_hash(seed ^ 0x607, l as u64) % n as u64) as usize)
+                    .collect();
+                for i in 0..rows {
+                    for j in 0..cols {
+                        let e = i * cols + j;
+                        let (line, step_idx) = match self.axis {
+                            SweepAxis::Cols => (i, j), // sweep along the row
+                            SweepAxis::Rows => (j, i), // sweep along the column
+                        };
+                        let pos = sigma[(step_idx + rots[line]) % n];
+                        let bit = round_bit_pre(self.mode, pre, e, pos, || {
+                            counter_hash(seed, e as u64)
+                        });
+                        data[e] = pre.base[e] + f64::from(bit) * pre.step;
+                    }
+                }
+            }
+        }
+        Cow::Owned(out)
+    }
+
+    fn pre(&self) -> Option<&PreMat> {
+        self.pre.as_ref()
+    }
+
+    /// Operand shape.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Quantizer bit width the plan was built for.
+    pub fn bits(&self) -> u32 {
+        self.quant.bits
+    }
+
+    /// Rounding scheme the plan was built for.
+    pub fn mode(&self) -> RoundingMode {
+        self.mode
+    }
+
+    /// Clamped dither period.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// True when the quantized matrix is materialized (request-invariant).
+    pub fn is_frozen(&self) -> bool {
+        self.rounded.is_some()
+    }
+
+    /// Approximate heap footprint (plan-cache accounting / logs).
+    pub fn memory_bytes(&self) -> usize {
+        let pre = self.pre.as_ref().map_or(0, PreMat::memory_bytes);
+        let frozen = self.rounded.as_ref().map_or(0, |m| m.data().len() * 8);
+        pre + frozen
+    }
+}
+
+/// One side of an [`execute`] call: either a raw matrix (planned on the
+/// fly from the config's quantizer — the one-shot path) or a prepared
+/// [`QuantPlan`] (the serving path, where weight-side plans are cached).
+pub enum Operand<'a> {
+    /// Plan this matrix per call.
+    Raw(&'a Matrix),
+    /// Reuse a prepared plan.
+    Plan(&'a QuantPlan),
+}
+
+impl Operand<'_> {
+    fn dims(&self) -> (usize, usize) {
+        match self {
+            Operand::Raw(m) => (m.rows, m.cols),
+            Operand::Plan(p) => p.dims(),
+        }
+    }
+}
+
+/// Quantize a whole matrix with one rounding per element, returning the
+/// dequantized matrix. Thin wrapper over a one-shot [`QuantPlan`].
 pub fn quantize_matrix_once(
     m: &Matrix,
     quant: &Quantizer,
@@ -275,105 +475,149 @@ pub fn quantize_matrix_once(
     seed: u64,
     axis: SweepAxis,
 ) -> Matrix {
-    let n = n.max(1);
-    let pre = PreMat::build(m, quant, n, seed);
-    let sigma = permutation(n, seed ^ 0x51);
-    // Per-line rotations hoisted out of the element loop (§Perf).
-    let lines = match axis {
-        SweepAxis::Cols => m.rows,
-        SweepAxis::Rows => m.cols,
-    };
-    let rots: Vec<usize> = (0..lines)
-        .map(|l| (counter_hash(seed ^ 0x607, l as u64) % n as u64) as usize)
-        .collect();
-    let mut out = Matrix::zeros(m.rows, m.cols);
-    for i in 0..m.rows {
-        for j in 0..m.cols {
-            let e = i * m.cols + j;
-            let u = counter_hash(seed, e as u64);
-            let (line, step_idx) = match axis {
-                SweepAxis::Cols => (i, j), // sweep along the row
-                SweepAxis::Rows => (j, i), // sweep along the column
-            };
-            let pos = sigma[(step_idx + rots[line]) % n];
-            let bit = round_bit(mode, pre.frac[e], n, pos, u);
-            out.data_mut()[e] = pre.base[e] + f64::from(bit) * pre.step;
-        }
-    }
-    out
+    QuantPlan::plan_operand(m, quant, mode, n, axis).quantize_once(seed).into_owned()
 }
 
 /// Quantized matrix product `Ĉ ≈ A·B` under the configured scheme,
-/// placement and bit width.
+/// placement and bit width — the plan-both-sides-per-call compatibility
+/// wrapper over [`execute`].
 pub fn quant_matmul(a: &Matrix, b: &Matrix, cfg: &QuantMatmulConfig) -> Matrix {
-    assert_eq!(a.cols, b.rows, "inner dimensions must match");
-    let (p, q, r) = (a.rows, a.cols, b.cols);
-    let quant_a = Quantizer::new(cfg.bits, cfg.range_a.0, cfg.range_a.1);
-    let quant_b = Quantizer::new(cfg.bits, cfg.range_b.0, cfg.range_b.1);
-    let n_a = cfg.n_a.unwrap_or(r).max(1);
-    let n_b = cfg.n_b.unwrap_or(p).max(1);
+    execute(Operand::Raw(a), Operand::Raw(b), cfg)
+}
+
+/// Execute a quantized matrix product from per-operand state. Raw operands
+/// are planned on the fly with the config's quantizers; prepared plans are
+/// validated against the config (bit width and scheme must match — a plan's
+/// dither period `n` intentionally overrides `cfg.n_a`/`cfg.n_b`, since the
+/// plan owner fixed the stratification geometry at build time).
+pub fn execute(a: Operand<'_>, b: Operand<'_>, cfg: &QuantMatmulConfig) -> Matrix {
+    let (p, q) = a.dims();
+    let (q2, r) = b.dims();
+    assert_eq!(q, q2, "inner dimensions must match");
     let seed_a = cfg.seed ^ 0xA0A0_A0A0;
     let seed_b = cfg.seed ^ 0xB1B1_B1B1;
 
+    let built_a;
+    let plan_a = match a {
+        Operand::Raw(m) => {
+            let quant = Quantizer::new(cfg.bits, cfg.range_a.0, cfg.range_a.1);
+            let n_a = cfg.n_a.unwrap_or(r);
+            built_a = QuantPlan::plan_operand(m, &quant, cfg.mode, n_a, SweepAxis::Cols);
+            &built_a
+        }
+        Operand::Plan(plan) => {
+            check_plan(plan, cfg, cfg.range_a, SweepAxis::Cols, "A");
+            plan
+        }
+    };
+    let built_b;
+    let plan_b = match b {
+        Operand::Raw(m) => {
+            let quant = Quantizer::new(cfg.bits, cfg.range_b.0, cfg.range_b.1);
+            let n_b = cfg.n_b.unwrap_or(p);
+            built_b = QuantPlan::plan_operand(m, &quant, cfg.mode, n_b, SweepAxis::Rows);
+            &built_b
+        }
+        Operand::Plan(plan) => {
+            check_plan(plan, cfg, cfg.range_b, SweepAxis::Rows, "B");
+            plan
+        }
+    };
+
     match cfg.variant {
         Variant::Separate => {
-            let a_hat =
-                quantize_matrix_once(a, &quant_a, cfg.mode, n_a, seed_a, SweepAxis::Cols);
-            let b_hat =
-                quantize_matrix_once(b, &quant_b, cfg.mode, n_b, seed_b, SweepAxis::Rows);
+            let a_hat = plan_a.quantize_once(seed_a);
+            let b_hat = plan_b.quantize_once(seed_b);
             a_hat.matmul(&b_hat)
         }
         Variant::InputOnce => {
-            let a_hat =
-                quantize_matrix_once(a, &quant_a, cfg.mode, n_a, seed_a, SweepAxis::Cols);
-            let pre_b = PreMat::build(b, &quant_b, n_b, seed_b);
-            let sigma_b = permutation(n_b, seed_b ^ 0x51);
-            matmul_rounded_b(&a_hat, b, &pre_b, &sigma_b, cfg.mode, seed_b, p, q, r)
+            let a_hat = plan_a.quantize_once(seed_a);
+            matmul_rounded_b(&a_hat, plan_b, seed_b, p, q, r)
         }
-        Variant::PerPartial => {
-            let pre_a = PreMat::build(a, &quant_a, n_a, seed_a);
-            let pre_b = PreMat::build(b, &quant_b, n_b, seed_b);
-            let sigma_a = permutation(n_a, seed_a ^ 0x51);
-            let sigma_b = permutation(n_b, seed_b ^ 0x51);
-            matmul_per_partial(
-                &pre_a, &pre_b, &sigma_a, &sigma_b, cfg.mode, seed_a, seed_b, p, q, r,
-            )
-        }
+        Variant::PerPartial => matmul_per_partial(plan_a, plan_b, seed_a, seed_b, p, q, r),
     }
+}
+
+fn check_plan(
+    plan: &QuantPlan,
+    cfg: &QuantMatmulConfig,
+    range: (f64, f64),
+    axis: SweepAxis,
+    side: &str,
+) {
+    assert_eq!(
+        plan.bits(),
+        cfg.bits,
+        "operand {side}: plan bit width != config bit width"
+    );
+    assert_eq!(
+        plan.mode(),
+        cfg.mode,
+        "operand {side}: plan rounding scheme != config scheme"
+    );
+    // Bitwise range equality is intentional: prepared paths derive the
+    // range from the same computation as the config, so any difference
+    // means the plan was built for another source interval and would
+    // execute with silently wrong scaling.
+    let range_ok = plan.quant.lo.to_bits() == range.0.to_bits()
+        && plan.quant.hi.to_bits() == range.1.to_bits();
+    assert!(
+        range_ok,
+        "operand {side}: plan quantizer range ({}, {}) != config range ({}, {})",
+        plan.quant.lo,
+        plan.quant.hi,
+        range.0,
+        range.1
+    );
+    assert_eq!(plan.axis, axis, "operand {side}: plan sweep axis mismatch");
 }
 
 /// `InputOnce` kernel: Â is fixed, B is rounded for every partial product
 /// with per-element use index `i` (the output row).
-#[allow(clippy::too_many_arguments)]
+///
+/// The inner loop is blocked 4 output columns at a time: consecutive `k`
+/// read *adjacent* `PreMat` entries (`e_b = j·r + k`), turning the stride-r
+/// table walk into contiguous cache-line reads, and `arow[j]` is loaded
+/// once per 4 lanes. Each lane owns an accumulator chain (4-wide ILP)
+/// while per-cell accumulation order stays the plain `j` order.
 fn matmul_rounded_b(
     a_hat: &Matrix,
-    _b: &Matrix,
-    pre_b: &PreMat,
-    sigma_b: &[usize],
-    mode: RoundingMode,
+    plan_b: &QuantPlan,
     seed_b: u64,
     p: usize,
     q: usize,
     r: usize,
 ) -> Matrix {
+    let pre_b = plan_b
+        .pre()
+        .expect("the input-once placement requires an unfrozen weight-side plan");
+    let n_b = plan_b.n();
+    let mode = plan_b.mode();
+    let phase_b = phases(q * r, n_b, seed_b);
+    let sigma_b = permutation(n_b, seed_b ^ 0x51);
     let mut out = Matrix::zeros(p, r);
     let blocks = parallel_chunks(p, |range| {
         let mut block = vec![0.0f64; range.len() * r];
-        let n_b = sigma_b.len();
         for (bi, i) in range.clone().enumerate() {
             let arow = a_hat.row(i);
-            for k in 0..r {
-                let mut acc = 0.0;
-                for j in 0..q {
-                    let e_b = j * r + k;
-                    let pos_b = sigma_b[(i + pre_b.phase[e_b] as usize) % n_b];
-                    let bit_b = round_bit_pre(mode, pre_b, e_b, pos_b, || {
-                        counter_hash(seed_b, (e_b as u64) << 24 | i as u64)
-                    });
-                    let b_val = pre_b.base[e_b] + f64::from(bit_b) * pre_b.step;
-                    acc += arow[j] * b_val;
+            let mut k0 = 0;
+            while k0 < r {
+                let lanes = (r - k0).min(4);
+                let mut acc = [0.0f64; 4];
+                for (j, &a_val) in arow.iter().enumerate() {
+                    let row_b = j * r + k0;
+                    for (lane, slot) in acc.iter_mut().enumerate().take(lanes) {
+                        let e_b = row_b + lane;
+                        let pos_b = sigma_b[(i + phase_b[e_b] as usize) % n_b];
+                        let bit_b = round_bit_pre(mode, pre_b, e_b, pos_b, || {
+                            counter_hash(seed_b, (e_b as u64) << 24 | i as u64)
+                        });
+                        let b_val = pre_b.base[e_b] + f64::from(bit_b) * pre_b.step;
+                        *slot += a_val * b_val;
+                    }
                 }
-                block[bi * r + k] = acc;
+                block[bi * r + k0..bi * r + k0 + lanes].copy_from_slice(&acc[..lanes]);
+                k0 += lanes;
             }
         }
         (range.start, block)
@@ -386,60 +630,81 @@ fn matmul_rounded_b(
 }
 
 /// `PerPartial` kernel (Fig 7): both operands rounded per partial product.
-#[allow(clippy::too_many_arguments)]
+///
+/// Blocked like [`matmul_rounded_b`]: 4 output columns per pass share every
+/// A-side table load (`e_a = i·q + j` is lane-invariant) and read adjacent
+/// B-side entries, with one independent accumulator chain per lane and the
+/// per-cell accumulation order unchanged.
 fn matmul_per_partial(
-    pre_a: &PreMat,
-    pre_b: &PreMat,
-    sigma_a: &[usize],
-    sigma_b: &[usize],
-    mode: RoundingMode,
+    plan_a: &QuantPlan,
+    plan_b: &QuantPlan,
     seed_a: u64,
     seed_b: u64,
     p: usize,
     q: usize,
     r: usize,
 ) -> Matrix {
+    let pre_a = plan_a
+        .pre()
+        .expect("the per-partial placement requires an unfrozen left-operand plan");
+    let pre_b = plan_b
+        .pre()
+        .expect("the per-partial placement requires an unfrozen weight-side plan");
+    let (n_a, n_b) = (plan_a.n(), plan_b.n());
+    let mode = plan_a.mode();
+    let phase_a = phases(p * q, n_a, seed_a);
+    let phase_b = phases(q * r, n_b, seed_b);
+    let sigma_a = permutation(n_a, seed_a ^ 0x51);
+    let sigma_b = permutation(n_b, seed_b ^ 0x51);
     let mut out = Matrix::zeros(p, r);
     let blocks = parallel_chunks(p, |range| {
         let mut block = vec![0.0f64; range.len() * r];
-        let (n_a, n_b) = (sigma_a.len(), sigma_b.len());
         // Phase-folded tables are O(n²); fall back to modulo arithmetic for
         // large periods (e.g. n_b = batch rows in the thousands).
         const TABLE_CAP: usize = 1 << 11;
-        let tab_a = (n_a <= TABLE_CAP).then(|| position_table(sigma_a));
-        let tab_b = (n_b <= TABLE_CAP).then(|| position_table(sigma_b));
+        let tab_a = (n_a <= TABLE_CAP).then(|| position_table(&sigma_a));
+        let tab_b = (n_b <= TABLE_CAP).then(|| position_table(&sigma_b));
         for (bi, i) in range.clone().enumerate() {
             let i_mod = i % n_b;
-            for k in 0..r {
-                let k_mod = k % n_a;
-                let mut acc = 0.0;
+            let mut k0 = 0;
+            while k0 < r {
+                let lanes = (r - k0).min(4);
+                let mut acc = [0.0f64; 4];
                 for j in 0..q {
                     let e_a = i * q + j;
-                    let e_b = j * r + k;
                     // Fresh uniform per (element, use): the use id is the
                     // output coordinate the element is consumed by. Dither
                     // positions sweep the period per element via its phase
                     // (phase-folded table lookup); the hash is evaluated
                     // lazily (residue slots only).
-                    let pos_a = match &tab_a {
-                        Some(t) => t[pre_a.phase[e_a] as usize * n_a + k_mod] as usize,
-                        None => sigma_a[(k_mod + pre_a.phase[e_a] as usize) % n_a],
-                    };
-                    let pos_b = match &tab_b {
-                        Some(t) => t[pre_b.phase[e_b] as usize * n_b + i_mod] as usize,
-                        None => sigma_b[(i_mod + pre_b.phase[e_b] as usize) % n_b],
-                    };
-                    let bit_a = round_bit_pre(mode, pre_a, e_a, pos_a, || {
-                        counter_hash(seed_a, (e_a as u64) << 24 | k as u64)
-                    });
-                    let bit_b = round_bit_pre(mode, pre_b, e_b, pos_b, || {
-                        counter_hash(seed_b, (e_b as u64) << 24 | i as u64)
-                    });
-                    let a_val = pre_a.base[e_a] + f64::from(bit_a) * pre_a.step;
-                    let b_val = pre_b.base[e_b] + f64::from(bit_b) * pre_b.step;
-                    acc += a_val * b_val;
+                    let pa = phase_a[e_a] as usize;
+                    let row_b = j * r + k0;
+                    for (lane, slot) in acc.iter_mut().enumerate().take(lanes) {
+                        let k = k0 + lane;
+                        let k_mod = k % n_a;
+                        let pos_a = match &tab_a {
+                            Some(t) => t[pa * n_a + k_mod] as usize,
+                            None => sigma_a[(k_mod + pa) % n_a],
+                        };
+                        let e_b = row_b + lane;
+                        let pb = phase_b[e_b] as usize;
+                        let pos_b = match &tab_b {
+                            Some(t) => t[pb * n_b + i_mod] as usize,
+                            None => sigma_b[(i_mod + pb) % n_b],
+                        };
+                        let bit_a = round_bit_pre(mode, pre_a, e_a, pos_a, || {
+                            counter_hash(seed_a, (e_a as u64) << 24 | k as u64)
+                        });
+                        let bit_b = round_bit_pre(mode, pre_b, e_b, pos_b, || {
+                            counter_hash(seed_b, (e_b as u64) << 24 | i as u64)
+                        });
+                        let a_val = pre_a.base[e_a] + f64::from(bit_a) * pre_a.step;
+                        let b_val = pre_b.base[e_b] + f64::from(bit_b) * pre_b.step;
+                        *slot += a_val * b_val;
+                    }
                 }
-                block[bi * r + k] = acc;
+                block[bi * r + k0..bi * r + k0 + lanes].copy_from_slice(&acc[..lanes]);
+                k0 += lanes;
             }
         }
         (range.start, block)
@@ -607,5 +872,76 @@ mod tests {
         let (a, b) = random_pair(5, 5, 5, 0.0, 1.0, 21);
         let cfg = QuantMatmulConfig::unit(2, RoundingMode::Dither, Variant::PerPartial, 77);
         assert_eq!(quant_matmul(&a, &b, &cfg), quant_matmul(&a, &b, &cfg));
+    }
+
+    #[test]
+    fn zero_period_is_clamped_in_the_plan() {
+        // The n ≥ 1 clamp lives in QuantPlan::plan_operand alone; callers
+        // passing n = 0 (or defaulting from a zero dimension) must not be
+        // able to build tables for an empty period.
+        let mut rng = Xoshiro256pp::new(23);
+        let m = Matrix::random_uniform(4, 3, 0.0, 1.0, &mut rng);
+        let q = Quantizer::unit(4);
+        let plan = QuantPlan::plan_operand(&m, &q, RoundingMode::Dither, 0, SweepAxis::Cols);
+        assert_eq!(plan.n(), 1);
+        let out = quantize_matrix_once(&m, &q, RoundingMode::Dither, 0, 3, SweepAxis::Cols);
+        assert_eq!((out.rows, out.cols), (4, 3));
+        // And through the matmul config path with explicit zero periods.
+        let (a, b) = random_pair(3, 3, 3, 0.0, 1.0, 24);
+        let cfg = QuantMatmulConfig {
+            bits: 6,
+            mode: RoundingMode::Dither,
+            variant: Variant::PerPartial,
+            seed: 5,
+            range_a: (0.0, 1.0),
+            range_b: (0.0, 1.0),
+            n_a: Some(0),
+            n_b: Some(0),
+        };
+        let c_hat = quant_matmul(&a, &b, &cfg);
+        assert!(c_hat.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn planned_operands_match_raw_operands_bitwise() {
+        // A prepared plan with the same geometry as the per-call default
+        // must reproduce the raw path exactly, for every scheme and
+        // placement (the plan only hoists seed-independent state).
+        let (a, b) = random_pair(9, 7, 5, 0.0, 1.0, 31);
+        for mode in RoundingMode::ALL {
+            for variant in Variant::ALL {
+                let cfg = QuantMatmulConfig::unit(3, mode, variant, 404);
+                let direct = quant_matmul(&a, &b, &cfg);
+                let quant = Quantizer::unit(3);
+                let plan_a = QuantPlan::plan_operand(&a, &quant, mode, 5, SweepAxis::Cols);
+                let plan_b = QuantPlan::plan_operand(&b, &quant, mode, 9, SweepAxis::Rows);
+                let planned = execute(Operand::Plan(&plan_a), Operand::Plan(&plan_b), &cfg);
+                assert_eq!(direct, planned, "{mode:?}/{variant:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_plan_matches_per_call_quantization() {
+        let mut rng = Xoshiro256pp::new(37);
+        let b = Matrix::random_uniform(6, 4, -1.0, 1.0, &mut rng);
+        let quant = Quantizer::new(5, -1.0, 1.0);
+        for mode in RoundingMode::ALL {
+            let plan = QuantPlan::plan_operand(&b, &quant, mode, 6, SweepAxis::Rows);
+            let frozen = QuantPlan::plan_frozen(&b, &quant, mode, 6, SweepAxis::Rows, 88);
+            assert!(frozen.is_frozen() && !plan.is_frozen());
+            // The frozen matrix is exactly the per-call quantization under
+            // the freeze seed; other seeds leave it untouched.
+            assert_eq!(
+                plan.quantize_once(88).as_ref(),
+                frozen.quantize_once(88).as_ref(),
+                "{mode:?}"
+            );
+            assert_eq!(
+                frozen.quantize_once(88).as_ref(),
+                frozen.quantize_once(1234).as_ref(),
+                "{mode:?}"
+            );
+        }
     }
 }

@@ -4,5 +4,8 @@
 pub mod matmul;
 pub mod matrix;
 
-pub use matmul::{quant_matmul, quantize_matrix_once, QuantMatmulConfig, SweepAxis, Variant};
+pub use matmul::{
+    execute, quant_matmul, quantize_matrix_once, Operand, QuantMatmulConfig, QuantPlan, SweepAxis,
+    Variant,
+};
 pub use matrix::{frobenius_error, Matrix};

@@ -57,6 +57,8 @@ SERVE FLAGS:
     --max-wait-us N   batch linger (2000)
     --queue-cap N     bounded per-shard queue depth (256)
     --train-n N       model-zoo training-set size (2000)
+    --prewarm-bits L  comma-separated k list whose weight plans are built
+                      before traffic (2,4,8; 'none' disables)
 
 INFER FLAGS:
     --model NAME      digits_linear | fashion_mlp (digits_linear)
@@ -143,6 +145,19 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // Comma-separated bit widths to prewarm ("none" disables). Widths
+    // outside the servable 1..=16 range are dropped rather than letting a
+    // typo panic the quantizer at startup.
+    let prewarm = args.str_or("prewarm-bits", "2,4,8");
+    let prewarm_bits: Vec<u32> = if prewarm == "none" {
+        Vec::new()
+    } else {
+        prewarm
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .filter(|k| (1..=16).contains(k))
+            .collect()
+    };
     let cfg = ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7878"),
         shards: args.parse_or("shards", 0usize),
@@ -151,6 +166,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.parse_or("queue-cap", 256usize),
         train_n: args.parse_or("train-n", 2000usize),
         seed: args.parse_or("seed", 7u64),
+        prewarm_bits,
     };
     serve(&cfg)
 }

@@ -177,6 +177,34 @@ impl Mlp {
         Self::load_from(&mut f)
     }
 
+    /// FNV-1a fingerprint over layer shapes and parameter bit patterns.
+    ///
+    /// Two networks share a fingerprint iff their architectures and every
+    /// weight/bias bit agree — the identity the plan caches key prepared
+    /// weight-side state against (so a plan can never be silently executed
+    /// on a retrained or different model).
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        let mut mix = |x: u64| {
+            h = (h ^ x).wrapping_mul(PRIME);
+        };
+        mix(self.layers.len() as u64);
+        for layer in &self.layers {
+            mix(layer.in_dim() as u64);
+            mix(layer.out_dim() as u64);
+            mix(u64::from(layer.relu));
+            for &w in layer.weights.data() {
+                mix(w.to_bits());
+            }
+            for &b in &layer.bias {
+                mix(b.to_bits());
+            }
+        }
+        h
+    }
+
     /// Total parameter count.
     pub fn param_count(&self) -> usize {
         self.layers
@@ -249,6 +277,20 @@ mod tests {
         // per layer (ReLU is positive-homogeneous), so predictions match.
         let preds_after = mlp.predict(&x);
         assert_eq!(preds_before, preds_after);
+    }
+
+    #[test]
+    fn fingerprint_tracks_parameters() {
+        let mut rng = Xoshiro256pp::new(6);
+        let mlp = Mlp::three_layer(6, 5, 4, 3, &mut rng);
+        let same = mlp.clone();
+        assert_eq!(mlp.fingerprint(), same.fingerprint());
+        let mut other = mlp.clone();
+        other.layers[1].weights.set(0, 0, 0.123456789);
+        assert_ne!(mlp.fingerprint(), other.fingerprint());
+        let mut biased = mlp.clone();
+        biased.layers[2].bias[0] += 1e-9;
+        assert_ne!(mlp.fingerprint(), biased.fingerprint());
     }
 
     #[test]

@@ -3,10 +3,12 @@
 
 pub mod layer;
 pub mod mlp;
+pub mod prepared;
 pub mod quantized;
 
 pub use layer::{argmax_rows, softmax_rows, Dense};
 pub use mlp::Mlp;
+pub use prepared::{PlanKey, PreparedModel};
 pub use quantized::{
     quantized_accuracy, quantized_forward, quantized_predict, ActivationRanges,
     QuantInferenceConfig,

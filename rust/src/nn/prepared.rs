@@ -1,0 +1,273 @@
+//! Prepared quantized inference: the weight side of every layer's matmul
+//! is planned **once** and reused across requests, so a serving call only
+//! plans the activation side.
+//!
+//! The direct path ([`crate::nn::quantized_forward`]) rebuilds quantizers,
+//! per-element rounding tables and (for the `Separate` placement) the full
+//! requantized weight matrix on every call — per layer, per request. The
+//! rounded values of the weight operand are request-invariant for
+//! deterministic rounding (seed-free) and effectively so for dither
+//! rounding (the §II-D representation is deterministic to first order), so
+//! [`PreparedModel`] freezes one materialized quantized weight matrix per
+//! layer for those schemes under [`Variant::Separate`], and caches the
+//! seed-independent planning tables for everything else.
+//!
+//! Guarantees, locked by `tests/plan_execute.rs`:
+//!
+//! * deterministic mode is **bit-identical** to the direct path (and
+//!   seed-independent);
+//! * stochastic mode is bit-identical given the same per-call seed (its
+//!   weight draw stays fresh per request — freezing a Bernoulli draw would
+//!   silently correlate repeated requests);
+//! * dither mode under `Separate` is distribution-equivalent: the frozen
+//!   weight draw shifts individual logits by at most one quantizer step
+//!   per contracted element, with the same mean behaviour over trials;
+//! * dither mode under `InputOnce`/`PerPartial` is bit-identical given the
+//!   per-call seed: those placements sweep the weight operand's dither
+//!   period over a batch-sized use index, so the weight side is planned
+//!   per call rather than pinned to a wrong prebuilt period.
+
+use crate::linalg::{execute, Matrix, Operand, QuantMatmulConfig, QuantPlan, SweepAxis, Variant};
+use crate::nn::mlp::Mlp;
+use crate::nn::quantized::ActivationRanges;
+use crate::rounding::{Quantizer, RoundingMode};
+
+/// Cache key for a prepared model: everything that determines the
+/// weight-side plans of one serving configuration.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Model family wire name.
+    pub model: String,
+    /// Quantizer bit width `k`.
+    pub bits: u32,
+    /// Rounding scheme.
+    pub mode: RoundingMode,
+    /// Rounding placement.
+    pub variant: Variant,
+}
+
+impl std::fmt::Display for PlanKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/k={}/{}/{}",
+            self.model,
+            self.bits,
+            self.mode.name(),
+            self.variant.name()
+        )
+    }
+}
+
+/// One weight-side [`QuantPlan`] per layer of an [`Mlp`], for a fixed
+/// `(bits, mode, variant)` serving configuration.
+pub struct PreparedModel {
+    bits: u32,
+    mode: RoundingMode,
+    variant: Variant,
+    /// Weight-side plan per layer, in forward order. `None` means the
+    /// layer's weight operand must be planned per call (dither under the
+    /// per-partial placements, whose sweep period is the batch size and
+    /// therefore unknowable at prepare time).
+    plans: Vec<Option<QuantPlan>>,
+    /// Fingerprint of the network the plans were built from (guards
+    /// against executing plans on a different model).
+    fingerprint: u64,
+}
+
+impl PreparedModel {
+    /// Build the weight-side plans for every layer. `prep_seed` fixes the
+    /// dither draw of frozen weight operands (deterministic mode ignores
+    /// it entirely).
+    ///
+    /// Frozen plans use the layer's input dimension as the dither period:
+    /// the rounding errors of each weight column then sweep one full §II-D
+    /// sequence across exactly the elements the matmul sums, which is the
+    /// stratification the paper's `Θ(1/N)` argument wants (the per-call
+    /// path defaults the period to the batch size instead, because it
+    /// cannot know the contraction geometry ahead of time).
+    pub fn prepare(
+        mlp: &Mlp,
+        bits: u32,
+        mode: RoundingMode,
+        variant: Variant,
+        prep_seed: u64,
+    ) -> PreparedModel {
+        let plans = mlp
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, layer)| {
+                let w_range = layer.weight_range();
+                let quant = Quantizer::new(bits, -w_range, w_range);
+                let n = layer.in_dim();
+                // Freezing is sound when the operand is quantized once per
+                // call (`Separate`) and its draw is request-invariant —
+                // deterministic always, dither by §II-D structure.
+                // Stochastic keeps a fresh Bernoulli draw per request.
+                if variant == Variant::Separate && mode != RoundingMode::Stochastic {
+                    let seed = prep_seed ^ ((li as u64 + 1) << 40) ^ 0xB1B1_B1B1;
+                    let plan = QuantPlan::plan_frozen(
+                        &layer.weights,
+                        &quant,
+                        mode,
+                        n,
+                        SweepAxis::Rows,
+                        seed,
+                    );
+                    Some(plan)
+                } else if mode == RoundingMode::Dither {
+                    // InputOnce/PerPartial sweep the weight operand's
+                    // dither period over its per-row use index, whose
+                    // count is the batch size — unknowable here. A
+                    // prebuilt period would silently change the
+                    // stratification geometry, so these layers plan per
+                    // call, exactly like the direct path.
+                    None
+                } else {
+                    // Deterministic and stochastic rounding ignore the
+                    // period entirely, so their tables are reusable under
+                    // every placement.
+                    let plan =
+                        QuantPlan::plan_operand(&layer.weights, &quant, mode, n, SweepAxis::Rows);
+                    Some(plan)
+                }
+            })
+            .collect();
+        PreparedModel {
+            bits,
+            mode,
+            variant,
+            plans,
+            fingerprint: mlp.fingerprint(),
+        }
+    }
+
+    /// Quantized forward pass → logits, planning only the activation side.
+    ///
+    /// `mlp` must be the network the plans were prepared from (checked via
+    /// fingerprint in debug builds); `seed` drives the per-call activation
+    /// rounding stream exactly like [`crate::nn::QuantInferenceConfig::seed`]
+    /// drives the direct path.
+    pub fn forward(&self, mlp: &Mlp, x: &Matrix, ranges: &ActivationRanges, seed: u64) -> Matrix {
+        debug_assert_eq!(
+            self.fingerprint,
+            mlp.fingerprint(),
+            "prepared plans executed against a different model"
+        );
+        assert_eq!(
+            self.plans.len(),
+            mlp.layers.len(),
+            "one weight plan per layer"
+        );
+        assert_eq!(
+            ranges.per_layer.len(),
+            mlp.layers.len(),
+            "one activation range per layer"
+        );
+        let mut h = x.clone();
+        for (li, layer) in mlp.layers.iter().enumerate() {
+            let w_range = layer.weight_range();
+            let mm = QuantMatmulConfig {
+                bits: self.bits,
+                mode: self.mode,
+                variant: self.variant,
+                // Decorrelate layers and trials (same derivation as the
+                // direct path, so unfrozen schemes stay bit-identical).
+                seed: seed ^ ((li as u64 + 1) << 40),
+                range_a: ranges.per_layer[li],
+                range_b: (-w_range, w_range),
+                n_a: None,
+                n_b: None,
+            };
+            let weight_side = match &self.plans[li] {
+                Some(plan) => Operand::Plan(plan),
+                None => Operand::Raw(&layer.weights),
+            };
+            let mut out = execute(Operand::Raw(&h), weight_side, &mm);
+            layer.finish(&mut out); // bias + ReLU in full precision (§VI)
+            h = out;
+        }
+        h
+    }
+
+    /// Bit width of the prepared configuration.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Rounding scheme of the prepared configuration.
+    pub fn mode(&self) -> RoundingMode {
+        self.mode
+    }
+
+    /// Rounding placement of the prepared configuration.
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// Approximate heap footprint of all layer plans (cache accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.plans
+            .iter()
+            .flatten()
+            .map(QuantPlan::memory_bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quantized::{quantized_forward, QuantInferenceConfig};
+    use crate::util::rng::Xoshiro256pp;
+
+    fn toy() -> (Mlp, Matrix, ActivationRanges) {
+        let mut rng = Xoshiro256pp::new(11);
+        let mut mlp = Mlp::three_layer(10, 8, 6, 4, &mut rng);
+        mlp.normalize_weights();
+        let x = Matrix::from_fn(5, 10, |i, j| (((i * 10 + j) as f64) * 0.37).sin().abs());
+        let ranges = ActivationRanges::calibrate(&mlp, &x);
+        (mlp, x, ranges)
+    }
+
+    #[test]
+    fn deterministic_prepared_forward_is_seed_independent() {
+        let (mlp, x, ranges) = toy();
+        let cfg = QuantInferenceConfig {
+            bits: 4,
+            mode: RoundingMode::Deterministic,
+            variant: Variant::Separate,
+            seed: 1,
+        };
+        let direct = quantized_forward(&mlp, &x, &ranges, &cfg);
+        for prep_seed in [0u64, 7, 999] {
+            let prepared = PreparedModel::prepare(
+                &mlp,
+                4,
+                RoundingMode::Deterministic,
+                Variant::Separate,
+                prep_seed,
+            );
+            for call_seed in [1u64, 2, 3000] {
+                let out = prepared.forward(&mlp, &x, &ranges, call_seed);
+                assert_eq!(direct, out, "prep_seed={prep_seed} call_seed={call_seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_layers_report_memory_and_config() {
+        let (mlp, _x, _ranges) = toy();
+        let p = PreparedModel::prepare(&mlp, 6, RoundingMode::Dither, Variant::Separate, 3);
+        assert_eq!(p.bits(), 6);
+        assert_eq!(p.mode(), RoundingMode::Dither);
+        assert_eq!(p.variant(), Variant::Separate);
+        assert!(p.memory_bytes() > 0);
+        // Frozen dither plans drop the planning tables, so the footprint is
+        // roughly the materialized weights alone — strictly smaller than a
+        // stochastic preparation, which must keep per-call tables.
+        let s = PreparedModel::prepare(&mlp, 6, RoundingMode::Stochastic, Variant::Separate, 3);
+        assert!(p.memory_bytes() < s.memory_bytes());
+    }
+}

@@ -2,7 +2,10 @@
 //! path.
 //!
 //! Every matmul in the forward pass is replaced by a k-bit fixed-point
-//! [`quant_matmul`] under a chosen [`RoundingMode`] and [`Variant`]. Per the
+//! [`quant_matmul`] under a chosen [`RoundingMode`] and [`Variant`]. This is
+//! the *direct* path, which plans both operands per call; the serving stack
+//! uses [`crate::nn::PreparedModel`] to plan the weight side once and only
+//! pays for the activation side per request. Per the
 //! paper: weights are normalized to `[-1, 1]`, the input shares the weight
 //! quantizer's `[-1, 1]` range even though pixels occupy only `[0, 1]`
 //! ("it did not fully utilize the full range of the quantizer" — the very
@@ -26,6 +29,20 @@ pub struct QuantInferenceConfig {
     pub variant: Variant,
     /// Trial seed (vary to sample the accuracy distribution).
     pub seed: u64,
+}
+
+impl QuantInferenceConfig {
+    /// The plan-cache fingerprint of this configuration for one model
+    /// family: everything except the per-trial seed, which only drives the
+    /// activation-side rounding stream of a prepared forward pass.
+    pub fn plan_key(&self, model: &str) -> crate::nn::prepared::PlanKey {
+        crate::nn::prepared::PlanKey {
+            model: model.to_string(),
+            bits: self.bits,
+            mode: self.mode,
+            variant: self.variant,
+        }
+    }
 }
 
 /// Per-layer input ranges used by the quantizers, calibrated once on the

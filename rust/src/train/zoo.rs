@@ -6,9 +6,12 @@
 //! coordinator's worker shards behind an `Arc`.
 
 use crate::data::{Dataset, Task};
-use crate::nn::{ActivationRanges, Mlp};
+use crate::linalg::Variant;
+use crate::nn::{ActivationRanges, Mlp, PlanKey, PreparedModel};
+use crate::rounding::RoundingMode;
 use crate::train::sgd::{train, TrainConfig};
 use crate::util::rng::Xoshiro256pp;
+use std::sync::Arc;
 
 /// Which evaluation model to produce.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -180,6 +183,39 @@ impl Zoo {
     pub fn models(&self) -> &[ZooModel] {
         &self.models
     }
+
+    /// Build prepared weight-side inference plans for every loaded model ×
+    /// each `(bits, mode)` combination — zoo-level plan prewarming.
+    ///
+    /// Server startup runs this once before accepting traffic and installs
+    /// the shared `Arc`s into every shard engine's plan cache, so the hot
+    /// configurations never pay weight-side planning on the request path
+    /// (and the build cost is amortized across shards instead of repeated
+    /// per engine). `seed` fixes the dither draw of frozen weight plans.
+    pub fn prewarm_plans(
+        &self,
+        bits: &[u32],
+        modes: &[RoundingMode],
+        variant: Variant,
+        seed: u64,
+    ) -> Vec<(PlanKey, Arc<PreparedModel>)> {
+        let mut out = Vec::with_capacity(self.models.len() * bits.len() * modes.len());
+        for m in &self.models {
+            for &k in bits {
+                for &mode in modes {
+                    let key = PlanKey {
+                        model: m.spec.name().to_string(),
+                        bits: k,
+                        mode,
+                        variant,
+                    };
+                    let plans = Arc::new(PreparedModel::prepare(&m.mlp, k, mode, variant, seed));
+                    out.push((key, plans));
+                }
+            }
+        }
+        out
+    }
 }
 
 fn shapes_match(m: &Mlp, spec: ModelSpec) -> bool {
@@ -235,6 +271,23 @@ mod tests {
             assert_eq!(ModelSpec::from_name(spec.name()), Some(spec));
         }
         assert_eq!(ModelSpec::from_name("nope"), None);
+    }
+
+    #[test]
+    fn prewarm_plans_covers_the_config_grid() {
+        let zoo = Zoo::load(200, 11);
+        let plans = zoo.prewarm_plans(&[2, 4], &RoundingMode::ALL, Variant::Separate, 7);
+        assert_eq!(plans.len(), 2 * 2 * 3, "models × bits × schemes");
+        for (key, prepared) in &plans {
+            assert_eq!(key.variant, Variant::Separate);
+            assert_eq!(prepared.bits(), key.bits);
+            assert_eq!(prepared.mode(), key.mode);
+            assert!(prepared.memory_bytes() > 0);
+        }
+        // Keys are unique (one cache slot per configuration).
+        for (i, (key, _)) in plans.iter().enumerate() {
+            assert!(plans.iter().skip(i + 1).all(|(other, _)| other != key));
+        }
     }
 
     #[test]

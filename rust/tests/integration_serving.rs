@@ -95,6 +95,7 @@ fn tcp_server_end_to_end_sharded() {
         queue_cap: 64,
         train_n: TRAIN_N,
         seed: 7,
+        prewarm_bits: vec![4],
     };
     let server = std::thread::spawn(move || serve(&cfg));
 
@@ -214,6 +215,7 @@ fn tcp_requests_pipeline_across_connections() {
         queue_cap: 64,
         train_n: TRAIN_N,
         seed: 7,
+        prewarm_bits: vec![4],
     };
     let server = std::thread::spawn(move || serve(&cfg));
     assert!(

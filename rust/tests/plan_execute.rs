@@ -1,0 +1,232 @@
+//! Property tests for the plan → execute split: the prepared
+//! (weight-plans-cached) inference path must be *bit-identical* to the
+//! direct plan-per-call path wherever the refactor promises it, and
+//! *distribution-equivalent* everywhere else.
+//!
+//! Contract under test (see `nn/prepared.rs`):
+//!
+//! * deterministic mode: bit-identical, independent of both the prepare
+//!   seed and the per-call seed;
+//! * stochastic mode: bit-identical given the same per-call seed (weight
+//!   draws stay fresh per request);
+//! * dither mode under `Separate`: the weight draw is frozen at prepare
+//!   time, so outputs are distribution-equivalent — same per-logit mean
+//!   over many trials, comparable trial-to-trial spread — rather than
+//!   bitwise equal;
+//! * dither mode under `InputOnce`/`PerPartial`: the weight side is
+//!   planned per call (batch-sized sweep period), so outputs are
+//!   bit-identical given the per-call seed.
+
+use dither::linalg::{Matrix, Variant};
+use dither::nn::{quantized_forward, ActivationRanges, Mlp, PreparedModel, QuantInferenceConfig};
+use dither::rounding::RoundingMode;
+use dither::util::rng::Xoshiro256pp;
+use dither::util::stats::Welford;
+
+/// A small normalized network and a batch of inputs in the paper's
+/// narrow-range regime (pixels well inside the [-1, 1] quantizer).
+fn toy(layers: usize, seed: u64) -> (Mlp, Matrix, ActivationRanges) {
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut mlp = match layers {
+        1 => Mlp::single_layer(16, 4, &mut rng),
+        _ => Mlp::three_layer(16, 12, 8, 4, &mut rng),
+    };
+    mlp.normalize_weights();
+    let mut x = Matrix::zeros(6, 16);
+    for i in 0..6 {
+        for j in 0..16 {
+            x.set(i, j, rng.uniform(0.05, 0.85));
+        }
+    }
+    let ranges = ActivationRanges::calibrate(&mlp, &x);
+    (mlp, x, ranges)
+}
+
+#[test]
+fn prepared_deterministic_is_bit_identical_across_variants() {
+    // The acceptance criterion: plan-based deterministic forward equals
+    // the direct path exactly — every placement, several bit widths, and
+    // independent of prepare/call seeds.
+    let (mlp, x, ranges) = toy(3, 1);
+    for variant in Variant::ALL {
+        for bits in [1u32, 3, 6, 10] {
+            let cfg = QuantInferenceConfig {
+                bits,
+                mode: RoundingMode::Deterministic,
+                variant,
+                seed: 99,
+            };
+            let direct = quantized_forward(&mlp, &x, &ranges, &cfg);
+            for prep_seed in [0u64, 7] {
+                let prepared = PreparedModel::prepare(
+                    &mlp,
+                    bits,
+                    RoundingMode::Deterministic,
+                    variant,
+                    prep_seed,
+                );
+                for call_seed in [99u64, 5000] {
+                    let planned = prepared.forward(&mlp, &x, &ranges, call_seed);
+                    assert_eq!(
+                        direct.data(),
+                        planned.data(),
+                        "{variant:?} bits={bits} prep={prep_seed} call={call_seed}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prepared_stochastic_is_bit_identical_given_call_seed() {
+    // Stochastic weight plans are never frozen: with the same per-call
+    // seed the prepared path must reproduce the direct path bit for bit
+    // (the plan only hoists seed-independent tables).
+    let (mlp, x, ranges) = toy(3, 2);
+    for variant in Variant::ALL {
+        let prepared = PreparedModel::prepare(&mlp, 4, RoundingMode::Stochastic, variant, 77);
+        for trial in 0..50u64 {
+            let cfg = QuantInferenceConfig {
+                bits: 4,
+                mode: RoundingMode::Stochastic,
+                variant,
+                seed: trial,
+            };
+            let direct = quantized_forward(&mlp, &x, &ranges, &cfg);
+            let planned = prepared.forward(&mlp, &x, &ranges, trial);
+            assert_eq!(direct.data(), planned.data(), "{variant:?} trial={trial}");
+        }
+    }
+}
+
+#[test]
+fn prepared_dither_per_partial_placements_match_direct_bitwise() {
+    // Under InputOnce/PerPartial the weight operand's dither period is the
+    // batch size, which cannot be prebuilt — PreparedModel plans those
+    // layers per call, so the output must equal the direct path bit for
+    // bit (same seeds, same batch-derived period).
+    let (mlp, x, ranges) = toy(3, 6);
+    for variant in [Variant::InputOnce, Variant::PerPartial] {
+        let prepared = PreparedModel::prepare(&mlp, 4, RoundingMode::Dither, variant, 55);
+        for trial in 0..20u64 {
+            let cfg = QuantInferenceConfig {
+                bits: 4,
+                mode: RoundingMode::Dither,
+                variant,
+                seed: trial,
+            };
+            let direct = quantized_forward(&mlp, &x, &ranges, &cfg);
+            let planned = prepared.forward(&mlp, &x, &ranges, trial);
+            assert_eq!(direct.data(), planned.data(), "{variant:?} trial={trial}");
+        }
+    }
+}
+
+/// Per-cell trial statistics of a forward-pass sampler.
+fn collect(
+    trials: u64,
+    cells: usize,
+    mut forward: impl FnMut(u64) -> Matrix,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut stats = vec![Welford::new(); cells];
+    for t in 0..trials {
+        let out = forward(t);
+        assert_eq!(out.data().len(), cells);
+        for (w, &v) in stats.iter_mut().zip(out.data()) {
+            w.push(v);
+        }
+    }
+    let means = stats.iter().map(Welford::mean).collect();
+    let sds = stats.iter().map(Welford::stddev).collect();
+    (means, sds)
+}
+
+#[test]
+fn prepared_dither_is_distribution_equivalent() {
+    // Dither weight plans freeze one §II-D draw, so the prepared path is
+    // not bitwise equal to the direct path — but over ≥1k trials the
+    // per-logit means must agree (both are unbiased up to the frozen
+    // draw's sub-step residue) and the trial-to-trial spread must stay
+    // the same order (the direct path merely adds the weight-side noise
+    // component on top of the shared activation-side noise).
+    let (mlp, x, ranges) = toy(1, 3);
+    let trials = 1200u64;
+    let cells = 6 * 4;
+    let prepared = PreparedModel::prepare(&mlp, 10, RoundingMode::Dither, Variant::Separate, 21);
+    let (mean_p, sd_p) = collect(trials, cells, |t| {
+        prepared.forward(&mlp, &x, &ranges, 10_000 + t)
+    });
+    let (mean_d, sd_d) = collect(trials, cells, |t| {
+        let cfg = QuantInferenceConfig {
+            bits: 10,
+            mode: RoundingMode::Dither,
+            variant: Variant::Separate,
+            seed: 10_000 + t,
+        };
+        quantized_forward(&mlp, &x, &ranges, &cfg)
+    });
+    // Logits are O(1) sums of 16 products; at k=10 the quantizer step is
+    // 2/1023 ≈ 0.002, so even a fully adversarial frozen weight draw moves
+    // a logit by ≤ 16·0.85·step ≈ 0.027 — the 0.1 tolerance has ~4×
+    // headroom while still ruling out any systematic divergence.
+    for (c, (mp, md)) in mean_p.iter().zip(&mean_d).enumerate() {
+        assert!(
+            (mp - md).abs() < 0.1,
+            "cell {c}: planned mean {mp} vs direct mean {md}"
+        );
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (sp, sd) = (avg(&sd_p), avg(&sd_d));
+    assert!(
+        sp <= sd * 2.0 + 1e-3,
+        "planned spread {sp} should not exceed direct spread {sd}"
+    );
+    assert!(
+        sd <= sp * 4.0 + 1e-3,
+        "direct spread {sd} should stay comparable to planned {sp}"
+    );
+}
+
+#[test]
+fn prepared_stochastic_distribution_matches_over_trials() {
+    // The same ≥1k-trial statistic for stochastic mode. Bitwise identity
+    // per trial (tested above) makes this exact; keeping the statistical
+    // form documents the distribution-equivalence contract symmetrically.
+    let (mlp, x, ranges) = toy(1, 4);
+    let trials = 1000u64;
+    let cells = 6 * 4;
+    let mode = RoundingMode::Stochastic;
+    let prepared = PreparedModel::prepare(&mlp, 6, mode, Variant::Separate, 33);
+    let (mean_p, sd_p) = collect(trials, cells, |t| {
+        prepared.forward(&mlp, &x, &ranges, 44_000 + t)
+    });
+    let (mean_d, sd_d) = collect(trials, cells, |t| {
+        let cfg = QuantInferenceConfig {
+            bits: 6,
+            mode,
+            variant: Variant::Separate,
+            seed: 44_000 + t,
+        };
+        quantized_forward(&mlp, &x, &ranges, &cfg)
+    });
+    for ((mp, md), (sp, sd)) in mean_p.iter().zip(&mean_d).zip(sd_p.iter().zip(&sd_d)) {
+        assert!((mp - md).abs() < 1e-12, "means must match exactly");
+        assert!((sp - sd).abs() < 1e-12, "spreads must match exactly");
+    }
+}
+
+#[test]
+fn prepared_forward_is_reproducible_per_seed() {
+    let (mlp, x, ranges) = toy(3, 5);
+    for mode in RoundingMode::ALL {
+        let prepared = PreparedModel::prepare(&mlp, 5, mode, Variant::Separate, 9);
+        let a = prepared.forward(&mlp, &x, &ranges, 123);
+        let b = prepared.forward(&mlp, &x, &ranges, 123);
+        assert_eq!(a.data(), b.data(), "{mode:?}");
+        if mode != RoundingMode::Deterministic {
+            let c = prepared.forward(&mlp, &x, &ranges, 124);
+            assert_ne!(a.data(), c.data(), "{mode:?} must vary with the seed");
+        }
+    }
+}

@@ -25,7 +25,7 @@
 //! same cached zoo weights; with matching `--train-n`/`--seed` it retrains
 //! identical weights even without the cache).
 
-use dither::coordinator::{format_request, Engine};
+use dither::coordinator::{format_request, wait_ready, Engine};
 use dither::data::{Dataset, Task};
 use dither::rounding::RoundingMode;
 use dither::util::cli::Args;
@@ -35,7 +35,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const SCHEMES: [RoundingMode; 3] = [
     RoundingMode::Deterministic,
@@ -91,6 +91,13 @@ fn main() -> Result<()> {
     let clients = args.parse_or("clients", 8usize).max(1);
     let train_n = args.parse_or("train-n", 2000usize);
     let seed = args.parse_or("seed", 7u64);
+    let expect_fidelity = args.flag("expect-fidelity");
+
+    // The server may still be training its zoo (CI starts both at once).
+    if !wait_ready(&addr, Duration::from_secs(300)) {
+        eprintln!("FAIL: server at {addr} never became ready");
+        std::process::exit(1);
+    }
 
     println!("load_gen: building reference engine (train_n={train_n}, seed={seed}) ...");
     let reference = Engine::new(train_n, seed);
@@ -171,6 +178,32 @@ fn main() -> Result<()> {
             eprintln!("  {v}");
         }
         std::process::exit(1);
+    }
+    // --expect-fidelity: the server was started with a nonzero
+    // --shadow-rate, so the merged stats must report populated
+    // per-(model, scheme, k) shadow-sampling estimates.
+    if expect_fidelity {
+        let entries = stats
+            .get("fidelity")
+            .and_then(Json::as_arr)
+            .map(<[Json]>::to_vec)
+            .unwrap_or_default();
+        let samples: f64 = entries
+            .iter()
+            .filter_map(|e| e.get("samples").and_then(Json::as_f64))
+            .sum();
+        if entries.is_empty() || samples <= 0.0 {
+            eprintln!(
+                "FAIL: stats.fidelity is not populated ({} cells, {samples} samples) — \
+                 was the server started with --shadow-rate > 0?",
+                entries.len()
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "fidelity: {} (model, scheme, k) cells populated from {samples} shadow samples",
+            entries.len()
+        );
     }
     println!("PASS: {done} mixed-scheme requests, zero incorrect replies");
     Ok(())

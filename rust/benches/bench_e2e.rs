@@ -8,6 +8,7 @@
 
 use dither::coordinator::{format_request, ping, serve, Engine, ServerConfig};
 use dither::data::{Dataset, Task};
+use dither::fidelity::FidelityShard;
 use dither::rounding::RoundingMode;
 use dither::train::Zoo;
 use dither::util::benchmark::{black_box, format_count, Bench};
@@ -84,8 +85,45 @@ fn main() {
     }
     let hit_stats = hit_engine.plan_cache_stats();
     assert_eq!(hit_stats.misses, 0, "prewarmed engine must never replan");
-    drop(hit_engine);
     drop(miss_engine);
+
+    // ---- shadow-sampling overhead --------------------------------------
+    // Same prewarmed engine configuration; the shadowed variant re-runs
+    // the exact f64 forward pass for every request row and records
+    // per-logit errors. The ratio is the worst-case (rate 1.0) cost of
+    // `--shadow-rate`; production rates are a few percent of it.
+    let shadow_engine =
+        Engine::from_zoo(zoo.clone(), 7).with_shadow(1.0, Arc::new(FidelityShard::new()));
+    shadow_engine.prewarm(&[4], &[RoundingMode::Dither]);
+    let pixels32: Vec<&[f64]> = (0..32).map(|i| ds.images.row(i)).collect();
+    let mut shadow_rates = [0.0f64; 2];
+    let engines: [(&Engine, &str); 2] = [(&hit_engine, "off"), (&shadow_engine, "on")];
+    for (slot, (engine, label)) in engines.iter().enumerate() {
+        let name = format!("e2e/shadow_{label}/digits_linear/k=4/dither/batch=32");
+        let result = bench.bench_items(&name, 32.0, || {
+            black_box(
+                engine
+                    .infer_batch("digits_linear", 4, RoundingMode::Dither, &pixels32)
+                    .expect("infer"),
+            )
+        });
+        shadow_rates[slot] = result.throughput().unwrap_or(0.0);
+    }
+    if shadow_rates[1] > 0.0 {
+        println!(
+            "shadow-rate 1.0 overhead: {:.2}x slower (items/s {:.0} -> {:.0}, {} logit errors recorded)",
+            shadow_rates[0] / shadow_rates[1],
+            shadow_rates[0],
+            shadow_rates[1],
+            shadow_engine.fidelity().total_samples()
+        );
+    }
+    assert!(
+        shadow_engine.fidelity().total_samples() > 0,
+        "shadowed engine must record logit errors"
+    );
+    drop(hit_engine);
+    drop(shadow_engine);
 
     // ---- TCP serving throughput: 1 shard vs K shards -------------------
     let k_shards = num_threads().clamp(2, 8);
@@ -131,6 +169,18 @@ fn main() {
             ("speedup", Json::Num(if *miss > 0.0 { hit / miss } else { 0.0 })),
         ]));
     }
+    let shadow_name = "e2e/shadow_rate_overhead/digits_linear/k=4/dither/batch=32";
+    let overhead = if shadow_rates[1] > 0.0 {
+        shadow_rates[0] / shadow_rates[1]
+    } else {
+        0.0
+    };
+    all.push(Json::obj(vec![
+        ("name", Json::Str(shadow_name.to_string())),
+        ("off_items_per_s", Json::Num(shadow_rates[0])),
+        ("on_items_per_s", Json::Num(shadow_rates[1])),
+        ("overhead_x", Json::Num(overhead)),
+    ]));
     all.extend(serving);
     std::fs::create_dir_all("results").expect("results dir");
     std::fs::write("results/bench_e2e.json", Json::Arr(all).to_string())
@@ -157,6 +207,8 @@ fn serving_throughput(
         train_n: TRAIN_N,
         seed: 7,
         prewarm_bits: vec![4],
+        shadow_rate: 0.0,
+        plan_cache_mb: 64,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 

@@ -8,6 +8,14 @@
 //! [`Batcher::submit`] rejects instead of growing without limit, which is
 //! the server's backpressure signal ([`SubmitError::Overloaded`]).
 //!
+//! **Plan-aware draining**: when a residency oracle is installed
+//! ([`Batcher::set_residency`] — the shard pool points it at the owning
+//! engine's plan cache), the batcher prefers to drain keys whose prepared
+//! plans are cache-resident, so a cold configuration's replanning cost is
+//! not paid in front of hot traffic. Starvation is bounded: once the
+//! oldest queued request has waited [`STARVATION_MULT`]× the linger time,
+//! its key is drained next regardless of residency.
+//!
 //! Shutdown has two flavours: [`Batcher::close`] stops intake and lets the
 //! worker drain what is queued (graceful), [`Batcher::stop`] aborts after
 //! the in-flight batch.
@@ -19,8 +27,13 @@ use crate::rounding::RoundingMode;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+/// How many linger periods the oldest queued request may wait before its
+/// key is drained ahead of resident-plan keys (the anti-starvation bound
+/// of plan-aware batching).
+pub const STARVATION_MULT: u32 = 8;
 
 /// A queued request with its response channel.
 pub struct Pending {
@@ -81,6 +94,9 @@ pub struct Batcher {
     notify: Condvar,
     closed: AtomicBool,
     stopped: AtomicBool,
+    /// Plan-residency oracle (set once at shard start): true when a key's
+    /// prepared plans are cache-resident in the owning shard's engine.
+    residency: OnceLock<Box<dyn Fn(&BatchKey) -> bool + Send + Sync>>,
     /// Maximum batch size per engine call.
     pub max_batch: usize,
     /// How long to linger for more same-key requests.
@@ -99,10 +115,54 @@ impl Batcher {
             notify: Condvar::new(),
             closed: AtomicBool::new(false),
             stopped: AtomicBool::new(false),
+            residency: OnceLock::new(),
             max_batch: max_batch.max(1),
             max_wait,
             capacity: capacity.max(1),
         }
+    }
+
+    /// Install the plan-residency oracle (first call wins; the shard pool
+    /// sets it once before traffic). With no oracle the batcher drains in
+    /// pure arrival order, exactly as before.
+    pub fn set_residency(&self, f: impl Fn(&BatchKey) -> bool + Send + Sync + 'static) {
+        let _ = self.residency.set(Box::new(f));
+    }
+
+    /// Age past which the oldest queued request's key preempts
+    /// resident-plan preference.
+    fn starvation_bound(&self) -> Duration {
+        self.max_wait
+            .saturating_mul(STARVATION_MULT)
+            .max(Duration::from_millis(2))
+    }
+
+    /// Choose the key the next batch drains: the oldest request's key once
+    /// it is over the starvation bound, else the first queued key whose
+    /// plans are resident, else the oldest request's key.
+    ///
+    /// Runs under the queue lock, so the oracle (which takes the engine's
+    /// plan-cache lock) is probed once per *distinct* key — the queue
+    /// typically holds 1–3 — not once per queued request.
+    fn pick_key(&self, q: &VecDeque<Pending>) -> BatchKey {
+        let front = q.front().expect("pick_key on a non-empty queue");
+        if front.enqueued.elapsed() >= self.starvation_bound() {
+            return BatchKey::of(&front.req);
+        }
+        if let Some(resident) = self.residency.get() {
+            let mut probed: Vec<BatchKey> = Vec::new();
+            for p in q {
+                if probed.iter().any(|k| k.matches(&p.req)) {
+                    continue; // this key already probed non-resident
+                }
+                let key = BatchKey::of(&p.req);
+                if resident(&key) {
+                    return key;
+                }
+                probed.push(key);
+            }
+        }
+        BatchKey::of(&front.req)
     }
 
     /// Enqueue a request; rejects when the queue is full or the batcher is
@@ -182,7 +242,7 @@ impl Batcher {
                 }
                 q = self.notify.wait(q).unwrap();
             }
-            let key = BatchKey::of(&q.front().unwrap().req);
+            let key = self.pick_key(&q);
             // Linger for stragglers while the batch is not full (skipped
             // when shutting down — drain as fast as possible).
             let deadline = Instant::now() + self.max_wait;
@@ -236,10 +296,12 @@ pub fn worker_loop(batcher: &Batcher, engine: &Engine, metrics: &ShardMetrics, s
                         p.req.id,
                         out.pred,
                         key.mode,
+                        key.k,
                         &out.logits,
                         latency_us,
                         batch.len(),
                         shard,
+                        p.req.auto,
                     );
                     let _ = p.respond_to.send(line);
                 }
@@ -266,6 +328,8 @@ mod tests {
             model: model.to_string(),
             k,
             mode,
+            auto: false,
+            max_mse: None,
             pixels: vec![0.0; 784],
         }
     }
@@ -398,6 +462,57 @@ mod tests {
         b.submit(p).unwrap();
         b.stop();
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn resident_keys_drain_first_under_mixed_load() {
+        let b = Batcher::new(8, Duration::from_millis(1), 64);
+        b.set_residency(|key: &BatchKey| key.k == 4);
+        // Cold key arrives first, resident keys behind it.
+        let (p, _rx0) = pending("digits_linear", 2, RoundingMode::Dither, 0);
+        b.submit(p).unwrap();
+        for id in 1..4u64 {
+            let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, id);
+            b.submit(p).unwrap();
+            std::mem::forget(rx);
+        }
+        // The resident k=4 batch jumps the cold k=2 front request...
+        let (key, batch) = b.next_batch().unwrap();
+        assert_eq!(key.k, 4, "resident-plan key must drain first");
+        assert_eq!(batch.len(), 3);
+        // ...and the cold key is served right after (no residents left).
+        let (key, batch) = b.next_batch().unwrap();
+        assert_eq!(key.k, 2);
+        assert_eq!(batch[0].req.id, 0);
+    }
+
+    #[test]
+    fn cold_key_is_not_starved_by_resident_traffic() {
+        let b = Batcher::new(8, Duration::from_millis(1), 64);
+        b.set_residency(|key: &BatchKey| key.k == 4);
+        let (cold, _rx) = pending("digits_linear", 2, RoundingMode::Dither, 0);
+        b.submit(cold).unwrap();
+        // Let the cold request age past the starvation bound (8× the 1 ms
+        // linger), then pile resident traffic behind it.
+        std::thread::sleep(b.starvation_bound() + Duration::from_millis(5));
+        let (hot, _rx2) = pending("digits_linear", 4, RoundingMode::Dither, 1);
+        b.submit(hot).unwrap();
+        let (key, batch) = b.next_batch().unwrap();
+        assert_eq!(key.k, 2, "over-age cold key must preempt resident keys");
+        assert_eq!(batch[0].req.id, 0);
+        let (key, _) = b.next_batch().unwrap();
+        assert_eq!(key.k, 4);
+    }
+
+    #[test]
+    fn no_oracle_means_pure_arrival_order() {
+        let b = Batcher::new(8, Duration::from_millis(1), 64);
+        let (p, _rx) = pending("digits_linear", 2, RoundingMode::Dither, 0);
+        b.submit(p).unwrap();
+        let (p, _rx2) = pending("digits_linear", 4, RoundingMode::Dither, 1);
+        b.submit(p).unwrap();
+        let (key, _) = b.next_batch().unwrap();
+        assert_eq!(key.k, 2, "without residency the front key drains first");
     }
 
     #[test]

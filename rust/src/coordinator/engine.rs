@@ -10,44 +10,62 @@
 //! stochastic/dither rounding streams between shards without any
 //! cross-shard synchronization.
 //!
-//! Each engine additionally owns a **bounded LRU plan cache** of
+//! Each engine additionally owns a **byte-bounded LRU plan cache** of
 //! [`PreparedModel`]s keyed by [`PlanKey`] (the
 //! [`crate::nn::QuantInferenceConfig`] fingerprint): hot scheme/bit
 //! configurations skip all weight-side planning and requantization, paying
 //! only for the activation side of each request. The cache is per shard —
 //! shards specialize on the configurations their connections actually
-//! send, instead of all sharing one view of the zoo.
+//! send, instead of all sharing one view of the zoo — and it is bounded by
+//! accumulated [`PreparedModel::memory_bytes`], so a handful of large
+//! configurations cannot blow a memory budget that many small ones fit in.
+//!
+//! The engine is also where **shadow sampling** lives: when configured
+//! with a [`ShadowSampler`], a deterministic fraction of request rows is
+//! re-run through the exact f64 forward pass next to the quantized one,
+//! and every logit's signed error feeds the shard's [`FidelityShard`]
+//! estimators — the live bias/MSE measurement behind `stats.fidelity` and
+//! the `"scheme":"auto"` controller.
 
+use crate::fidelity::{FidelityShard, ShadowSampler};
 use crate::linalg::{Matrix, Variant};
 use crate::nn::{quantized_forward, PlanKey, PreparedModel, QuantInferenceConfig};
 use crate::rounding::RoundingMode;
-use crate::train::Zoo;
+use crate::train::{ModelSpec, Zoo, ZooModel};
 use crate::util::error::Result;
 use crate::{bail, err};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Default per-engine plan-cache capacity (entries). Sized for the full
-/// prewarm grid (2 models × 3 schemes × a handful of bit widths) plus
-/// headroom for request-driven configurations.
-pub const DEFAULT_PLAN_CACHE: usize = 32;
+/// Default per-engine plan-cache byte budget (64 MiB). The full prewarm
+/// grid (2 models × 3 schemes × the default bit widths) is well under
+/// 10 MiB, leaving headroom for request-driven configurations.
+pub const DEFAULT_PLAN_CACHE_BYTES: usize = 64 << 20;
 
-/// Bounded LRU over prepared models. Capacity 0 disables retention: every
-/// lookup is a miss that builds fresh plans (the cache-miss baseline the
-/// `bench_e2e` plan-cache comparison measures).
+/// Byte-bounded LRU over prepared models: eviction is driven by the
+/// accumulated [`PreparedModel::memory_bytes`] of resident entries, not by
+/// entry count. Capacity 0 disables retention: every lookup is a miss that
+/// builds fresh plans (the cache-miss baseline the `bench_e2e` plan-cache
+/// comparison measures). A single plan larger than the whole budget is
+/// evicted immediately — the budget is respected strictly rather than
+/// letting one oversized configuration pin arbitrary memory.
 struct PlanCache {
-    capacity: usize,
-    /// Front = most recently used.
-    entries: VecDeque<(PlanKey, Arc<PreparedModel>)>,
+    capacity_bytes: usize,
+    /// Accumulated `memory_bytes` of resident entries.
+    bytes: usize,
+    /// Front = most recently used; each entry carries its byte size so
+    /// eviction accounting never re-walks the plans.
+    entries: VecDeque<(PlanKey, Arc<PreparedModel>, usize)>,
     hits: u64,
     misses: u64,
 }
 
 impl PlanCache {
-    fn new(capacity: usize) -> PlanCache {
+    fn new(capacity_bytes: usize) -> PlanCache {
         PlanCache {
-            capacity,
+            capacity_bytes,
+            bytes: 0,
             entries: VecDeque::new(),
             hits: 0,
             misses: 0,
@@ -55,7 +73,7 @@ impl PlanCache {
     }
 
     fn get(&mut self, key: &PlanKey) -> Option<Arc<PreparedModel>> {
-        let idx = self.entries.iter().position(|(k, _)| k == key)?;
+        let idx = self.entries.iter().position(|(k, _, _)| k == key)?;
         let entry = self.entries.remove(idx).expect("index from position");
         let plans = entry.1.clone();
         self.entries.push_front(entry);
@@ -64,15 +82,21 @@ impl PlanCache {
     }
 
     fn insert(&mut self, key: PlanKey, plans: Arc<PreparedModel>) {
-        if self.capacity == 0 {
+        if self.capacity_bytes == 0 {
             return;
         }
-        if let Some(idx) = self.entries.iter().position(|(k, _)| k == &key) {
-            self.entries.remove(idx);
+        if let Some(idx) = self.entries.iter().position(|(k, _, _)| k == &key) {
+            let (_, _, old_bytes) = self.entries.remove(idx).expect("index from position");
+            self.bytes -= old_bytes;
         }
-        self.entries.push_front((key, plans));
-        while self.entries.len() > self.capacity {
-            self.entries.pop_back();
+        let size = plans.memory_bytes();
+        self.entries.push_front((key, plans, size));
+        self.bytes += size;
+        while self.bytes > self.capacity_bytes {
+            let Some((_, _, evicted)) = self.entries.pop_back() else {
+                break;
+            };
+            self.bytes -= evicted;
         }
     }
 }
@@ -86,8 +110,10 @@ pub struct PlanCacheStats {
     pub misses: u64,
     /// Resident entries.
     pub len: usize,
-    /// Configured capacity (0 = caching disabled).
-    pub capacity: usize,
+    /// Accumulated `memory_bytes` of resident entries.
+    pub bytes: usize,
+    /// Configured byte budget (0 = caching disabled).
+    pub capacity_bytes: usize,
 }
 
 /// The serving engine: shared model zoo + a private rounding-seed stream +
@@ -99,6 +125,13 @@ pub struct Engine {
     /// engine so repeated cache misses rebuild identical plans).
     prep_seed: u64,
     plans: Mutex<PlanCache>,
+    /// Which request rows additionally run the exact shadow forward pass
+    /// (rate 0 — the default — short-circuits the whole path).
+    shadow: ShadowSampler,
+    /// Where shadow-sampled logit errors are recorded. The shard pool
+    /// points this at the shard's metrics-owned estimators; standalone
+    /// engines get a private table.
+    fidelity: Arc<FidelityShard>,
 }
 
 /// Result of one request within a batch.
@@ -115,19 +148,32 @@ impl Engine {
     /// engine per shard). `seed` seeds this engine's rounding stream; give
     /// each shard a distinct value.
     pub fn from_zoo(zoo: Arc<Zoo>, seed: u64) -> Engine {
-        Engine::with_plan_cache(zoo, seed, DEFAULT_PLAN_CACHE)
+        Engine::with_plan_cache(zoo, seed, DEFAULT_PLAN_CACHE_BYTES)
     }
 
-    /// Engine with an explicit plan-cache capacity (entries; 0 disables
-    /// caching so every request replans the weight side — the cache-miss
+    /// Engine with an explicit plan-cache byte budget (0 disables caching
+    /// so every request replans the weight side — the cache-miss
     /// baseline).
-    pub fn with_plan_cache(zoo: Arc<Zoo>, seed: u64, plan_cache_cap: usize) -> Engine {
+    pub fn with_plan_cache(zoo: Arc<Zoo>, seed: u64, plan_cache_bytes: usize) -> Engine {
         Engine {
             zoo,
             seed_counter: AtomicU64::new(seed),
             prep_seed: seed,
-            plans: Mutex::new(PlanCache::new(plan_cache_cap)),
+            plans: Mutex::new(PlanCache::new(plan_cache_bytes)),
+            shadow: ShadowSampler::new(0.0),
+            fidelity: Arc::new(FidelityShard::new()),
         }
+    }
+
+    /// Enable shadow sampling: `rate` of request rows (deterministic
+    /// stride) re-run the exact f64 forward pass, and each logit's error
+    /// is recorded into `sink`. The shard pool hands every engine its
+    /// shard's metrics-owned [`FidelityShard`] so the estimates surface in
+    /// `stats` and drive the per-shard auto-precision controller.
+    pub fn with_shadow(mut self, rate: f64, sink: Arc<FidelityShard>) -> Engine {
+        self.shadow = ShadowSampler::new(rate);
+        self.fidelity = sink;
+        self
     }
 
     /// Override the plan-preparation seed (the frozen dither weight draw).
@@ -162,8 +208,26 @@ impl Engine {
             hits: cache.hits,
             misses: cache.misses,
             len: cache.entries.len(),
-            capacity: cache.capacity,
+            bytes: cache.bytes,
+            capacity_bytes: cache.capacity_bytes,
         }
+    }
+
+    /// True when the configuration's plans are cache-resident right now.
+    /// A pure peek: LRU order and hit/miss counters are untouched, so the
+    /// batcher can poll residency without distorting cache behaviour.
+    pub fn plan_resident(&self, key: &PlanKey) -> bool {
+        self.plans.lock().unwrap().entries.iter().any(|(k, _, _)| k == key)
+    }
+
+    /// The fidelity estimators this engine's shadow path records into.
+    pub fn fidelity(&self) -> &Arc<FidelityShard> {
+        &self.fidelity
+    }
+
+    /// Configured shadow-sampling fraction.
+    pub fn shadow_rate(&self) -> f64 {
+        self.shadow.rate()
     }
 
     /// Install an externally prepared model (zoo-level prewarming: build
@@ -244,6 +308,47 @@ impl Engine {
         }
     }
 
+    /// Shadow path: re-run the exact f64 forward pass for the sampled
+    /// rows of this batch and record every logit's signed error
+    /// (quantized − exact) into the fidelity estimators.
+    ///
+    /// The sampler strides over *rows* (each row is one client request),
+    /// so a `--shadow-rate` of 0.1 shadows 10% of requests regardless of
+    /// how they were batched. Runs on the shard worker thread after the
+    /// quantized forward — the estimators' single-writer contract.
+    fn shadow_observe(
+        &self,
+        model: &str,
+        k: u32,
+        mode: RoundingMode,
+        state: &ZooModel,
+        x: &Matrix,
+        quantized: &Matrix,
+    ) {
+        if !self.shadow.enabled() {
+            return;
+        }
+        let sampled: Vec<usize> = (0..x.rows).filter(|_| self.shadow.take()).collect();
+        if sampled.is_empty() {
+            return;
+        }
+        let Some(spec) = ModelSpec::from_name(model) else {
+            return;
+        };
+        let slot = spec.index();
+        let mut sub = Matrix::zeros(sampled.len(), x.cols);
+        for (si, &r) in sampled.iter().enumerate() {
+            sub.row_mut(si).copy_from_slice(x.row(r));
+        }
+        let exact = state.exact_logits(&sub);
+        for (si, &r) in sampled.iter().enumerate() {
+            for j in 0..exact.cols {
+                self.fidelity
+                    .record(slot, mode, k, quantized.get(r, j) - exact.get(si, j));
+            }
+        }
+    }
+
     /// Read logits back into per-request outputs.
     fn read_back(logits_matrix: &Matrix) -> Vec<InferenceOutput> {
         let mut out = Vec::with_capacity(logits_matrix.rows);
@@ -282,6 +387,7 @@ impl Engine {
         let cfg = self.batch_config(k, mode);
         let prepared = self.prepared_for(&cfg.plan_key(model), &state.mlp);
         let logits_matrix = prepared.forward(&state.mlp, &x, &state.ranges, cfg.seed);
+        self.shadow_observe(model, k, mode, state, &x, &logits_matrix);
         Ok(Engine::read_back(&logits_matrix))
     }
 
@@ -364,7 +470,9 @@ mod tests {
     #[test]
     fn plan_cache_lru_evicts_oldest() {
         let zoo = Arc::new(Zoo::load(200, 7));
-        let engine = Engine::with_plan_cache(zoo, 7, 2);
+        // Byte budget sized for exactly two digits_linear deterministic
+        // plans (one frozen 784×10 weight matrix ≈ 62.7 KB each).
+        let engine = Engine::with_plan_cache(zoo, 7, 130_000);
         let px = vec![0.3f64; 784];
         let rows: Vec<&[f64]> = vec![&px];
         for k in [2u32, 3, 4] {
@@ -373,8 +481,9 @@ mod tests {
                 .unwrap();
         }
         let stats = engine.plan_cache_stats();
-        assert_eq!(stats.capacity, 2);
-        assert_eq!(stats.len, 2, "bounded cache must not grow past capacity");
+        assert_eq!(stats.capacity_bytes, 130_000);
+        assert!(stats.bytes <= 130_000, "bytes {} over budget", stats.bytes);
+        assert_eq!(stats.len, 2, "bounded cache must not grow past its byte budget");
         assert_eq!((stats.hits, stats.misses), (0, 3));
         // k=3 and k=4 are resident; re-serving them hits.
         for k in [3u32, 4] {
@@ -395,6 +504,109 @@ mod tests {
             .infer_batch("digits_linear", 4, RoundingMode::Deterministic, &rows)
             .unwrap();
         assert_eq!(engine.plan_cache_stats().hits, 3, "k=4 must still be resident");
+    }
+
+    #[test]
+    fn plan_cache_evicts_by_bytes_not_entries() {
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let engine = Engine::with_plan_cache(zoo, 7, 2_000_000);
+        let px = vec![0.3f64; 784];
+        let rows: Vec<&[f64]> = vec![&px];
+        // Two large fashion_mlp stochastic preparations (~1.75 MB of
+        // per-call tables each) overflow a 2 MB budget at entry count 2.
+        engine
+            .infer_batch("fashion_mlp", 4, RoundingMode::Stochastic, &rows)
+            .unwrap();
+        let one = engine.plan_cache_stats();
+        assert_eq!(one.len, 1);
+        assert!(one.bytes > 1_000_000, "fashion plan should be large, got {}", one.bytes);
+        engine
+            .infer_batch("fashion_mlp", 5, RoundingMode::Stochastic, &rows)
+            .unwrap();
+        let stats = engine.plan_cache_stats();
+        assert_eq!(stats.len, 1, "few large plans must still overflow the byte budget");
+        assert!(stats.bytes <= 2_000_000);
+        // A small digits plan fits alongside the resident large one — the
+        // budget is bytes, not a slot count.
+        engine
+            .infer_batch("digits_linear", 4, RoundingMode::Stochastic, &rows)
+            .unwrap();
+        let stats = engine.plan_cache_stats();
+        assert_eq!(stats.len, 2);
+        assert!(stats.bytes <= 2_000_000);
+        // The resident large plan hits; the byte-evicted one rebuilds.
+        engine
+            .infer_batch("fashion_mlp", 5, RoundingMode::Stochastic, &rows)
+            .unwrap();
+        assert_eq!(engine.plan_cache_stats().hits, 1);
+        engine
+            .infer_batch("fashion_mlp", 4, RoundingMode::Stochastic, &rows)
+            .unwrap();
+        assert_eq!(engine.plan_cache_stats().misses, 4);
+    }
+
+    #[test]
+    fn oversized_plan_is_not_retained() {
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let engine = Engine::with_plan_cache(zoo, 7, 1_000_000);
+        let px = vec![0.3f64; 784];
+        let rows: Vec<&[f64]> = vec![&px];
+        engine
+            .infer_batch("fashion_mlp", 4, RoundingMode::Stochastic, &rows)
+            .unwrap();
+        let stats = engine.plan_cache_stats();
+        assert_eq!(
+            (stats.len, stats.bytes),
+            (0, 0),
+            "a plan larger than the whole budget must not pin memory"
+        );
+        assert_eq!(stats.misses, 1);
+    }
+
+    #[test]
+    fn plan_resident_peeks_without_touching_counters() {
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let engine = Engine::from_zoo(zoo, 7);
+        let px = vec![0.3f64; 784];
+        let rows: Vec<&[f64]> = vec![&px];
+        engine
+            .infer_batch("digits_linear", 4, RoundingMode::Dither, &rows)
+            .unwrap();
+        let key = PlanKey {
+            model: "digits_linear".to_string(),
+            bits: 4,
+            mode: RoundingMode::Dither,
+            variant: Variant::Separate,
+        };
+        let before = engine.plan_cache_stats();
+        assert!(engine.plan_resident(&key));
+        let mut cold = key.clone();
+        cold.bits = 9;
+        assert!(!engine.plan_resident(&cold));
+        assert_eq!(engine.plan_cache_stats(), before, "peek must not count as a hit");
+    }
+
+    #[test]
+    fn shadow_sampling_records_logit_errors() {
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let sink = Arc::new(crate::fidelity::FidelityShard::new());
+        let engine = Engine::from_zoo(zoo, 7).with_shadow(1.0, sink.clone());
+        let ds = crate::data::Dataset::synthesize(crate::data::Task::Digits, 6, 0xE33);
+        let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
+        engine
+            .infer_batch("digits_linear", 8, RoundingMode::Dither, &pixels)
+            .unwrap();
+        let est = sink.estimate(ModelSpec::DigitsLinear.index(), RoundingMode::Dither, 8);
+        assert_eq!(est.samples, 6 * 10, "rate 1.0 shadows every row's logits");
+        assert!(est.mse() > 0.0, "quantized logits should differ from exact");
+        assert!(est.mse() < 1.0, "k=8 dither error should be small, mse {}", est.mse());
+        // The default engine (rate 0) records nothing.
+        let quiet = Engine::new(200, 7);
+        quiet
+            .infer_batch("digits_linear", 8, RoundingMode::Dither, &pixels)
+            .unwrap();
+        assert_eq!(quiet.fidelity().total_samples(), 0);
+        assert_eq!(quiet.shadow_rate(), 0.0);
     }
 
     #[test]

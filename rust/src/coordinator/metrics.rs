@@ -16,7 +16,14 @@
 //!   deterministic vs stochastic vs dither traffic rather than a
 //!   lifetime aggregate that stale load shapes dominate.
 
+//! The registry also owns each shard's fidelity estimators
+//! ([`FidelityShard`]): the engine's shadow path writes into them on the
+//! shard worker thread, and `stats` merges every shard's
+//! `(model, scheme, k)` Welford cells into the `fidelity` block.
+
+use crate::fidelity::{FidelityEstimate, FidelityShard, MAX_K};
 use crate::rounding::RoundingMode;
+use crate::train::ModelSpec;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -129,6 +136,8 @@ pub struct ShardMetrics {
     latency_buckets: [AtomicU64; BUCKETS],
     started: Instant,
     windows: [SchemeWindows; 3],
+    /// Shadow-sampling error estimators, written by this shard's engine.
+    fidelity: Arc<FidelityShard>,
 }
 
 impl std::fmt::Debug for SchemeWindows {
@@ -156,7 +165,15 @@ impl ShardMetrics {
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             started: Instant::now(),
             windows: [SchemeWindows::new(), SchemeWindows::new(), SchemeWindows::new()],
+            fidelity: Arc::new(FidelityShard::new()),
         }
+    }
+
+    /// This shard's fidelity estimators. The shard pool hands the same
+    /// handle to the shard's engine (the writer); `stats` scrapes and the
+    /// auto-precision controller read it.
+    pub fn fidelity(&self) -> &Arc<FidelityShard> {
+        &self.fidelity
     }
 
     /// The current rotating-window epoch (1-based; 0 marks unused slots).
@@ -335,6 +352,32 @@ impl Metrics {
             0.0
         };
         let per_shard: Vec<f64> = self.shards.iter().map(|s| s.requests() as f64).collect();
+        // Merge every shard's (model, scheme, k) Welford cells; only
+        // observed configurations are emitted (the label space is bounded,
+        // but an empty cell says nothing an operator needs).
+        let mut fidelity = Vec::new();
+        for spec in ModelSpec::ALL {
+            for k in 1..=MAX_K {
+                for mode in SCHEME_ORDER {
+                    let mut est = FidelityEstimate::default();
+                    for shard in &self.shards {
+                        est.merge(&shard.fidelity().estimate(spec.index(), mode, k));
+                    }
+                    if est.samples == 0 {
+                        continue;
+                    }
+                    fidelity.push(Json::obj(vec![
+                        ("model", Json::Str(spec.name().to_string())),
+                        ("scheme", Json::Str(mode.name().to_string())),
+                        ("k", Json::Num(f64::from(k))),
+                        ("samples", Json::Num(est.samples as f64)),
+                        ("bias", Json::Num(est.bias)),
+                        ("mse", Json::Num(est.mse())),
+                        ("variance", Json::Num(est.variance())),
+                    ]));
+                }
+            }
+        }
         let recent: Vec<(&str, Json)> = SCHEME_ORDER
             .iter()
             .zip(&m.recent)
@@ -361,6 +404,7 @@ impl Metrics {
             ("p99_us", Json::Num(m.percentile_us(0.99))),
             ("recent_window_s", Json::Num((WINDOW_SECS * WINDOW_SLOTS as u64) as f64)),
             ("recent", Json::obj(recent)),
+            ("fidelity", Json::Arr(fidelity)),
             ("uptime_s", Json::Num(uptime)),
             ("throughput_rps", Json::Num(throughput)),
             ("shards", Json::Num(self.shards.len() as f64)),
@@ -466,12 +510,46 @@ mod tests {
     }
 
     #[test]
+    fn fidelity_block_merges_shards() {
+        let m = Metrics::new(2);
+        for _ in 0..10 {
+            m.shard(0).fidelity().record(0, RoundingMode::Dither, 4, 0.5);
+            m.shard(1).fidelity().record(0, RoundingMode::Dither, 4, -0.5);
+        }
+        m.shard(0).fidelity().record(1, RoundingMode::Stochastic, 2, 2.0);
+        let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
+        let fid = json.get("fidelity").unwrap().as_arr().unwrap();
+        assert_eq!(fid.len(), 2, "only observed (model, scheme, k) cells are emitted");
+        let dither = fid
+            .iter()
+            .find(|e| e.get("scheme").and_then(Json::as_str) == Some("dither"))
+            .expect("dither entry");
+        assert_eq!(dither.get("model").unwrap().as_str(), Some("digits_linear"));
+        assert_eq!(dither.get("k").unwrap().as_f64(), Some(4.0));
+        assert_eq!(dither.get("samples").unwrap().as_f64(), Some(20.0));
+        // +0.5 on one shard, -0.5 on the other: unbiased, MSE 0.25.
+        assert!(dither.get("bias").unwrap().as_f64().unwrap().abs() < 1e-12);
+        assert!((dither.get("mse").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-12);
+        let sto = fid
+            .iter()
+            .find(|e| e.get("scheme").and_then(Json::as_str) == Some("stochastic"))
+            .expect("stochastic entry");
+        assert_eq!(sto.get("model").unwrap().as_str(), Some("fashion_mlp"));
+        assert_eq!(sto.get("samples").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
     fn empty_snapshot_is_valid() {
         let m = Metrics::new(4);
         let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
         assert_eq!(json.get("p95_us").unwrap().as_f64(), Some(0.0));
         assert_eq!(json.get("requests").unwrap().as_f64(), Some(0.0));
         assert_eq!(json.get("shards").unwrap().as_f64(), Some(4.0));
+        assert_eq!(
+            json.get("fidelity").unwrap().as_arr().map(<[Json]>::len),
+            Some(0),
+            "no shadow samples -> empty fidelity block"
+        );
         let recent = json.get("recent").expect("recent section");
         for scheme in ["deterministic", "stochastic", "dither"] {
             assert_eq!(

@@ -23,6 +23,6 @@ pub mod shard;
 pub use batcher::{Batcher, Pending, SubmitError};
 pub use engine::{Engine, InferenceOutput};
 pub use metrics::{Metrics, ShardMetrics};
-pub use protocol::{format_request, parse_message, InferenceRequest, Message};
+pub use protocol::{format_request, format_request_auto, parse_message, InferenceRequest, Message};
 pub use server::{ping, serve, wait_ready, ServerConfig};
 pub use shard::{ShardConfig, ShardPool};

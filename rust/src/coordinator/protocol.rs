@@ -6,9 +6,15 @@
 //!  "pixels": [784 floats in 0..1]}
 //! ```
 //! `"mode"` is accepted as an alias for `"scheme"` (older clients).
-//! Response:
+//! **Auto precision**: `"scheme": "auto"` (or `"k": 0`) plus a positive
+//! `"max_mse"` error budget asks the server to pick the cheapest
+//! `(scheme, k)` whose measured MSE meets the budget (see
+//! [`crate::fidelity::controller`]); any concrete `scheme`/`k` in an auto
+//! request is ignored — the controller chooses both.
+//! Response (every reply echoes the concrete `scheme` and `k` served;
+//! auto-resolved requests additionally carry `"auto": true`):
 //! ```json
-//! {"id": 1, "pred": 7, "scheme": "dither", "logits": [...],
+//! {"id": 1, "pred": 7, "scheme": "dither", "k": 4, "logits": [...],
 //!  "latency_us": 412, "batch": 8, "shard": 2}
 //! ```
 //! Control: `{"cmd": "ping"}`, `{"cmd": "stats"}`, `{"cmd": "shutdown"}`.
@@ -26,10 +32,17 @@ pub struct InferenceRequest {
     pub id: u64,
     /// Model family: `digits_linear` or `fashion_mlp`.
     pub model: String,
-    /// Quantizer bit width.
+    /// Quantizer bit width. For an auto request this is a placeholder
+    /// until the precision controller resolves it pre-batching.
     pub k: u32,
-    /// Rounding scheme.
+    /// Rounding scheme (placeholder for auto requests, see `k`).
     pub mode: RoundingMode,
+    /// True for `"scheme":"auto"` / `"k":0` requests: the server picks
+    /// `(mode, k)` from `max_mse` before the request reaches a batcher,
+    /// and the response is tagged `"auto": true`.
+    pub auto: bool,
+    /// Per-request MSE budget (auto requests only).
+    pub max_mse: Option<f64>,
     /// Flattened image pixels.
     pub pixels: Vec<f64>,
 }
@@ -68,20 +81,39 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
         .and_then(Json::as_str)
         .unwrap_or("digits_linear")
         .to_string();
-    let k = json
-        .get("k")
-        .and_then(Json::as_usize)
-        .ok_or("missing 'k'")? as u32;
-    if !(1..=16).contains(&k) {
-        return Err(format!("k={k} out of range 1..=16"));
-    }
     // "scheme" is the documented field; "mode" remains as an alias.
-    let mode = json
+    let scheme_raw = json
         .get("scheme")
         .or_else(|| json.get("mode"))
-        .and_then(Json::as_str)
-        .and_then(RoundingMode::from_str)
-        .ok_or("missing or invalid 'scheme'")?;
+        .and_then(Json::as_str);
+    let auto_scheme = scheme_raw == Some("auto");
+    let k = match json.get("k").and_then(Json::as_usize) {
+        Some(k) => k as u32,
+        // `"scheme":"auto"` makes `k` optional — the controller picks it.
+        None if auto_scheme => 0,
+        None => return Err("missing 'k'".to_string()),
+    };
+    let auto = auto_scheme || k == 0;
+    let (mode, k, max_mse) = if auto {
+        let budget = json
+            .get("max_mse")
+            .and_then(Json::as_f64)
+            .ok_or("\"scheme\":\"auto\" / \"k\":0 requires a 'max_mse' error budget")?;
+        if !budget.is_finite() || budget <= 0.0 {
+            return Err(format!("max_mse={budget} must be positive and finite"));
+        }
+        // Placeholders: the server's precision controller overwrites both
+        // before the request is batched.
+        (RoundingMode::Dither, 0, Some(budget))
+    } else {
+        if !(1..=16).contains(&k) {
+            return Err(format!("k={k} out of range 1..=16"));
+        }
+        let mode = scheme_raw
+            .and_then(RoundingMode::from_str)
+            .ok_or("missing or invalid 'scheme'")?;
+        (mode, k, None)
+    };
     let pixels = json
         .get("pixels")
         .and_then(Json::as_f64_vec)
@@ -94,6 +126,8 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
         model,
         k,
         mode,
+        auto,
+        max_mse,
         pixels,
     }))
 }
@@ -112,26 +146,48 @@ pub fn format_request(id: u64, model: &str, k: u32, mode: RoundingMode, pixels: 
     .to_string()
 }
 
-/// Successful inference response line.
+/// Build an auto-precision request line: no `(scheme, k)`, just an MSE
+/// budget the server's controller satisfies as cheaply as it can.
+pub fn format_request_auto(id: u64, model: &str, max_mse: f64, pixels: &[f64]) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("model", Json::Str(model.to_string())),
+        ("scheme", Json::Str("auto".to_string())),
+        ("max_mse", Json::Num(max_mse)),
+        ("pixels", Json::nums(pixels)),
+    ])
+    .to_string()
+}
+
+/// Successful inference response line. `mode`/`k` are the concrete
+/// configuration that served the request; `auto` tags replies whose
+/// configuration the precision controller chose.
+#[allow(clippy::too_many_arguments)]
 pub fn format_response(
     id: u64,
     pred: u8,
     mode: RoundingMode,
+    k: u32,
     logits: &[f64],
     latency_us: u64,
     batch: usize,
     shard: usize,
+    auto: bool,
 ) -> String {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("id", Json::Num(id as f64)),
         ("pred", Json::Num(pred as f64)),
         ("scheme", Json::Str(mode.name().to_string())),
+        ("k", Json::Num(f64::from(k))),
         ("logits", Json::nums(logits)),
         ("latency_us", Json::Num(latency_us as f64)),
         ("batch", Json::Num(batch as f64)),
         ("shard", Json::Num(shard as f64)),
-    ])
-    .to_string()
+    ];
+    if auto {
+        pairs.push(("auto", Json::Bool(true)));
+    }
+    Json::obj(pairs).to_string()
 }
 
 /// Error response line.
@@ -259,15 +315,60 @@ mod tests {
 
     #[test]
     fn response_roundtrip() {
-        let line = format_response(7, 3, RoundingMode::Dither, &[0.1, 0.9], 250, 4, 2);
+        let line = format_response(7, 3, RoundingMode::Dither, 4, &[0.1, 0.9], 250, 4, 2, false);
         let json = Json::parse(&line).unwrap();
         assert_eq!(json.get("id").unwrap().as_f64(), Some(7.0));
         assert_eq!(json.get("pred").unwrap().as_f64(), Some(3.0));
         assert_eq!(json.get("scheme").unwrap().as_str(), Some("dither"));
+        assert_eq!(json.get("k").unwrap().as_f64(), Some(4.0));
         assert_eq!(json.get("batch").unwrap().as_f64(), Some(4.0));
         assert_eq!(json.get("shard").unwrap().as_f64(), Some(2.0));
+        assert!(json.get("auto").is_none(), "fixed requests carry no auto tag");
+        let auto = format_response(8, 1, RoundingMode::Deterministic, 2, &[0.5], 10, 1, 0, true);
+        let json = Json::parse(&auto).unwrap();
+        assert_eq!(json.get("auto").unwrap().as_bool(), Some(true));
+        assert_eq!(json.get("k").unwrap().as_f64(), Some(2.0));
         let err = format_error(7, "bad");
         assert!(Json::parse(&err).unwrap().get("error").is_some());
+    }
+
+    #[test]
+    fn auto_requests_parse_and_validate() {
+        let pixels: Vec<f64> = (0..784).map(|i| i as f64 / 784.0).collect();
+        let line = format_request_auto(13, "fashion_mlp", 0.25, &pixels);
+        match parse_message(&line).unwrap() {
+            Message::Infer(r) => {
+                assert!(r.auto);
+                assert_eq!(r.max_mse, Some(0.25));
+                assert_eq!(r.id, 13);
+                assert_eq!(r.model, "fashion_mlp");
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        // "k": 0 with a concrete scheme is the other auto spelling.
+        let k0 = sample_request(0).replace("\"k\": 0,", "\"k\": 0, \"max_mse\": 1.5,");
+        match parse_message(&k0).unwrap() {
+            Message::Infer(r) => {
+                assert!(r.auto);
+                assert_eq!(r.max_mse, Some(1.5));
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        // A fixed request is not auto.
+        match parse_message(&sample_request(4)).unwrap() {
+            Message::Infer(r) => {
+                assert!(!r.auto);
+                assert_eq!(r.max_mse, None);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        // Auto without a budget, or with a junk budget, is rejected.
+        let no_budget = line.replace(",\"max_mse\":0.25", "");
+        assert!(parse_message(&no_budget).is_err());
+        for bad in ["-1", "0", "1e999"] {
+            let junk = line.replace("\"max_mse\":0.25", &format!("\"max_mse\":{bad}"));
+            assert!(parse_message(&junk).is_err(), "max_mse={bad} must be rejected");
+        }
     }
 
     #[test]

@@ -15,7 +15,8 @@ use crate::coordinator::protocol::{
     format_error, format_overloaded, parse_message, Message,
 };
 use crate::coordinator::shard::{ShardConfig, ShardPool};
-use crate::train::Zoo;
+use crate::fidelity;
+use crate::train::{ModelSpec, Zoo};
 use crate::util::error::{Context, Result};
 use crate::util::threadpool::WorkerPool;
 use std::io::{BufRead, BufReader, Write};
@@ -45,6 +46,12 @@ pub struct ServerConfig {
     /// Bit widths prewarmed into every shard's plan cache at startup
     /// (all schemes, every model). Empty disables prewarming.
     pub prewarm_bits: Vec<u32>,
+    /// Fraction of request rows shadow-checked against the exact f64
+    /// forward pass (feeds `stats.fidelity` and the auto controller;
+    /// 0 disables).
+    pub shadow_rate: f64,
+    /// Per-shard plan-cache byte budget in MiB (0 disables plan caching).
+    pub plan_cache_mb: usize,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +65,8 @@ impl Default for ServerConfig {
             train_n: 2000,
             seed: 7,
             prewarm_bits: vec![2, 4, 8],
+            shadow_rate: 0.02,
+            plan_cache_mb: 64,
         }
     }
 }
@@ -78,6 +87,8 @@ impl ServerConfig {
             queue_cap: self.queue_cap,
             seed: self.seed,
             prewarm_bits: self.prewarm_bits.clone(),
+            shadow_rate: self.shadow_rate,
+            plan_cache_bytes: self.plan_cache_mb << 20,
         }
     }
 }
@@ -272,7 +283,29 @@ fn handle_connection(
                 pool.close();
                 stop = true;
             }
-            Ok(Message::Infer(req)) => {
+            Ok(Message::Infer(mut req)) => {
+                // Auto precision: resolve (scheme, k) from this shard's
+                // measured fidelity state before the request reaches the
+                // batcher, so it batches with fixed-configuration traffic
+                // under a concrete key. The choice is deterministic given
+                // the shard's estimator state.
+                if req.auto {
+                    let Some(spec) = ModelSpec::from_name(&req.model) else {
+                        shard_metrics.record_error();
+                        writeln!(
+                            writer,
+                            "{}",
+                            format_error(req.id, &format!("unknown model family {:?}", req.model))
+                        )?;
+                        writer.flush()?;
+                        line.clear();
+                        continue;
+                    };
+                    let budget = req.max_mse.unwrap_or(f64::INFINITY);
+                    let choice = fidelity::choose(shard_metrics.fidelity(), spec.index(), budget);
+                    req.mode = choice.mode;
+                    req.k = choice.k;
+                }
                 let id = req.id;
                 let (tx, rx) = channel();
                 let submitted = pool.submit(

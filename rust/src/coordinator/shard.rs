@@ -9,10 +9,11 @@
 //! Routing is by connection, not by request, so one client's pipelined
 //! requests stay ordered on a single shard.
 
-use crate::coordinator::batcher::{worker_loop, Batcher, Pending, SubmitError};
+use crate::coordinator::batcher::{worker_loop, BatchKey, Batcher, Pending, SubmitError};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
 use crate::linalg::Variant;
+use crate::nn::PlanKey;
 use crate::rounding::RoundingMode;
 use crate::train::Zoo;
 use crate::util::rng::counter_hash;
@@ -37,6 +38,11 @@ pub struct ShardConfig {
     /// every model) into each shard's plan cache before traffic is
     /// accepted. Empty disables prewarming.
     pub prewarm_bits: Vec<u32>,
+    /// Fraction of request rows shadow-checked against the exact f64
+    /// forward pass per shard (0 disables shadow sampling).
+    pub shadow_rate: f64,
+    /// Per-shard plan-cache byte budget (0 disables plan caching).
+    pub plan_cache_bytes: usize,
 }
 
 /// K running serving shards plus their routing table.
@@ -63,15 +69,34 @@ impl ShardPool {
         let mut batchers = Vec::with_capacity(shards);
         for i in 0..shards {
             let batcher = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait, cfg.queue_cap));
+            let shard_metrics = metrics.shard(i);
             // Distinct per-shard rounding streams, but one shared prep
             // seed (the zoo prewarm seed): a plan evicted and rebuilt on
-            // any shard reproduces the prewarmed plan bit for bit.
+            // any shard reproduces the prewarmed plan bit for bit. The
+            // engine's shadow path writes into the shard's metrics-owned
+            // fidelity estimators, so `stats` and the auto-precision
+            // controller see what this shard measured.
             let engine_seed = cfg.seed ^ ((i as u64 + 1) << 32);
-            let engine = Engine::from_zoo(zoo.clone(), engine_seed).with_prep_seed(cfg.seed);
+            let engine = Arc::new(
+                Engine::with_plan_cache(zoo.clone(), engine_seed, cfg.plan_cache_bytes)
+                    .with_prep_seed(cfg.seed)
+                    .with_shadow(cfg.shadow_rate, shard_metrics.fidelity().clone()),
+            );
             for (key, plans) in &prewarmed {
                 engine.install_prepared(key.clone(), plans.clone());
             }
-            let shard_metrics = metrics.shard(i);
+            // Plan-aware batching: the batcher prefers keys whose plans
+            // are resident in this shard's engine (Separate is the
+            // serving placement, matching `Engine::infer_batch`).
+            let res_engine = engine.clone();
+            batcher.set_residency(move |key: &BatchKey| {
+                res_engine.plan_resident(&PlanKey {
+                    model: key.model.clone(),
+                    bits: key.k,
+                    mode: key.mode,
+                    variant: Variant::Separate,
+                })
+            });
             let b = batcher.clone();
             workers.spawn(format!("dither-shard-{i}"), move || {
                 // Stop the batcher even if the worker panics: routed
@@ -154,6 +179,8 @@ mod tests {
             queue_cap: 64,
             seed: 7,
             prewarm_bits: vec![4],
+            shadow_rate: 0.5,
+            plan_cache_bytes: crate::coordinator::engine::DEFAULT_PLAN_CACHE_BYTES,
         };
         let metrics = Metrics::new(shards);
         let zoo = Arc::new(Zoo::load(200, 7));
@@ -170,6 +197,8 @@ mod tests {
                     model: "digits_linear".to_string(),
                     k: 4,
                     mode: RoundingMode::Dither,
+                    auto: false,
+                    max_mse: None,
                     pixels: vec![0.3; 784],
                 },
                 respond_to: tx,
@@ -216,5 +245,9 @@ mod tests {
         }
         assert_eq!(pool.join(), 0);
         assert!(metrics.total_requests() >= 6);
+        // shadow_rate 0.5: whichever shards served ≥ 2 requests recorded
+        // logit errors into their metrics-owned fidelity estimators.
+        let shadowed: u64 = (0..2).map(|i| metrics.shard(i).fidelity().total_samples()).sum();
+        assert!(shadowed > 0, "shadow sampling must record logit errors");
     }
 }

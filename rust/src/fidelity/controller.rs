@@ -1,0 +1,202 @@
+//! Adaptive precision controller: turn a per-request error budget into a
+//! concrete `(scheme, k)` serving configuration.
+//!
+//! A `"scheme":"auto"` request carries a `max_mse` budget instead of a
+//! hand-picked configuration. The controller walks the candidate grid in
+//! **cost order** (lowest bit width first; at equal width the cheaper
+//! rounding machinery first — deterministic needs no randomness, dither
+//! one table lookup per element, stochastic a hash per element) and picks
+//! the first candidate whose *predicted* MSE meets the budget.
+//!
+//! The prediction for a candidate is the shard's measured shadow-sampling
+//! estimate once it has accrued [`MIN_SAMPLES`] logit errors, and the
+//! paper-shape prior before that: deterministic and dither rounding have
+//! `Θ(1/N²)` MSE and stochastic rounding `Ω(1/N)` in the quantizer
+//! resolution `N = 2^k − 1` (§II-C/§VII — the prior only has to rank
+//! candidates sanely until real measurements take over; El Arar 2022 and
+//! Xia 2020 both show the true constants are workload-dependent, which is
+//! exactly what the online estimator captures).
+//!
+//! The choice is a pure function of `(budget, estimator state)` — no
+//! randomness, no clocks — so replaying traffic against the same
+//! estimator state reproduces every auto decision.
+
+use crate::fidelity::estimator::{FidelityShard, MAX_K};
+use crate::rounding::RoundingMode;
+
+/// Shadow samples a `(model, scheme, k)` cell needs before its measured
+/// MSE replaces the prior (≈ a few dozen shadowed requests at 10 logits
+/// each — enough to damp single-image noise without starving cold
+/// configurations of measurements for long).
+pub const MIN_SAMPLES: u64 = 256;
+
+/// Contraction length assumed by the prior (the models' 784-wide input
+/// layer dominates every forward pass).
+const PRIOR_CONTRACTION: f64 = 784.0;
+
+/// Candidate schemes in ascending serving-cost order at a fixed `k`.
+const COST_ORDER: [RoundingMode; 3] = [
+    RoundingMode::Deterministic,
+    RoundingMode::Dither,
+    RoundingMode::Stochastic,
+];
+
+/// The controller's verdict for one auto request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoChoice {
+    /// Chosen rounding scheme.
+    pub mode: RoundingMode,
+    /// Chosen bit width.
+    pub k: u32,
+    /// The MSE prediction the choice was based on.
+    pub predicted_mse: f64,
+    /// True when the prediction came from shadow measurements rather than
+    /// the prior.
+    pub measured: bool,
+}
+
+/// Paper-shape prior MSE of a `(scheme, k)` candidate: per-logit error of
+/// a `q`-long contraction whose factors are rounded on a step of
+/// `2/(2^k−1)` — `∝ step²` for the deterministic/dither schemes, `∝ step`
+/// for stochastic rounding.
+pub fn prior_mse(mode: RoundingMode, k: u32) -> f64 {
+    let levels = ((1u64 << k.min(MAX_K)) - 1) as f64;
+    let step = 2.0 / levels;
+    match mode {
+        RoundingMode::Stochastic => PRIOR_CONTRACTION * step / 6.0,
+        _ => PRIOR_CONTRACTION * step * step / 6.0,
+    }
+}
+
+/// Predicted MSE for one candidate: measured estimate once warm, prior
+/// until then. Returns `(mse, measured)`.
+pub fn predicted_mse(
+    shard: &FidelityShard,
+    model: usize,
+    mode: RoundingMode,
+    k: u32,
+) -> (f64, bool) {
+    let est = shard.estimate(model, mode, k);
+    if est.samples >= MIN_SAMPLES {
+        (est.mse(), true)
+    } else {
+        (prior_mse(mode, k), false)
+    }
+}
+
+/// Pick the cheapest `(scheme, k)` whose predicted MSE meets `max_mse`.
+///
+/// When no candidate meets the budget (it is tighter than anything the
+/// grid can deliver, or non-finite), the most accurate candidate wins —
+/// ties broken toward the cheaper one, so the result is still
+/// deterministic given the estimator state.
+pub fn choose(shard: &FidelityShard, model: usize, max_mse: f64) -> AutoChoice {
+    let mut best: Option<AutoChoice> = None;
+    for k in 1..=MAX_K {
+        for &mode in &COST_ORDER {
+            let (mse, measured) = predicted_mse(shard, model, mode, k);
+            let candidate = AutoChoice {
+                mode,
+                k,
+                predicted_mse: mse,
+                measured,
+            };
+            if mse <= max_mse {
+                return candidate;
+            }
+            let better = match &best {
+                None => true,
+                Some(b) => mse < b.predicted_mse,
+            };
+            if better {
+                best = Some(candidate);
+            }
+        }
+    }
+    best.expect("the candidate grid is never empty")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_has_the_paper_shape() {
+        // Deterministic/dither priors fall as 1/N², stochastic as 1/N.
+        for k in 1..MAX_K {
+            for mode in RoundingMode::ALL {
+                assert!(prior_mse(mode, k + 1) < prior_mse(mode, k), "{mode:?} k={k}");
+            }
+        }
+        let det_ratio = prior_mse(RoundingMode::Deterministic, 4)
+            / prior_mse(RoundingMode::Deterministic, 5);
+        let sto_ratio =
+            prior_mse(RoundingMode::Stochastic, 4) / prior_mse(RoundingMode::Stochastic, 5);
+        assert!(det_ratio > sto_ratio * 1.5, "det {det_ratio} vs sto {sto_ratio}");
+        // At matched k the unbiased-but-slow stochastic prior is worst.
+        assert!(prior_mse(RoundingMode::Stochastic, 6) > prior_mse(RoundingMode::Dither, 6));
+    }
+
+    #[test]
+    fn loose_budget_picks_the_cheapest_candidate() {
+        let shard = FidelityShard::new();
+        let c = choose(&shard, 0, 1e12);
+        assert_eq!((c.mode, c.k), (RoundingMode::Deterministic, 1));
+        assert!(!c.measured);
+    }
+
+    #[test]
+    fn tighter_budgets_buy_more_bits() {
+        let shard = FidelityShard::new();
+        let loose = choose(&shard, 0, 10.0);
+        let tight = choose(&shard, 0, 1e-4);
+        assert!(tight.k > loose.k, "tight {tight:?} vs loose {loose:?}");
+        assert!(tight.predicted_mse <= 1e-4);
+        // An impossible budget falls back to the most accurate candidate.
+        let impossible = choose(&shard, 0, 1e-12);
+        assert_eq!(impossible.k, MAX_K);
+        assert!(impossible.predicted_mse > 1e-12);
+    }
+
+    #[test]
+    fn measured_estimates_override_the_prior() {
+        // The fallback-prior → measured-estimate handoff, locked: on a
+        // cold estimator the cheapest prior-feasible candidate wins; once
+        // shadow samples show that candidate blowing its budget while a
+        // costlier one meets it, the choice must move.
+        let shard = FidelityShard::new();
+        let budget = prior_mse(RoundingMode::Deterministic, 1) * 1.01;
+        let cold = choose(&shard, 0, budget);
+        assert_eq!((cold.mode, cold.k), (RoundingMode::Deterministic, 1));
+        assert!(!cold.measured, "cold choice must come from the prior");
+        // Measure deterministic k=1 as terrible and dither k=1 as tiny.
+        for i in 0..MIN_SAMPLES {
+            shard.record(0, RoundingMode::Deterministic, 1, 1000.0 + (i % 3) as f64);
+            let small = if i % 2 == 0 { 0.01 } else { -0.01 };
+            shard.record(0, RoundingMode::Dither, 1, small);
+        }
+        let warm = choose(&shard, 0, budget);
+        assert_eq!((warm.mode, warm.k), (RoundingMode::Dither, 1), "{warm:?}");
+        assert!(warm.measured, "warm choice must come from measurements");
+        // Deterministic given the estimator state: same state, same choice.
+        assert_eq!(warm, choose(&shard, 0, budget));
+    }
+
+    #[test]
+    fn one_sample_short_of_warm_still_uses_the_prior() {
+        let shard = FidelityShard::new();
+        for _ in 0..MIN_SAMPLES - 1 {
+            shard.record(0, RoundingMode::Deterministic, 1, 1e6);
+        }
+        let budget = prior_mse(RoundingMode::Deterministic, 1) * 1.01;
+        let c = choose(&shard, 0, budget);
+        assert_eq!((c.mode, c.k, c.measured), (RoundingMode::Deterministic, 1, false));
+        shard.record(0, RoundingMode::Deterministic, 1, 1e6);
+        let c = choose(&shard, 0, budget);
+        assert_ne!(
+            (c.mode, c.k),
+            (RoundingMode::Deterministic, 1),
+            "crossing MIN_SAMPLES must flip the cell to measured"
+        );
+    }
+}

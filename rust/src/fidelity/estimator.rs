@@ -1,0 +1,267 @@
+//! Streaming per-configuration error estimators: Welford cells over the
+//! shadow-sampled logit errors, lock-free within a shard.
+//!
+//! Each serving shard owns one [`FidelityShard`]: a flat, fixed-size table
+//! of Welford accumulators keyed by `(model, scheme, k)`. The label space
+//! is bounded up front ([`MODEL_SLOTS`] × 3 schemes × [`MAX_K`] bit
+//! widths), so recording is a handful of relaxed atomic loads/stores with
+//! no allocation and no lock — the same hot-path discipline as the
+//! latency windows in `coordinator::metrics`.
+//!
+//! Concurrency contract: each cell has **one writer** (the shard's batch
+//! worker, which is the only thread that runs the engine's shadow path)
+//! and any number of readers (`stats` scrapes). The writer updates
+//! mean/m2 first and publishes the new count last, so readers see either
+//! the previous consistent triple or a slightly torn one — acceptable for
+//! approximate telemetry, exactly like the rotating latency windows. If
+//! multiple writers ever race (standalone engines driven from several
+//! threads), updates are lost but never corrupted: every field is a whole
+//! atomic word.
+
+use crate::rounding::RoundingMode;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of model-family slots per shard (the zoo serves 2; the rest is
+/// headroom so adding a family never needs a layout change).
+pub const MODEL_SLOTS: usize = 4;
+
+/// Highest tracked quantizer bit width (matches the servable `k` range).
+pub const MAX_K: u32 = 16;
+
+/// Number of rounding schemes.
+const SCHEMES: usize = 3;
+
+/// Stable scheme slot (deterministic, stochastic, dither).
+fn scheme_slot(mode: RoundingMode) -> usize {
+    match mode {
+        RoundingMode::Deterministic => 0,
+        RoundingMode::Stochastic => 1,
+        RoundingMode::Dither => 2,
+    }
+}
+
+/// One Welford accumulator: count, running mean, and the sum of squared
+/// deviations (`m2`), each stored as a whole atomic word (f64 bits).
+#[derive(Debug)]
+struct Cell {
+    n: AtomicU64,
+    mean: AtomicU64,
+    m2: AtomicU64,
+}
+
+impl Cell {
+    fn new() -> Cell {
+        Cell {
+            n: AtomicU64::new(0),
+            mean: AtomicU64::new(0),
+            m2: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A snapshot of one `(model, scheme, k)` cell, mergeable across shards.
+///
+/// `bias` is the mean signed logit error (quantized − exact), `m2` the
+/// Welford sum of squared deviations; [`FidelityEstimate::mse`] and
+/// [`FidelityEstimate::variance`] derive the paper's quantities.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FidelityEstimate {
+    /// Number of logit errors observed.
+    pub samples: u64,
+    /// Mean signed error — the bias the paper proves away for the
+    /// unbiased schemes.
+    pub bias: f64,
+    /// Welford sum of squared deviations from the mean.
+    pub m2: f64,
+}
+
+impl FidelityEstimate {
+    /// Population variance of the error (0 for an empty cell).
+    pub fn variance(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.m2 / self.samples as f64
+        }
+    }
+
+    /// Mean squared error: `bias² + variance` (0 for an empty cell).
+    pub fn mse(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.bias * self.bias + self.variance()
+        }
+    }
+
+    /// Merge another estimate (the standard parallel Welford reduction —
+    /// this is how per-shard cells combine on a `stats` scrape).
+    pub fn merge(&mut self, other: &FidelityEstimate) {
+        if other.samples == 0 {
+            return;
+        }
+        if self.samples == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.samples as f64;
+        let n2 = other.samples as f64;
+        let delta = other.bias - self.bias;
+        let n = n1 + n2;
+        self.bias += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.samples += other.samples;
+    }
+}
+
+/// One shard's fidelity table: a Welford cell per `(model, scheme, k)`.
+#[derive(Debug)]
+pub struct FidelityShard {
+    cells: Vec<Cell>,
+}
+
+impl Default for FidelityShard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FidelityShard {
+    /// Fresh zeroed table covering the full bounded label space.
+    pub fn new() -> FidelityShard {
+        FidelityShard {
+            cells: (0..MODEL_SLOTS * SCHEMES * MAX_K as usize)
+                .map(|_| Cell::new())
+                .collect(),
+        }
+    }
+
+    /// Flat cell index; `None` when the label is outside the bounded
+    /// space (unknown model slot or unservable bit width).
+    fn index(model: usize, mode: RoundingMode, k: u32) -> Option<usize> {
+        if model >= MODEL_SLOTS || !(1..=MAX_K).contains(&k) {
+            return None;
+        }
+        Some(
+            model * SCHEMES * MAX_K as usize
+                + scheme_slot(mode) * MAX_K as usize
+                + (k - 1) as usize,
+        )
+    }
+
+    /// Record one shadow-sampled logit error (quantized − exact) for the
+    /// configuration. Out-of-space labels are dropped silently (the label
+    /// space is bounded by construction; this is a belt-and-braces guard).
+    pub fn record(&self, model: usize, mode: RoundingMode, k: u32, err: f64) {
+        let Some(i) = FidelityShard::index(model, mode, k) else {
+            return;
+        };
+        let cell = &self.cells[i];
+        let n = cell.n.load(Ordering::Relaxed);
+        let mean = f64::from_bits(cell.mean.load(Ordering::Relaxed));
+        let m2 = f64::from_bits(cell.m2.load(Ordering::Relaxed));
+        let n1 = n + 1;
+        let delta = err - mean;
+        let new_mean = mean + delta / n1 as f64;
+        let new_m2 = m2 + delta * (err - new_mean);
+        // Mean/m2 first, count last: a reader that sees the new count also
+        // sees moments at least as new (single-writer publication order).
+        cell.mean.store(new_mean.to_bits(), Ordering::Relaxed);
+        cell.m2.store(new_m2.to_bits(), Ordering::Relaxed);
+        cell.n.store(n1, Ordering::Release);
+    }
+
+    /// Snapshot one cell (approximate under concurrent writes; see the
+    /// module docs).
+    pub fn estimate(&self, model: usize, mode: RoundingMode, k: u32) -> FidelityEstimate {
+        let Some(i) = FidelityShard::index(model, mode, k) else {
+            return FidelityEstimate::default();
+        };
+        let cell = &self.cells[i];
+        let n = cell.n.load(Ordering::Acquire);
+        FidelityEstimate {
+            samples: n,
+            bias: f64::from_bits(cell.mean.load(Ordering::Relaxed)),
+            m2: f64::from_bits(cell.m2.load(Ordering::Relaxed)),
+        }
+    }
+
+    /// Total logit errors recorded across every cell.
+    pub fn total_samples(&self) -> u64 {
+        self.cells.iter().map(|c| c.n.load(Ordering::Relaxed)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_cell_matches_direct_moments() {
+        let shard = FidelityShard::new();
+        let errs = [0.5, -0.25, 1.0, 0.0, -0.5, 0.75];
+        for &e in &errs {
+            shard.record(0, RoundingMode::Dither, 4, e);
+        }
+        let est = shard.estimate(0, RoundingMode::Dither, 4);
+        assert_eq!(est.samples, errs.len() as u64);
+        let mean: f64 = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!((est.bias - mean).abs() < 1e-12);
+        let mse: f64 = errs.iter().map(|e| e * e).sum::<f64>() / errs.len() as f64;
+        assert!((est.mse() - mse).abs() < 1e-12, "mse {} vs {}", est.mse(), mse);
+        assert!((est.variance() - (mse - mean * mean)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cells_are_keyed_independently() {
+        let shard = FidelityShard::new();
+        shard.record(0, RoundingMode::Dither, 4, 1.0);
+        shard.record(0, RoundingMode::Dither, 5, -1.0);
+        shard.record(0, RoundingMode::Stochastic, 4, 3.0);
+        shard.record(1, RoundingMode::Dither, 4, 5.0);
+        assert_eq!(shard.estimate(0, RoundingMode::Dither, 4).bias, 1.0);
+        assert_eq!(shard.estimate(0, RoundingMode::Dither, 5).bias, -1.0);
+        assert_eq!(shard.estimate(0, RoundingMode::Stochastic, 4).bias, 3.0);
+        assert_eq!(shard.estimate(1, RoundingMode::Dither, 4).bias, 5.0);
+        assert_eq!(shard.total_samples(), 4);
+    }
+
+    #[test]
+    fn out_of_space_labels_are_dropped() {
+        let shard = FidelityShard::new();
+        shard.record(MODEL_SLOTS, RoundingMode::Dither, 4, 1.0);
+        shard.record(0, RoundingMode::Dither, 0, 1.0);
+        shard.record(0, RoundingMode::Dither, MAX_K + 1, 1.0);
+        assert_eq!(shard.total_samples(), 0);
+        assert_eq!(
+            shard.estimate(9, RoundingMode::Dither, 99),
+            FidelityEstimate::default()
+        );
+    }
+
+    #[test]
+    fn merge_equals_sequential_accumulation() {
+        let all = FidelityShard::new();
+        let a = FidelityShard::new();
+        let b = FidelityShard::new();
+        let errs: Vec<f64> = (0..100).map(|i| (i as f64 * 0.77).sin()).collect();
+        for (i, &e) in errs.iter().enumerate() {
+            all.record(0, RoundingMode::Stochastic, 2, e);
+            let half = if i < 37 { &a } else { &b };
+            half.record(0, RoundingMode::Stochastic, 2, e);
+        }
+        let mut merged = a.estimate(0, RoundingMode::Stochastic, 2);
+        merged.merge(&b.estimate(0, RoundingMode::Stochastic, 2));
+        let direct = all.estimate(0, RoundingMode::Stochastic, 2);
+        assert_eq!(merged.samples, direct.samples);
+        assert!((merged.bias - direct.bias).abs() < 1e-12);
+        assert!((merged.mse() - direct.mse()).abs() < 1e-12);
+        // Merging an empty estimate is the identity in both directions.
+        let mut lhs = direct.clone();
+        lhs.merge(&FidelityEstimate::default());
+        assert_eq!(lhs, direct);
+        let mut empty = FidelityEstimate::default();
+        empty.merge(&direct);
+        assert_eq!(empty, direct);
+    }
+}

@@ -1,0 +1,28 @@
+//! Online fidelity telemetry and adaptive precision control.
+//!
+//! The paper's core claim is statistical — deterministic rounding is
+//! biased with `O(1/N²)` MSE, stochastic rounding is unbiased with
+//! `Ω(1/N)` MSE, dither rounding gets both (unbiased *and* `Θ(1/N²)`) —
+//! but a serving stack that merely executes the three schemes never shows
+//! an operator any of it. This subsystem measures the claims in
+//! production and closes the loop:
+//!
+//! * [`sampler`] — a deterministic-stride **shadow sampler** decides which
+//!   requests also run the exact f64 forward pass next to the quantized
+//!   one (`--shadow-rate`);
+//! * [`estimator`] — per-shard, lock-free **streaming bias/variance/MSE
+//!   estimators** (Welford cells) keyed by `(model, scheme, k)`, fed with
+//!   per-logit errors by the engine's shadow path and merged across
+//!   shards on every `stats` scrape;
+//! * [`controller`] — the **adaptive precision controller** behind the
+//!   `"scheme":"auto"` request mode: given a `max_mse` budget it picks
+//!   the cheapest `(scheme, k)` whose measured MSE meets it, falling back
+//!   to a paper-shape prior until enough shadow samples accrue.
+
+pub mod controller;
+pub mod estimator;
+pub mod sampler;
+
+pub use controller::{choose, predicted_mse, prior_mse, AutoChoice, MIN_SAMPLES};
+pub use estimator::{FidelityEstimate, FidelityShard, MAX_K, MODEL_SLOTS};
+pub use sampler::ShadowSampler;

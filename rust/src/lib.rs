@@ -19,6 +19,9 @@
 //! * [`coordinator`] — the sharded batching inference server: K worker
 //!   shards with bounded queues, hash-routed connections, per-request
 //!   rounding-scheme selection and lock-free per-shard metrics.
+//! * [`fidelity`] — online fidelity telemetry: shadow sampling against the
+//!   exact f64 forward pass, streaming bias/MSE estimators per
+//!   `(model, scheme, k)`, and the `"scheme":"auto"` precision controller.
 //! * [`runtime`] — execution-environment descriptor + the AOT artifact
 //!   manifest emitted by the Python pipeline.
 //! * [`experiments`] — regenerators for every figure and table in the paper.
@@ -45,6 +48,7 @@ pub mod bitstream;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod fidelity;
 pub mod linalg;
 pub mod nn;
 pub mod rounding;

@@ -59,11 +59,17 @@ SERVE FLAGS:
     --train-n N       model-zoo training-set size (2000)
     --prewarm-bits L  comma-separated k list whose weight plans are built
                       before traffic (2,4,8; 'none' disables)
+    --shadow-rate F   fraction of requests re-run through the exact f64
+                      forward pass to feed stats.fidelity (0.02; 0 = off)
+    --plan-cache-mb N per-shard plan-cache byte budget in MiB (64; 0
+                      disables plan caching)
 
 INFER FLAGS:
     --model NAME      digits_linear | fashion_mlp (digits_linear)
     --k N             bit width (4)
-    --scheme M        deterministic | stochastic | dither (dither)
+    --scheme M        deterministic | stochastic | dither | auto (dither)
+    --max-mse E       error budget for --scheme auto (1.0): the cheapest
+                      (scheme, k) whose prior MSE meets E is chosen
 ";
 
 fn main() -> Result<()> {
@@ -167,6 +173,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         train_n: args.parse_or("train-n", 2000usize),
         seed: args.parse_or("seed", 7u64),
         prewarm_bits,
+        shadow_rate: args.parse_or("shadow-rate", 0.02f64),
+        plan_cache_mb: args.parse_or("plan-cache-mb", 64usize),
     };
     serve(&cfg)
 }
@@ -174,10 +182,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_infer(args: &Args) -> Result<()> {
     use dither::coordinator::Engine;
     let model = args.str_or("model", "digits_linear");
-    let k = args.parse_or("k", 4u32);
     let mode_str = args.str_or("scheme", &args.str_or("mode", "dither"));
-    let mode = RoundingMode::from_str(&mode_str)
-        .ok_or_else(|| err!("invalid --scheme {mode_str:?}"))?;
+    let (k, mode) = if mode_str == "auto" {
+        use dither::fidelity::{choose, FidelityShard};
+        // One-shot auto precision: a fresh estimator has no measurements,
+        // so the choice comes from the paper-shape prior (the serving
+        // path hands the controller live shadow estimates instead).
+        let budget = args.parse_or("max-mse", 1.0f64);
+        let spec = ModelSpec::from_name(&model)
+            .ok_or_else(|| err!("unknown model family {model:?}"))?;
+        let choice = choose(&FidelityShard::new(), spec.index(), budget);
+        println!(
+            "auto: chose scheme={} k={} for max_mse={budget} (predicted mse {:.3e}, {})",
+            choice.mode.name(),
+            choice.k,
+            choice.predicted_mse,
+            if choice.measured { "measured" } else { "prior" }
+        );
+        (choice.k, choice.mode)
+    } else {
+        let mode = RoundingMode::from_str(&mode_str)
+            .ok_or_else(|| err!("invalid --scheme {mode_str:?}"))?;
+        (args.parse_or("k", 4u32), mode)
+    };
     let seed = args.parse_or("seed", 7u64);
     let engine = Engine::new(args.parse_or("train-n", 2000usize), seed);
     // One synthetic test image per class, report predictions.

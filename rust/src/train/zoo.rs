@@ -26,6 +26,15 @@ impl ModelSpec {
     /// Both evaluation models, in serving order.
     pub const ALL: [ModelSpec; 2] = [ModelSpec::DigitsLinear, ModelSpec::FashionMlp];
 
+    /// Stable position of this family in [`ModelSpec::ALL`] — the model
+    /// slot used by the fidelity estimators' bounded label space.
+    pub fn index(&self) -> usize {
+        ModelSpec::ALL
+            .iter()
+            .position(|s| s == self)
+            .expect("every spec appears in ALL")
+    }
+
     /// Wire/CLI name of the model family.
     pub fn name(&self) -> &'static str {
         match self {
@@ -144,6 +153,16 @@ pub struct ZooModel {
     pub float_accuracy: f64,
 }
 
+impl ZooModel {
+    /// Exact (full f64) logits for a marshalled input batch — the shadow
+    /// reference the fidelity estimators compare quantized logits against.
+    /// This is the same float forward pass the activation ranges were
+    /// calibrated on, so quantized − exact is purely the rounding error.
+    pub fn exact_logits(&self, x: &crate::linalg::Matrix) -> crate::linalg::Matrix {
+        self.mlp.forward(x)
+    }
+}
+
 /// Both evaluation models, trained/loaded once and shared (behind an
 /// `Arc`) by every serving shard.
 pub struct Zoo {
@@ -170,6 +189,14 @@ impl Zoo {
                 }
             })
             .collect();
+        Zoo { models }
+    }
+
+    /// Zoo over explicitly constructed models (custom weights served under
+    /// a known family name — controlled-model tests, A/B deployments of
+    /// retrained weights). Later entries for the same spec shadow earlier
+    /// ones in [`Zoo::get`].
+    pub fn from_models(models: Vec<ZooModel>) -> Zoo {
         Zoo { models }
     }
 
@@ -267,8 +294,9 @@ mod tests {
 
     #[test]
     fn names_roundtrip() {
-        for spec in ModelSpec::ALL {
+        for (i, spec) in ModelSpec::ALL.into_iter().enumerate() {
             assert_eq!(ModelSpec::from_name(spec.name()), Some(spec));
+            assert_eq!(spec.index(), i);
         }
         assert_eq!(ModelSpec::from_name("nope"), None);
     }

@@ -3,7 +3,9 @@
 //! run (the zoo trains small models on first use and caches the weights
 //! under `artifacts/weights/`).
 
-use dither::coordinator::{format_request, serve, wait_ready, Engine, ServerConfig};
+use dither::coordinator::{
+    format_request, format_request_auto, serve, wait_ready, Engine, ServerConfig,
+};
 use dither::data::{Dataset, Task};
 use dither::rounding::RoundingMode;
 use dither::train::Zoo;
@@ -96,6 +98,8 @@ fn tcp_server_end_to_end_sharded() {
         train_n: TRAIN_N,
         seed: 7,
         prewarm_bits: vec![4],
+        shadow_rate: 1.0,
+        plan_cache_mb: 64,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 
@@ -138,6 +142,24 @@ fn tcp_server_end_to_end_sharded() {
             assert_eq!(got, want[0].logits, "deterministic logits must be exact");
         }
     }
+
+    // Auto precision: the server resolves (scheme, k) from the error
+    // budget and echoes its concrete choice tagged "auto". On a cold
+    // estimator the controller works off the paper-shape prior, whose
+    // cheapest candidate under a huge budget is deterministic k=1.
+    writeln!(
+        writer,
+        "{}",
+        format_request_auto(30, "digits_linear", 1e9, ds.images.row(0))
+    )
+    .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).expect("auto response json");
+    assert!(resp.get("error").is_none(), "{line}");
+    assert_eq!(resp.get("auto").unwrap().as_bool(), Some(true), "{line}");
+    assert_eq!(resp.get("scheme").unwrap().as_str(), Some("deterministic"), "{line}");
+    assert_eq!(resp.get("k").unwrap().as_f64(), Some(1.0), "{line}");
 
     // The legacy "mode" spelling still parses (hand-built on purpose —
     // format_request emits the current wire format).
@@ -193,6 +215,21 @@ fn tcp_server_end_to_end_sharded() {
         4,
         "{line}"
     );
+    // shadow_rate 1.0: every served request fed the fidelity estimators,
+    // so the merged stats block reports per-(model, scheme, k) cells.
+    let fidelity = stats.get("fidelity").expect("fidelity block").as_arr().unwrap();
+    assert!(!fidelity.is_empty(), "{line}");
+    let mut shadow_samples = 0.0;
+    for entry in fidelity {
+        for field in ["model", "scheme"] {
+            assert!(entry.get(field).and_then(Json::as_str).is_some(), "{entry}");
+        }
+        for field in ["k", "samples", "bias", "mse", "variance"] {
+            assert!(entry.get(field).and_then(Json::as_f64).is_some(), "{entry}");
+        }
+        shadow_samples += entry.get("samples").unwrap().as_f64().unwrap();
+    }
+    assert!(shadow_samples > 0.0, "{line}");
 
     // Graceful shutdown: ack, then the server joins cleanly.
     writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
@@ -216,6 +253,8 @@ fn tcp_requests_pipeline_across_connections() {
         train_n: TRAIN_N,
         seed: 7,
         prewarm_bits: vec![4],
+        shadow_rate: 0.0,
+        plan_cache_mb: 64,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     assert!(

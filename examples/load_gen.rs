@@ -17,9 +17,17 @@
 //!
 //! Exits nonzero if any reply is incorrect.
 //!
+//! Two driving modes: lockstep (default — one request, then one reply per
+//! connection) and `--pipelined`, which performs the `hello` feature
+//! handshake and then keeps `--inflight` requests in flight per
+//! connection, matching out-of-order replies back to their requests by
+//! the echoed id and verifying each against the same reference engine.
+//!
 //! Start the server first: `cargo run --release -- serve`
 //! Then:
 //! `cargo run --release --example load_gen -- --requests 1200 --clients 8`
+//! or pipelined:
+//! `cargo run --release --example load_gen -- --pipelined --inflight 32`
 //!
 //! Run both from the same directory (the reference engine must see the
 //! same cached zoo weights; with matching `--train-n`/`--seed` it retrains
@@ -31,6 +39,7 @@ use dither::rounding::RoundingMode;
 use dither::util::cli::Args;
 use dither::util::error::Result;
 use dither::util::json::Json;
+use std::collections::{HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -92,6 +101,8 @@ fn main() -> Result<()> {
     let train_n = args.parse_or("train-n", 2000usize);
     let seed = args.parse_or("seed", 7u64);
     let expect_fidelity = args.flag("expect-fidelity");
+    let pipelined = args.flag("pipelined");
+    let inflight = args.parse_or("inflight", 32usize).max(1);
 
     // The server may still be training its zoo (CI starts both at once).
     if !wait_ready(&addr, Duration::from_secs(300)) {
@@ -111,9 +122,14 @@ fn main() -> Result<()> {
     let overloaded_retries = AtomicU64::new(0);
     let per_client = requests.div_ceil(clients);
 
+    let mode = if pipelined {
+        format!("pipelined, {inflight} in flight per connection")
+    } else {
+        "lockstep".to_string()
+    };
     println!(
         "load_gen: driving {addr} with {clients} clients x {per_client} requests \
-         (mixed models/k/schemes) ..."
+         (mixed models/k/schemes, {mode}) ..."
     );
     let t0 = Instant::now();
     std::thread::scope(|scope| {
@@ -125,16 +141,31 @@ fn main() -> Result<()> {
             let overloaded_retries = &overloaded_retries;
             let addr = addr.clone();
             scope.spawn(move || {
-                if let Err(e) = run_client(
-                    &addr,
-                    c,
-                    per_client,
-                    workload,
-                    reference,
-                    violations,
-                    completed,
-                    overloaded_retries,
-                ) {
+                let run = if pipelined {
+                    run_client_pipelined(
+                        &addr,
+                        c,
+                        per_client,
+                        inflight,
+                        workload,
+                        reference,
+                        violations,
+                        completed,
+                        overloaded_retries,
+                    )
+                } else {
+                    run_client(
+                        &addr,
+                        c,
+                        per_client,
+                        workload,
+                        reference,
+                        violations,
+                        completed,
+                        overloaded_retries,
+                    )
+                };
+                if let Err(e) = run {
                     violations
                         .lock()
                         .unwrap()
@@ -255,6 +286,119 @@ fn run_client(
         if let Some(v) = check_reply(&case, id, &resp, &mut conn_shard, reference) {
             violations.lock().unwrap().push(v);
         }
+        completed.fetch_add(1, Ordering::Relaxed);
+    }
+    Ok(())
+}
+
+/// Pipelined driver: keep `window` requests in flight on one connection,
+/// matching each out-of-order reply back to the request it answers by the
+/// echoed id and verifying its payload against the reference engine.
+/// Overloaded replies (window or queue backpressure) requeue the request.
+#[allow(clippy::too_many_arguments)]
+fn run_client_pipelined(
+    addr: &str,
+    client: usize,
+    count: usize,
+    window: usize,
+    workload: &Workload,
+    reference: &Engine,
+    violations: &Mutex<Vec<String>>,
+    completed: &AtomicU64,
+    overloaded_retries: &AtomicU64,
+) -> Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+
+    // Feature handshake: the server must advertise pipelining; its
+    // per-connection window caps how much we keep in flight.
+    writeln!(writer, "{{\"cmd\":\"hello\"}}")?;
+    writer.flush()?;
+    reader.read_line(&mut line)?;
+    let hello = Json::parse(line.trim())
+        .map_err(|e| format!("client {client}: bad hello reply: {e}"))?;
+    let supports_pipelining = hello
+        .get("features")
+        .and_then(Json::as_arr)
+        .is_some_and(|f| f.iter().any(|v| v.as_str() == Some("pipelined")));
+    if !supports_pipelining {
+        violations
+            .lock()
+            .unwrap()
+            .push(format!("client {client}: server does not advertise pipelining: {line}"));
+        return Ok(());
+    }
+    let server_window = hello
+        .get("max_inflight")
+        .and_then(Json::as_f64)
+        .unwrap_or(1.0) as usize;
+    let window = window.min(server_window.max(1));
+
+    let base = (client * count) as u64;
+    let mut conn_shard: Option<f64> = None;
+    let mut next = 0usize; // next fresh case offset
+    let mut retry: VecDeque<usize> = VecDeque::new(); // overloaded, to resend
+    let mut outstanding: HashSet<u64> = HashSet::new();
+    let mut done = 0usize;
+    while done < count {
+        // Fill the window without waiting for replies.
+        while outstanding.len() < window && (!retry.is_empty() || next < count) {
+            let j = match retry.pop_front() {
+                Some(j) => j,
+                None => {
+                    let j = next;
+                    next += 1;
+                    j
+                }
+            };
+            let case = workload.case(client * count + j);
+            let id = base + j as u64 + 1;
+            writeln!(
+                writer,
+                "{}",
+                format_request(id, case.model, case.k, case.mode, case.pixels)
+            )?;
+            outstanding.insert(id);
+        }
+        writer.flush()?;
+        // Drain one reply — any order — and match it back by id.
+        line.clear();
+        reader.read_line(&mut line)?;
+        let resp = Json::parse(line.trim())
+            .map_err(|e| format!("client {client}: bad json: {e}"))?;
+        let Some(id) = resp.get("id").and_then(Json::as_f64).map(|v| v as u64) else {
+            violations
+                .lock()
+                .unwrap()
+                .push(format!("client {client}: reply without id: {line}"));
+            continue;
+        };
+        if !outstanding.remove(&id) {
+            violations
+                .lock()
+                .unwrap()
+                .push(format!("client {client}: unexpected or duplicate reply id {id}"));
+            continue;
+        }
+        let j = (id - base - 1) as usize;
+        if resp
+            .get("overloaded")
+            .and_then(Json::as_bool)
+            .unwrap_or(false)
+        {
+            overloaded_retries.fetch_add(1, Ordering::Relaxed);
+            retry.push_back(j);
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        }
+        let case = workload.case(client * count + j);
+        if let Some(v) = check_reply(&case, id, &resp, &mut conn_shard, reference) {
+            violations.lock().unwrap().push(v);
+        }
+        done += 1;
         completed.fetch_add(1, Ordering::Relaxed);
     }
     Ok(())

@@ -29,6 +29,13 @@ fn main() -> Result<()> {
     reader.read_line(&mut line)?;
     print!("ping -> {line}");
 
+    // Feature handshake: the server advertises the pipelined protocol
+    // and its per-connection in-flight window.
+    writeln!(writer, "{{\"cmd\":\"hello\"}}")?;
+    line.clear();
+    reader.read_line(&mut line)?;
+    print!("hello -> {line}");
+
     // A/B the rounding schemes on the same images.
     for (id, mode, k) in [
         (1u64, RoundingMode::Dither, 2u32),

@@ -1,7 +1,9 @@
 //! End-to-end serving benchmarks: the native engine batch path, the
 //! plan-cache hit-vs-miss comparison (the plan/execute split's headline
 //! number), and the full TCP serving stack measured for 1 shard vs K
-//! shards (the sharding speedup from the coordinator refactor).
+//! shards (the sharding speedup from the coordinator refactor) and for
+//! lockstep vs pipelined connection driving (the protocol rework's
+//! headline number: pipelining is what lets batches actually form).
 //!
 //! Run: `cargo bench --bench bench_e2e`   (`DITHER_BENCH_FAST=1` for a
 //! smoke run). Results are written to `results/bench_e2e.json`.
@@ -126,15 +128,20 @@ fn main() {
     drop(shadow_engine);
 
     // ---- TCP serving throughput: 1 shard vs K shards -------------------
+    // All lockstep (window 1): each connection waits for every reply.
     let k_shards = num_threads().clamp(2, 8);
     let requests = if fast { 240 } else { 2400 };
     let clients = 8;
     let mut serving = Vec::new();
+    let mut lockstep_k_rps = 0.0f64;
     for (port, shards) in [(18011u16, 1usize), (18012, k_shards)] {
-        let rps = serving_throughput(port, shards, clients, requests, &ds);
+        let rps = serving_throughput(port, shards, clients, requests, &ds, 1);
         let name = format!("e2e/serving/shards={shards}/k=4/dither");
         let throughput = format_count(rps);
         println!("{name:<56} {throughput:>12}/s  ({requests} reqs, {clients} clients)");
+        if shards == k_shards {
+            lockstep_k_rps = rps;
+        }
         serving.push(Json::obj(vec![
             ("name", Json::Str(name)),
             ("shards", Json::Num(shards as f64)),
@@ -153,6 +160,47 @@ fn main() {
             );
         }
     }
+
+    // ---- pipelined vs lockstep serving ---------------------------------
+    // Same server shape and request mix; the only difference is the
+    // driving discipline: lockstep clients wait for every reply, the
+    // pipelined run keeps a window of requests in flight per connection so
+    // one client can fill a shard's batcher. Expect large gains at
+    // batch-friendly load — batches actually form instead of serving a
+    // procession of singletons.
+    let window = 32usize;
+    let pipelined_rps = serving_throughput(18013, k_shards, clients, requests, &ds, window);
+    let name = format!("e2e/serving_pipelined/shards={k_shards}/k=4/dither/window={window}");
+    let throughput = format_count(pipelined_rps);
+    println!("{name:<56} {throughput:>12}/s  ({requests} reqs, {clients} clients)");
+    serving.push(Json::obj(vec![
+        ("name", Json::Str(name)),
+        ("shards", Json::Num(k_shards as f64)),
+        ("requests", Json::Num(requests as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("window", Json::Num(window as f64)),
+        ("items_per_s", Json::Num(pipelined_rps)),
+    ]));
+    let pipeline_speedup = if lockstep_k_rps > 0.0 {
+        pipelined_rps / lockstep_k_rps
+    } else {
+        0.0
+    };
+    println!(
+        "pipelined (window {window}) vs lockstep at {k_shards} shards: {pipeline_speedup:.2}x"
+    );
+    serving.push(Json::obj(vec![
+        (
+            "name",
+            Json::Str(format!(
+                "e2e/pipelined_vs_lockstep/shards={k_shards}/k=4/dither"
+            )),
+        ),
+        ("lockstep_items_per_s", Json::Num(lockstep_k_rps)),
+        ("pipelined_items_per_s", Json::Num(pipelined_rps)),
+        ("window", Json::Num(window as f64)),
+        ("speedup", Json::Num(pipeline_speedup)),
+    ]));
 
     // Merge the harness results with the serving measurements and the
     // plan-cache speedup ratios.
@@ -189,13 +237,16 @@ fn main() {
 
 /// Start a server with `shards` shards, drive it with `clients` concurrent
 /// connections issuing `requests` total k=4 dither requests, and return
-/// the measured requests/second (excluding startup/teardown).
+/// the measured requests/second (excluding startup/teardown). `window` is
+/// how many requests each connection keeps in flight: 1 is the lockstep
+/// discipline (write, then wait for the reply), larger values pipeline.
 fn serving_throughput(
     port: u16,
     shards: usize,
     clients: usize,
     requests: usize,
     ds: &Dataset,
+    window: usize,
 ) -> f64 {
     let addr = format!("127.0.0.1:{port}");
     let cfg = ServerConfig {
@@ -209,6 +260,7 @@ fn serving_throughput(
         prewarm_bits: vec![4],
         shadow_rate: 0.0,
         plan_cache_mb: 64,
+        max_inflight: 64,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 
@@ -247,12 +299,20 @@ fn serving_throughput(
                 let mut writer = stream;
                 let req = format_request(c as u64, "digits_linear", 4, RoundingMode::Dither, img);
                 let mut line = String::new();
-                for _ in 0..per_client {
-                    writeln!(writer, "{req}").expect("send");
+                // Windowed send/recv: with window == 1 this is exactly the
+                // old lockstep loop; larger windows keep the pipe full.
+                let mut sent = 0usize;
+                let mut recvd = 0usize;
+                while recvd < per_client {
+                    while sent < per_client && sent - recvd < window {
+                        writeln!(writer, "{req}").expect("send");
+                        sent += 1;
+                    }
                     writer.flush().expect("flush");
                     line.clear();
                     reader.read_line(&mut line).expect("recv");
                     assert!(!line.contains("\"error\""), "{line}");
+                    recvd += 1;
                 }
             });
         }

@@ -3,8 +3,10 @@
 //!
 //! Requests arriving within `max_wait` that share `(model, k, mode)` are
 //! coalesced up to `max_batch` and executed in one engine call — the
-//! classic dynamic-batching policy. Each request carries a oneshot-style
-//! channel for its response line. The queue is bounded (`capacity`):
+//! classic dynamic-batching policy. Each request carries a [`ReplyTo`] —
+//! the per-request reply channel back to its connection's writer, tagged
+//! with the request id so pipelined completions can return out of order.
+//! The queue is bounded (`capacity`):
 //! [`Batcher::submit`] rejects instead of growing without limit, which is
 //! the server's backpressure signal ([`SubmitError::Overloaded`]).
 //!
@@ -25,9 +27,9 @@ use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::protocol::{format_error, format_response, InferenceRequest};
 use crate::rounding::RoundingMode;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// How many linger periods the oldest queued request may wait before its
@@ -35,12 +37,85 @@ use std::time::{Duration, Instant};
 /// of plan-aware batching).
 pub const STARVATION_MULT: u32 = 8;
 
+/// Where one request's response line goes: the submitting connection's
+/// writer channel, tagged with the request id so the reply can be matched
+/// out of order (pipelined connections funnel every reply through one
+/// channel). Dropping a `ReplyTo` without replying — hard shutdown clears
+/// shard queues by dropping `Pending`s — sends a `cancelled` error
+/// instead, so a pipelined client is never left waiting on an accepted
+/// id. When a per-connection in-flight window is attached, delivering (or
+/// cancelling) the reply releases its window slot.
+pub struct ReplyTo {
+    id: u64,
+    tx: Sender<String>,
+    window: Option<Arc<AtomicUsize>>,
+    /// Counts a cancellation as an error in the owning shard's metrics
+    /// (the lockstep loop used to record one when a reply channel died).
+    cancel_metrics: Option<Arc<ShardMetrics>>,
+    replied: bool,
+}
+
+impl ReplyTo {
+    /// Reply channel for request `id`.
+    pub fn new(id: u64, tx: Sender<String>) -> ReplyTo {
+        ReplyTo {
+            id,
+            tx,
+            window: None,
+            cancel_metrics: None,
+            replied: false,
+        }
+    }
+
+    /// Attach (and occupy) one slot of a connection's in-flight window;
+    /// the slot is released when the reply is sent or cancelled.
+    pub fn with_window(mut self, window: Arc<AtomicUsize>) -> ReplyTo {
+        window.fetch_add(1, Ordering::AcqRel);
+        self.window = Some(window);
+        self
+    }
+
+    /// Record a cancellation (reply dropped unanswered) as an error in
+    /// `metrics`, so hard-stopped requests stay visible in `stats`.
+    pub fn with_cancel_metrics(mut self, metrics: Arc<ShardMetrics>) -> ReplyTo {
+        self.cancel_metrics = Some(metrics);
+        self
+    }
+
+    /// The request id this reply channel serves.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Deliver the response line. The receiving writer may already be
+    /// gone on connection teardown; that send failure is ignored.
+    pub fn send(mut self, line: String) {
+        self.replied = true;
+        let _ = self.tx.send(line);
+        // Drop releases the window slot.
+    }
+}
+
+impl Drop for ReplyTo {
+    fn drop(&mut self) {
+        if !self.replied {
+            let _ = self.tx.send(format_error(self.id, "cancelled"));
+            if let Some(metrics) = &self.cancel_metrics {
+                metrics.record_error();
+            }
+        }
+        if let Some(window) = &self.window {
+            window.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
 /// A queued request with its response channel.
 pub struct Pending {
     /// The request.
     pub req: InferenceRequest,
     /// Where the response line is sent.
-    pub respond_to: Sender<String>,
+    pub respond_to: ReplyTo,
     /// Enqueue time (for latency accounting).
     pub enqueued: Instant,
 }
@@ -285,11 +360,15 @@ impl Batcher {
 /// lines so clients can observe the routing.
 pub fn worker_loop(batcher: &Batcher, engine: &Engine, metrics: &ShardMetrics, shard: usize) {
     while let Some((key, batch)) = batcher.next_batch() {
-        let pixel_refs: Vec<&[f64]> = batch.iter().map(|p| p.req.pixels.as_slice()).collect();
         metrics.record_batch(batch.len());
-        match engine.infer_batch(&key.model, key.k, key.mode, &pixel_refs) {
+        let size = batch.len();
+        let result = {
+            let pixel_refs: Vec<&[f64]> = batch.iter().map(|p| p.req.pixels.as_slice()).collect();
+            engine.infer_batch(&key.model, key.k, key.mode, &pixel_refs)
+        };
+        match result {
             Ok(outputs) => {
-                for (p, out) in batch.iter().zip(outputs) {
+                for (p, out) in batch.into_iter().zip(outputs) {
                     let latency_us = p.enqueued.elapsed().as_micros() as u64;
                     metrics.record_request(key.mode, latency_us);
                     let line = format_response(
@@ -299,17 +378,18 @@ pub fn worker_loop(batcher: &Batcher, engine: &Engine, metrics: &ShardMetrics, s
                         key.k,
                         &out.logits,
                         latency_us,
-                        batch.len(),
+                        size,
                         shard,
                         p.req.auto,
                     );
-                    let _ = p.respond_to.send(line);
+                    p.respond_to.send(line);
                 }
             }
             Err(e) => {
-                for p in &batch {
+                for p in batch {
                     metrics.record_error();
-                    let _ = p.respond_to.send(format_error(p.req.id, &e.to_string()));
+                    let id = p.req.id;
+                    p.respond_to.send(format_error(id, &e.to_string()));
                 }
             }
         }
@@ -344,7 +424,7 @@ mod tests {
         (
             Pending {
                 req: req(model, k, mode, id),
-                respond_to: tx,
+                respond_to: ReplyTo::new(id, tx),
                 enqueued: Instant::now(),
             },
             rx,
@@ -532,5 +612,117 @@ mod tests {
         let (_, batch) = b.next_batch().unwrap();
         submitter.join().unwrap();
         assert_eq!(batch.len(), 4, "linger should capture the stragglers");
+    }
+
+    #[test]
+    fn reply_to_cancels_on_drop_and_releases_window_slot() {
+        use std::sync::atomic::AtomicUsize;
+        let window = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        // A delivered reply: slot taken while in flight, freed after.
+        let reply = ReplyTo::new(5, tx.clone()).with_window(window.clone());
+        assert_eq!(reply.id(), 5);
+        assert_eq!(window.load(Ordering::SeqCst), 1);
+        reply.send("{\"id\":5,\"pred\":1}".to_string());
+        assert_eq!(window.load(Ordering::SeqCst), 0);
+        assert!(rx.recv().unwrap().contains("\"pred\""));
+        // A dropped reply (hard shutdown clears the queue): the client
+        // gets a cancelled error and the slot is still released.
+        let reply = ReplyTo::new(6, tx).with_window(window.clone());
+        assert_eq!(window.load(Ordering::SeqCst), 1);
+        drop(reply);
+        assert_eq!(window.load(Ordering::SeqCst), 0);
+        let line = rx.recv().unwrap();
+        assert!(line.contains("cancelled") && line.contains("\"id\":6"), "{line}");
+        // With metrics attached, a cancellation counts as an error — a
+        // delivered reply does not.
+        let all = crate::coordinator::metrics::Metrics::new(1);
+        let (tx2, _rx2) = channel();
+        let delivered = ReplyTo::new(7, tx2.clone()).with_cancel_metrics(all.shard(0));
+        delivered.send("{\"id\":7}".to_string());
+        assert!(all.snapshot_json().contains("\"errors\":0"));
+        let cancelled = ReplyTo::new(8, tx2).with_cancel_metrics(all.shard(0));
+        drop(cancelled);
+        assert!(all.snapshot_json().contains("\"errors\":1"));
+    }
+
+    #[test]
+    fn stop_sends_cancellations_for_queued_requests() {
+        let b = Batcher::new(8, Duration::from_millis(1), 8);
+        let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, 11);
+        b.submit(p).unwrap();
+        b.stop(); // clears the queue, dropping the Pending
+        let line = rx.recv().unwrap();
+        assert!(line.contains("cancelled") && line.contains("\"id\":11"), "{line}");
+    }
+
+    #[test]
+    fn pipelined_flood_of_resident_key_does_not_starve_cold_key() {
+        // A pipelined connection floods the hot plan-resident key (k=4)
+        // faster than the worker drains it, so the queue always holds hot
+        // traffic; the lone cold key (k=2) must still be served within the
+        // 8×max_wait starvation bound.
+        let b = Arc::new(Batcher::new(4, Duration::from_millis(5), 4096));
+        b.set_residency(|key: &BatchKey| key.k == 4);
+        let bound = b.starvation_bound();
+
+        // Queue the cold request plus an initial hot burst before the
+        // worker starts, so the first pick already sees both keys.
+        let t0 = Instant::now();
+        let (cold, _cold_rx) = pending("digits_linear", 2, RoundingMode::Dither, 0);
+        b.submit(cold).unwrap();
+        let mut receivers = Vec::new();
+        let mut id = 1u64;
+        for _ in 0..8 {
+            let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, id);
+            b.submit(p).unwrap();
+            receivers.push(rx);
+            id += 1;
+        }
+
+        // Worker: ~1 ms simulated service per batch, reporting when the
+        // cold key is drained and how much hot work preceded it.
+        let (served_tx, served_rx) = channel();
+        let wb = b.clone();
+        let worker = std::thread::spawn(move || {
+            let mut hot_batches = 0usize;
+            while let Some((key, _batch)) = wb.next_batch() {
+                if key.k == 2 {
+                    let _ = served_tx.send((t0.elapsed(), hot_batches));
+                } else {
+                    hot_batches += 1;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+
+        // Flood: hot submissions outpace the 1 ms/batch service rate for
+        // several starvation bounds.
+        while t0.elapsed() < bound * 3 {
+            let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, id);
+            if b.submit(p).is_ok() {
+                receivers.push(rx);
+            }
+            id += 1;
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        b.stop();
+        worker.join().unwrap();
+
+        let (waited, hot_before) = served_rx
+            .try_recv()
+            .expect("cold key must be served during the flood");
+        assert!(
+            hot_before > 0,
+            "resident-key traffic should drain ahead of the cold key first"
+        );
+        assert!(
+            waited <= bound.saturating_mul(3),
+            "cold key waited {waited:?}, starvation bound is {bound:?}"
+        );
+        assert!(
+            served_rx.try_recv().is_err(),
+            "the cold key must be served exactly once"
+        );
     }
 }

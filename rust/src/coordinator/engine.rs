@@ -124,6 +124,10 @@ pub struct Engine {
     /// Seed for freezing dither weight draws in prepared plans (stable per
     /// engine so repeated cache misses rebuild identical plans).
     prep_seed: u64,
+    /// Configured plan-cache byte budget, mirrored outside the mutex:
+    /// capacity is fixed at construction, so the hot path can route the
+    /// capacity-0 baseline without taking the cache lock.
+    plan_cache_capacity: usize,
     plans: Mutex<PlanCache>,
     /// Which request rows additionally run the exact shadow forward pass
     /// (rate 0 — the default — short-circuits the whole path).
@@ -159,6 +163,7 @@ impl Engine {
             zoo,
             seed_counter: AtomicU64::new(seed),
             prep_seed: seed,
+            plan_cache_capacity: plan_cache_bytes,
             plans: Mutex::new(PlanCache::new(plan_cache_bytes)),
             shadow: ShadowSampler::new(0.0),
             fidelity: Arc::new(FidelityShard::new()),
@@ -383,6 +388,14 @@ impl Engine {
         if pixels.is_empty() {
             return Ok(Vec::new());
         }
+        // Capacity 0 disables plan caching entirely: serve through the
+        // plan-per-call baseline (the A/B path) instead of building
+        // throwaway plans, counting each call as a miss. The capacity
+        // mirror keeps the planned hot path off the cache lock here.
+        if self.plan_cache_capacity == 0 {
+            self.plans.lock().unwrap().misses += 1;
+            return self.infer_batch_unplanned(model, k, mode, pixels);
+        }
         let (state, x) = self.marshal(model, k, pixels)?;
         let cfg = self.batch_config(k, mode);
         let prepared = self.prepared_for(&cfg.plan_key(model), &state.mlp);
@@ -392,7 +405,10 @@ impl Engine {
     }
 
     /// The direct (plan-both-sides-per-call) forward pass for one batch —
-    /// the pre-plan-cache serving path, kept for A/B checks and benches.
+    /// the pre-plan-cache baseline. [`Engine::infer_batch`] routes here
+    /// when the plan cache is disabled (capacity 0), and benches/tests
+    /// call it directly for A/B checks; either way it shadow-samples like
+    /// the planned path.
     pub fn infer_batch_unplanned(
         &self,
         model: &str,
@@ -406,6 +422,10 @@ impl Engine {
         let (state, x) = self.marshal(model, k, pixels)?;
         let cfg = self.batch_config(k, mode);
         let logits_matrix = quantized_forward(&state.mlp, &x, &state.ranges, &cfg);
+        // The baseline path feeds the fidelity estimators exactly like
+        // the planned path, so A/B serving (plan cache capped at 0) keeps
+        // `stats.fidelity` and the auto controller alive.
+        self.shadow_observe(model, k, mode, state, &x, &logits_matrix);
         Ok(Engine::read_back(&logits_matrix))
     }
 }
@@ -607,6 +627,30 @@ mod tests {
             .unwrap();
         assert_eq!(quiet.fidelity().total_samples(), 0);
         assert_eq!(quiet.shadow_rate(), 0.0);
+    }
+
+    #[test]
+    fn unplanned_baseline_feeds_shadow_estimators() {
+        // Regression: the A/B baseline used to bypass shadow_observe, so
+        // serving with the plan cache capped at 0 left stats.fidelity
+        // empty and the auto controller stuck on its prior.
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let sink = Arc::new(crate::fidelity::FidelityShard::new());
+        let engine = Engine::with_plan_cache(zoo, 7, 0).with_shadow(1.0, sink.clone());
+        let ds = crate::data::Dataset::synthesize(crate::data::Task::Digits, 4, 0xE44);
+        let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
+        // Cap 0 routes infer_batch through the unplanned baseline.
+        engine
+            .infer_batch("digits_linear", 4, RoundingMode::Dither, &pixels)
+            .unwrap();
+        assert_eq!(sink.total_samples(), 4 * 10, "every row's logits shadowed");
+        let stats = engine.plan_cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.len), (0, 1, 0));
+        // Direct A/B calls record too.
+        engine
+            .infer_batch_unplanned("digits_linear", 4, RoundingMode::Dither, &pixels)
+            .unwrap();
+        assert_eq!(sink.total_samples(), 8 * 10);
     }
 
     #[test]

@@ -20,9 +20,12 @@ pub mod protocol;
 pub mod server;
 pub mod shard;
 
-pub use batcher::{Batcher, Pending, SubmitError};
+pub use batcher::{Batcher, Pending, ReplyTo, SubmitError};
 pub use engine::{Engine, InferenceOutput};
 pub use metrics::{Metrics, ShardMetrics};
-pub use protocol::{format_request, format_request_auto, parse_message, InferenceRequest, Message};
+pub use protocol::{
+    format_error, format_hello, format_overloaded, format_request, format_request_auto,
+    format_response, line_id, parse_message, response_id, InferenceRequest, Message, Reassembler,
+};
 pub use server::{ping, serve, wait_ready, ServerConfig};
 pub use shard::{ShardConfig, ShardPool};

@@ -17,13 +17,24 @@
 //! {"id": 1, "pred": 7, "scheme": "dither", "k": 4, "logits": [...],
 //!  "latency_us": 412, "batch": 8, "shard": 2}
 //! ```
-//! Control: `{"cmd": "ping"}`, `{"cmd": "stats"}`, `{"cmd": "shutdown"}`.
-//! Overload (bounded shard queue full) is an error reply with an explicit
-//! marker so clients can back off: `{"id": 1, "error": "overloaded",
-//! "overloaded": true}`.
+//! Control: `{"cmd": "ping"}`, `{"cmd": "hello"}` (feature handshake),
+//! `{"cmd": "stats"}`, `{"cmd": "shutdown"}`.
+//! Overload (bounded shard queue full, or a connection exceeding its
+//! in-flight window) is an error reply with an explicit marker so clients
+//! can back off: `{"id": 1, "error": "overloaded", "overloaded": true}`.
+//!
+//! **Pipelining**: the protocol is fully pipelined — a client may write
+//! any number of request lines without reading replies, and responses
+//! come back in *completion* order, not submission order. The `id` echo
+//! on every reply (successes, errors, and overloads alike) is what lets a
+//! client match them up; [`Reassembler`] is the client-side helper. The
+//! `{"cmd":"hello"}` handshake advertises the feature and the server's
+//! per-connection in-flight window; clients that never send it can keep
+//! the old lockstep discipline (one request, then one reply) unchanged.
 
 use crate::rounding::RoundingMode;
 use crate::util::json::Json;
+use std::collections::HashMap;
 
 /// A parsed inference request.
 #[derive(Clone, Debug)]
@@ -54,6 +65,9 @@ pub enum Message {
     Infer(InferenceRequest),
     /// Liveness check.
     Ping,
+    /// Feature handshake: the reply advertises pipelining and the
+    /// per-connection in-flight window.
+    Hello,
     /// Metrics snapshot request.
     Stats,
     /// Graceful shutdown.
@@ -66,6 +80,7 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
     if let Some(cmd) = json.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "ping" => Ok(Message::Ping),
+            "hello" => Ok(Message::Hello),
             "stats" => Ok(Message::Stats),
             "shutdown" => Ok(Message::Shutdown),
             other => Err(format!("unknown cmd {other:?}")),
@@ -208,6 +223,91 @@ pub fn format_overloaded(id: u64) -> String {
         ("overloaded", Json::Bool(true)),
     ])
     .to_string()
+}
+
+/// Handshake response: advertises the pipelined protocol and the server's
+/// per-connection in-flight window (requests beyond it are answered
+/// `overloaded` immediately). The wire format of every other message is
+/// unchanged, so clients that never send `hello` keep working in
+/// lockstep.
+pub fn format_hello(max_inflight: usize) -> String {
+    Json::obj(vec![
+        ("hello", Json::Bool(true)),
+        (
+            "features",
+            Json::Arr(vec![Json::Str("pipelined".to_string())]),
+        ),
+        ("max_inflight", Json::Num(max_inflight as f64)),
+    ])
+    .to_string()
+}
+
+/// Best-effort id extraction from a request line that failed to parse as
+/// a [`Message`]. Error replies echo it so a pipelined client can match
+/// the failure back to the request it wrote (0 when the line carries no
+/// usable id — such failures cannot be attributed).
+pub fn line_id(line: &str) -> u64 {
+    Json::parse(line)
+        .ok()
+        .and_then(|j| j.get("id").and_then(Json::as_f64))
+        .map(|v| v as u64)
+        .unwrap_or(0)
+}
+
+/// The id echoed by a response line (success, error, or overload reply
+/// alike). Errors on lines that carry no id, which a pipelined client
+/// cannot attribute to any request.
+pub fn response_id(line: &str) -> Result<u64, String> {
+    Json::parse(line)
+        .map_err(|e| e.to_string())?
+        .get("id")
+        .and_then(Json::as_f64)
+        .map(|v| v as u64)
+        .ok_or_else(|| format!("response has no id: {line}"))
+}
+
+/// Client-side reassembly for pipelined connections: responses arrive in
+/// completion order, so a client files each line under its echoed id and
+/// picks replies up by the id it is waiting on. Filing two replies for
+/// one id is an error — the protocol guarantees exactly one reply per
+/// accepted request, and tests use this to catch double answers.
+#[derive(Debug, Default)]
+pub struct Reassembler {
+    by_id: HashMap<u64, String>,
+}
+
+impl Reassembler {
+    /// Empty reassembler.
+    pub fn new() -> Reassembler {
+        Reassembler::default()
+    }
+
+    /// File one response line under its echoed id; returns that id. A
+    /// duplicate id is an error and leaves the originally filed reply
+    /// untouched.
+    pub fn insert(&mut self, line: &str) -> Result<u64, String> {
+        let id = response_id(line)?;
+        if self.by_id.contains_key(&id) {
+            return Err(format!("duplicate response for id {id}"));
+        }
+        self.by_id.insert(id, line.trim().to_string());
+        Ok(id)
+    }
+
+    /// Take the response for a request id, if it has arrived.
+    pub fn take(&mut self, id: u64) -> Option<String> {
+        self.by_id.remove(&id)
+    }
+
+    /// Responses filed and not yet taken.
+    pub fn len(&self) -> usize {
+        self.by_id.len()
+    }
+
+    /// True when no responses are waiting.
+    pub fn is_empty(&self) -> bool {
+        self.by_id.is_empty()
+    }
 }
 
 /// The rounding-mode wire encoding shared with the Pallas kernels
@@ -378,6 +478,54 @@ mod tests {
         assert_eq!(json.get("id").unwrap().as_f64(), Some(9.0));
         assert_eq!(json.get("overloaded").unwrap().as_bool(), Some(true));
         assert_eq!(json.get("error").unwrap().as_str(), Some("overloaded"));
+    }
+
+    #[test]
+    fn hello_handshake_roundtrip() {
+        assert!(matches!(
+            parse_message("{\"cmd\":\"hello\"}"),
+            Ok(Message::Hello)
+        ));
+        let line = format_hello(32);
+        let json = Json::parse(&line).unwrap();
+        assert_eq!(json.get("hello").unwrap().as_bool(), Some(true));
+        assert_eq!(json.get("max_inflight").unwrap().as_f64(), Some(32.0));
+        let features = json.get("features").unwrap().as_arr().unwrap();
+        assert!(features
+            .iter()
+            .any(|f| f.as_str() == Some("pipelined")));
+    }
+
+    #[test]
+    fn line_id_recovers_ids_from_malformed_requests() {
+        // Valid JSON with an id but an invalid body: the error reply can
+        // still be attributed.
+        assert_eq!(line_id("{\"id\":41,\"k\":99}"), 41);
+        // No id, or not JSON at all: falls back to 0.
+        assert_eq!(line_id("{\"k\":4}"), 0);
+        assert_eq!(line_id("not json"), 0);
+    }
+
+    #[test]
+    fn reassembler_matches_by_id_and_rejects_duplicates() {
+        let mut r = Reassembler::new();
+        let a = format_response(3, 1, RoundingMode::Dither, 4, &[0.5], 10, 1, 0, false);
+        let b = format_overloaded(9);
+        assert!(r.is_empty());
+        assert_eq!(r.insert(&b).unwrap(), 9);
+        assert_eq!(r.insert(&a).unwrap(), 3);
+        assert_eq!(r.len(), 2);
+        // One reply per id: a second answer for id 3 is a protocol error,
+        // and the originally filed reply survives the rejected imposter.
+        assert!(r.insert(&a).is_err());
+        assert!(r.insert(&format_error(3, "imposter")).is_err());
+        assert!(r.take(3).unwrap().contains("\"pred\""));
+        assert!(r.take(9).unwrap().contains("overloaded"));
+        assert!(r.take(3).is_none());
+        assert!(r.is_empty());
+        // A line without an id cannot be filed.
+        assert!(r.insert("{\"pong\":true}").is_err());
+        assert_eq!(response_id(&format_error(7, "bad")).unwrap(), 7);
     }
 
     #[test]

@@ -1,27 +1,45 @@
-//! The TCP inference server: accept loop, per-connection readers, and the
-//! sharded batching core. Plain threads — the request path is CPU-bound
-//! model execution, so an async runtime would buy nothing here.
+//! The TCP inference server: accept loop, per-connection reader/writer
+//! pairs, and the sharded batching core. Plain threads — the request path
+//! is CPU-bound model execution, so an async runtime would buy nothing
+//! here.
 //!
 //! Scale shape: the accept loop hash-routes each connection onto one of K
 //! serving shards ([`crate::coordinator::shard`]); connection threads only
 //! touch their shard's bounded queue and metrics slot, so adding shards
-//! adds throughput without adding contention. Shutdown is graceful: the
-//! `shutdown` command stops intake everywhere, shards drain their queues,
-//! and every thread is joined before `serve` returns.
+//! adds throughput without adding contention.
+//!
+//! **Pipelined connections**: each connection is split into a reader that
+//! keeps parsing request lines and submitting them to the shard's batcher
+//! without waiting for replies, and a writer thread that drains completed
+//! responses in completion order (out of order with respect to
+//! submission; every line echoes its request id). One connection can
+//! therefore keep its shard's batcher full — exactly what dynamic
+//! batching needs when large `k` makes per-request latency highest. A
+//! bounded per-connection in-flight window (`--max-inflight`)
+//! backpressures clients that outrun the server: requests beyond the
+//! window are answered `overloaded` immediately, carrying the offending
+//! id.
+//!
+//! Shutdown is graceful: the `shutdown` command stops intake everywhere,
+//! shards drain their queues, every accepted request's reply (each holds
+//! a clone of its connection's writer channel) is delivered, and every
+//! thread is joined before `serve` returns.
 
-use crate::coordinator::batcher::{Pending, SubmitError};
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::batcher::{Pending, ReplyTo, SubmitError};
+use crate::coordinator::metrics::{Metrics, ShardMetrics};
 use crate::coordinator::protocol::{
-    format_error, format_overloaded, parse_message, Message,
+    format_error, format_hello, format_overloaded, line_id, parse_message, InferenceRequest,
+    Message,
 };
 use crate::coordinator::shard::{ShardConfig, ShardPool};
 use crate::fidelity;
 use crate::train::{ModelSpec, Zoo};
 use crate::util::error::{Context, Result};
 use crate::util::threadpool::WorkerPool;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::channel;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -52,6 +70,10 @@ pub struct ServerConfig {
     pub shadow_rate: f64,
     /// Per-shard plan-cache byte budget in MiB (0 disables plan caching).
     pub plan_cache_mb: usize,
+    /// Per-connection bound on requests in flight (accepted but not yet
+    /// answered). Pipelined requests beyond the window get an immediate
+    /// `overloaded` reply carrying their id. Clamped to ≥ 1.
+    pub max_inflight: usize,
 }
 
 impl Default for ServerConfig {
@@ -67,6 +89,7 @@ impl Default for ServerConfig {
             prewarm_bits: vec![2, 4, 8],
             shadow_rate: 0.02,
             plan_cache_mb: 64,
+            max_inflight: 64,
         }
     }
 }
@@ -133,6 +156,7 @@ pub fn serve(cfg: &ServerConfig) -> Result<()> {
 
     let mut conns = WorkerPool::new();
     let mut conn_id = 0u64;
+    let max_inflight = cfg.max_inflight.max(1);
     while !pool.is_shutting_down() {
         match listener.accept() {
             Ok((stream, _addr)) => {
@@ -141,7 +165,7 @@ pub fn serve(cfg: &ServerConfig) -> Result<()> {
                 let pool = pool.clone();
                 let metrics = metrics.clone();
                 conns.spawn(format!("dither-conn-{id}"), move || {
-                    let _ = handle_connection(stream, id, &pool, &metrics);
+                    let _ = handle_connection(stream, id, &pool, &metrics, max_inflight);
                 });
                 // Reap periodically under sustained accept load too, not
                 // just on idle ticks, so dead handles stay bounded.
@@ -227,29 +251,101 @@ pub fn wait_ready(addr: &str, timeout: Duration) -> bool {
     }
 }
 
-/// Read request lines, dispatch to this connection's shard, write response
-/// lines. One thread per connection; inference requests are answered in
-/// submission order. The read loop ticks on a short timeout so the thread
-/// notices server shutdown even while a client keeps the socket open.
+/// One pipelined connection: a reader (this thread) that parses request
+/// lines and submits them to the connection's shard without waiting for
+/// replies, plus a writer thread that drains completed responses out of
+/// order. Every reply funnels through one mpsc channel — control acks and
+/// per-request [`ReplyTo`] completions alike — so the socket has a single
+/// writer and the drain-on-shutdown guarantee falls out of channel
+/// disconnection: the writer exits only after the reader and every
+/// in-flight reply sender are gone.
 fn handle_connection(
     stream: TcpStream,
     conn_id: u64,
     pool: &ShardPool,
     metrics: &Metrics,
+    max_inflight: usize,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    // Bounded writes: a client that stops reading its socket would
+    // otherwise park the writer thread forever once the TCP send buffer
+    // fills. On write timeout the writer exits; the reader notices on its
+    // next send and abandons the connection.
+    let write_half = stream.try_clone()?;
+    write_half.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let (tx, rx) = channel::<String>();
+    // Writer-death flag: accepted infer requests never touch `tx`
+    // directly (their replies flow through ReplyTo sends, whose failures
+    // are ignored), so the reader polls this to tear the connection down
+    // instead of serving a dead socket forever.
+    let writer_alive = Arc::new(AtomicBool::new(true));
+    let alive = writer_alive.clone();
+    let writer = std::thread::Builder::new()
+        .name(format!("dither-conn-{conn_id}-writer"))
+        .spawn(move || writer_loop(write_half, rx, &alive))?;
+    let result = read_loop(stream, conn_id, pool, metrics, max_inflight, &tx, &writer_alive);
+    // Drop the reader's sender so the writer exits once every in-flight
+    // reply (each ReplyTo holds a clone) has been delivered — this is
+    // what drains all accepted ids when shutdown lands mid-stream.
+    drop(tx);
+    let _ = writer.join();
+    result
+}
+
+/// The connection's writer half: drain response lines in completion
+/// order. Ready lines are coalesced into one flush so a burst of batch
+/// completions costs one syscall, not one per reply. Clears `alive` on
+/// exit so the reader notices a dead socket even when no control reply
+/// ever fails.
+fn writer_loop(stream: TcpStream, rx: Receiver<String>, alive: &AtomicBool) {
+    let mut out = BufWriter::new(stream);
+    'drain: while let Ok(line) = rx.recv() {
+        if writeln!(out, "{line}").is_err() {
+            break 'drain;
+        }
+        while let Ok(more) = rx.try_recv() {
+            if writeln!(out, "{more}").is_err() {
+                break 'drain;
+            }
+        }
+        if out.flush().is_err() {
+            break 'drain;
+        }
+    }
+    alive.store(false, Ordering::Release);
+}
+
+/// The connection's reader half: parse request lines and dispatch them.
+/// The read loop ticks on a short timeout so the thread notices server
+/// shutdown even while a client keeps the socket open; a failed send to
+/// the writer channel means the socket died and ends the connection.
+#[allow(clippy::too_many_arguments)]
+fn read_loop(
+    stream: TcpStream,
+    conn_id: u64,
+    pool: &ShardPool,
+    metrics: &Metrics,
+    max_inflight: usize,
+    tx: &Sender<String>,
+    writer_alive: &AtomicBool,
 ) -> Result<()> {
     let shard = pool.route(conn_id);
     let shard_metrics = metrics.shard(shard);
-    stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
-    // Bounded writes too: a client that stops reading its socket would
-    // otherwise park this thread in writeln! forever once the TCP send
-    // buffer fills, and shutdown could never join it. On write timeout
-    // the `?` below abandons the connection.
-    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
-    let mut writer = stream.try_clone()?;
+    // Accepted-but-unanswered requests on this connection. Incremented
+    // here (via ReplyTo::with_window), decremented by each ReplyTo as its
+    // reply or cancellation goes out; this thread is the only
+    // incrementer, so the window check below cannot race over the bound.
+    let inflight = Arc::new(AtomicUsize::new(0));
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     loop {
+        // Writer gone (socket closed or write timed out): abandon the
+        // connection instead of feeding the engine from a dead client.
+        // Checked every iteration — read timeout ticks land here too.
+        if !writer_alive.load(Ordering::Acquire) {
+            break;
+        }
         // `read_line` appends, so a partial line survives a timeout tick
         // and completes on the next read.
         match reader.read_line(&mut line) {
@@ -275,86 +371,95 @@ fn handle_connection(
             continue;
         }
         let mut stop = false;
-        match parse_message(trimmed) {
-            Ok(Message::Ping) => writeln!(writer, "{{\"pong\":true}}")?,
-            Ok(Message::Stats) => writeln!(writer, "{}", metrics.snapshot_json())?,
+        let sent = match parse_message(trimmed) {
+            Ok(Message::Ping) => tx.send("{\"pong\":true}".to_string()),
+            Ok(Message::Hello) => tx.send(format_hello(max_inflight)),
+            Ok(Message::Stats) => tx.send(metrics.snapshot_json()),
             Ok(Message::Shutdown) => {
-                writeln!(writer, "{{\"stopping\":true}}")?;
                 pool.close();
                 stop = true;
+                tx.send("{\"stopping\":true}".to_string())
             }
-            Ok(Message::Infer(mut req)) => {
-                // Auto precision: resolve (scheme, k) from this shard's
-                // measured fidelity state before the request reaches the
-                // batcher, so it batches with fixed-configuration traffic
-                // under a concrete key. The choice is deterministic given
-                // the shard's estimator state.
-                if req.auto {
-                    let Some(spec) = ModelSpec::from_name(&req.model) else {
-                        shard_metrics.record_error();
-                        writeln!(
-                            writer,
-                            "{}",
-                            format_error(req.id, &format!("unknown model family {:?}", req.model))
-                        )?;
-                        writer.flush()?;
-                        line.clear();
-                        continue;
-                    };
-                    let budget = req.max_mse.unwrap_or(f64::INFINITY);
-                    let choice = fidelity::choose(shard_metrics.fidelity(), spec.index(), budget);
-                    req.mode = choice.mode;
-                    req.k = choice.k;
-                }
-                let id = req.id;
-                let (tx, rx) = channel();
-                let submitted = pool.submit(
-                    shard,
-                    Pending {
-                        req,
-                        respond_to: tx,
-                        enqueued: Instant::now(),
-                    },
-                );
-                match submitted {
-                    Ok(()) => {
-                        // Wait for this request's response before reading
-                        // the next line (pipelining happens across
-                        // connections).
-                        use std::sync::mpsc::RecvTimeoutError;
-                        match rx.recv_timeout(Duration::from_secs(120)) {
-                            Ok(response) => writeln!(writer, "{response}")?,
-                            Err(RecvTimeoutError::Timeout) => {
-                                shard_metrics.record_error();
-                                writeln!(writer, "{}", format_error(id, "timeout"))?;
-                            }
-                            // Sender dropped: the shard was hard-stopped
-                            // with this request still queued.
-                            Err(RecvTimeoutError::Disconnected) => {
-                                shard_metrics.record_error();
-                                writeln!(writer, "{}", format_error(id, "cancelled"))?;
-                            }
-                        }
-                    }
-                    Err(SubmitError::Overloaded(p)) => {
-                        shard_metrics.record_rejected();
-                        writeln!(writer, "{}", format_overloaded(p.req.id))?;
-                    }
-                    Err(SubmitError::Closed(p)) => {
-                        shard_metrics.record_error();
-                        writeln!(writer, "{}", format_error(p.req.id, "shutting down"))?;
-                    }
-                }
+            Ok(Message::Infer(req)) => {
+                handle_infer(req, shard, pool, &shard_metrics, &inflight, max_inflight, tx)
             }
             Err(e) => {
                 shard_metrics.record_error();
-                writeln!(writer, "{}", format_error(0, &e))?;
+                // Echo the id when the malformed line carried one, so a
+                // pipelined client can attribute the failure.
+                tx.send(format_error(line_id(trimmed), &e))
             }
+        };
+        if sent.is_err() {
+            break; // writer gone: socket closed or write timed out
         }
-        writer.flush()?;
         line.clear();
         if stop {
             break;
+        }
+    }
+    Ok(())
+}
+
+/// Dispatch one inference request: resolve auto precision, enforce the
+/// in-flight window, and submit to the shard's batcher. Never blocks on
+/// the reply — completion flows back through the [`ReplyTo`] into the
+/// connection's writer channel.
+#[allow(clippy::too_many_arguments)]
+fn handle_infer(
+    mut req: InferenceRequest,
+    shard: usize,
+    pool: &ShardPool,
+    shard_metrics: &Arc<ShardMetrics>,
+    inflight: &Arc<AtomicUsize>,
+    max_inflight: usize,
+    tx: &Sender<String>,
+) -> std::result::Result<(), SendError<String>> {
+    // Window first: a bounced request only needs its id echoed back, so
+    // don't pay auto resolution for it.
+    if inflight.load(Ordering::Acquire) >= max_inflight {
+        shard_metrics.record_rejected();
+        return tx.send(format_overloaded(req.id));
+    }
+    // Auto precision: resolve (scheme, k) from this shard's measured
+    // fidelity state before the request reaches the batcher, so it
+    // batches with fixed-configuration traffic under a concrete key. The
+    // choice is deterministic given the shard's estimator state.
+    if req.auto {
+        let Some(spec) = ModelSpec::from_name(&req.model) else {
+            shard_metrics.record_error();
+            return tx.send(format_error(
+                req.id,
+                &format!("unknown model family {:?}", req.model),
+            ));
+        };
+        let budget = req.max_mse.unwrap_or(f64::INFINITY);
+        let choice = fidelity::choose(shard_metrics.fidelity(), spec.index(), budget);
+        req.mode = choice.mode;
+        req.k = choice.k;
+    }
+    let respond_to = ReplyTo::new(req.id, tx.clone())
+        .with_window(inflight.clone())
+        .with_cancel_metrics(shard_metrics.clone());
+    let submitted = pool.submit(
+        shard,
+        Pending {
+            req,
+            respond_to,
+            enqueued: Instant::now(),
+        },
+    );
+    match submitted {
+        Ok(()) => {}
+        Err(SubmitError::Overloaded(p)) => {
+            shard_metrics.record_rejected();
+            let id = p.req.id;
+            p.respond_to.send(format_overloaded(id));
+        }
+        Err(SubmitError::Closed(p)) => {
+            shard_metrics.record_error();
+            let id = p.req.id;
+            p.respond_to.send(format_error(id, "shutting down"));
         }
     }
     Ok(())

@@ -7,7 +7,8 @@
 //! its own metrics slot, so the request hot path shares no locks between
 //! shards (the model weights are shared read-only through `Arc<Zoo>`).
 //! Routing is by connection, not by request, so one client's pipelined
-//! requests stay ordered on a single shard.
+//! requests all land in a single shard's batcher (responses may complete
+//! out of order; the id echo matches them up client-side).
 
 use crate::coordinator::batcher::{worker_loop, BatchKey, Batcher, Pending, SubmitError};
 use crate::coordinator::engine::Engine;
@@ -171,6 +172,8 @@ mod tests {
     use std::sync::mpsc::channel;
     use std::time::Instant;
 
+    use crate::coordinator::batcher::ReplyTo;
+
     fn pool(shards: usize) -> (ShardPool, Metrics) {
         let cfg = ShardConfig {
             shards,
@@ -201,7 +204,7 @@ mod tests {
                     max_mse: None,
                     pixels: vec![0.3; 784],
                 },
-                respond_to: tx,
+                respond_to: ReplyTo::new(id, tx),
                 enqueued: Instant::now(),
             },
             rx,

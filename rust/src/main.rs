@@ -62,7 +62,11 @@ SERVE FLAGS:
     --shadow-rate F   fraction of requests re-run through the exact f64
                       forward pass to feed stats.fidelity (0.02; 0 = off)
     --plan-cache-mb N per-shard plan-cache byte budget in MiB (64; 0
-                      disables plan caching)
+                      disables plan caching and serves the plan-per-call
+                      baseline)
+    --max-inflight N  per-connection pipelined in-flight window (64);
+                      requests beyond it get an immediate 'overloaded'
+                      reply carrying their id
 
 INFER FLAGS:
     --model NAME      digits_linear | fashion_mlp (digits_linear)
@@ -175,6 +179,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         prewarm_bits,
         shadow_rate: args.parse_or("shadow-rate", 0.02f64),
         plan_cache_mb: args.parse_or("plan-cache-mb", 64usize),
+        max_inflight: args.parse_or("max-inflight", 64usize),
     };
     serve(&cfg)
 }

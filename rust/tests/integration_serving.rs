@@ -4,12 +4,13 @@
 //! under `artifacts/weights/`).
 
 use dither::coordinator::{
-    format_request, format_request_auto, serve, wait_ready, Engine, ServerConfig,
+    format_request, format_request_auto, serve, wait_ready, Engine, Reassembler, ServerConfig,
 };
 use dither::data::{Dataset, Task};
 use dither::rounding::RoundingMode;
 use dither::train::Zoo;
 use dither::util::json::Json;
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
@@ -100,6 +101,7 @@ fn tcp_server_end_to_end_sharded() {
         prewarm_bits: vec![4],
         shadow_rate: 1.0,
         plan_cache_mb: 64,
+        max_inflight: 64,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 
@@ -255,6 +257,7 @@ fn tcp_requests_pipeline_across_connections() {
         prewarm_bits: vec![4],
         shadow_rate: 0.0,
         plan_cache_mb: 64,
+        max_inflight: 64,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     assert!(
@@ -300,6 +303,303 @@ fn tcp_requests_pipeline_across_connections() {
     let mut writer = stream;
     writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
     let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    server.join().unwrap().expect("server exits cleanly");
+}
+
+/// The W=32 mixed-scheme request grid the pipelined bit-identity test
+/// drives: every scheme, two bit widths, eight distinct images.
+fn mixed_cases(ds: &Dataset) -> Vec<(u64, RoundingMode, u32, usize)> {
+    (0..32)
+        .map(|i| {
+            let mode = RoundingMode::ALL[i % 3];
+            let k = [2u32, 4][(i / 3) % 2];
+            (i as u64 + 1, mode, k, i % ds.len())
+        })
+        .collect()
+}
+
+#[test]
+fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
+    let addr = "127.0.0.1:17983";
+    let cfg = ServerConfig {
+        addr: addr.to_string(),
+        shards: 2,
+        max_batch: 16,
+        max_wait_us: 1_000,
+        queue_cap: 128,
+        train_n: TRAIN_N,
+        seed: 7,
+        prewarm_bits: vec![2, 4],
+        shadow_rate: 0.0,
+        plan_cache_mb: 64,
+        max_inflight: 32,
+    };
+    let server = std::thread::spawn(move || serve(&cfg));
+    let ds = Dataset::synthesize(Task::Digits, 8, 0xF1F0);
+    let cases = mixed_cases(&ds);
+
+    // Lockstep pass: its own connection, one request at a time.
+    let stream = connect_when_up(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    let mut lockstep_logits: HashMap<u64, Vec<f64>> = HashMap::new();
+    for &(id, mode, k, row) in &cases {
+        writeln!(
+            writer,
+            "{}",
+            format_request(id, "digits_linear", k, mode, ds.images.row(row))
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).expect("lockstep response json");
+        assert!(resp.get("error").is_none(), "{line}");
+        assert_eq!(resp.get("id").unwrap().as_f64(), Some(id as f64), "{line}");
+        lockstep_logits.insert(id, resp.get("logits").unwrap().as_f64_vec().unwrap());
+    }
+
+    // Pipelined pass: hello handshake, then all 32 requests before any
+    // read, then reassemble the out-of-order replies by id.
+    let stream2 = connect_when_up(addr);
+    let mut reader2 = BufReader::new(stream2.try_clone().unwrap());
+    let mut writer2 = stream2;
+    writeln!(writer2, "{{\"cmd\":\"hello\"}}").unwrap();
+    let mut line2 = String::new();
+    reader2.read_line(&mut line2).unwrap();
+    let hello = Json::parse(line2.trim()).expect("hello json");
+    let features = hello.get("features").unwrap().as_arr().unwrap();
+    assert!(
+        features.iter().any(|f| f.as_str() == Some("pipelined")),
+        "{line2}"
+    );
+    assert_eq!(hello.get("max_inflight").unwrap().as_f64(), Some(32.0), "{line2}");
+
+    for &(id, mode, k, row) in &cases {
+        writeln!(
+            writer2,
+            "{}",
+            format_request(id, "digits_linear", k, mode, ds.images.row(row))
+        )
+        .unwrap();
+    }
+    writer2.flush().unwrap();
+    let mut reasm = Reassembler::new();
+    for _ in 0..cases.len() {
+        line2.clear();
+        reader2.read_line(&mut line2).unwrap();
+        reasm
+            .insert(line2.trim())
+            .expect("every reply carries a unique id");
+    }
+    assert_eq!(reasm.len(), cases.len());
+
+    let mut shard_seen = None;
+    for &(id, mode, k, row) in &cases {
+        let reply = reasm.take(id).expect("exactly one reply per id");
+        let resp = Json::parse(&reply).expect("pipelined response json");
+        assert!(resp.get("error").is_none(), "{reply}");
+        assert_eq!(resp.get("scheme").unwrap().as_str(), Some(mode.name()), "{reply}");
+        assert_eq!(resp.get("k").unwrap().as_f64(), Some(f64::from(k)), "{reply}");
+        let shard = resp.get("shard").unwrap().as_f64().unwrap();
+        match shard_seen {
+            None => shard_seen = Some(shard),
+            Some(s) => assert_eq!(s, shard, "pipelined connection must stay on one shard"),
+        }
+        if mode == RoundingMode::Deterministic {
+            // The acceptance bit-identity: deterministic rounding is
+            // stateless per row, so lockstep and pipelined serving of the
+            // same (model, k, pixels) must agree bit for bit no matter
+            // how the pipelined batches formed.
+            let got = resp.get("logits").unwrap().as_f64_vec().unwrap();
+            assert_eq!(
+                got, lockstep_logits[&id],
+                "deterministic reply for id {id} (k={k}, row {row}) diverged between \
+                 lockstep and pipelined modes"
+            );
+        }
+    }
+    assert!(reasm.is_empty());
+
+    writeln!(writer2, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    line2.clear();
+    reader2.read_line(&mut line2).unwrap();
+    server.join().unwrap().expect("server exits cleanly");
+}
+
+#[test]
+fn pipelined_shutdown_mid_stream_drains_accepted_ids() {
+    let addr = "127.0.0.1:17984";
+    let cfg = ServerConfig {
+        addr: addr.to_string(),
+        shards: 1,
+        max_batch: 8,
+        max_wait_us: 1_000,
+        queue_cap: 64,
+        train_n: TRAIN_N,
+        seed: 7,
+        prewarm_bits: vec![4],
+        shadow_rate: 0.0,
+        plan_cache_mb: 64,
+        max_inflight: 64,
+    };
+    let server = std::thread::spawn(move || serve(&cfg));
+    let ds = Dataset::synthesize(Task::Digits, 8, 0xD0D0);
+
+    let stream = connect_when_up(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    // Flood 16 requests and a shutdown in one burst, before reading
+    // anything: the reader accepts all 16 (submission order), then the
+    // shutdown stops intake — and the graceful drain must still answer
+    // every accepted id before the connection closes.
+    for id in 1..=16u64 {
+        let px = ds.images.row(id as usize % 8);
+        writeln!(
+            writer,
+            "{}",
+            format_request(id, "digits_linear", 4, RoundingMode::Dither, px)
+        )
+        .unwrap();
+    }
+    writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    writer.flush().unwrap();
+
+    let mut reasm = Reassembler::new();
+    let mut stopping_acks = 0;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).unwrap() == 0 {
+            break; // server closed the connection after draining
+        }
+        if line.contains("stopping") {
+            stopping_acks += 1;
+            continue;
+        }
+        reasm.insert(line.trim()).expect("one reply per accepted id");
+    }
+    assert_eq!(stopping_acks, 1, "exactly one shutdown ack");
+    assert_eq!(reasm.len(), 16, "every accepted id must be answered");
+    for id in 1..=16u64 {
+        let reply = reasm.take(id).expect("drained reply");
+        let resp = Json::parse(&reply).expect("response json");
+        assert!(
+            resp.get("error").is_none(),
+            "graceful drain must answer, not cancel: {reply}"
+        );
+        assert!(resp.get("pred").unwrap().as_f64().is_some(), "{reply}");
+    }
+    server.join().unwrap().expect("server exits cleanly");
+}
+
+#[test]
+fn exceeding_inflight_window_is_overloaded_with_offending_id() {
+    let addr = "127.0.0.1:17985";
+    let cfg = ServerConfig {
+        addr: addr.to_string(),
+        shards: 1,
+        max_batch: 32,
+        // Long linger + distinct batch keys: responses trickle out one key
+        // per linger period, so the client-side flood below outruns the
+        // tiny window deterministically.
+        max_wait_us: 150_000,
+        queue_cap: 64,
+        train_n: TRAIN_N,
+        seed: 7,
+        prewarm_bits: vec![],
+        // Plan cache capped at 0 + full shadow rate: the unplanned A/B
+        // baseline serves everything and must still populate
+        // stats.fidelity (regression for the shadow_observe bugfix).
+        shadow_rate: 1.0,
+        plan_cache_mb: 0,
+        max_inflight: 2,
+    };
+    let server = std::thread::spawn(move || serve(&cfg));
+    let ds = Dataset::synthesize(Task::Digits, 4, 0xBEEF);
+
+    let stream = connect_when_up(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    writeln!(writer, "{{\"cmd\":\"hello\"}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let hello = Json::parse(line.trim()).expect("hello json");
+    assert_eq!(hello.get("max_inflight").unwrap().as_f64(), Some(2.0), "{line}");
+
+    // 8 requests with distinct keys (k = 1..=8) in one burst. The reader
+    // accepts the first two; the rest exceed the window while the first
+    // batch is still lingering and must be bounced with their own ids.
+    for id in 1..=8u64 {
+        writeln!(
+            writer,
+            "{}",
+            format_request(id, "digits_linear", id as u32, RoundingMode::Dither, ds.images.row(0))
+        )
+        .unwrap();
+    }
+    writer.flush().unwrap();
+
+    let mut overloaded_ids = Vec::new();
+    let mut served_ids = Vec::new();
+    for _ in 0..8 {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).expect("response json");
+        let id = resp.get("id").unwrap().as_f64().unwrap() as u64;
+        if resp.get("overloaded").and_then(Json::as_bool).unwrap_or(false) {
+            overloaded_ids.push(id);
+        } else {
+            assert!(resp.get("error").is_none(), "{line}");
+            served_ids.push(id);
+        }
+    }
+    overloaded_ids.sort_unstable();
+    served_ids.sort_unstable();
+    assert_eq!(served_ids, vec![1, 2], "the first two fill the window");
+    assert_eq!(
+        overloaded_ids,
+        vec![3, 4, 5, 6, 7, 8],
+        "requests beyond the window are bounced with their own ids"
+    );
+
+    // The window freed up once the accepted requests completed: a bounced
+    // id retried now is accepted and served.
+    writeln!(
+        writer,
+        "{}",
+        format_request(3, "digits_linear", 3, RoundingMode::Dither, ds.images.row(0))
+    )
+    .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).expect("retry response json");
+    assert_eq!(resp.get("id").unwrap().as_f64(), Some(3.0), "{line}");
+    assert!(resp.get("error").is_none(), "{line}");
+
+    // stats.fidelity populated even though the plan cache is capped at 0
+    // (the unplanned baseline path feeds the estimators).
+    writeln!(writer, "{{\"cmd\":\"stats\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let stats = Json::parse(line.trim()).expect("stats json");
+    let fidelity = stats.get("fidelity").expect("fidelity block").as_arr().unwrap();
+    let samples: f64 = fidelity
+        .iter()
+        .filter_map(|e| e.get("samples").and_then(Json::as_f64))
+        .sum();
+    assert!(
+        samples > 0.0,
+        "plan cache capped at 0 must still feed fidelity estimators: {line}"
+    );
+    assert!(
+        stats.get("rejected").unwrap().as_f64().unwrap() >= 6.0,
+        "window rejections must be counted: {line}"
+    );
+
+    writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    line.clear();
     reader.read_line(&mut line).unwrap();
     server.join().unwrap().expect("server exits cleanly");
 }

@@ -306,6 +306,278 @@ fn prop_protocol_parse_never_panics_on_fuzz() {
 }
 
 #[test]
+fn prop_protocol_request_format_parse_roundtrip() {
+    // format_request → parse_message is lossless for every valid request
+    // shape: id, model, k, scheme, and the 784 pixels (the JSON float
+    // encoding prints shortest-roundtrip, so pixel equality is exact —
+    // the serving bit-identity checks depend on that).
+    use dither::coordinator::{format_request, parse_message, Message};
+
+    #[derive(Debug, Clone)]
+    struct RtCase {
+        id: u64,
+        model: usize,
+        k: u32,
+        mode: usize,
+        seed: u64,
+    }
+    struct RtGen;
+    impl Gen for RtGen {
+        type Item = RtCase;
+        fn gen(&self, rng: &mut Xoshiro256pp) -> RtCase {
+            RtCase {
+                id: rng.below(1 << 48),
+                model: rng.below(2) as usize,
+                k: 1 + rng.below(16) as u32,
+                mode: rng.below(3) as usize,
+                seed: rng.below(u64::MAX),
+            }
+        }
+    }
+    check_with(
+        Config {
+            cases: 64,
+            seed: 0x51DE,
+            max_shrink: 0,
+        },
+        &RtGen,
+        |case| {
+            let mut rng = Xoshiro256pp::new(case.seed);
+            let pixels: Vec<f64> = (0..784).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let model = ["digits_linear", "fashion_mlp"][case.model];
+            let mode = RoundingMode::ALL[case.mode];
+            let line = format_request(case.id, model, case.k, mode, &pixels);
+            match parse_message(&line) {
+                Ok(Message::Infer(r)) => {
+                    r.id == case.id
+                        && r.model == model
+                        && r.k == case.k
+                        && r.mode == mode
+                        && !r.auto
+                        && r.max_mse.is_none()
+                        && r.pixels == pixels
+                }
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_protocol_auto_request_roundtrip() {
+    // format_request_auto → parse_message preserves the id, model, and
+    // error budget, and always marks the request auto.
+    use dither::coordinator::{format_request_auto, parse_message, Message};
+    check_with(
+        Config {
+            cases: 64,
+            seed: 0xA072,
+            max_shrink: 0,
+        },
+        &Pair(UnitF64 { lo: -6.0, hi: 6.0 }, RangeUsize { lo: 0, hi: 1 << 20 }),
+        |&(log_budget, id)| {
+            let budget = 10f64.powf(log_budget);
+            let pixels = vec![0.25f64; 784];
+            let line = format_request_auto(id as u64, "fashion_mlp", budget, &pixels);
+            match parse_message(&line) {
+                Ok(Message::Infer(r)) => {
+                    r.auto
+                        && r.id == id as u64
+                        && r.model == "fashion_mlp"
+                        && r.max_mse == Some(budget)
+                }
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_protocol_auto_and_k_zero_shapes_accepted_exactly() {
+    // The auto-request acceptance surface: `"scheme":"auto"` (k optional
+    // and ignored) and `"k":0` (scheme ignored) both require a positive
+    // finite max_mse; everything else follows the fixed-request rules.
+    use dither::coordinator::{parse_message, Message};
+    const K_SPELL: [&str; 4] = ["", "\"k\":0,", "\"k\":4,", "\"k\":99,"];
+    const SCHEME_SPELL: [&str; 3] = ["auto", "dither", "fuzzy"];
+    const BUDGET_SPELL: [&str; 5] = [
+        "",
+        "\"max_mse\":-1,",
+        "\"max_mse\":0,",
+        "\"max_mse\":0.25,",
+        "\"max_mse\":1e999,",
+    ];
+    check(
+        &Pair(
+            Pair(RangeUsize { lo: 0, hi: 3 }, RangeUsize { lo: 0, hi: 2 }),
+            RangeUsize { lo: 0, hi: 4 },
+        ),
+        |&((k_kind, scheme_kind), budget_kind)| {
+            let pixels = vec!["0.5"; 784].join(",");
+            let line = format!(
+                "{{\"id\":9,{}{}\"scheme\":\"{}\",\"pixels\":[{}]}}",
+                K_SPELL[k_kind], BUDGET_SPELL[budget_kind], SCHEME_SPELL[scheme_kind], pixels
+            );
+            let auto = scheme_kind == 0 || k_kind == 1;
+            let should_parse = if auto {
+                budget_kind == 3 // a positive finite budget is required
+            } else {
+                // Fixed request: k must be present and in range, and the
+                // scheme spelling valid; the budget field is ignored.
+                k_kind == 2 && scheme_kind == 1
+            };
+            match parse_message(&line) {
+                Ok(Message::Infer(r)) => {
+                    should_parse
+                        && r.auto == auto
+                        && (!auto || r.max_mse == Some(0.25))
+                        && (auto || (r.k == 4 && r.max_mse.is_none()))
+                }
+                Ok(_) => false,
+                Err(_) => !should_parse,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_protocol_response_shapes_echo_their_id() {
+    // Every response shape — success, error, overload — parses back and
+    // echoes the id it was built with; response_id extracts it, which is
+    // what pipelined clients key on.
+    use dither::coordinator::{format_error, format_overloaded, format_response, response_id};
+    struct RespGen;
+    #[derive(Debug, Clone)]
+    struct RespCase {
+        id: u64,
+        pred: u8,
+        mode: usize,
+        k: u32,
+        latency: u64,
+        batch: usize,
+        shard: usize,
+        auto: bool,
+        kind: usize,
+    }
+    impl Gen for RespGen {
+        type Item = RespCase;
+        fn gen(&self, rng: &mut Xoshiro256pp) -> RespCase {
+            RespCase {
+                id: rng.below(1 << 48),
+                pred: rng.below(10) as u8,
+                mode: rng.below(3) as usize,
+                k: 1 + rng.below(16) as u32,
+                latency: rng.below(1 << 30),
+                batch: 1 + rng.below(64) as usize,
+                shard: rng.below(16) as usize,
+                auto: rng.bernoulli(0.5),
+                kind: rng.below(3) as usize,
+            }
+        }
+    }
+    check(&RespGen, |c| {
+        let mode = RoundingMode::ALL[c.mode];
+        let line = match c.kind {
+            0 => {
+                let logits: Vec<f64> = (0..10).map(|j| c.id as f64 * 0.5 + j as f64).collect();
+                format_response(
+                    c.id, c.pred, mode, c.k, &logits, c.latency, c.batch, c.shard, c.auto,
+                )
+            }
+            1 => format_error(c.id, "some \"quoted\" failure\nwith newline"),
+            _ => format_overloaded(c.id),
+        };
+        let Ok(parsed) = Json::parse(&line) else {
+            return false;
+        };
+        if response_id(&line) != Ok(c.id) {
+            return false;
+        }
+        match c.kind {
+            0 => {
+                parsed.get("pred").and_then(Json::as_f64) == Some(f64::from(c.pred))
+                    && parsed.get("scheme").and_then(Json::as_str) == Some(mode.name())
+                    && parsed.get("k").and_then(Json::as_f64) == Some(f64::from(c.k))
+                    && parsed.get("latency_us").and_then(Json::as_f64) == Some(c.latency as f64)
+                    && parsed.get("batch").and_then(Json::as_f64) == Some(c.batch as f64)
+                    && parsed.get("shard").and_then(Json::as_f64) == Some(c.shard as f64)
+                    && parsed.get("auto").and_then(Json::as_bool) == c.auto.then_some(true)
+                    && parsed.get("error").is_none()
+            }
+            1 => {
+                parsed.get("error").and_then(Json::as_str).is_some()
+                    && parsed.get("overloaded").is_none()
+            }
+            _ => {
+                parsed.get("overloaded").and_then(Json::as_bool) == Some(true)
+                    && parsed.get("error").and_then(Json::as_str) == Some("overloaded")
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_protocol_any_response_permutation_reassembles_by_id() {
+    // The pipelined-client invariant: whatever order responses arrive in,
+    // the Reassembler hands each request id back exactly its own reply.
+    use dither::coordinator::{format_error, format_overloaded, format_response, Reassembler};
+    check_with(
+        Config {
+            cases: 64,
+            seed: 0x0DD5,
+            max_shrink: 0,
+        },
+        &Pair(RangeUsize { lo: 1, hi: 64 }, RangeUsize { lo: 0, hi: 1 << 20 }),
+        |&(n, seed)| {
+            // Distinguishable payload per id: latency_us encodes the id.
+            let make = |i: usize| -> (u64, String) {
+                let id = 101 + i as u64;
+                let line = match i % 3 {
+                    0 => format_response(
+                        id,
+                        (i % 10) as u8,
+                        RoundingMode::ALL[i % 3],
+                        4,
+                        &[0.0; 10],
+                        i as u64 * 7 + 1,
+                        1,
+                        0,
+                        false,
+                    ),
+                    1 => format_error(id, &format!("err-{i}")),
+                    _ => format_overloaded(id),
+                };
+                (id, line)
+            };
+            let mut lines: Vec<(u64, String)> = (0..n).map(make).collect();
+            // Fisher–Yates with the case's seed: an arbitrary permutation.
+            let mut rng = Xoshiro256pp::new(seed as u64);
+            for i in (1..lines.len()).rev() {
+                let j = rng.below((i + 1) as u64) as usize;
+                lines.swap(i, j);
+            }
+            let mut reasm = Reassembler::new();
+            for (_, line) in &lines {
+                if reasm.insert(line).is_err() {
+                    return false;
+                }
+            }
+            if reasm.len() != n {
+                return false;
+            }
+            for i in 0..n {
+                let (id, original) = make(i);
+                match reasm.take(id) {
+                    Some(got) if got == original => {}
+                    _ => return false,
+                }
+            }
+            reasm.is_empty()
+        },
+    );
+}
+
+#[test]
 fn prop_op_truth_consistent_with_estimates_in_expectation() {
     // Coarse statistical property over random (x, y): the trial-mean of
     // dither estimates approaches the op truth for all ops.

@@ -23,6 +23,13 @@
 //! connection, matching out-of-order replies back to their requests by
 //! the echoed id and verifying each against the same reference engine.
 //!
+//! `--proxy` drives a cluster front tier instead of a single server: the
+//! per-connection shard-stability check is skipped (the proxy routes each
+//! request by its configuration key, so one connection's replies come
+//! from many backend shards), and with `--backends a,b,...` the run ends
+//! by scraping every backend directly and asserting the proxy's merged
+//! counters and fidelity samples equal the per-backend sums.
+//!
 //! Start the server first: `cargo run --release -- serve`
 //! Then:
 //! `cargo run --release --example load_gen -- --requests 1200 --clients 8`
@@ -102,6 +109,8 @@ fn main() -> Result<()> {
     let seed = args.parse_or("seed", 7u64);
     let expect_fidelity = args.flag("expect-fidelity");
     let pipelined = args.flag("pipelined");
+    let proxy = args.flag("proxy");
+    let backends: Vec<String> = args.parse_list_or("backends", Vec::new());
     let inflight = args.parse_or("inflight", 32usize).max(1);
 
     // The server may still be training its zoo (CI starts both at once).
@@ -152,6 +161,7 @@ fn main() -> Result<()> {
                         violations,
                         completed,
                         overloaded_retries,
+                        proxy,
                     )
                 } else {
                     run_client(
@@ -163,6 +173,7 @@ fn main() -> Result<()> {
                         violations,
                         completed,
                         overloaded_retries,
+                        proxy,
                     )
                 };
                 if let Err(e) = run {
@@ -236,8 +247,53 @@ fn main() -> Result<()> {
             entries.len()
         );
     }
+    // --proxy --backends a,b,...: the front tier's merged stats must be
+    // exactly the sum of the per-backend scrapes — counters and shadow
+    // samples alike (the load is quiescent by now, so sums are stable).
+    if proxy && !backends.is_empty() {
+        let merged_requests = stats.get("requests").and_then(Json::as_f64).unwrap_or(-1.0);
+        let merged_samples = fidelity_samples(&stats);
+        let mut sum_requests = 0.0;
+        let mut sum_samples = 0.0;
+        for b in &backends {
+            let s = fetch_stats(b)?;
+            sum_requests += s.get("requests").and_then(Json::as_f64).unwrap_or(0.0);
+            sum_samples += fidelity_samples(&s);
+        }
+        if merged_requests != sum_requests {
+            eprintln!(
+                "FAIL: proxy merged requests {merged_requests} != backend sum {sum_requests}"
+            );
+            std::process::exit(1);
+        }
+        if merged_samples != sum_samples {
+            eprintln!(
+                "FAIL: proxy merged fidelity samples {merged_samples} != backend sum {sum_samples}"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "proxy merge: requests {merged_requests} and fidelity samples {merged_samples} \
+             equal the {}-backend sums",
+            backends.len()
+        );
+    }
     println!("PASS: {done} mixed-scheme requests, zero incorrect replies");
     Ok(())
+}
+
+/// Total shadow samples across a stats reply's fidelity cells.
+fn fidelity_samples(stats: &Json) -> f64 {
+    stats
+        .get("fidelity")
+        .and_then(Json::as_arr)
+        .map(|cells| {
+            cells
+                .iter()
+                .filter_map(|c| c.get("samples").and_then(Json::as_f64))
+                .sum()
+        })
+        .unwrap_or(0.0)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -250,6 +306,7 @@ fn run_client(
     violations: &Mutex<Vec<String>>,
     completed: &AtomicU64,
     overloaded_retries: &AtomicU64,
+    proxy: bool,
 ) -> Result<()> {
     let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true).ok();
@@ -283,7 +340,12 @@ fn run_client(
             }
             break resp;
         };
-        if let Some(v) = check_reply(&case, id, &resp, &mut conn_shard, reference) {
+        // Through a proxy, one connection's requests fan out to many
+        // backends by key, so shard stability only holds per key — skip
+        // the per-connection check.
+        let mut scratch = None;
+        let shard_slot = if proxy { &mut scratch } else { &mut conn_shard };
+        if let Some(v) = check_reply(&case, id, &resp, shard_slot, reference) {
             violations.lock().unwrap().push(v);
         }
         completed.fetch_add(1, Ordering::Relaxed);
@@ -306,6 +368,7 @@ fn run_client_pipelined(
     violations: &Mutex<Vec<String>>,
     completed: &AtomicU64,
     overloaded_retries: &AtomicU64,
+    proxy: bool,
 ) -> Result<()> {
     let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true).ok();
@@ -395,7 +458,9 @@ fn run_client_pipelined(
             continue;
         }
         let case = workload.case(client * count + j);
-        if let Some(v) = check_reply(&case, id, &resp, &mut conn_shard, reference) {
+        let mut scratch = None;
+        let shard_slot = if proxy { &mut scratch } else { &mut conn_shard };
+        if let Some(v) = check_reply(&case, id, &resp, shard_slot, reference) {
             violations.lock().unwrap().push(v);
         }
         done += 1;

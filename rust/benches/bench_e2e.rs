@@ -8,7 +8,8 @@
 //! Run: `cargo bench --bench bench_e2e`   (`DITHER_BENCH_FAST=1` for a
 //! smoke run). Results are written to `results/bench_e2e.json`.
 
-use dither::coordinator::{format_request, ping, serve, Engine, ServerConfig};
+use dither::cluster::{run_proxy, ProxyConfig};
+use dither::coordinator::{format_request, ping, serve, wait_ready, Engine, ServerConfig};
 use dither::data::{Dataset, Task};
 use dither::fidelity::FidelityShard;
 use dither::rounding::RoundingMode;
@@ -202,6 +203,75 @@ fn main() {
         ("speedup", Json::Num(pipeline_speedup)),
     ]));
 
+    // ---- proxy over 2 backends vs direct -------------------------------
+    // Same mixed-key workload (k ∈ {2,4,8} per client, so the hash ring
+    // actually spreads keys over both backends) against (a) one direct
+    // server with K shards and (b) a consistent-hash proxy fronting two
+    // backends of K/2 shards each — equal core budget, one extra hop.
+    let backend_shards = (k_shards / 2).max(1);
+    let direct_addr = "127.0.0.1:18017";
+    let direct_cfg = server_cfg(direct_addr, k_shards);
+    let direct_server = std::thread::spawn(move || serve(&direct_cfg));
+    assert!(wait_ready(direct_addr, Duration::from_secs(120)), "direct server up");
+    let direct_rps = drive_mixed(direct_addr, clients, requests, &ds, 32);
+    shutdown_addr(direct_addr);
+    direct_server.join().expect("direct server thread").expect("direct server exits");
+
+    let (b1_addr, b2_addr, proxy_addr) = ("127.0.0.1:18014", "127.0.0.1:18015", "127.0.0.1:18016");
+    let (c1, c2) = (server_cfg(b1_addr, backend_shards), server_cfg(b2_addr, backend_shards));
+    let backend1 = std::thread::spawn(move || serve(&c1));
+    let backend2 = std::thread::spawn(move || serve(&c2));
+    assert!(wait_ready(b1_addr, Duration::from_secs(120)), "backend 1 up");
+    assert!(wait_ready(b2_addr, Duration::from_secs(120)), "backend 2 up");
+    let proxy_cfg = ProxyConfig {
+        addr: proxy_addr.to_string(),
+        backends: vec![b1_addr.to_string(), b2_addr.to_string()],
+        replicas: 64,
+        backend_inflight: 256,
+        probe_interval_ms: 200,
+        probe_timeout_ms: 2_000,
+        max_backoff_ms: 1_000,
+    };
+    let proxy = std::thread::spawn(move || run_proxy(&proxy_cfg));
+    assert!(wait_ready(proxy_addr, Duration::from_secs(60)), "proxy up");
+    let proxy_rps = drive_mixed(proxy_addr, clients, requests, &ds, 32);
+    shutdown_addr(proxy_addr);
+    proxy.join().expect("proxy thread").expect("proxy exits");
+    shutdown_addr(b1_addr);
+    shutdown_addr(b2_addr);
+    backend1.join().expect("backend 1 thread").expect("backend 1 exits");
+    backend2.join().expect("backend 2 thread").expect("backend 2 exits");
+
+    let proxy_name =
+        format!("e2e/serving_proxy/backends=2/shards={backend_shards}x2/mixed-k/window=32");
+    println!(
+        "{proxy_name:<56} {:>12}/s  ({requests} reqs, {clients} clients)",
+        format_count(proxy_rps)
+    );
+    let proxy_ratio = if direct_rps > 0.0 { proxy_rps / direct_rps } else { 0.0 };
+    println!(
+        "proxy over 2x{backend_shards}-shard backends vs direct {k_shards}-shard: {proxy_ratio:.2}x"
+    );
+    serving.push(Json::obj(vec![
+        ("name", Json::Str(proxy_name)),
+        ("backends", Json::Num(2.0)),
+        ("shards_per_backend", Json::Num(backend_shards as f64)),
+        ("requests", Json::Num(requests as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("items_per_s", Json::Num(proxy_rps)),
+    ]));
+    serving.push(Json::obj(vec![
+        (
+            "name",
+            Json::Str(format!(
+                "e2e/proxy_vs_direct/backends=2/shards={backend_shards}x2/mixed-k"
+            )),
+        ),
+        ("direct_items_per_s", Json::Num(direct_rps)),
+        ("proxy_items_per_s", Json::Num(proxy_rps)),
+        ("ratio", Json::Num(proxy_ratio)),
+    ]));
+
     // Merge the harness results with the serving measurements and the
     // plan-cache speedup ratios.
     let mut all: Vec<Json> = Json::parse(&bench.to_json())
@@ -235,6 +305,78 @@ fn main() {
         .expect("write bench json");
 }
 
+/// The serving shape the proxy comparison uses for every process: mixed
+/// prewarm so each client's bit width has resident plans, no shadow
+/// sampling, generous queue.
+fn server_cfg(addr: &str, shards: usize) -> ServerConfig {
+    ServerConfig {
+        addr: addr.to_string(),
+        shards,
+        max_batch: 32,
+        max_wait_us: 500,
+        queue_cap: 1024,
+        train_n: TRAIN_N,
+        seed: 7,
+        prewarm_bits: vec![2, 4, 8],
+        shadow_rate: 0.0,
+        plan_cache_mb: 64,
+        max_inflight: 512,
+        reply_timeout_ms: 120_000,
+    }
+}
+
+/// Graceful shutdown of a server or proxy at `addr`.
+fn shutdown_addr(addr: &str) {
+    let stream = TcpStream::connect(addr).expect("connect for shutdown");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{{\"cmd\":\"shutdown\"}}").expect("shutdown");
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+}
+
+/// Drive `addr` with a windowed mixed-key workload: each client issues
+/// dither requests at its own k ∈ {2, 4, 8}, so a consistent-hash front
+/// tier spreads the keys over its backends. Overload bounces are resent
+/// (they occupy no server work). Returns requests/second.
+fn drive_mixed(addr: &str, clients: usize, requests: usize, ds: &Dataset, window: usize) -> f64 {
+    let per_client = requests.div_ceil(clients);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = addr.to_string();
+            let img = ds.images.row(c % ds.len());
+            scope.spawn(move || {
+                let k = [2u32, 4, 8][c % 3];
+                let stream = TcpStream::connect(&addr).expect("connect");
+                stream.set_nodelay(true).ok();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let req = format_request(c as u64, "digits_linear", k, RoundingMode::Dither, img);
+                let mut line = String::new();
+                let mut sent = 0usize;
+                let mut recvd = 0usize;
+                while recvd < per_client {
+                    while sent < per_client && sent - recvd < window {
+                        writeln!(writer, "{req}").expect("send");
+                        sent += 1;
+                    }
+                    writer.flush().expect("flush");
+                    line.clear();
+                    reader.read_line(&mut line).expect("recv");
+                    if line.contains("\"overloaded\":true") {
+                        sent -= 1; // backpressure: resend in the next fill
+                        continue;
+                    }
+                    assert!(!line.contains("\"error\""), "{line}");
+                    recvd += 1;
+                }
+            });
+        }
+    });
+    (per_client * clients) as f64 / t0.elapsed().as_secs_f64()
+}
+
 /// Start a server with `shards` shards, drive it with `clients` concurrent
 /// connections issuing `requests` total k=4 dither requests, and return
 /// the measured requests/second (excluding startup/teardown). `window` is
@@ -261,6 +403,7 @@ fn serving_throughput(
         shadow_rate: 0.0,
         plan_cache_mb: 64,
         max_inflight: 64,
+        reply_timeout_ms: 120_000,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 

@@ -1,0 +1,476 @@
+//! Proxy-side handle to one upstream `serve` process: a pooled pipelined
+//! connection, an in-flight window, and the pending-reply table that tags
+//! out-of-order upstream completions back to the originating client.
+//!
+//! The proxy speaks the PR 4 pipelined protocol upstream: one persistent
+//! connection per backend carries every forwarded request, each rewritten
+//! to a proxy-unique upstream id before the send. A dedicated reader
+//! thread drains completions in whatever order the backend finishes them,
+//! looks each id up in the pending table, rewrites the id back to the
+//! client's original one and hands the line to that client connection's
+//! writer channel. The window (`min(configured, advertised max_inflight)`)
+//! bounds what this proxy keeps outstanding per backend; submissions
+//! beyond it are refused with [`ForwardError::Busy`] so the backpressure
+//! propagates to the client as an `overloaded` reply.
+//!
+//! Connection loss is failure-atomic per request: every pending reply is
+//! answered with a retryable `overloaded` line (the upstream id was never
+//! answered, so the client must retry; inference is idempotent under every
+//! scheme), the backend is marked down, and the health monitor
+//! ([`crate::cluster::health`]) reconnects with backoff.
+
+use crate::coordinator::protocol::{format_overloaded, parse_stats, response_id, StatsSummary};
+use crate::util::json::Json;
+use crate::util::threadpool::WorkerPool;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Why a forward was refused. The caller answers the client itself (the
+/// request was never submitted upstream, so no reply will arrive).
+#[derive(Debug, PartialEq, Eq)]
+pub enum ForwardError {
+    /// The backend's in-flight window is full — backpressure; the client
+    /// should back off and retry.
+    Busy,
+    /// The backend is down or its pooled connection is gone.
+    Down,
+}
+
+/// Where one forwarded request's reply goes: the originating client
+/// connection's writer channel, plus the id the client used (upstream
+/// replies carry the proxy's rewritten id and are mapped back).
+struct Route {
+    client_id: u64,
+    tx: Sender<String>,
+}
+
+/// The live pooled connection: the write half plus the negotiated window.
+struct Upstream {
+    writer: TcpStream,
+    window: usize,
+}
+
+/// One upstream `serve` process as seen by the proxy.
+pub struct Backend {
+    id: usize,
+    addr: String,
+    /// Configured per-backend window cap (the handshake may lower it).
+    cap: usize,
+    io_timeout: Duration,
+    /// Health verdict, owned by the health monitor.
+    healthy: AtomicBool,
+    /// Forwarded-but-unanswered requests on the pooled connection.
+    inflight: AtomicUsize,
+    /// Proxy-unique upstream request ids.
+    next_id: AtomicU64,
+    conn: Mutex<Option<Upstream>>,
+    /// Bumped per (re)connect; a reader whose epoch is stale exits
+    /// without touching state that now belongs to a newer connection.
+    epoch: AtomicU64,
+    pending: Mutex<HashMap<u64, Route>>,
+    readers: Mutex<WorkerPool>,
+    /// Proxy-wide stop flag (readers poll it between read timeouts).
+    stop: Arc<AtomicBool>,
+    // Scrape counters.
+    forwarded: AtomicU64,
+    reconnects: AtomicU64,
+    lost: AtomicU64,
+}
+
+impl Backend {
+    /// Handle for the backend at `addr`, initially down (the health
+    /// monitor probes it up). `cap` bounds the in-flight window.
+    pub fn new(
+        id: usize,
+        addr: String,
+        cap: usize,
+        io_timeout: Duration,
+        stop: Arc<AtomicBool>,
+    ) -> Backend {
+        Backend {
+            id,
+            addr,
+            cap: cap.max(1),
+            io_timeout,
+            healthy: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+            conn: Mutex::new(None),
+            epoch: AtomicU64::new(0),
+            pending: Mutex::new(HashMap::new()),
+            readers: Mutex::new(WorkerPool::new()),
+            stop,
+            forwarded: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            lost: AtomicU64::new(0),
+        }
+    }
+
+    /// Backend index (its hash-ring member id).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Configured in-flight window cap (the live window may be lower if
+    /// the backend advertised a smaller `max_inflight`).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Upstream address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Current health verdict.
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::Acquire)
+    }
+
+    /// Requests forwarded upstream over the backend's lifetime.
+    pub fn forwarded(&self) -> u64 {
+        self.forwarded.load(Ordering::Relaxed)
+    }
+
+    /// Times the pooled connection was (re)established.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Pending replies abandoned to connection loss (each was answered
+    /// with a retryable `overloaded` line).
+    pub fn lost(&self) -> u64 {
+        self.lost.load(Ordering::Relaxed)
+    }
+
+    /// Forwarded-but-unanswered requests right now.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Mark the backend serviceable (health monitor, after a successful
+    /// probe with the pooled connection up).
+    pub fn mark_up(&self) {
+        self.healthy.store(true, Ordering::Release);
+    }
+
+    /// Mark the backend down and abandon the pooled connection: every
+    /// pending reply is answered with a retryable `overloaded` line so no
+    /// client waits on a dead process.
+    pub fn mark_down(&self) {
+        self.abandon(self.conn.lock().unwrap());
+    }
+
+    /// Forward one inference request. `req` is the client's parsed request
+    /// line; its `id` is rewritten to a proxy-unique upstream id before
+    /// the send and the original `client_id` is recorded so the reader can
+    /// tag the completion back. `reply` is the client connection's writer
+    /// channel.
+    pub fn forward(
+        &self,
+        req: &Json,
+        client_id: u64,
+        reply: &Sender<String>,
+    ) -> Result<(), ForwardError> {
+        if !self.is_healthy() {
+            return Err(ForwardError::Down);
+        }
+        let mut conn = self.conn.lock().unwrap();
+        let Some(up) = conn.as_mut() else {
+            return Err(ForwardError::Down);
+        };
+        // Optimistic window claim: racing submitters cannot overshoot.
+        if self.inflight.fetch_add(1, Ordering::AcqRel) >= up.window {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(ForwardError::Busy);
+        }
+        let upstream_id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        self.pending.lock().unwrap().insert(
+            upstream_id,
+            Route {
+                client_id,
+                tx: reply.clone(),
+            },
+        );
+        let mut line = req.clone();
+        if let Json::Obj(fields) = &mut line {
+            fields.insert("id".to_string(), Json::Num(upstream_id as f64));
+        }
+        if writeln!(up.writer, "{line}").is_err() {
+            // Undo this request first so the caller's error reply is the
+            // only answer its client sees, then abandon the connection
+            // (draining everyone else's pendings with retryable replies).
+            self.pending.lock().unwrap().remove(&upstream_id);
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.abandon(conn);
+            return Err(ForwardError::Down);
+        }
+        self.forwarded.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Establish the pooled pipelined connection if it is gone: dial,
+    /// `hello` handshake (the backend must advertise pipelining; its
+    /// `max_inflight` caps our window), spawn the reader thread. True when
+    /// a connection is up on return.
+    pub fn ensure_connected(self: &Arc<Self>) -> bool {
+        if self.conn.lock().unwrap().is_some() {
+            return true;
+        }
+        let Ok(stream) = self.dial() else {
+            return false;
+        };
+        let Some(advertised) = hello_handshake(&stream, self.io_timeout) else {
+            return false;
+        };
+        let read_half = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return false,
+        };
+        // Short read timeout so the reader notices stop/reconnect. Writes
+        // are bounded by the *probe* timeout: forward() holds the conn
+        // mutex across its write, so a wedged backend may stall routing
+        // (and the health monitor's mark_down, which needs the same
+        // mutex) for at most one probe window before the write fails,
+        // the connection is abandoned, and keys fail over.
+        if read_half.set_read_timeout(Some(Duration::from_millis(250))).is_err()
+            || stream.set_write_timeout(Some(self.io_timeout)).is_err()
+        {
+            return false;
+        }
+        let mut conn = self.conn.lock().unwrap();
+        if conn.is_some() {
+            return true; // raced with another connector
+        }
+        let epoch = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+        *conn = Some(Upstream {
+            writer: stream,
+            window: self.cap.min(advertised.max(1)),
+        });
+        drop(conn);
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+        let me = self.clone();
+        let mut readers = self.readers.lock().unwrap();
+        readers.reap_finished();
+        readers.spawn(format!("dither-backend-{}-reader", self.id), move || {
+            reader_loop(&me, read_half, epoch);
+        });
+        true
+    }
+
+    /// Scrape the backend's `stats` over a short-lived connection (also
+    /// the health probe: `None` means down/unresponsive within the
+    /// timeout).
+    pub fn fetch_stats(&self) -> Option<StatsSummary> {
+        let stream = self.dial().ok()?;
+        stream.set_read_timeout(Some(self.io_timeout)).ok()?;
+        let mut reader = BufReader::new(stream.try_clone().ok()?);
+        let mut writer = stream;
+        writeln!(writer, "{{\"cmd\":\"stats\"}}").ok()?;
+        writer.flush().ok()?;
+        let mut line = String::new();
+        reader.read_line(&mut line).ok()?;
+        parse_stats(&line).ok()
+    }
+
+    /// Tear the backend down for proxy shutdown: abandon the connection
+    /// (answering every pending reply) and join the reader threads.
+    pub fn shutdown(&self) {
+        self.mark_down();
+        self.readers.lock().unwrap().join_all();
+    }
+
+    fn dial(&self) -> std::io::Result<TcpStream> {
+        let mut addrs = self.addr.to_socket_addrs()?;
+        let sock = addrs.next().ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, "unresolvable address")
+        })?;
+        let stream = TcpStream::connect_timeout(&sock, self.io_timeout)?;
+        stream.set_nodelay(true).ok();
+        Ok(stream)
+    }
+
+    /// Drop the pooled connection (if any), mark the backend down, and
+    /// answer every pending reply with a retryable `overloaded` line.
+    fn abandon(&self, mut conn: MutexGuard<'_, Option<Upstream>>) {
+        let _ = conn.take();
+        self.healthy.store(false, Ordering::Release);
+        drop(conn);
+        let drained: Vec<Route> = self.pending.lock().unwrap().drain().map(|(_, r)| r).collect();
+        for route in drained {
+            self.lost.fetch_add(1, Ordering::Relaxed);
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            let _ = route.tx.send(format_overloaded(route.client_id));
+        }
+    }
+
+    /// Reader-thread teardown: only acts if `epoch` is still the live
+    /// connection (a reconnect supersedes the old reader, which then just
+    /// exits).
+    fn teardown(&self, epoch: u64) {
+        let conn = self.conn.lock().unwrap();
+        if self.epoch.load(Ordering::Acquire) != epoch {
+            return;
+        }
+        self.abandon(conn);
+    }
+}
+
+/// `hello` handshake on a fresh upstream connection: the backend must
+/// advertise `pipelined`; returns its `max_inflight`.
+fn hello_handshake(stream: &TcpStream, io_timeout: Duration) -> Option<usize> {
+    stream.set_read_timeout(Some(io_timeout)).ok()?;
+    let mut reader = BufReader::new(stream.try_clone().ok()?);
+    let mut writer = stream;
+    writeln!(writer, "{{\"cmd\":\"hello\"}}").ok()?;
+    writer.flush().ok()?;
+    let mut line = String::new();
+    reader.read_line(&mut line).ok()?;
+    let hello = Json::parse(line.trim()).ok()?;
+    let pipelined = hello
+        .get("features")
+        .and_then(Json::as_arr)
+        .is_some_and(|f| f.iter().any(|v| v.as_str() == Some("pipelined")));
+    if !pipelined {
+        return None;
+    }
+    hello.get("max_inflight").and_then(Json::as_usize)
+}
+
+/// Rewrite a backend reply's echoed upstream id back to the client's
+/// original id. Field order is canonical (sorted) on both sides, so the
+/// payload bytes are exactly what the backend emitted.
+fn rewrite_reply_id(line: &str, client_id: u64) -> String {
+    match Json::parse(line) {
+        Ok(mut json) => {
+            if let Json::Obj(fields) = &mut json {
+                fields.insert("id".to_string(), Json::Num(client_id as f64));
+            }
+            json.to_string()
+        }
+        Err(_) => {
+            crate::coordinator::protocol::format_error(client_id, "unparseable backend reply")
+        }
+    }
+}
+
+/// The pooled connection's reader: drains upstream completions in
+/// whatever order the backend finishes them and routes each back to its
+/// originating client. Exits on socket loss, proxy stop, or epoch
+/// supersession, then tears the connection down (see
+/// [`Backend::teardown`]).
+fn reader_loop(backend: &Arc<Backend>, stream: TcpStream, epoch: u64) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        let stale = backend.epoch.load(Ordering::Acquire) != epoch;
+        if stale || backend.stop.load(Ordering::Acquire) {
+            break;
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // backend closed
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        // Every line on the pooled pipelined connection answers a
+        // forwarded request, so it echoes the upstream id we assigned.
+        // Unknown or id-less lines are stale duplicates — dropped.
+        let Ok(upstream_id) = response_id(trimmed) else {
+            continue;
+        };
+        let route = backend.pending.lock().unwrap().remove(&upstream_id);
+        if let Some(route) = route {
+            backend.inflight.fetch_sub(1, Ordering::AcqRel);
+            let _ = route.tx.send(rewrite_reply_id(trimmed, route.client_id));
+        }
+    }
+    backend.teardown(epoch);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn backend() -> Arc<Backend> {
+        Arc::new(Backend::new(
+            0,
+            "127.0.0.1:1".to_string(), // nothing listens here
+            4,
+            Duration::from_millis(100),
+            Arc::new(AtomicBool::new(false)),
+        ))
+    }
+
+    #[test]
+    fn down_backend_refuses_forwards() {
+        let b = backend();
+        let (tx, rx) = channel();
+        let req = Json::obj(vec![("id", Json::Num(7.0))]);
+        assert_eq!(b.forward(&req, 7, &tx), Err(ForwardError::Down));
+        assert!(rx.try_recv().is_err(), "refused forwards must not reply");
+        assert_eq!(b.forwarded(), 0);
+        // Connecting to a dead address fails and leaves the backend down.
+        assert!(!b.ensure_connected());
+        assert!(!b.is_healthy());
+        assert!(b.fetch_stats().is_none());
+    }
+
+    #[test]
+    fn abandon_answers_pending_with_retryable_overloaded() {
+        let b = backend();
+        let (tx, rx) = channel();
+        b.pending.lock().unwrap().insert(
+            41,
+            Route {
+                client_id: 9,
+                tx: tx.clone(),
+            },
+        );
+        b.inflight.fetch_add(1, Ordering::AcqRel);
+        b.mark_up();
+        b.mark_down();
+        let line = rx.recv().unwrap();
+        assert!(line.contains("\"overloaded\":true") && line.contains("\"id\":9"), "{line}");
+        assert_eq!(b.inflight(), 0, "abandon releases window slots");
+        assert_eq!(b.lost(), 1);
+        assert!(!b.is_healthy());
+    }
+
+    #[test]
+    fn reply_id_rewrite_preserves_payload() {
+        let reply = crate::coordinator::protocol::format_response(
+            981,
+            3,
+            crate::rounding::RoundingMode::Dither,
+            4,
+            &[0.125, -0.5],
+            77,
+            2,
+            1,
+            false,
+        );
+        let rewritten = rewrite_reply_id(&reply, 12);
+        assert_eq!(rewritten, reply.replace("\"id\":981", "\"id\":12"));
+        assert!(rewrite_reply_id("garbage", 5).contains("unparseable backend reply"));
+    }
+}

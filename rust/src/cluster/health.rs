@@ -1,0 +1,130 @@
+//! Backend health checking: periodic `stats` probes with timeout,
+//! mark-down/mark-up, and exponential probe backoff for dead backends.
+//!
+//! One monitor thread owns every backend's health verdict. Each probe is a
+//! short-lived connection issuing `{"cmd":"stats"}` and waiting (bounded)
+//! for the reply — exercising the full accept → parse → scrape path, so a
+//! process that is alive but wedged fails the probe too. A successful
+//! probe (re)establishes the backend's pooled pipelined connection before
+//! marking it up, so routed traffic always has somewhere to go the moment
+//! the verdict flips. A failed probe marks the backend down immediately —
+//! abandoning its pooled connection answers every pending reply with a
+//! retryable `overloaded` line — and doubles the probe interval up to
+//! `max_backoff` so a long-dead backend is not hammered.
+//!
+//! Routing reacts through [`crate::cluster::ring::HashRing::route_where`]:
+//! keys owned by a down backend deterministically fail over to the next
+//! live member and return home on mark-up (minimal remapping both ways).
+
+use crate::cluster::backend::Backend;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Probe cadence and bounds.
+#[derive(Clone, Debug)]
+pub struct HealthPolicy {
+    /// Probe interval for healthy backends (and the backoff floor).
+    pub interval: Duration,
+    /// Per-probe connect + reply timeout.
+    pub timeout: Duration,
+    /// Backoff ceiling for dead backends.
+    pub max_backoff: Duration,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            interval: Duration::from_millis(500),
+            timeout: Duration::from_secs(2),
+            max_backoff: Duration::from_secs(8),
+        }
+    }
+}
+
+/// Run the monitor until `stop` is set: probe each backend on its own
+/// schedule, mark up/down, and back off on failures. Blocks — the proxy
+/// runs it on a dedicated thread.
+pub fn health_loop(backends: &[Arc<Backend>], policy: &HealthPolicy, stop: &AtomicBool) {
+    let interval = policy.interval.max(Duration::from_millis(10));
+    let mut next = vec![Instant::now(); backends.len()];
+    let mut backoff = vec![interval; backends.len()];
+    while !stop.load(Ordering::Acquire) {
+        let now = Instant::now();
+        for (i, backend) in backends.iter().enumerate() {
+            if now < next[i] {
+                continue;
+            }
+            if backend.fetch_stats().is_some() && backend.ensure_connected() {
+                let was_down = !backend.is_healthy();
+                backend.mark_up();
+                if was_down {
+                    println!(
+                        "dither-proxy: backend {} ({}) is up",
+                        backend.id(),
+                        backend.addr()
+                    );
+                }
+                backoff[i] = interval;
+                next[i] = now + interval;
+            } else {
+                let was_up = backend.is_healthy();
+                backend.mark_down();
+                if was_up {
+                    println!(
+                        "dither-proxy: backend {} ({}) marked down",
+                        backend.id(),
+                        backend.addr()
+                    );
+                }
+                next[i] = now + backoff[i];
+                backoff[i] = backoff[i].saturating_mul(2).min(policy.max_backoff.max(interval));
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20).min(interval));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_is_sane() {
+        let p = HealthPolicy::default();
+        assert!(p.interval < p.max_backoff);
+        assert!(p.timeout >= p.interval);
+    }
+
+    #[test]
+    fn dead_backends_are_marked_down_with_backoff() {
+        // Nothing listens on the address: the first sweep probes (and
+        // fails) every backend, later sweeps respect the growing backoff.
+        let stop = Arc::new(AtomicBool::new(false));
+        let backends: Vec<Arc<Backend>> = (0..2)
+            .map(|i| {
+                Arc::new(Backend::new(
+                    i,
+                    "127.0.0.1:1".to_string(),
+                    4,
+                    Duration::from_millis(50),
+                    stop.clone(),
+                ))
+            })
+            .collect();
+        let policy = HealthPolicy {
+            interval: Duration::from_millis(20),
+            timeout: Duration::from_millis(50),
+            max_backoff: Duration::from_millis(100),
+        };
+        let stop2 = stop.clone();
+        let list = backends.clone();
+        let monitor = std::thread::spawn(move || health_loop(&list, &policy, &stop2));
+        std::thread::sleep(Duration::from_millis(150));
+        stop.store(true, Ordering::Release);
+        monitor.join().unwrap();
+        for b in &backends {
+            assert!(!b.is_healthy(), "unreachable backend must stay down");
+        }
+    }
+}

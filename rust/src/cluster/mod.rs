@@ -1,0 +1,29 @@
+//! L4 cluster front tier: scale the sharded server past one process.
+//!
+//! PR 1's shard abstraction hash-routes *inside* one process, so capacity
+//! is capped by a single process's cores. This subsystem lifts the same
+//! routing one level up: a `proxy` front tier accepts the unchanged line
+//! protocol, routes each request by its model/configuration key over a
+//! consistent-hash ring ([`ring`], virtual nodes, minimal remapping) to
+//! one of N backend `serve` processes, and speaks the pipelined protocol
+//! upstream through per-backend pooled connections with in-flight windows
+//! and out-of-order reply reassembly ([`backend`]). Health checking
+//! ([`health`]) marks dead backends down — their keys deterministically
+//! fail over to the next live ring member — and back up with exponential
+//! probe backoff. The proxy's `stats` merges every backend's counters and
+//! `fidelity` blocks ([`proxy`]), so the auto-precision view converges
+//! cluster-wide.
+//!
+//! Clients need no changes: the proxy is just another server speaking the
+//! same protocol, and deterministic replies through it are bit-identical
+//! to a direct backend connection (locked by `tests/cluster_proxy.rs`).
+
+pub mod backend;
+pub mod health;
+pub mod proxy;
+pub mod ring;
+
+pub use backend::{Backend, ForwardError};
+pub use health::{health_loop, HealthPolicy};
+pub use proxy::{run_proxy, ProxyConfig};
+pub use ring::{key_hash, HashRing, DEFAULT_REPLICAS};

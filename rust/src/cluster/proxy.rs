@@ -1,0 +1,549 @@
+//! The cluster front tier: a TCP proxy that speaks the same newline-JSON
+//! line protocol as `serve`, routes each inference request by its
+//! model/configuration key over the consistent-hash ring to one of N
+//! backend `serve` processes, and merges backend `stats` into one
+//! cluster-wide view.
+//!
+//! Request path: a client connection is a reader/writer pair exactly like
+//! the backend server's ([`crate::coordinator::server`]). The reader
+//! parses each line once; control commands are answered locally, and
+//! inference lines are routed by key —
+//! `model/scheme/k=K` for concrete requests, `model/auto` for
+//! auto-precision ones, so every request of one configuration lands on
+//! one backend and batches there, and a model's auto traffic converges on
+//! a single backend's estimators. Upstream, the proxy speaks the
+//! pipelined protocol through each backend's pooled connection
+//! ([`crate::cluster::backend`]); completions come back out of order and
+//! are tagged to the originating client id, so one slow backend never
+//! convoys another's replies.
+//!
+//! Failure model: a backend that fails its periodic health probe
+//! ([`crate::cluster::health`]) is marked down and its keys
+//! deterministically fail over to the next live ring member; requests
+//! that were in flight on a lost connection are answered with retryable
+//! `overloaded` replies. When every backend is down the proxy answers
+//! `overloaded` (and `ping` stops reporting `pong`, so
+//! [`crate::coordinator::server::wait_ready`] keeps waiting).
+//!
+//! `{"cmd":"stats"}` scrapes every healthy backend and merges: counters
+//! are summed, `per_shard_requests` concatenated in backend order,
+//! latency percentiles take the per-backend maximum (a sound upper
+//! bound — histograms are not emitted on the wire), and the `fidelity`
+//! blocks merge per `(model, scheme, k)` with the exact parallel-Welford
+//! reduction the backends use shard-to-shard — the cluster-wide
+//! estimator view. Proxy-tier counters ride in a `proxy` sub-object.
+//! `{"cmd":"shutdown"}` stops the **proxy only**; backends keep serving.
+
+use crate::cluster::backend::{Backend, ForwardError};
+use crate::cluster::health::{health_loop, HealthPolicy};
+use crate::cluster::ring::{HashRing, DEFAULT_REPLICAS};
+use crate::coordinator::protocol::{
+    format_error, format_hello, format_overloaded, line_id, FidelityCell, StatsSummary,
+};
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::threadpool::WorkerPool;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Front-tier configuration.
+#[derive(Clone, Debug)]
+pub struct ProxyConfig {
+    /// Listen address, e.g. `127.0.0.1:7900`.
+    pub addr: String,
+    /// Backend `serve` addresses (ring member ids follow list order).
+    pub backends: Vec<String>,
+    /// Virtual nodes per backend on the hash ring.
+    pub replicas: usize,
+    /// Per-backend in-flight window cap (the backend's advertised
+    /// `max_inflight` may lower it).
+    pub backend_inflight: usize,
+    /// Health-probe interval in milliseconds (and backoff floor).
+    pub probe_interval_ms: u64,
+    /// Probe / connect / upstream-handshake timeout in milliseconds.
+    pub probe_timeout_ms: u64,
+    /// Probe backoff ceiling for dead backends, in milliseconds.
+    pub max_backoff_ms: u64,
+}
+
+impl Default for ProxyConfig {
+    fn default() -> Self {
+        ProxyConfig {
+            addr: "127.0.0.1:7900".to_string(),
+            backends: Vec::new(),
+            replicas: DEFAULT_REPLICAS,
+            backend_inflight: 64,
+            probe_interval_ms: 500,
+            probe_timeout_ms: 2_000,
+            max_backoff_ms: 8_000,
+        }
+    }
+}
+
+/// Shared proxy state: the backend handles, the ring, and scrape counters.
+struct Cluster {
+    backends: Vec<Arc<Backend>>,
+    ring: HashRing,
+    stop: Arc<AtomicBool>,
+    started: Instant,
+    /// Requests the proxy itself bounced (no live backend / window full).
+    overloaded: AtomicU64,
+    /// Lines the proxy itself failed (bad JSON, unknown cmd).
+    errors: AtomicU64,
+    /// Client reply lines delivered, and the flushes they coalesced into.
+    flushed_lines: AtomicU64,
+    flushes: AtomicU64,
+}
+
+impl Cluster {
+    fn any_healthy(&self) -> bool {
+        self.backends.iter().any(|b| b.is_healthy())
+    }
+
+    fn healthy_count(&self) -> usize {
+        self.backends.iter().filter(|b| b.is_healthy()).count()
+    }
+}
+
+/// Run the front tier until a `shutdown` command arrives. Blocks.
+pub fn run_proxy(cfg: &ProxyConfig) -> Result<()> {
+    if cfg.backends.is_empty() {
+        crate::bail!("proxy needs at least one backend address (the hash ring cannot be empty)");
+    }
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let io_timeout = Duration::from_millis(cfg.probe_timeout_ms.max(100));
+    let backends: Vec<Arc<Backend>> = cfg
+        .backends
+        .iter()
+        .enumerate()
+        .map(|(id, addr)| {
+            Arc::new(Backend::new(
+                id,
+                addr.clone(),
+                cfg.backend_inflight.max(1),
+                io_timeout,
+                stop.clone(),
+            ))
+        })
+        .collect();
+    let cluster = Arc::new(Cluster {
+        ring: HashRing::with_members(cfg.replicas.max(1), backends.len()),
+        backends,
+        stop: stop.clone(),
+        started: Instant::now(),
+        overloaded: AtomicU64::new(0),
+        errors: AtomicU64::new(0),
+        flushed_lines: AtomicU64::new(0),
+        flushes: AtomicU64::new(0),
+    });
+    let policy = HealthPolicy {
+        interval: Duration::from_millis(cfg.probe_interval_ms.max(10)),
+        timeout: io_timeout,
+        max_backoff: Duration::from_millis(cfg.max_backoff_ms.max(cfg.probe_interval_ms.max(10))),
+    };
+    let mut service = WorkerPool::new();
+    {
+        let cluster = cluster.clone();
+        let stop = stop.clone();
+        service.spawn("dither-proxy-health".to_string(), move || {
+            health_loop(&cluster.backends, &policy, &stop);
+        });
+    }
+    println!(
+        "dither-proxy listening on {} ({} backends x {} vnodes, window {}/backend)",
+        cfg.addr,
+        cfg.backends.len(),
+        cfg.replicas.max(1),
+        cfg.backend_inflight.max(1)
+    );
+
+    let mut conns = WorkerPool::new();
+    let mut conn_id = 0u64;
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                conn_id += 1;
+                let id = conn_id;
+                let cluster = cluster.clone();
+                conns.spawn(format!("dither-proxy-conn-{id}"), move || {
+                    let _ = handle_client(stream, id, &cluster);
+                });
+                if conn_id % 64 == 0 {
+                    conns.reap_finished();
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                conns.reap_finished();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                stop.store(true, Ordering::Release);
+                conns.join_all();
+                for b in &cluster.backends {
+                    b.shutdown();
+                }
+                service.join_all();
+                return Err(e.into());
+            }
+        }
+    }
+    // Client readers see the stop flag and drop their channels; writers
+    // drain the replies still in flight from backend readers before the
+    // backends are torn down.
+    conns.join_all();
+    for b in &cluster.backends {
+        b.shutdown();
+    }
+    service.join_all();
+    println!("dither-proxy stopped");
+    Ok(())
+}
+
+/// The routing key of one request line: every request of one concrete
+/// configuration shares a key (and therefore a backend, where it
+/// batches); a model's auto-precision traffic shares one key so a single
+/// backend's estimators see all of it.
+fn route_key(json: &Json) -> String {
+    let model = json.get("model").and_then(Json::as_str).unwrap_or("digits_linear");
+    let scheme = json
+        .get("scheme")
+        .or_else(|| json.get("mode"))
+        .and_then(Json::as_str);
+    let k = json.get("k").and_then(Json::as_usize).unwrap_or(0);
+    if scheme == Some("auto") || k == 0 {
+        format!("{model}/auto")
+    } else {
+        format!("{model}/{}/k={k}", scheme.unwrap_or("?"))
+    }
+}
+
+/// One client connection: reader half here, writer thread alongside —
+/// the same split as the backend server, so control acks and routed
+/// completions funnel through one channel and the socket has one writer.
+/// The channel is unbounded but de-facto bounded: at most the sum of the
+/// backend windows plus one control line can be outstanding.
+fn handle_client(stream: TcpStream, conn_id: u64, cluster: &Arc<Cluster>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    let write_half = stream.try_clone()?;
+    write_half.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let (tx, rx) = channel::<String>();
+    let writer_alive = Arc::new(AtomicBool::new(true));
+    let alive = writer_alive.clone();
+    let wcluster = cluster.clone();
+    let writer = std::thread::Builder::new()
+        .name(format!("dither-proxy-conn-{conn_id}-writer"))
+        .spawn(move || client_writer(write_half, rx, &alive, &wcluster))?;
+    let result = client_read_loop(stream, cluster, &tx, &writer_alive);
+    drop(tx);
+    let _ = writer.join();
+    result
+}
+
+/// Writer half: the shared writer-drain protocol
+/// ([`crate::coordinator::server::drain_replies`]), with flushes counted
+/// cluster-wide for the `proxy` stats block.
+fn client_writer(stream: TcpStream, rx: Receiver<String>, alive: &AtomicBool, cluster: &Cluster) {
+    crate::coordinator::server::drain_replies(stream, rx, alive, |lines| {
+        cluster.flushes.fetch_add(1, Ordering::Relaxed);
+        cluster.flushed_lines.fetch_add(lines as u64, Ordering::Relaxed);
+    });
+}
+
+/// Reader half: parse each line once, answer control locally, route
+/// inference upstream.
+fn client_read_loop(
+    stream: TcpStream,
+    cluster: &Arc<Cluster>,
+    tx: &Sender<String>,
+    writer_alive: &AtomicBool,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if !writer_alive.load(Ordering::Acquire) {
+            break;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if cluster.stop.load(Ordering::Acquire) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            line.clear();
+            continue;
+        }
+        let mut stop = false;
+        let sent = match Json::parse(trimmed) {
+            Ok(json) => match json.get("cmd").and_then(Json::as_str) {
+                // `pong` only with a live backend: wait_ready against the
+                // proxy then means "the cluster can actually serve".
+                Some("ping") => {
+                    if cluster.any_healthy() {
+                        tx.send("{\"pong\":true}".to_string())
+                    } else {
+                        tx.send("{\"error\":\"no healthy backends\"}".to_string())
+                    }
+                }
+                // Advertise the sum of the backend windows: the true
+                // bound on what one client can usefully keep in flight
+                // through this proxy.
+                Some("hello") => tx.send(format_hello(
+                    cluster.backends.iter().map(|b| b.cap()).sum::<usize>().max(1),
+                )),
+                Some("stats") => tx.send(merged_stats_json(cluster)),
+                Some("shutdown") => {
+                    cluster.stop.store(true, Ordering::Release);
+                    stop = true;
+                    tx.send("{\"stopping\":true}".to_string())
+                }
+                Some(other) => {
+                    cluster.errors.fetch_add(1, Ordering::Relaxed);
+                    tx.send(format_error(0, &format!("unknown cmd {other:?}")))
+                }
+                None => dispatch(cluster, &json, tx),
+            },
+            Err(e) => {
+                cluster.errors.fetch_add(1, Ordering::Relaxed);
+                tx.send(format_error(line_id(trimmed), &e.to_string()))
+            }
+        };
+        if sent.is_err() {
+            break;
+        }
+        line.clear();
+        if stop {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Route one inference request: pick the key's owner among live backends,
+/// forward, and fail over once if the pooled connection died between the
+/// health check and the submit. Window-full backpressure and all-down
+/// both answer `overloaded` — retryable by design.
+fn dispatch(
+    cluster: &Arc<Cluster>,
+    json: &Json,
+    tx: &Sender<String>,
+) -> std::result::Result<(), std::sync::mpsc::SendError<String>> {
+    // Only objects can carry the rewritten upstream id (and the backend
+    // echoes an id only for object lines); anything else would leave its
+    // pending entry unanswerable, so refuse it here.
+    if !matches!(json, Json::Obj(_)) {
+        cluster.errors.fetch_add(1, Ordering::Relaxed);
+        return tx.send(format_error(0, "request must be a json object"));
+    }
+    let client_id = json
+        .get("id")
+        .and_then(Json::as_f64)
+        .map(|v| v as u64)
+        .unwrap_or(0);
+    let key = route_key(json);
+    let healthy = |m: usize| cluster.backends[m].is_healthy();
+    let Some(owner) = cluster.ring.route_where(&key, healthy) else {
+        cluster.overloaded.fetch_add(1, Ordering::Relaxed);
+        return tx.send(format_overloaded(client_id));
+    };
+    match cluster.backends[owner].forward(json, client_id, tx) {
+        Ok(()) => Ok(()),
+        Err(ForwardError::Busy) => {
+            // Backpressure stays on the key's owner: spilling a hot key
+            // to another backend would shatter its batches.
+            cluster.overloaded.fetch_add(1, Ordering::Relaxed);
+            tx.send(format_overloaded(client_id))
+        }
+        Err(ForwardError::Down) => {
+            // The pooled connection died after the health check; fail
+            // over once to the key's deterministic successor.
+            let next = cluster.ring.route_where(&key, |m| m != owner && healthy(m));
+            let forwarded = next.map(|m| cluster.backends[m].forward(json, client_id, tx));
+            match forwarded {
+                Some(Ok(())) => Ok(()),
+                _ => {
+                    cluster.overloaded.fetch_add(1, Ordering::Relaxed);
+                    tx.send(format_overloaded(client_id))
+                }
+            }
+        }
+    }
+}
+
+/// Scrape every healthy backend and merge into one `stats` JSON line (see
+/// the module docs for the merge semantics). The scrape is fresh rather
+/// than reusing the health prober's last fetch — operators (and the CI
+/// sum checks) expect point-in-time counters, not probe-interval-stale
+/// ones — and concurrent, so one slow backend costs one probe timeout,
+/// not one per backend.
+fn merged_stats_json(cluster: &Cluster) -> String {
+    let healthy: Vec<&Arc<Backend>> = cluster.backends.iter().filter(|b| b.is_healthy()).collect();
+    let summaries: Vec<StatsSummary> = std::thread::scope(|scope| {
+        let fetches: Vec<_> = healthy
+            .iter()
+            .map(|b| scope.spawn(move || b.fetch_stats()))
+            .collect();
+        fetches
+            .into_iter()
+            .filter_map(|f| f.join().ok().flatten())
+            .collect()
+    });
+    let mut total = StatsSummary::default();
+    let mut per_shard: Vec<f64> = Vec::new();
+    let mut cells: BTreeMap<(String, String, u32), FidelityCell> = BTreeMap::new();
+    for s in &summaries {
+        total.requests += s.requests;
+        total.errors += s.errors;
+        total.rejected += s.rejected;
+        total.timeouts += s.timeouts;
+        total.batches += s.batches;
+        total.batched_requests += s.batched_requests;
+        total.latency_sum_us += s.latency_sum_us;
+        total.p50_us = total.p50_us.max(s.p50_us);
+        total.p95_us = total.p95_us.max(s.p95_us);
+        total.p99_us = total.p99_us.max(s.p99_us);
+        total.uptime_s = total.uptime_s.max(s.uptime_s);
+        total.shards += s.shards;
+        total.writer_flushes += s.writer_flushes;
+        total.writer_flushed_lines += s.writer_flushed_lines;
+        per_shard.extend_from_slice(&s.per_shard_requests);
+        for cell in &s.fidelity {
+            let slot = (cell.model.clone(), cell.mode.name().to_string(), cell.k);
+            cells
+                .entry(slot)
+                .and_modify(|have| have.estimate.merge(&cell.estimate))
+                .or_insert_with(|| cell.clone());
+        }
+    }
+    let mean_batch = if total.batches == 0 {
+        0.0
+    } else {
+        total.batched_requests as f64 / total.batches as f64
+    };
+    let mean_us = if total.requests == 0 {
+        0.0
+    } else {
+        total.latency_sum_us / total.requests as f64
+    };
+    let uptime = cluster.started.elapsed().as_secs_f64();
+    let throughput = if uptime > 0.0 {
+        total.requests as f64 / uptime
+    } else {
+        0.0
+    };
+    let fidelity: Vec<Json> = cells
+        .values()
+        .map(|cell| {
+            Json::obj(vec![
+                ("model", Json::Str(cell.model.clone())),
+                ("scheme", Json::Str(cell.mode.name().to_string())),
+                ("k", Json::Num(f64::from(cell.k))),
+                ("samples", Json::Num(cell.estimate.samples as f64)),
+                ("bias", Json::Num(cell.estimate.bias)),
+                ("mse", Json::Num(cell.estimate.mse())),
+                ("variance", Json::Num(cell.estimate.variance())),
+            ])
+        })
+        .collect();
+    let forwarded: Vec<f64> = cluster.backends.iter().map(|b| b.forwarded() as f64).collect();
+    let inflight: Vec<f64> = cluster.backends.iter().map(|b| b.inflight() as f64).collect();
+    let reconnects: Vec<f64> = cluster.backends.iter().map(|b| b.reconnects() as f64).collect();
+    let lost: Vec<f64> = cluster.backends.iter().map(|b| b.lost() as f64).collect();
+    let proxy = Json::obj(vec![
+        ("backends", Json::Num(cluster.backends.len() as f64)),
+        ("healthy", Json::Num(cluster.healthy_count() as f64)),
+        ("reporting", Json::Num(summaries.len() as f64)),
+        ("overloaded", Json::Num(cluster.overloaded.load(Ordering::Relaxed) as f64)),
+        ("errors", Json::Num(cluster.errors.load(Ordering::Relaxed) as f64)),
+        ("uptime_s", Json::Num(uptime)),
+        ("forwarded", Json::nums(&forwarded)),
+        ("inflight", Json::nums(&inflight)),
+        ("reconnects", Json::nums(&reconnects)),
+        ("lost", Json::nums(&lost)),
+        (
+            "writer_flushes",
+            Json::Num(cluster.flushes.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "writer_flushed_lines",
+            Json::Num(cluster.flushed_lines.load(Ordering::Relaxed) as f64),
+        ),
+    ]);
+    Json::obj(vec![
+        ("requests", Json::Num(total.requests as f64)),
+        ("errors", Json::Num(total.errors as f64)),
+        ("rejected", Json::Num(total.rejected as f64)),
+        ("timeouts", Json::Num(total.timeouts as f64)),
+        ("batches", Json::Num(total.batches as f64)),
+        ("mean_batch", Json::Num(mean_batch)),
+        ("mean_us", Json::Num(mean_us)),
+        ("p50_us", Json::Num(total.p50_us)),
+        ("p95_us", Json::Num(total.p95_us)),
+        ("p99_us", Json::Num(total.p99_us)),
+        ("writer_flushes", Json::Num(total.writer_flushes as f64)),
+        ("writer_flushed_lines", Json::Num(total.writer_flushed_lines as f64)),
+        ("fidelity", Json::Arr(fidelity)),
+        ("uptime_s", Json::Num(total.uptime_s)),
+        ("throughput_rps", Json::Num(throughput)),
+        ("shards", Json::Num(total.shards as f64)),
+        ("per_shard_requests", Json::nums(&per_shard)),
+        ("proxy", proxy),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_key_groups_configurations_and_auto_traffic() {
+        let concrete = Json::parse(
+            "{\"id\":1,\"model\":\"fashion_mlp\",\"k\":4,\"scheme\":\"dither\",\"pixels\":[]}",
+        )
+        .unwrap();
+        assert_eq!(route_key(&concrete), "fashion_mlp/dither/k=4");
+        // The legacy "mode" alias routes like "scheme".
+        let alias = Json::parse("{\"model\":\"fashion_mlp\",\"k\":4,\"mode\":\"dither\"}").unwrap();
+        assert_eq!(route_key(&alias), route_key(&concrete));
+        // Auto spellings — "scheme":"auto" and "k":0 — share the model's
+        // auto key, no matter what concrete fields ride along.
+        let auto = Json::parse("{\"model\":\"fashion_mlp\",\"scheme\":\"auto\",\"max_mse\":0.5}")
+            .unwrap();
+        let k0 = Json::parse("{\"model\":\"fashion_mlp\",\"k\":0,\"scheme\":\"dither\"}").unwrap();
+        assert_eq!(route_key(&auto), "fashion_mlp/auto");
+        assert_eq!(route_key(&k0), "fashion_mlp/auto");
+        // Model is part of every key.
+        let other = Json::parse("{\"model\":\"digits_linear\",\"k\":4,\"scheme\":\"dither\"}")
+            .unwrap();
+        assert_ne!(route_key(&other), route_key(&concrete));
+    }
+
+    #[test]
+    fn empty_backend_list_is_refused() {
+        let cfg = ProxyConfig::default();
+        let err = run_proxy(&cfg).unwrap_err().to_string();
+        assert!(err.contains("hash ring cannot be empty"), "{err}");
+    }
+}

@@ -1,0 +1,220 @@
+//! Consistent-hash ring with virtual nodes: the cluster front tier's
+//! routing table.
+//!
+//! Each member (backend server process) owns `replicas` *virtual nodes* —
+//! pseudo-random points on a `u64` ring. A key routes to the member owning
+//! the first point clockwise from the key's hash. Virtual nodes smooth the
+//! per-member load (the classic consistent-hashing construction), and the
+//! construction gives **minimal remapping**: adding a member moves only
+//! the keys that now land on the new member's points, removing one moves
+//! only the removed member's keys — every other key keeps its owner. The
+//! same walk-clockwise rule yields deterministic re-routing around dead
+//! members ([`HashRing::route_where`]): a key whose owner is down always
+//! lands on the same next-alive member, so two proxy replicas agree
+//! without coordination.
+//!
+//! Point positions depend only on `(member id, replica index)` — never on
+//! insertion order — so rings built by different processes from the same
+//! membership are identical.
+
+use crate::util::rng::counter_hash;
+use std::collections::BTreeSet;
+
+/// Default virtual nodes per member: enough that a 2–16 member ring
+/// balances within a few tens of percent, cheap enough that membership
+/// changes stay trivial.
+pub const DEFAULT_REPLICAS: usize = 64;
+
+/// Salt for ring point placement (distinct from every other hash stream
+/// in the crate).
+const POINT_SALT: u64 = 0x5249_4E47_7C9B_55D1;
+
+/// Salt for key hashing.
+const KEY_SALT: u64 = 0x4B45_597C_0D17_E881;
+
+/// Stable 64-bit hash of a routing key (FNV-1a folded through the
+/// SplitMix64 finalizer so short keys still spread over the whole ring).
+pub fn key_hash(key: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in key.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    counter_hash(KEY_SALT, h)
+}
+
+/// The position of one virtual node.
+fn point(member: usize, replica: usize) -> u64 {
+    counter_hash(counter_hash(POINT_SALT, member as u64 + 1), replica as u64)
+}
+
+/// A consistent-hash ring over `usize` member ids.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// Virtual nodes per member.
+    replicas: usize,
+    /// Ring points, sorted by position: `(position, member)`.
+    points: Vec<(u64, usize)>,
+    /// Current membership.
+    members: BTreeSet<usize>,
+}
+
+impl HashRing {
+    /// Empty ring with `replicas` virtual nodes per member (min 1).
+    pub fn new(replicas: usize) -> HashRing {
+        HashRing {
+            replicas: replicas.max(1),
+            points: Vec::new(),
+            members: BTreeSet::new(),
+        }
+    }
+
+    /// Ring over members `0..n` (the proxy's static backend list).
+    pub fn with_members(replicas: usize, n: usize) -> HashRing {
+        let mut ring = HashRing::new(replicas);
+        for id in 0..n {
+            ring.add(id);
+        }
+        ring
+    }
+
+    /// Add a member (no-op if present). Only keys whose successor point
+    /// now belongs to `id` move; every other key keeps its owner.
+    pub fn add(&mut self, id: usize) {
+        if !self.members.insert(id) {
+            return;
+        }
+        for r in 0..self.replicas {
+            let p = (point(id, r), id);
+            let at = self.points.partition_point(|q| *q < p);
+            self.points.insert(at, p);
+        }
+    }
+
+    /// Remove a member (no-op if absent). Only the removed member's keys
+    /// move — each to the next point clockwise.
+    pub fn remove(&mut self, id: usize) {
+        if self.members.remove(&id) {
+            self.points.retain(|&(_, m)| m != id);
+        }
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True when the ring has no members.
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// True when `id` is a member.
+    pub fn contains(&self, id: usize) -> bool {
+        self.members.contains(&id)
+    }
+
+    /// The member owning `key`: the first ring point clockwise from the
+    /// key's hash. `None` on an empty ring — the caller must surface that
+    /// as an error, there is nowhere to route.
+    pub fn route(&self, key: &str) -> Option<usize> {
+        self.route_where(key, |_| true)
+    }
+
+    /// [`HashRing::route`] restricted to members `alive` accepts: walks
+    /// clockwise from the key's point, probing each *distinct* member in
+    /// ring order until one is alive. Keys owned by live members are
+    /// untouched by other members' deaths, and a dead owner's keys always
+    /// fail over to the same successor (deterministic re-routing).
+    pub fn route_where(&self, key: &str, alive: impl Fn(usize) -> bool) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = key_hash(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let n = self.points.len();
+        let mut tried: Vec<usize> = Vec::new();
+        for off in 0..n {
+            let (_, member) = self.points[(start + off) % n];
+            if tried.contains(&member) {
+                continue;
+            }
+            if alive(member) {
+                return Some(member);
+            }
+            tried.push(member);
+            if tried.len() == self.members.len() {
+                break; // every member probed and down
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("model-{}/k={}", i % 7, i)).collect()
+    }
+
+    #[test]
+    fn empty_ring_routes_nowhere() {
+        let ring = HashRing::new(64);
+        assert!(ring.is_empty());
+        assert_eq!(ring.route("digits_linear/k=4"), None);
+        assert_eq!(ring.route_where("x", |_| true), None);
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_membership_independent_of_order() {
+        let a = HashRing::with_members(32, 4);
+        let mut b = HashRing::new(32);
+        for id in [3, 0, 2, 1] {
+            b.add(id);
+        }
+        for k in keys(200) {
+            assert_eq!(a.route(&k), b.route(&k), "insertion order must not matter");
+        }
+    }
+
+    #[test]
+    fn all_members_own_keys() {
+        let ring = HashRing::with_members(64, 4);
+        let mut hit = [false; 4];
+        for k in keys(1000) {
+            hit[ring.route(&k).unwrap()] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "4 members must all own keys: {hit:?}");
+    }
+
+    #[test]
+    fn remove_then_add_restores_routing() {
+        let mut ring = HashRing::with_members(64, 3);
+        let before: Vec<_> = keys(500).iter().map(|k| ring.route(k)).collect();
+        ring.remove(1);
+        assert_eq!(ring.len(), 2);
+        assert!(!ring.contains(1));
+        ring.add(1);
+        let after: Vec<_> = keys(500).iter().map(|k| ring.route(k)).collect();
+        assert_eq!(before, after, "points depend only on (member, replica)");
+    }
+
+    #[test]
+    fn route_where_fails_over_deterministically() {
+        let ring = HashRing::with_members(64, 3);
+        for k in keys(300) {
+            let owner = ring.route(&k).unwrap();
+            // Owner alive: exclusion of others never moves the key.
+            assert_eq!(ring.route_where(&k, |m| m == owner), Some(owner));
+            // Owner dead: the key fails over, and always to the same member.
+            let f1 = ring.route_where(&k, |m| m != owner).unwrap();
+            let f2 = ring.route_where(&k, |m| m != owner).unwrap();
+            assert_ne!(f1, owner);
+            assert_eq!(f1, f2);
+        }
+        // Everyone dead: nowhere to route.
+        assert_eq!(ring.route_where("k", |_| false), None);
+    }
+}

@@ -21,14 +21,26 @@
 //! Shutdown has two flavours: [`Batcher::close`] stops intake and lets the
 //! worker drain what is queued (graceful), [`Batcher::stop`] aborts after
 //! the in-flight batch.
+//!
+//! **Reply watchdog**: the worker registers every dispatched batch with
+//! the pool's [`ReplyWatchdog`] before the engine call; a sweeper thread
+//! answers `timeout` (with the request id) for any reply still
+//! outstanding past the deadline and releases its window slot, bounding
+//! the damage of a wedged, non-panicking engine call.
+//!
+//! **Auto batches**: `"scheme":"auto"` requests queue under their `k = 0`
+//! placeholder key and resolve to a concrete `(scheme, k)` once per
+//! drained batch ([`BatchKey::is_auto`]), so adjacent auto requests under
+//! a pipelined flood coalesce onto one engine call.
 
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::protocol::{format_error, format_response, InferenceRequest};
 use crate::rounding::RoundingMode;
+use crate::train::ModelSpec;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::Sender;
+use std::sync::mpsc::SyncSender;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -37,6 +49,44 @@ use std::time::{Duration, Instant};
 /// of plan-aware batching).
 pub const STARVATION_MULT: u32 = 8;
 
+/// The shared completion state behind a [`ReplyTo`] and its watchdog
+/// handles: whichever completion path runs first — the worker's reply, a
+/// cancellation on drop, or a watchdog timeout — takes the channel sender
+/// and delivers its line; every later path is a no-op. Taking the sender
+/// also *drops* it, so a wedged engine call still holding the `ReplyTo`
+/// cannot keep the connection's writer channel open at shutdown.
+struct ReplyState {
+    id: u64,
+    tx: Mutex<Option<SyncSender<String>>>,
+    window: Option<Arc<AtomicUsize>>,
+    /// Records abnormal completions (cancellation, timeout) in the owning
+    /// shard's metrics.
+    metrics: Option<Arc<ShardMetrics>>,
+}
+
+impl ReplyState {
+    /// Deliver `line` if no completion path won yet; true when this call
+    /// was the winner (it then also released the window slot). The
+    /// receiving writer may already be gone on connection teardown; that
+    /// send failure is ignored.
+    fn complete(&self, line: String) -> bool {
+        let Some(tx) = self.tx.lock().unwrap().take() else {
+            return false;
+        };
+        let _ = tx.send(line);
+        if let Some(window) = &self.window {
+            window.fetch_sub(1, Ordering::AcqRel);
+        }
+        true
+    }
+
+    /// True once some completion path has delivered (or abandoned) the
+    /// reply.
+    fn is_done(&self) -> bool {
+        self.tx.lock().unwrap().is_none()
+    }
+}
+
 /// Where one request's response line goes: the submitting connection's
 /// writer channel, tagged with the request id so the reply can be matched
 /// out of order (pipelined connections funnel every reply through one
@@ -44,68 +94,191 @@ pub const STARVATION_MULT: u32 = 8;
 /// shard queues by dropping `Pending`s — sends a `cancelled` error
 /// instead, so a pipelined client is never left waiting on an accepted
 /// id. When a per-connection in-flight window is attached, delivering (or
-/// cancelling) the reply releases its window slot.
+/// cancelling, or timing out) the reply releases its window slot exactly
+/// once. [`ReplyTo::watch`] hands the watchdog a deadline-tagged handle to
+/// the same completion state.
 pub struct ReplyTo {
-    id: u64,
-    tx: Sender<String>,
-    window: Option<Arc<AtomicUsize>>,
-    /// Counts a cancellation as an error in the owning shard's metrics
-    /// (the lockstep loop used to record one when a reply channel died).
-    cancel_metrics: Option<Arc<ShardMetrics>>,
-    replied: bool,
+    state: Arc<ReplyState>,
 }
 
 impl ReplyTo {
-    /// Reply channel for request `id`.
-    pub fn new(id: u64, tx: Sender<String>) -> ReplyTo {
+    /// Reply channel for request `id`. The channel is the connection
+    /// writer's bounded funnel; capacity is sized so in-window replies
+    /// never block (see `server::writer channel`).
+    pub fn new(id: u64, tx: SyncSender<String>) -> ReplyTo {
         ReplyTo {
-            id,
-            tx,
-            window: None,
-            cancel_metrics: None,
-            replied: false,
+            state: Arc::new(ReplyState {
+                id,
+                tx: Mutex::new(Some(tx)),
+                window: None,
+                metrics: None,
+            }),
         }
     }
 
     /// Attach (and occupy) one slot of a connection's in-flight window;
-    /// the slot is released when the reply is sent or cancelled.
+    /// the slot is released when the reply is sent, cancelled, or timed
+    /// out. Builder-only: must run before any watchdog handle is taken.
     pub fn with_window(mut self, window: Arc<AtomicUsize>) -> ReplyTo {
         window.fetch_add(1, Ordering::AcqRel);
-        self.window = Some(window);
+        let state = Arc::get_mut(&mut self.state).expect("with_window before sharing");
+        state.window = Some(window);
         self
     }
 
-    /// Record a cancellation (reply dropped unanswered) as an error in
-    /// `metrics`, so hard-stopped requests stay visible in `stats`.
+    /// Record abnormal completions — a cancellation as an error, a
+    /// watchdog timeout as a timeout — in `metrics`, so hard-stopped and
+    /// wedged requests stay visible in `stats`. Builder-only, like
+    /// [`ReplyTo::with_window`].
     pub fn with_cancel_metrics(mut self, metrics: Arc<ShardMetrics>) -> ReplyTo {
-        self.cancel_metrics = Some(metrics);
+        let state = Arc::get_mut(&mut self.state).expect("with_cancel_metrics before sharing");
+        state.metrics = Some(metrics);
         self
     }
 
     /// The request id this reply channel serves.
     pub fn id(&self) -> u64 {
-        self.id
+        self.state.id
     }
 
-    /// Deliver the response line. The receiving writer may already be
-    /// gone on connection teardown; that send failure is ignored.
-    pub fn send(mut self, line: String) {
-        self.replied = true;
-        let _ = self.tx.send(line);
-        // Drop releases the window slot.
+    /// Deliver the response line (no-op if a watchdog timeout beat it).
+    pub fn send(self, line: String) {
+        self.state.complete(line);
+        // Drop then finds the sender gone and does nothing further.
+    }
+
+    /// A watchdog handle to this reply with the given deadline (see
+    /// [`ReplyWatchdog`]).
+    pub fn watch(&self, deadline: Instant) -> ReplyDeadline {
+        ReplyDeadline {
+            state: self.state.clone(),
+            deadline,
+        }
     }
 }
 
 impl Drop for ReplyTo {
     fn drop(&mut self) {
-        if !self.replied {
-            let _ = self.tx.send(format_error(self.id, "cancelled"));
-            if let Some(metrics) = &self.cancel_metrics {
+        if self.state.complete(format_error(self.state.id, "cancelled")) {
+            if let Some(metrics) = &self.state.metrics {
                 metrics.record_error();
             }
         }
-        if let Some(window) = &self.window {
-            window.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A deadline-tagged handle to an in-flight reply, held by the
+/// [`ReplyWatchdog`]. Expiring it answers `timeout` — with the request's
+/// id — and releases the window slot, unless the real reply (or a
+/// cancellation) won first.
+#[derive(Clone)]
+pub struct ReplyDeadline {
+    state: Arc<ReplyState>,
+    deadline: Instant,
+}
+
+impl ReplyDeadline {
+    /// When this reply is considered wedged.
+    pub fn deadline(&self) -> Instant {
+        self.deadline
+    }
+
+    /// True once the reply was delivered, cancelled, or timed out.
+    pub fn is_done(&self) -> bool {
+        self.state.is_done()
+    }
+
+    /// Answer `timeout` if nothing else completed the reply first; true
+    /// when this call won (it then also recorded the timeout in the
+    /// shard's metrics).
+    pub fn expire(&self) -> bool {
+        let won = self.state.complete(format_error(self.state.id, "timeout"));
+        if won {
+            if let Some(metrics) = &self.state.metrics {
+                metrics.record_timeout();
+            }
+        }
+        won
+    }
+}
+
+/// Deadline sweep over outstanding replies: restores the per-request time
+/// bound the lockstep loop used to have. Workers register each batch's
+/// replies just before the engine call; a sweeper thread (one per shard
+/// pool) periodically expires entries whose deadline passed — a wedged,
+/// non-panicking engine call then answers `timeout` with its id and
+/// releases its window slot instead of holding the reply channel (and the
+/// connection's writer at shutdown) forever. Completed entries are pruned
+/// on every sweep and opportunistically on registration, so the table
+/// tracks only genuinely outstanding replies.
+pub struct ReplyWatchdog {
+    timeout: Duration,
+    entries: Mutex<Vec<ReplyDeadline>>,
+    stopped: AtomicBool,
+}
+
+impl ReplyWatchdog {
+    /// Watchdog answering `timeout` for replies outstanding longer than
+    /// `timeout` past their dispatch (clamped to ≥ 1 ms).
+    pub fn new(timeout: Duration) -> ReplyWatchdog {
+        ReplyWatchdog {
+            timeout: timeout.max(Duration::from_millis(1)),
+            entries: Mutex::new(Vec::new()),
+            stopped: AtomicBool::new(false),
+        }
+    }
+
+    /// The configured per-dispatch deadline.
+    pub fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Register a batch that is about to enter an engine call.
+    pub fn register(&self, batch: &[Pending]) {
+        let deadline = Instant::now() + self.timeout;
+        let mut entries = self.entries.lock().unwrap();
+        entries.retain(|e| !e.is_done());
+        entries.extend(batch.iter().map(|p| p.respond_to.watch(deadline)));
+    }
+
+    /// One sweep at `now`: expire overdue replies, prune completed ones;
+    /// returns how many replies this sweep answered with `timeout`.
+    /// Expiry runs *outside* the entry lock — a `timeout` send can block
+    /// on a full writer channel, and that must never stall the workers
+    /// registering fresh batches.
+    pub fn sweep(&self, now: Instant) -> usize {
+        let mut due: Vec<ReplyDeadline> = Vec::new();
+        self.entries.lock().unwrap().retain(|e| {
+            if e.is_done() {
+                return false;
+            }
+            if now >= e.deadline() {
+                due.push(e.clone());
+                return false;
+            }
+            true
+        });
+        due.into_iter().filter(|e| e.expire()).count()
+    }
+
+    /// Replies currently tracked (outstanding at the last prune).
+    pub fn outstanding(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Stop the sweeper loop ([`ReplyWatchdog::run`]).
+    pub fn stop(&self) {
+        self.stopped.store(true, Ordering::Release);
+    }
+
+    /// Sweep periodically until [`ReplyWatchdog::stop`]. The shard pool
+    /// runs this on a dedicated thread; the tick is a fraction of the
+    /// deadline so expiry lands within ~12% of the configured bound.
+    pub fn run(&self) {
+        let tick = (self.timeout / 8).clamp(Duration::from_millis(5), Duration::from_millis(250));
+        while !self.stopped.load(Ordering::Acquire) {
+            std::thread::sleep(tick);
+            self.sweep(Instant::now());
         }
     }
 }
@@ -142,6 +315,15 @@ impl BatchKey {
 
     fn matches(&self, req: &InferenceRequest) -> bool {
         req.model == self.model && req.k == self.k && req.mode == self.mode
+    }
+
+    /// True for the auto-precision pseudo-key: auto requests enter the
+    /// queue under their parse-time placeholder (`k = 0`, which no
+    /// concrete request can carry), so a model's adjacent auto requests
+    /// share one key and the worker resolves the concrete `(scheme, k)`
+    /// once per drained batch.
+    pub fn is_auto(&self) -> bool {
+        self.k == 0
     }
 }
 
@@ -274,13 +456,19 @@ impl Batcher {
 
     /// Hard shutdown: the worker exits after its in-flight batch; queued
     /// requests are dropped here so their channels close and waiting
-    /// clients error out immediately.
+    /// clients error out immediately. The drop (which sends `cancelled`
+    /// lines into bounded writer channels) happens outside the queue
+    /// lock so a slow client cannot stall submitters.
     pub fn stop(&self) {
         self.stopped.store(true, Ordering::SeqCst);
         self.closed.store(true, Ordering::SeqCst);
-        let mut q = self.queue.lock().unwrap();
-        q.clear(); // drop Pendings -> their Senders -> receivers unblock
-        self.notify.notify_all();
+        let drained: Vec<Pending> = {
+            let mut q = self.queue.lock().unwrap();
+            let drained = q.drain(..).collect();
+            self.notify.notify_all();
+            drained
+        };
+        drop(drained); // Pendings -> ReplyTo cancellations -> clients unblock
     }
 
     /// True once `close` or `stop` has been called.
@@ -355,27 +543,73 @@ impl Batcher {
     }
 }
 
-/// One shard's batching worker loop: pull → execute → respond. Returns on
-/// shutdown (after draining, for a graceful close). `shard` tags response
-/// lines so clients can observe the routing.
-pub fn worker_loop(batcher: &Batcher, engine: &Engine, metrics: &ShardMetrics, shard: usize) {
+/// Resolve an auto-precision batch once, against this shard's live
+/// estimators: the strictest member budget picks the cheapest
+/// `(scheme, k)` the measurements (or the paper-shape prior) can justify,
+/// so every request in the drained batch shares one engine call. Batch
+/// granularity is the point — under a pipelined flood, adjacent auto
+/// requests no longer read estimator state mid-drain and split onto
+/// different keys.
+fn resolve_auto(
+    model: &str,
+    batch: &[Pending],
+    metrics: &ShardMetrics,
+) -> Result<(RoundingMode, u32), String> {
+    let spec = ModelSpec::from_name(model)
+        .ok_or_else(|| format!("unknown model family {model:?}"))?;
+    let budget = batch.iter().filter_map(|p| p.req.max_mse).fold(f64::INFINITY, f64::min);
+    let choice = crate::fidelity::choose(metrics.fidelity(), spec.index(), budget);
+    Ok((choice.mode, choice.k))
+}
+
+/// One shard's batching worker loop: pull → resolve (auto batches) →
+/// execute → respond. Returns on shutdown (after draining, for a graceful
+/// close). `shard` tags response lines so clients can observe the
+/// routing; when a `watchdog` is installed, every batch's replies are
+/// registered just before the engine call so a wedged call answers
+/// `timeout` instead of holding its window slots forever.
+pub fn worker_loop(
+    batcher: &Batcher,
+    engine: &Engine,
+    metrics: &ShardMetrics,
+    shard: usize,
+    watchdog: Option<&ReplyWatchdog>,
+) {
     while let Some((key, batch)) = batcher.next_batch() {
         metrics.record_batch(batch.len());
         let size = batch.len();
+        let (mode, k) = if key.is_auto() {
+            match resolve_auto(&key.model, &batch, metrics) {
+                Ok(choice) => choice,
+                Err(e) => {
+                    for p in batch {
+                        metrics.record_error();
+                        let id = p.req.id;
+                        p.respond_to.send(format_error(id, &e));
+                    }
+                    continue;
+                }
+            }
+        } else {
+            (key.mode, key.k)
+        };
+        if let Some(watchdog) = watchdog {
+            watchdog.register(&batch);
+        }
         let result = {
             let pixel_refs: Vec<&[f64]> = batch.iter().map(|p| p.req.pixels.as_slice()).collect();
-            engine.infer_batch(&key.model, key.k, key.mode, &pixel_refs)
+            engine.infer_batch(&key.model, k, mode, &pixel_refs)
         };
         match result {
             Ok(outputs) => {
                 for (p, out) in batch.into_iter().zip(outputs) {
                     let latency_us = p.enqueued.elapsed().as_micros() as u64;
-                    metrics.record_request(key.mode, latency_us);
+                    metrics.record_request(mode, latency_us);
                     let line = format_response(
                         p.req.id,
                         out.pred,
-                        key.mode,
-                        key.k,
+                        mode,
+                        k,
                         &out.logits,
                         latency_us,
                         size,
@@ -399,7 +633,7 @@ pub fn worker_loop(batcher: &Batcher, engine: &Engine, metrics: &ShardMetrics, s
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use std::sync::mpsc::sync_channel;
     use std::sync::Arc;
 
     fn req(model: &str, k: u32, mode: RoundingMode, id: u64) -> InferenceRequest {
@@ -420,7 +654,7 @@ mod tests {
         mode: RoundingMode,
         id: u64,
     ) -> (Pending, std::sync::mpsc::Receiver<String>) {
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(64);
         (
             Pending {
                 req: req(model, k, mode, id),
@@ -618,7 +852,7 @@ mod tests {
     fn reply_to_cancels_on_drop_and_releases_window_slot() {
         use std::sync::atomic::AtomicUsize;
         let window = Arc::new(AtomicUsize::new(0));
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(8);
         // A delivered reply: slot taken while in flight, freed after.
         let reply = ReplyTo::new(5, tx.clone()).with_window(window.clone());
         assert_eq!(reply.id(), 5);
@@ -637,13 +871,132 @@ mod tests {
         // With metrics attached, a cancellation counts as an error — a
         // delivered reply does not.
         let all = crate::coordinator::metrics::Metrics::new(1);
-        let (tx2, _rx2) = channel();
+        let (tx2, _rx2) = sync_channel(8);
         let delivered = ReplyTo::new(7, tx2.clone()).with_cancel_metrics(all.shard(0));
         delivered.send("{\"id\":7}".to_string());
         assert!(all.snapshot_json().contains("\"errors\":0"));
         let cancelled = ReplyTo::new(8, tx2).with_cancel_metrics(all.shard(0));
         drop(cancelled);
         assert!(all.snapshot_json().contains("\"errors\":1"));
+    }
+
+    #[test]
+    fn watchdog_times_out_wedged_replies_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        let all = crate::coordinator::metrics::Metrics::new(1);
+        let window = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = sync_channel(8);
+        let reply = ReplyTo::new(31, tx)
+            .with_window(window.clone())
+            .with_cancel_metrics(all.shard(0));
+        assert_eq!(window.load(Ordering::SeqCst), 1);
+        let dog = ReplyWatchdog::new(Duration::from_millis(20));
+        let p = Pending {
+            req: req("digits_linear", 4, RoundingMode::Dither, 31),
+            respond_to: reply,
+            enqueued: Instant::now(),
+        };
+        dog.register(std::slice::from_ref(&p));
+        assert_eq!(dog.outstanding(), 1);
+        // Before the deadline nothing expires.
+        assert_eq!(dog.sweep(Instant::now()), 0);
+        assert_eq!(dog.outstanding(), 1);
+        // Past the deadline the reply is answered `timeout` with its id,
+        // the window slot is released, and the timeout is counted.
+        assert_eq!(dog.sweep(Instant::now() + Duration::from_millis(25)), 1);
+        assert_eq!(dog.outstanding(), 0);
+        let line = rx.recv().unwrap();
+        assert!(line.contains("timeout") && line.contains("\"id\":31"), "{line}");
+        assert_eq!(window.load(Ordering::SeqCst), 0, "timeout releases the slot");
+        assert!(all.snapshot_json().contains("\"timeouts\":1"));
+        // The wedged worker's late reply is a no-op: no second line, no
+        // double slot release, and the drop is not a cancellation.
+        p.respond_to.send("{\"id\":31,\"pred\":1}".to_string());
+        assert!(rx.try_recv().is_err(), "timed-out reply must answer once");
+        assert_eq!(window.load(Ordering::SeqCst), 0);
+        assert!(all.snapshot_json().contains("\"errors\":0"));
+    }
+
+    #[test]
+    fn watchdog_ignores_replies_that_answered_in_time() {
+        let all = crate::coordinator::metrics::Metrics::new(1);
+        let dog = ReplyWatchdog::new(Duration::from_millis(10));
+        let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, 5);
+        dog.register(std::slice::from_ref(&p));
+        p.respond_to.send("{\"id\":5,\"pred\":2}".to_string());
+        // Even an overdue sweep finds the entry completed.
+        assert_eq!(dog.sweep(Instant::now() + Duration::from_secs(1)), 0);
+        assert_eq!(dog.outstanding(), 0);
+        assert!(rx.recv().unwrap().contains("\"pred\""));
+        assert!(rx.try_recv().is_err());
+        assert!(all.snapshot_json().contains("\"timeouts\":0"));
+        // A cancellation (drop) also wins over a later sweep.
+        let (p2, rx2) = pending("digits_linear", 4, RoundingMode::Dither, 6);
+        dog.register(std::slice::from_ref(&p2));
+        drop(p2);
+        assert_eq!(dog.sweep(Instant::now() + Duration::from_secs(1)), 0);
+        assert!(rx2.recv().unwrap().contains("cancelled"));
+    }
+
+    #[test]
+    fn watchdog_run_loop_sweeps_until_stopped() {
+        let dog = Arc::new(ReplyWatchdog::new(Duration::from_millis(20)));
+        let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, 9);
+        dog.register(std::slice::from_ref(&p));
+        let d2 = dog.clone();
+        let sweeper = std::thread::spawn(move || d2.run());
+        // The sweeper answers the wedged reply within a few ticks.
+        let line = rx.recv_timeout(Duration::from_secs(2)).expect("timeout reply");
+        assert!(line.contains("timeout"), "{line}");
+        dog.stop();
+        sweeper.join().unwrap();
+        drop(p); // late drop after timeout: no further reply possible
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn auto_requests_share_one_batch_key_and_resolve_per_batch() {
+        // Auto requests carry the parse-time placeholder (k=0, Dither):
+        // they must coalesce into one batch regardless of budget, and
+        // never mix with concrete-key traffic.
+        let b = Batcher::new(8, Duration::from_millis(1), 64);
+        let mut receivers = Vec::new();
+        for (id, budget) in [(1u64, 0.5f64), (2, 2.0), (3, 1.0)] {
+            let (tx, rx) = sync_channel(8);
+            let mut r = req("digits_linear", 0, RoundingMode::Dither, id);
+            r.auto = true;
+            r.max_mse = Some(budget);
+            b.submit(Pending {
+                req: r,
+                respond_to: ReplyTo::new(id, tx),
+                enqueued: Instant::now(),
+            })
+            .unwrap();
+            receivers.push(rx);
+        }
+        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 9);
+        b.submit(p).unwrap();
+        let (key, batch) = b.next_batch().unwrap();
+        assert!(key.is_auto());
+        assert_eq!(batch.len(), 3, "adjacent auto requests form one batch");
+        // Per-batch resolution: strictest member budget, cold estimators
+        // → the paper-shape prior picks the cheapest feasible k, and the
+        // whole batch lands on that single (scheme, k).
+        let metrics = crate::coordinator::metrics::Metrics::new(1);
+        let (mode, k) = resolve_auto("digits_linear", &batch, &metrics.shard(0)).unwrap();
+        let strictest = crate::fidelity::choose(
+            metrics.shard(0).fidelity(),
+            crate::train::ModelSpec::DigitsLinear.index(),
+            0.5,
+        );
+        assert_eq!((mode, k), (strictest.mode, strictest.k));
+        assert!(k >= 1, "resolution must produce a servable bit width");
+        // The concrete k=4 request stayed behind under its own key.
+        let (key2, batch2) = b.next_batch().unwrap();
+        assert!(!key2.is_auto());
+        assert_eq!(batch2[0].req.id, 9);
+        // Unknown models fail resolution with a per-batch error.
+        assert!(resolve_auto("nope", &batch, &metrics.shard(0)).is_err());
     }
 
     #[test]
@@ -682,7 +1035,7 @@ mod tests {
 
         // Worker: ~1 ms simulated service per batch, reporting when the
         // cold key is drained and how much hot work preceded it.
-        let (served_tx, served_rx) = channel();
+        let (served_tx, served_rx) = std::sync::mpsc::channel();
         let wb = b.clone();
         let worker = std::thread::spawn(move || {
             let mut hot_batches = 0usize;

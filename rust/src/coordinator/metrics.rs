@@ -130,8 +130,11 @@ pub struct ShardMetrics {
     requests: AtomicU64,
     errors: AtomicU64,
     rejected: AtomicU64,
+    timeouts: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
+    writer_flushes: AtomicU64,
+    writer_flushed_lines: AtomicU64,
     latency_sum_us: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     started: Instant,
@@ -159,8 +162,11 @@ impl ShardMetrics {
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
+            writer_flushes: AtomicU64::new(0),
+            writer_flushed_lines: AtomicU64::new(0),
             latency_sum_us: AtomicU64::new(0),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             started: Instant::now(),
@@ -200,6 +206,19 @@ impl ShardMetrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a watchdog-answered reply (an accepted request whose engine
+    /// call outlived the reply deadline).
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one writer-side coalesced flush that delivered `lines`
+    /// reply lines in a single syscall.
+    pub fn record_flush(&self, lines: usize) {
+        self.writer_flushes.fetch_add(1, Ordering::Relaxed);
+        self.writer_flushed_lines.fetch_add(lines as u64, Ordering::Relaxed);
+    }
+
     /// Record one executed batch of the given size.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -215,8 +234,11 @@ impl ShardMetrics {
         acc.requests += self.requests.load(Ordering::Relaxed);
         acc.errors += self.errors.load(Ordering::Relaxed);
         acc.rejected += self.rejected.load(Ordering::Relaxed);
+        acc.timeouts += self.timeouts.load(Ordering::Relaxed);
         acc.batches += self.batches.load(Ordering::Relaxed);
         acc.batched_requests += self.batched_requests.load(Ordering::Relaxed);
+        acc.writer_flushes += self.writer_flushes.load(Ordering::Relaxed);
+        acc.writer_flushed_lines += self.writer_flushed_lines.load(Ordering::Relaxed);
         acc.latency_sum_us += self.latency_sum_us.load(Ordering::Relaxed);
         for (slot, bucket) in acc.buckets.iter_mut().zip(&self.latency_buckets) {
             *slot += bucket.load(Ordering::Relaxed);
@@ -263,8 +285,11 @@ struct Merged {
     requests: u64,
     errors: u64,
     rejected: u64,
+    timeouts: u64,
     batches: u64,
     batched_requests: u64,
+    writer_flushes: u64,
+    writer_flushed_lines: u64,
     latency_sum_us: u64,
     buckets: [u64; BUCKETS],
     /// Recent-window (count, buckets) per scheme, in [`SCHEME_ORDER`].
@@ -278,8 +303,11 @@ impl Default for Merged {
             requests: 0,
             errors: 0,
             rejected: 0,
+            timeouts: 0,
             batches: 0,
             batched_requests: 0,
+            writer_flushes: 0,
+            writer_flushed_lines: 0,
             latency_sum_us: 0,
             buckets: [0; BUCKETS],
             recent: [(0, [0; BUCKETS]); 3],
@@ -396,7 +424,10 @@ impl Metrics {
             ("requests", Json::Num(m.requests as f64)),
             ("errors", Json::Num(m.errors as f64)),
             ("rejected", Json::Num(m.rejected as f64)),
+            ("timeouts", Json::Num(m.timeouts as f64)),
             ("batches", Json::Num(m.batches as f64)),
+            ("writer_flushes", Json::Num(m.writer_flushes as f64)),
+            ("writer_flushed_lines", Json::Num(m.writer_flushed_lines as f64)),
             ("mean_batch", Json::Num(mean_batch)),
             ("mean_us", Json::Num(mean_us)),
             ("p50_us", Json::Num(m.percentile_us(0.50))),
@@ -557,6 +588,22 @@ mod tests {
                 Some(0.0)
             );
         }
+    }
+
+    #[test]
+    fn timeout_and_flush_counters_merge_on_scrape() {
+        let m = Metrics::new(2);
+        m.shard(0).record_timeout();
+        m.shard(1).record_timeout();
+        m.shard(0).record_flush(4); // one syscall delivered 4 replies
+        m.shard(0).record_flush(1);
+        m.shard(1).record_flush(3);
+        let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
+        assert_eq!(json.get("timeouts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(json.get("writer_flushes").unwrap().as_f64(), Some(3.0));
+        assert_eq!(json.get("writer_flushed_lines").unwrap().as_f64(), Some(8.0));
+        // Timeouts are their own counter, not errors.
+        assert_eq!(json.get("errors").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

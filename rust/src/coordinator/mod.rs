@@ -20,12 +20,13 @@ pub mod protocol;
 pub mod server;
 pub mod shard;
 
-pub use batcher::{Batcher, Pending, ReplyTo, SubmitError};
+pub use batcher::{Batcher, Pending, ReplyDeadline, ReplyTo, ReplyWatchdog, SubmitError};
 pub use engine::{Engine, InferenceOutput};
 pub use metrics::{Metrics, ShardMetrics};
 pub use protocol::{
     format_error, format_hello, format_overloaded, format_request, format_request_auto,
-    format_response, line_id, parse_message, response_id, InferenceRequest, Message, Reassembler,
+    format_response, line_id, parse_message, parse_stats, response_id, FidelityCell,
+    InferenceRequest, Message, Reassembler, StatsSummary,
 };
-pub use server::{ping, serve, wait_ready, ServerConfig};
+pub use server::{ping, serve, wait_ready, ServerConfig, WRITER_CONTROL_SLACK};
 pub use shard::{ShardConfig, ShardPool};

@@ -32,6 +32,7 @@
 //! per-connection in-flight window; clients that never send it can keep
 //! the old lockstep discipline (one request, then one reply) unchanged.
 
+use crate::fidelity::FidelityEstimate;
 use crate::rounding::RoundingMode;
 use crate::util::json::Json;
 use std::collections::HashMap;
@@ -310,6 +311,130 @@ impl Reassembler {
     }
 }
 
+/// Client-side view of one `stats.fidelity` cell: the `(model, scheme, k)`
+/// label plus the Welford estimate reconstructed from the emitted
+/// `samples`/`bias`/`variance` fields (`m2 = variance · samples`), so
+/// cells scraped from different server processes can be merged with
+/// [`FidelityEstimate::merge`] — the cluster proxy's cross-node view.
+#[derive(Clone, Debug)]
+pub struct FidelityCell {
+    /// Model family name.
+    pub model: String,
+    /// Rounding scheme.
+    pub mode: RoundingMode,
+    /// Quantizer bit width.
+    pub k: u32,
+    /// Reconstructed Welford estimate.
+    pub estimate: FidelityEstimate,
+}
+
+/// Client-side parse of a `stats` reply: the counters and fidelity cells a
+/// merging consumer (the cluster proxy's cluster-wide scrape, the load
+/// generator's sum checks) needs. Counter fields absent from older
+/// servers parse as zero.
+#[derive(Clone, Debug, Default)]
+pub struct StatsSummary {
+    /// Completed requests.
+    pub requests: u64,
+    /// Protocol/execution errors (cancellations included).
+    pub errors: u64,
+    /// Overload rejections (queue or in-flight window).
+    pub rejected: u64,
+    /// Watchdog-answered requests.
+    pub timeouts: u64,
+    /// Executed batches.
+    pub batches: u64,
+    /// Requests served inside those batches (recovered from `mean_batch`).
+    pub batched_requests: u64,
+    /// Total end-to-end latency (recovered from `mean_us`).
+    pub latency_sum_us: f64,
+    /// Lifetime latency percentiles (µs).
+    pub p50_us: f64,
+    /// 95th percentile (µs).
+    pub p95_us: f64,
+    /// 99th percentile (µs).
+    pub p99_us: f64,
+    /// Server uptime in seconds.
+    pub uptime_s: f64,
+    /// Serving shards in the process.
+    pub shards: usize,
+    /// Per-shard completed-request counts.
+    pub per_shard_requests: Vec<f64>,
+    /// Writer-side coalesced flushes.
+    pub writer_flushes: u64,
+    /// Reply lines delivered across those flushes.
+    pub writer_flushed_lines: u64,
+    /// Observed `(model, scheme, k)` fidelity cells.
+    pub fidelity: Vec<FidelityCell>,
+}
+
+/// Parse a `stats` reply line into a [`StatsSummary`].
+pub fn parse_stats(line: &str) -> Result<StatsSummary, String> {
+    let json = Json::parse(line.trim()).map_err(|e| e.to_string())?;
+    let num = |key: &str| json.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let count = |key: &str| num(key).max(0.0).round() as u64;
+    let requests = count("requests");
+    let batches = count("batches");
+    let mut fidelity = Vec::new();
+    if let Some(cells) = json.get("fidelity").and_then(Json::as_arr) {
+        for cell in cells {
+            let model = cell
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or("fidelity cell without 'model'")?
+                .to_string();
+            let mode = cell
+                .get("scheme")
+                .and_then(Json::as_str)
+                .and_then(RoundingMode::from_str)
+                .ok_or("fidelity cell without a valid 'scheme'")?;
+            let k = cell
+                .get("k")
+                .and_then(Json::as_usize)
+                .ok_or("fidelity cell without 'k'")? as u32;
+            let samples = cell
+                .get("samples")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0)
+                .max(0.0)
+                .round() as u64;
+            let bias = cell.get("bias").and_then(Json::as_f64).unwrap_or(0.0);
+            let variance = cell.get("variance").and_then(Json::as_f64).unwrap_or(0.0);
+            fidelity.push(FidelityCell {
+                model,
+                mode,
+                k,
+                estimate: FidelityEstimate {
+                    samples,
+                    bias,
+                    m2: variance * samples as f64,
+                },
+            });
+        }
+    }
+    Ok(StatsSummary {
+        requests,
+        errors: count("errors"),
+        rejected: count("rejected"),
+        timeouts: count("timeouts"),
+        batches,
+        batched_requests: (num("mean_batch") * batches as f64).round() as u64,
+        latency_sum_us: num("mean_us") * requests as f64,
+        p50_us: num("p50_us"),
+        p95_us: num("p95_us"),
+        p99_us: num("p99_us"),
+        uptime_s: num("uptime_s"),
+        shards: json.get("shards").and_then(Json::as_usize).unwrap_or(0),
+        per_shard_requests: json
+            .get("per_shard_requests")
+            .and_then(Json::as_f64_vec)
+            .unwrap_or_default(),
+        writer_flushes: count("writer_flushes"),
+        writer_flushed_lines: count("writer_flushed_lines"),
+        fidelity,
+    })
+}
+
 /// The rounding-mode wire encoding shared with the Pallas kernels
 /// (0 = deterministic, 1 = stochastic, 2 = dither). The Rust serving path
 /// no longer marshals these codes (the PJRT bridge is gone), but
@@ -526,6 +651,48 @@ mod tests {
         // A line without an id cannot be filed.
         assert!(r.insert("{\"pong\":true}").is_err());
         assert_eq!(response_id(&format_error(7, "bad")).unwrap(), 7);
+    }
+
+    #[test]
+    fn parse_stats_recovers_counters_and_mergeable_fidelity() {
+        // Shape emitted by Metrics::snapshot_json; extra fields ignored,
+        // absent counters default to zero.
+        let line = "{\"requests\":100,\"errors\":2,\"rejected\":3,\"batches\":25,\
+                    \"mean_batch\":4,\"mean_us\":50,\"p50_us\":40,\"p95_us\":90,\
+                    \"p99_us\":99,\"uptime_s\":12.5,\"shards\":2,\
+                    \"per_shard_requests\":[60,40],\"timeouts\":1,\
+                    \"fidelity\":[{\"model\":\"digits_linear\",\"scheme\":\"dither\",\
+                    \"k\":4,\"samples\":10,\"bias\":0.5,\"mse\":0.5,\"variance\":0.25}]}";
+        let s = parse_stats(line).unwrap();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.errors, 2);
+        assert_eq!(s.rejected, 3);
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.batches, 25);
+        assert_eq!(s.batched_requests, 100, "mean_batch * batches");
+        assert_eq!(s.latency_sum_us, 5000.0, "mean_us * requests");
+        assert_eq!(s.shards, 2);
+        assert_eq!(s.per_shard_requests, vec![60.0, 40.0]);
+        assert_eq!(s.writer_flushes, 0, "absent counters parse as zero");
+        let cell = &s.fidelity[0];
+        assert_eq!(cell.model, "digits_linear");
+        assert_eq!(cell.mode, RoundingMode::Dither);
+        assert_eq!(cell.k, 4);
+        assert_eq!(cell.estimate.samples, 10);
+        // m2 reconstructed so merge() reproduces the server-side math.
+        assert!((cell.estimate.m2 - 2.5).abs() < 1e-12);
+        assert!((cell.estimate.variance() - 0.25).abs() < 1e-12);
+        assert!((cell.estimate.mse() - 0.5).abs() < 1e-12);
+        // Two equal halves merge to the same bias with doubled samples.
+        let mut merged = cell.estimate.clone();
+        merged.merge(&cell.estimate);
+        assert_eq!(merged.samples, 20);
+        assert!((merged.bias - 0.5).abs() < 1e-12);
+        assert!(parse_stats("not json").is_err());
+        assert!(
+            parse_stats("{\"fidelity\":[{\"scheme\":\"dither\",\"k\":4}]}").is_err(),
+            "fidelity cell without a model is rejected"
+        );
     }
 
     #[test]

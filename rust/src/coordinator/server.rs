@@ -24,6 +24,13 @@
 //! shards drain their queues, every accepted request's reply (each holds
 //! a clone of its connection's writer channel) is delivered, and every
 //! thread is joined before `serve` returns.
+//!
+//! Two resource bounds ride on the reply path: the reader→writer channel
+//! is **bounded** (`max_inflight +` [`WRITER_CONTROL_SLACK`]), so a
+//! connection's reply backlog cannot grow without limit, and the shard
+//! pool's **reply watchdog** (`--reply-timeout-ms`) answers `timeout` for
+//! any accepted request whose engine call wedges past the deadline,
+//! releasing its window slot and its hold on the writer channel.
 
 use crate::coordinator::batcher::{Pending, ReplyTo, SubmitError};
 use crate::coordinator::metrics::{Metrics, ShardMetrics};
@@ -32,16 +39,32 @@ use crate::coordinator::protocol::{
     Message,
 };
 use crate::coordinator::shard::{ShardConfig, ShardPool};
-use crate::fidelity;
-use crate::train::{ModelSpec, Zoo};
+use crate::train::Zoo;
 use crate::util::error::{Context, Result};
 use crate::util::threadpool::WorkerPool;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, SendError, Sender};
+use std::sync::mpsc::{sync_channel, Receiver, SendError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Writer-channel headroom beyond the in-flight window: control replies
+/// (`pong`, `hello`, `stats`, parse errors, the shutdown ack) share the
+/// funnel with request completions, but the reader submits them one at a
+/// time, so a small constant bounds them. The channel is sized
+/// `max_inflight + WRITER_CONTROL_SLACK`.
+///
+/// Trade-off (the deliberate point of the bound): window slots release
+/// when a reply is *queued*, not when the socket drains, so a client
+/// that pipelines aggressively and stops reading can fill the channel —
+/// a worker completing one of its requests then blocks in the send until
+/// the writer's 30 s write timeout tears the connection down (after
+/// which every send fails fast). That briefly convoys other connections
+/// on the same shard; the previous unbounded channel never blocked, but
+/// let one such client grow the reply backlog without limit. See the
+/// ROADMAP follow-up on decoupling slot release from channel occupancy.
+pub const WRITER_CONTROL_SLACK: usize = 8;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -74,6 +97,10 @@ pub struct ServerConfig {
     /// answered). Pipelined requests beyond the window get an immediate
     /// `overloaded` reply carrying their id. Clamped to ≥ 1.
     pub max_inflight: usize,
+    /// Reply-watchdog deadline in milliseconds: an accepted request still
+    /// unanswered this long after its batch dispatched is answered
+    /// `timeout` (releasing its window slot). 0 disables the watchdog.
+    pub reply_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +117,7 @@ impl Default for ServerConfig {
             shadow_rate: 0.02,
             plan_cache_mb: 64,
             max_inflight: 64,
+            reply_timeout_ms: 120_000,
         }
     }
 }
@@ -112,6 +140,7 @@ impl ServerConfig {
             prewarm_bits: self.prewarm_bits.clone(),
             shadow_rate: self.shadow_rate,
             plan_cache_bytes: self.plan_cache_mb << 20,
+            reply_timeout: Duration::from_millis(self.reply_timeout_ms),
         }
     }
 }
@@ -274,17 +303,23 @@ fn handle_connection(
     // next send and abandons the connection.
     let write_half = stream.try_clone()?;
     write_half.set_write_timeout(Some(Duration::from_secs(30)))?;
-    let (tx, rx) = channel::<String>();
+    // Bounded reply funnel: a connection's reply backlog can no longer
+    // grow without bound. A sender blocking on a full channel is the
+    // designed backpressure and is bounded by the writer's write timeout
+    // (see WRITER_CONTROL_SLACK for the trade-off).
+    let (tx, rx) = sync_channel::<String>(max_inflight + WRITER_CONTROL_SLACK);
     // Writer-death flag: accepted infer requests never touch `tx`
     // directly (their replies flow through ReplyTo sends, whose failures
     // are ignored), so the reader polls this to tear the connection down
     // instead of serving a dead socket forever.
     let writer_alive = Arc::new(AtomicBool::new(true));
     let alive = writer_alive.clone();
+    let shard = pool.route(conn_id);
+    let writer_metrics = metrics.shard(shard);
     let writer = std::thread::Builder::new()
         .name(format!("dither-conn-{conn_id}-writer"))
-        .spawn(move || writer_loop(write_half, rx, &alive))?;
-    let result = read_loop(stream, conn_id, pool, metrics, max_inflight, &tx, &writer_alive);
+        .spawn(move || writer_loop(write_half, rx, &alive, &writer_metrics))?;
+    let result = read_loop(stream, shard, pool, metrics, max_inflight, &tx, &writer_alive);
     // Drop the reader's sender so the writer exits once every in-flight
     // reply (each ReplyTo holds a clone) has been delivered — this is
     // what drains all accepted ids when shutdown lands mid-stream.
@@ -295,12 +330,32 @@ fn handle_connection(
 
 /// The connection's writer half: drain response lines in completion
 /// order. Ready lines are coalesced into one flush so a burst of batch
-/// completions costs one syscall, not one per reply. Clears `alive` on
+/// completions costs one syscall, not one per reply (each flush and its
+/// line count feed the connection's shard metrics). Clears `alive` on
 /// exit so the reader notices a dead socket even when no control reply
 /// ever fails.
-fn writer_loop(stream: TcpStream, rx: Receiver<String>, alive: &AtomicBool) {
+fn writer_loop(
+    stream: TcpStream,
+    rx: Receiver<String>,
+    alive: &AtomicBool,
+    metrics: &ShardMetrics,
+) {
+    drain_replies(stream, rx, alive, |lines| metrics.record_flush(lines));
+}
+
+/// The writer-drain protocol shared by the server's connection writers
+/// and the cluster proxy's client writers: pull one line, greedily append
+/// every other ready line, flush once, report the coalesced count, exit
+/// on any socket error and clear `alive` so the reader side tears down.
+pub(crate) fn drain_replies(
+    stream: TcpStream,
+    rx: Receiver<String>,
+    alive: &AtomicBool,
+    mut on_flush: impl FnMut(usize),
+) {
     let mut out = BufWriter::new(stream);
     'drain: while let Ok(line) = rx.recv() {
+        let mut lines = 1usize;
         if writeln!(out, "{line}").is_err() {
             break 'drain;
         }
@@ -308,10 +363,12 @@ fn writer_loop(stream: TcpStream, rx: Receiver<String>, alive: &AtomicBool) {
             if writeln!(out, "{more}").is_err() {
                 break 'drain;
             }
+            lines += 1;
         }
         if out.flush().is_err() {
             break 'drain;
         }
+        on_flush(lines);
     }
     alive.store(false, Ordering::Release);
 }
@@ -323,14 +380,13 @@ fn writer_loop(stream: TcpStream, rx: Receiver<String>, alive: &AtomicBool) {
 #[allow(clippy::too_many_arguments)]
 fn read_loop(
     stream: TcpStream,
-    conn_id: u64,
+    shard: usize,
     pool: &ShardPool,
     metrics: &Metrics,
     max_inflight: usize,
-    tx: &Sender<String>,
+    tx: &SyncSender<String>,
     writer_alive: &AtomicBool,
 ) -> Result<()> {
-    let shard = pool.route(conn_id);
     let shard_metrics = metrics.shard(shard);
     // Accepted-but-unanswered requests on this connection. Incremented
     // here (via ReplyTo::with_window), decremented by each ReplyTo as its
@@ -401,42 +457,27 @@ fn read_loop(
     Ok(())
 }
 
-/// Dispatch one inference request: resolve auto precision, enforce the
-/// in-flight window, and submit to the shard's batcher. Never blocks on
-/// the reply — completion flows back through the [`ReplyTo`] into the
-/// connection's writer channel.
+/// Dispatch one inference request: enforce the in-flight window and
+/// submit to the shard's batcher. Auto-precision requests keep their
+/// parse-time placeholder key — the shard worker resolves the concrete
+/// `(scheme, k)` once per drained batch, so adjacent auto requests
+/// coalesce onto one engine call. Never blocks on the reply — completion
+/// flows back through the [`ReplyTo`] into the connection's writer
+/// channel.
 #[allow(clippy::too_many_arguments)]
 fn handle_infer(
-    mut req: InferenceRequest,
+    req: InferenceRequest,
     shard: usize,
     pool: &ShardPool,
     shard_metrics: &Arc<ShardMetrics>,
     inflight: &Arc<AtomicUsize>,
     max_inflight: usize,
-    tx: &Sender<String>,
+    tx: &SyncSender<String>,
 ) -> std::result::Result<(), SendError<String>> {
-    // Window first: a bounced request only needs its id echoed back, so
-    // don't pay auto resolution for it.
+    // Window first: a bounced request only needs its id echoed back.
     if inflight.load(Ordering::Acquire) >= max_inflight {
         shard_metrics.record_rejected();
         return tx.send(format_overloaded(req.id));
-    }
-    // Auto precision: resolve (scheme, k) from this shard's measured
-    // fidelity state before the request reaches the batcher, so it
-    // batches with fixed-configuration traffic under a concrete key. The
-    // choice is deterministic given the shard's estimator state.
-    if req.auto {
-        let Some(spec) = ModelSpec::from_name(&req.model) else {
-            shard_metrics.record_error();
-            return tx.send(format_error(
-                req.id,
-                &format!("unknown model family {:?}", req.model),
-            ));
-        };
-        let budget = req.max_mse.unwrap_or(f64::INFINITY);
-        let choice = fidelity::choose(shard_metrics.fidelity(), spec.index(), budget);
-        req.mode = choice.mode;
-        req.k = choice.k;
     }
     let respond_to = ReplyTo::new(req.id, tx.clone())
         .with_window(inflight.clone())

@@ -10,7 +10,9 @@
 //! requests all land in a single shard's batcher (responses may complete
 //! out of order; the id echo matches them up client-side).
 
-use crate::coordinator::batcher::{worker_loop, BatchKey, Batcher, Pending, SubmitError};
+use crate::coordinator::batcher::{
+    worker_loop, BatchKey, Batcher, Pending, ReplyWatchdog, SubmitError,
+};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
 use crate::linalg::Variant;
@@ -44,12 +46,20 @@ pub struct ShardConfig {
     pub shadow_rate: f64,
     /// Per-shard plan-cache byte budget (0 disables plan caching).
     pub plan_cache_bytes: usize,
+    /// Reply-watchdog deadline per dispatched batch (zero disables the
+    /// watchdog).
+    pub reply_timeout: Duration,
 }
 
 /// K running serving shards plus their routing table.
 pub struct ShardPool {
     batchers: Vec<Arc<Batcher>>,
     workers: Mutex<WorkerPool>,
+    /// Deadline sweeper over dispatched replies (None when disabled). Its
+    /// thread lives in its own pool so [`ShardPool::join`] can keep it
+    /// sweeping until every shard worker has drained.
+    watchdog: Option<Arc<ReplyWatchdog>>,
+    sweeper: Mutex<WorkerPool>,
 }
 
 impl ShardPool {
@@ -67,6 +77,20 @@ impl ShardPool {
             zoo.prewarm_plans(&cfg.prewarm_bits, &RoundingMode::ALL, Variant::Separate, cfg.seed)
         };
         let mut workers = WorkerPool::new();
+        // One reply watchdog serves every shard: workers register each
+        // dispatched batch, the sweeper thread answers `timeout` for
+        // replies that outlive the deadline (a wedged engine call no
+        // longer holds window slots and writer channels forever).
+        let watchdog = if cfg.reply_timeout.is_zero() {
+            None
+        } else {
+            Some(Arc::new(ReplyWatchdog::new(cfg.reply_timeout)))
+        };
+        let mut sweeper = WorkerPool::new();
+        if let Some(dog) = &watchdog {
+            let dog = dog.clone();
+            sweeper.spawn("dither-reply-watchdog".to_string(), move || dog.run());
+        }
         let mut batchers = Vec::with_capacity(shards);
         for i in 0..shards {
             let batcher = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait, cfg.queue_cap));
@@ -99,6 +123,7 @@ impl ShardPool {
                 })
             });
             let b = batcher.clone();
+            let dog = watchdog.clone();
             workers.spawn(format!("dither-shard-{i}"), move || {
                 // Stop the batcher even if the worker panics: routed
                 // requests then get an immediate "shutting down" reply
@@ -110,14 +135,21 @@ impl ShardPool {
                     }
                 }
                 let _guard = StopOnExit(b.clone());
-                worker_loop(&b, &engine, &shard_metrics, i);
+                worker_loop(&b, &engine, &shard_metrics, i, dog.as_deref());
             });
             batchers.push(batcher);
         }
         ShardPool {
             batchers,
             workers: Mutex::new(workers),
+            watchdog,
+            sweeper: Mutex::new(sweeper),
         }
+    }
+
+    /// The pool's reply watchdog, when one is running.
+    pub fn watchdog(&self) -> Option<&Arc<ReplyWatchdog>> {
+        self.watchdog.as_ref()
     }
 
     /// Number of shards.
@@ -157,9 +189,15 @@ impl ShardPool {
         self.batchers[0].is_shutting_down()
     }
 
-    /// Join every shard worker; returns how many panicked.
+    /// Join every shard worker; returns how many panicked. The watchdog
+    /// sweeper keeps running until the workers have drained (their final
+    /// batches deserve timeout coverage too), then stops and joins.
     pub fn join(&self) -> usize {
-        self.workers.lock().unwrap().join_all()
+        let panicked = self.workers.lock().unwrap().join_all();
+        if let Some(dog) = &self.watchdog {
+            dog.stop();
+        }
+        panicked + self.sweeper.lock().unwrap().join_all()
     }
 }
 
@@ -169,7 +207,7 @@ mod tests {
     use crate::coordinator::protocol::InferenceRequest;
     use crate::rounding::RoundingMode;
     use crate::util::json::Json;
-    use std::sync::mpsc::channel;
+    use std::sync::mpsc::sync_channel;
     use std::time::Instant;
 
     use crate::coordinator::batcher::ReplyTo;
@@ -184,6 +222,7 @@ mod tests {
             prewarm_bits: vec![4],
             shadow_rate: 0.5,
             plan_cache_bytes: crate::coordinator::engine::DEFAULT_PLAN_CACHE_BYTES,
+            reply_timeout: Duration::from_secs(120),
         };
         let metrics = Metrics::new(shards);
         let zoo = Arc::new(Zoo::load(200, 7));
@@ -192,7 +231,7 @@ mod tests {
     }
 
     fn infer_pending(id: u64) -> (Pending, std::sync::mpsc::Receiver<String>) {
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(8);
         (
             Pending {
                 req: InferenceRequest {

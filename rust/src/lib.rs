@@ -19,6 +19,9 @@
 //! * [`coordinator`] — the sharded batching inference server: K worker
 //!   shards with bounded queues, hash-routed connections, per-request
 //!   rounding-scheme selection and lock-free per-shard metrics.
+//! * [`cluster`] — the multi-node front tier: a consistent-hash proxy
+//!   (virtual nodes, health checks, pipelined upstream connections) over
+//!   N backend server processes, with cluster-wide `stats` merging.
 //! * [`fidelity`] — online fidelity telemetry: shadow sampling against the
 //!   exact f64 forward pass, streaming bias/MSE estimators per
 //!   `(model, scheme, k)`, and the `"scheme":"auto"` precision controller.
@@ -45,6 +48,7 @@
 #![warn(missing_docs)]
 
 pub mod bitstream;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;

@@ -6,6 +6,8 @@
 //!   table1, all). `--paper-scale` switches to the paper's full settings.
 //! * `train` — train and cache the evaluation models.
 //! * `serve` — run the sharded batching inference server.
+//! * `proxy` — run the cluster front tier: a consistent-hash proxy over N
+//!   backend `serve` processes with health checks and merged stats.
 //! * `infer` — one-shot inference through the native engine (smoke path).
 //! * `info` — show runtime platform, model zoo and artifact manifest.
 //!
@@ -31,6 +33,8 @@ COMMANDS:
                       fig9..fig16, or 'all'
     train             train + cache the evaluation models (model zoo)
     serve             run the sharded inference server (TCP, newline JSON)
+    proxy             run the cluster front tier: consistent-hash routing
+                      over N backend serve processes (same wire protocol)
     infer             single quantized inference through the native engine
     info              show runtime platform + model zoo + artifacts
     help              this text
@@ -67,6 +71,20 @@ SERVE FLAGS:
     --max-inflight N  per-connection pipelined in-flight window (64);
                       requests beyond it get an immediate 'overloaded'
                       reply carrying their id
+    --reply-timeout-ms N  watchdog deadline for an accepted request (120000;
+                      0 disables): a reply still outstanding past it is
+                      answered 'timeout' and releases its window slot
+
+PROXY FLAGS:
+    --addr HOST:PORT  listen address (127.0.0.1:7900)
+    --backends LIST   comma-separated backend serve addresses (required),
+                      e.g. 127.0.0.1:7878,127.0.0.1:7879
+    --replicas N      virtual nodes per backend on the hash ring (64)
+    --backend-inflight N  per-backend pipelined window cap (64); the
+                      backend's advertised max_inflight may lower it
+    --probe-ms N      health-probe interval in ms (500)
+    --probe-timeout-ms N  probe/connect/handshake timeout in ms (2000)
+    --max-backoff-ms N    probe backoff ceiling for dead backends (8000)
 
 INFER FLAGS:
     --model NAME      digits_linear | fashion_mlp (digits_linear)
@@ -82,6 +100,7 @@ fn main() -> Result<()> {
         Some("experiment") => cmd_experiment(&args),
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
+        Some("proxy") => cmd_proxy(&args),
         Some("infer") => cmd_infer(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
@@ -180,8 +199,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shadow_rate: args.parse_or("shadow-rate", 0.02f64),
         plan_cache_mb: args.parse_or("plan-cache-mb", 64usize),
         max_inflight: args.parse_or("max-inflight", 64usize),
+        reply_timeout_ms: args.parse_or("reply-timeout-ms", 120_000u64),
     };
     serve(&cfg)
+}
+
+fn cmd_proxy(args: &Args) -> Result<()> {
+    use dither::cluster::{run_proxy, ProxyConfig, DEFAULT_REPLICAS};
+    let backends: Vec<String> = args.parse_list_or("backends", Vec::new());
+    if backends.is_empty() {
+        return Err(err!(
+            "proxy requires --backends host:port[,host:port...] (see `dither help`)"
+        ));
+    }
+    let cfg = ProxyConfig {
+        addr: args.str_or("addr", "127.0.0.1:7900"),
+        backends,
+        replicas: args.parse_or("replicas", DEFAULT_REPLICAS),
+        backend_inflight: args.parse_or("backend-inflight", 64usize),
+        probe_interval_ms: args.parse_or("probe-ms", 500u64),
+        probe_timeout_ms: args.parse_or("probe-timeout-ms", 2_000u64),
+        max_backoff_ms: args.parse_or("max-backoff-ms", 8_000u64),
+    };
+    run_proxy(&cfg)
 }
 
 fn cmd_infer(args: &Args) -> Result<()> {

@@ -1,0 +1,408 @@
+//! Cluster front-tier integration: 2 backend `serve` processes (threads)
+//! behind one consistent-hash `proxy`, driven end to end over TCP.
+//!
+//! Locks the acceptance criteria of the cluster subsystem: proxy-served
+//! deterministic replies are bit-identical to direct-backend replies, a
+//! backend kill mid-flood triggers health mark-down and deterministic
+//! re-routing with no lost accepted ids on live backends, a restarted
+//! backend is probed back up, and the proxy's `stats` merges backend
+//! counters and `fidelity` blocks (sums match the per-backend scrapes).
+
+use dither::cluster::{run_proxy, ProxyConfig};
+use dither::coordinator::{format_request, format_request_auto, serve, wait_ready, ServerConfig};
+use dither::data::{Dataset, Task};
+use dither::rounding::RoundingMode;
+use dither::util::json::Json;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+const TRAIN_N: usize = 300;
+const BACKEND1: &str = "127.0.0.1:17990";
+const BACKEND2: &str = "127.0.0.1:17991";
+const PROXY: &str = "127.0.0.1:17992";
+
+fn backend_cfg(addr: &str) -> ServerConfig {
+    ServerConfig {
+        addr: addr.to_string(),
+        shards: 1,
+        max_batch: 8,
+        max_wait_us: 500,
+        queue_cap: 64,
+        train_n: TRAIN_N,
+        seed: 7,
+        prewarm_bits: vec![2, 4],
+        // Full shadow rate so the merged stats.fidelity block is
+        // guaranteed to be populated by a short wave.
+        shadow_rate: 1.0,
+        plan_cache_mb: 64,
+        max_inflight: 64,
+        reply_timeout_ms: 120_000,
+    }
+}
+
+/// One request case: (id, model, scheme, k, image row).
+type Case = (u64, &'static str, RoundingMode, u32, usize);
+
+/// Every concrete `(model, scheme, k ∈ {2,4})` key twice — 24 requests
+/// over 12 routing keys, which the deterministic ring spreads across
+/// both backends.
+fn cases() -> Vec<Case> {
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    for model in ["digits_linear", "fashion_mlp"] {
+        for mode in RoundingMode::ALL {
+            for k in [2u32, 4] {
+                for _ in 0..2 {
+                    id += 1;
+                    out.push((id, model, mode, k, id as usize % 8));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn row<'a>(digits: &'a Dataset, fashion: &'a Dataset, case: &Case) -> &'a [f64] {
+    if case.1 == "fashion_mlp" {
+        fashion.images.row(case.4)
+    } else {
+        digits.images.row(case.4)
+    }
+}
+
+/// A reply the client should simply resend: overload backpressure (window
+/// full, queue full, backend down or lost mid-kill) and the transient
+/// errors of a backend draining out from under the proxy.
+fn retryable(resp: &Json) -> bool {
+    if resp.get("overloaded").and_then(Json::as_bool).unwrap_or(false) {
+        return true;
+    }
+    resp.get("error").and_then(Json::as_str).is_some_and(|e| {
+        e.contains("shutting down") || e.contains("cancelled") || e.contains("no healthy")
+    })
+}
+
+/// Drive `cases` through one pipelined connection to `addr`: hello
+/// handshake, flood every request, then drain replies out of order,
+/// resending retryable ones. If `kill` names a backend, its shutdown is
+/// issued right after the flood — the mid-flight kill the re-route cycle
+/// must absorb. Panics on a duplicate reply id or a deadline overrun;
+/// returns the final reply per id (exactly one each — no lost ids).
+fn drive_cases(
+    addr: &str,
+    cases: &[Case],
+    digits: &Dataset,
+    fashion: &Dataset,
+    kill: Option<&str>,
+) -> HashMap<u64, Json> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(250))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    writeln!(writer, "{{\"cmd\":\"hello\"}}").unwrap();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(_) => break,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(e) => panic!("hello read failed: {e}"),
+        }
+    }
+    let hello = Json::parse(line.trim()).expect("hello json");
+    assert!(
+        hello
+            .get("features")
+            .and_then(Json::as_arr)
+            .is_some_and(|f| f.iter().any(|v| v.as_str() == Some("pipelined"))),
+        "{line}"
+    );
+
+    let by_id: HashMap<u64, &Case> = cases.iter().map(|c| (c.0, c)).collect();
+    let mut outstanding: Vec<u64> = Vec::new();
+    for case in cases {
+        let px = row(digits, fashion, case);
+        writeln!(writer, "{}", format_request(case.0, case.1, case.3, case.2, px)).unwrap();
+        outstanding.push(case.0);
+    }
+    writer.flush().unwrap();
+    if let Some(victim) = kill {
+        shutdown_server(victim);
+    }
+
+    let mut done: HashMap<u64, Json> = HashMap::new();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    line.clear();
+    while !outstanding.is_empty() {
+        assert!(Instant::now() < deadline, "undrained ids: {outstanding:?}");
+        match reader.read_line(&mut line) {
+            Ok(0) => panic!("connection closed with ids outstanding: {outstanding:?}"),
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue; // partial line survives the tick
+            }
+            Err(e) => panic!("read failed: {e}"),
+        }
+        let resp = Json::parse(line.trim()).expect("reply json");
+        line.clear();
+        let id = resp.get("id").and_then(Json::as_f64).expect("reply id") as u64;
+        let pos = outstanding
+            .iter()
+            .position(|&o| o == id)
+            .unwrap_or_else(|| panic!("unexpected or duplicate reply for id {id}: {resp}"));
+        if retryable(&resp) {
+            // Back off a beat (health may still be converging), resend
+            // under the same id.
+            std::thread::sleep(Duration::from_millis(50));
+            let case = by_id[&id];
+            let px = row(digits, fashion, case);
+            writeln!(writer, "{}", format_request(case.0, case.1, case.3, case.2, px)).unwrap();
+            writer.flush().unwrap();
+            continue;
+        }
+        outstanding.swap_remove(pos);
+        done.insert(id, resp);
+    }
+    done
+}
+
+/// Structural checks on one wave plus the bit-identity assertion: each
+/// deterministic reply's logits must equal `reference` (keyed by id) —
+/// replies served through the proxy vs a direct backend connection.
+fn check_wave(
+    done: &HashMap<u64, Json>,
+    cases: &[Case],
+    reference: Option<&HashMap<u64, Vec<f64>>>,
+) {
+    for case in cases {
+        let resp = &done[&case.0];
+        assert!(resp.get("error").is_none(), "{resp}");
+        assert_eq!(resp.get("scheme").and_then(Json::as_str), Some(case.2.name()), "{resp}");
+        assert_eq!(resp.get("k").and_then(Json::as_f64), Some(f64::from(case.3)), "{resp}");
+        let logits = resp.get("logits").and_then(Json::as_f64_vec).expect("logits");
+        assert_eq!(logits.len(), 10, "{resp}");
+        assert!(logits.iter().all(|v| v.is_finite()), "{resp}");
+        if case.2 == RoundingMode::Deterministic {
+            if let Some(reference) = reference {
+                assert_eq!(
+                    logits, reference[&case.0],
+                    "deterministic reply for id {} (model {}, k={}) must be \
+                     bit-identical through the proxy",
+                    case.0, case.1, case.3
+                );
+            }
+        }
+    }
+}
+
+fn det_logits(done: &HashMap<u64, Json>, cases: &[Case]) -> HashMap<u64, Vec<f64>> {
+    cases
+        .iter()
+        .filter(|c| c.2 == RoundingMode::Deterministic)
+        .map(|c| (c.0, done[&c.0].get("logits").and_then(Json::as_f64_vec).unwrap()))
+        .collect()
+}
+
+fn fetch_stats(addr: &str) -> Json {
+    let stream = TcpStream::connect(addr).expect("connect for stats");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{{\"cmd\":\"stats\"}}").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).expect("stats json")
+}
+
+fn shutdown_server(addr: &str) {
+    let stream = TcpStream::connect(addr).expect("connect for shutdown");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+}
+
+fn fidelity_samples(stats: &Json) -> f64 {
+    stats
+        .get("fidelity")
+        .and_then(Json::as_arr)
+        .map(|cells| {
+            cells
+                .iter()
+                .filter_map(|c| c.get("samples").and_then(Json::as_f64))
+                .sum()
+        })
+        .unwrap_or(0.0)
+}
+
+/// Poll the proxy's merged stats until `healthy` backends are reported
+/// (or panic after 60 s).
+fn wait_healthy(n: f64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let stats = fetch_stats(PROXY);
+        let healthy = stats
+            .get("proxy")
+            .and_then(|p| p.get("healthy"))
+            .and_then(Json::as_f64)
+            .unwrap_or(-1.0);
+        if healthy == n {
+            return stats;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "proxy never reported {n} healthy backends: {stats}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+#[test]
+fn proxy_over_two_backends_routes_survives_kill_and_merges_stats() {
+    let b1 = std::thread::spawn(|| serve(&backend_cfg(BACKEND1)));
+    let b2 = std::thread::spawn(|| serve(&backend_cfg(BACKEND2)));
+    assert!(wait_ready(BACKEND1, Duration::from_secs(120)), "backend 1 up");
+    assert!(wait_ready(BACKEND2, Duration::from_secs(120)), "backend 2 up");
+
+    let proxy_cfg = ProxyConfig {
+        addr: PROXY.to_string(),
+        backends: vec![BACKEND1.to_string(), BACKEND2.to_string()],
+        replicas: 64,
+        backend_inflight: 32,
+        probe_interval_ms: 100,
+        probe_timeout_ms: 1_500,
+        max_backoff_ms: 400,
+    };
+    let proxy = std::thread::spawn(move || run_proxy(&proxy_cfg));
+    // The proxy answers `pong` only once a backend is probed healthy.
+    assert!(wait_ready(PROXY, Duration::from_secs(60)), "proxy up");
+
+    let digits = Dataset::synthesize(Task::Digits, 8, 0xC1C1);
+    let fashion = Dataset::synthesize(Task::Fashion, 8, 0xC1C2);
+    let cases = cases();
+
+    // Wave 1 — direct to backend 1: the bit-identity reference.
+    let direct = drive_cases(BACKEND1, &cases, &digits, &fashion, None);
+    check_wave(&direct, &cases, None);
+    let reference = det_logits(&direct, &cases);
+
+    // Wave 2 — through the proxy: every reply matched by id, every
+    // deterministic reply bit-identical to the direct-backend wave (the
+    // backends share train_n/seed, so either backend's weights agree).
+    let via_proxy = drive_cases(PROXY, &cases, &digits, &fashion, None);
+    check_wave(&via_proxy, &cases, Some(&reference));
+
+    // Auto precision through the proxy: the backend resolves and tags it.
+    {
+        let stream = TcpStream::connect(PROXY).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writeln!(
+            writer,
+            "{}",
+            format_request_auto(500, "digits_linear", 1e9, digits.images.row(0))
+        )
+        .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).expect("auto reply json");
+        assert_eq!(resp.get("id").and_then(Json::as_f64), Some(500.0), "{line}");
+        assert_eq!(resp.get("auto").and_then(Json::as_bool), Some(true), "{line}");
+        assert_eq!(
+            resp.get("scheme").and_then(Json::as_str),
+            Some("deterministic"),
+            "{line}"
+        );
+        assert_eq!(resp.get("k").and_then(Json::as_f64), Some(1.0), "{line}");
+    }
+
+    // Merged stats: counters equal the sum of the backend scrapes, the
+    // fidelity block is populated and sums match, both backends carried
+    // forwarded traffic (the 12-key grid spans both ring owners).
+    let merged = fetch_stats(PROXY);
+    let s1 = fetch_stats(BACKEND1);
+    let s2 = fetch_stats(BACKEND2);
+    let sum = |field: &str| {
+        s1.get(field).and_then(Json::as_f64).unwrap()
+            + s2.get(field).and_then(Json::as_f64).unwrap()
+    };
+    assert_eq!(
+        merged.get("requests").and_then(Json::as_f64),
+        Some(sum("requests")),
+        "{merged}"
+    );
+    assert_eq!(merged.get("shards").and_then(Json::as_f64), Some(2.0), "{merged}");
+    assert_eq!(
+        merged
+            .get("per_shard_requests")
+            .and_then(Json::as_f64_vec)
+            .map(|v| v.len()),
+        Some(2),
+        "{merged}"
+    );
+    let merged_samples = fidelity_samples(&merged);
+    assert!(merged_samples > 0.0, "merged fidelity must be populated: {merged}");
+    assert_eq!(
+        merged_samples,
+        fidelity_samples(&s1) + fidelity_samples(&s2),
+        "fidelity samples must merge exactly"
+    );
+    let forwarded = merged
+        .get("proxy")
+        .and_then(|p| p.get("forwarded"))
+        .and_then(Json::as_f64_vec)
+        .expect("per-backend forwarded counters");
+    assert_eq!(forwarded.len(), 2);
+    assert!(
+        forwarded.iter().all(|&f| f > 0.0),
+        "the mixed key grid must route traffic to both backends: {forwarded:?}"
+    );
+
+    // Wave 3 — kill backend 2 mid-flood: the proxy must mark it down,
+    // re-route its keys to backend 1, and answer every id exactly once
+    // (retryable bounces included — no lost accepted ids).
+    let under_kill = drive_cases(PROXY, &cases, &digits, &fashion, Some(BACKEND2));
+    check_wave(&under_kill, &cases, Some(&reference));
+    b2.join().unwrap().expect("backend 2 exits cleanly");
+    let down = wait_healthy(1.0);
+    assert_eq!(down.get("shards").and_then(Json::as_f64), Some(1.0), "{down}");
+
+    // Wave 4 — steady state on the survivor: all keys now serve from
+    // backend 1, still bit-identical.
+    let rerouted = drive_cases(PROXY, &cases, &digits, &fashion, None);
+    check_wave(&rerouted, &cases, Some(&reference));
+
+    // Recovery: restart backend 2 on the same address; the health probe
+    // marks it back up and its keys return home.
+    let b2b = std::thread::spawn(|| serve(&backend_cfg(BACKEND2)));
+    assert!(wait_ready(BACKEND2, Duration::from_secs(120)), "backend 2 back up");
+    let up = wait_healthy(2.0);
+    assert_eq!(up.get("shards").and_then(Json::as_f64), Some(2.0), "{up}");
+    let recovered = drive_cases(PROXY, &cases, &digits, &fashion, None);
+    check_wave(&recovered, &cases, Some(&reference));
+
+    // Shutdown: proxy first (tears down its backend pools), then the
+    // backends directly — proxy shutdown must not touch them.
+    shutdown_server(PROXY);
+    proxy.join().unwrap().expect("proxy exits cleanly");
+    assert!(
+        fetch_stats(BACKEND1).get("requests").is_some(),
+        "backends must survive a proxy shutdown"
+    );
+    shutdown_server(BACKEND1);
+    shutdown_server(BACKEND2);
+    b1.join().unwrap().expect("backend 1 exits cleanly");
+    b2b.join().unwrap().expect("backend 2 restart exits cleanly");
+}

@@ -102,6 +102,7 @@ fn tcp_server_end_to_end_sharded() {
         shadow_rate: 1.0,
         plan_cache_mb: 64,
         max_inflight: 64,
+        reply_timeout_ms: 120_000,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 
@@ -258,6 +259,7 @@ fn tcp_requests_pipeline_across_connections() {
         shadow_rate: 0.0,
         plan_cache_mb: 64,
         max_inflight: 64,
+        reply_timeout_ms: 120_000,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     assert!(
@@ -334,6 +336,7 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
         shadow_rate: 0.0,
         plan_cache_mb: 64,
         max_inflight: 32,
+        reply_timeout_ms: 120_000,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     let ds = Dataset::synthesize(Task::Digits, 8, 0xF1F0);
@@ -443,6 +446,7 @@ fn pipelined_shutdown_mid_stream_drains_accepted_ids() {
         shadow_rate: 0.0,
         plan_cache_mb: 64,
         max_inflight: 64,
+        reply_timeout_ms: 120_000,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     let ds = Dataset::synthesize(Task::Digits, 8, 0xD0D0);
@@ -515,6 +519,7 @@ fn exceeding_inflight_window_is_overloaded_with_offending_id() {
         shadow_rate: 1.0,
         plan_cache_mb: 0,
         max_inflight: 2,
+        reply_timeout_ms: 120_000,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     let ds = Dataset::synthesize(Task::Digits, 4, 0xBEEF);

@@ -577,6 +577,153 @@ fn prop_protocol_any_response_permutation_reassembles_by_id() {
     );
 }
 
+/// Generator for cluster hash-ring shapes: (member count, virtual nodes
+/// per member).
+fn ring_shape() -> Pair<RangeUsize, RangeUsize> {
+    Pair(RangeUsize { lo: 2, hi: 8 }, RangeUsize { lo: 48, hi: 128 })
+}
+
+/// The routing keys every ring property drives: the shape the proxy
+/// actually routes (model/config keys), plus numeric variety.
+fn ring_keys() -> Vec<String> {
+    (0..1000)
+        .map(|i| format!("model-{}/scheme-{}/k={}", i % 5, i % 3, i))
+        .collect()
+}
+
+#[test]
+fn prop_ring_balances_keys_across_members_within_bound() {
+    use dither::cluster::HashRing;
+    check_with(
+        Config {
+            cases: 40,
+            seed: 0x41AB,
+            max_shrink: 0,
+        },
+        &ring_shape(),
+        |&(members, replicas)| {
+            let ring = HashRing::with_members(replicas, members);
+            let mut counts = vec![0usize; members];
+            let keys = ring_keys();
+            for k in &keys {
+                counts[ring.route(k).expect("non-empty ring routes")] += 1;
+            }
+            // Every member holds a real share: within [1/5x, 4x] of the
+            // uniform share across 1k keys — virtual nodes are what keep
+            // this tight.
+            let uniform = keys.len() / members;
+            counts.iter().all(|&c| c >= uniform / 5 && c <= uniform * 4)
+        },
+    );
+}
+
+#[test]
+fn prop_ring_join_moves_only_keys_onto_the_new_member() {
+    use dither::cluster::HashRing;
+    check_with(
+        Config {
+            cases: 40,
+            seed: 0x41AC,
+            max_shrink: 0,
+        },
+        &ring_shape(),
+        |&(members, replicas)| {
+            let before = HashRing::with_members(replicas, members);
+            let mut after = before.clone();
+            after.add(members); // new member joins
+            let keys = ring_keys();
+            let mut moved = 0usize;
+            for k in &keys {
+                let a = before.route(k).unwrap();
+                let b = after.route(k).unwrap();
+                if a != b {
+                    // Minimal remapping: a moved key may only land on the
+                    // joiner — no key shuffles between old members.
+                    if b != members {
+                        return false;
+                    }
+                    moved += 1;
+                }
+            }
+            // The joiner takes roughly its uniform share, nothing more.
+            moved >= 1 && moved <= keys.len() * 4 / (members + 1)
+        },
+    );
+}
+
+#[test]
+fn prop_ring_leave_keeps_every_other_members_keys() {
+    use dither::cluster::HashRing;
+    check_with(
+        Config {
+            cases: 40,
+            seed: 0x41AD,
+            max_shrink: 0,
+        },
+        &ring_shape(),
+        |&(members, replicas)| {
+            let before = HashRing::with_members(replicas, members);
+            let leaver = members / 2;
+            let mut after = before.clone();
+            after.remove(leaver);
+            ring_keys().iter().all(|k| {
+                let a = before.route(k).unwrap();
+                let b = after.route(k).unwrap();
+                // Keys on surviving members stay put; the leaver's keys
+                // must land on survivors.
+                if a == leaver {
+                    b != leaver
+                } else {
+                    a == b
+                }
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_ring_dead_member_reroutes_deterministically_and_reversibly() {
+    use dither::cluster::HashRing;
+    check_with(
+        Config {
+            cases: 40,
+            seed: 0x41AE,
+            max_shrink: 0,
+        },
+        &ring_shape(),
+        |&(members, replicas)| {
+            let ring = HashRing::with_members(replicas, members);
+            let dead = members - 1;
+            ring_keys().iter().all(|k| {
+                let owner = ring.route(k).unwrap();
+                let rerouted = ring.route_where(k, |m| m != dead).unwrap();
+                if owner != dead {
+                    // Another member's death never moves a live member's
+                    // keys (this is what makes mark-down non-disruptive).
+                    rerouted == owner
+                } else {
+                    // The dead member's keys fail over, always to the same
+                    // survivor (mark-up reverses it exactly: route()).
+                    rerouted != dead && Some(rerouted) == ring.route_where(k, |m| m != dead)
+                }
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_ring_empty_ring_is_an_error_not_a_panic() {
+    use dither::cluster::HashRing;
+    let mut ring = HashRing::new(64);
+    assert_eq!(ring.route("any/key"), None);
+    ring.add(0);
+    assert_eq!(ring.route("any/key"), Some(0));
+    ring.remove(0);
+    assert!(ring.is_empty());
+    assert_eq!(ring.route("any/key"), None, "drained ring routes nowhere");
+    assert_eq!(ring.route_where("any/key", |_| true), None);
+}
+
 #[test]
 fn prop_op_truth_consistent_with_estimates_in_expectation() {
     // Coarse statistical property over random (x, y): the trial-mean of

@@ -1,9 +1,9 @@
 //! Load generator + correctness checker for the sharded inference server.
 //!
 //! Drives the server with concurrent client connections issuing a mixed
-//! workload — both model families, several bit widths, and all three
-//! rounding schemes interleaved on every connection — then verifies each
-//! reply:
+//! workload — both model families, several bit widths, and every
+//! registered rounding scheme interleaved on every connection — then
+//! verifies each reply:
 //!
 //! * structural: the reply echoes the request id and scheme, carries a
 //!   10-class row of finite logits, `pred` is the argmax, and `shard` is
@@ -42,7 +42,7 @@
 
 use dither::coordinator::{format_request, wait_ready, Engine};
 use dither::data::{Dataset, Task};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::util::cli::Args;
 use dither::util::error::Result;
 use dither::util::json::Json;
@@ -53,11 +53,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-const SCHEMES: [RoundingMode; 3] = [
-    RoundingMode::Deterministic,
-    RoundingMode::Stochastic,
-    RoundingMode::Dither,
-];
+/// Every registered scheme: cycling through this drives at least one
+/// request per zoo member, so a smoke run covers the whole registry.
+const SCHEMES: [SchemeId; SchemeId::COUNT] = SchemeId::ALL;
 const KS: [u32; 3] = [2, 4, 8];
 
 /// Logit error budget of one quantized matmul at width `k` against the
@@ -78,7 +76,7 @@ struct Workload {
 struct Case<'a> {
     model: &'static str,
     k: u32,
-    mode: RoundingMode,
+    mode: SchemeId,
     pixels: &'a [f64],
 }
 
@@ -394,6 +392,20 @@ fn run_client_pipelined(
             .push(format!("client {client}: server does not advertise pipelining: {line}"));
         return Ok(());
     }
+    // Protocol v2: the hello must carry the registered-scheme list (and
+    // the proxy's intersection of it across backends must be non-empty).
+    let proto = hello.get("proto").and_then(Json::as_f64).unwrap_or(1.0);
+    let schemes_advertised = hello
+        .get("schemes")
+        .and_then(Json::as_arr)
+        .map_or(0, <[Json]>::len);
+    if proto < 2.0 || schemes_advertised == 0 {
+        violations.lock().unwrap().push(format!(
+            "client {client}: hello must advertise proto >= 2 and a non-empty \
+             scheme list: {line}"
+        ));
+        return Ok(());
+    }
     let server_window = hello
         .get("max_inflight")
         .and_then(Json::as_f64)
@@ -481,7 +493,7 @@ fn check_reply(
         "req {id} ({} k={} {})",
         case.model,
         case.k,
-        case.mode.name()
+        case.mode.wire_name()
     );
     if let Some(err) = resp.get("error").and_then(Json::as_str) {
         return Some(format!("{ctx}: server error: {err}"));
@@ -489,7 +501,7 @@ fn check_reply(
     if resp.get("id").and_then(Json::as_f64) != Some(id as f64) {
         return Some(format!("{ctx}: wrong id echo: {resp}"));
     }
-    if resp.get("scheme").and_then(Json::as_str) != Some(case.mode.name()) {
+    if resp.get("scheme").and_then(Json::as_str) != Some(case.mode.wire_name()) {
         return Some(format!("{ctx}: wrong scheme echo: {resp}"));
     }
     let shard = match resp.get("shard").and_then(Json::as_f64) {
@@ -525,14 +537,14 @@ fn check_reply(
     // is stateless, so a single-row reference call reproduces the served
     // batch's per-row result exactly.
     let rows = [case.pixels];
-    let expect = match reference.infer_batch(case.model, case.k, RoundingMode::Deterministic, &rows)
+    let expect = match reference.infer_batch(case.model, case.k, SchemeId::Deterministic, &rows)
     {
         Ok(mut out) if !out.is_empty() => out.remove(0),
         Ok(_) => return Some(format!("{ctx}: reference engine returned no output")),
         Err(e) => return Some(format!("{ctx}: reference engine failed: {e}")),
     };
     match case.mode {
-        RoundingMode::Deterministic => {
+        SchemeId::Deterministic => {
             if logits != expect.logits {
                 return Some(format!(
                     "{ctx}: deterministic logits diverge from reference \
@@ -542,12 +554,15 @@ fn check_reply(
                 ));
             }
         }
-        RoundingMode::Stochastic | RoundingMode::Dither => {
-            // Loose but sound bound for the single-layer model, whose
-            // quantizer ranges are the paper's fixed [-1, 1]: both replies
-            // sit within one quantization budget of the exact product.
-            // (The 3-layer model's budget depends on calibrated hidden
-            // ranges, so only the structural checks above apply to it.)
+        _ => {
+            // The randomized family — plain SR, dither, and every zoo
+            // scheme — rounds each factor to floor or ceiling, so one
+            // quantizer step bounds the per-factor move. Loose but sound
+            // bound for the single-layer model, whose quantizer ranges
+            // are the paper's fixed [-1, 1]: both replies sit within one
+            // quantization budget of the exact product. (The 3-layer
+            // model's budget depends on calibrated hidden ranges, so
+            // only the structural checks above apply to it.)
             if case.model == "digits_linear" {
                 let bound = 2.0 * logit_budget(case.k, 784, 1.0);
                 for (a, b) in logits.iter().zip(&expect.logits) {

@@ -17,7 +17,7 @@ use dither::coordinator::Engine;
 use dither::data::{Dataset, Task};
 use dither::linalg::Variant;
 use dither::nn::{quantized_accuracy, ActivationRanges, Mlp, QuantInferenceConfig};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::train::{train, TrainConfig};
 use dither::util::error::Result;
 use dither::util::rng::Xoshiro256pp;
@@ -66,8 +66,8 @@ fn main() -> Result<()> {
     let ranges = ActivationRanges::calibrate(&mlp, &test_set.images);
     for k in 1..=8u32 {
         let mut row = Vec::new();
-        for mode in RoundingMode::ALL {
-            let trials = if mode == RoundingMode::Deterministic { 1 } else { 5 };
+        for mode in SchemeId::PAPER {
+            let trials = if mode == SchemeId::Deterministic { 1 } else { 5 };
             let mut acc = 0.0;
             for t in 0..trials {
                 let qcfg = QuantInferenceConfig {
@@ -91,9 +91,9 @@ fn main() -> Result<()> {
         .map(|i| test_set.images.row(i))
         .collect();
     // Warmup (first call may fault in the zoo weights).
-    let _ = engine.infer_batch("digits_linear", 4, RoundingMode::Dither, &batch[..1])?;
+    let _ = engine.infer_batch("digits_linear", 4, SchemeId::Dither, &batch[..1])?;
     let t = Instant::now();
-    let outputs = engine.infer_batch("digits_linear", 4, RoundingMode::Dither, &batch)?;
+    let outputs = engine.infer_batch("digits_linear", 4, SchemeId::Dither, &batch)?;
     let elapsed = t.elapsed().as_secs_f64();
     let correct = outputs
         .iter()

@@ -4,7 +4,7 @@
 //! Run: `cargo run --release --example rounding_sweep [-- --dim 64 --pairs 5]`
 
 use dither::linalg::{frobenius_error, quant_matmul, Matrix, QuantMatmulConfig, Variant};
-use dither::rounding::{RoundingMode, ScalarRounder};
+use dither::rounding::{SchemeId, ScalarRounder};
 use dither::util::cli::Args;
 use dither::util::rng::Xoshiro256pp;
 
@@ -18,7 +18,7 @@ fn main() {
     let alpha = 2.3137;
     println!("Rounding α = {alpha} repeatedly (running mean of the outputs):\n");
     println!("  {:>8} {:>14} {:>14} {:>14}", "#rounds", "deterministic", "stochastic", "dither");
-    let mut rounders: Vec<ScalarRounder> = RoundingMode::ALL
+    let mut rounders: Vec<ScalarRounder> = SchemeId::PAPER
         .iter()
         .map(|&m| ScalarRounder::new(m, 64, 99))
         .collect();
@@ -51,7 +51,7 @@ fn main() {
             let a = Matrix::random_uniform(dim, dim, 0.0, 0.5, &mut rng);
             let b = Matrix::random_uniform(dim, dim, 0.0, 0.5, &mut rng);
             let c = a.matmul(&b);
-            for (i, &mode) in RoundingMode::ALL.iter().enumerate() {
+            for (i, &mode) in SchemeId::PAPER.iter().enumerate() {
                 let cfg = QuantMatmulConfig::unit(k, mode, Variant::PerPartial, p as u64);
                 errs[i] += frobenius_error(&c, &quant_matmul(&a, &b, &cfg)) / pairs as f64;
             }

@@ -7,7 +7,7 @@
 
 use dither::coordinator::format_request;
 use dither::data::{Dataset, Task};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::util::cli::Args;
 use dither::util::error::Result;
 use dither::util::json::Json;
@@ -38,12 +38,12 @@ fn main() -> Result<()> {
 
     // A/B the rounding schemes on the same images.
     for (id, mode, k) in [
-        (1u64, RoundingMode::Dither, 2u32),
-        (2, RoundingMode::Stochastic, 2),
-        (3, RoundingMode::Deterministic, 2),
-        (4, RoundingMode::Dither, 8),
+        (1u64, SchemeId::Dither, 2u32),
+        (2, SchemeId::Stochastic, 2),
+        (3, SchemeId::Deterministic, 2),
+        (4, SchemeId::Dither, 8),
     ] {
-        let scheme = mode.name();
+        let scheme = mode.wire_name();
         let img = ds.images.row((id as usize - 1) % ds.len());
         writeln!(writer, "{}", format_request(id, "digits_linear", k, mode, img))?;
         line.clear();

@@ -14,7 +14,7 @@ use dither::bitstream::{
     BitSeq, DitherEncoder, EvalConfig, Op, ResidualSampling,
 };
 use dither::linalg::{frobenius_error, quant_matmul, Matrix, QuantMatmulConfig, Variant};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::util::rng::Xoshiro256pp;
 use dither::util::stats::Welford;
 
@@ -98,7 +98,7 @@ fn period_sensitivity() {
             let cfg = QuantMatmulConfig {
                 n_a: Some(n),
                 n_b: Some(n),
-                ..QuantMatmulConfig::unit(2, RoundingMode::Dither, Variant::PerPartial, 30 + t)
+                ..QuantMatmulConfig::unit(2, SchemeId::Dither, Variant::PerPartial, 30 + t)
             };
             err += frobenius_error(&c, &quant_matmul(&a, &b, &cfg)) / 6.0;
         }
@@ -121,8 +121,8 @@ fn placement_vs_error() {
         print!(" {:>13}", variant.name());
     }
     println!();
-    for mode in RoundingMode::ALL {
-        print!("  {:>14}", mode.name());
+    for mode in SchemeId::PAPER {
+        print!("  {:>14}", mode.wire_name());
         for variant in Variant::ALL {
             let mut err = 0.0;
             for t in 0..6u64 {

@@ -12,8 +12,8 @@ use dither::cluster::{run_proxy, ProxyConfig};
 use dither::coordinator::{format_request, ping, serve, wait_ready, Engine, ServerConfig};
 use dither::data::{Dataset, Task};
 use dither::fidelity::FidelityShard;
-use dither::rounding::RoundingMode;
-use dither::train::Zoo;
+use dither::rounding::SchemeId;
+use dither::train::{ModelSpec, Zoo};
 use dither::util::benchmark::{black_box, format_count, Bench};
 use dither::util::json::Json;
 use dither::util::threadpool::num_threads;
@@ -38,7 +38,7 @@ fn main() {
         bench.bench_items(&name, batch as f64, || {
             black_box(
                 engine
-                    .infer_batch("digits_linear", 4, RoundingMode::Dither, &pixels)
+                    .infer_batch("digits_linear", 4, SchemeId::Dither, &pixels)
                     .expect("infer"),
             )
         });
@@ -48,7 +48,7 @@ fn main() {
     bench.bench_items("e2e/engine_fashion_mlp/k=4/dither/batch=32", 32.0, || {
         black_box(
             engine
-                .infer_batch("fashion_mlp", 4, RoundingMode::Dither, &pixels)
+                .infer_batch("fashion_mlp", 4, SchemeId::Dither, &pixels)
                 .expect("infer"),
         )
     });
@@ -60,7 +60,7 @@ fn main() {
     // (capacity 0). The ratio is the serving win of the plan/execute
     // split.
     let hit_engine = Engine::from_zoo(zoo.clone(), 7);
-    hit_engine.prewarm(&[4], &[RoundingMode::Dither]);
+    hit_engine.prewarm(&[4], &[SchemeId::Dither]);
     let miss_engine = Engine::with_plan_cache(zoo.clone(), 7, 0);
     let mut cache_pairs: Vec<(String, f64, f64)> = Vec::new();
     for &(model, batch) in &[("digits_linear", 1usize), ("fashion_mlp", 1), ("fashion_mlp", 8)] {
@@ -73,7 +73,7 @@ fn main() {
             let result = bench.bench_items(&name, batch as f64, || {
                 black_box(
                     engine
-                        .infer_batch(model, 4, RoundingMode::Dither, &pixels)
+                        .infer_batch(model, 4, SchemeId::Dither, &pixels)
                         .expect("infer"),
                 )
             });
@@ -97,7 +97,7 @@ fn main() {
     // `--shadow-rate`; production rates are a few percent of it.
     let shadow_engine =
         Engine::from_zoo(zoo.clone(), 7).with_shadow(1.0, Arc::new(FidelityShard::new()));
-    shadow_engine.prewarm(&[4], &[RoundingMode::Dither]);
+    shadow_engine.prewarm(&[4], &[SchemeId::Dither]);
     let pixels32: Vec<&[f64]> = (0..32).map(|i| ds.images.row(i)).collect();
     let mut shadow_rates = [0.0f64; 2];
     let engines: [(&Engine, &str); 2] = [(&hit_engine, "off"), (&shadow_engine, "on")];
@@ -106,7 +106,7 @@ fn main() {
         let result = bench.bench_items(&name, 32.0, || {
             black_box(
                 engine
-                    .infer_batch("digits_linear", 4, RoundingMode::Dither, &pixels32)
+                    .infer_batch("digits_linear", 4, SchemeId::Dither, &pixels32)
                     .expect("infer"),
             )
         });
@@ -127,6 +127,49 @@ fn main() {
     );
     drop(hit_engine);
     drop(shadow_engine);
+
+    // ---- scheme zoo: MSE vs throughput sweep ---------------------------
+    // One entry per registered scheme at k=4: engine batch throughput on
+    // the plan path next to the measured serving-granularity MSE from a
+    // shadowed run — the fidelity/cost frontier the auto controller
+    // navigates, with the literature zoo on it.
+    let sweep_engine = Engine::from_zoo(zoo.clone(), 7);
+    sweep_engine.prewarm(&[4], &SchemeId::ALL);
+    let sweep_sink = Arc::new(FidelityShard::new());
+    let sweep_shadowed = Engine::from_zoo(zoo.clone(), 7).with_shadow(1.0, sweep_sink.clone());
+    let mse_rounds = if fast { 4 } else { 16 };
+    let mut zoo_entries: Vec<Json> = Vec::new();
+    for mode in SchemeId::ALL {
+        let name = format!("e2e/scheme_zoo/{mode}/digits_linear/k=4/batch=32");
+        let result = bench.bench_items(&name, 32.0, || {
+            black_box(
+                sweep_engine
+                    .infer_batch("digits_linear", 4, mode, &pixels32)
+                    .expect("infer"),
+            )
+        });
+        for _ in 0..mse_rounds {
+            sweep_shadowed
+                .infer_batch("digits_linear", 4, mode, &pixels32)
+                .expect("infer");
+        }
+        let est = sweep_sink.estimate(ModelSpec::DigitsLinear.index(), mode, 4);
+        zoo_entries.push(Json::obj(vec![
+            (
+                "name",
+                Json::Str(format!(
+                    "e2e/scheme_zoo/{mode}/digits_linear/k=4/mse_vs_throughput"
+                )),
+            ),
+            ("scheme", Json::Str(mode.to_string())),
+            ("deterministic", Json::Bool(mode.is_deterministic())),
+            ("items_per_s", Json::Num(result.throughput().unwrap_or(0.0))),
+            ("mse", Json::Num(est.mse())),
+            ("samples", Json::Num(est.samples as f64)),
+        ]));
+    }
+    drop(sweep_engine);
+    drop(sweep_shadowed);
 
     // ---- TCP serving throughput: 1 shard vs K shards -------------------
     // All lockstep (window 1): each connection waits for every reply.
@@ -299,6 +342,7 @@ fn main() {
         ("on_items_per_s", Json::Num(shadow_rates[1])),
         ("overhead_x", Json::Num(overhead)),
     ]));
+    all.extend(zoo_entries);
     all.extend(serving);
     std::fs::create_dir_all("results").expect("results dir");
     std::fs::write("results/bench_e2e.json", Json::Arr(all).to_string())
@@ -352,7 +396,7 @@ fn drive_mixed(addr: &str, clients: usize, requests: usize, ds: &Dataset, window
                 stream.set_nodelay(true).ok();
                 let mut reader = BufReader::new(stream.try_clone().unwrap());
                 let mut writer = stream;
-                let req = format_request(c as u64, "digits_linear", k, RoundingMode::Dither, img);
+                let req = format_request(c as u64, "digits_linear", k, SchemeId::Dither, img);
                 let mut line = String::new();
                 let mut sent = 0usize;
                 let mut recvd = 0usize;
@@ -440,7 +484,7 @@ fn serving_throughput(
                 stream.set_nodelay(true).ok();
                 let mut reader = BufReader::new(stream.try_clone().unwrap());
                 let mut writer = stream;
-                let req = format_request(c as u64, "digits_linear", 4, RoundingMode::Dither, img);
+                let req = format_request(c as u64, "digits_linear", 4, SchemeId::Dither, img);
                 let mut line = String::new();
                 // Windowed send/recv: with window == 1 this is exactly the
                 // old lockstep loop; larger windows keep the pipe full.

@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench bench_matmul`
 
 use dither::linalg::{quant_matmul, Matrix, QuantMatmulConfig, Variant};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::util::benchmark::{black_box, Bench};
 use dither::util::rng::Xoshiro256pp;
 
@@ -23,8 +23,8 @@ fn main() {
 
     let mut seed = 0u64;
     for variant in Variant::ALL {
-        for mode in RoundingMode::ALL {
-            let name = format!("matmul/{}/{}/{dim}^3", variant.name(), mode.name());
+        for mode in SchemeId::PAPER {
+            let name = format!("matmul/{}/{}/{dim}^3", variant.name(), mode.wire_name());
             bench.bench_items(&name, flops, || {
                 seed += 1;
                 let cfg = QuantMatmulConfig::unit(4, mode, variant, seed);

@@ -19,7 +19,9 @@
 //! scheme), the backend is marked down, and the health monitor
 //! ([`crate::cluster::health`]) reconnects with backoff.
 
-use crate::coordinator::protocol::{format_overloaded, parse_stats, response_id, StatsSummary};
+use crate::coordinator::protocol::{
+    format_overloaded, parse_hello, parse_stats, response_id, HelloInfo, StatsSummary,
+};
 use crate::util::json::Json;
 use crate::util::threadpool::WorkerPool;
 use std::collections::HashMap;
@@ -73,6 +75,10 @@ pub struct Backend {
     /// without touching state that now belongs to a newer connection.
     epoch: AtomicU64,
     pending: Mutex<HashMap<u64, Route>>,
+    /// Rounding schemes the backend advertised in its last `hello`
+    /// handshake (empty until the first successful connect; a v1 backend
+    /// defaults to the paper's trio via [`parse_hello`]).
+    schemes: Mutex<Vec<String>>,
     readers: Mutex<WorkerPool>,
     /// Proxy-wide stop flag (readers poll it between read timeouts).
     stop: Arc<AtomicBool>,
@@ -103,6 +109,7 @@ impl Backend {
             conn: Mutex::new(None),
             epoch: AtomicU64::new(0),
             pending: Mutex::new(HashMap::new()),
+            schemes: Mutex::new(Vec::new()),
             readers: Mutex::new(WorkerPool::new()),
             stop,
             forwarded: AtomicU64::new(0),
@@ -151,6 +158,12 @@ impl Backend {
     /// Forwarded-but-unanswered requests right now.
     pub fn inflight(&self) -> usize {
         self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Rounding schemes the backend advertised on its last handshake
+    /// (empty before the first successful connect).
+    pub fn schemes(&self) -> Vec<String> {
+        self.schemes.lock().unwrap().clone()
     }
 
     /// Mark the backend serviceable (health monitor, after a successful
@@ -228,6 +241,7 @@ impl Backend {
         let Some(advertised) = hello_handshake(&stream, self.io_timeout) else {
             return false;
         };
+        *self.schemes.lock().unwrap() = advertised.schemes.clone();
         let read_half = match stream.try_clone() {
             Ok(s) => s,
             Err(_) => return false,
@@ -250,7 +264,7 @@ impl Backend {
         let epoch = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
         *conn = Some(Upstream {
             writer: stream,
-            window: self.cap.min(advertised.max(1)),
+            window: self.cap.min(advertised.max_inflight.max(1)),
         });
         drop(conn);
         self.reconnects.fetch_add(1, Ordering::Relaxed);
@@ -322,8 +336,10 @@ impl Backend {
 }
 
 /// `hello` handshake on a fresh upstream connection: the backend must
-/// advertise `pipelined`; returns its `max_inflight`.
-fn hello_handshake(stream: &TcpStream, io_timeout: Duration) -> Option<usize> {
+/// advertise `pipelined`; returns the parsed [`HelloInfo`] (window cap
+/// plus the scheme list — defaulted to the paper's trio for a v1
+/// backend that predates the `schemes` field).
+fn hello_handshake(stream: &TcpStream, io_timeout: Duration) -> Option<HelloInfo> {
     stream.set_read_timeout(Some(io_timeout)).ok()?;
     let mut reader = BufReader::new(stream.try_clone().ok()?);
     let mut writer = stream;
@@ -339,7 +355,7 @@ fn hello_handshake(stream: &TcpStream, io_timeout: Duration) -> Option<usize> {
     if !pipelined {
         return None;
     }
-    hello.get("max_inflight").and_then(Json::as_usize)
+    parse_hello(&line).ok()
 }
 
 /// Rewrite a backend reply's echoed upstream id back to the client's
@@ -353,9 +369,11 @@ fn rewrite_reply_id(line: &str, client_id: u64) -> String {
             }
             json.to_string()
         }
-        Err(_) => {
-            crate::coordinator::protocol::format_error(client_id, "unparseable backend reply")
-        }
+        Err(_) => crate::coordinator::protocol::format_error(
+            client_id,
+            "unparseable backend reply",
+            true,
+        ),
     }
 }
 
@@ -461,7 +479,7 @@ mod tests {
         let reply = crate::coordinator::protocol::format_response(
             981,
             3,
-            crate::rounding::RoundingMode::Dither,
+            crate::rounding::SchemeId::Dither,
             4,
             &[0.125, -0.5],
             77,

@@ -306,12 +306,18 @@ fn client_read_loop(
                         tx.send("{\"error\":\"no healthy backends\"}".to_string())
                     }
                 }
-                // Advertise the sum of the backend windows: the true
+                // Advertise the sum of the backend windows — the true
                 // bound on what one client can usefully keep in flight
-                // through this proxy.
-                Some("hello") => tx.send(format_hello(
-                    cluster.backends.iter().map(|b| b.cap()).sum::<usize>().max(1),
-                )),
+                // through this proxy — and the schemes every healthy
+                // backend agrees it can serve.
+                Some("hello") => {
+                    let schemes = advertised_schemes(cluster);
+                    let names: Vec<&str> = schemes.iter().map(String::as_str).collect();
+                    tx.send(format_hello(
+                        cluster.backends.iter().map(|b| b.cap()).sum::<usize>().max(1),
+                        &names,
+                    ))
+                }
                 Some("stats") => tx.send(merged_stats_json(cluster)),
                 Some("shutdown") => {
                     cluster.stop.store(true, Ordering::Release);
@@ -320,13 +326,13 @@ fn client_read_loop(
                 }
                 Some(other) => {
                     cluster.errors.fetch_add(1, Ordering::Relaxed);
-                    tx.send(format_error(0, &format!("unknown cmd {other:?}")))
+                    tx.send(format_error(0, &format!("unknown cmd {other:?}"), false))
                 }
                 None => dispatch(cluster, &json, tx),
             },
             Err(e) => {
                 cluster.errors.fetch_add(1, Ordering::Relaxed);
-                tx.send(format_error(line_id(trimmed), &e.to_string()))
+                tx.send(format_error(line_id(trimmed), &e.to_string(), false))
             }
         };
         if sent.is_err() {
@@ -338,6 +344,35 @@ fn client_read_loop(
         }
     }
     Ok(())
+}
+
+/// Schemes servable cluster-wide: the intersection of what every healthy
+/// backend advertised in its `hello` handshake. When no healthy backend
+/// has reported a list yet, fall back to the proxy's own registry —
+/// nothing is servable until a backend comes up anyway, and the registry
+/// is what a freshly probed-up backend of the same build will advertise.
+fn advertised_schemes(cluster: &Cluster) -> Vec<String> {
+    let mut acc: Option<Vec<String>> = None;
+    for b in &cluster.backends {
+        if !b.is_healthy() {
+            continue;
+        }
+        let schemes = b.schemes();
+        if schemes.is_empty() {
+            continue;
+        }
+        acc = Some(match acc {
+            None => schemes,
+            Some(have) => have.into_iter().filter(|s| schemes.contains(s)).collect(),
+        });
+    }
+    acc.unwrap_or_else(|| {
+        crate::rounding::SchemeRegistry::global()
+            .wire_names()
+            .iter()
+            .map(|s| (*s).to_string())
+            .collect()
+    })
 }
 
 /// Route one inference request: pick the key's owner among live backends,
@@ -354,7 +389,7 @@ fn dispatch(
     // pending entry unanswerable, so refuse it here.
     if !matches!(json, Json::Obj(_)) {
         cluster.errors.fetch_add(1, Ordering::Relaxed);
-        return tx.send(format_error(0, "request must be a json object"));
+        return tx.send(format_error(0, "request must be a json object", false));
     }
     let client_id = json
         .get("id")
@@ -417,6 +452,7 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         total.errors += s.errors;
         total.rejected += s.rejected;
         total.timeouts += s.timeouts;
+        total.deprecated_fields += s.deprecated_fields;
         total.batches += s.batches;
         total.batched_requests += s.batched_requests;
         total.latency_sum_us += s.latency_sum_us;
@@ -429,7 +465,7 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         total.writer_flushed_lines += s.writer_flushed_lines;
         per_shard.extend_from_slice(&s.per_shard_requests);
         for cell in &s.fidelity {
-            let slot = (cell.model.clone(), cell.mode.name().to_string(), cell.k);
+            let slot = (cell.model.clone(), cell.scheme.wire_name().to_string(), cell.k);
             cells
                 .entry(slot)
                 .and_modify(|have| have.estimate.merge(&cell.estimate))
@@ -457,7 +493,7 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         .map(|cell| {
             Json::obj(vec![
                 ("model", Json::Str(cell.model.clone())),
-                ("scheme", Json::Str(cell.mode.name().to_string())),
+                ("scheme", Json::Str(cell.scheme.to_string())),
                 ("k", Json::Num(f64::from(cell.k))),
                 ("samples", Json::Num(cell.estimate.samples as f64)),
                 ("bias", Json::Num(cell.estimate.bias)),
@@ -495,6 +531,7 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         ("errors", Json::Num(total.errors as f64)),
         ("rejected", Json::Num(total.rejected as f64)),
         ("timeouts", Json::Num(total.timeouts as f64)),
+        ("deprecated_fields", Json::Num(total.deprecated_fields as f64)),
         ("batches", Json::Num(total.batches as f64)),
         ("mean_batch", Json::Num(mean_batch)),
         ("mean_us", Json::Num(mean_us)),

@@ -1,7 +1,7 @@
 //! Per-shard dynamic batcher: a bounded queue that groups
 //! same-configuration requests into batches.
 //!
-//! Requests arriving within `max_wait` that share `(model, k, mode)` are
+//! Requests arriving within `max_wait` that share `(model, k, scheme)` are
 //! coalesced up to `max_batch` and executed in one engine call — the
 //! classic dynamic-batching policy. Each request carries a [`ReplyTo`] —
 //! the per-request reply channel back to its connection's writer, tagged
@@ -36,7 +36,7 @@
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::protocol::{format_error, format_response, InferenceRequest};
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 use crate::train::ModelSpec;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -159,7 +159,10 @@ impl ReplyTo {
 
 impl Drop for ReplyTo {
     fn drop(&mut self) {
-        if self.state.complete(format_error(self.state.id, "cancelled")) {
+        if self
+            .state
+            .complete(format_error(self.state.id, "cancelled", true))
+        {
             if let Some(metrics) = &self.state.metrics {
                 metrics.record_error();
             }
@@ -192,7 +195,7 @@ impl ReplyDeadline {
     /// when this call won (it then also recorded the timeout in the
     /// shard's metrics).
     pub fn expire(&self) -> bool {
-        let won = self.state.complete(format_error(self.state.id, "timeout"));
+        let won = self.state.complete(format_error(self.state.id, "timeout", true));
         if won {
             if let Some(metrics) = &self.state.metrics {
                 metrics.record_timeout();
@@ -301,7 +304,7 @@ pub struct BatchKey {
     /// Bit width.
     pub k: u32,
     /// Rounding scheme.
-    pub mode: RoundingMode,
+    pub scheme: SchemeId,
 }
 
 impl BatchKey {
@@ -309,12 +312,12 @@ impl BatchKey {
         BatchKey {
             model: req.model.clone(),
             k: req.k,
-            mode: req.mode,
+            scheme: req.scheme,
         }
     }
 
     fn matches(&self, req: &InferenceRequest) -> bool {
-        req.model == self.model && req.k == self.k && req.mode == self.mode
+        req.model == self.model && req.k == self.k && req.scheme == self.scheme
     }
 
     /// True for the auto-precision pseudo-key: auto requests enter the
@@ -554,12 +557,12 @@ fn resolve_auto(
     model: &str,
     batch: &[Pending],
     metrics: &ShardMetrics,
-) -> Result<(RoundingMode, u32), String> {
+) -> Result<(SchemeId, u32), String> {
     let spec = ModelSpec::from_name(model)
         .ok_or_else(|| format!("unknown model family {model:?}"))?;
     let budget = batch.iter().filter_map(|p| p.req.max_mse).fold(f64::INFINITY, f64::min);
     let choice = crate::fidelity::choose(metrics.fidelity(), spec.index(), budget);
-    Ok((choice.mode, choice.k))
+    Ok((choice.scheme, choice.k))
 }
 
 /// One shard's batching worker loop: pull → resolve (auto batches) →
@@ -578,37 +581,39 @@ pub fn worker_loop(
     while let Some((key, batch)) = batcher.next_batch() {
         metrics.record_batch(batch.len());
         let size = batch.len();
-        let (mode, k) = if key.is_auto() {
+        let (scheme, k) = if key.is_auto() {
             match resolve_auto(&key.model, &batch, metrics) {
                 Ok(choice) => choice,
                 Err(e) => {
                     for p in batch {
                         metrics.record_error();
                         let id = p.req.id;
-                        p.respond_to.send(format_error(id, &e));
+                        // An unknown model family never resolves, no
+                        // matter how often the client retries.
+                        p.respond_to.send(format_error(id, &e, false));
                     }
                     continue;
                 }
             }
         } else {
-            (key.mode, key.k)
+            (key.scheme, key.k)
         };
         if let Some(watchdog) = watchdog {
             watchdog.register(&batch);
         }
         let result = {
             let pixel_refs: Vec<&[f64]> = batch.iter().map(|p| p.req.pixels.as_slice()).collect();
-            engine.infer_batch(&key.model, k, mode, &pixel_refs)
+            engine.infer_batch(&key.model, k, scheme, &pixel_refs)
         };
         match result {
             Ok(outputs) => {
                 for (p, out) in batch.into_iter().zip(outputs) {
                     let latency_us = p.enqueued.elapsed().as_micros() as u64;
-                    metrics.record_request(mode, latency_us);
+                    metrics.record_request(scheme, latency_us);
                     let line = format_response(
                         p.req.id,
                         out.pred,
-                        mode,
+                        scheme,
                         k,
                         &out.logits,
                         latency_us,
@@ -623,7 +628,8 @@ pub fn worker_loop(
                 for p in batch {
                     metrics.record_error();
                     let id = p.req.id;
-                    p.respond_to.send(format_error(id, &e.to_string()));
+                    // Engine rejections (bad model/width) are permanent.
+                    p.respond_to.send(format_error(id, &e.to_string(), false));
                 }
             }
         }
@@ -636,13 +642,14 @@ mod tests {
     use std::sync::mpsc::sync_channel;
     use std::sync::Arc;
 
-    fn req(model: &str, k: u32, mode: RoundingMode, id: u64) -> InferenceRequest {
+    fn req(model: &str, k: u32, scheme: SchemeId, id: u64) -> InferenceRequest {
         InferenceRequest {
             id,
             model: model.to_string(),
             k,
-            mode,
+            scheme,
             auto: false,
+            deprecated_mode: false,
             max_mse: None,
             pixels: vec![0.0; 784],
         }
@@ -651,7 +658,7 @@ mod tests {
     fn pending(
         model: &str,
         k: u32,
-        mode: RoundingMode,
+        mode: SchemeId,
         id: u64,
     ) -> (Pending, std::sync::mpsc::Receiver<String>) {
         let (tx, rx) = sync_channel(64);
@@ -669,10 +676,10 @@ mod tests {
     fn groups_same_key_requests() {
         let b = Batcher::new(8, Duration::from_millis(1), 64);
         for i in 0..3 {
-            let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
+            let (p, _rx) = pending("digits_linear", 4, SchemeId::Dither, i);
             b.submit(p).unwrap();
         }
-        let (p, _rx) = pending("digits_linear", 2, RoundingMode::Dither, 99);
+        let (p, _rx) = pending("digits_linear", 2, SchemeId::Dither, 99);
         b.submit(p).unwrap();
         let (key, batch) = b.next_batch().unwrap();
         assert_eq!(key.k, 4);
@@ -688,7 +695,7 @@ mod tests {
     fn respects_max_batch() {
         let b = Batcher::new(2, Duration::from_millis(1), 64);
         for i in 0..5 {
-            let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
+            let (p, _rx) = pending("digits_linear", 4, SchemeId::Dither, i);
             b.submit(p).unwrap();
         }
         let (_, batch) = b.next_batch().unwrap();
@@ -703,7 +710,7 @@ mod tests {
     fn preserves_arrival_order_within_key() {
         let b = Batcher::new(8, Duration::from_millis(1), 64);
         for i in 0..4 {
-            let (p, _rx) = pending("digits_linear", 4, RoundingMode::Stochastic, i);
+            let (p, _rx) = pending("digits_linear", 4, SchemeId::Stochastic, i);
             b.submit(p).unwrap();
         }
         let (_, batch) = b.next_batch().unwrap();
@@ -715,11 +722,11 @@ mod tests {
     fn bounded_queue_rejects_overload() {
         let b = Batcher::new(8, Duration::from_millis(1), 2);
         for i in 0..2 {
-            let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
+            let (p, _rx) = pending("digits_linear", 4, SchemeId::Dither, i);
             b.submit(p).unwrap();
         }
         assert_eq!(b.depth(), 2);
-        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 9);
+        let (p, _rx) = pending("digits_linear", 4, SchemeId::Dither, 9);
         match b.submit(p) {
             Err(SubmitError::Overloaded(back)) => assert_eq!(back.req.id, 9),
             other => panic!("expected overload, got {other:?}"),
@@ -729,7 +736,7 @@ mod tests {
         let (_, batch) = b.next_batch().unwrap();
         assert_eq!(batch.len(), 2);
         assert_eq!(b.depth(), 0);
-        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 10);
+        let (p, _rx) = pending("digits_linear", 4, SchemeId::Dither, 10);
         assert!(b.submit(p).is_ok());
     }
 
@@ -737,7 +744,7 @@ mod tests {
     fn closed_batcher_rejects_submissions() {
         let b = Batcher::new(8, Duration::from_millis(1), 8);
         b.close();
-        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 1);
+        let (p, _rx) = pending("digits_linear", 4, SchemeId::Dither, 1);
         match b.submit(p) {
             Err(SubmitError::Closed(back)) => assert_eq!(back.req.id, 1),
             other => panic!("expected closed, got {other:?}"),
@@ -748,7 +755,7 @@ mod tests {
     fn close_drains_queue_then_ends() {
         let b = Batcher::new(2, Duration::from_millis(1), 8);
         for i in 0..3 {
-            let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
+            let (p, _rx) = pending("digits_linear", 4, SchemeId::Dither, i);
             b.submit(p).unwrap();
         }
         b.close();
@@ -772,7 +779,7 @@ mod tests {
     #[test]
     fn stop_discards_queued_requests() {
         let b = Batcher::new(8, Duration::from_millis(1), 8);
-        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 1);
+        let (p, _rx) = pending("digits_linear", 4, SchemeId::Dither, 1);
         b.submit(p).unwrap();
         b.stop();
         assert!(b.next_batch().is_none());
@@ -783,10 +790,10 @@ mod tests {
         let b = Batcher::new(8, Duration::from_millis(1), 64);
         b.set_residency(|key: &BatchKey| key.k == 4);
         // Cold key arrives first, resident keys behind it.
-        let (p, _rx0) = pending("digits_linear", 2, RoundingMode::Dither, 0);
+        let (p, _rx0) = pending("digits_linear", 2, SchemeId::Dither, 0);
         b.submit(p).unwrap();
         for id in 1..4u64 {
-            let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, id);
+            let (p, rx) = pending("digits_linear", 4, SchemeId::Dither, id);
             b.submit(p).unwrap();
             std::mem::forget(rx);
         }
@@ -804,12 +811,12 @@ mod tests {
     fn cold_key_is_not_starved_by_resident_traffic() {
         let b = Batcher::new(8, Duration::from_millis(1), 64);
         b.set_residency(|key: &BatchKey| key.k == 4);
-        let (cold, _rx) = pending("digits_linear", 2, RoundingMode::Dither, 0);
+        let (cold, _rx) = pending("digits_linear", 2, SchemeId::Dither, 0);
         b.submit(cold).unwrap();
         // Let the cold request age past the starvation bound (8× the 1 ms
         // linger), then pile resident traffic behind it.
         std::thread::sleep(b.starvation_bound() + Duration::from_millis(5));
-        let (hot, _rx2) = pending("digits_linear", 4, RoundingMode::Dither, 1);
+        let (hot, _rx2) = pending("digits_linear", 4, SchemeId::Dither, 1);
         b.submit(hot).unwrap();
         let (key, batch) = b.next_batch().unwrap();
         assert_eq!(key.k, 2, "over-age cold key must preempt resident keys");
@@ -821,9 +828,9 @@ mod tests {
     #[test]
     fn no_oracle_means_pure_arrival_order() {
         let b = Batcher::new(8, Duration::from_millis(1), 64);
-        let (p, _rx) = pending("digits_linear", 2, RoundingMode::Dither, 0);
+        let (p, _rx) = pending("digits_linear", 2, SchemeId::Dither, 0);
         b.submit(p).unwrap();
-        let (p, _rx2) = pending("digits_linear", 4, RoundingMode::Dither, 1);
+        let (p, _rx2) = pending("digits_linear", 4, SchemeId::Dither, 1);
         b.submit(p).unwrap();
         let (key, _) = b.next_batch().unwrap();
         assert_eq!(key.k, 2, "without residency the front key drains first");
@@ -832,13 +839,13 @@ mod tests {
     #[test]
     fn lingers_to_fill_batch() {
         let b = Arc::new(Batcher::new(4, Duration::from_millis(200), 64));
-        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 0);
+        let (p, _rx) = pending("digits_linear", 4, SchemeId::Dither, 0);
         b.submit(p).unwrap();
         let b2 = b.clone();
         let submitter = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(30));
             for i in 1..4 {
-                let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, i);
+                let (p, rx) = pending("digits_linear", 4, SchemeId::Dither, i);
                 b2.submit(p).unwrap();
                 std::mem::forget(rx);
             }
@@ -892,7 +899,7 @@ mod tests {
         assert_eq!(window.load(Ordering::SeqCst), 1);
         let dog = ReplyWatchdog::new(Duration::from_millis(20));
         let p = Pending {
-            req: req("digits_linear", 4, RoundingMode::Dither, 31),
+            req: req("digits_linear", 4, SchemeId::Dither, 31),
             respond_to: reply,
             enqueued: Instant::now(),
         };
@@ -921,7 +928,7 @@ mod tests {
     fn watchdog_ignores_replies_that_answered_in_time() {
         let all = crate::coordinator::metrics::Metrics::new(1);
         let dog = ReplyWatchdog::new(Duration::from_millis(10));
-        let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, 5);
+        let (p, rx) = pending("digits_linear", 4, SchemeId::Dither, 5);
         dog.register(std::slice::from_ref(&p));
         p.respond_to.send("{\"id\":5,\"pred\":2}".to_string());
         // Even an overdue sweep finds the entry completed.
@@ -931,7 +938,7 @@ mod tests {
         assert!(rx.try_recv().is_err());
         assert!(all.snapshot_json().contains("\"timeouts\":0"));
         // A cancellation (drop) also wins over a later sweep.
-        let (p2, rx2) = pending("digits_linear", 4, RoundingMode::Dither, 6);
+        let (p2, rx2) = pending("digits_linear", 4, SchemeId::Dither, 6);
         dog.register(std::slice::from_ref(&p2));
         drop(p2);
         assert_eq!(dog.sweep(Instant::now() + Duration::from_secs(1)), 0);
@@ -941,7 +948,7 @@ mod tests {
     #[test]
     fn watchdog_run_loop_sweeps_until_stopped() {
         let dog = Arc::new(ReplyWatchdog::new(Duration::from_millis(20)));
-        let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, 9);
+        let (p, rx) = pending("digits_linear", 4, SchemeId::Dither, 9);
         dog.register(std::slice::from_ref(&p));
         let d2 = dog.clone();
         let sweeper = std::thread::spawn(move || d2.run());
@@ -963,7 +970,7 @@ mod tests {
         let mut receivers = Vec::new();
         for (id, budget) in [(1u64, 0.5f64), (2, 2.0), (3, 1.0)] {
             let (tx, rx) = sync_channel(8);
-            let mut r = req("digits_linear", 0, RoundingMode::Dither, id);
+            let mut r = req("digits_linear", 0, SchemeId::Dither, id);
             r.auto = true;
             r.max_mse = Some(budget);
             b.submit(Pending {
@@ -974,7 +981,7 @@ mod tests {
             .unwrap();
             receivers.push(rx);
         }
-        let (p, _rx) = pending("digits_linear", 4, RoundingMode::Dither, 9);
+        let (p, _rx) = pending("digits_linear", 4, SchemeId::Dither, 9);
         b.submit(p).unwrap();
         let (key, batch) = b.next_batch().unwrap();
         assert!(key.is_auto());
@@ -983,13 +990,13 @@ mod tests {
         // → the paper-shape prior picks the cheapest feasible k, and the
         // whole batch lands on that single (scheme, k).
         let metrics = crate::coordinator::metrics::Metrics::new(1);
-        let (mode, k) = resolve_auto("digits_linear", &batch, &metrics.shard(0)).unwrap();
+        let (scheme, k) = resolve_auto("digits_linear", &batch, &metrics.shard(0)).unwrap();
         let strictest = crate::fidelity::choose(
             metrics.shard(0).fidelity(),
             crate::train::ModelSpec::DigitsLinear.index(),
             0.5,
         );
-        assert_eq!((mode, k), (strictest.mode, strictest.k));
+        assert_eq!((scheme, k), (strictest.scheme, strictest.k));
         assert!(k >= 1, "resolution must produce a servable bit width");
         // The concrete k=4 request stayed behind under its own key.
         let (key2, batch2) = b.next_batch().unwrap();
@@ -1002,7 +1009,7 @@ mod tests {
     #[test]
     fn stop_sends_cancellations_for_queued_requests() {
         let b = Batcher::new(8, Duration::from_millis(1), 8);
-        let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, 11);
+        let (p, rx) = pending("digits_linear", 4, SchemeId::Dither, 11);
         b.submit(p).unwrap();
         b.stop(); // clears the queue, dropping the Pending
         let line = rx.recv().unwrap();
@@ -1022,12 +1029,12 @@ mod tests {
         // Queue the cold request plus an initial hot burst before the
         // worker starts, so the first pick already sees both keys.
         let t0 = Instant::now();
-        let (cold, _cold_rx) = pending("digits_linear", 2, RoundingMode::Dither, 0);
+        let (cold, _cold_rx) = pending("digits_linear", 2, SchemeId::Dither, 0);
         b.submit(cold).unwrap();
         let mut receivers = Vec::new();
         let mut id = 1u64;
         for _ in 0..8 {
-            let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, id);
+            let (p, rx) = pending("digits_linear", 4, SchemeId::Dither, id);
             b.submit(p).unwrap();
             receivers.push(rx);
             id += 1;
@@ -1052,7 +1059,7 @@ mod tests {
         // Flood: hot submissions outpace the 1 ms/batch service rate for
         // several starvation bounds.
         while t0.elapsed() < bound * 3 {
-            let (p, rx) = pending("digits_linear", 4, RoundingMode::Dither, id);
+            let (p, rx) = pending("digits_linear", 4, SchemeId::Dither, id);
             if b.submit(p).is_ok() {
                 receivers.push(rx);
             }

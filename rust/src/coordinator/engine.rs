@@ -30,7 +30,7 @@
 use crate::fidelity::{FidelityShard, ShadowSampler};
 use crate::linalg::{Matrix, Variant};
 use crate::nn::{quantized_forward, PlanKey, PreparedModel, QuantInferenceConfig};
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 use crate::train::{ModelSpec, Zoo, ZooModel};
 use crate::util::error::Result;
 use crate::{bail, err};
@@ -243,7 +243,7 @@ impl Engine {
 
     /// Prewarm this engine's cache for the given bit widths and schemes
     /// across every zoo model (startup path for standalone engines).
-    pub fn prewarm(&self, bits: &[u32], modes: &[RoundingMode]) {
+    pub fn prewarm(&self, bits: &[u32], modes: &[SchemeId]) {
         let prepared = self
             .zoo
             .prewarm_plans(bits, modes, Variant::Separate, self.prep_seed);
@@ -263,7 +263,7 @@ impl Engine {
         let plans = Arc::new(PreparedModel::prepare(
             mlp,
             key.bits,
-            key.mode,
+            key.scheme,
             key.variant,
             self.prep_seed,
         ));
@@ -301,7 +301,7 @@ impl Engine {
 
     /// Draw one batch seed and assemble the serving inference config (the
     /// single derivation both the planned and unplanned paths share).
-    fn batch_config(&self, k: u32, mode: RoundingMode) -> QuantInferenceConfig {
+    fn batch_config(&self, k: u32, mode: SchemeId) -> QuantInferenceConfig {
         // One seed per batch: deterministic mode never reads it, the
         // unbiased modes get a fresh rounding stream each call.
         let seed = self.seed_counter.fetch_add(1, Ordering::Relaxed);
@@ -325,7 +325,7 @@ impl Engine {
         &self,
         model: &str,
         k: u32,
-        mode: RoundingMode,
+        mode: SchemeId,
         state: &ZooModel,
         x: &Matrix,
         quantized: &Matrix,
@@ -382,7 +382,7 @@ impl Engine {
         &self,
         model: &str,
         k: u32,
-        mode: RoundingMode,
+        mode: SchemeId,
         pixels: &[&[f64]],
     ) -> Result<Vec<InferenceOutput>> {
         if pixels.is_empty() {
@@ -413,7 +413,7 @@ impl Engine {
         &self,
         model: &str,
         k: u32,
-        mode: RoundingMode,
+        mode: SchemeId,
         pixels: &[&[f64]],
     ) -> Result<Vec<InferenceOutput>> {
         if pixels.is_empty() {
@@ -444,17 +444,17 @@ mod tests {
         let ds = crate::data::Dataset::synthesize(crate::data::Task::Digits, 4, 0xE19);
         let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
         let a = engine
-            .infer_batch("digits_linear", 3, RoundingMode::Deterministic, &pixels)
+            .infer_batch("digits_linear", 3, SchemeId::Deterministic, &pixels)
             .unwrap();
         let b = engine
-            .infer_batch("digits_linear", 3, RoundingMode::Deterministic, &pixels)
+            .infer_batch("digits_linear", 3, SchemeId::Deterministic, &pixels)
             .unwrap();
         assert!(a.iter().zip(&b).all(|(x, y)| x.logits == y.logits));
         let c = engine
-            .infer_batch("digits_linear", 3, RoundingMode::Dither, &pixels)
+            .infer_batch("digits_linear", 3, SchemeId::Dither, &pixels)
             .unwrap();
         let d = engine
-            .infer_batch("digits_linear", 3, RoundingMode::Dither, &pixels)
+            .infer_batch("digits_linear", 3, SchemeId::Dither, &pixels)
             .unwrap();
         assert!(
             c.iter().zip(&d).any(|(x, y)| x.logits != y.logits),
@@ -472,10 +472,10 @@ mod tests {
         let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
         for k in [1u32, 4, 8] {
             let planned = engine
-                .infer_batch("fashion_mlp", k, RoundingMode::Deterministic, &pixels)
+                .infer_batch("fashion_mlp", k, SchemeId::Deterministic, &pixels)
                 .unwrap();
             let direct = engine
-                .infer_batch_unplanned("fashion_mlp", k, RoundingMode::Deterministic, &pixels)
+                .infer_batch_unplanned("fashion_mlp", k, SchemeId::Deterministic, &pixels)
                 .unwrap();
             assert!(
                 planned
@@ -497,7 +497,7 @@ mod tests {
         let rows: Vec<&[f64]> = vec![&px];
         for k in [2u32, 3, 4] {
             engine
-                .infer_batch("digits_linear", k, RoundingMode::Deterministic, &rows)
+                .infer_batch("digits_linear", k, SchemeId::Deterministic, &rows)
                 .unwrap();
         }
         let stats = engine.plan_cache_stats();
@@ -508,20 +508,20 @@ mod tests {
         // k=3 and k=4 are resident; re-serving them hits.
         for k in [3u32, 4] {
             engine
-                .infer_batch("digits_linear", k, RoundingMode::Deterministic, &rows)
+                .infer_batch("digits_linear", k, SchemeId::Deterministic, &rows)
                 .unwrap();
         }
         assert_eq!(engine.plan_cache_stats().hits, 2);
         // k=2 was the LRU victim: serving it again is a rebuild, and it
         // evicts the now-oldest k=3.
         engine
-            .infer_batch("digits_linear", 2, RoundingMode::Deterministic, &rows)
+            .infer_batch("digits_linear", 2, SchemeId::Deterministic, &rows)
             .unwrap();
         let stats = engine.plan_cache_stats();
         assert_eq!(stats.misses, 4, "evicted configuration must rebuild");
         assert_eq!(stats.len, 2);
         engine
-            .infer_batch("digits_linear", 4, RoundingMode::Deterministic, &rows)
+            .infer_batch("digits_linear", 4, SchemeId::Deterministic, &rows)
             .unwrap();
         assert_eq!(engine.plan_cache_stats().hits, 3, "k=4 must still be resident");
     }
@@ -535,13 +535,13 @@ mod tests {
         // Two large fashion_mlp stochastic preparations (~1.75 MB of
         // per-call tables each) overflow a 2 MB budget at entry count 2.
         engine
-            .infer_batch("fashion_mlp", 4, RoundingMode::Stochastic, &rows)
+            .infer_batch("fashion_mlp", 4, SchemeId::Stochastic, &rows)
             .unwrap();
         let one = engine.plan_cache_stats();
         assert_eq!(one.len, 1);
         assert!(one.bytes > 1_000_000, "fashion plan should be large, got {}", one.bytes);
         engine
-            .infer_batch("fashion_mlp", 5, RoundingMode::Stochastic, &rows)
+            .infer_batch("fashion_mlp", 5, SchemeId::Stochastic, &rows)
             .unwrap();
         let stats = engine.plan_cache_stats();
         assert_eq!(stats.len, 1, "few large plans must still overflow the byte budget");
@@ -549,18 +549,18 @@ mod tests {
         // A small digits plan fits alongside the resident large one — the
         // budget is bytes, not a slot count.
         engine
-            .infer_batch("digits_linear", 4, RoundingMode::Stochastic, &rows)
+            .infer_batch("digits_linear", 4, SchemeId::Stochastic, &rows)
             .unwrap();
         let stats = engine.plan_cache_stats();
         assert_eq!(stats.len, 2);
         assert!(stats.bytes <= 2_000_000);
         // The resident large plan hits; the byte-evicted one rebuilds.
         engine
-            .infer_batch("fashion_mlp", 5, RoundingMode::Stochastic, &rows)
+            .infer_batch("fashion_mlp", 5, SchemeId::Stochastic, &rows)
             .unwrap();
         assert_eq!(engine.plan_cache_stats().hits, 1);
         engine
-            .infer_batch("fashion_mlp", 4, RoundingMode::Stochastic, &rows)
+            .infer_batch("fashion_mlp", 4, SchemeId::Stochastic, &rows)
             .unwrap();
         assert_eq!(engine.plan_cache_stats().misses, 4);
     }
@@ -572,7 +572,7 @@ mod tests {
         let px = vec![0.3f64; 784];
         let rows: Vec<&[f64]> = vec![&px];
         engine
-            .infer_batch("fashion_mlp", 4, RoundingMode::Stochastic, &rows)
+            .infer_batch("fashion_mlp", 4, SchemeId::Stochastic, &rows)
             .unwrap();
         let stats = engine.plan_cache_stats();
         assert_eq!(
@@ -590,12 +590,12 @@ mod tests {
         let px = vec![0.3f64; 784];
         let rows: Vec<&[f64]> = vec![&px];
         engine
-            .infer_batch("digits_linear", 4, RoundingMode::Dither, &rows)
+            .infer_batch("digits_linear", 4, SchemeId::Dither, &rows)
             .unwrap();
         let key = PlanKey {
             model: "digits_linear".to_string(),
             bits: 4,
-            mode: RoundingMode::Dither,
+            scheme: SchemeId::Dither,
             variant: Variant::Separate,
         };
         let before = engine.plan_cache_stats();
@@ -614,16 +614,16 @@ mod tests {
         let ds = crate::data::Dataset::synthesize(crate::data::Task::Digits, 6, 0xE33);
         let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
         engine
-            .infer_batch("digits_linear", 8, RoundingMode::Dither, &pixels)
+            .infer_batch("digits_linear", 8, SchemeId::Dither, &pixels)
             .unwrap();
-        let est = sink.estimate(ModelSpec::DigitsLinear.index(), RoundingMode::Dither, 8);
+        let est = sink.estimate(ModelSpec::DigitsLinear.index(), SchemeId::Dither, 8);
         assert_eq!(est.samples, 6 * 10, "rate 1.0 shadows every row's logits");
         assert!(est.mse() > 0.0, "quantized logits should differ from exact");
         assert!(est.mse() < 1.0, "k=8 dither error should be small, mse {}", est.mse());
         // The default engine (rate 0) records nothing.
         let quiet = Engine::new(200, 7);
         quiet
-            .infer_batch("digits_linear", 8, RoundingMode::Dither, &pixels)
+            .infer_batch("digits_linear", 8, SchemeId::Dither, &pixels)
             .unwrap();
         assert_eq!(quiet.fidelity().total_samples(), 0);
         assert_eq!(quiet.shadow_rate(), 0.0);
@@ -641,14 +641,14 @@ mod tests {
         let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
         // Cap 0 routes infer_batch through the unplanned baseline.
         engine
-            .infer_batch("digits_linear", 4, RoundingMode::Dither, &pixels)
+            .infer_batch("digits_linear", 4, SchemeId::Dither, &pixels)
             .unwrap();
         assert_eq!(sink.total_samples(), 4 * 10, "every row's logits shadowed");
         let stats = engine.plan_cache_stats();
         assert_eq!((stats.hits, stats.misses, stats.len), (0, 1, 0));
         // Direct A/B calls record too.
         engine
-            .infer_batch_unplanned("digits_linear", 4, RoundingMode::Dither, &pixels)
+            .infer_batch_unplanned("digits_linear", 4, SchemeId::Dither, &pixels)
             .unwrap();
         assert_eq!(sink.total_samples(), 8 * 10);
     }
@@ -661,7 +661,7 @@ mod tests {
         let rows: Vec<&[f64]> = vec![&px];
         for _ in 0..3 {
             engine
-                .infer_batch("digits_linear", 4, RoundingMode::Dither, &rows)
+                .infer_batch("digits_linear", 4, SchemeId::Dither, &rows)
                 .unwrap();
         }
         let stats = engine.plan_cache_stats();
@@ -672,13 +672,13 @@ mod tests {
     fn prewarm_populates_cache() {
         let zoo = Arc::new(Zoo::load(200, 7));
         let engine = Engine::from_zoo(zoo, 7);
-        engine.prewarm(&[2, 4], &RoundingMode::ALL);
+        engine.prewarm(&[2, 4], &SchemeId::PAPER);
         let stats = engine.plan_cache_stats();
         assert_eq!(stats.len, 2 * 2 * 3, "models × bits × schemes");
         let px = vec![0.3f64; 784];
         let rows: Vec<&[f64]> = vec![&px];
         engine
-            .infer_batch("digits_linear", 4, RoundingMode::Dither, &rows)
+            .infer_batch("digits_linear", 4, SchemeId::Dither, &rows)
             .unwrap();
         let stats = engine.plan_cache_stats();
         assert_eq!((stats.hits, stats.misses), (1, 0), "prewarmed config must hit");
@@ -690,22 +690,22 @@ mod tests {
         let short = vec![0.0f64; 10];
         let rows: Vec<&[f64]> = vec![&short];
         assert!(engine
-            .infer_batch("digits_linear", 4, RoundingMode::Dither, &rows)
+            .infer_batch("digits_linear", 4, SchemeId::Dither, &rows)
             .is_err());
         let ok = vec![0.0f64; 784];
         let rows: Vec<&[f64]> = vec![&ok];
         assert!(engine
-            .infer_batch("no_such_model", 4, RoundingMode::Dither, &rows)
+            .infer_batch("no_such_model", 4, SchemeId::Dither, &rows)
             .is_err());
         assert!(engine
-            .infer_batch("digits_linear", 0, RoundingMode::Dither, &rows)
+            .infer_batch("digits_linear", 0, SchemeId::Dither, &rows)
             .is_err());
         assert!(engine
-            .infer_batch("digits_linear", 17, RoundingMode::Dither, &rows)
+            .infer_batch("digits_linear", 17, SchemeId::Dither, &rows)
             .is_err());
         let empty: Vec<&[f64]> = Vec::new();
         assert!(engine
-            .infer_batch("digits_linear", 4, RoundingMode::Dither, &empty)
+            .infer_batch("digits_linear", 4, SchemeId::Dither, &empty)
             .unwrap()
             .is_empty());
     }

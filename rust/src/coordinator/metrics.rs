@@ -11,10 +11,10 @@
 //! * **lifetime** — cumulative log₂ buckets since startup (capacity
 //!   planning, long-run drift);
 //! * **recent** — rotating wall-clock windows ([`WINDOW_SLOTS`] slots of
-//!   [`WINDOW_SECS`] each, ~one minute total), kept *per rounding scheme*,
-//!   so `stats` reports what p50/p99 look like right now for
-//!   deterministic vs stochastic vs dither traffic rather than a
-//!   lifetime aggregate that stale load shapes dominate.
+//!   [`WINDOW_SECS`] each, ~one minute total), kept *per rounding scheme*
+//!   over every registered scheme, so `stats` reports what p50/p99 look
+//!   like right now for each scheme's traffic rather than a lifetime
+//!   aggregate that stale load shapes dominate.
 
 //! The registry also owns each shard's fidelity estimators
 //! ([`FidelityShard`]): the engine's shadow path writes into them on the
@@ -22,7 +22,7 @@
 //! `(model, scheme, k)` Welford cells into the `fidelity` block.
 
 use crate::fidelity::{FidelityEstimate, FidelityShard, MAX_K};
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 use crate::train::ModelSpec;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -108,21 +108,10 @@ impl SchemeWindows {
     }
 }
 
-/// Stable index of a scheme in the per-scheme window arrays.
-fn scheme_index(mode: RoundingMode) -> usize {
-    match mode {
-        RoundingMode::Deterministic => 0,
-        RoundingMode::Stochastic => 1,
-        RoundingMode::Dither => 2,
-    }
-}
-
-/// Scheme order used for the `recent` stats section.
-const SCHEME_ORDER: [RoundingMode; 3] = [
-    RoundingMode::Deterministic,
-    RoundingMode::Stochastic,
-    RoundingMode::Dither,
-];
+/// Scheme order used for the `recent` and `fidelity` stats sections:
+/// every registered scheme, in registry slot order ([`SchemeId::slot`]
+/// doubles as the index into the per-scheme window arrays).
+const SCHEME_ORDER: [SchemeId; SchemeId::COUNT] = SchemeId::ALL;
 
 /// One shard's counters. All operations are relaxed atomics.
 #[derive(Debug)]
@@ -131,6 +120,7 @@ pub struct ShardMetrics {
     errors: AtomicU64,
     rejected: AtomicU64,
     timeouts: AtomicU64,
+    deprecated_fields: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
     writer_flushes: AtomicU64,
@@ -138,7 +128,7 @@ pub struct ShardMetrics {
     latency_sum_us: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     started: Instant,
-    windows: [SchemeWindows; 3],
+    windows: [SchemeWindows; SchemeId::COUNT],
     /// Shadow-sampling error estimators, written by this shard's engine.
     fidelity: Arc<FidelityShard>,
 }
@@ -163,6 +153,7 @@ impl ShardMetrics {
             errors: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             timeouts: AtomicU64::new(0),
+            deprecated_fields: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
             writer_flushes: AtomicU64::new(0),
@@ -170,7 +161,7 @@ impl ShardMetrics {
             latency_sum_us: AtomicU64::new(0),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             started: Instant::now(),
-            windows: [SchemeWindows::new(), SchemeWindows::new(), SchemeWindows::new()],
+            windows: std::array::from_fn(|_| SchemeWindows::new()),
             fidelity: Arc::new(FidelityShard::new()),
         }
     }
@@ -189,11 +180,11 @@ impl ShardMetrics {
 
     /// Record one completed request of the given scheme with its
     /// end-to-end latency.
-    pub fn record_request(&self, mode: RoundingMode, latency_us: u64) {
+    pub fn record_request(&self, mode: SchemeId, latency_us: u64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
         self.latency_buckets[bucket_index(latency_us)].fetch_add(1, Ordering::Relaxed);
-        self.windows[scheme_index(mode)].record(self.current_epoch(), latency_us);
+        self.windows[mode.slot()].record(self.current_epoch(), latency_us);
     }
 
     /// Record a protocol or execution error.
@@ -210,6 +201,13 @@ impl ShardMetrics {
     /// call outlived the reply deadline).
     pub fn record_timeout(&self) {
         self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request that used a deprecated wire field (currently only
+    /// the `"mode"` alias for `"scheme"`), so operators can find clients
+    /// to migrate before the alias is removed.
+    pub fn record_deprecated_field(&self) {
+        self.deprecated_fields.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one writer-side coalesced flush that delivered `lines`
@@ -235,6 +233,7 @@ impl ShardMetrics {
         acc.errors += self.errors.load(Ordering::Relaxed);
         acc.rejected += self.rejected.load(Ordering::Relaxed);
         acc.timeouts += self.timeouts.load(Ordering::Relaxed);
+        acc.deprecated_fields += self.deprecated_fields.load(Ordering::Relaxed);
         acc.batches += self.batches.load(Ordering::Relaxed);
         acc.batched_requests += self.batched_requests.load(Ordering::Relaxed);
         acc.writer_flushes += self.writer_flushes.load(Ordering::Relaxed);
@@ -245,7 +244,7 @@ impl ShardMetrics {
         }
         let epoch = self.current_epoch();
         for (mode, (count, buckets)) in SCHEME_ORDER.iter().zip(acc.recent.iter_mut()) {
-            self.windows[scheme_index(*mode)].fold_recent(epoch, count, buckets);
+            self.windows[mode.slot()].fold_recent(epoch, count, buckets);
         }
     }
 }
@@ -286,6 +285,7 @@ struct Merged {
     errors: u64,
     rejected: u64,
     timeouts: u64,
+    deprecated_fields: u64,
     batches: u64,
     batched_requests: u64,
     writer_flushes: u64,
@@ -293,7 +293,7 @@ struct Merged {
     latency_sum_us: u64,
     buckets: [u64; BUCKETS],
     /// Recent-window (count, buckets) per scheme, in [`SCHEME_ORDER`].
-    recent: [(u64, [u64; BUCKETS]); 3],
+    recent: [(u64, [u64; BUCKETS]); SchemeId::COUNT],
 }
 
 // Manual impl: `Default` is not derivable for arrays longer than 32.
@@ -304,13 +304,14 @@ impl Default for Merged {
             errors: 0,
             rejected: 0,
             timeouts: 0,
+            deprecated_fields: 0,
             batches: 0,
             batched_requests: 0,
             writer_flushes: 0,
             writer_flushed_lines: 0,
             latency_sum_us: 0,
             buckets: [0; BUCKETS],
-            recent: [(0, [0; BUCKETS]); 3],
+            recent: [(0, [0; BUCKETS]); SchemeId::COUNT],
         }
     }
 }
@@ -396,7 +397,7 @@ impl Metrics {
                     }
                     fidelity.push(Json::obj(vec![
                         ("model", Json::Str(spec.name().to_string())),
-                        ("scheme", Json::Str(mode.name().to_string())),
+                        ("scheme", Json::Str(mode.to_string())),
                         ("k", Json::Num(f64::from(k))),
                         ("samples", Json::Num(est.samples as f64)),
                         ("bias", Json::Num(est.bias)),
@@ -411,7 +412,7 @@ impl Metrics {
             .zip(&m.recent)
             .map(|(mode, (count, buckets))| {
                 (
-                    mode.name(),
+                    mode.wire_name(),
                     Json::obj(vec![
                         ("requests", Json::Num(*count as f64)),
                         ("p50_us", Json::Num(percentile_from_buckets(buckets, 0.50))),
@@ -425,6 +426,7 @@ impl Metrics {
             ("errors", Json::Num(m.errors as f64)),
             ("rejected", Json::Num(m.rejected as f64)),
             ("timeouts", Json::Num(m.timeouts as f64)),
+            ("deprecated_fields", Json::Num(m.deprecated_fields as f64)),
             ("batches", Json::Num(m.batches as f64)),
             ("writer_flushes", Json::Num(m.writer_flushes as f64)),
             ("writer_flushed_lines", Json::Num(m.writer_flushed_lines as f64)),
@@ -466,7 +468,7 @@ mod tests {
     fn records_and_snapshots() {
         let m = Metrics::new(2);
         for i in 0..100u64 {
-            m.shard((i % 2) as usize).record_request(RoundingMode::Dither, i * 10);
+            m.shard((i % 2) as usize).record_request(SchemeId::Dither, i * 10);
         }
         m.shard(0).record_batch(8);
         m.shard(1).record_batch(4);
@@ -491,9 +493,9 @@ mod tests {
     fn recent_section_is_per_scheme() {
         let m = Metrics::new(2);
         for _ in 0..40 {
-            m.shard(0).record_request(RoundingMode::Dither, 100);
+            m.shard(0).record_request(SchemeId::Dither, 100);
         }
-        m.shard(1).record_request(RoundingMode::Deterministic, 1_000_000);
+        m.shard(1).record_request(SchemeId::Deterministic, 1_000_000);
         let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
         assert_eq!(json.get("recent_window_s").unwrap().as_f64(), Some(60.0));
         let recent = json.get("recent").expect("recent section");
@@ -544,10 +546,10 @@ mod tests {
     fn fidelity_block_merges_shards() {
         let m = Metrics::new(2);
         for _ in 0..10 {
-            m.shard(0).fidelity().record(0, RoundingMode::Dither, 4, 0.5);
-            m.shard(1).fidelity().record(0, RoundingMode::Dither, 4, -0.5);
+            m.shard(0).fidelity().record(0, SchemeId::Dither, 4, 0.5);
+            m.shard(1).fidelity().record(0, SchemeId::Dither, 4, -0.5);
         }
-        m.shard(0).fidelity().record(1, RoundingMode::Stochastic, 2, 2.0);
+        m.shard(0).fidelity().record(1, SchemeId::Stochastic, 2, 2.0);
         let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
         let fid = json.get("fidelity").unwrap().as_arr().unwrap();
         assert_eq!(fid.len(), 2, "only observed (model, scheme, k) cells are emitted");
@@ -598,8 +600,12 @@ mod tests {
         m.shard(0).record_flush(4); // one syscall delivered 4 replies
         m.shard(0).record_flush(1);
         m.shard(1).record_flush(3);
+        m.shard(0).record_deprecated_field();
+        m.shard(1).record_deprecated_field();
+        m.shard(1).record_deprecated_field();
         let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
         assert_eq!(json.get("timeouts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(json.get("deprecated_fields").unwrap().as_f64(), Some(3.0));
         assert_eq!(json.get("writer_flushes").unwrap().as_f64(), Some(3.0));
         assert_eq!(json.get("writer_flushed_lines").unwrap().as_f64(), Some(8.0));
         // Timeouts are their own counter, not errors.
@@ -609,7 +615,7 @@ mod tests {
     #[test]
     fn shard_indexing_wraps() {
         let m = Metrics::new(3);
-        m.shard(5).record_request(RoundingMode::Stochastic, 1); // 5 % 3 == 2
+        m.shard(5).record_request(SchemeId::Stochastic, 1); // 5 % 3 == 2
         assert_eq!(m.shard(2).requests(), 1);
         assert_eq!(m.total_requests(), 1);
     }

@@ -5,7 +5,11 @@
 //! {"id": 1, "model": "digits_linear", "k": 4, "scheme": "dither",
 //!  "pixels": [784 floats in 0..1]}
 //! ```
-//! `"mode"` is accepted as an alias for `"scheme"` (older clients).
+//! `"scheme"` names any registered rounding scheme (the `hello` reply
+//! lists them). The `"mode"` request field is **deprecated**: it is still
+//! accepted as an alias for `"scheme"` so older clients keep working, but
+//! each use is counted in `stats.deprecated_fields` and the alias will be
+//! removed in a future protocol revision.
 //! **Auto precision**: `"scheme": "auto"` (or `"k": 0`) plus a positive
 //! `"max_mse"` error budget asks the server to pick the cheapest
 //! `(scheme, k)` whose measured MSE meets the budget (see
@@ -19,21 +23,29 @@
 //! ```
 //! Control: `{"cmd": "ping"}`, `{"cmd": "hello"}` (feature handshake),
 //! `{"cmd": "stats"}`, `{"cmd": "shutdown"}`.
-//! Overload (bounded shard queue full, or a connection exceeding its
-//! in-flight window) is an error reply with an explicit marker so clients
-//! can back off: `{"id": 1, "error": "overloaded", "overloaded": true}`.
+//!
+//! **Errors**: every failure reply has one shape, across the server, the
+//! cluster proxy, and the watchdog alike:
+//! `{"id": 1, "error": "...", "retryable": false}`. `retryable` tells the
+//! client whether resending the identical request can ever succeed —
+//! `false` for malformed lines and unknown schemes, `true` for transient
+//! conditions (overload, shutdown, timeout). Overload replies
+//! additionally keep the legacy marker:
+//! `{"id": 1, "error": "overloaded", "overloaded": true, "retryable": true}`.
 //!
 //! **Pipelining**: the protocol is fully pipelined — a client may write
 //! any number of request lines without reading replies, and responses
 //! come back in *completion* order, not submission order. The `id` echo
 //! on every reply (successes, errors, and overloads alike) is what lets a
 //! client match them up; [`Reassembler`] is the client-side helper. The
-//! `{"cmd":"hello"}` handshake advertises the feature and the server's
-//! per-connection in-flight window; clients that never send it can keep
-//! the old lockstep discipline (one request, then one reply) unchanged.
+//! `{"cmd":"hello"}` handshake (protocol v2) advertises the feature set,
+//! the server's per-connection in-flight window, `"proto": 2`, and
+//! `"schemes": [...]` — the registered rounding schemes this endpoint can
+//! serve; clients that never send it can keep the old lockstep discipline
+//! (one request, then one reply) unchanged.
 
 use crate::fidelity::FidelityEstimate;
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 use crate::util::json::Json;
 use std::collections::HashMap;
 
@@ -48,11 +60,14 @@ pub struct InferenceRequest {
     /// until the precision controller resolves it pre-batching.
     pub k: u32,
     /// Rounding scheme (placeholder for auto requests, see `k`).
-    pub mode: RoundingMode,
+    pub scheme: SchemeId,
     /// True for `"scheme":"auto"` / `"k":0` requests: the server picks
-    /// `(mode, k)` from `max_mse` before the request reaches a batcher,
+    /// `(scheme, k)` from `max_mse` before the request reaches a batcher,
     /// and the response is tagged `"auto": true`.
     pub auto: bool,
+    /// True when the scheme arrived via the deprecated `"mode"` request
+    /// field — the server bumps `stats.deprecated_fields` per use.
+    pub deprecated_mode: bool,
     /// Per-request MSE budget (auto requests only).
     pub max_mse: Option<f64>,
     /// Flattened image pixels.
@@ -97,7 +112,9 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
         .and_then(Json::as_str)
         .unwrap_or("digits_linear")
         .to_string();
-    // "scheme" is the documented field; "mode" remains as an alias.
+    // "scheme" is the documented field; "mode" remains a deprecated alias
+    // that callers count via `deprecated_mode`.
+    let deprecated_mode = json.get("scheme").is_none() && json.get("mode").is_some();
     let scheme_raw = json
         .get("scheme")
         .or_else(|| json.get("mode"))
@@ -110,7 +127,7 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
         None => return Err("missing 'k'".to_string()),
     };
     let auto = auto_scheme || k == 0;
-    let (mode, k, max_mse) = if auto {
+    let (scheme, k, max_mse) = if auto {
         let budget = json
             .get("max_mse")
             .and_then(Json::as_f64)
@@ -120,15 +137,16 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
         }
         // Placeholders: the server's precision controller overwrites both
         // before the request is batched.
-        (RoundingMode::Dither, 0, Some(budget))
+        (SchemeId::Dither, 0, Some(budget))
     } else {
         if !(1..=16).contains(&k) {
             return Err(format!("k={k} out of range 1..=16"));
         }
-        let mode = scheme_raw
-            .and_then(RoundingMode::from_str)
-            .ok_or("missing or invalid 'scheme'")?;
-        (mode, k, None)
+        let scheme = match scheme_raw {
+            Some(s) => s.parse::<SchemeId>().map_err(|e| e.to_string())?,
+            None => return Err("missing 'scheme'".to_string()),
+        };
+        (scheme, k, None)
     };
     let pixels = json
         .get("pixels")
@@ -141,8 +159,9 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
         id,
         model,
         k,
-        mode,
+        scheme,
         auto,
+        deprecated_mode,
         max_mse,
         pixels,
     }))
@@ -151,12 +170,12 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
 /// Build a request line — the client side of [`parse_message`]. Every
 /// in-tree client (examples, load generator, tests, benches) goes through
 /// this so a protocol change cannot leave a stale hand-built copy behind.
-pub fn format_request(id: u64, model: &str, k: u32, mode: RoundingMode, pixels: &[f64]) -> String {
+pub fn format_request(id: u64, model: &str, k: u32, scheme: SchemeId, pixels: &[f64]) -> String {
     Json::obj(vec![
         ("id", Json::Num(id as f64)),
         ("model", Json::Str(model.to_string())),
         ("k", Json::Num(k as f64)),
-        ("scheme", Json::Str(mode.name().to_string())),
+        ("scheme", Json::Str(scheme.to_string())),
         ("pixels", Json::nums(pixels)),
     ])
     .to_string()
@@ -175,14 +194,14 @@ pub fn format_request_auto(id: u64, model: &str, max_mse: f64, pixels: &[f64]) -
     .to_string()
 }
 
-/// Successful inference response line. `mode`/`k` are the concrete
+/// Successful inference response line. `scheme`/`k` are the concrete
 /// configuration that served the request; `auto` tags replies whose
 /// configuration the precision controller chose.
 #[allow(clippy::too_many_arguments)]
 pub fn format_response(
     id: u64,
     pred: u8,
-    mode: RoundingMode,
+    scheme: SchemeId,
     k: u32,
     logits: &[f64],
     latency_us: u64,
@@ -193,7 +212,7 @@ pub fn format_response(
     let mut pairs = vec![
         ("id", Json::Num(id as f64)),
         ("pred", Json::Num(pred as f64)),
-        ("scheme", Json::Str(mode.name().to_string())),
+        ("scheme", Json::Str(scheme.to_string())),
         ("k", Json::Num(f64::from(k))),
         ("logits", Json::nums(logits)),
         ("latency_us", Json::Num(latency_us as f64)),
@@ -206,41 +225,95 @@ pub fn format_response(
     Json::obj(pairs).to_string()
 }
 
-/// Error response line.
-pub fn format_error(id: u64, error: &str) -> String {
+/// Error response line — the one failure shape every serving path emits.
+/// `retryable` tells the client whether resending the identical request
+/// can ever succeed: `false` for malformed lines and unknown schemes,
+/// `true` for transient conditions (overload, shutdown, timeout).
+pub fn format_error(id: u64, error: &str, retryable: bool) -> String {
     Json::obj(vec![
         ("id", Json::Num(id as f64)),
         ("error", Json::Str(error.to_string())),
+        ("retryable", Json::Bool(retryable)),
     ])
     .to_string()
 }
 
 /// Overload (backpressure) response line: the shard's bounded queue was
-/// full, the client should back off and retry.
+/// full, the client should back off and retry. Keeps the legacy
+/// `"overloaded"` marker alongside the unified `retryable` flag.
 pub fn format_overloaded(id: u64) -> String {
     Json::obj(vec![
         ("id", Json::Num(id as f64)),
         ("error", Json::Str("overloaded".to_string())),
         ("overloaded", Json::Bool(true)),
+        ("retryable", Json::Bool(true)),
     ])
     .to_string()
 }
 
-/// Handshake response: advertises the pipelined protocol and the server's
-/// per-connection in-flight window (requests beyond it are answered
-/// `overloaded` immediately). The wire format of every other message is
-/// unchanged, so clients that never send `hello` keep working in
-/// lockstep.
-pub fn format_hello(max_inflight: usize) -> String {
+/// Handshake response (protocol v2): advertises the pipelined protocol,
+/// the server's per-connection in-flight window (requests beyond it are
+/// answered `overloaded` immediately), and the rounding schemes this
+/// endpoint serves — the server passes the registry's list, the cluster
+/// proxy the intersection across its healthy backends. The wire format of
+/// every other message is unchanged, so clients that never send `hello`
+/// keep working in lockstep.
+pub fn format_hello(max_inflight: usize, schemes: &[&str]) -> String {
     Json::obj(vec![
         ("hello", Json::Bool(true)),
+        ("proto", Json::Num(2.0)),
         (
             "features",
             Json::Arr(vec![Json::Str("pipelined".to_string())]),
         ),
         ("max_inflight", Json::Num(max_inflight as f64)),
+        (
+            "schemes",
+            Json::Arr(schemes.iter().map(|s| Json::Str((*s).to_string())).collect()),
+        ),
     ])
     .to_string()
+}
+
+/// Client-side view of a `hello` reply.
+#[derive(Clone, Debug)]
+pub struct HelloInfo {
+    /// Protocol revision (1 when the server predates the field).
+    pub proto: u32,
+    /// Per-connection in-flight window.
+    pub max_inflight: usize,
+    /// Rounding schemes the endpoint serves. A v1 server advertises no
+    /// list; it serves exactly the paper's trio, so that is the default.
+    pub schemes: Vec<String>,
+}
+
+/// Parse a `hello` reply line into a [`HelloInfo`].
+pub fn parse_hello(line: &str) -> Result<HelloInfo, String> {
+    let json = Json::parse(line.trim()).map_err(|e| e.to_string())?;
+    if json.get("hello").and_then(Json::as_bool) != Some(true) {
+        return Err(format!("not a hello reply: {line}"));
+    }
+    let proto = json
+        .get("proto")
+        .and_then(Json::as_usize)
+        .unwrap_or(1) as u32;
+    let max_inflight = json
+        .get("max_inflight")
+        .and_then(Json::as_usize)
+        .ok_or("hello reply without 'max_inflight'")?;
+    let schemes = match json.get("schemes").and_then(Json::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .filter_map(Json::as_str)
+            .map(str::to_string)
+            .collect(),
+        None => SchemeId::PAPER.iter().map(|s| s.to_string()).collect(),
+    };
+    Ok(HelloInfo {
+        proto,
+        max_inflight,
+        schemes,
+    })
 }
 
 /// Best-effort id extraction from a request line that failed to parse as
@@ -321,7 +394,7 @@ pub struct FidelityCell {
     /// Model family name.
     pub model: String,
     /// Rounding scheme.
-    pub mode: RoundingMode,
+    pub scheme: SchemeId,
     /// Quantizer bit width.
     pub k: u32,
     /// Reconstructed Welford estimate.
@@ -342,6 +415,9 @@ pub struct StatsSummary {
     pub rejected: u64,
     /// Watchdog-answered requests.
     pub timeouts: u64,
+    /// Requests that used a deprecated request field (the `"mode"` alias
+    /// for `"scheme"`).
+    pub deprecated_fields: u64,
     /// Executed batches.
     pub batches: u64,
     /// Requests served inside those batches (recovered from `mean_batch`).
@@ -383,10 +459,10 @@ pub fn parse_stats(line: &str) -> Result<StatsSummary, String> {
                 .and_then(Json::as_str)
                 .ok_or("fidelity cell without 'model'")?
                 .to_string();
-            let mode = cell
+            let scheme = cell
                 .get("scheme")
                 .and_then(Json::as_str)
-                .and_then(RoundingMode::from_str)
+                .and_then(|s| s.parse::<SchemeId>().ok())
                 .ok_or("fidelity cell without a valid 'scheme'")?;
             let k = cell
                 .get("k")
@@ -402,7 +478,7 @@ pub fn parse_stats(line: &str) -> Result<StatsSummary, String> {
             let variance = cell.get("variance").and_then(Json::as_f64).unwrap_or(0.0);
             fidelity.push(FidelityCell {
                 model,
-                mode,
+                scheme,
                 k,
                 estimate: FidelityEstimate {
                     samples,
@@ -417,6 +493,7 @@ pub fn parse_stats(line: &str) -> Result<StatsSummary, String> {
         errors: count("errors"),
         rejected: count("rejected"),
         timeouts: count("timeouts"),
+        deprecated_fields: count("deprecated_fields"),
         batches,
         batched_requests: (num("mean_batch") * batches as f64).round() as u64,
         latency_sum_us: num("mean_us") * requests as f64,
@@ -440,12 +517,14 @@ pub fn parse_stats(line: &str) -> Result<StatsSummary, String> {
 /// no longer marshals these codes (the PJRT bridge is gone), but
 /// `python/compile/kernels/ref.py` and the AOT artifacts still take them
 /// as an input scalar — this function and its test pin the contract until
-/// an executable bridge returns (see ROADMAP "Open items").
-pub fn mode_code(mode: RoundingMode) -> i32 {
-    match mode {
-        RoundingMode::Deterministic => 0,
-        RoundingMode::Stochastic => 1,
-        RoundingMode::Dither => 2,
+/// an executable bridge returns (see ROADMAP "Open items"). The literature
+/// zoo has no kernel encoding yet, so those schemes return `None`.
+pub fn mode_code(scheme: SchemeId) -> Option<i32> {
+    match scheme {
+        SchemeId::Deterministic => Some(0),
+        SchemeId::Stochastic => Some(1),
+        SchemeId::Dither => Some(2),
+        _ => None,
     }
 }
 
@@ -468,7 +547,8 @@ mod tests {
             Message::Infer(r) => {
                 assert_eq!(r.id, 42);
                 assert_eq!(r.k, 4);
-                assert_eq!(r.mode, RoundingMode::Dither);
+                assert_eq!(r.scheme, SchemeId::Dither);
+                assert!(!r.deprecated_mode);
                 assert_eq!(r.pixels.len(), 784);
             }
             other => panic!("wrong message {other:?}"),
@@ -476,16 +556,37 @@ mod tests {
     }
 
     #[test]
-    fn mode_is_accepted_as_scheme_alias() {
+    fn every_registered_scheme_parses_from_the_wire() {
+        for id in SchemeId::ALL {
+            let line = sample_request(4).replace("\"dither\"", &format!("{:?}", id.to_string()));
+            match parse_message(&line).unwrap() {
+                Message::Infer(r) => assert_eq!(r.scheme, id),
+                other => panic!("wrong message {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn mode_is_accepted_as_deprecated_scheme_alias() {
         let line = sample_request(4).replace("\"scheme\"", "\"mode\"");
-        assert!(matches!(parse_message(&line), Ok(Message::Infer(_))));
-        // "scheme" wins when both are present.
+        match parse_message(&line).unwrap() {
+            Message::Infer(r) => {
+                assert_eq!(r.scheme, SchemeId::Dither);
+                assert!(r.deprecated_mode, "alias use must be flagged");
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        // "scheme" wins when both are present — and counts as the modern
+        // spelling.
         let both = sample_request(4).replace(
             "\"scheme\": \"dither\"",
             "\"scheme\": \"stochastic\", \"mode\": \"dither\"",
         );
         match parse_message(&both).unwrap() {
-            Message::Infer(r) => assert_eq!(r.mode, RoundingMode::Stochastic),
+            Message::Infer(r) => {
+                assert_eq!(r.scheme, SchemeId::Stochastic);
+                assert!(!r.deprecated_mode);
+            }
             other => panic!("wrong message {other:?}"),
         }
     }
@@ -525,13 +626,13 @@ mod tests {
     #[test]
     fn request_roundtrip() {
         let pixels: Vec<f64> = (0..784).map(|i| i as f64 / 784.0).collect();
-        let line = format_request(11, "fashion_mlp", 6, RoundingMode::Stochastic, &pixels);
+        let line = format_request(11, "fashion_mlp", 6, SchemeId::Stochastic, &pixels);
         match parse_message(&line).unwrap() {
             Message::Infer(r) => {
                 assert_eq!(r.id, 11);
                 assert_eq!(r.model, "fashion_mlp");
                 assert_eq!(r.k, 6);
-                assert_eq!(r.mode, RoundingMode::Stochastic);
+                assert_eq!(r.scheme, SchemeId::Stochastic);
                 assert_eq!(r.pixels.len(), 784);
             }
             other => panic!("wrong message {other:?}"),
@@ -540,7 +641,7 @@ mod tests {
 
     #[test]
     fn response_roundtrip() {
-        let line = format_response(7, 3, RoundingMode::Dither, 4, &[0.1, 0.9], 250, 4, 2, false);
+        let line = format_response(7, 3, SchemeId::Dither, 4, &[0.1, 0.9], 250, 4, 2, false);
         let json = Json::parse(&line).unwrap();
         assert_eq!(json.get("id").unwrap().as_f64(), Some(7.0));
         assert_eq!(json.get("pred").unwrap().as_f64(), Some(3.0));
@@ -549,12 +650,24 @@ mod tests {
         assert_eq!(json.get("batch").unwrap().as_f64(), Some(4.0));
         assert_eq!(json.get("shard").unwrap().as_f64(), Some(2.0));
         assert!(json.get("auto").is_none(), "fixed requests carry no auto tag");
-        let auto = format_response(8, 1, RoundingMode::Deterministic, 2, &[0.5], 10, 1, 0, true);
+        let auto = format_response(8, 1, SchemeId::Deterministic, 2, &[0.5], 10, 1, 0, true);
         let json = Json::parse(&auto).unwrap();
         assert_eq!(json.get("auto").unwrap().as_bool(), Some(true));
         assert_eq!(json.get("k").unwrap().as_f64(), Some(2.0));
-        let err = format_error(7, "bad");
-        assert!(Json::parse(&err).unwrap().get("error").is_some());
+        // Zoo schemes ride the same response shape.
+        let zoo = format_response(9, 2, SchemeId::SrVb, 3, &[0.5], 10, 1, 0, false);
+        let json = Json::parse(&zoo).unwrap();
+        assert_eq!(json.get("scheme").unwrap().as_str(), Some("srvb"));
+    }
+
+    #[test]
+    fn error_replies_carry_the_unified_shape() {
+        for (retryable, msg) in [(false, "unknown rounding scheme `fuzzy`"), (true, "timeout")] {
+            let json = Json::parse(&format_error(7, msg, retryable)).unwrap();
+            assert_eq!(json.get("id").unwrap().as_f64(), Some(7.0));
+            assert_eq!(json.get("error").unwrap().as_str(), Some(msg));
+            assert_eq!(json.get("retryable").unwrap().as_bool(), Some(retryable));
+        }
     }
 
     #[test]
@@ -603,6 +716,7 @@ mod tests {
         assert_eq!(json.get("id").unwrap().as_f64(), Some(9.0));
         assert_eq!(json.get("overloaded").unwrap().as_bool(), Some(true));
         assert_eq!(json.get("error").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(json.get("retryable").unwrap().as_bool(), Some(true));
     }
 
     #[test]
@@ -611,14 +725,25 @@ mod tests {
             parse_message("{\"cmd\":\"hello\"}"),
             Ok(Message::Hello)
         ));
-        let line = format_hello(32);
+        let zoo = crate::rounding::SchemeRegistry::global().wire_names();
+        let line = format_hello(32, &zoo);
         let json = Json::parse(&line).unwrap();
         assert_eq!(json.get("hello").unwrap().as_bool(), Some(true));
+        assert_eq!(json.get("proto").unwrap().as_f64(), Some(2.0));
         assert_eq!(json.get("max_inflight").unwrap().as_f64(), Some(32.0));
         let features = json.get("features").unwrap().as_arr().unwrap();
         assert!(features
             .iter()
             .any(|f| f.as_str() == Some("pipelined")));
+        let info = parse_hello(&line).unwrap();
+        assert_eq!(info.proto, 2);
+        assert_eq!(info.max_inflight, 32);
+        assert_eq!(info.schemes, zoo, "hello advertises the full registry");
+        // A v1 hello (no proto / schemes) defaults to the paper's trio.
+        let legacy = parse_hello("{\"hello\":true,\"max_inflight\":8}").unwrap();
+        assert_eq!(legacy.proto, 1);
+        assert_eq!(legacy.schemes, vec!["deterministic", "dither", "stochastic"]);
+        assert!(parse_hello("{\"pong\":true}").is_err());
     }
 
     #[test]
@@ -634,7 +759,7 @@ mod tests {
     #[test]
     fn reassembler_matches_by_id_and_rejects_duplicates() {
         let mut r = Reassembler::new();
-        let a = format_response(3, 1, RoundingMode::Dither, 4, &[0.5], 10, 1, 0, false);
+        let a = format_response(3, 1, SchemeId::Dither, 4, &[0.5], 10, 1, 0, false);
         let b = format_overloaded(9);
         assert!(r.is_empty());
         assert_eq!(r.insert(&b).unwrap(), 9);
@@ -643,14 +768,14 @@ mod tests {
         // One reply per id: a second answer for id 3 is a protocol error,
         // and the originally filed reply survives the rejected imposter.
         assert!(r.insert(&a).is_err());
-        assert!(r.insert(&format_error(3, "imposter")).is_err());
+        assert!(r.insert(&format_error(3, "imposter", false)).is_err());
         assert!(r.take(3).unwrap().contains("\"pred\""));
         assert!(r.take(9).unwrap().contains("overloaded"));
         assert!(r.take(3).is_none());
         assert!(r.is_empty());
         // A line without an id cannot be filed.
         assert!(r.insert("{\"pong\":true}").is_err());
-        assert_eq!(response_id(&format_error(7, "bad")).unwrap(), 7);
+        assert_eq!(response_id(&format_error(7, "bad", false)).unwrap(), 7);
     }
 
     #[test]
@@ -661,6 +786,7 @@ mod tests {
                     \"mean_batch\":4,\"mean_us\":50,\"p50_us\":40,\"p95_us\":90,\
                     \"p99_us\":99,\"uptime_s\":12.5,\"shards\":2,\
                     \"per_shard_requests\":[60,40],\"timeouts\":1,\
+                    \"deprecated_fields\":4,\
                     \"fidelity\":[{\"model\":\"digits_linear\",\"scheme\":\"dither\",\
                     \"k\":4,\"samples\":10,\"bias\":0.5,\"mse\":0.5,\"variance\":0.25}]}";
         let s = parse_stats(line).unwrap();
@@ -668,6 +794,7 @@ mod tests {
         assert_eq!(s.errors, 2);
         assert_eq!(s.rejected, 3);
         assert_eq!(s.timeouts, 1);
+        assert_eq!(s.deprecated_fields, 4);
         assert_eq!(s.batches, 25);
         assert_eq!(s.batched_requests, 100, "mean_batch * batches");
         assert_eq!(s.latency_sum_us, 5000.0, "mean_us * requests");
@@ -676,7 +803,7 @@ mod tests {
         assert_eq!(s.writer_flushes, 0, "absent counters parse as zero");
         let cell = &s.fidelity[0];
         assert_eq!(cell.model, "digits_linear");
-        assert_eq!(cell.mode, RoundingMode::Dither);
+        assert_eq!(cell.scheme, SchemeId::Dither);
         assert_eq!(cell.k, 4);
         assert_eq!(cell.estimate.samples, 10);
         // m2 reconstructed so merge() reproduces the server-side math.
@@ -697,8 +824,12 @@ mod tests {
 
     #[test]
     fn mode_codes_match_kernel_encoding() {
-        assert_eq!(mode_code(RoundingMode::Deterministic), 0);
-        assert_eq!(mode_code(RoundingMode::Stochastic), 1);
-        assert_eq!(mode_code(RoundingMode::Dither), 2);
+        assert_eq!(mode_code(SchemeId::Deterministic), Some(0));
+        assert_eq!(mode_code(SchemeId::Stochastic), Some(1));
+        assert_eq!(mode_code(SchemeId::Dither), Some(2));
+        // The zoo has no kernel encoding yet.
+        for scheme in [SchemeId::Sr2, SchemeId::SrVb, SchemeId::Tpdf, SchemeId::Gauss] {
+            assert_eq!(mode_code(scheme), None, "{scheme}");
+        }
     }
 }

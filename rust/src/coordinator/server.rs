@@ -85,7 +85,8 @@ pub struct ServerConfig {
     /// Base seed for the per-shard engine rounding streams.
     pub seed: u64,
     /// Bit widths prewarmed into every shard's plan cache at startup
-    /// (all schemes, every model). Empty disables prewarming.
+    /// (the paper's trio of schemes, every model). Empty disables
+    /// prewarming.
     pub prewarm_bits: Vec<u32>,
     /// Fraction of request rows shadow-checked against the exact f64
     /// forward pass (feeds `stats.fidelity` and the auto controller;
@@ -429,7 +430,10 @@ fn read_loop(
         let mut stop = false;
         let sent = match parse_message(trimmed) {
             Ok(Message::Ping) => tx.send("{\"pong\":true}".to_string()),
-            Ok(Message::Hello) => tx.send(format_hello(max_inflight)),
+            Ok(Message::Hello) => tx.send(format_hello(
+                max_inflight,
+                &crate::rounding::SchemeRegistry::global().wire_names(),
+            )),
             Ok(Message::Stats) => tx.send(metrics.snapshot_json()),
             Ok(Message::Shutdown) => {
                 pool.close();
@@ -442,8 +446,9 @@ fn read_loop(
             Err(e) => {
                 shard_metrics.record_error();
                 // Echo the id when the malformed line carried one, so a
-                // pipelined client can attribute the failure.
-                tx.send(format_error(line_id(trimmed), &e))
+                // pipelined client can attribute the failure. Malformed
+                // lines (unknown schemes included) never parse on retry.
+                tx.send(format_error(line_id(trimmed), &e, false))
             }
         };
         if sent.is_err() {
@@ -474,6 +479,10 @@ fn handle_infer(
     max_inflight: usize,
     tx: &SyncSender<String>,
 ) -> std::result::Result<(), SendError<String>> {
+    // Deprecated-alias telemetry: counted per use, before any outcome.
+    if req.deprecated_mode {
+        shard_metrics.record_deprecated_field();
+    }
     // Window first: a bounced request only needs its id echoed back.
     if inflight.load(Ordering::Acquire) >= max_inflight {
         shard_metrics.record_rejected();
@@ -500,7 +509,9 @@ fn handle_infer(
         Err(SubmitError::Closed(p)) => {
             shard_metrics.record_error();
             let id = p.req.id;
-            p.respond_to.send(format_error(id, "shutting down"));
+            // Shutdown is transient from the client's point of view: the
+            // same request can succeed against a restarted server.
+            p.respond_to.send(format_error(id, "shutting down", true));
         }
     }
     Ok(())

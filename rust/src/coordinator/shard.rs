@@ -17,7 +17,7 @@ use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
 use crate::linalg::Variant;
 use crate::nn::PlanKey;
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 use crate::train::Zoo;
 use crate::util::rng::counter_hash;
 use crate::util::threadpool::WorkerPool;
@@ -37,9 +37,9 @@ pub struct ShardConfig {
     pub queue_cap: usize,
     /// Base seed for the per-shard engine rounding streams.
     pub seed: u64,
-    /// Bit widths whose weight-side plans are prewarmed (all three schemes,
-    /// every model) into each shard's plan cache before traffic is
-    /// accepted. Empty disables prewarming.
+    /// Bit widths whose weight-side plans are prewarmed (the paper's trio
+    /// of schemes, every model) into each shard's plan cache before
+    /// traffic is accepted. Empty disables prewarming.
     pub prewarm_bits: Vec<u32>,
     /// Fraction of request rows shadow-checked against the exact f64
     /// forward pass per shard (0 disables shadow sampling).
@@ -74,7 +74,7 @@ impl ShardPool {
         let prewarmed = if cfg.prewarm_bits.is_empty() {
             Vec::new()
         } else {
-            zoo.prewarm_plans(&cfg.prewarm_bits, &RoundingMode::ALL, Variant::Separate, cfg.seed)
+            zoo.prewarm_plans(&cfg.prewarm_bits, &SchemeId::PAPER, Variant::Separate, cfg.seed)
         };
         let mut workers = WorkerPool::new();
         // One reply watchdog serves every shard: workers register each
@@ -118,7 +118,7 @@ impl ShardPool {
                 res_engine.plan_resident(&PlanKey {
                     model: key.model.clone(),
                     bits: key.k,
-                    mode: key.mode,
+                    scheme: key.scheme,
                     variant: Variant::Separate,
                 })
             });
@@ -205,7 +205,7 @@ impl ShardPool {
 mod tests {
     use super::*;
     use crate::coordinator::protocol::InferenceRequest;
-    use crate::rounding::RoundingMode;
+    use crate::rounding::SchemeId;
     use crate::util::json::Json;
     use std::sync::mpsc::sync_channel;
     use std::time::Instant;
@@ -238,8 +238,9 @@ mod tests {
                     id,
                     model: "digits_linear".to_string(),
                     k: 4,
-                    mode: RoundingMode::Dither,
+                    scheme: SchemeId::Dither,
                     auto: false,
+                    deprecated_mode: false,
                     max_mse: None,
                     pixels: vec![0.3; 784],
                 },

@@ -8,7 +8,7 @@
 
 use crate::experiments::write_result;
 use crate::linalg::{frobenius_error, quant_matmul, Matrix, QuantMatmulConfig, Variant};
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::threadpool::parallel_map;
@@ -44,22 +44,22 @@ impl Default for Fig8Config {
 pub struct Fig8Result {
     /// Bit widths.
     pub ks: Vec<u32>,
-    /// `errors[mode_index][k_index]` in `RoundingMode::ALL` order.
+    /// `errors[mode_index][k_index]` in `SchemeId::PAPER` order.
     pub errors: Vec<Vec<f64>>,
 }
 
 impl Fig8Result {
     /// Series for one mode.
-    pub fn series(&self, mode: RoundingMode) -> &[f64] {
-        let idx = RoundingMode::ALL.iter().position(|&m| m == mode).unwrap();
+    pub fn series(&self, mode: SchemeId) -> &[f64] {
+        let idx = SchemeId::PAPER.iter().position(|&m| m == mode).unwrap();
         &self.errors[idx]
     }
 
     /// Smallest k at which traditional rounding beats dither (the paper's
     /// threshold k̃), if any within the sweep.
     pub fn crossover_k(&self) -> Option<u32> {
-        let det = self.series(RoundingMode::Deterministic);
-        let dit = self.series(RoundingMode::Dither);
+        let det = self.series(SchemeId::Deterministic);
+        let dit = self.series(SchemeId::Dither);
         self.ks
             .iter()
             .zip(det.iter().zip(dit))
@@ -77,8 +77,8 @@ pub fn compute(cfg: &Fig8Config) -> Fig8Result {
         let a = Matrix::random_uniform(cfg.dim, cfg.dim, 0.0, cfg.hi, &mut rng);
         let b = Matrix::random_uniform(cfg.dim, cfg.dim, 0.0, cfg.hi, &mut rng);
         let c = a.matmul(&b);
-        let mut errs = vec![vec![0.0; cfg.ks.len()]; RoundingMode::ALL.len()];
-        for (mi, &mode) in RoundingMode::ALL.iter().enumerate() {
+        let mut errs = vec![vec![0.0; cfg.ks.len()]; SchemeId::PAPER.len()];
+        for (mi, &mode) in SchemeId::PAPER.iter().enumerate() {
             for (ki, &k) in cfg.ks.iter().enumerate() {
                 let mm = QuantMatmulConfig::unit(
                     k,
@@ -92,7 +92,7 @@ pub fn compute(cfg: &Fig8Config) -> Fig8Result {
         }
         errs
     });
-    let mut errors = vec![vec![0.0; cfg.ks.len()]; RoundingMode::ALL.len()];
+    let mut errors = vec![vec![0.0; cfg.ks.len()]; SchemeId::PAPER.len()];
     for pp in &per_pair {
         for (mi, row) in pp.iter().enumerate() {
             for (ki, &e) in row.iter().enumerate() {
@@ -114,13 +114,13 @@ pub fn run(cfg: &Fig8Config, out_dir: &str) -> Fig8Result {
     );
     let result = compute(cfg);
     print!("  {:>4}", "k");
-    for mode in RoundingMode::ALL {
-        print!("  {:>14}", mode.name());
+    for mode in SchemeId::PAPER {
+        print!("  {:>14}", mode.wire_name());
     }
     println!();
     for (ki, &k) in result.ks.iter().enumerate() {
         print!("  {k:>4}");
-        for (mi, _) in RoundingMode::ALL.iter().enumerate() {
+        for (mi, _) in SchemeId::PAPER.iter().enumerate() {
             print!("  {:>14.4}", result.errors[mi][ki]);
         }
         println!();
@@ -136,12 +136,12 @@ pub fn run(cfg: &Fig8Config, out_dir: &str) -> Fig8Result {
         ),
         (
             "deterministic",
-            Json::nums(result.series(RoundingMode::Deterministic)),
+            Json::nums(result.series(SchemeId::Deterministic)),
         ),
-        ("dither", Json::nums(result.series(RoundingMode::Dither))),
+        ("dither", Json::nums(result.series(SchemeId::Dither))),
         (
             "stochastic",
-            Json::nums(result.series(RoundingMode::Stochastic)),
+            Json::nums(result.series(SchemeId::Stochastic)),
         ),
     ]);
     write_result(out_dir, "fig8", json);
@@ -165,9 +165,9 @@ mod tests {
     #[test]
     fn shape_of_fig8_reproduced() {
         let r = compute(&tiny());
-        let det = r.series(RoundingMode::Deterministic);
-        let dit = r.series(RoundingMode::Dither);
-        let sto = r.series(RoundingMode::Stochastic);
+        let det = r.series(SchemeId::Deterministic);
+        let dit = r.series(SchemeId::Dither);
+        let sto = r.series(SchemeId::Stochastic);
         // Small k: unbiased schemes beat traditional; dither <= stochastic.
         assert!(dit[0] < det[0], "k=1: dither {} < det {}", dit[0], det[0]);
         assert!(sto[0] < det[0], "k=1: stochastic beats det");
@@ -188,7 +188,7 @@ mod tests {
         let b = Matrix::random_uniform(cfg.dim, cfg.dim, 0.0, cfg.hi, &mut rng);
         let c = a.matmul(&b);
         let r = compute(&Fig8Config { pairs: 1, ..cfg });
-        let det_k1 = r.series(RoundingMode::Deterministic)[0];
+        let det_k1 = r.series(SchemeId::Deterministic)[0];
         assert!((det_k1 - c.frobenius_norm()).abs() / c.frobenius_norm() < 1e-9);
     }
 

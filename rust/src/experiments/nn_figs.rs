@@ -15,7 +15,7 @@
 use crate::experiments::write_result;
 use crate::linalg::Variant;
 use crate::nn::{quantized_accuracy, ActivationRanges, QuantInferenceConfig};
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 use crate::train::{trained_model, ModelSpec};
 use crate::util::json::Json;
 use crate::util::stats::Welford;
@@ -61,7 +61,7 @@ pub struct NnFigResult {
     pub ks: Vec<u32>,
     /// Full-precision baseline accuracy.
     pub float_acc: f64,
-    /// `mean[mode_index][k_index]` in `RoundingMode::ALL` order.
+    /// `mean[mode_index][k_index]` in `SchemeId::PAPER` order.
     pub mean: Vec<Vec<f64>>,
     /// Sample variance across trials.
     pub var: Vec<Vec<f64>>,
@@ -69,14 +69,14 @@ pub struct NnFigResult {
 
 impl NnFigResult {
     /// Mean-accuracy series for one mode.
-    pub fn mean_series(&self, mode: RoundingMode) -> &[f64] {
-        let idx = RoundingMode::ALL.iter().position(|&m| m == mode).unwrap();
+    pub fn mean_series(&self, mode: SchemeId) -> &[f64] {
+        let idx = SchemeId::PAPER.iter().position(|&m| m == mode).unwrap();
         &self.mean[idx]
     }
 
     /// Variance series for one mode.
-    pub fn var_series(&self, mode: RoundingMode) -> &[f64] {
-        let idx = RoundingMode::ALL.iter().position(|&m| m == mode).unwrap();
+    pub fn var_series(&self, mode: SchemeId) -> &[f64] {
+        let idx = SchemeId::PAPER.iter().position(|&m| m == mode).unwrap();
         &self.var[idx]
     }
 }
@@ -88,8 +88,8 @@ pub fn compute(cfg: &NnFigConfig) -> NnFigResult {
     let ranges = ActivationRanges::calibrate(&mlp, &test.images);
     // Work items: (mode index, k index, trial).
     let mut items = Vec::new();
-    for (mi, &mode) in RoundingMode::ALL.iter().enumerate() {
-        let trials = if mode == RoundingMode::Deterministic {
+    for (mi, &mode) in SchemeId::PAPER.iter().enumerate() {
+        let trials = if mode == SchemeId::Deterministic {
             1
         } else {
             cfg.trials
@@ -110,7 +110,7 @@ pub fn compute(cfg: &NnFigConfig) -> NnFigResult {
         quantized_accuracy(&mlp, &test.images, &test.labels, &ranges, &qcfg)
     });
     let mut agg: Vec<Vec<Welford>> =
-        vec![vec![Welford::new(); cfg.ks.len()]; RoundingMode::ALL.len()];
+        vec![vec![Welford::new(); cfg.ks.len()]; SchemeId::PAPER.len()];
     for ((mi, ki, _, _, _), acc) in items.iter().zip(accs) {
         agg[*mi][*ki].push(acc);
     }
@@ -150,13 +150,13 @@ pub fn run(fig: u32, cfg: &NnFigConfig, out_dir: &str) -> NnFigResult {
     let result = compute(cfg);
     println!("  float baseline accuracy: {:.4}\n", result.float_acc);
     print!("  {:>4}", "k");
-    for mode in RoundingMode::ALL {
-        print!("  {:>16}", mode.name());
+    for mode in SchemeId::PAPER {
+        print!("  {:>16}", mode.wire_name());
     }
     println!();
     for (ki, &k) in result.ks.iter().enumerate() {
         print!("  {k:>4}");
-        for (mi, _) in RoundingMode::ALL.iter().enumerate() {
+        for (mi, _) in SchemeId::PAPER.iter().enumerate() {
             let v = if fig % 2 == 1 {
                 result.mean[mi][ki]
             } else {
@@ -176,23 +176,23 @@ pub fn run(fig: u32, cfg: &NnFigConfig, out_dir: &str) -> NnFigResult {
         ("trials", Json::Num(cfg.trials as f64)),
         (
             "deterministic_mean",
-            Json::nums(result.mean_series(RoundingMode::Deterministic)),
+            Json::nums(result.mean_series(SchemeId::Deterministic)),
         ),
         (
             "dither_mean",
-            Json::nums(result.mean_series(RoundingMode::Dither)),
+            Json::nums(result.mean_series(SchemeId::Dither)),
         ),
         (
             "stochastic_mean",
-            Json::nums(result.mean_series(RoundingMode::Stochastic)),
+            Json::nums(result.mean_series(SchemeId::Stochastic)),
         ),
         (
             "dither_var",
-            Json::nums(result.var_series(RoundingMode::Dither)),
+            Json::nums(result.var_series(SchemeId::Dither)),
         ),
         (
             "stochastic_var",
-            Json::nums(result.var_series(RoundingMode::Stochastic)),
+            Json::nums(result.var_series(SchemeId::Stochastic)),
         ),
     ]);
     write_result(out_dir, &format!("fig{fig}"), json);
@@ -224,7 +224,7 @@ mod tests {
         let r = compute(&cfg);
         // k=8: everyone near the float baseline.
         let k8 = 1;
-        for mode in RoundingMode::ALL {
+        for mode in SchemeId::PAPER {
             assert!(
                 r.mean_series(mode)[k8] > r.float_acc - 0.08,
                 "{mode:?} k=8 {}",
@@ -235,9 +235,9 @@ mod tests {
         // rounding maps every pixel to +1 (total information loss, §VII);
         // the unbiased schemes keep the class signal.
         let k1 = 0;
-        let det = r.mean_series(RoundingMode::Deterministic)[k1];
-        let dit = r.mean_series(RoundingMode::Dither)[k1];
-        let sto = r.mean_series(RoundingMode::Stochastic)[k1];
+        let det = r.mean_series(SchemeId::Deterministic)[k1];
+        let dit = r.mean_series(SchemeId::Dither)[k1];
+        let sto = r.mean_series(SchemeId::Stochastic)[k1];
         assert!(dit > det + 0.1, "dither {dit} vs det {det} at k=1");
         assert!(sto > det + 0.1, "stochastic {sto} vs det {det} at k=1");
     }

@@ -3,26 +3,29 @@
 //!
 //! A `"scheme":"auto"` request carries a `max_mse` budget instead of a
 //! hand-picked configuration. The controller walks the candidate grid in
-//! **cost order** (lowest bit width first; at equal width the cheaper
-//! rounding machinery first — deterministic needs no randomness, dither
-//! one table lookup per element, stochastic a hash per element) and picks
-//! the first candidate whose *predicted* MSE meets the budget.
+//! **cost order** (lowest bit width first; at equal width the paper's
+//! trio in cheap-first order — deterministic needs no randomness, dither
+//! one table lookup per element, stochastic a hash per element — then the
+//! literature zoo) and picks the first candidate whose *predicted* MSE
+//! meets the budget. Every registered scheme is a candidate, so the whole
+//! zoo competes in auto resolution.
 //!
 //! The prediction for a candidate is the shard's measured shadow-sampling
-//! estimate once it has accrued [`MIN_SAMPLES`] logit errors, and the
-//! paper-shape prior before that: deterministic and dither rounding have
-//! `Θ(1/N²)` MSE and stochastic rounding `Ω(1/N)` in the quantizer
-//! resolution `N = 2^k − 1` (§II-C/§VII — the prior only has to rank
-//! candidates sanely until real measurements take over; El Arar 2022 and
-//! Xia 2020 both show the true constants are workload-dependent, which is
-//! exactly what the online estimator captures).
+//! estimate once it has accrued [`MIN_SAMPLES`] logit errors, and each
+//! scheme's own [`crate::rounding::Rounding::mse_prior`] before that —
+//! `Θ(1/N²)` shapes for the deterministic/dithered schemes, `Ω(1/N)` for
+//! the stochastic family, in the quantizer resolution `N = 2^k − 1`
+//! (§II-C/§VII — the prior only has to rank candidates sanely until real
+//! measurements take over; El Arar 2022 and Xia 2020 both show the true
+//! constants are workload-dependent, which is exactly what the online
+//! estimator captures).
 //!
 //! The choice is a pure function of `(budget, estimator state)` — no
 //! randomness, no clocks — so replaying traffic against the same
 //! estimator state reproduces every auto decision.
 
 use crate::fidelity::estimator::{FidelityShard, MAX_K};
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 
 /// Shadow samples a `(model, scheme, k)` cell needs before its measured
 /// MSE replaces the prior (≈ a few dozen shadowed requests at 10 logits
@@ -34,18 +37,24 @@ pub const MIN_SAMPLES: u64 = 256;
 /// layer dominates every forward pass).
 const PRIOR_CONTRACTION: f64 = 784.0;
 
-/// Candidate schemes in ascending serving-cost order at a fixed `k`.
-const COST_ORDER: [RoundingMode; 3] = [
-    RoundingMode::Deterministic,
-    RoundingMode::Dither,
-    RoundingMode::Stochastic,
+/// Candidate schemes in ascending serving-cost order at a fixed `k`: the
+/// paper's trio first (cheapest machinery wins budget ties exactly as
+/// before the zoo existed), then the literature schemes in slot order.
+const COST_ORDER: [SchemeId; SchemeId::COUNT] = [
+    SchemeId::Deterministic,
+    SchemeId::Dither,
+    SchemeId::Stochastic,
+    SchemeId::Sr2,
+    SchemeId::SrVb,
+    SchemeId::Tpdf,
+    SchemeId::Gauss,
 ];
 
 /// The controller's verdict for one auto request.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AutoChoice {
     /// Chosen rounding scheme.
-    pub mode: RoundingMode,
+    pub scheme: SchemeId,
     /// Chosen bit width.
     pub k: u32,
     /// The MSE prediction the choice was based on.
@@ -55,17 +64,17 @@ pub struct AutoChoice {
     pub measured: bool,
 }
 
-/// Paper-shape prior MSE of a `(scheme, k)` candidate: per-logit error of
-/// a `q`-long contraction whose factors are rounded on a step of
-/// `2/(2^k−1)` — `∝ step²` for the deterministic/dither schemes, `∝ step`
-/// for stochastic rounding.
-pub fn prior_mse(mode: RoundingMode, k: u32) -> f64 {
+/// Prior MSE of a `(scheme, k)` candidate: per-logit error of a `q`-long
+/// contraction whose factors are rounded on a step of `2/(2^k−1)`. The
+/// shape comes from the scheme's own registry entry
+/// ([`crate::rounding::Rounding::mse_prior`]), so newly registered schemes
+/// are ranked without touching the controller.
+pub fn prior_mse(mode: SchemeId, k: u32) -> f64 {
     let levels = ((1u64 << k.min(MAX_K)) - 1) as f64;
     let step = 2.0 / levels;
-    match mode {
-        RoundingMode::Stochastic => PRIOR_CONTRACTION * step / 6.0,
-        _ => PRIOR_CONTRACTION * step * step / 6.0,
-    }
+    crate::rounding::SchemeRegistry::global()
+        .get(mode)
+        .mse_prior(step, PRIOR_CONTRACTION)
 }
 
 /// Predicted MSE for one candidate: measured estimate once warm, prior
@@ -73,7 +82,7 @@ pub fn prior_mse(mode: RoundingMode, k: u32) -> f64 {
 pub fn predicted_mse(
     shard: &FidelityShard,
     model: usize,
-    mode: RoundingMode,
+    mode: SchemeId,
     k: u32,
 ) -> (f64, bool) {
     let est = shard.estimate(model, mode, k);
@@ -96,7 +105,7 @@ pub fn choose(shard: &FidelityShard, model: usize, max_mse: f64) -> AutoChoice {
         for &mode in &COST_ORDER {
             let (mse, measured) = predicted_mse(shard, model, mode, k);
             let candidate = AutoChoice {
-                mode,
+                scheme: mode,
                 k,
                 predicted_mse: mse,
                 measured,
@@ -122,26 +131,28 @@ mod tests {
 
     #[test]
     fn prior_has_the_paper_shape() {
-        // Deterministic/dither priors fall as 1/N², stochastic as 1/N.
+        // Every registered scheme's prior falls with finer quantizers:
+        // 1/N² shapes for the deterministic/dithered schemes, 1/N for the
+        // stochastic family.
         for k in 1..MAX_K {
-            for mode in RoundingMode::ALL {
+            for mode in SchemeId::ALL {
                 assert!(prior_mse(mode, k + 1) < prior_mse(mode, k), "{mode:?} k={k}");
             }
         }
-        let det_ratio = prior_mse(RoundingMode::Deterministic, 4)
-            / prior_mse(RoundingMode::Deterministic, 5);
+        let det_ratio = prior_mse(SchemeId::Deterministic, 4)
+            / prior_mse(SchemeId::Deterministic, 5);
         let sto_ratio =
-            prior_mse(RoundingMode::Stochastic, 4) / prior_mse(RoundingMode::Stochastic, 5);
+            prior_mse(SchemeId::Stochastic, 4) / prior_mse(SchemeId::Stochastic, 5);
         assert!(det_ratio > sto_ratio * 1.5, "det {det_ratio} vs sto {sto_ratio}");
         // At matched k the unbiased-but-slow stochastic prior is worst.
-        assert!(prior_mse(RoundingMode::Stochastic, 6) > prior_mse(RoundingMode::Dither, 6));
+        assert!(prior_mse(SchemeId::Stochastic, 6) > prior_mse(SchemeId::Dither, 6));
     }
 
     #[test]
     fn loose_budget_picks_the_cheapest_candidate() {
         let shard = FidelityShard::new();
         let c = choose(&shard, 0, 1e12);
-        assert_eq!((c.mode, c.k), (RoundingMode::Deterministic, 1));
+        assert_eq!((c.scheme, c.k), (SchemeId::Deterministic, 1));
         assert!(!c.measured);
     }
 
@@ -165,18 +176,18 @@ mod tests {
         // shadow samples show that candidate blowing its budget while a
         // costlier one meets it, the choice must move.
         let shard = FidelityShard::new();
-        let budget = prior_mse(RoundingMode::Deterministic, 1) * 1.01;
+        let budget = prior_mse(SchemeId::Deterministic, 1) * 1.01;
         let cold = choose(&shard, 0, budget);
-        assert_eq!((cold.mode, cold.k), (RoundingMode::Deterministic, 1));
+        assert_eq!((cold.scheme, cold.k), (SchemeId::Deterministic, 1));
         assert!(!cold.measured, "cold choice must come from the prior");
         // Measure deterministic k=1 as terrible and dither k=1 as tiny.
         for i in 0..MIN_SAMPLES {
-            shard.record(0, RoundingMode::Deterministic, 1, 1000.0 + (i % 3) as f64);
+            shard.record(0, SchemeId::Deterministic, 1, 1000.0 + (i % 3) as f64);
             let small = if i % 2 == 0 { 0.01 } else { -0.01 };
-            shard.record(0, RoundingMode::Dither, 1, small);
+            shard.record(0, SchemeId::Dither, 1, small);
         }
         let warm = choose(&shard, 0, budget);
-        assert_eq!((warm.mode, warm.k), (RoundingMode::Dither, 1), "{warm:?}");
+        assert_eq!((warm.scheme, warm.k), (SchemeId::Dither, 1), "{warm:?}");
         assert!(warm.measured, "warm choice must come from measurements");
         // Deterministic given the estimator state: same state, same choice.
         assert_eq!(warm, choose(&shard, 0, budget));
@@ -186,16 +197,19 @@ mod tests {
     fn one_sample_short_of_warm_still_uses_the_prior() {
         let shard = FidelityShard::new();
         for _ in 0..MIN_SAMPLES - 1 {
-            shard.record(0, RoundingMode::Deterministic, 1, 1e6);
+            shard.record(0, SchemeId::Deterministic, 1, 1e6);
         }
-        let budget = prior_mse(RoundingMode::Deterministic, 1) * 1.01;
+        let budget = prior_mse(SchemeId::Deterministic, 1) * 1.01;
         let c = choose(&shard, 0, budget);
-        assert_eq!((c.mode, c.k, c.measured), (RoundingMode::Deterministic, 1, false));
-        shard.record(0, RoundingMode::Deterministic, 1, 1e6);
+        assert_eq!(
+            (c.scheme, c.k, c.measured),
+            (SchemeId::Deterministic, 1, false)
+        );
+        shard.record(0, SchemeId::Deterministic, 1, 1e6);
         let c = choose(&shard, 0, budget);
         assert_ne!(
-            (c.mode, c.k),
-            (RoundingMode::Deterministic, 1),
+            (c.scheme, c.k),
+            (SchemeId::Deterministic, 1),
             "crossing MIN_SAMPLES must flip the cell to measured"
         );
     }

@@ -3,8 +3,10 @@
 //!
 //! Each serving shard owns one [`FidelityShard`]: a flat, fixed-size table
 //! of Welford accumulators keyed by `(model, scheme, k)`. The label space
-//! is bounded up front ([`MODEL_SLOTS`] × 3 schemes × [`MAX_K`] bit
-//! widths), so recording is a handful of relaxed atomic loads/stores with
+//! is bounded up front ([`MODEL_SLOTS`] × [`SchemeId::COUNT`] registered
+//! schemes × [`MAX_K`] bit widths — the whole zoo gets measured cells, not
+//! just the paper's trio), so recording is a handful of relaxed atomic
+//! loads/stores with
 //! no allocation and no lock — the same hot-path discipline as the
 //! latency windows in `coordinator::metrics`.
 //!
@@ -18,7 +20,7 @@
 //! threads), updates are lost but never corrupted: every field is a whole
 //! atomic word.
 
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Number of model-family slots per shard (the zoo serves 2; the rest is
@@ -28,17 +30,8 @@ pub const MODEL_SLOTS: usize = 4;
 /// Highest tracked quantizer bit width (matches the servable `k` range).
 pub const MAX_K: u32 = 16;
 
-/// Number of rounding schemes.
-const SCHEMES: usize = 3;
-
-/// Stable scheme slot (deterministic, stochastic, dither).
-fn scheme_slot(mode: RoundingMode) -> usize {
-    match mode {
-        RoundingMode::Deterministic => 0,
-        RoundingMode::Stochastic => 1,
-        RoundingMode::Dither => 2,
-    }
-}
+/// Number of registered rounding schemes (every zoo scheme gets cells).
+const SCHEMES: usize = SchemeId::COUNT;
 
 /// One Welford accumulator: count, running mean, and the sum of squared
 /// deviations (`m2`), each stored as a whole atomic word (f64 bits).
@@ -138,21 +131,19 @@ impl FidelityShard {
 
     /// Flat cell index; `None` when the label is outside the bounded
     /// space (unknown model slot or unservable bit width).
-    fn index(model: usize, mode: RoundingMode, k: u32) -> Option<usize> {
+    fn index(model: usize, mode: SchemeId, k: u32) -> Option<usize> {
         if model >= MODEL_SLOTS || !(1..=MAX_K).contains(&k) {
             return None;
         }
         Some(
-            model * SCHEMES * MAX_K as usize
-                + scheme_slot(mode) * MAX_K as usize
-                + (k - 1) as usize,
+            model * SCHEMES * MAX_K as usize + mode.slot() * MAX_K as usize + (k - 1) as usize,
         )
     }
 
     /// Record one shadow-sampled logit error (quantized − exact) for the
     /// configuration. Out-of-space labels are dropped silently (the label
     /// space is bounded by construction; this is a belt-and-braces guard).
-    pub fn record(&self, model: usize, mode: RoundingMode, k: u32, err: f64) {
+    pub fn record(&self, model: usize, mode: SchemeId, k: u32, err: f64) {
         let Some(i) = FidelityShard::index(model, mode, k) else {
             return;
         };
@@ -173,7 +164,7 @@ impl FidelityShard {
 
     /// Snapshot one cell (approximate under concurrent writes; see the
     /// module docs).
-    pub fn estimate(&self, model: usize, mode: RoundingMode, k: u32) -> FidelityEstimate {
+    pub fn estimate(&self, model: usize, mode: SchemeId, k: u32) -> FidelityEstimate {
         let Some(i) = FidelityShard::index(model, mode, k) else {
             return FidelityEstimate::default();
         };
@@ -201,9 +192,9 @@ mod tests {
         let shard = FidelityShard::new();
         let errs = [0.5, -0.25, 1.0, 0.0, -0.5, 0.75];
         for &e in &errs {
-            shard.record(0, RoundingMode::Dither, 4, e);
+            shard.record(0, SchemeId::Dither, 4, e);
         }
-        let est = shard.estimate(0, RoundingMode::Dither, 4);
+        let est = shard.estimate(0, SchemeId::Dither, 4);
         assert_eq!(est.samples, errs.len() as u64);
         let mean: f64 = errs.iter().sum::<f64>() / errs.len() as f64;
         assert!((est.bias - mean).abs() < 1e-12);
@@ -215,26 +206,26 @@ mod tests {
     #[test]
     fn cells_are_keyed_independently() {
         let shard = FidelityShard::new();
-        shard.record(0, RoundingMode::Dither, 4, 1.0);
-        shard.record(0, RoundingMode::Dither, 5, -1.0);
-        shard.record(0, RoundingMode::Stochastic, 4, 3.0);
-        shard.record(1, RoundingMode::Dither, 4, 5.0);
-        assert_eq!(shard.estimate(0, RoundingMode::Dither, 4).bias, 1.0);
-        assert_eq!(shard.estimate(0, RoundingMode::Dither, 5).bias, -1.0);
-        assert_eq!(shard.estimate(0, RoundingMode::Stochastic, 4).bias, 3.0);
-        assert_eq!(shard.estimate(1, RoundingMode::Dither, 4).bias, 5.0);
+        shard.record(0, SchemeId::Dither, 4, 1.0);
+        shard.record(0, SchemeId::Dither, 5, -1.0);
+        shard.record(0, SchemeId::Stochastic, 4, 3.0);
+        shard.record(1, SchemeId::Dither, 4, 5.0);
+        assert_eq!(shard.estimate(0, SchemeId::Dither, 4).bias, 1.0);
+        assert_eq!(shard.estimate(0, SchemeId::Dither, 5).bias, -1.0);
+        assert_eq!(shard.estimate(0, SchemeId::Stochastic, 4).bias, 3.0);
+        assert_eq!(shard.estimate(1, SchemeId::Dither, 4).bias, 5.0);
         assert_eq!(shard.total_samples(), 4);
     }
 
     #[test]
     fn out_of_space_labels_are_dropped() {
         let shard = FidelityShard::new();
-        shard.record(MODEL_SLOTS, RoundingMode::Dither, 4, 1.0);
-        shard.record(0, RoundingMode::Dither, 0, 1.0);
-        shard.record(0, RoundingMode::Dither, MAX_K + 1, 1.0);
+        shard.record(MODEL_SLOTS, SchemeId::Dither, 4, 1.0);
+        shard.record(0, SchemeId::Dither, 0, 1.0);
+        shard.record(0, SchemeId::Dither, MAX_K + 1, 1.0);
         assert_eq!(shard.total_samples(), 0);
         assert_eq!(
-            shard.estimate(9, RoundingMode::Dither, 99),
+            shard.estimate(9, SchemeId::Dither, 99),
             FidelityEstimate::default()
         );
     }
@@ -246,13 +237,13 @@ mod tests {
         let b = FidelityShard::new();
         let errs: Vec<f64> = (0..100).map(|i| (i as f64 * 0.77).sin()).collect();
         for (i, &e) in errs.iter().enumerate() {
-            all.record(0, RoundingMode::Stochastic, 2, e);
+            all.record(0, SchemeId::Stochastic, 2, e);
             let half = if i < 37 { &a } else { &b };
-            half.record(0, RoundingMode::Stochastic, 2, e);
+            half.record(0, SchemeId::Stochastic, 2, e);
         }
-        let mut merged = a.estimate(0, RoundingMode::Stochastic, 2);
-        merged.merge(&b.estimate(0, RoundingMode::Stochastic, 2));
-        let direct = all.estimate(0, RoundingMode::Stochastic, 2);
+        let mut merged = a.estimate(0, SchemeId::Stochastic, 2);
+        merged.merge(&b.estimate(0, SchemeId::Stochastic, 2));
+        let direct = all.estimate(0, SchemeId::Stochastic, 2);
         assert_eq!(merged.samples, direct.samples);
         assert!((merged.bias - direct.bias).abs() < 1e-12);
         assert!((merged.mse() - direct.mse()).abs() < 1e-12);

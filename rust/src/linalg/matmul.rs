@@ -4,7 +4,7 @@
 //!
 //! `C = A·B` is computed as if only a k-bit fixed-point multiplier existed:
 //! each operand element is affinely rescaled into `[0, 2^k−1]`, rounded to
-//! an integer level by the configured [`RoundingMode`], dequantized, and the
+//! an integer level by the configured [`SchemeId`], dequantized, and the
 //! partial products accumulated exactly (the accumulator is not the paper's
 //! concern; the rounding of the multiplier inputs is).
 //!
@@ -29,7 +29,7 @@
 
 use crate::bitstream::dither::DitherParams;
 use crate::linalg::matrix::Matrix;
-use crate::rounding::{Quantizer, RoundingMode};
+use crate::rounding::{gauss_bit, sr2_bit, srvb_bit, tpdf_bit, Quantizer, SchemeId};
 use crate::util::rng::{counter_hash, u64_to_unit_f64, Xoshiro256pp};
 use crate::util::threadpool::parallel_chunks;
 use std::borrow::Cow;
@@ -84,7 +84,7 @@ pub struct QuantMatmulConfig {
     /// Quantizer bit width `k`.
     pub bits: u32,
     /// Rounding scheme.
-    pub mode: RoundingMode,
+    pub mode: SchemeId,
     /// Rounding placement.
     pub variant: Variant,
     /// Seed for all stochastic/dither randomness (vary per trial).
@@ -101,7 +101,7 @@ pub struct QuantMatmulConfig {
 
 impl QuantMatmulConfig {
     /// Config for unit-range operands (the Fig 8 setting).
-    pub fn unit(bits: u32, mode: RoundingMode, variant: Variant, seed: u64) -> Self {
+    pub fn unit(bits: u32, mode: SchemeId, variant: Variant, seed: u64) -> Self {
         Self {
             bits,
             mode,
@@ -138,11 +138,11 @@ struct PreMat {
 }
 
 impl PreMat {
-    fn build(m: &Matrix, q: &Quantizer, mode: RoundingMode, n: usize) -> PreMat {
+    fn build(m: &Matrix, q: &Quantizer, mode: SchemeId, n: usize) -> PreMat {
         let max = q.max_level() as f64;
         let step = q.step();
         let count = m.rows * m.cols;
-        let dither = mode == RoundingMode::Dither;
+        let dither = mode == SchemeId::Dither;
         let mut base = Vec::with_capacity(count);
         let mut frac = Vec::with_capacity(count);
         let mut n_det = Vec::with_capacity(if dither { count } else { 0 });
@@ -211,22 +211,28 @@ fn phases(count: usize, n: usize, seed: u64) -> Vec<u32> {
 /// branches here mispredicted ~50% and dominated the per-partial loop).
 #[inline]
 fn round_bit_pre(
-    mode: RoundingMode,
+    mode: SchemeId,
     pre: &PreMat,
     e: usize,
     pos: usize,
     u: impl FnOnce() -> u64,
 ) -> bool {
     match mode {
-        RoundingMode::Deterministic => pre.frac[e] >= 0.5,
-        RoundingMode::Stochastic => u64_to_unit_f64(u()) < pre.frac[e],
-        RoundingMode::Dither => {
+        SchemeId::Deterministic => pre.frac[e] >= 0.5,
+        SchemeId::Stochastic => u64_to_unit_f64(u()) < pre.frac[e],
+        SchemeId::Dither => {
             let det = (pos as u32) < pre.n_det[e];
             let u_bit = u() < pre.u_thresh[e];
             let or = pre.is_or[e];
             // det ? (or | u_bit) : (or & u_bit)  — branch-free select.
             (det & (or | u_bit)) | (!det & or & u_bit)
         }
+        // Literature-zoo schemes: stateless (frac, u) bits, position-free —
+        // the same per-use uniform discipline as stochastic rounding.
+        SchemeId::Sr2 => sr2_bit(pre.frac[e], u()),
+        SchemeId::SrVb => srvb_bit(pre.frac[e], u()),
+        SchemeId::Tpdf => tpdf_bit(pre.frac[e], u()),
+        SchemeId::Gauss => gauss_bit(pre.frac[e], u()),
     }
 }
 
@@ -283,7 +289,7 @@ pub enum SweepAxis {
 /// can never build tables for `n = 0`.
 pub struct QuantPlan {
     quant: Quantizer,
-    mode: RoundingMode,
+    mode: SchemeId,
     axis: SweepAxis,
     n: usize,
     rows: usize,
@@ -301,7 +307,7 @@ impl QuantPlan {
     pub fn plan_operand(
         m: &Matrix,
         quant: &Quantizer,
-        mode: RoundingMode,
+        mode: SchemeId,
         n: usize,
         axis: SweepAxis,
     ) -> QuantPlan {
@@ -331,7 +337,7 @@ impl QuantPlan {
     pub fn plan_frozen(
         m: &Matrix,
         quant: &Quantizer,
-        mode: RoundingMode,
+        mode: SchemeId,
         n: usize,
         axis: SweepAxis,
         seed: u64,
@@ -356,19 +362,19 @@ impl QuantPlan {
         let mut out = Matrix::zeros(rows, cols);
         let data = out.data_mut();
         match self.mode {
-            RoundingMode::Deterministic => {
+            SchemeId::Deterministic => {
                 for e in 0..count {
                     let bit = pre.frac[e] >= 0.5;
                     data[e] = pre.base[e] + f64::from(bit) * pre.step;
                 }
             }
-            RoundingMode::Stochastic => {
+            SchemeId::Stochastic => {
                 for e in 0..count {
                     let bit = u64_to_unit_f64(counter_hash(seed, e as u64)) < pre.frac[e];
                     data[e] = pre.base[e] + f64::from(bit) * pre.step;
                 }
             }
-            RoundingMode::Dither => {
+            SchemeId::Dither => {
                 // Dither positions SWEEP the period along the contraction
                 // axis (the paper's global `i_s` counter semantics): every
                 // window of N contracted elements covers the full dither
@@ -405,6 +411,14 @@ impl QuantPlan {
                     }
                 }
             }
+            // Zoo schemes: one counter-hashed uniform per element, same
+            // discipline as the stochastic arm (position is irrelevant).
+            zoo => {
+                for e in 0..count {
+                    let bit = round_bit_pre(zoo, pre, e, 0, || counter_hash(seed, e as u64));
+                    data[e] = pre.base[e] + f64::from(bit) * pre.step;
+                }
+            }
         }
         Cow::Owned(out)
     }
@@ -424,7 +438,7 @@ impl QuantPlan {
     }
 
     /// Rounding scheme the plan was built for.
-    pub fn mode(&self) -> RoundingMode {
+    pub fn mode(&self) -> SchemeId {
         self.mode
     }
 
@@ -470,7 +484,7 @@ impl Operand<'_> {
 pub fn quantize_matrix_once(
     m: &Matrix,
     quant: &Quantizer,
-    mode: RoundingMode,
+    mode: SchemeId,
     n: usize,
     seed: u64,
     axis: SweepAxis,
@@ -741,7 +755,7 @@ mod tests {
         // At k = 16 every scheme/variant should be ~exact.
         let (a, b) = random_pair(8, 12, 6, 0.0, 1.0, 1);
         let c = a.matmul(&b);
-        for mode in RoundingMode::ALL {
+        for mode in SchemeId::ALL {
             for variant in Variant::ALL {
                 let cfg = QuantMatmulConfig::unit(16, mode, variant, 42);
                 let c_hat = quant_matmul(&a, &b, &cfg);
@@ -756,7 +770,7 @@ mod tests {
         // The §VII narrow-range scenario: entries in [0, 0.5), k = 2.
         let (a, b) = random_pair(24, 24, 24, 0.0, 0.5, 3);
         let c = a.matmul(&b);
-        let err = |mode: RoundingMode| {
+        let err = |mode: SchemeId| {
             let mut tot = 0.0;
             for t in 0..5u64 {
                 let cfg = QuantMatmulConfig::unit(2, mode, Variant::PerPartial, 100 + t);
@@ -764,9 +778,9 @@ mod tests {
             }
             tot / 5.0
         };
-        let det = err(RoundingMode::Deterministic);
-        let dit = err(RoundingMode::Dither);
-        let sto = err(RoundingMode::Stochastic);
+        let det = err(SchemeId::Deterministic);
+        let dit = err(SchemeId::Dither);
+        let sto = err(SchemeId::Stochastic);
         assert!(dit < det, "dither {dit} < deterministic {det}");
         assert!(sto < det, "stochastic {sto} < deterministic {det}");
         assert!(dit <= sto * 1.1, "dither {dit} ≲ stochastic {sto}");
@@ -778,7 +792,7 @@ mod tests {
         // zeroes both matrices, e_f = ‖AB‖_F.
         let (a, b) = random_pair(10, 10, 10, 0.0, 0.4999, 5);
         let c = a.matmul(&b);
-        let cfg = QuantMatmulConfig::unit(1, RoundingMode::Deterministic, Variant::Separate, 7);
+        let cfg = QuantMatmulConfig::unit(1, SchemeId::Deterministic, Variant::Separate, 7);
         let c_hat = quant_matmul(&a, &b, &cfg);
         assert_eq!(c_hat.frobenius_norm(), 0.0);
         assert!((frobenius_error(&c, &c_hat) - c.frobenius_norm()).abs() < 1e-12);
@@ -792,13 +806,13 @@ mod tests {
         let trials = 60;
         let mut mean = Matrix::zeros(6, 6);
         for t in 0..trials {
-            let cfg = QuantMatmulConfig::unit(2, RoundingMode::Dither, Variant::PerPartial, t);
+            let cfg = QuantMatmulConfig::unit(2, SchemeId::Dither, Variant::PerPartial, t);
             let c_hat = quant_matmul(&a, &b, &cfg);
             for (m, v) in mean.data_mut().iter_mut().zip(c_hat.data()) {
                 *m += v / trials as f64;
             }
         }
-        let single_cfg = QuantMatmulConfig::unit(2, RoundingMode::Dither, Variant::PerPartial, 0);
+        let single_cfg = QuantMatmulConfig::unit(2, SchemeId::Dither, Variant::PerPartial, 0);
         let single = frobenius_error(&c, &quant_matmul(&a, &b, &single_cfg));
         let averaged = frobenius_error(&c, &mean);
         assert!(
@@ -819,7 +833,7 @@ mod tests {
         let err = |variant: Variant| {
             let mut tot = 0.0;
             for t in 0..8u64 {
-                let cfg = QuantMatmulConfig::unit(3, RoundingMode::Dither, variant, 200 + t);
+                let cfg = QuantMatmulConfig::unit(3, SchemeId::Dither, variant, 200 + t);
                 tot += frobenius_error(&c, &quant_matmul(&a, &b, &cfg));
             }
             tot / 8.0
@@ -840,7 +854,7 @@ mod tests {
         let c = a.matmul(&b);
         let cfg = QuantMatmulConfig {
             bits: 8,
-            mode: RoundingMode::Dither,
+            mode: SchemeId::Dither,
             variant: Variant::PerPartial,
             seed: 17,
             range_a: (0.0, 1.0),
@@ -858,7 +872,7 @@ mod tests {
         let mut rng = Xoshiro256pp::new(15);
         let m = Matrix::random_uniform(7, 5, 0.0, 1.0, &mut rng);
         let q = Quantizer::unit(3);
-        let out = quantize_matrix_once(&m, &q, RoundingMode::Deterministic, 8, 0, SweepAxis::Cols);
+        let out = quantize_matrix_once(&m, &q, SchemeId::Deterministic, 8, 0, SweepAxis::Cols);
         for i in 0..7 {
             for j in 0..5 {
                 let expect = q.dequant(q.quantize_round(m.get(i, j)));
@@ -870,7 +884,7 @@ mod tests {
     #[test]
     fn reproducible_per_seed() {
         let (a, b) = random_pair(5, 5, 5, 0.0, 1.0, 21);
-        let cfg = QuantMatmulConfig::unit(2, RoundingMode::Dither, Variant::PerPartial, 77);
+        let cfg = QuantMatmulConfig::unit(2, SchemeId::Dither, Variant::PerPartial, 77);
         assert_eq!(quant_matmul(&a, &b, &cfg), quant_matmul(&a, &b, &cfg));
     }
 
@@ -882,15 +896,15 @@ mod tests {
         let mut rng = Xoshiro256pp::new(23);
         let m = Matrix::random_uniform(4, 3, 0.0, 1.0, &mut rng);
         let q = Quantizer::unit(4);
-        let plan = QuantPlan::plan_operand(&m, &q, RoundingMode::Dither, 0, SweepAxis::Cols);
+        let plan = QuantPlan::plan_operand(&m, &q, SchemeId::Dither, 0, SweepAxis::Cols);
         assert_eq!(plan.n(), 1);
-        let out = quantize_matrix_once(&m, &q, RoundingMode::Dither, 0, 3, SweepAxis::Cols);
+        let out = quantize_matrix_once(&m, &q, SchemeId::Dither, 0, 3, SweepAxis::Cols);
         assert_eq!((out.rows, out.cols), (4, 3));
         // And through the matmul config path with explicit zero periods.
         let (a, b) = random_pair(3, 3, 3, 0.0, 1.0, 24);
         let cfg = QuantMatmulConfig {
             bits: 6,
-            mode: RoundingMode::Dither,
+            mode: SchemeId::Dither,
             variant: Variant::PerPartial,
             seed: 5,
             range_a: (0.0, 1.0),
@@ -908,7 +922,7 @@ mod tests {
         // must reproduce the raw path exactly, for every scheme and
         // placement (the plan only hoists seed-independent state).
         let (a, b) = random_pair(9, 7, 5, 0.0, 1.0, 31);
-        for mode in RoundingMode::ALL {
+        for mode in SchemeId::ALL {
             for variant in Variant::ALL {
                 let cfg = QuantMatmulConfig::unit(3, mode, variant, 404);
                 let direct = quant_matmul(&a, &b, &cfg);
@@ -926,7 +940,7 @@ mod tests {
         let mut rng = Xoshiro256pp::new(37);
         let b = Matrix::random_uniform(6, 4, -1.0, 1.0, &mut rng);
         let quant = Quantizer::new(5, -1.0, 1.0);
-        for mode in RoundingMode::ALL {
+        for mode in SchemeId::ALL {
             let plan = QuantPlan::plan_operand(&b, &quant, mode, 6, SweepAxis::Rows);
             let frozen = QuantPlan::plan_frozen(&b, &quant, mode, 6, SweepAxis::Rows, 88);
             assert!(frozen.is_frozen() && !plan.is_frozen());

@@ -17,7 +17,7 @@ use dither::coordinator::{serve, ServerConfig};
 use dither::data::{Dataset, Task};
 use dither::err;
 use dither::experiments::{run_experiment, ExperimentArgs, EXPERIMENT_IDS};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::train::{trained_model, ModelSpec};
 use dither::util::cli::Args;
 use dither::util::error::Result;
@@ -89,7 +89,8 @@ PROXY FLAGS:
 INFER FLAGS:
     --model NAME      digits_linear | fashion_mlp (digits_linear)
     --k N             bit width (4)
-    --scheme M        deterministic | stochastic | dither | auto (dither)
+    --scheme M        any registered scheme — deterministic | stochastic |
+                      dither | sr2 | srvb | tpdf | gauss — or auto (dither)
     --max-mse E       error budget for --scheme auto (1.0): the cheapest
                       (scheme, k) whose prior MSE meets E is chosen
 ";
@@ -239,15 +240,14 @@ fn cmd_infer(args: &Args) -> Result<()> {
         let choice = choose(&FidelityShard::new(), spec.index(), budget);
         println!(
             "auto: chose scheme={} k={} for max_mse={budget} (predicted mse {:.3e}, {})",
-            choice.mode.name(),
+            choice.scheme,
             choice.k,
             choice.predicted_mse,
             if choice.measured { "measured" } else { "prior" }
         );
-        (choice.k, choice.mode)
+        (choice.k, choice.scheme)
     } else {
-        let mode = RoundingMode::from_str(&mode_str)
-            .ok_or_else(|| err!("invalid --scheme {mode_str:?}"))?;
+        let mode: SchemeId = mode_str.parse().map_err(|e| err!("invalid --scheme: {e}"))?;
         (args.parse_or("k", 4u32), mode)
     };
     let seed = args.parse_or("seed", 7u64);
@@ -272,10 +272,9 @@ fn cmd_infer(args: &Args) -> Result<()> {
         println!("sample {i}: label={label} pred={}", out.pred);
     }
     println!(
-        "\n{}/{} correct | model={model} k={k} scheme={} | {:.1} ms total",
+        "\n{}/{} correct | model={model} k={k} scheme={mode} | {:.1} ms total",
         correct,
         outputs.len(),
-        mode.name(),
         elapsed.as_secs_f64() * 1e3
     );
     Ok(())

@@ -30,7 +30,7 @@
 use crate::linalg::{execute, Matrix, Operand, QuantMatmulConfig, QuantPlan, SweepAxis, Variant};
 use crate::nn::mlp::Mlp;
 use crate::nn::quantized::ActivationRanges;
-use crate::rounding::{Quantizer, RoundingMode};
+use crate::rounding::{Quantizer, SchemeId};
 
 /// Cache key for a prepared model: everything that determines the
 /// weight-side plans of one serving configuration.
@@ -41,7 +41,7 @@ pub struct PlanKey {
     /// Quantizer bit width `k`.
     pub bits: u32,
     /// Rounding scheme.
-    pub mode: RoundingMode,
+    pub scheme: SchemeId,
     /// Rounding placement.
     pub variant: Variant,
 }
@@ -53,7 +53,7 @@ impl std::fmt::Display for PlanKey {
             "{}/k={}/{}/{}",
             self.model,
             self.bits,
-            self.mode.name(),
+            self.scheme,
             self.variant.name()
         )
     }
@@ -63,7 +63,7 @@ impl std::fmt::Display for PlanKey {
 /// `(bits, mode, variant)` serving configuration.
 pub struct PreparedModel {
     bits: u32,
-    mode: RoundingMode,
+    mode: SchemeId,
     variant: Variant,
     /// Weight-side plan per layer, in forward order. `None` means the
     /// layer's weight operand must be planned per call (dither under the
@@ -89,7 +89,7 @@ impl PreparedModel {
     pub fn prepare(
         mlp: &Mlp,
         bits: u32,
-        mode: RoundingMode,
+        mode: SchemeId,
         variant: Variant,
         prep_seed: u64,
     ) -> PreparedModel {
@@ -103,9 +103,11 @@ impl PreparedModel {
                 let n = layer.in_dim();
                 // Freezing is sound when the operand is quantized once per
                 // call (`Separate`) and its draw is request-invariant —
-                // deterministic always, dither by §II-D structure.
-                // Stochastic keeps a fresh Bernoulli draw per request.
-                if variant == Variant::Separate && mode != RoundingMode::Stochastic {
+                // deterministic always, dither by §II-D structure. The
+                // stochastic family (plain SR and every zoo scheme) keeps a
+                // fresh draw per request; the registry's `frozen_weights`
+                // flag is the single source of truth.
+                if variant == Variant::Separate && mode.frozen_weights() {
                     let seed = prep_seed ^ ((li as u64 + 1) << 40) ^ 0xB1B1_B1B1;
                     let plan = QuantPlan::plan_frozen(
                         &layer.weights,
@@ -116,7 +118,7 @@ impl PreparedModel {
                         seed,
                     );
                     Some(plan)
-                } else if mode == RoundingMode::Dither {
+                } else if mode == SchemeId::Dither {
                     // InputOnce/PerPartial sweep the weight operand's
                     // dither period over its per-row use index, whose
                     // count is the batch size — unknowable here. A
@@ -197,7 +199,7 @@ impl PreparedModel {
     }
 
     /// Rounding scheme of the prepared configuration.
-    pub fn mode(&self) -> RoundingMode {
+    pub fn mode(&self) -> SchemeId {
         self.mode
     }
 
@@ -236,7 +238,7 @@ mod tests {
         let (mlp, x, ranges) = toy();
         let cfg = QuantInferenceConfig {
             bits: 4,
-            mode: RoundingMode::Deterministic,
+            mode: SchemeId::Deterministic,
             variant: Variant::Separate,
             seed: 1,
         };
@@ -245,7 +247,7 @@ mod tests {
             let prepared = PreparedModel::prepare(
                 &mlp,
                 4,
-                RoundingMode::Deterministic,
+                SchemeId::Deterministic,
                 Variant::Separate,
                 prep_seed,
             );
@@ -259,15 +261,15 @@ mod tests {
     #[test]
     fn frozen_layers_report_memory_and_config() {
         let (mlp, _x, _ranges) = toy();
-        let p = PreparedModel::prepare(&mlp, 6, RoundingMode::Dither, Variant::Separate, 3);
+        let p = PreparedModel::prepare(&mlp, 6, SchemeId::Dither, Variant::Separate, 3);
         assert_eq!(p.bits(), 6);
-        assert_eq!(p.mode(), RoundingMode::Dither);
+        assert_eq!(p.mode(), SchemeId::Dither);
         assert_eq!(p.variant(), Variant::Separate);
         assert!(p.memory_bytes() > 0);
         // Frozen dither plans drop the planning tables, so the footprint is
         // roughly the materialized weights alone — strictly smaller than a
         // stochastic preparation, which must keep per-call tables.
-        let s = PreparedModel::prepare(&mlp, 6, RoundingMode::Stochastic, Variant::Separate, 3);
+        let s = PreparedModel::prepare(&mlp, 6, SchemeId::Stochastic, Variant::Separate, 3);
         assert!(p.memory_bytes() < s.memory_bytes());
     }
 }

@@ -2,7 +2,7 @@
 //! path.
 //!
 //! Every matmul in the forward pass is replaced by a k-bit fixed-point
-//! [`quant_matmul`] under a chosen [`RoundingMode`] and [`Variant`]. This is
+//! [`quant_matmul`] under a chosen [`SchemeId`] and [`Variant`]. This is
 //! the *direct* path, which plans both operands per call; the serving stack
 //! uses [`crate::nn::PreparedModel`] to plan the weight side once and only
 //! pays for the activation side per request. Per the
@@ -16,7 +16,7 @@
 use crate::linalg::{quant_matmul, Matrix, QuantMatmulConfig, Variant};
 use crate::nn::layer::argmax_rows;
 use crate::nn::mlp::Mlp;
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 
 /// Configuration for quantized inference.
 #[derive(Clone, Debug)]
@@ -24,7 +24,7 @@ pub struct QuantInferenceConfig {
     /// Quantizer bit width `k`.
     pub bits: u32,
     /// Rounding scheme.
-    pub mode: RoundingMode,
+    pub mode: SchemeId,
     /// Rounding placement within each matmul.
     pub variant: Variant,
     /// Trial seed (vary to sample the accuracy distribution).
@@ -39,7 +39,7 @@ impl QuantInferenceConfig {
         crate::nn::prepared::PlanKey {
             model: model.to_string(),
             bits: self.bits,
-            mode: self.mode,
+            scheme: self.mode,
             variant: self.variant,
         }
     }
@@ -161,7 +161,7 @@ mod tests {
         let float_acc = mlp.accuracy(&x, &labels);
         assert_eq!(float_acc, 1.0);
         let ranges = ActivationRanges::calibrate(&mlp, &x);
-        for mode in RoundingMode::ALL {
+        for mode in SchemeId::PAPER {
             let cfg = QuantInferenceConfig {
                 bits: 12,
                 mode,
@@ -193,7 +193,7 @@ mod tests {
             labels.push(class);
         }
         let ranges = ActivationRanges::calibrate(&mlp, &x);
-        let acc_of = |mode: RoundingMode| {
+        let acc_of = |mode: SchemeId| {
             let mut total = 0.0;
             for t in 0..10u64 {
                 let cfg = QuantInferenceConfig {
@@ -206,8 +206,8 @@ mod tests {
             }
             total / 10.0
         };
-        let dither = acc_of(RoundingMode::Dither);
-        let det = acc_of(RoundingMode::Deterministic);
+        let dither = acc_of(SchemeId::Dither);
+        let det = acc_of(SchemeId::Deterministic);
         assert!(
             dither > det + 0.1,
             "dither {dither} should beat deterministic {det} at k=1"
@@ -233,7 +233,7 @@ mod tests {
         let ranges = ActivationRanges::calibrate(&mlp, &x);
         let cfg = QuantInferenceConfig {
             bits: 4,
-            mode: RoundingMode::Dither,
+            mode: SchemeId::Dither,
             variant: Variant::Separate,
             seed: 9,
         };

@@ -1,15 +1,22 @@
-//! Rounding schemes for reduced-precision arithmetic (§II-C, §VII).
+//! Rounding schemes for reduced-precision arithmetic (§II-C, §VII) and the
+//! registry-backed scheme zoo.
 //!
-//! Three ways to map a real level `α` to an integer level:
+//! The paper's three-way comparison:
 //!
-//! * [`RoundingMode::Deterministic`] — `round(α)`; lowest per-application
+//! * [`SchemeId::Deterministic`] — `round(α)`; lowest per-application
 //!   EMSE (§II-C proves it minimal) but *biased*, which degrades iterated /
 //!   correlated computations and wastes quantizer levels on narrow data.
-//! * [`RoundingMode::Stochastic`] — `⌊α⌋ + Bernoulli(frac)`; unbiased,
+//! * [`SchemeId::Stochastic`] — `⌊α⌋ + Bernoulli(frac)`; unbiased,
 //!   `Θ(1/√N)` time-averaged error.
-//! * [`RoundingMode::Dither`] — the paper's scheme: the rounded bit follows
+//! * [`SchemeId::Dither`] — the paper's scheme: the rounded bit follows
 //!   the dither-computing representation of `frac`, indexed by an
 //!   application counter; unbiased with `Θ(1/N)` time-averaged error.
+//!
+//! Beyond those, the [`zoo`] module serves the stochastic-rounding
+//! literature (two-candidate improved SR, variance-bounded SR, TPDF and
+//! Gaussian dither) behind the same API; [`scheme`] holds the open surface
+//! — [`SchemeId`], the [`Rounding`] trait and the [`SchemeRegistry`] that
+//! resolves wire names to scheme instances.
 //!
 //! [`ScalarRounder`] is the stateful uniform front-end; the stateless
 //! `*_bit` functions are reused by the matmul engines and mirrored by the
@@ -18,53 +25,49 @@
 pub mod deterministic;
 pub mod dither;
 pub mod quantizer;
+pub mod scheme;
 pub mod stochastic;
+pub mod zoo;
 
 pub use deterministic::{deterministic_bit, DeterministicRounder};
 pub use dither::{dither_bit, DitherRounder};
 pub use quantizer::Quantizer;
+pub use scheme::{ParseSchemeError, Rounding, SchemeId, SchemeRegistry};
 pub use stochastic::{stochastic_bit, StochasticRounder};
+pub use zoo::{gauss_bit, sr2_bit, srvb_bit, tpdf_bit};
 
-/// Which rounding scheme to apply.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum RoundingMode {
-    /// Traditional round-to-nearest.
-    Deterministic,
-    /// Stochastic rounding.
-    Stochastic,
-    /// Dither rounding (§VII).
-    Dither,
+use crate::util::rng::counter_hash;
+
+/// Stateful scalar rounder for a registry (zoo) scheme: a counter-seeded
+/// PRNG word per application, fed to the scheme's stateless bit function.
+#[derive(Clone, Debug)]
+pub struct ZooRounder {
+    id: SchemeId,
+    seed: u64,
+    i_s: u64,
 }
 
-impl RoundingMode {
-    /// All modes in the paper's comparison order.
-    pub const ALL: [RoundingMode; 3] = [
-        RoundingMode::Deterministic,
-        RoundingMode::Dither,
-        RoundingMode::Stochastic,
-    ];
-
-    /// Display name matching the paper's figure legends.
-    pub fn name(&self) -> &'static str {
-        match self {
-            RoundingMode::Deterministic => "deterministic",
-            RoundingMode::Stochastic => "stochastic",
-            RoundingMode::Dither => "dither",
-        }
+impl ZooRounder {
+    /// New rounder for `id` with the given seed.
+    pub fn new(id: SchemeId, seed: u64) -> Self {
+        Self { id, seed, i_s: 0 }
     }
 
-    /// Parse from CLI spelling.
-    pub fn from_str(s: &str) -> Option<RoundingMode> {
-        match s {
-            "deterministic" | "det" | "traditional" => Some(RoundingMode::Deterministic),
-            "stochastic" | "sr" => Some(RoundingMode::Stochastic),
-            "dither" => Some(RoundingMode::Dither),
-            _ => None,
-        }
+    /// Number of roundings performed so far.
+    pub fn count(&self) -> u64 {
+        self.i_s
+    }
+
+    /// Round a (possibly negative) real to an integer level.
+    #[inline]
+    pub fn round(&mut self, v: f64) -> i64 {
+        let u = counter_hash(self.seed, self.i_s);
+        self.i_s += 1;
+        SchemeRegistry::global().get(self.id).round_scalar(v, u)
     }
 }
 
-/// Uniform stateful scalar rounder over the three modes.
+/// Uniform stateful scalar rounder over every registered scheme.
 #[derive(Clone, Debug)]
 pub enum ScalarRounder {
     /// Round-to-nearest (stateless).
@@ -73,15 +76,18 @@ pub enum ScalarRounder {
     Stochastic(StochasticRounder),
     /// Dither rounding with period `n` and permutation σ.
     Dither(DitherRounder),
+    /// A literature-zoo scheme (counter-seeded stateless bit).
+    Zoo(ZooRounder),
 }
 
 impl ScalarRounder {
     /// Build a rounder. `n` is the dither period (ignored by the others).
-    pub fn new(mode: RoundingMode, n: usize, seed: u64) -> Self {
-        match mode {
-            RoundingMode::Deterministic => ScalarRounder::Deterministic(DeterministicRounder),
-            RoundingMode::Stochastic => ScalarRounder::Stochastic(StochasticRounder::new(seed)),
-            RoundingMode::Dither => ScalarRounder::Dither(DitherRounder::new(n, seed)),
+    pub fn new(scheme: SchemeId, n: usize, seed: u64) -> Self {
+        match scheme {
+            SchemeId::Deterministic => ScalarRounder::Deterministic(DeterministicRounder),
+            SchemeId::Stochastic => ScalarRounder::Stochastic(StochasticRounder::new(seed)),
+            SchemeId::Dither => ScalarRounder::Dither(DitherRounder::new(n, seed)),
+            zoo => ScalarRounder::Zoo(ZooRounder::new(zoo, seed)),
         }
     }
 
@@ -92,15 +98,17 @@ impl ScalarRounder {
             ScalarRounder::Deterministic(r) => r.round(v),
             ScalarRounder::Stochastic(r) => r.round(v),
             ScalarRounder::Dither(r) => r.round(v),
+            ScalarRounder::Zoo(r) => r.round(v),
         }
     }
 
-    /// The mode this rounder implements.
-    pub fn mode(&self) -> RoundingMode {
+    /// The scheme this rounder implements.
+    pub fn mode(&self) -> SchemeId {
         match self {
-            ScalarRounder::Deterministic(_) => RoundingMode::Deterministic,
-            ScalarRounder::Stochastic(_) => RoundingMode::Stochastic,
-            ScalarRounder::Dither(_) => RoundingMode::Dither,
+            ScalarRounder::Deterministic(_) => SchemeId::Deterministic,
+            ScalarRounder::Stochastic(_) => SchemeId::Stochastic,
+            ScalarRounder::Dither(_) => SchemeId::Dither,
+            ScalarRounder::Zoo(r) => r.id,
         }
     }
 }
@@ -111,48 +119,58 @@ mod tests {
     use crate::util::stats::Welford;
 
     #[test]
-    fn mode_parsing() {
-        assert_eq!(
-            RoundingMode::from_str("traditional"),
-            Some(RoundingMode::Deterministic)
-        );
-        assert_eq!(RoundingMode::from_str("sr"), Some(RoundingMode::Stochastic));
-        assert_eq!(RoundingMode::from_str("dither"), Some(RoundingMode::Dither));
-        assert_eq!(RoundingMode::from_str("x"), None);
+    fn scheme_parsing() {
+        assert_eq!("traditional".parse(), Ok(SchemeId::Deterministic));
+        assert_eq!("sr".parse(), Ok(SchemeId::Stochastic));
+        assert_eq!("dither".parse(), Ok(SchemeId::Dither));
+        assert_eq!("srvb".parse(), Ok(SchemeId::SrVb));
+        assert!("x".parse::<SchemeId>().is_err());
+        assert_eq!(SchemeId::Tpdf.to_string(), "tpdf");
     }
 
     #[test]
     fn all_rounders_hit_adjacent_integers() {
-        for mode in RoundingMode::ALL {
-            let mut r = ScalarRounder::new(mode, 16, 3);
+        for scheme in SchemeId::ALL {
+            let mut r = ScalarRounder::new(scheme, 16, 3);
             for i in 0..200 {
                 let v = i as f64 * 0.173 - 5.0;
                 let out = r.round(v);
                 assert!(
                     out == v.floor() as i64 || out == v.ceil() as i64,
-                    "{mode:?} v={v} out={out}"
+                    "{scheme:?} v={v} out={out}"
                 );
-                assert_eq!(r.mode(), mode);
+                assert_eq!(r.mode(), scheme);
             }
         }
     }
 
     #[test]
     fn unbiased_modes_vs_biased_mode() {
-        // At α = 0.3 deterministic rounding is biased by -0.3; the unbiased
-        // schemes' means converge to α.
+        // At α = 0.3 deterministic rounding is biased by -0.3; the paper's
+        // unbiased schemes' means converge to α. (The zoo schemes trade
+        // per-sample unbiasedness for variance and are covered by their own
+        // statistical tests in `zoo` and `scheme`.)
         let alpha = 0.3;
-        for mode in RoundingMode::ALL {
-            let mut r = ScalarRounder::new(mode, 32, 5);
+        for scheme in SchemeId::PAPER {
+            let mut r = ScalarRounder::new(scheme, 32, 5);
             let mut w = Welford::new();
             for _ in 0..20_000 {
                 w.push(r.round(alpha) as f64);
             }
-            match mode {
-                RoundingMode::Deterministic => assert_eq!(w.mean(), 0.0),
-                _ => assert!((w.mean() - alpha).abs() < 0.01, "{mode:?} {}", w.mean()),
+            match scheme {
+                SchemeId::Deterministic => assert_eq!(w.mean(), 0.0),
+                _ => assert!((w.mean() - alpha).abs() < 0.01, "{scheme:?} {}", w.mean()),
             }
         }
+    }
+
+    #[test]
+    fn zoo_rounders_count_applications() {
+        let mut r = ZooRounder::new(SchemeId::Sr2, 4);
+        assert_eq!(r.count(), 0);
+        let _ = r.round(1.5);
+        let _ = r.round(2.5);
+        assert_eq!(r.count(), 2);
     }
 
     #[test]
@@ -160,13 +178,13 @@ mod tests {
         // Error of the running mean after exactly one period N.
         let alpha = 0.45;
         let n = 64;
-        let mut dither = ScalarRounder::new(RoundingMode::Dither, n, 9);
+        let mut dither = ScalarRounder::new(SchemeId::Dither, n, 9);
         let dither_mean: f64 =
             (0..n).map(|_| dither.round(alpha) as f64).sum::<f64>() / n as f64;
         // Repeat stochastic over many windows to estimate its typical error.
         let mut sto_errs = Welford::new();
         for t in 0..200 {
-            let mut s = ScalarRounder::new(RoundingMode::Stochastic, n, 100 + t);
+            let mut s = ScalarRounder::new(SchemeId::Stochastic, n, 100 + t);
             let m: f64 = (0..n).map(|_| s.round(alpha) as f64).sum::<f64>() / n as f64;
             sto_errs.push((m - alpha).abs());
         }

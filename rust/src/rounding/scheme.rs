@@ -1,0 +1,548 @@
+//! The redesigned scheme surface: [`SchemeId`], the [`Rounding`] trait and
+//! the process-wide [`SchemeRegistry`].
+//!
+//! Earlier revisions threaded a closed three-way `RoundingMode` enum through
+//! every layer; this module opens that surface so the stochastic-rounding
+//! *literature* can be served next to the paper's schemes. The split of
+//! responsibilities:
+//!
+//! * [`SchemeId`] stays a small `Copy` value — it is what plan keys, batch
+//!   keys, wire messages and fidelity cells store, so the hot paths keep
+//!   enum-cheap hashing and matching.
+//! * [`Rounding`] carries the per-scheme *behaviour and metadata*: the
+//!   stateless rounded-bit function, vectorized row rounding, determinism
+//!   and weight-freezing flags, the controller's MSE prior shape, and the
+//!   source citation surfaced in docs.
+//! * [`SchemeRegistry`] resolves stable wire names to `&'static dyn
+//!   Rounding` instances and enumerates the zoo for the protocol v2 hello.
+//!
+//! The serving kernels (`linalg::matmul`) still dispatch on [`SchemeId`]
+//! directly — the registry is the control-plane surface, not an extra
+//! virtual call inside the contraction loop.
+
+use crate::bitstream::dither::DitherParams;
+use crate::rounding::deterministic::deterministic_bit;
+use crate::rounding::dither::dither_bit;
+use crate::rounding::stochastic::stochastic_bit;
+use crate::rounding::zoo::{gauss_bit, sr2_bit, srvb_bit, tpdf_bit};
+use crate::util::rng::counter_hash;
+use std::fmt;
+use std::str::FromStr;
+
+/// Stable identifier of a registered rounding scheme.
+///
+/// The first three variants are the paper's comparison
+/// ([`SchemeId::PAPER`]); the rest is the literature zoo served behind the
+/// same API. Wire names (and therefore [`FromStr`]/[`fmt::Display`]) are
+/// part of the serving protocol and must stay stable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchemeId {
+    /// Traditional round-to-nearest (biased, minimal per-application EMSE).
+    Deterministic,
+    /// Stochastic rounding: `⌊α⌋ + Bernoulli(frac)` (unbiased, `Θ(1/√N)`).
+    Stochastic,
+    /// Dither rounding (§VII): indexed dither-computing representation
+    /// (unbiased, `Θ(1/N)`).
+    Dither,
+    /// Two-candidate improved stochastic rounding (Xia et al. 2020): the
+    /// rounded-up probability is sharpened toward the nearer candidate,
+    /// trading a small bias for lower per-application variance.
+    Sr2,
+    /// Variance-bounded stochastic rounding (El Arar et al. 2022): plain SR
+    /// while `frac·(1−frac)` is small, blended toward round-to-nearest once
+    /// the Bernoulli variance would exceed the bound.
+    SrVb,
+    /// TPDF (triangular) dithered rounding: the round-half-up threshold is
+    /// jittered by triangular noise, confined to one quantizer step.
+    Tpdf,
+    /// Gaussian dithered rounding: the threshold is jittered by an
+    /// Irwin–Hall(4) approximate Gaussian, confined to one quantizer step.
+    Gauss,
+}
+
+impl SchemeId {
+    /// Every registered scheme, in fidelity-slot order.
+    pub const ALL: [SchemeId; SchemeId::COUNT] = [
+        SchemeId::Deterministic,
+        SchemeId::Stochastic,
+        SchemeId::Dither,
+        SchemeId::Sr2,
+        SchemeId::SrVb,
+        SchemeId::Tpdf,
+        SchemeId::Gauss,
+    ];
+
+    /// The paper's three-way comparison, in its figure-legend order. Grids
+    /// that reproduce the paper (prewarm, ablations, figures) iterate this
+    /// subset; zoo-aware surfaces iterate [`SchemeId::ALL`].
+    pub const PAPER: [SchemeId; 3] = [
+        SchemeId::Deterministic,
+        SchemeId::Dither,
+        SchemeId::Stochastic,
+    ];
+
+    /// Number of registered schemes.
+    pub const COUNT: usize = 7;
+
+    /// Stable dense index for flat per-scheme tables (fidelity cells,
+    /// metrics windows). The first three slots predate the zoo and must
+    /// not move.
+    pub fn slot(self) -> usize {
+        match self {
+            SchemeId::Deterministic => 0,
+            SchemeId::Stochastic => 1,
+            SchemeId::Dither => 2,
+            SchemeId::Sr2 => 3,
+            SchemeId::SrVb => 4,
+            SchemeId::Tpdf => 5,
+            SchemeId::Gauss => 6,
+        }
+    }
+
+    /// Stable wire name used in the serving protocol, stats JSON and CLI.
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            SchemeId::Deterministic => "deterministic",
+            SchemeId::Stochastic => "stochastic",
+            SchemeId::Dither => "dither",
+            SchemeId::Sr2 => "sr2",
+            SchemeId::SrVb => "srvb",
+            SchemeId::Tpdf => "tpdf",
+            SchemeId::Gauss => "gauss",
+        }
+    }
+
+    /// True when the scheme uses no randomness at all.
+    pub fn is_deterministic(self) -> bool {
+        self == SchemeId::Deterministic
+    }
+
+    /// True when a `Separate`-variant weight plan may be frozen at prepare
+    /// time (the scheme's weight draw is either deterministic or reproduced
+    /// from the prepare-time seed; see `nn/prepared.rs`). The stochastic
+    /// family keeps weight draws fresh per request.
+    pub fn frozen_weights(self) -> bool {
+        matches!(self, SchemeId::Deterministic | SchemeId::Dither)
+    }
+}
+
+impl fmt::Display for SchemeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.wire_name())
+    }
+}
+
+/// Error from parsing an unknown scheme spelling.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseSchemeError {
+    /// The spelling that failed to parse.
+    pub input: String,
+}
+
+impl fmt::Display for ParseSchemeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown rounding scheme `{}`", self.input)
+    }
+}
+
+impl std::error::Error for ParseSchemeError {}
+
+impl FromStr for SchemeId {
+    type Err = ParseSchemeError;
+
+    /// Parse a wire name; the legacy CLI spellings `det`, `traditional`
+    /// and `sr` remain accepted aliases.
+    fn from_str(s: &str) -> Result<SchemeId, ParseSchemeError> {
+        match s {
+            "deterministic" | "det" | "traditional" => Ok(SchemeId::Deterministic),
+            "stochastic" | "sr" => Ok(SchemeId::Stochastic),
+            "dither" => Ok(SchemeId::Dither),
+            "sr2" => Ok(SchemeId::Sr2),
+            "srvb" => Ok(SchemeId::SrVb),
+            "tpdf" => Ok(SchemeId::Tpdf),
+            "gauss" => Ok(SchemeId::Gauss),
+            _ => Err(ParseSchemeError {
+                input: s.to_string(),
+            }),
+        }
+    }
+}
+
+/// Behaviour and metadata of one registered rounding scheme.
+///
+/// Implementations are stateless unit structs; per-call randomness comes in
+/// through the `u` word (counter-hashed from a seed by the caller), so the
+/// same `(frac, u)` always yields the same bit — the discipline that keeps
+/// every serving path reproducible.
+pub trait Rounding: Send + Sync {
+    /// The scheme's stable identifier.
+    fn id(&self) -> SchemeId;
+
+    /// Stable wire name (delegates to [`SchemeId::wire_name`]).
+    fn wire_name(&self) -> &'static str {
+        self.id().wire_name()
+    }
+
+    /// True when the scheme uses no randomness.
+    fn is_deterministic(&self) -> bool {
+        self.id().is_deterministic()
+    }
+
+    /// True when `Separate` weight plans may be frozen at prepare time.
+    fn frozen_weights(&self) -> bool {
+        self.id().frozen_weights()
+    }
+
+    /// The rounded bit for fractional part `frac ∈ [0, 1)` given one
+    /// uniform random word `u`. Every scheme is confined to one quantizer
+    /// step: the rounded value is `⌊α⌋ + bit`.
+    fn round_bit(&self, frac: f64, u: u64) -> bool;
+
+    /// Round one real to an integer level (`⌊v⌋ + round_bit(frac, u)`).
+    fn round_scalar(&self, v: f64, u: u64) -> i64 {
+        let fl = v.floor();
+        fl as i64 + i64::from(self.round_bit(v - fl, u))
+    }
+
+    /// Round a row of reals in place, drawing per-element randomness from
+    /// `counter_hash(seed, j)` — the vectorized form used by control-plane
+    /// consumers (the kernels keep their own fused loops).
+    fn round_row(&self, row: &mut [f64], seed: u64) {
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = self.round_scalar(*v, counter_hash(seed, j as u64)) as f64;
+        }
+    }
+
+    /// Prior per-logit MSE of an `n`-long contraction whose factors are
+    /// rounded on quantizer step `step`, before any shadow measurements
+    /// exist. Only has to *rank* candidates sanely — the online fidelity
+    /// estimator replaces it once cells are warm.
+    fn mse_prior(&self, step: f64, n: f64) -> f64;
+
+    /// Citation for the scheme (paper section or literature reference).
+    fn source(&self) -> &'static str;
+}
+
+/// Round-to-nearest ([`SchemeId::Deterministic`]).
+pub struct DeterministicScheme;
+
+impl Rounding for DeterministicScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Deterministic
+    }
+    fn round_bit(&self, frac: f64, _u: u64) -> bool {
+        deterministic_bit(frac)
+    }
+    fn mse_prior(&self, step: f64, n: f64) -> f64 {
+        n * step * step / 6.0
+    }
+    fn source(&self) -> &'static str {
+        "paper §II-C (round-to-nearest)"
+    }
+}
+
+/// Plain stochastic rounding ([`SchemeId::Stochastic`]).
+pub struct StochasticScheme;
+
+impl Rounding for StochasticScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Stochastic
+    }
+    fn round_bit(&self, frac: f64, u: u64) -> bool {
+        stochastic_bit(frac, u)
+    }
+    fn mse_prior(&self, step: f64, n: f64) -> f64 {
+        n * step / 6.0
+    }
+    fn source(&self) -> &'static str {
+        "paper §II-C (stochastic rounding)"
+    }
+}
+
+/// Dither rounding ([`SchemeId::Dither`]).
+///
+/// The registry entry draws one *marginal* bit of the §II-D representation
+/// (random slot from the high bits of `u`, stochastic residue re-hashed
+/// from `u`); the serving kernels keep the exact indexed-permutation form,
+/// which needs the application counter this stateless surface cannot carry.
+pub struct DitherScheme;
+
+/// Representation length used by the stateless marginal dither bit.
+const DITHER_MARGINAL_N: usize = 16;
+
+impl Rounding for DitherScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Dither
+    }
+    fn round_bit(&self, frac: f64, u: u64) -> bool {
+        let params = DitherParams::of(frac, DITHER_MARGINAL_N);
+        let pos = (u >> 56) as usize % DITHER_MARGINAL_N;
+        dither_bit(&params, pos, counter_hash(u, 0xD17E))
+    }
+    fn mse_prior(&self, step: f64, n: f64) -> f64 {
+        n * step * step / 6.0
+    }
+    fn source(&self) -> &'static str {
+        "paper §VII (dither rounding)"
+    }
+}
+
+/// Two-candidate improved stochastic rounding ([`SchemeId::Sr2`]).
+pub struct Sr2Scheme;
+
+impl Rounding for Sr2Scheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Sr2
+    }
+    fn round_bit(&self, frac: f64, u: u64) -> bool {
+        sr2_bit(frac, u)
+    }
+    fn mse_prior(&self, step: f64, n: f64) -> f64 {
+        // Sharpening the Bernoulli cuts variance but leaves an O(step)
+        // per-element bias, so the contraction error scales as step².
+        n * step * step / 3.0
+    }
+    fn source(&self) -> &'static str {
+        "Xia et al. 2020 (improved two-candidate SR)"
+    }
+}
+
+/// Variance-bounded stochastic rounding ([`SchemeId::SrVb`]).
+pub struct SrVbScheme;
+
+impl Rounding for SrVbScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::SrVb
+    }
+    fn round_bit(&self, frac: f64, u: u64) -> bool {
+        srvb_bit(frac, u)
+    }
+    fn mse_prior(&self, step: f64, n: f64) -> f64 {
+        // SR shape with the worst-case Bernoulli variance halved by the
+        // bound — still Ω(step), cheaper constant.
+        n * step / 12.0
+    }
+    fn source(&self) -> &'static str {
+        "El Arar et al. 2022 (variance-bounded SR)"
+    }
+}
+
+/// TPDF (triangular) dithered rounding ([`SchemeId::Tpdf`]).
+pub struct TpdfScheme;
+
+impl Rounding for TpdfScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Tpdf
+    }
+    fn round_bit(&self, frac: f64, u: u64) -> bool {
+        tpdf_bit(frac, u)
+    }
+    fn mse_prior(&self, step: f64, n: f64) -> f64 {
+        n * step * step / 4.0
+    }
+    fn source(&self) -> &'static str {
+        "classical TPDF dither, one-step confined"
+    }
+}
+
+/// Gaussian dithered rounding ([`SchemeId::Gauss`]).
+pub struct GaussScheme;
+
+impl Rounding for GaussScheme {
+    fn id(&self) -> SchemeId {
+        SchemeId::Gauss
+    }
+    fn round_bit(&self, frac: f64, u: u64) -> bool {
+        gauss_bit(frac, u)
+    }
+    fn mse_prior(&self, step: f64, n: f64) -> f64 {
+        n * step * step / 2.0
+    }
+    fn source(&self) -> &'static str {
+        "Gaussian (Irwin–Hall) dither, one-step confined"
+    }
+}
+
+/// The process-wide table of registered schemes, indexed by
+/// [`SchemeId::slot`] and resolvable by wire name.
+pub struct SchemeRegistry {
+    entries: [&'static dyn Rounding; SchemeId::COUNT],
+}
+
+static REGISTRY: SchemeRegistry = SchemeRegistry {
+    entries: [
+        &DeterministicScheme,
+        &StochasticScheme,
+        &DitherScheme,
+        &Sr2Scheme,
+        &SrVbScheme,
+        &TpdfScheme,
+        &GaussScheme,
+    ],
+};
+
+impl SchemeRegistry {
+    /// The global registry over [`SchemeId::ALL`].
+    pub fn global() -> &'static SchemeRegistry {
+        &REGISTRY
+    }
+
+    /// The scheme instance for an id.
+    pub fn get(&self, id: SchemeId) -> &'static dyn Rounding {
+        self.entries[id.slot()]
+    }
+
+    /// Resolve a wire name (or legacy alias) to a scheme instance.
+    pub fn resolve(&self, wire: &str) -> Option<&'static dyn Rounding> {
+        wire.parse::<SchemeId>().ok().map(|id| self.get(id))
+    }
+
+    /// Iterate every registered scheme in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = &'static dyn Rounding> + '_ {
+        self.entries.iter().copied()
+    }
+
+    /// Canonical wire names of every registered scheme, in slot order —
+    /// the list the protocol v2 hello advertises.
+    pub fn wire_names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|s| s.wire_name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+
+    #[test]
+    fn wire_names_round_trip_through_fromstr_and_display() {
+        for id in SchemeId::ALL {
+            let wire = id.to_string();
+            assert_eq!(wire, id.wire_name());
+            assert_eq!(wire.parse::<SchemeId>(), Ok(id), "{wire}");
+        }
+        assert!("fuzzy".parse::<SchemeId>().is_err());
+        assert!("".parse::<SchemeId>().is_err());
+        let err = "fuzzy".parse::<SchemeId>().unwrap_err();
+        assert_eq!(err.input, "fuzzy");
+        assert!(err.to_string().contains("fuzzy"));
+    }
+
+    #[test]
+    fn legacy_aliases_still_parse() {
+        assert_eq!("traditional".parse(), Ok(SchemeId::Deterministic));
+        assert_eq!("det".parse(), Ok(SchemeId::Deterministic));
+        assert_eq!("sr".parse(), Ok(SchemeId::Stochastic));
+    }
+
+    #[test]
+    fn slots_are_dense_and_stable() {
+        let mut seen = [false; SchemeId::COUNT];
+        for id in SchemeId::ALL {
+            assert!(!seen[id.slot()], "{id} slot collides");
+            seen[id.slot()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // The pre-zoo slots are frozen (fidelity tables depend on them).
+        assert_eq!(SchemeId::Deterministic.slot(), 0);
+        assert_eq!(SchemeId::Stochastic.slot(), 1);
+        assert_eq!(SchemeId::Dither.slot(), 2);
+    }
+
+    #[test]
+    fn registry_resolves_every_wire_name_and_rejects_unknown() {
+        let reg = SchemeRegistry::global();
+        for id in SchemeId::ALL {
+            let s = reg.resolve(id.wire_name()).expect("registered");
+            assert_eq!(s.id(), id);
+            assert_eq!(reg.get(id).id(), id);
+        }
+        assert!(reg.resolve("float128").is_none());
+        assert_eq!(reg.wire_names().len(), SchemeId::COUNT);
+        assert_eq!(reg.iter().count(), SchemeId::COUNT);
+    }
+
+    #[test]
+    fn metadata_flags_match_the_id_table() {
+        let reg = SchemeRegistry::global();
+        for s in reg.iter() {
+            assert_eq!(s.is_deterministic(), s.id() == SchemeId::Deterministic);
+            assert_eq!(
+                s.frozen_weights(),
+                matches!(s.id(), SchemeId::Deterministic | SchemeId::Dither)
+            );
+            assert!(!s.source().is_empty());
+        }
+    }
+
+    #[test]
+    fn every_scheme_rounds_to_an_adjacent_integer() {
+        let reg = SchemeRegistry::global();
+        for s in reg.iter() {
+            for i in 0..500u64 {
+                let v = i as f64 * 0.173 - 40.0;
+                let out = s.round_scalar(v, counter_hash(9, i));
+                assert!(
+                    out == v.floor() as i64 || out == v.ceil() as i64,
+                    "{} v={v} out={out}",
+                    s.wire_name()
+                );
+            }
+            // Exact integers never move under any scheme.
+            for v in [-3.0, 0.0, 7.0] {
+                for i in 0..64u64 {
+                    assert_eq!(s.round_scalar(v, counter_hash(3, i)), v as i64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_row_matches_scalar_rounding() {
+        let reg = SchemeRegistry::global();
+        for s in reg.iter() {
+            let mut row: Vec<f64> = (0..32).map(|j| j as f64 * 0.31 - 4.0).collect();
+            let expect: Vec<f64> = row
+                .iter()
+                .enumerate()
+                .map(|(j, &v)| s.round_scalar(v, counter_hash(5, j as u64)) as f64)
+                .collect();
+            s.round_row(&mut row, 5);
+            assert_eq!(row, expect, "{}", s.wire_name());
+        }
+    }
+
+    #[test]
+    fn priors_are_positive_and_fall_with_finer_steps() {
+        let reg = SchemeRegistry::global();
+        for s in reg.iter() {
+            let coarse = s.mse_prior(2.0 / 3.0, 784.0);
+            let fine = s.mse_prior(2.0 / 15.0, 784.0);
+            assert!(coarse > fine, "{}", s.wire_name());
+            assert!(fine > 0.0, "{}", s.wire_name());
+        }
+    }
+
+    #[test]
+    fn scheme_bits_track_their_target_probability_at_the_midpoint() {
+        // Every scheme's rounded bit must hit rate 1/2 at frac = 1/2 — the
+        // common anchor of the whole zoo (biased schemes bend the curve
+        // elsewhere, never at the midpoint).
+        let reg = SchemeRegistry::global();
+        for s in reg.iter() {
+            if s.is_deterministic() {
+                continue;
+            }
+            let mut w = Welford::new();
+            for i in 0..40_000u64 {
+                w.push(f64::from(u8::from(s.round_bit(0.5, counter_hash(31, i)))));
+            }
+            assert!(
+                (w.mean() - 0.5).abs() < 0.02,
+                "{} midpoint rate {}",
+                s.wire_name(),
+                w.mean()
+            );
+        }
+    }
+}

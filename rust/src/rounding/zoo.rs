@@ -1,0 +1,205 @@
+//! The literature zoo: stateless rounded-bit functions for the schemes
+//! served beyond the paper's three-way comparison.
+//!
+//! Every function maps `(frac, u)` — the fractional part `frac ∈ [0, 1)`
+//! and one uniform random word — to the rounded bit, so the rounded value
+//! is always `⌊α⌋ + bit`. Confining each scheme to one quantizer step is a
+//! deliberate serving contract: the adjacent-level property is what the
+//! step-budget error bounds and the propcheck invariants rely on, so
+//! schemes whose textbook form spans two steps (TPDF dither) are realized
+//! as a jittered round-half-up threshold instead.
+//!
+//! * [`sr2_bit`] — two-candidate improved SR (Xia et al. 2020): the
+//!   Bernoulli is sharpened toward the nearer candidate,
+//!   `p = f²/(f² + (1−f)²)`, cutting per-application variance at the cost
+//!   of a small odd-symmetric bias.
+//! * [`srvb_bit`] — variance-bounded SR (El Arar et al. 2022 family):
+//!   plain SR while `f(1−f)` is under the bound, blended toward
+//!   round-to-nearest beyond it; the exact midpoint stays a fair coin.
+//! * [`tpdf_bit`] — TPDF (triangular) dither: the rounding threshold is
+//!   jittered by the mean of two uniforms.
+//! * [`gauss_bit`] — Gaussian dither: the threshold is jittered by a
+//!   centered Irwin–Hall(4) approximate Gaussian.
+
+use crate::util::rng::u64_to_unit_f64;
+
+/// Bernoulli-variance ceiling of [`srvb_bit`] (half of plain SR's
+/// worst-case `1/4`).
+pub const SRVB_VARIANCE_BOUND: f64 = 0.125;
+
+/// Two-candidate improved stochastic rounding bit: `1` with probability
+/// `f² / (f² + (1−f)²)` — steeper than plain SR's `f`, so draws cluster on
+/// the nearer candidate.
+#[inline]
+pub fn sr2_bit(frac: f64, u: u64) -> bool {
+    let up = frac * frac;
+    let down = (1.0 - frac) * (1.0 - frac);
+    // up + down ≥ 1/2 for frac ∈ [0, 1], so the ratio is always defined.
+    u64_to_unit_f64(u) < up / (up + down)
+}
+
+/// Variance-bounded stochastic rounding bit: plain SR while
+/// `f(1−f) ≤ `[`SRVB_VARIANCE_BOUND`], otherwise the Bernoulli parameter
+/// is contracted toward the nearer integer by `λ = bound / (f(1−f))`,
+/// capping the per-application variance near the bound. The exact midpoint
+/// has no nearer integer and stays a fair coin.
+#[inline]
+pub fn srvb_bit(frac: f64, u: u64) -> bool {
+    let fq = frac * (1.0 - frac);
+    let p = if fq <= SRVB_VARIANCE_BOUND {
+        frac
+    } else {
+        let lambda = SRVB_VARIANCE_BOUND / fq;
+        let nearest = if frac > 0.5 {
+            1.0
+        } else if frac < 0.5 {
+            0.0
+        } else {
+            0.5
+        };
+        lambda * frac + (1.0 - lambda) * nearest
+    };
+    u64_to_unit_f64(u) < p
+}
+
+/// TPDF-dithered rounding bit: `1` iff the mean of two independent
+/// uniforms (a triangular variate on `[0, 1]`) falls below `frac` — i.e.
+/// round-half-up with the threshold jittered by triangular noise, confined
+/// to one step.
+#[inline]
+pub fn tpdf_bit(frac: f64, u: u64) -> bool {
+    let a = (u >> 32) as f64 / 4294967296.0;
+    let b = (u & 0xFFFF_FFFF) as f64 / 4294967296.0;
+    0.5 * (a + b) < frac
+}
+
+/// Gaussian-dithered rounding bit: round-half-up with the threshold
+/// jittered by a centered Irwin–Hall(4) variate (mean 0, sd ≈ 0.577),
+/// confined to one step. Exact integers (`frac = 0`) never move.
+#[inline]
+pub fn gauss_bit(frac: f64, u: u64) -> bool {
+    if frac <= 0.0 {
+        return false;
+    }
+    let s = ((u >> 48) & 0xFFFF) as f64
+        + ((u >> 32) & 0xFFFF) as f64
+        + ((u >> 16) & 0xFFFF) as f64
+        + (u & 0xFFFF) as f64;
+    let g = s / 65536.0 - 2.0;
+    frac + 0.5 * g >= 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rounding::stochastic::stochastic_bit;
+    use crate::util::rng::counter_hash;
+    use crate::util::stats::Welford;
+
+    /// Empirical bit rate over many counter-hashed words.
+    fn rate(bit: impl Fn(f64, u64) -> bool, frac: f64, seed: u64, trials: u64) -> f64 {
+        let mut w = Welford::new();
+        for i in 0..trials {
+            w.push(f64::from(u8::from(bit(frac, counter_hash(seed, i)))));
+        }
+        w.mean()
+    }
+
+    #[test]
+    fn sr2_matches_its_sharpened_probability() {
+        for k in 1..10 {
+            let f = k as f64 / 10.0;
+            let up = f * f;
+            let p = up / (up + (1.0 - f) * (1.0 - f));
+            let r = rate(sr2_bit, f, 7, 40_000);
+            assert!((r - p).abs() < 0.01, "f={f} rate={r} p={p}");
+        }
+    }
+
+    #[test]
+    fn sr2_variance_never_exceeds_plain_sr() {
+        // p(1−p) of the sharpened Bernoulli is ≤ f(1−f) everywhere.
+        for k in 0..=20 {
+            let f = k as f64 / 20.0;
+            let up = f * f;
+            let p = up / (up + (1.0 - f) * (1.0 - f));
+            assert!(
+                p * (1.0 - p) <= f * (1.0 - f) + 1e-12,
+                "f={f} p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn srvb_is_plain_sr_inside_the_variance_bound() {
+        // f(1−f) ≤ 1/8 ⇔ f outside (0.146.., 0.853..): the bit must equal
+        // plain SR on the same random word, bit for bit.
+        for &f in &[0.0, 0.05, 0.1, 0.14, 0.86, 0.9, 0.99] {
+            for i in 0..5_000u64 {
+                let u = counter_hash(11, i);
+                assert_eq!(srvb_bit(f, u), stochastic_bit(f, u), "f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn srvb_caps_the_bernoulli_variance() {
+        // Away from the midpoint knife-edge, p(1−p) stays near the bound
+        // instead of climbing to SR's 1/4.
+        for k in 0..=40 {
+            let f = k as f64 / 40.0;
+            if (f - 0.5).abs() < 1e-9 {
+                continue;
+            }
+            let r = rate(srvb_bit, f, 13, 40_000);
+            assert!(
+                r * (1.0 - r) <= 0.19 + 0.01,
+                "f={f} rate={r} var={}",
+                r * (1.0 - r)
+            );
+        }
+        // The midpoint itself is a fair coin.
+        let mid = rate(srvb_bit, 0.5, 13, 40_000);
+        assert!((mid - 0.5).abs() < 0.01, "midpoint rate {mid}");
+    }
+
+    #[test]
+    fn tpdf_tracks_the_triangular_cdf() {
+        for k in 0..=10 {
+            let f = k as f64 / 10.0;
+            let cdf = if f <= 0.5 {
+                2.0 * f * f
+            } else {
+                1.0 - 2.0 * (1.0 - f) * (1.0 - f)
+            };
+            let r = rate(tpdf_bit, f, 17, 40_000);
+            assert!((r - cdf).abs() < 0.01, "f={f} rate={r} cdf={cdf}");
+        }
+    }
+
+    #[test]
+    fn gauss_rate_is_monotone_and_anchored() {
+        let mut prev = -1.0;
+        for k in 0..=10 {
+            let f = k as f64 / 10.0;
+            let r = rate(gauss_bit, f, 19, 40_000);
+            assert!(r >= prev - 0.01, "rate must grow with frac: f={f} {r} < {prev}");
+            prev = r;
+        }
+        assert_eq!(rate(gauss_bit, 0.0, 19, 1_000), 0.0, "integers never move");
+        let mid = rate(gauss_bit, 0.5, 23, 40_000);
+        assert!((mid - 0.5).abs() < 0.01, "midpoint rate {mid}");
+    }
+
+    #[test]
+    fn all_zoo_bits_are_deterministic_in_their_inputs() {
+        for i in 0..200u64 {
+            let u = counter_hash(29, i);
+            let f = (i as f64 * 0.37) % 1.0;
+            assert_eq!(sr2_bit(f, u), sr2_bit(f, u));
+            assert_eq!(srvb_bit(f, u), srvb_bit(f, u));
+            assert_eq!(tpdf_bit(f, u), tpdf_bit(f, u));
+            assert_eq!(gauss_bit(f, u), gauss_bit(f, u));
+        }
+    }
+}

@@ -8,7 +8,7 @@
 use crate::data::{Dataset, Task};
 use crate::linalg::Variant;
 use crate::nn::{ActivationRanges, Mlp, PlanKey, PreparedModel};
-use crate::rounding::RoundingMode;
+use crate::rounding::SchemeId;
 use crate::train::sgd::{train, TrainConfig};
 use crate::util::rng::Xoshiro256pp;
 use std::sync::Arc;
@@ -222,7 +222,7 @@ impl Zoo {
     pub fn prewarm_plans(
         &self,
         bits: &[u32],
-        modes: &[RoundingMode],
+        modes: &[SchemeId],
         variant: Variant,
         seed: u64,
     ) -> Vec<(PlanKey, Arc<PreparedModel>)> {
@@ -233,7 +233,7 @@ impl Zoo {
                     let key = PlanKey {
                         model: m.spec.name().to_string(),
                         bits: k,
-                        mode,
+                        scheme: mode,
                         variant,
                     };
                     let plans = Arc::new(PreparedModel::prepare(&m.mlp, k, mode, variant, seed));
@@ -304,12 +304,12 @@ mod tests {
     #[test]
     fn prewarm_plans_covers_the_config_grid() {
         let zoo = Zoo::load(200, 11);
-        let plans = zoo.prewarm_plans(&[2, 4], &RoundingMode::ALL, Variant::Separate, 7);
+        let plans = zoo.prewarm_plans(&[2, 4], &SchemeId::PAPER, Variant::Separate, 7);
         assert_eq!(plans.len(), 2 * 2 * 3, "models × bits × schemes");
         for (key, prepared) in &plans {
             assert_eq!(key.variant, Variant::Separate);
             assert_eq!(prepared.bits(), key.bits);
-            assert_eq!(prepared.mode(), key.mode);
+            assert_eq!(prepared.mode(), key.scheme);
             assert!(prepared.memory_bytes() > 0);
         }
         // Keys are unique (one cache slot per configuration).

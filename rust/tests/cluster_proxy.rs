@@ -11,7 +11,7 @@
 use dither::cluster::{run_proxy, ProxyConfig};
 use dither::coordinator::{format_request, format_request_auto, serve, wait_ready, ServerConfig};
 use dither::data::{Dataset, Task};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::util::json::Json;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -43,16 +43,16 @@ fn backend_cfg(addr: &str) -> ServerConfig {
 }
 
 /// One request case: (id, model, scheme, k, image row).
-type Case = (u64, &'static str, RoundingMode, u32, usize);
+type Case = (u64, &'static str, SchemeId, u32, usize);
 
-/// Every concrete `(model, scheme, k ∈ {2,4})` key twice — 24 requests
-/// over 12 routing keys, which the deterministic ring spreads across
-/// both backends.
+/// Every concrete `(model, scheme, k ∈ {2,4})` key twice — the paper's
+/// trio plus the whole literature zoo, 56 requests over 28 routing keys,
+/// which the deterministic ring spreads across both backends.
 fn cases() -> Vec<Case> {
     let mut out = Vec::new();
     let mut id = 0u64;
     for model in ["digits_linear", "fashion_mlp"] {
-        for mode in RoundingMode::ALL {
+        for mode in SchemeId::ALL {
             for k in [2u32, 4] {
                 for _ in 0..2 {
                     id += 1;
@@ -72,16 +72,14 @@ fn row<'a>(digits: &'a Dataset, fashion: &'a Dataset, case: &Case) -> &'a [f64] 
     }
 }
 
-/// A reply the client should simply resend: overload backpressure (window
-/// full, queue full, backend down or lost mid-kill) and the transient
-/// errors of a backend draining out from under the proxy.
+/// A reply the client should simply resend. Every error reply carries the
+/// unified `retryable` flag — overload backpressure (window full, queue
+/// full, backend down or lost mid-kill) and the transient errors of a
+/// backend draining out from under the proxy all say `true`; a reply
+/// wrongly marked `false` surfaces as a hard wave failure instead of a
+/// silent retry.
 fn retryable(resp: &Json) -> bool {
-    if resp.get("overloaded").and_then(Json::as_bool).unwrap_or(false) {
-        return true;
-    }
-    resp.get("error").and_then(Json::as_str).is_some_and(|e| {
-        e.contains("shutting down") || e.contains("cancelled") || e.contains("no healthy")
-    })
+    resp.get("retryable").and_then(Json::as_bool).unwrap_or(false)
 }
 
 /// Drive `cases` through one pipelined connection to `addr`: hello
@@ -123,6 +121,17 @@ fn drive_cases(
             .is_some_and(|f| f.iter().any(|v| v.as_str() == Some("pipelined"))),
         "{line}"
     );
+    // Protocol v2 holds at both tiers: the backend advertises its
+    // registry, the proxy the intersection across healthy backends —
+    // same-build backends, so the full zoo either way.
+    assert_eq!(hello.get("proto").and_then(Json::as_f64), Some(2.0), "{line}");
+    let advertised = hello.get("schemes").and_then(Json::as_arr).expect("schemes list");
+    for mode in SchemeId::ALL {
+        assert!(
+            advertised.iter().any(|s| s.as_str() == Some(mode.wire_name())),
+            "hello must advertise {mode}: {line}"
+        );
+    }
 
     let by_id: HashMap<u64, &Case> = cases.iter().map(|c| (c.0, c)).collect();
     let mut outstanding: Vec<u64> = Vec::new();
@@ -188,12 +197,12 @@ fn check_wave(
     for case in cases {
         let resp = &done[&case.0];
         assert!(resp.get("error").is_none(), "{resp}");
-        assert_eq!(resp.get("scheme").and_then(Json::as_str), Some(case.2.name()), "{resp}");
+        assert_eq!(resp.get("scheme").and_then(Json::as_str), Some(case.2.wire_name()), "{resp}");
         assert_eq!(resp.get("k").and_then(Json::as_f64), Some(f64::from(case.3)), "{resp}");
         let logits = resp.get("logits").and_then(Json::as_f64_vec).expect("logits");
         assert_eq!(logits.len(), 10, "{resp}");
         assert!(logits.iter().all(|v| v.is_finite()), "{resp}");
-        if case.2 == RoundingMode::Deterministic {
+        if case.2 == SchemeId::Deterministic {
             if let Some(reference) = reference {
                 assert_eq!(
                     logits, reference[&case.0],
@@ -209,7 +218,7 @@ fn check_wave(
 fn det_logits(done: &HashMap<u64, Json>, cases: &[Case]) -> HashMap<u64, Vec<f64>> {
     cases
         .iter()
-        .filter(|c| c.2 == RoundingMode::Deterministic)
+        .filter(|c| c.2 == SchemeId::Deterministic)
         .map(|c| (c.0, done[&c.0].get("logits").and_then(Json::as_f64_vec).unwrap()))
         .collect()
 }

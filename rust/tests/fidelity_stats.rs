@@ -16,7 +16,7 @@ use dither::coordinator::Engine;
 use dither::fidelity::{choose, prior_mse, FidelityShard, MIN_SAMPLES};
 use dither::linalg::Matrix;
 use dither::nn::{ActivationRanges, Mlp};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::train::{ModelSpec, Zoo, ZooModel};
 use dither::util::rng::Xoshiro256pp;
 use std::sync::Arc;
@@ -51,14 +51,14 @@ fn controlled_zoo() -> Arc<Zoo> {
     Arc::new(Zoo::from_models(vec![model]))
 }
 
-/// Drive `TRIALS` shadowed batches of every scheme at `k` through a fresh
-/// engine and return its estimator table.
+/// Drive `TRIALS` shadowed batches of the paper's trio at `k` through a
+/// fresh engine and return its estimator table.
 fn measure(k: u32, engine_seed: u64) -> Arc<FidelityShard> {
     let sink = Arc::new(FidelityShard::new());
     let engine = Engine::from_zoo(controlled_zoo(), engine_seed).with_shadow(1.0, sink.clone());
     let x = narrow_batch(BATCH, 99);
     let rows: Vec<&[f64]> = (0..x.rows).map(|i| x.row(i)).collect();
-    for mode in RoundingMode::ALL {
+    for mode in SchemeId::PAPER {
         for _ in 0..TRIALS {
             engine
                 .infer_batch("digits_linear", k, mode, &rows)
@@ -68,13 +68,28 @@ fn measure(k: u32, engine_seed: u64) -> Arc<FidelityShard> {
     sink
 }
 
+/// Drive `TRIALS` shadowed batches of exactly one scheme at `k` — nothing
+/// else touches the estimator, so any warm cell belongs to that scheme.
+fn measure_one(mode: SchemeId, k: u32, engine_seed: u64) -> Arc<FidelityShard> {
+    let sink = Arc::new(FidelityShard::new());
+    let engine = Engine::from_zoo(controlled_zoo(), engine_seed).with_shadow(1.0, sink.clone());
+    let x = narrow_batch(BATCH, 99);
+    let rows: Vec<&[f64]> = (0..x.rows).map(|i| x.row(i)).collect();
+    for _ in 0..TRIALS {
+        engine
+            .infer_batch("digits_linear", k, mode, &rows)
+            .expect("controlled model serves");
+    }
+    sink
+}
+
 #[test]
 fn bias_vanishes_for_unbiased_schemes_but_not_deterministic_at_small_k() {
     let sink = measure(1, 11);
     let slot = ModelSpec::DigitsLinear.index();
-    let det = sink.estimate(slot, RoundingMode::Deterministic, 1);
-    let dit = sink.estimate(slot, RoundingMode::Dither, 1);
-    let sto = sink.estimate(slot, RoundingMode::Stochastic, 1);
+    let det = sink.estimate(slot, SchemeId::Deterministic, 1);
+    let dit = sink.estimate(slot, SchemeId::Dither, 1);
+    let sto = sink.estimate(slot, SchemeId::Stochastic, 1);
     for (name, est) in [("det", &det), ("dither", &dit), ("stochastic", &sto)] {
         assert!(
             est.samples >= MIN_SAMPLES,
@@ -106,9 +121,9 @@ fn bias_vanishes_for_unbiased_schemes_but_not_deterministic_at_small_k() {
 fn mse_ordering_matches_the_paper_at_matched_k() {
     let sink = measure(1, 17);
     let slot = ModelSpec::DigitsLinear.index();
-    let det = sink.estimate(slot, RoundingMode::Deterministic, 1).mse();
-    let dit = sink.estimate(slot, RoundingMode::Dither, 1).mse();
-    let sto = sink.estimate(slot, RoundingMode::Stochastic, 1).mse();
+    let det = sink.estimate(slot, SchemeId::Deterministic, 1).mse();
+    let dit = sink.estimate(slot, SchemeId::Dither, 1).mse();
+    let sto = sink.estimate(slot, SchemeId::Stochastic, 1).mse();
     // Dither ≤ stochastic at matched N (period-stratified rounding errors
     // cancel within each contraction window), both far below the biased
     // deterministic scheme in this regime.
@@ -124,8 +139,8 @@ fn measured_mse_falls_with_bit_width() {
     let coarse = measure(1, 23);
     let fine = measure(4, 23);
     let slot = ModelSpec::DigitsLinear.index();
-    let mse1 = coarse.estimate(slot, RoundingMode::Dither, 1).mse();
-    let mse4 = fine.estimate(slot, RoundingMode::Dither, 4).mse();
+    let mse1 = coarse.estimate(slot, SchemeId::Dither, 1).mse();
+    let mse4 = fine.estimate(slot, SchemeId::Dither, 4).mse();
     assert!(mse4 < mse1 / 4.0, "dither mse must fall with k: k=1 {mse1} vs k=4 {mse4}");
 }
 
@@ -135,27 +150,63 @@ fn auto_controller_hands_off_from_prior_to_live_measurements() {
     // *measured* deterministic k=1 MSE (≈ 576 in this regime) blows it
     // while dither k=1 sails under — the choice must move once the cells
     // are warm, using only what shadow sampling actually measured.
-    let budget = prior_mse(RoundingMode::Deterministic, 1) * 1.02;
+    let budget = prior_mse(SchemeId::Deterministic, 1) * 1.02;
     let slot = ModelSpec::DigitsLinear.index();
     let cold = choose(&FidelityShard::new(), slot, budget);
     assert_eq!(
-        (cold.mode, cold.k, cold.measured),
-        (RoundingMode::Deterministic, 1, false),
+        (cold.scheme, cold.k, cold.measured),
+        (SchemeId::Deterministic, 1, false),
         "cold controller must run on the prior"
     );
     let sink = measure(1, 31);
     assert!(
-        sink.estimate(slot, RoundingMode::Deterministic, 1).mse() > budget,
+        sink.estimate(slot, SchemeId::Deterministic, 1).mse() > budget,
         "the measured deterministic MSE must exceed the prior-feasible budget"
     );
     let warm = choose(&sink, slot, budget);
     assert_eq!(
-        (warm.mode, warm.k),
-        (RoundingMode::Dither, 1),
+        (warm.scheme, warm.k),
+        (SchemeId::Dither, 1),
         "warm controller must move to the cheapest scheme that measures under budget: {warm:?}"
     );
     assert!(warm.measured);
     assert!(warm.predicted_mse <= budget);
     // Deterministic given the estimator state.
     assert_eq!(warm, choose(&sink, slot, budget));
+}
+
+#[test]
+fn zoo_scheme_acquires_measured_cells_and_wins_auto_resolution() {
+    // A literature scheme is a first-class citizen of the serving stack:
+    // shadow sampling fills its (model, scheme, k) estimator cell, and
+    // once warm the measured estimate makes it auto-eligible — the
+    // controller hands an auto request to sr2 when it is the first
+    // candidate whose *measured* MSE fits a budget every prior flunks.
+    let sink = measure_one(SchemeId::Sr2, 2, 41);
+    let slot = ModelSpec::DigitsLinear.index();
+    let est = sink.estimate(slot, SchemeId::Sr2, 2);
+    assert!(
+        est.samples >= MIN_SAMPLES,
+        "sr2 cell holds {} samples, needs {MIN_SAMPLES} to go live",
+        est.samples
+    );
+    let budget = est.mse() * 2.0;
+    // Self-diagnosing guards: the budget must sit below every candidate
+    // the controller walks before the measured sr2 cell — the cheapest
+    // k=1 prior (srvb) and the cheapest k=2 priors (det/dither) — so
+    // only the live measurement can satisfy it. The 64-wide controlled
+    // model keeps measured logit errors far under the 784-wide priors.
+    assert!(
+        budget < prior_mse(SchemeId::SrVb, 1)
+            && budget < prior_mse(SchemeId::Deterministic, 2),
+        "measured sr2 mse {} is not far enough below the priors",
+        est.mse()
+    );
+    let choice = choose(&sink, slot, budget);
+    assert_eq!(
+        (choice.scheme, choice.k, choice.measured),
+        (SchemeId::Sr2, 2, true),
+        "{choice:?}"
+    );
+    assert!(choice.predicted_mse <= budget);
 }

@@ -4,7 +4,7 @@
 use dither::data::{Dataset, Task};
 use dither::linalg::Variant;
 use dither::nn::{quantized_accuracy, ActivationRanges, Mlp, QuantInferenceConfig};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::train::{train, TrainConfig};
 use dither::util::rng::Xoshiro256pp;
 
@@ -42,7 +42,7 @@ fn high_k_quantized_matches_float_for_all_placements() {
     let float_acc = mlp.accuracy(&test.images, &test.labels);
     let ranges = ActivationRanges::calibrate(&mlp, &test.images);
     for variant in Variant::ALL {
-        for mode in RoundingMode::ALL {
+        for mode in SchemeId::PAPER {
             let qcfg = QuantInferenceConfig {
                 bits: 8,
                 mode,
@@ -64,8 +64,8 @@ fn fig9_shape_small_k_ordering() {
     // [-1,1] quantizer all round to +1); dither/stochastic stay usable.
     let (mlp, test) = trained_digits(1200);
     let ranges = ActivationRanges::calibrate(&mlp, &test.images);
-    let acc = |mode: RoundingMode, k: u32, variant: Variant| -> f64 {
-        let trials = if mode == RoundingMode::Deterministic { 1 } else { 4 };
+    let acc = |mode: SchemeId, k: u32, variant: Variant| -> f64 {
+        let trials = if mode == SchemeId::Deterministic { 1 } else { 4 };
         (0..trials)
             .map(|t| {
                 let qcfg = QuantInferenceConfig {
@@ -84,9 +84,9 @@ fn fig9_shape_small_k_ordering() {
     // the unbiased-vs-deterministic gap is decisive (paper: "for small
     // k > 1" in the separate-quantization figures).
     for (variant, k) in [(Variant::PerPartial, 1), (Variant::Separate, 2)] {
-        let det = acc(RoundingMode::Deterministic, k, variant);
-        let dit = acc(RoundingMode::Dither, k, variant);
-        let sto = acc(RoundingMode::Stochastic, k, variant);
+        let det = acc(SchemeId::Deterministic, k, variant);
+        let dit = acc(SchemeId::Dither, k, variant);
+        let sto = acc(SchemeId::Stochastic, k, variant);
         assert!(dit > det + 0.15, "{variant:?}: dither {dit} vs det {det} at k={k}");
         assert!(sto > det + 0.15, "{variant:?}: stochastic {sto} vs det {det} at k={k}");
         // Dither ≈ stochastic in mean (within a few points).
@@ -102,7 +102,7 @@ fn fig10_shape_dither_variance_not_higher() {
     // Fig 10: dither rounding's accuracy variance ≤ stochastic rounding's.
     let (mlp, test) = trained_digits(1200);
     let ranges = ActivationRanges::calibrate(&mlp, &test.images);
-    let variance = |mode: RoundingMode| -> f64 {
+    let variance = |mode: SchemeId| -> f64 {
         let accs: Vec<f64> = (0..12)
             .map(|t| {
                 let qcfg = QuantInferenceConfig {
@@ -117,8 +117,8 @@ fn fig10_shape_dither_variance_not_higher() {
         let mean = accs.iter().sum::<f64>() / accs.len() as f64;
         accs.iter().map(|a| (a - mean).powi(2)).sum::<f64>() / (accs.len() - 1) as f64
     };
-    let v_dit = variance(RoundingMode::Dither);
-    let v_sto = variance(RoundingMode::Stochastic);
+    let v_dit = variance(SchemeId::Dither);
+    let v_sto = variance(SchemeId::Stochastic);
     assert!(
         v_dit <= v_sto * 1.5,
         "dither accuracy variance {v_dit} should not exceed stochastic {v_sto} materially"
@@ -151,7 +151,7 @@ fn fashion_mlp_three_layer_pipeline() {
     // k=8 separate ≈ float (the §VIII working regime).
     let qcfg = QuantInferenceConfig {
         bits: 8,
-        mode: RoundingMode::Dither,
+        mode: SchemeId::Dither,
         variant: Variant::Separate,
         seed: 6,
     };

@@ -7,7 +7,7 @@ use dither::coordinator::{
     format_request, format_request_auto, serve, wait_ready, Engine, Reassembler, ServerConfig,
 };
 use dither::data::{Dataset, Task};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::train::Zoo;
 use dither::util::json::Json;
 use std::collections::HashMap;
@@ -24,7 +24,7 @@ fn engine_serves_accurately_at_high_k() {
     let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
     // k=8 dither ≈ float model predictions.
     let outputs = engine
-        .infer_batch("digits_linear", 8, RoundingMode::Dither, &pixels)
+        .infer_batch("digits_linear", 8, SchemeId::Dither, &pixels)
         .expect("infer");
     assert_eq!(outputs.len(), 32);
     let correct = outputs
@@ -45,10 +45,10 @@ fn engine_mode_and_seed_change_results() {
     let ds = Dataset::synthesize(Task::Digits, 4, 0x7358);
     let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
     let a = engine
-        .infer_batch("digits_linear", 2, RoundingMode::Dither, &pixels)
+        .infer_batch("digits_linear", 2, SchemeId::Dither, &pixels)
         .unwrap();
     let b = engine
-        .infer_batch("digits_linear", 2, RoundingMode::Dither, &pixels)
+        .infer_batch("digits_linear", 2, SchemeId::Dither, &pixels)
         .unwrap();
     // Seeds advance per batch: dither logits differ between calls.
     let same = a.iter().zip(&b).all(|(x, y)| x.logits == y.logits);
@@ -59,10 +59,10 @@ fn engine_mode_and_seed_change_results() {
     let e1 = Engine::from_zoo(zoo.clone(), 7);
     let e2 = Engine::from_zoo(zoo, 99);
     let c = e1
-        .infer_batch("digits_linear", 2, RoundingMode::Deterministic, &pixels)
+        .infer_batch("digits_linear", 2, SchemeId::Deterministic, &pixels)
         .unwrap();
     let d = e2
-        .infer_batch("digits_linear", 2, RoundingMode::Deterministic, &pixels)
+        .infer_batch("digits_linear", 2, SchemeId::Deterministic, &pixels)
         .unwrap();
     assert!(c.iter().zip(&d).all(|(x, y)| x.logits == y.logits));
 }
@@ -73,7 +73,7 @@ fn fashion_mlp_serves() {
     let ds = Dataset::synthesize(Task::Fashion, 8, 0x735A);
     let pixels: Vec<&[f64]> = (0..ds.len()).map(|i| ds.images.row(i)).collect();
     let outputs = engine
-        .infer_batch("fashion_mlp", 6, RoundingMode::Dither, &pixels)
+        .infer_batch("fashion_mlp", 6, SchemeId::Dither, &pixels)
         .expect("infer");
     assert_eq!(outputs.len(), 8);
     assert!(outputs.iter().all(|o| o.logits.iter().all(|v| v.is_finite())));
@@ -112,32 +112,40 @@ fn tcp_server_end_to_end_sharded() {
     let mut writer = stream;
     let mut line = String::new();
 
-    // Mixed-scheme inference round-trips on one connection; deterministic
-    // replies must match a local reference engine exactly. (Same train_n
-    // and seed as the server, so the reference model is identical even on
-    // a cold weight cache.)
+    // Mixed-scheme inference round-trips on one connection — the paper's
+    // trio plus the whole literature zoo; deterministic replies must match
+    // a local reference engine exactly. (Same train_n and seed as the
+    // server, so the reference model is identical even on a cold weight
+    // cache.)
     let reference = Engine::new(TRAIN_N, 7);
     let ds = Dataset::synthesize(Task::Digits, 4, 0x7E57);
     let mut shard_seen = None;
-    for (id, mode) in [
-        (5u64, RoundingMode::Dither),
-        (6, RoundingMode::Stochastic),
-        (7, RoundingMode::Deterministic),
-    ] {
-        let pixels = ds.images.row((id - 5) as usize);
+    for (row, (id, mode)) in [
+        (5u64, SchemeId::Dither),
+        (6, SchemeId::Stochastic),
+        (7, SchemeId::Deterministic),
+        (40, SchemeId::Sr2),
+        (41, SchemeId::SrVb),
+        (42, SchemeId::Tpdf),
+        (43, SchemeId::Gauss),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let pixels = ds.images.row(row % ds.len());
         writeln!(writer, "{}", format_request(id, "digits_linear", 4, mode, pixels)).unwrap();
         line.clear();
         reader.read_line(&mut line).unwrap();
         let resp = Json::parse(line.trim()).expect("response json");
         assert_eq!(resp.get("id").unwrap().as_f64(), Some(id as f64), "{line}");
-        assert_eq!(resp.get("scheme").unwrap().as_str(), Some(mode.name()), "{line}");
+        assert_eq!(resp.get("scheme").unwrap().as_str(), Some(mode.wire_name()), "{line}");
         assert!(resp.get("error").is_none(), "{line}");
         let shard = resp.get("shard").unwrap().as_f64().unwrap();
         match shard_seen {
             None => shard_seen = Some(shard),
             Some(s) => assert_eq!(s, shard, "connection must stay on one shard"),
         }
-        if mode == RoundingMode::Deterministic {
+        if mode == SchemeId::Deterministic {
             let got = resp.get("logits").unwrap().as_f64_vec().unwrap();
             let want = reference
                 .infer_batch("digits_linear", 4, mode, &[pixels])
@@ -182,6 +190,21 @@ fn tcp_server_end_to_end_sharded() {
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("error"), "{line}");
 
+    // Unknown scheme → the unified error shape: the offending id echoed
+    // and retryable:false (resending the same spelling can never succeed).
+    writeln!(
+        writer,
+        "{{\"id\":9,\"model\":\"digits_linear\",\"k\":4,\"scheme\":\"sr9\",\"pixels\":{}}}",
+        Json::nums(ds.images.row(1))
+    )
+    .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).expect("unknown-scheme error json");
+    assert_eq!(resp.get("id").unwrap().as_f64(), Some(9.0), "{line}");
+    assert!(resp.get("error").and_then(Json::as_str).is_some(), "{line}");
+    assert_eq!(resp.get("retryable").unwrap().as_bool(), Some(false), "{line}");
+
     // A second connection lands on its own shard id deterministically and
     // still gets served.
     let stream2 = connect_when_up(addr);
@@ -190,7 +213,7 @@ fn tcp_server_end_to_end_sharded() {
     writeln!(
         writer2,
         "{}",
-        format_request(20, "fashion_mlp", 6, RoundingMode::Dither, ds.images.row(0))
+        format_request(20, "fashion_mlp", 6, SchemeId::Dither, ds.images.row(0))
     )
     .unwrap();
     let mut line2 = String::new();
@@ -208,6 +231,10 @@ fn tcp_server_end_to_end_sharded() {
     assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 5.0, "{line}");
     assert_eq!(stats.get("shards").unwrap().as_f64(), Some(4.0), "{line}");
     assert!(stats.get("errors").unwrap().as_f64().unwrap() >= 1.0, "{line}");
+    assert!(
+        stats.get("deprecated_fields").unwrap().as_f64().unwrap() >= 1.0,
+        "the legacy \"mode\" spelling must be counted: {line}"
+    );
     assert_eq!(
         stats
             .get("per_shard_requests")
@@ -279,7 +306,7 @@ fn tcp_requests_pipeline_across_connections() {
                 let mut line = String::new();
                 for j in 0..5u64 {
                     let id = (c * 10) as u64 + j;
-                    let mode = RoundingMode::ALL[j as usize % 3];
+                    let mode = SchemeId::PAPER[j as usize % 3];
                     let px = ds.images.row(((c as u64 + j) % 8) as usize);
                     writeln!(writer, "{}", format_request(id, "digits_linear", 4, mode, px))
                         .unwrap();
@@ -310,11 +337,11 @@ fn tcp_requests_pipeline_across_connections() {
 }
 
 /// The W=32 mixed-scheme request grid the pipelined bit-identity test
-/// drives: every scheme, two bit widths, eight distinct images.
-fn mixed_cases(ds: &Dataset) -> Vec<(u64, RoundingMode, u32, usize)> {
+/// drives: the paper's trio, two bit widths, eight distinct images.
+fn mixed_cases(ds: &Dataset) -> Vec<(u64, SchemeId, u32, usize)> {
     (0..32)
         .map(|i| {
-            let mode = RoundingMode::ALL[i % 3];
+            let mode = SchemeId::PAPER[i % 3];
             let k = [2u32, 4][(i / 3) % 2];
             (i as u64 + 1, mode, k, i % ds.len())
         })
@@ -378,6 +405,15 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
         "{line2}"
     );
     assert_eq!(hello.get("max_inflight").unwrap().as_f64(), Some(32.0), "{line2}");
+    // Protocol v2: the handshake advertises the registered scheme zoo.
+    assert_eq!(hello.get("proto").unwrap().as_f64(), Some(2.0), "{line2}");
+    let advertised = hello.get("schemes").unwrap().as_arr().unwrap();
+    for mode in SchemeId::ALL {
+        assert!(
+            advertised.iter().any(|s| s.as_str() == Some(mode.wire_name())),
+            "hello must advertise {mode}: {line2}"
+        );
+    }
 
     for &(id, mode, k, row) in &cases {
         writeln!(
@@ -403,14 +439,14 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
         let reply = reasm.take(id).expect("exactly one reply per id");
         let resp = Json::parse(&reply).expect("pipelined response json");
         assert!(resp.get("error").is_none(), "{reply}");
-        assert_eq!(resp.get("scheme").unwrap().as_str(), Some(mode.name()), "{reply}");
+        assert_eq!(resp.get("scheme").unwrap().as_str(), Some(mode.wire_name()), "{reply}");
         assert_eq!(resp.get("k").unwrap().as_f64(), Some(f64::from(k)), "{reply}");
         let shard = resp.get("shard").unwrap().as_f64().unwrap();
         match shard_seen {
             None => shard_seen = Some(shard),
             Some(s) => assert_eq!(s, shard, "pipelined connection must stay on one shard"),
         }
-        if mode == RoundingMode::Deterministic {
+        if mode == SchemeId::Deterministic {
             // The acceptance bit-identity: deterministic rounding is
             // stateless per row, so lockstep and pipelined serving of the
             // same (model, k, pixels) must agree bit for bit no matter
@@ -463,7 +499,7 @@ fn pipelined_shutdown_mid_stream_drains_accepted_ids() {
         writeln!(
             writer,
             "{}",
-            format_request(id, "digits_linear", 4, RoundingMode::Dither, px)
+            format_request(id, "digits_linear", 4, SchemeId::Dither, px)
         )
         .unwrap();
     }
@@ -540,7 +576,7 @@ fn exceeding_inflight_window_is_overloaded_with_offending_id() {
         writeln!(
             writer,
             "{}",
-            format_request(id, "digits_linear", id as u32, RoundingMode::Dither, ds.images.row(0))
+            format_request(id, "digits_linear", id as u32, SchemeId::Dither, ds.images.row(0))
         )
         .unwrap();
     }
@@ -574,7 +610,7 @@ fn exceeding_inflight_window_is_overloaded_with_offending_id() {
     writeln!(
         writer,
         "{}",
-        format_request(3, "digits_linear", 3, RoundingMode::Dither, ds.images.row(0))
+        format_request(3, "digits_linear", 3, SchemeId::Dither, ds.images.row(0))
     )
     .unwrap();
     line.clear();

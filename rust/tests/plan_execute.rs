@@ -19,7 +19,7 @@
 
 use dither::linalg::{Matrix, Variant};
 use dither::nn::{quantized_forward, ActivationRanges, Mlp, PreparedModel, QuantInferenceConfig};
-use dither::rounding::RoundingMode;
+use dither::rounding::SchemeId;
 use dither::util::rng::Xoshiro256pp;
 use dither::util::stats::Welford;
 
@@ -52,7 +52,7 @@ fn prepared_deterministic_is_bit_identical_across_variants() {
         for bits in [1u32, 3, 6, 10] {
             let cfg = QuantInferenceConfig {
                 bits,
-                mode: RoundingMode::Deterministic,
+                mode: SchemeId::Deterministic,
                 variant,
                 seed: 99,
             };
@@ -61,7 +61,7 @@ fn prepared_deterministic_is_bit_identical_across_variants() {
                 let prepared = PreparedModel::prepare(
                     &mlp,
                     bits,
-                    RoundingMode::Deterministic,
+                    SchemeId::Deterministic,
                     variant,
                     prep_seed,
                 );
@@ -85,11 +85,11 @@ fn prepared_stochastic_is_bit_identical_given_call_seed() {
     // (the plan only hoists seed-independent tables).
     let (mlp, x, ranges) = toy(3, 2);
     for variant in Variant::ALL {
-        let prepared = PreparedModel::prepare(&mlp, 4, RoundingMode::Stochastic, variant, 77);
+        let prepared = PreparedModel::prepare(&mlp, 4, SchemeId::Stochastic, variant, 77);
         for trial in 0..50u64 {
             let cfg = QuantInferenceConfig {
                 bits: 4,
-                mode: RoundingMode::Stochastic,
+                mode: SchemeId::Stochastic,
                 variant,
                 seed: trial,
             };
@@ -108,11 +108,11 @@ fn prepared_dither_per_partial_placements_match_direct_bitwise() {
     // bit (same seeds, same batch-derived period).
     let (mlp, x, ranges) = toy(3, 6);
     for variant in [Variant::InputOnce, Variant::PerPartial] {
-        let prepared = PreparedModel::prepare(&mlp, 4, RoundingMode::Dither, variant, 55);
+        let prepared = PreparedModel::prepare(&mlp, 4, SchemeId::Dither, variant, 55);
         for trial in 0..20u64 {
             let cfg = QuantInferenceConfig {
                 bits: 4,
-                mode: RoundingMode::Dither,
+                mode: SchemeId::Dither,
                 variant,
                 seed: trial,
             };
@@ -153,14 +153,14 @@ fn prepared_dither_is_distribution_equivalent() {
     let (mlp, x, ranges) = toy(1, 3);
     let trials = 1200u64;
     let cells = 6 * 4;
-    let prepared = PreparedModel::prepare(&mlp, 10, RoundingMode::Dither, Variant::Separate, 21);
+    let prepared = PreparedModel::prepare(&mlp, 10, SchemeId::Dither, Variant::Separate, 21);
     let (mean_p, sd_p) = collect(trials, cells, |t| {
         prepared.forward(&mlp, &x, &ranges, 10_000 + t)
     });
     let (mean_d, sd_d) = collect(trials, cells, |t| {
         let cfg = QuantInferenceConfig {
             bits: 10,
-            mode: RoundingMode::Dither,
+            mode: SchemeId::Dither,
             variant: Variant::Separate,
             seed: 10_000 + t,
         };
@@ -196,7 +196,7 @@ fn prepared_stochastic_distribution_matches_over_trials() {
     let (mlp, x, ranges) = toy(1, 4);
     let trials = 1000u64;
     let cells = 6 * 4;
-    let mode = RoundingMode::Stochastic;
+    let mode = SchemeId::Stochastic;
     let prepared = PreparedModel::prepare(&mlp, 6, mode, Variant::Separate, 33);
     let (mean_p, sd_p) = collect(trials, cells, |t| {
         prepared.forward(&mlp, &x, &ranges, 44_000 + t)
@@ -219,12 +219,12 @@ fn prepared_stochastic_distribution_matches_over_trials() {
 #[test]
 fn prepared_forward_is_reproducible_per_seed() {
     let (mlp, x, ranges) = toy(3, 5);
-    for mode in RoundingMode::ALL {
+    for mode in SchemeId::PAPER {
         let prepared = PreparedModel::prepare(&mlp, 5, mode, Variant::Separate, 9);
         let a = prepared.forward(&mlp, &x, &ranges, 123);
         let b = prepared.forward(&mlp, &x, &ranges, 123);
         assert_eq!(a.data(), b.data(), "{mode:?}");
-        if mode != RoundingMode::Deterministic {
+        if mode != SchemeId::Deterministic {
             let c = prepared.forward(&mlp, &x, &ranges, 124);
             assert_ne!(a.data(), c.data(), "{mode:?} must vary with the seed");
         }

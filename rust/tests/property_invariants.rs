@@ -5,7 +5,7 @@ use dither::bitstream::{
     encode_x, encode_y, BitSeq, DitherEncoder, DitherParams, Op, Scheme,
 };
 use dither::linalg::{quant_matmul, Matrix, QuantMatmulConfig, Variant};
-use dither::rounding::{Quantizer, RoundingMode, ScalarRounder};
+use dither::rounding::{Quantizer, SchemeId, ScalarRounder};
 use dither::util::json::Json;
 use dither::util::propcheck::{check, check_with, Config, Gen, Pair, RangeUsize, UnitF64};
 use dither::util::rng::Xoshiro256pp;
@@ -97,7 +97,7 @@ fn prop_scalar_rounders_floor_or_ceil() {
         }
     }
     check(&Alpha, |&v| {
-        RoundingMode::ALL.iter().all(|&m| {
+        SchemeId::ALL.iter().all(|&m| {
             let mut r = ScalarRounder::new(m, 32, 5);
             let out = r.round(v);
             out == v.floor() as i64 || out == v.ceil() as i64
@@ -137,7 +137,7 @@ fn prop_quant_matmul_error_bounded_by_step_budget() {
             let step = 1.0 / ((1u32 << kbits) - 1).max(1) as f64;
             let budget = q as f64 * (2.0 * step + step * step) + 1e-9;
             Variant::ALL.iter().all(|&variant| {
-                RoundingMode::ALL.iter().all(|&mode| {
+                SchemeId::ALL.iter().all(|&mode| {
                     let cfg = QuantMatmulConfig::unit(kbits as u32, mode, variant, 1);
                     let c_hat = quant_matmul(&a, &b, &cfg);
                     c.sub(&c_hat).max_abs() <= budget
@@ -229,17 +229,21 @@ struct ReqCase {
     with_pixels: bool,
 }
 
-const SCHEME_SPELLINGS: [&str; 8] = [
+const SCHEME_SPELLINGS: [&str; 12] = [
     "dither",
     "stochastic",
     "deterministic",
     "det",
     "sr",
     "traditional",
+    "sr2",
+    "srvb",
+    "tpdf",
+    "gauss",
     "fuzzy",
     "",
 ];
-const VALID_SCHEMES: usize = 6;
+const VALID_SCHEMES: usize = 10;
 
 struct ReqGen;
 impl Gen for ReqGen {
@@ -329,7 +333,7 @@ fn prop_protocol_request_format_parse_roundtrip() {
                 id: rng.below(1 << 48),
                 model: rng.below(2) as usize,
                 k: 1 + rng.below(16) as u32,
-                mode: rng.below(3) as usize,
+                mode: rng.below(SchemeId::COUNT as u64) as usize,
                 seed: rng.below(u64::MAX),
             }
         }
@@ -345,14 +349,14 @@ fn prop_protocol_request_format_parse_roundtrip() {
             let mut rng = Xoshiro256pp::new(case.seed);
             let pixels: Vec<f64> = (0..784).map(|_| rng.uniform(0.0, 1.0)).collect();
             let model = ["digits_linear", "fashion_mlp"][case.model];
-            let mode = RoundingMode::ALL[case.mode];
+            let mode = SchemeId::ALL[case.mode];
             let line = format_request(case.id, model, case.k, mode, &pixels);
             match parse_message(&line) {
                 Ok(Message::Infer(r)) => {
                     r.id == case.id
                         && r.model == model
                         && r.k == case.k
-                        && r.mode == mode
+                        && r.scheme == mode
                         && !r.auto
                         && r.max_mse.is_none()
                         && r.pixels == pixels
@@ -465,7 +469,7 @@ fn prop_protocol_response_shapes_echo_their_id() {
             RespCase {
                 id: rng.below(1 << 48),
                 pred: rng.below(10) as u8,
-                mode: rng.below(3) as usize,
+                mode: rng.below(SchemeId::COUNT as u64) as usize,
                 k: 1 + rng.below(16) as u32,
                 latency: rng.below(1 << 30),
                 batch: 1 + rng.below(64) as usize,
@@ -476,7 +480,7 @@ fn prop_protocol_response_shapes_echo_their_id() {
         }
     }
     check(&RespGen, |c| {
-        let mode = RoundingMode::ALL[c.mode];
+        let mode = SchemeId::ALL[c.mode];
         let line = match c.kind {
             0 => {
                 let logits: Vec<f64> = (0..10).map(|j| c.id as f64 * 0.5 + j as f64).collect();
@@ -484,7 +488,7 @@ fn prop_protocol_response_shapes_echo_their_id() {
                     c.id, c.pred, mode, c.k, &logits, c.latency, c.batch, c.shard, c.auto,
                 )
             }
-            1 => format_error(c.id, "some \"quoted\" failure\nwith newline"),
+            1 => format_error(c.id, "some \"quoted\" failure\nwith newline", false),
             _ => format_overloaded(c.id),
         };
         let Ok(parsed) = Json::parse(&line) else {
@@ -496,7 +500,7 @@ fn prop_protocol_response_shapes_echo_their_id() {
         match c.kind {
             0 => {
                 parsed.get("pred").and_then(Json::as_f64) == Some(f64::from(c.pred))
-                    && parsed.get("scheme").and_then(Json::as_str) == Some(mode.name())
+                    && parsed.get("scheme").and_then(Json::as_str) == Some(mode.wire_name())
                     && parsed.get("k").and_then(Json::as_f64) == Some(f64::from(c.k))
                     && parsed.get("latency_us").and_then(Json::as_f64) == Some(c.latency as f64)
                     && parsed.get("batch").and_then(Json::as_f64) == Some(c.batch as f64)
@@ -506,13 +510,83 @@ fn prop_protocol_response_shapes_echo_their_id() {
             }
             1 => {
                 parsed.get("error").and_then(Json::as_str).is_some()
+                    && parsed.get("retryable").and_then(Json::as_bool) == Some(false)
                     && parsed.get("overloaded").is_none()
             }
             _ => {
                 parsed.get("overloaded").and_then(Json::as_bool) == Some(true)
                     && parsed.get("error").and_then(Json::as_str) == Some("overloaded")
+                    && parsed.get("retryable").and_then(Json::as_bool) == Some(true)
             }
         }
+    });
+}
+
+#[test]
+fn prop_scheme_names_roundtrip_through_stats_json() {
+    // Every registered scheme's wire name survives a stats emit → parse
+    // cycle: a fidelity cell keyed by the scheme's Display spelling
+    // parses back to the same SchemeId for any sample count — the
+    // contract the proxy's cross-node stats merge rests on.
+    use dither::coordinator::parse_stats;
+    check(
+        &Pair(
+            RangeUsize { lo: 0, hi: SchemeId::COUNT - 1 },
+            RangeUsize { lo: 1, hi: 4096 },
+        ),
+        |&(slot, samples)| {
+            let scheme = SchemeId::ALL[slot];
+            let line = format!(
+                "{{\"requests\":{samples},\"fidelity\":[{{\"model\":\"digits_linear\",\
+                 \"scheme\":\"{scheme}\",\"k\":4,\"samples\":{samples},\
+                 \"bias\":0.125,\"variance\":0.5}}]}}"
+            );
+            match parse_stats(&line) {
+                Ok(s) => {
+                    s.fidelity.len() == 1
+                        && s.fidelity[0].scheme == scheme
+                        && s.fidelity[0].k == 4
+                        && s.fidelity[0].estimate.samples == samples as u64
+                }
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_unknown_scheme_rejection_echoes_id_and_is_not_retryable() {
+    // The server answers an unknown-scheme request with the unified error
+    // shape: the request id echoed (line_id digs it out of the rejected
+    // line) and retryable:false — resending the same spelling can never
+    // succeed. Checked over arbitrary ids and invalid spellings,
+    // including near-misses of the zoo names.
+    use dither::coordinator::{format_error, line_id, parse_message, response_id};
+    struct BadScheme;
+    impl Gen for BadScheme {
+        type Item = (u64, String);
+        fn gen(&self, rng: &mut Xoshiro256pp) -> (u64, String) {
+            const BAD: [&str; 8] =
+                ["fuzzy", "sr3", "srvb2", "tpdf_", "gaus", "auto ", "DITHER", "sto chastic"];
+            let spelling = BAD[rng.below(BAD.len() as u64) as usize].to_string();
+            (rng.below(1 << 48), spelling)
+        }
+    }
+    check(&BadScheme, |(id, spelling)| {
+        let pixels = vec!["0.5"; 784].join(",");
+        let line =
+            format!("{{\"id\":{id},\"k\":4,\"scheme\":\"{spelling}\",\"pixels\":[{pixels}]}}");
+        let Err(e) = parse_message(&line) else {
+            return false; // an invalid spelling must never parse
+        };
+        // The reply the serve loop builds for an unparseable line:
+        let reply = format_error(line_id(&line), &e, false);
+        let Ok(parsed) = Json::parse(&reply) else {
+            return false;
+        };
+        response_id(&reply) == Ok(*id)
+            && parsed.get("retryable").and_then(Json::as_bool) == Some(false)
+            && parsed.get("error").and_then(Json::as_str).is_some()
     });
 }
 
@@ -536,7 +610,7 @@ fn prop_protocol_any_response_permutation_reassembles_by_id() {
                     0 => format_response(
                         id,
                         (i % 10) as u8,
-                        RoundingMode::ALL[i % 3],
+                        SchemeId::ALL[i % SchemeId::COUNT],
                         4,
                         &[0.0; 10],
                         i as u64 * 7 + 1,
@@ -544,7 +618,7 @@ fn prop_protocol_any_response_permutation_reassembles_by_id() {
                         0,
                         false,
                     ),
-                    1 => format_error(id, &format!("err-{i}")),
+                    1 => format_error(id, &format!("err-{i}"), i % 2 == 0),
                     _ => format_overloaded(id),
                 };
                 (id, line)

@@ -5,6 +5,7 @@
 //! Run: `cargo bench --bench bench_bitstream`
 
 use dither::bitstream::{average, multiply, represent, BitSeq, Scheme};
+use dither::kernels::{self, KernelId};
 use dither::util::benchmark::{black_box, Bench};
 use dither::util::rng::Xoshiro256pp;
 
@@ -46,6 +47,30 @@ fn main() {
     bench.bench_items(&format!("bitstream/raw_popcount/N={n}"), n as f64, || {
         black_box(a.count_ones())
     });
+
+    // Scalar vs wide kernel A/B on the word-level hot primitives, driven
+    // through `kernels::get` so both variants run regardless of the
+    // process-wide selection. `and_popcount` is the headline: the scalar
+    // kernel reproduces the pre-kernel-layer path (allocate the AND
+    // result, popcount it in a second pass) while the wide kernel fuses
+    // the two over unrolled word lanes.
+    let aw = a.words().to_vec();
+    let bw = b.words().to_vec();
+    let mut out = vec![0u64; aw.len()];
+    for id in KernelId::ALL {
+        let kern = kernels::get(id);
+        let kn = id.name();
+        bench.bench_items(&format!("kernel/{kn}/popcount/N={n}"), n as f64, || {
+            black_box(kern.popcount_words(&aw))
+        });
+        bench.bench_items(&format!("kernel/{kn}/and/N={n}"), n as f64, || {
+            kern.and_words(&aw, &bw, &mut out);
+            black_box(out[0])
+        });
+        bench.bench_items(&format!("kernel/{kn}/and_popcount/N={n}"), n as f64, || {
+            black_box(kern.and_popcount(&aw, &bw))
+        });
+    }
 
     bench
         .write_json("results/bench_bitstream.json")

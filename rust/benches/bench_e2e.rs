@@ -52,6 +52,39 @@ fn main() {
                 .expect("infer"),
         )
     });
+
+    // ---- kernel A/B on the engine batch path ---------------------------
+    // The same engine and request shape under each process-wide kernel.
+    // Deterministic replies are bit-identical across kernels (asserted
+    // below), so the throughput delta is the whole kernel-layer story.
+    let selected = dither::kernels::active_id();
+    let ab_pixels: Vec<&[f64]> = (0..32).map(|i| ds.images.row(i)).collect();
+    let mut kernel_logits: Vec<Vec<f64>> = Vec::new();
+    for id in dither::kernels::KernelId::ALL {
+        dither::kernels::select(id);
+        let name = format!(
+            "kernel/{}/e2e/digits_linear/k=4/deterministic/batch=32",
+            id.name()
+        );
+        bench.bench_items(&name, 32.0, || {
+            black_box(
+                engine
+                    .infer_batch("digits_linear", 4, SchemeId::Deterministic, &ab_pixels)
+                    .expect("infer"),
+            )
+        });
+        let outs = engine
+            .infer_batch("digits_linear", 4, SchemeId::Deterministic, &ab_pixels)
+            .expect("infer");
+        kernel_logits.push(outs.into_iter().flat_map(|o| o.logits).collect());
+    }
+    for logits in &kernel_logits[1..] {
+        assert_eq!(
+            logits, &kernel_logits[0],
+            "deterministic replies must be bit-identical across kernels"
+        );
+    }
+    dither::kernels::select(selected);
     drop(engine);
 
     // ---- plan cache: hit vs miss ---------------------------------------

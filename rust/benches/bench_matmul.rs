@@ -4,6 +4,7 @@
 //!
 //! Run: `cargo bench --bench bench_matmul`
 
+use dither::kernels::{self, KernelId};
 use dither::linalg::{quant_matmul, Matrix, QuantMatmulConfig, Variant};
 use dither::rounding::SchemeId;
 use dither::util::benchmark::{black_box, Bench};
@@ -32,6 +33,24 @@ fn main() {
             });
         }
     }
+
+    // Scalar vs wide kernel A/B: the same f64 matmul and one quantized
+    // configuration under each process-wide kernel selection. The outputs
+    // are bit-identical across kernels; only the throughput moves.
+    let selected = kernels::active_id();
+    for id in KernelId::ALL {
+        kernels::select(id);
+        let kn = id.name();
+        bench.bench_items(&format!("kernel/{kn}/matmul/{dim}^3"), flops, || {
+            black_box(a.matmul(&b))
+        });
+        bench.bench_items(&format!("kernel/{kn}/separate/dither/{dim}^3"), flops, || {
+            seed += 1;
+            let cfg = QuantMatmulConfig::unit(4, SchemeId::Dither, Variant::Separate, seed);
+            black_box(quant_matmul(&a, &b, &cfg))
+        });
+    }
+    kernels::select(selected);
 
     bench
         .write_json("results/bench_matmul.json")

@@ -50,9 +50,10 @@ impl DeterministicEncoder {
     }
 
     /// Deterministic alternating control sequence for scaled addition
-    /// (§IV-B): `W_i = 1` for even `i`.
+    /// (§IV-B): `W_i = 1` for even `i` — one 0x5555… word constant per 64
+    /// pulses instead of a per-bit build.
     pub fn control(&self, n: usize) -> BitSeq {
-        BitSeq::from_fn(n, |i| i % 2 == 0)
+        BitSeq::from_words(n, vec![0x5555_5555_5555_5555; n.div_ceil(64)])
     }
 }
 
@@ -138,5 +139,15 @@ mod tests {
         let c = enc.control(101);
         assert_eq!(c.count_ones(), 51); // ceil(101/2) even indices 0,2,..,100
         assert!(c.get(0) && !c.get(1) && c.get(2));
+    }
+
+    #[test]
+    fn control_word_constant_matches_per_bit_reference() {
+        // Golden pin for the word-constant rewrite: identical to the
+        // original `from_fn(n, |i| i % 2 == 0)` at every length class.
+        let enc = DeterministicEncoder;
+        for n in [0usize, 1, 2, 63, 64, 65, 100, 129] {
+            assert_eq!(enc.control(n), BitSeq::from_fn(n, |i| i % 2 == 0), "n={n}");
+        }
     }
 }

@@ -170,10 +170,16 @@ impl DitherEncoder {
     }
 
     /// Dither control sequence for scaled addition (§IV-C): the alternating
-    /// sequence `s_i = [i odd]` or its complement, each with probability ½.
+    /// sequence `s_i = [i odd]` or its complement, each with probability ½
+    /// — built from one alternating word constant per 64 pulses.
     pub fn control(&self, len: usize, rng: &mut Xoshiro256pp) -> BitSeq {
         let flip = rng.bernoulli(0.5);
-        BitSeq::from_fn(len, |i| (i % 2 == 1) ^ flip)
+        let word = if flip {
+            0x5555_5555_5555_5555 // bit i set when i even
+        } else {
+            0xAAAA_AAAA_AAAA_AAAA // bit i set when i odd
+        };
+        BitSeq::from_words(len, vec![word; len.div_ceil(64)])
     }
 }
 
@@ -378,6 +384,11 @@ pub fn spread_slots(m: usize, len: usize, rng: &mut Xoshiro256pp) -> Vec<usize> 
 }
 
 /// Fill positions `[lo, hi)` with iid Bernoulli(p) pulses.
+///
+/// Each 64-bit draw funds *two* trials — the low and high 32-bit halves
+/// are compared against a 32-bit threshold, the same batching the
+/// stochastic encoder uses — so the RNG is called once per two positions
+/// instead of once per bit. Index order `lo..hi` is preserved.
 fn fill_bernoulli(seq: &mut BitSeq, lo: usize, hi: usize, p: f64, rng: &mut Xoshiro256pp) {
     if p <= 0.0 {
         return;
@@ -388,11 +399,20 @@ fn fill_bernoulli(seq: &mut BitSeq, lo: usize, hi: usize, p: f64, rng: &mut Xosh
         }
         return;
     }
-    let threshold = (p * 18446744073709551616.0) as u64;
-    for i in lo..hi {
-        if rng.next_u64() < threshold {
+    let threshold = (p * 4294967296.0) as u32;
+    let mut i = lo;
+    while i + 1 < hi {
+        let r = rng.next_u64();
+        if (r as u32) < threshold {
             seq.set(i, true);
         }
+        if ((r >> 32) as u32) < threshold {
+            seq.set(i + 1, true);
+        }
+        i += 2;
+    }
+    if i < hi && (rng.next_u64() as u32) < threshold {
+        seq.set(i, true);
     }
 }
 
@@ -564,6 +584,64 @@ mod tests {
         }
         // Both phases occur (probability each ~ 1/2).
         assert!(phases[0] > 50 && phases[1] > 50, "{phases:?}");
+    }
+
+    #[test]
+    fn control_word_constant_matches_per_bit_reference() {
+        // Golden pin for the word-constant rewrite: identical to the
+        // original `from_fn(len, |i| (i % 2 == 1) ^ flip)` build at every
+        // length class, consuming the same single RNG draw.
+        let enc = DitherEncoder::prefix();
+        for n in [0usize, 1, 2, 63, 64, 65, 129] {
+            for seed in [17u64, 91, 4242] {
+                let mut fast_rng = Xoshiro256pp::new(seed);
+                let mut ref_rng = Xoshiro256pp::new(seed);
+                let fast = enc.control(n, &mut fast_rng);
+                let flip = ref_rng.bernoulli(0.5);
+                let slow = BitSeq::from_fn(n, |i| (i % 2 == 1) ^ flip);
+                assert_eq!(fast, slow, "n={n} seed={seed}");
+                assert_eq!(fast_rng.next_u64(), ref_rng.next_u64(), "seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_bernoulli_stays_in_range_and_handles_edges() {
+        let mut rng = Xoshiro256pp::new(20);
+        for (lo, hi) in [(0usize, 0usize), (3, 4), (0, 64), (5, 70), (7, 100)] {
+            let mut seq = BitSeq::zeros(128);
+            fill_bernoulli(&mut seq, lo, hi, 0.5, &mut rng);
+            for i in 0..128 {
+                if !(lo..hi).contains(&i) {
+                    assert!(!seq.get(i), "lo={lo} hi={hi} bit {i} leaked");
+                }
+            }
+        }
+        let mut all = BitSeq::zeros(70);
+        fill_bernoulli(&mut all, 3, 70, 1.0, &mut rng);
+        assert_eq!(all.count_ones(), 67);
+        let mut none = BitSeq::zeros(70);
+        fill_bernoulli(&mut none, 3, 70, 0.0, &mut rng);
+        assert_eq!(none.count_ones(), 0);
+    }
+
+    #[test]
+    fn fill_bernoulli_mean_matches_p() {
+        // The paired-draw rewrite (two 32-bit trials per u64) must keep the
+        // marginal inclusion probability at p.
+        let mut rng = Xoshiro256pp::new(21);
+        let (lo, hi, p) = (3usize, 1000usize, 0.25);
+        let trials = 400;
+        let mut total = 0u64;
+        for _ in 0..trials {
+            let mut seq = BitSeq::zeros(1024);
+            fill_bernoulli(&mut seq, lo, hi, p, &mut rng);
+            total += seq.count_ones();
+        }
+        let mean = total as f64 / trials as f64;
+        let expect = p * (hi - lo) as f64;
+        // Per-trial SD ≈ √(m·p·(1-p)) ≈ 13.7, SEM ≈ 0.69; allow ~6σ.
+        assert!((mean - expect).abs() < 4.0, "mean={mean} expect={expect}");
     }
 
     #[test]

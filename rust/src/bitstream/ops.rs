@@ -84,11 +84,17 @@ pub fn represent(scheme: Scheme, x: f64, n: usize, rng: &mut Xoshiro256pp) -> f6
     encode_x(scheme, x, n, rng).value()
 }
 
-/// One-trial estimate of `z = x·y` via bitwise AND (§III).
+/// One-trial estimate of `z = x·y` via bitwise AND (§III). The AND and
+/// the popcount run as one fused kernel pass ([`BitSeq::and_count`]) —
+/// the product sequence is never materialized.
 pub fn multiply(scheme: Scheme, x: f64, y: f64, n: usize, rng: &mut Xoshiro256pp) -> f64 {
     let xs = encode_x(scheme, x, n, rng);
     let ys = encode_y(scheme, y, n, rng);
-    xs.and(&ys).value()
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.and_count(&ys) as f64 / xs.len() as f64
+    }
 }
 
 /// The scheme's control sequence `W` for scaled addition (§IV).

@@ -36,20 +36,51 @@ impl BitSeq {
         s
     }
 
-    /// Build from a predicate over bit index.
+    /// Build from a predicate over bit index. Bits accumulate into a local
+    /// word that is stored once per 64 positions (one memory write per
+    /// word instead of a read-modify-write per bit).
     pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> bool) -> Self {
-        let mut s = Self::zeros(len);
-        for i in 0..len {
-            if f(i) {
-                s.set(i, true);
+        let mut words = Vec::with_capacity(len.div_ceil(64));
+        let mut i = 0;
+        while i < len {
+            let take = (len - i).min(64);
+            let mut w = 0u64;
+            for b in 0..take {
+                w |= u64::from(f(i + b)) << b;
             }
+            words.push(w);
+            i += take;
         }
-        s
+        Self { words, len }
     }
 
-    /// Build from a bool slice.
+    /// Build from a bool slice, one word at a time.
     pub fn from_bools(bits: &[bool]) -> Self {
-        Self::from_fn(bits.len(), |i| bits[i])
+        let words = bits
+            .chunks(64)
+            .map(|chunk| {
+                let mut w = 0u64;
+                for (b, &bit) in chunk.iter().enumerate() {
+                    w |= u64::from(bit) << b;
+                }
+                w
+            })
+            .collect();
+        Self {
+            words,
+            len: bits.len(),
+        }
+    }
+
+    /// Word-at-a-time construction: takes ownership of pre-filled backing
+    /// words (bit `i` at word `i / 64`, bit `i % 64`) and masks the tail
+    /// to restore the invariant. `words.len()` must be exactly
+    /// `len.div_ceil(64)`.
+    pub fn from_words(len: usize, words: Vec<u64>) -> Self {
+        assert_eq!(words.len(), len.div_ceil(64), "word count must match len");
+        let mut s = Self { words, len };
+        s.mask_tail();
+        s
     }
 
     /// Sequence length `N`.
@@ -84,10 +115,11 @@ impl BitSeq {
         }
     }
 
-    /// Number of 1-pulses, word-parallel popcount.
+    /// Number of 1-pulses — a word-parallel popcount reduction routed
+    /// through the active kernel.
     #[inline]
     pub fn count_ones(&self) -> u64 {
-        self.words.iter().map(|w| w.count_ones() as u64).sum()
+        crate::kernels::active().popcount_words(&self.words)
     }
 
     /// The value estimate `X_s = count_ones / N` (§II).
@@ -103,16 +135,20 @@ impl BitSeq {
     /// Bitwise AND — the stochastic-computing multiplier (§III).
     pub fn and(&self, other: &BitSeq) -> BitSeq {
         assert_eq!(self.len, other.len, "sequence lengths must match");
-        let words = self
-            .words
-            .iter()
-            .zip(&other.words)
-            .map(|(a, b)| a & b)
-            .collect();
+        let mut words = vec![0u64; self.words.len()];
+        crate::kernels::active().and_words(&self.words, &other.words, &mut words);
         BitSeq {
             words,
             len: self.len,
         }
+    }
+
+    /// `popcount(self & other)` — the §III AND-multiply count without
+    /// materializing the intermediate sequence. Routed through the active
+    /// kernel's fused pass (the wide variant's headline win).
+    pub fn and_count(&self, other: &BitSeq) -> u64 {
+        assert_eq!(self.len, other.len, "sequence lengths must match");
+        crate::kernels::active().and_popcount(&self.words, &other.words)
     }
 
     /// MUX select — the scaled-addition operator (§IV):
@@ -121,12 +157,8 @@ impl BitSeq {
     pub fn mux(control: &BitSeq, x: &BitSeq, y: &BitSeq) -> BitSeq {
         assert_eq!(control.len, x.len, "sequence lengths must match");
         assert_eq!(control.len, y.len, "sequence lengths must match");
-        let words = control
-            .words
-            .iter()
-            .zip(x.words.iter().zip(&y.words))
-            .map(|(w, (a, b))| (w & a) | (!w & b))
-            .collect();
+        let mut words = vec![0u64; control.words.len()];
+        crate::kernels::active().mux_words(&control.words, &x.words, &y.words, &mut words);
         let mut s = BitSeq {
             words,
             len: control.len,
@@ -204,6 +236,53 @@ mod tests {
         let s = BitSeq::from_fn(200, |i| i % 3 == 0);
         for i in 0..200 {
             assert_eq!(s.get(i), i % 3 == 0);
+        }
+    }
+
+    #[test]
+    fn from_fn_matches_bit_by_bit_construction() {
+        // Golden pin for the word-at-a-time rewrite: for assorted lengths
+        // (including ragged tails) the word-accumulating path must equal
+        // the original set()-per-bit construction exactly.
+        for n in [0usize, 1, 7, 63, 64, 65, 127, 128, 200, 1000] {
+            let f = |i: usize| (i * i + 3 * i) % 5 < 2;
+            let fast = BitSeq::from_fn(n, f);
+            let mut slow = BitSeq::zeros(n);
+            for i in 0..n {
+                if f(i) {
+                    slow.set(i, true);
+                }
+            }
+            assert_eq!(fast, slow, "n={n}");
+            assert_eq!(fast.words().len(), n.div_ceil(64), "n={n}");
+        }
+    }
+
+    #[test]
+    fn from_bools_and_from_words_roundtrip() {
+        let bits: Vec<bool> = (0..130).map(|i| i % 7 == 0).collect();
+        let a = BitSeq::from_bools(&bits);
+        let b = BitSeq::from_fn(130, |i| bits[i]);
+        assert_eq!(a, b);
+        let c = BitSeq::from_words(130, a.words().to_vec());
+        assert_eq!(c, a);
+        // from_words masks an over-filled tail back to the invariant.
+        let d = BitSeq::from_words(70, vec![u64::MAX, u64::MAX]);
+        assert_eq!(d.count_ones(), 70);
+    }
+
+    #[test]
+    #[should_panic(expected = "word count")]
+    fn from_words_wrong_word_count_panics() {
+        let _ = BitSeq::from_words(65, vec![0]);
+    }
+
+    #[test]
+    fn and_count_matches_and_then_count() {
+        for n in [0usize, 1, 64, 65, 150, 1000] {
+            let a = BitSeq::from_fn(n, |i| i % 2 == 0);
+            let b = BitSeq::from_fn(n, |i| i % 3 == 0);
+            assert_eq!(a.and_count(&b), a.and(&b).count_ones(), "n={n}");
         }
     }
 

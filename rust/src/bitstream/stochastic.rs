@@ -134,6 +134,38 @@ mod tests {
     }
 
     #[test]
+    fn encode_matches_paired_draw_reference() {
+        // Golden pin for the word-filling path: bit pairs (2k, 2k+1) consume
+        // one u64 draw each — low half → even bit, high half → odd bit — and
+        // pairs never straddle a word (64 bits = 32 pairs), so a sequential
+        // bit-by-bit reference with the same draw discipline must agree
+        // exactly at every length class.
+        let enc = StochasticEncoder;
+        for n in [0usize, 1, 2, 63, 64, 65, 127, 128, 200] {
+            for seed in [6u64, 77] {
+                let x = 0.37;
+                let threshold = (x * 4294967296.0) as u32;
+                let mut rng = Xoshiro256pp::new(seed);
+                let fast = enc.encode(x, n, &mut rng);
+                let mut ref_rng = Xoshiro256pp::new(seed);
+                let mut slow = BitSeq::zeros(n);
+                let mut i = 0;
+                while i < n {
+                    let r = ref_rng.next_u64();
+                    if (r as u32) < threshold {
+                        slow.set(i, true);
+                    }
+                    if i + 1 < n && ((r >> 32) as u32) < threshold {
+                        slow.set(i + 1, true);
+                    }
+                    i += 2;
+                }
+                assert_eq!(fast, slow, "n={n} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
     fn non_multiple_of_64_lengths() {
         let enc = StochasticEncoder;
         let mut rng = Xoshiro256pp::new(5);

@@ -27,8 +27,12 @@
 //!
 //! `{"cmd":"stats"}` scrapes every healthy backend and merges: counters
 //! are summed, `per_shard_requests` concatenated in backend order,
-//! latency percentiles take the per-backend maximum (a sound upper
-//! bound — histograms are not emitted on the wire), and the `fidelity`
+//! the raw log2 latency histograms (`latency_buckets`, per-scheme
+//! `recent` buckets) are summed bucket-wise and the cluster-wide
+//! p50/p95/p99 are recomputed from the merged histogram — true cluster
+//! percentiles, not per-backend maxima. A backend of an older build that
+//! omits histograms still contributes its own percentiles as a
+//! per-backend-max upper bound. The `fidelity`
 //! blocks merge per `(model, scheme, k)` with the exact parallel-Welford
 //! reduction the backends use shard-to-shard — the cluster-wide
 //! estimator view. Proxy-tier counters ride in a `proxy` sub-object.
@@ -37,6 +41,7 @@
 use crate::cluster::backend::{Backend, ForwardError};
 use crate::cluster::health::{health_loop, HealthPolicy};
 use crate::cluster::ring::{HashRing, DEFAULT_REPLICAS};
+use crate::coordinator::metrics::{percentile_from_buckets, BUCKETS};
 use crate::coordinator::protocol::{
     format_error, format_hello, format_overloaded, line_id, FidelityCell, StatsSummary,
 };
@@ -316,6 +321,7 @@ fn client_read_loop(
                     tx.send(format_hello(
                         cluster.backends.iter().map(|b| b.cap()).sum::<usize>().max(1),
                         &names,
+                        crate::kernels::active_id().name(),
                     ))
                 }
                 Some("stats") => tx.send(merged_stats_json(cluster)),
@@ -447,6 +453,12 @@ fn merged_stats_json(cluster: &Cluster) -> String {
     let mut total = StatsSummary::default();
     let mut per_shard: Vec<f64> = Vec::new();
     let mut cells: BTreeMap<(String, String, u32), FidelityCell> = BTreeMap::new();
+    // Bucket-wise histogram sum across backends; legacy backends that
+    // omit histograms contribute their own percentiles as an upper bound.
+    let mut bucket_sum = vec![0u64; BUCKETS];
+    let mut any_buckets = false;
+    let mut legacy = (0.0f64, 0.0f64, 0.0f64); // (p50, p95, p99) maxima
+    let mut recent: BTreeMap<String, (u64, Vec<u64>)> = BTreeMap::new();
     for s in &summaries {
         total.requests += s.requests;
         total.errors += s.errors;
@@ -456,9 +468,31 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         total.batches += s.batches;
         total.batched_requests += s.batched_requests;
         total.latency_sum_us += s.latency_sum_us;
-        total.p50_us = total.p50_us.max(s.p50_us);
-        total.p95_us = total.p95_us.max(s.p95_us);
-        total.p99_us = total.p99_us.max(s.p99_us);
+        if s.latency_buckets.is_empty() {
+            legacy.0 = legacy.0.max(s.p50_us);
+            legacy.1 = legacy.1.max(s.p95_us);
+            legacy.2 = legacy.2.max(s.p99_us);
+        } else {
+            any_buckets = true;
+            if s.latency_buckets.len() > bucket_sum.len() {
+                bucket_sum.resize(s.latency_buckets.len(), 0);
+            }
+            for (i, &b) in s.latency_buckets.iter().enumerate() {
+                bucket_sum[i] += b;
+            }
+        }
+        for cell in &s.recent {
+            let slot = recent
+                .entry(cell.scheme.clone())
+                .or_insert_with(|| (0, vec![0u64; BUCKETS]));
+            slot.0 += cell.requests;
+            if cell.buckets.len() > slot.1.len() {
+                slot.1.resize(cell.buckets.len(), 0);
+            }
+            for (i, &b) in cell.buckets.iter().enumerate() {
+                slot.1[i] += b;
+            }
+        }
         total.uptime_s = total.uptime_s.max(s.uptime_s);
         total.shards += s.shards;
         total.writer_flushes += s.writer_flushes;
@@ -471,6 +505,17 @@ fn merged_stats_json(cluster: &Cluster) -> String {
                 .and_modify(|have| have.estimate.merge(&cell.estimate))
                 .or_insert_with(|| cell.clone());
         }
+    }
+    // True cluster percentiles from the merged histogram; any legacy
+    // (bucket-less) backend's own percentiles keep the result an upper
+    // bound for its share of the traffic.
+    total.p50_us = legacy.0;
+    total.p95_us = legacy.1;
+    total.p99_us = legacy.2;
+    if any_buckets {
+        total.p50_us = total.p50_us.max(percentile_from_buckets(&bucket_sum, 0.50));
+        total.p95_us = total.p95_us.max(percentile_from_buckets(&bucket_sum, 0.95));
+        total.p99_us = total.p99_us.max(percentile_from_buckets(&bucket_sum, 0.99));
     }
     let mean_batch = if total.batches == 0 {
         0.0
@@ -502,6 +547,37 @@ fn merged_stats_json(cluster: &Cluster) -> String {
             ])
         })
         .collect();
+    // The cluster-wide kernel label: the backends' when they agree,
+    // "mixed" when they differ, the proxy's own build when none reported.
+    let mut kernel: Option<String> = None;
+    for s in &summaries {
+        if let Some(k) = &s.kernel {
+            kernel = Some(match kernel {
+                None => k.clone(),
+                Some(have) if have == *k => have,
+                Some(_) => "mixed".to_string(),
+            });
+        }
+    }
+    let kernel =
+        kernel.unwrap_or_else(|| crate::kernels::active_id().name().to_string());
+    let recent_json: BTreeMap<String, Json> = recent
+        .iter()
+        .map(|(scheme, (requests, buckets))| {
+            (
+                scheme.clone(),
+                Json::obj(vec![
+                    ("requests", Json::Num(*requests as f64)),
+                    ("p50_us", Json::Num(percentile_from_buckets(buckets, 0.50))),
+                    ("p99_us", Json::Num(percentile_from_buckets(buckets, 0.99))),
+                    (
+                        "buckets",
+                        Json::Arr(buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+                    ),
+                ]),
+            )
+        })
+        .collect();
     let forwarded: Vec<f64> = cluster.backends.iter().map(|b| b.forwarded() as f64).collect();
     let inflight: Vec<f64> = cluster.backends.iter().map(|b| b.inflight() as f64).collect();
     let reconnects: Vec<f64> = cluster.backends.iter().map(|b| b.reconnects() as f64).collect();
@@ -527,6 +603,7 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         ),
     ]);
     Json::obj(vec![
+        ("kernel", Json::Str(kernel)),
         ("requests", Json::Num(total.requests as f64)),
         ("errors", Json::Num(total.errors as f64)),
         ("rejected", Json::Num(total.rejected as f64)),
@@ -538,6 +615,11 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         ("p50_us", Json::Num(total.p50_us)),
         ("p95_us", Json::Num(total.p95_us)),
         ("p99_us", Json::Num(total.p99_us)),
+        (
+            "latency_buckets",
+            Json::Arr(bucket_sum.iter().map(|&b| Json::Num(b as f64)).collect()),
+        ),
+        ("recent", Json::Obj(recent_json)),
         ("writer_flushes", Json::Num(total.writer_flushes as f64)),
         ("writer_flushed_lines", Json::Num(total.writer_flushed_lines as f64)),
         ("fidelity", Json::Arr(fidelity)),

@@ -31,8 +31,9 @@ use std::time::Instant;
 
 /// Number of log₂ latency buckets: bucket `i` holds latencies in
 /// `[2^(i-1), 2^i)` µs (bucket 0 is exactly 0 µs). 2^38 µs ≈ 3 days, far
-/// beyond any request timeout.
-const BUCKETS: usize = 40;
+/// beyond any request timeout. Public because the raw bucket counts go over
+/// the wire in `stats` replies, where the cluster proxy re-merges them.
+pub const BUCKETS: usize = 40;
 
 /// Width of one rotating latency window.
 const WINDOW_SECS: u64 = 10;
@@ -255,16 +256,18 @@ fn bucket_index(latency_us: u64) -> usize {
 }
 
 /// Upper edge (µs) of a bucket, used as the percentile estimate.
-fn bucket_upper(index: usize) -> u64 {
+pub fn bucket_upper(index: usize) -> u64 {
     if index == 0 {
         0
     } else {
-        (1u64 << index) - 1
+        (1u64 << index.min(BUCKETS - 1)) - 1
     }
 }
 
-/// Percentile estimate from a merged histogram (upper bucket edge).
-fn percentile_from_buckets(buckets: &[u64; BUCKETS], p: f64) -> f64 {
+/// Percentile estimate from a log₂ histogram (upper bucket edge). Takes any
+/// bucket slice so wire-parsed histograms (whose length is whatever the
+/// backend sent) merge without fixed-size conversion.
+pub fn percentile_from_buckets(buckets: &[u64], p: f64) -> f64 {
     let total: u64 = buckets.iter().sum();
     if total == 0 {
         return 0.0;
@@ -278,6 +281,11 @@ fn percentile_from_buckets(buckets: &[u64; BUCKETS], p: f64) -> f64 {
         }
     }
     bucket_upper(BUCKETS - 1) as f64
+}
+
+/// Bucket counts as a JSON array of numbers.
+fn buckets_json(buckets: &[u64]) -> Json {
+    Json::Arr(buckets.iter().map(|&b| Json::Num(b as f64)).collect())
 }
 
 struct Merged {
@@ -417,11 +425,15 @@ impl Metrics {
                         ("requests", Json::Num(*count as f64)),
                         ("p50_us", Json::Num(percentile_from_buckets(buckets, 0.50))),
                         ("p99_us", Json::Num(percentile_from_buckets(buckets, 0.99))),
+                        // Raw window buckets: the cluster proxy sums these
+                        // across backends for true cluster percentiles.
+                        ("buckets", buckets_json(buckets)),
                     ]),
                 )
             })
             .collect();
         Json::obj(vec![
+            ("kernel", Json::Str(crate::kernels::active_id().name().to_string())),
             ("requests", Json::Num(m.requests as f64)),
             ("errors", Json::Num(m.errors as f64)),
             ("rejected", Json::Num(m.rejected as f64)),
@@ -435,6 +447,8 @@ impl Metrics {
             ("p50_us", Json::Num(m.percentile_us(0.50))),
             ("p95_us", Json::Num(m.percentile_us(0.95))),
             ("p99_us", Json::Num(m.percentile_us(0.99))),
+            // Raw lifetime log₂ buckets (bucket i = [2^(i-1), 2^i) µs).
+            ("latency_buckets", buckets_json(&m.buckets)),
             ("recent_window_s", Json::Num((WINDOW_SECS * WINDOW_SLOTS as u64) as f64)),
             ("recent", Json::obj(recent)),
             ("fidelity", Json::Arr(fidelity)),
@@ -511,6 +525,31 @@ mod tests {
         let sto = recent.get("stochastic").expect("stochastic entry");
         assert_eq!(sto.get("requests").unwrap().as_f64(), Some(0.0));
         assert_eq!(sto.get("p99_us").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn snapshot_carries_kernel_and_raw_buckets() {
+        let m = Metrics::new(2);
+        for i in 0..30u64 {
+            m.shard((i % 2) as usize).record_request(SchemeId::Dither, i * 50);
+        }
+        let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
+        let kernel = json.get("kernel").unwrap().as_str().unwrap();
+        assert_eq!(kernel, crate::kernels::active_id().name());
+        let buckets = json.get("latency_buckets").unwrap().as_f64_vec().unwrap();
+        assert_eq!(buckets.len(), BUCKETS);
+        assert_eq!(buckets.iter().sum::<f64>(), 30.0, "bucket mass == requests");
+        // Recomputing the percentile from the wire buckets reproduces the
+        // reported one — the proxy-side merge depends on this round trip.
+        let wire: Vec<u64> = buckets.iter().map(|&b| b as u64).collect();
+        assert_eq!(
+            json.get("p99_us").unwrap().as_f64().unwrap(),
+            percentile_from_buckets(&wire, 0.99)
+        );
+        let dither = json.get("recent").unwrap().get("dither").expect("dither entry");
+        let recent_buckets = dither.get("buckets").unwrap().as_f64_vec().unwrap();
+        assert_eq!(recent_buckets.len(), BUCKETS);
+        assert_eq!(recent_buckets.iter().sum::<f64>(), 30.0);
     }
 
     #[test]

@@ -22,11 +22,11 @@ pub mod shard;
 
 pub use batcher::{Batcher, Pending, ReplyDeadline, ReplyTo, ReplyWatchdog, SubmitError};
 pub use engine::{Engine, InferenceOutput};
-pub use metrics::{Metrics, ShardMetrics};
+pub use metrics::{bucket_upper, percentile_from_buckets, Metrics, ShardMetrics, BUCKETS};
 pub use protocol::{
     format_error, format_hello, format_overloaded, format_request, format_request_auto,
     format_response, line_id, parse_message, parse_stats, response_id, FidelityCell,
-    InferenceRequest, Message, Reassembler, StatsSummary,
+    InferenceRequest, Message, Reassembler, RecentCell, StatsSummary,
 };
 pub use server::{ping, serve, wait_ready, ServerConfig, WRITER_CONTROL_SLACK};
 pub use shard::{ShardConfig, ShardPool};

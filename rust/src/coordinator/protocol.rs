@@ -253,12 +253,13 @@ pub fn format_overloaded(id: u64) -> String {
 
 /// Handshake response (protocol v2): advertises the pipelined protocol,
 /// the server's per-connection in-flight window (requests beyond it are
-/// answered `overloaded` immediately), and the rounding schemes this
+/// answered `overloaded` immediately), the rounding schemes this
 /// endpoint serves — the server passes the registry's list, the cluster
-/// proxy the intersection across its healthy backends. The wire format of
-/// every other message is unchanged, so clients that never send `hello`
-/// keep working in lockstep.
-pub fn format_hello(max_inflight: usize, schemes: &[&str]) -> String {
+/// proxy the intersection across its healthy backends — and the compute
+/// kernel the process selected at startup (`"kernel":"scalar"|"wide"`).
+/// The wire format of every other message is unchanged, so clients that
+/// never send `hello` keep working in lockstep.
+pub fn format_hello(max_inflight: usize, schemes: &[&str], kernel: &str) -> String {
     Json::obj(vec![
         ("hello", Json::Bool(true)),
         ("proto", Json::Num(2.0)),
@@ -271,6 +272,7 @@ pub fn format_hello(max_inflight: usize, schemes: &[&str]) -> String {
             "schemes",
             Json::Arr(schemes.iter().map(|s| Json::Str((*s).to_string())).collect()),
         ),
+        ("kernel", Json::Str(kernel.to_string())),
     ])
     .to_string()
 }
@@ -285,6 +287,9 @@ pub struct HelloInfo {
     /// Rounding schemes the endpoint serves. A v1 server advertises no
     /// list; it serves exactly the paper's trio, so that is the default.
     pub schemes: Vec<String>,
+    /// Compute kernel the endpoint selected at startup (`None` when the
+    /// server predates the field).
+    pub kernel: Option<String>,
 }
 
 /// Parse a `hello` reply line into a [`HelloInfo`].
@@ -309,10 +314,15 @@ pub fn parse_hello(line: &str) -> Result<HelloInfo, String> {
             .collect(),
         None => SchemeId::PAPER.iter().map(|s| s.to_string()).collect(),
     };
+    let kernel = json
+        .get("kernel")
+        .and_then(Json::as_str)
+        .map(str::to_string);
     Ok(HelloInfo {
         proto,
         max_inflight,
         schemes,
+        kernel,
     })
 }
 
@@ -401,6 +411,19 @@ pub struct FidelityCell {
     pub estimate: FidelityEstimate,
 }
 
+/// One per-scheme `stats.recent` cell as seen on the wire: the request
+/// count plus the raw log₂ window buckets a merging consumer sums across
+/// backends (empty for servers that predate bucket emission).
+#[derive(Clone, Debug, Default)]
+pub struct RecentCell {
+    /// Scheme wire name the cell belongs to.
+    pub scheme: String,
+    /// Requests in the recent window.
+    pub requests: u64,
+    /// Raw log₂ latency buckets for the window.
+    pub buckets: Vec<u64>,
+}
+
 /// Client-side parse of a `stats` reply: the counters and fidelity cells a
 /// merging consumer (the cluster proxy's cluster-wide scrape, the load
 /// generator's sum checks) needs. Counter fields absent from older
@@ -440,8 +463,23 @@ pub struct StatsSummary {
     pub writer_flushes: u64,
     /// Reply lines delivered across those flushes.
     pub writer_flushed_lines: u64,
+    /// Compute kernel the server reported (`None` for older servers).
+    pub kernel: Option<String>,
+    /// Raw lifetime log₂ latency buckets (empty for older servers). When
+    /// present, these — not the backend's point percentiles — are what a
+    /// cluster merge should sum.
+    pub latency_buckets: Vec<u64>,
+    /// Per-scheme recent-window cells with raw buckets.
+    pub recent: Vec<RecentCell>,
     /// Observed `(model, scheme, k)` fidelity cells.
     pub fidelity: Vec<FidelityCell>,
+}
+
+/// Parse a JSON number array into bucket counts (absent/odd values → 0).
+fn parse_buckets(json: Option<&Json>) -> Vec<u64> {
+    json.and_then(Json::as_f64_vec)
+        .map(|v| v.iter().map(|&b| b.max(0.0).round() as u64).collect())
+        .unwrap_or_default()
 }
 
 /// Parse a `stats` reply line into a [`StatsSummary`].
@@ -451,6 +489,21 @@ pub fn parse_stats(line: &str) -> Result<StatsSummary, String> {
     let count = |key: &str| num(key).max(0.0).round() as u64;
     let requests = count("requests");
     let batches = count("batches");
+    let mut recent = Vec::new();
+    if let Some(Json::Obj(map)) = json.get("recent") {
+        for (scheme, cell) in map {
+            recent.push(RecentCell {
+                scheme: scheme.clone(),
+                requests: cell
+                    .get("requests")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0)
+                    .max(0.0)
+                    .round() as u64,
+                buckets: parse_buckets(cell.get("buckets")),
+            });
+        }
+    }
     let mut fidelity = Vec::new();
     if let Some(cells) = json.get("fidelity").and_then(Json::as_arr) {
         for cell in cells {
@@ -508,6 +561,12 @@ pub fn parse_stats(line: &str) -> Result<StatsSummary, String> {
             .unwrap_or_default(),
         writer_flushes: count("writer_flushes"),
         writer_flushed_lines: count("writer_flushed_lines"),
+        kernel: json
+            .get("kernel")
+            .and_then(Json::as_str)
+            .map(str::to_string),
+        latency_buckets: parse_buckets(json.get("latency_buckets")),
+        recent,
         fidelity,
     })
 }
@@ -726,11 +785,12 @@ mod tests {
             Ok(Message::Hello)
         ));
         let zoo = crate::rounding::SchemeRegistry::global().wire_names();
-        let line = format_hello(32, &zoo);
+        let line = format_hello(32, &zoo, "wide");
         let json = Json::parse(&line).unwrap();
         assert_eq!(json.get("hello").unwrap().as_bool(), Some(true));
         assert_eq!(json.get("proto").unwrap().as_f64(), Some(2.0));
         assert_eq!(json.get("max_inflight").unwrap().as_f64(), Some(32.0));
+        assert_eq!(json.get("kernel").unwrap().as_str(), Some("wide"));
         let features = json.get("features").unwrap().as_arr().unwrap();
         assert!(features
             .iter()
@@ -739,10 +799,13 @@ mod tests {
         assert_eq!(info.proto, 2);
         assert_eq!(info.max_inflight, 32);
         assert_eq!(info.schemes, zoo, "hello advertises the full registry");
-        // A v1 hello (no proto / schemes) defaults to the paper's trio.
+        assert_eq!(info.kernel.as_deref(), Some("wide"));
+        // A v1 hello (no proto / schemes / kernel) defaults to the paper's
+        // trio and an unknown kernel.
         let legacy = parse_hello("{\"hello\":true,\"max_inflight\":8}").unwrap();
         assert_eq!(legacy.proto, 1);
         assert_eq!(legacy.schemes, vec!["deterministic", "dither", "stochastic"]);
+        assert_eq!(legacy.kernel, None);
         assert!(parse_hello("{\"pong\":true}").is_err());
     }
 
@@ -801,6 +864,9 @@ mod tests {
         assert_eq!(s.shards, 2);
         assert_eq!(s.per_shard_requests, vec![60.0, 40.0]);
         assert_eq!(s.writer_flushes, 0, "absent counters parse as zero");
+        assert_eq!(s.kernel, None, "older servers report no kernel");
+        assert!(s.latency_buckets.is_empty(), "no buckets on the wire");
+        assert!(s.recent.is_empty());
         let cell = &s.fidelity[0];
         assert_eq!(cell.model, "digits_linear");
         assert_eq!(cell.scheme, SchemeId::Dither);
@@ -820,6 +886,25 @@ mod tests {
             parse_stats("{\"fidelity\":[{\"scheme\":\"dither\",\"k\":4}]}").is_err(),
             "fidelity cell without a model is rejected"
         );
+    }
+
+    #[test]
+    fn parse_stats_recovers_kernel_and_histograms() {
+        let line = "{\"requests\":7,\"kernel\":\"wide\",\
+                    \"latency_buckets\":[0,3,4,0],\
+                    \"recent\":{\"dither\":{\"requests\":5,\"p50_us\":3,\
+                    \"p99_us\":7,\"buckets\":[0,2,3]},\
+                    \"stochastic\":{\"requests\":0,\"buckets\":[0,0,0]}}}";
+        let s = parse_stats(line).unwrap();
+        assert_eq!(s.kernel.as_deref(), Some("wide"));
+        assert_eq!(s.latency_buckets, vec![0, 3, 4, 0]);
+        assert_eq!(s.recent.len(), 2);
+        let dither = s.recent.iter().find(|c| c.scheme == "dither").unwrap();
+        assert_eq!(dither.requests, 5);
+        assert_eq!(dither.buckets, vec![0, 2, 3]);
+        // The wire buckets reproduce percentiles on the consumer side.
+        let p99 = crate::coordinator::metrics::percentile_from_buckets(&s.latency_buckets, 0.99);
+        assert_eq!(p99, crate::coordinator::metrics::bucket_upper(2) as f64);
     }
 
     #[test]

@@ -177,11 +177,12 @@ pub fn serve(cfg: &ServerConfig) -> Result<()> {
     }
     let pool = Arc::new(ShardPool::start(&shard_cfg, zoo, &metrics));
     println!(
-        "dither-serve listening on {} ({} shards, max_batch={}, queue_cap={})",
+        "dither-serve listening on {} ({} shards, max_batch={}, queue_cap={}, kernel={})",
         cfg.addr,
         pool.num_shards(),
         cfg.max_batch,
-        cfg.queue_cap
+        cfg.queue_cap,
+        crate::kernels::active_id().name()
     );
 
     let mut conns = WorkerPool::new();
@@ -433,6 +434,7 @@ fn read_loop(
             Ok(Message::Hello) => tx.send(format_hello(
                 max_inflight,
                 &crate::rounding::SchemeRegistry::global().wire_names(),
+                crate::kernels::active_id().name(),
             )),
             Ok(Message::Stats) => tx.send(metrics.snapshot_json()),
             Ok(Message::Shutdown) => {

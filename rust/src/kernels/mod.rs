@@ -1,0 +1,267 @@
+//! Word/lane-parallel kernel layer with runtime dispatch.
+//!
+//! Every hot inner loop in the crate — the §III bitstream AND-multiply, the
+//! §IV MUX scaled-add, popcount reductions over `u64` word slices, the
+//! blocked f64 matmul microkernel, and per-row scheme rounding — is routed
+//! through the [`Kernels`] trait so scalar and lane-parallel implementations
+//! are interchangeable and A/B-able in the benches. Two variants are
+//! registered:
+//!
+//! * [`KernelId::Scalar`] — the original one-word / one-element loops,
+//!   extracted verbatim from `bitstream/sequence.rs` and
+//!   `linalg/matrix.rs`; the reference every other variant must match bit
+//!   for bit.
+//! * [`KernelId::Wide`] — hand-unrolled 4×u64 word lanes for the bitstream
+//!   ops (including a fused AND+popcount pass that skips the intermediate
+//!   allocation of the scalar multiply path) and 8-wide independent
+//!   accumulator chains for the matmul microkernel, written as
+//!   straight-line Rust that LLVM autovectorizes; on x86_64 the popcount
+//!   paths switch to `popcnt`-enabled `target_feature` functions when the
+//!   CPU reports the feature at runtime.
+//!
+//! Selection happens once at startup: `--kernel auto|scalar|wide` on the
+//! CLI, overridden by the `DITHER_KERNEL` environment variable, with
+//! `auto` picking the best detected variant ([`auto_detect`]). The choice
+//! is process-global ([`select`] / [`active`]) and is reported in the
+//! `hello` handshake and `stats` JSON as `"kernel":"<name>"`.
+//!
+//! The hard contract, locked by `tests/kernel_equivalence.rs` and the
+//! plan-execute / pipelined bit-identity suites: every variant preserves
+//! per-cell accumulation order (each output cell keeps one accumulator
+//! chain walked in index order — lane width only changes how many
+//! *independent* chains run concurrently), so deterministic serving output
+//! is bit-identical no matter which kernel is active, and the stochastic
+//! schemes — whose random bits are pure counter-hash functions of their
+//! coordinates — reproduce the exact same streams.
+
+mod scalar;
+mod wide;
+
+pub use scalar::ScalarKernels;
+pub use wide::WideKernels;
+
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Identifier for a registered kernel implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelId {
+    /// One-word / one-element scalar loops (the pre-kernel-layer code).
+    Scalar,
+    /// Unrolled 4×u64 word lanes + 8-wide matmul accumulator chains.
+    Wide,
+}
+
+impl KernelId {
+    /// Every registered kernel, the scalar reference variant first.
+    pub const ALL: [KernelId; 2] = [KernelId::Scalar, KernelId::Wide];
+
+    /// Stable lowercase name: used by `--kernel`, `DITHER_KERNEL`, the
+    /// `hello`/`stats` JSON field and `kernel/<name>/...` bench keys.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelId::Scalar => "scalar",
+            KernelId::Wide => "wide",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Error for an unrecognized kernel spelling.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseKernelError(String);
+
+impl std::fmt::Display for ParseKernelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown kernel {:?} (expected auto, scalar or wide)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for ParseKernelError {}
+
+impl FromStr for KernelId {
+    type Err = ParseKernelError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(KernelId::Scalar),
+            "wide" => Ok(KernelId::Wide),
+            other => Err(ParseKernelError(other.to_string())),
+        }
+    }
+}
+
+/// The hot-primitive vtable. All word-slice operands are the raw `u64`
+/// backing words of a `BitSeq` (tail bits beyond the logical length are
+/// zero by that type's invariant); all f64 methods promise *strict
+/// index-order accumulation per output cell* so results are bit-identical
+/// across implementations.
+pub trait Kernels: Send + Sync {
+    /// Which registered variant this is.
+    fn id(&self) -> KernelId;
+
+    /// Output-column lane width of [`Kernels::matmul_row`] — how many
+    /// independent per-cell accumulator chains the quantized-matmul callers
+    /// should run concurrently (4 scalar, 8 wide).
+    fn lanes(&self) -> usize;
+
+    /// `out[i] = a[i] & b[i]` over word slices (§III AND-multiply).
+    fn and_words(&self, a: &[u64], b: &[u64], out: &mut [u64]);
+
+    /// `out[i] = (w[i] & x[i]) | (!w[i] & y[i])` — the §IV MUX scaled-add.
+    fn mux_words(&self, w: &[u64], x: &[u64], y: &[u64], out: &mut [u64]);
+
+    /// Total set bits over `words`.
+    fn popcount_words(&self, words: &[u64]) -> u64;
+
+    /// `popcount(a & b)` — the AND-multiply value estimate. The wide
+    /// variant fuses the two passes without materializing the AND.
+    fn and_popcount(&self, a: &[u64], b: &[u64]) -> u64;
+
+    /// Dot product in strict index order. One output cell means one
+    /// accumulator chain — bit-identity forbids a multi-accumulator
+    /// reduction here; the lane-parallel win lives in
+    /// [`Kernels::matmul_row`]'s independent output columns.
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64;
+
+    /// One output row of `A×B`: `out_row[k] = Σ_j arow[j] · bt[k*q + j]`
+    /// where `bt` is row-major transposed-B (`r × q`, `q = arow.len()`,
+    /// `r = out_row.len()`). Every `out_row[k]` is accumulated in plain
+    /// `j` order regardless of lane width.
+    fn matmul_row(&self, arow: &[f64], bt: &[f64], out_row: &mut [f64]);
+
+    /// Vectorized per-row rounding:
+    /// `row[j] = round(row[j], counter_hash(seed, j))` for every `j`.
+    /// The kernel batches the counter-hash computation; `round` is the
+    /// scheme's scalar rounding function.
+    fn round_row(&self, round: &mut dyn FnMut(f64, u64) -> f64, row: &mut [f64], seed: u64);
+}
+
+/// Upper bound on [`Kernels::lanes`] across all registered variants —
+/// callers that block work by lane width can size stack buffers with this.
+pub const MAX_LANES: usize = 8;
+
+static SCALAR: ScalarKernels = ScalarKernels;
+static WIDE: WideKernels = WideKernels;
+
+/// Look up a kernel implementation by id, independent of the global pick
+/// (used by the equivalence tests and the A/B benches).
+pub fn get(id: KernelId) -> &'static dyn Kernels {
+    match id {
+        KernelId::Scalar => &SCALAR,
+        KernelId::Wide => &WIDE,
+    }
+}
+
+/// The best kernel for this host. The wide variant's unrolled loops are
+/// plain portable Rust (its x86_64 `popcnt` fast path is gated per call at
+/// runtime), so it is the right default everywhere.
+pub fn auto_detect() -> KernelId {
+    KernelId::Wide
+}
+
+/// Resolve a CLI/env spelling; `auto` maps to [`auto_detect`].
+pub fn resolve(spec: &str) -> Result<KernelId, ParseKernelError> {
+    if spec.trim().eq_ignore_ascii_case("auto") {
+        Ok(auto_detect())
+    } else {
+        spec.parse()
+    }
+}
+
+const KERNEL_UNSET: u8 = u8::MAX;
+static ACTIVE: AtomicU8 = AtomicU8::new(KERNEL_UNSET);
+
+fn encode(id: KernelId) -> u8 {
+    match id {
+        KernelId::Scalar => 0,
+        KernelId::Wide => 1,
+    }
+}
+
+fn decode(v: u8) -> Option<KernelId> {
+    match v {
+        0 => Some(KernelId::Scalar),
+        1 => Some(KernelId::Wide),
+        _ => None,
+    }
+}
+
+/// Install `id` as the process-global kernel. Normally called once at
+/// startup (`main` resolves `DITHER_KERNEL` / `--kernel`); tests may
+/// re-select freely because every variant is output-equivalent.
+pub fn select(id: KernelId) {
+    ACTIVE.store(encode(id), Ordering::Relaxed);
+}
+
+/// The process-global kernel id. First use resolves the `DITHER_KERNEL`
+/// environment variable (panicking on an unknown spelling — fail fast at
+/// startup) and falls back to [`auto_detect`].
+pub fn active_id() -> KernelId {
+    if let Some(id) = decode(ACTIVE.load(Ordering::Relaxed)) {
+        return id;
+    }
+    let id = match std::env::var("DITHER_KERNEL") {
+        Ok(spec) => resolve(&spec).unwrap_or_else(|e| panic!("DITHER_KERNEL: {e}")),
+        Err(_) => auto_detect(),
+    };
+    select(id);
+    id
+}
+
+/// The process-global kernel implementation (see [`active_id`]).
+pub fn active() -> &'static dyn Kernels {
+    get(active_id())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_parsing_round_trip() {
+        for id in KernelId::ALL {
+            assert_eq!(id.name().parse::<KernelId>().unwrap(), id);
+            assert_eq!(get(id).id(), id);
+        }
+        assert_eq!("  WIDE ".parse::<KernelId>().unwrap(), KernelId::Wide);
+        assert!("fast".parse::<KernelId>().is_err());
+    }
+
+    #[test]
+    fn resolve_handles_auto() {
+        assert_eq!(resolve("auto").unwrap(), auto_detect());
+        assert_eq!(resolve("scalar").unwrap(), KernelId::Scalar);
+        let err = resolve("simd").unwrap_err().to_string();
+        assert!(err.contains("simd"), "{err}");
+    }
+
+    #[test]
+    fn select_changes_the_active_kernel() {
+        // The global is shared across concurrently-running tests, which is
+        // safe because every kernel is output-equivalent; this test only
+        // asserts that its own stores are visible to itself.
+        select(KernelId::Scalar);
+        assert_eq!(active_id(), KernelId::Scalar);
+        assert_eq!(active().id(), KernelId::Scalar);
+        select(auto_detect());
+        assert_eq!(active_id(), auto_detect());
+    }
+
+    #[test]
+    fn lane_widths_are_positive_and_bounded() {
+        for id in KernelId::ALL {
+            let lanes = get(id).lanes();
+            assert!((1..=MAX_LANES).contains(&lanes), "{id}: lanes {lanes}");
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! The scalar reference kernel: the crate's original one-word /
+//! one-element inner loops, extracted verbatim from
+//! `bitstream/sequence.rs` and `linalg/matrix.rs`. Every other variant
+//! must match this one bit for bit (`tests/kernel_equivalence.rs`).
+
+use super::{KernelId, Kernels};
+use crate::util::rng::counter_hash;
+
+/// The one-word / one-element baseline implementation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarKernels;
+
+impl Kernels for ScalarKernels {
+    fn id(&self) -> KernelId {
+        KernelId::Scalar
+    }
+
+    fn lanes(&self) -> usize {
+        4
+    }
+
+    fn and_words(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = x & y;
+        }
+    }
+
+    fn mux_words(&self, w: &[u64], x: &[u64], y: &[u64], out: &mut [u64]) {
+        for (((o, &wv), &xv), &yv) in out.iter_mut().zip(w).zip(x).zip(y) {
+            *o = (wv & xv) | (!wv & yv);
+        }
+    }
+
+    fn popcount_words(&self, words: &[u64]) -> u64 {
+        words.iter().map(|w| u64::from(w.count_ones())).sum()
+    }
+
+    fn and_popcount(&self, a: &[u64], b: &[u64]) -> u64 {
+        // Faithful to the pre-kernel multiply path: materialize the AND,
+        // then count it in a second pass (the wide variant fuses these).
+        let anded: Vec<u64> = a.iter().zip(b).map(|(&x, &y)| x & y).collect();
+        self.popcount_words(&anded)
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (&x, &y) in a.iter().zip(b) {
+            acc += x * y;
+        }
+        acc
+    }
+
+    fn matmul_row(&self, arow: &[f64], bt: &[f64], out_row: &mut [f64]) {
+        let q = arow.len();
+        let r = out_row.len();
+        let mut k = 0;
+        while k + 4 <= r {
+            let b0 = &bt[k * q..(k + 1) * q];
+            let b1 = &bt[(k + 1) * q..(k + 2) * q];
+            let b2 = &bt[(k + 2) * q..(k + 3) * q];
+            let b3 = &bt[(k + 3) * q..(k + 4) * q];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for j in 0..q {
+                let a = arow[j];
+                a0 += a * b0[j];
+                a1 += a * b1[j];
+                a2 += a * b2[j];
+                a3 += a * b3[j];
+            }
+            out_row[k..k + 4].copy_from_slice(&[a0, a1, a2, a3]);
+            k += 4;
+        }
+        while k < r {
+            let brow = &bt[k * q..(k + 1) * q];
+            let mut acc = 0.0;
+            for j in 0..q {
+                acc += arow[j] * brow[j];
+            }
+            out_row[k] = acc;
+            k += 1;
+        }
+    }
+
+    fn round_row(&self, round: &mut dyn FnMut(f64, u64) -> f64, row: &mut [f64], seed: u64) {
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = round(*v, counter_hash(seed, j as u64));
+        }
+    }
+}

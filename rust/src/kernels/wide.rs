@@ -1,0 +1,204 @@
+//! The wide kernel: hand-unrolled 4×u64 word lanes for the bitstream ops
+//! (with a fused AND+popcount that never materializes the intermediate
+//! sequence) and 8-wide independent accumulator chains for the matmul
+//! microkernel — straight-line Rust shaped so LLVM autovectorizes it. On
+//! x86_64 the popcount paths call `popcnt`-enabled `target_feature`
+//! functions when runtime detection reports the feature, so `count_ones`
+//! lowers to the hardware instruction instead of the SWAR fallback.
+//!
+//! Bit-identity with the scalar kernel is structural, not incidental:
+//! word ops are exact bitwise functions, and every f64 output cell keeps a
+//! single accumulator chain walked in plain index order — the unrolling
+//! only widens how many *independent* cells are in flight at once.
+
+use super::{KernelId, Kernels};
+use crate::util::rng::counter_hash;
+
+/// The lane-parallel implementation of the kernel primitives.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WideKernels;
+
+#[inline(always)]
+fn popcount_unrolled(words: &[u64]) -> u64 {
+    let mut acc = [0u64; 4];
+    let mut chunks = words.chunks_exact(4);
+    for c in &mut chunks {
+        acc[0] += u64::from(c[0].count_ones());
+        acc[1] += u64::from(c[1].count_ones());
+        acc[2] += u64::from(c[2].count_ones());
+        acc[3] += u64::from(c[3].count_ones());
+    }
+    let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+    for &w in chunks.remainder() {
+        total += u64::from(w.count_ones());
+    }
+    total
+}
+
+#[inline(always)]
+fn and_popcount_unrolled(a: &[u64], b: &[u64]) -> u64 {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut acc = [0u64; 4];
+    let mut i = 0;
+    while i + 4 <= n {
+        acc[0] += u64::from((a[i] & b[i]).count_ones());
+        acc[1] += u64::from((a[i + 1] & b[i + 1]).count_ones());
+        acc[2] += u64::from((a[i + 2] & b[i + 2]).count_ones());
+        acc[3] += u64::from((a[i + 3] & b[i + 3]).count_ones());
+        i += 4;
+    }
+    let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+    while i < n {
+        total += u64::from((a[i] & b[i]).count_ones());
+        i += 1;
+    }
+    total
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    // `#[inline(always)]` on the portable bodies lets LLVM inline them
+    // here under the `popcnt` feature, so `count_ones` becomes one
+    // instruction. Callers gate on `is_x86_feature_detected!`.
+    #[target_feature(enable = "popcnt")]
+    pub unsafe fn popcount(words: &[u64]) -> u64 {
+        super::popcount_unrolled(words)
+    }
+
+    #[target_feature(enable = "popcnt")]
+    pub unsafe fn and_popcount(a: &[u64], b: &[u64]) -> u64 {
+        super::and_popcount_unrolled(a, b)
+    }
+}
+
+impl Kernels for WideKernels {
+    fn id(&self) -> KernelId {
+        KernelId::Wide
+    }
+
+    fn lanes(&self) -> usize {
+        8
+    }
+
+    fn and_words(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        let n = out.len().min(a.len()).min(b.len());
+        let mut i = 0;
+        while i + 4 <= n {
+            out[i] = a[i] & b[i];
+            out[i + 1] = a[i + 1] & b[i + 1];
+            out[i + 2] = a[i + 2] & b[i + 2];
+            out[i + 3] = a[i + 3] & b[i + 3];
+            i += 4;
+        }
+        while i < n {
+            out[i] = a[i] & b[i];
+            i += 1;
+        }
+    }
+
+    fn mux_words(&self, w: &[u64], x: &[u64], y: &[u64], out: &mut [u64]) {
+        let n = out.len().min(w.len()).min(x.len()).min(y.len());
+        let mut i = 0;
+        while i + 4 <= n {
+            out[i] = (w[i] & x[i]) | (!w[i] & y[i]);
+            out[i + 1] = (w[i + 1] & x[i + 1]) | (!w[i + 1] & y[i + 1]);
+            out[i + 2] = (w[i + 2] & x[i + 2]) | (!w[i + 2] & y[i + 2]);
+            out[i + 3] = (w[i + 3] & x[i + 3]) | (!w[i + 3] & y[i + 3]);
+            i += 4;
+        }
+        while i < n {
+            out[i] = (w[i] & x[i]) | (!w[i] & y[i]);
+            i += 1;
+        }
+    }
+
+    fn popcount_words(&self, words: &[u64]) -> u64 {
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("popcnt") {
+            // SAFETY: the `popcnt` feature was detected at runtime on the
+            // line above; the function only requires that feature.
+            return unsafe { x86::popcount(words) };
+        }
+        popcount_unrolled(words)
+    }
+
+    fn and_popcount(&self, a: &[u64], b: &[u64]) -> u64 {
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("popcnt") {
+            // SAFETY: as above — gated on runtime detection of `popcnt`.
+            return unsafe { x86::and_popcount(a, b) };
+        }
+        and_popcount_unrolled(a, b)
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        // One output cell = one chain: identical to scalar by contract.
+        let mut acc = 0.0;
+        for (&x, &y) in a.iter().zip(b) {
+            acc += x * y;
+        }
+        acc
+    }
+
+    fn matmul_row(&self, arow: &[f64], bt: &[f64], out_row: &mut [f64]) {
+        let q = arow.len();
+        let r = out_row.len();
+        let mut k = 0;
+        while k + 8 <= r {
+            let b0 = &bt[k * q..(k + 1) * q];
+            let b1 = &bt[(k + 1) * q..(k + 2) * q];
+            let b2 = &bt[(k + 2) * q..(k + 3) * q];
+            let b3 = &bt[(k + 3) * q..(k + 4) * q];
+            let b4 = &bt[(k + 4) * q..(k + 5) * q];
+            let b5 = &bt[(k + 5) * q..(k + 6) * q];
+            let b6 = &bt[(k + 6) * q..(k + 7) * q];
+            let b7 = &bt[(k + 7) * q..(k + 8) * q];
+            let mut acc = [0.0f64; 8];
+            for j in 0..q {
+                let a = arow[j];
+                acc[0] += a * b0[j];
+                acc[1] += a * b1[j];
+                acc[2] += a * b2[j];
+                acc[3] += a * b3[j];
+                acc[4] += a * b4[j];
+                acc[5] += a * b5[j];
+                acc[6] += a * b6[j];
+                acc[7] += a * b7[j];
+            }
+            out_row[k..k + 8].copy_from_slice(&acc);
+            k += 8;
+        }
+        while k < r {
+            let brow = &bt[k * q..(k + 1) * q];
+            let mut acc = 0.0;
+            for j in 0..q {
+                acc += arow[j] * brow[j];
+            }
+            out_row[k] = acc;
+            k += 1;
+        }
+    }
+
+    fn round_row(&self, round: &mut dyn FnMut(f64, u64) -> f64, row: &mut [f64], seed: u64) {
+        let n = row.len();
+        let mut j = 0;
+        while j + 4 <= n {
+            // Batch the coordinate hashes (the per-element fixed cost) so
+            // the four chains overlap; rounding order is unchanged.
+            let u0 = counter_hash(seed, j as u64);
+            let u1 = counter_hash(seed, j as u64 + 1);
+            let u2 = counter_hash(seed, j as u64 + 2);
+            let u3 = counter_hash(seed, j as u64 + 3);
+            row[j] = round(row[j], u0);
+            row[j + 1] = round(row[j + 1], u1);
+            row[j + 2] = round(row[j + 2], u2);
+            row[j + 3] = round(row[j + 3], u3);
+            j += 4;
+        }
+        while j < n {
+            row[j] = round(row[j], counter_hash(seed, j as u64));
+            j += 1;
+        }
+    }
+}

@@ -12,6 +12,9 @@
 //!   dither rounding (§VII).
 //! * [`linalg`] — fixed-point matrix multiplication engines with the three
 //!   rounding-placement strategies of §VII–§VIII.
+//! * [`kernels`] — the word/lane-parallel kernel layer: every hot inner
+//!   loop (bitstream word ops, the matmul microkernel, per-row rounding)
+//!   behind a trait with runtime-dispatched `scalar`/`wide` variants.
 //! * [`nn`] — dense network inference with quantized matmuls, and
 //!   [`train`] — a pure-Rust SGD trainer producing the evaluation models.
 //! * [`data`] — synthetic MNIST-class / Fashion-class datasets (procedural;
@@ -53,6 +56,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod fidelity;
+pub mod kernels;
 pub mod linalg;
 pub mod nn;
 pub mod rounding;

@@ -589,11 +589,12 @@ fn check_plan(
 /// `InputOnce` kernel: Â is fixed, B is rounded for every partial product
 /// with per-element use index `i` (the output row).
 ///
-/// The inner loop is blocked 4 output columns at a time: consecutive `k`
-/// read *adjacent* `PreMat` entries (`e_b = j·r + k`), turning the stride-r
-/// table walk into contiguous cache-line reads, and `arow[j]` is loaded
-/// once per 4 lanes. Each lane owns an accumulator chain (4-wide ILP)
-/// while per-cell accumulation order stays the plain `j` order.
+/// The inner loop is blocked by the active kernel's lane width (4 scalar,
+/// 8 wide): consecutive `k` read *adjacent* `PreMat` entries (`e_b =
+/// j·r + k`), turning the stride-r table walk into contiguous cache-line
+/// reads, and `arow[j]` is loaded once per lane group. Each lane owns an
+/// independent accumulator chain while per-cell accumulation order stays
+/// the plain `j` order — results are bit-identical across lane widths.
 fn matmul_rounded_b(
     a_hat: &Matrix,
     plan_b: &QuantPlan,
@@ -609,6 +610,7 @@ fn matmul_rounded_b(
     let mode = plan_b.mode();
     let phase_b = phases(q * r, n_b, seed_b);
     let sigma_b = permutation(n_b, seed_b ^ 0x51);
+    let width = crate::kernels::active().lanes();
     let mut out = Matrix::zeros(p, r);
     let blocks = parallel_chunks(p, |range| {
         let mut block = vec![0.0f64; range.len() * r];
@@ -616,8 +618,8 @@ fn matmul_rounded_b(
             let arow = a_hat.row(i);
             let mut k0 = 0;
             while k0 < r {
-                let lanes = (r - k0).min(4);
-                let mut acc = [0.0f64; 4];
+                let lanes = (r - k0).min(width);
+                let mut acc = [0.0f64; crate::kernels::MAX_LANES];
                 for (j, &a_val) in arow.iter().enumerate() {
                     let row_b = j * r + k0;
                     for (lane, slot) in acc.iter_mut().enumerate().take(lanes) {
@@ -645,10 +647,11 @@ fn matmul_rounded_b(
 
 /// `PerPartial` kernel (Fig 7): both operands rounded per partial product.
 ///
-/// Blocked like [`matmul_rounded_b`]: 4 output columns per pass share every
-/// A-side table load (`e_a = i·q + j` is lane-invariant) and read adjacent
-/// B-side entries, with one independent accumulator chain per lane and the
-/// per-cell accumulation order unchanged.
+/// Blocked like [`matmul_rounded_b`]: a lane-width group of output columns
+/// per pass shares every A-side table load (`e_a = i·q + j` is
+/// lane-invariant) and reads adjacent B-side entries, with one independent
+/// accumulator chain per lane and the per-cell accumulation order
+/// unchanged (bit-identical across lane widths).
 fn matmul_per_partial(
     plan_a: &QuantPlan,
     plan_b: &QuantPlan,
@@ -670,6 +673,7 @@ fn matmul_per_partial(
     let phase_b = phases(q * r, n_b, seed_b);
     let sigma_a = permutation(n_a, seed_a ^ 0x51);
     let sigma_b = permutation(n_b, seed_b ^ 0x51);
+    let width = crate::kernels::active().lanes();
     let mut out = Matrix::zeros(p, r);
     let blocks = parallel_chunks(p, |range| {
         let mut block = vec![0.0f64; range.len() * r];
@@ -682,8 +686,8 @@ fn matmul_per_partial(
             let i_mod = i % n_b;
             let mut k0 = 0;
             while k0 < r {
-                let lanes = (r - k0).min(4);
-                let mut acc = [0.0f64; 4];
+                let lanes = (r - k0).min(width);
+                let mut acc = [0.0f64; crate::kernels::MAX_LANES];
                 for j in 0..q {
                     let e_a = i * q + j;
                     // Fresh uniform per (element, use): the use id is the
@@ -931,6 +935,27 @@ mod tests {
                 let plan_b = QuantPlan::plan_operand(&b, &quant, mode, 9, SweepAxis::Rows);
                 let planned = execute(Operand::Plan(&plan_a), Operand::Plan(&plan_b), &cfg);
                 assert_eq!(direct, planned, "{mode:?}/{variant:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn variants_bit_identical_across_kernels() {
+        // Lane width only changes how many independent per-cell chains run
+        // concurrently; every (scheme, placement) must produce the same
+        // bits under every kernel. r = 13 leaves ragged tails for both the
+        // 4-wide and 8-wide blockings.
+        use crate::kernels::{self, KernelId};
+        let (a, b) = random_pair(9, 7, 13, 0.0, 1.0, 41);
+        for mode in SchemeId::ALL {
+            for variant in Variant::ALL {
+                let cfg = QuantMatmulConfig::unit(3, mode, variant, 7);
+                kernels::select(KernelId::Scalar);
+                let scalar = quant_matmul(&a, &b, &cfg);
+                kernels::select(KernelId::Wide);
+                let wide = quant_matmul(&a, &b, &cfg);
+                kernels::select(kernels::auto_detect());
+                assert_eq!(scalar, wide, "{mode:?}/{variant:?}");
             }
         }
     }

@@ -94,48 +94,26 @@ impl Matrix {
     /// Exact (f64) matrix product, parallel over row blocks with a
     /// transposed-B inner kernel for contiguous access.
     ///
-    /// The kernel is cache-blocked 4 output columns at a time: four Bᵀ rows
-    /// stream through cache together while the A row stays resident, and
-    /// each column owns an independent accumulator chain so the multiplies
-    /// pipeline 4-wide instead of serializing on one dependency chain.
-    /// Per-cell accumulation order is the plain `j` order (results are
-    /// bit-identical to the naive triple loop).
+    /// The per-row microkernel is the active [`crate::kernels::Kernels`]
+    /// variant's `matmul_row`: cache-blocked a lane width of output columns
+    /// at a time (4 scalar, 8 wide) — the Bᵀ rows stream through cache
+    /// together while the A row stays resident, and each column owns an
+    /// independent accumulator chain so the multiplies pipeline across
+    /// lanes instead of serializing on one dependency chain. Per-cell
+    /// accumulation order is the plain `j` order in every variant (results
+    /// are bit-identical to the naive triple loop, and across kernels).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "inner dimensions must match");
         let (p, q, r) = (self.rows, self.cols, other.cols);
         let bt = other.transpose();
         let mut out = Matrix::zeros(p, r);
+        let kern = crate::kernels::active();
         // Compute disjoint row blocks in parallel, then stitch.
         let blocks = parallel_chunks(p, |range| {
             let mut block = vec![0.0f64; range.len() * r];
             for (bi, i) in range.clone().enumerate() {
                 let arow = &self.data[i * q..(i + 1) * q];
-                let mut k = 0;
-                while k + 4 <= r {
-                    let b0 = &bt.data[k * q..(k + 1) * q];
-                    let b1 = &bt.data[(k + 1) * q..(k + 2) * q];
-                    let b2 = &bt.data[(k + 2) * q..(k + 3) * q];
-                    let b3 = &bt.data[(k + 3) * q..(k + 4) * q];
-                    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-                    for j in 0..q {
-                        let a = arow[j];
-                        a0 += a * b0[j];
-                        a1 += a * b1[j];
-                        a2 += a * b2[j];
-                        a3 += a * b3[j];
-                    }
-                    block[bi * r + k..bi * r + k + 4].copy_from_slice(&[a0, a1, a2, a3]);
-                    k += 4;
-                }
-                while k < r {
-                    let brow = &bt.data[k * q..(k + 1) * q];
-                    let mut acc = 0.0;
-                    for j in 0..q {
-                        acc += arow[j] * brow[j];
-                    }
-                    block[bi * r + k] = acc;
-                    k += 1;
-                }
+                kern.matmul_row(arow, &bt.data, &mut block[bi * r..(bi + 1) * r]);
             }
             (range.start, block)
         });

@@ -39,6 +39,14 @@ COMMANDS:
     info              show runtime platform + model zoo + artifacts
     help              this text
 
+GLOBAL FLAGS:
+    --kernel NAME     compute kernel: auto | scalar | wide (auto). Selected
+                      once at startup; 'auto' picks the widest kernel the
+                      CPU supports. The DITHER_KERNEL environment variable
+                      overrides this flag (same spellings), so a deploy can
+                      force a kernel without editing service scripts. All
+                      kernels produce bit-identical deterministic replies.
+
 EXPERIMENT FLAGS (defaults in parentheses):
     --pairs N         operand pairs for fig1-6/table1 (200)
     --trials N        trials per pair (200)
@@ -97,6 +105,7 @@ INFER FLAGS:
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    select_kernel(&args);
     match args.command.as_deref() {
         Some("experiment") => cmd_experiment(&args),
         Some("train") => cmd_train(&args),
@@ -111,6 +120,28 @@ fn main() -> Result<()> {
         Some(other) => {
             eprintln!("unknown command {other:?}\n");
             print!("{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Pin the process-wide compute kernel before any subcommand touches the
+/// numeric paths. `DITHER_KERNEL` wins over `--kernel` (both accept
+/// auto|scalar|wide); with neither set, the lazy default in
+/// [`dither::kernels::active_id`] auto-detects at first use. A bad
+/// spelling exits with usage status 2 instead of panicking mid-serve.
+fn select_kernel(args: &Args) {
+    let (source, spec) = match std::env::var("DITHER_KERNEL") {
+        Ok(env) => ("DITHER_KERNEL", env),
+        Err(_) => match args.get("kernel") {
+            Some(flag) => ("--kernel", flag.to_string()),
+            None => return,
+        },
+    };
+    match dither::kernels::resolve(&spec) {
+        Ok(id) => dither::kernels::select(id),
+        Err(e) => {
+            eprintln!("{source}: {e}");
             std::process::exit(2);
         }
     }
@@ -286,6 +317,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     let rt = Runtime::native(&artifacts)?;
     println!("platform: {}", rt.platform());
+    println!("kernel: {}", dither::kernels::active_id().name());
     println!("artifacts dir: {artifacts}");
     // Read-only: report cached zoo weights without training on a miss.
     let train_n = args.parse_or("train-n", 2000usize);

@@ -206,11 +206,13 @@ pub trait Rounding: Send + Sync {
 
     /// Round a row of reals in place, drawing per-element randomness from
     /// `counter_hash(seed, j)` — the vectorized form used by control-plane
-    /// consumers (the kernels keep their own fused loops).
+    /// consumers (the contraction engines keep their own fused loops).
+    /// Routed through the active [`crate::kernels::Kernels`] variant, which
+    /// batches the counter-hash computation; per-element results are
+    /// identical across kernels because each bit is a pure function of
+    /// `(value, seed, j)`.
     fn round_row(&self, row: &mut [f64], seed: u64) {
-        for (j, v) in row.iter_mut().enumerate() {
-            *v = self.round_scalar(*v, counter_hash(seed, j as u64)) as f64;
-        }
+        crate::kernels::active().round_row(&mut |v, u| self.round_scalar(v, u) as f64, row, seed);
     }
 
     /// Prior per-logit MSE of an `n`-long contraction whose factors are

@@ -379,6 +379,37 @@ fn proxy_over_two_backends_routes_survives_kill_and_merges_stats() {
         "the mixed key grid must route traffic to both backends: {forwarded:?}"
     );
 
+    // The proxy sums the backends' raw log2 latency histograms bucket-wise
+    // and recomputes cluster-wide percentiles from the merged histogram
+    // (not per-backend maxima).
+    let bucket_sum = |s: &Json| {
+        s.get("latency_buckets")
+            .and_then(Json::as_f64_vec)
+            .map(|v| v.iter().sum::<f64>())
+            .expect("latency_buckets histogram")
+    };
+    assert!(bucket_sum(&merged) > 0.0, "{merged}");
+    assert_eq!(bucket_sum(&merged), bucket_sum(&s1) + bucket_sum(&s2), "{merged}");
+    let wire: Vec<u64> = merged
+        .get("latency_buckets")
+        .and_then(Json::as_f64_vec)
+        .unwrap()
+        .iter()
+        .map(|&b| b as u64)
+        .collect();
+    assert_eq!(
+        merged.get("p99_us").and_then(Json::as_f64),
+        Some(dither::coordinator::percentile_from_buckets(&wire, 0.99)),
+        "{merged}"
+    );
+    // Both backends are this build, so the merged kernel label is theirs.
+    assert_eq!(
+        merged.get("kernel").and_then(Json::as_str),
+        s1.get("kernel").and_then(Json::as_str),
+        "{merged}"
+    );
+    assert!(merged.get("kernel").and_then(Json::as_str).is_some(), "{merged}");
+
     // Wave 3 — kill backend 2 mid-flood: the proxy must mark it down,
     // re-route its keys to backend 1, and answer every id exactly once
     // (retryable bounces included — no lost accepted ids).

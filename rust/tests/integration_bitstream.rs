@@ -146,6 +146,38 @@ fn sample_bias_ordering_and_sem_slopes() {
 }
 
 #[test]
+fn evaluation_grid_is_bit_identical_across_kernels() {
+    // The bitstream evaluation pipeline (encode → AND/MUX → popcount
+    // estimate) consumes its RNG streams identically no matter which
+    // kernel runs the word loops, so the *entire* (op, scheme) grid —
+    // stochastic schemes included — must reproduce exactly, not just in
+    // distribution, under each kernel.
+    use dither::kernels::{self, KernelId};
+    let cfg = EvalConfig {
+        pairs: 24,
+        trials: 40,
+        seed: 0xCE41,
+    };
+    let pairs = cfg.draw_pairs();
+    let mut grids: Vec<Vec<(f64, f64)>> = Vec::new();
+    for id in KernelId::ALL {
+        kernels::select(id);
+        let mut grid = Vec::new();
+        for op in Op::ALL {
+            for scheme in Scheme::ALL {
+                let r = evaluate(scheme, op, 96, &pairs, &cfg);
+                grid.push((r.emse, r.bias_abs));
+            }
+        }
+        grids.push(grid);
+    }
+    kernels::select(kernels::auto_detect());
+    for g in &grids[1..] {
+        assert_eq!(g, &grids[0], "evaluation grid varies with the kernel");
+    }
+}
+
+#[test]
 fn deterministic_variant_needs_single_trial() {
     // Footnote 2: the deterministic estimate never changes across trials.
     let cfg1 = EvalConfig {

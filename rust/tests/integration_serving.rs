@@ -369,7 +369,11 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
     let ds = Dataset::synthesize(Task::Digits, 8, 0xF1F0);
     let cases = mixed_cases(&ds);
 
-    // Lockstep pass: its own connection, one request at a time.
+    // Lockstep pass: its own connection, one request at a time — served
+    // under the scalar kernel. The pipelined pass below switches the
+    // process-global kernel to wide, so the deterministic bit-identity
+    // assertion at the end doubles as a cross-kernel serving check.
+    dither::kernels::select(dither::kernels::KernelId::Scalar);
     let stream = connect_when_up(addr);
     let mut reader = BufReader::new(stream.try_clone().unwrap());
     let mut writer = stream;
@@ -391,7 +395,9 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
     }
 
     // Pipelined pass: hello handshake, then all 32 requests before any
-    // read, then reassemble the out-of-order replies by id.
+    // read, then reassemble the out-of-order replies by id — served under
+    // the wide kernel (see above).
+    dither::kernels::select(dither::kernels::KernelId::Wide);
     let stream2 = connect_when_up(addr);
     let mut reader2 = BufReader::new(stream2.try_clone().unwrap());
     let mut writer2 = stream2;
@@ -407,6 +413,8 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
     assert_eq!(hello.get("max_inflight").unwrap().as_f64(), Some(32.0), "{line2}");
     // Protocol v2: the handshake advertises the registered scheme zoo.
     assert_eq!(hello.get("proto").unwrap().as_f64(), Some(2.0), "{line2}");
+    // The handshake names the process-global kernel selected above.
+    assert_eq!(hello.get("kernel").unwrap().as_str(), Some("wide"), "{line2}");
     let advertised = hello.get("schemes").unwrap().as_arr().unwrap();
     for mode in SchemeId::ALL {
         assert!(
@@ -448,14 +456,15 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
         }
         if mode == SchemeId::Deterministic {
             // The acceptance bit-identity: deterministic rounding is
-            // stateless per row, so lockstep and pipelined serving of the
-            // same (model, k, pixels) must agree bit for bit no matter
-            // how the pipelined batches formed.
+            // stateless per row, so lockstep (scalar kernel) and pipelined
+            // (wide kernel) serving of the same (model, k, pixels) must
+            // agree bit for bit no matter how the pipelined batches formed
+            // and no matter which kernel computed them.
             let got = resp.get("logits").unwrap().as_f64_vec().unwrap();
             assert_eq!(
                 got, lockstep_logits[&id],
                 "deterministic reply for id {id} (k={k}, row {row}) diverged between \
-                 lockstep and pipelined modes"
+                 lockstep/scalar and pipelined/wide serving"
             );
         }
     }
@@ -465,6 +474,7 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
     line2.clear();
     reader2.read_line(&mut line2).unwrap();
     server.join().unwrap().expect("server exits cleanly");
+    dither::kernels::select(dither::kernels::auto_detect());
 }
 
 #[test]

@@ -1,0 +1,175 @@
+//! Kernel-equivalence property suite: every registered kernel variant must
+//! agree **bit for bit** with the scalar reference on every primitive, over
+//! random shapes and lengths including ragged tails shorter than one word
+//! and shorter than one lane group. This is the contract that makes the
+//! process-global kernel switch invisible to deterministic serving.
+//!
+//! The primitives are exercised through `kernels::get(id)` — bypassing the
+//! process-global selection — so the suite is immune to other tests
+//! flipping the global concurrently. One final test drives the public
+//! `BitSeq`/`Matrix` paths under each global selection to pin the dispatch
+//! wiring itself.
+
+use dither::bitstream::BitSeq;
+use dither::kernels::{self, KernelId, Kernels};
+use dither::linalg::Matrix;
+use dither::util::rng::{counter_hash, Xoshiro256pp};
+
+/// Deterministic random word buffer (tail masking is the caller's business
+/// here — kernels operate on raw words).
+fn random_words(len: usize, rng: &mut Xoshiro256pp) -> Vec<u64> {
+    (0..len).map(|_| rng.next_u64()).collect()
+}
+
+fn random_f64s(len: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..len).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+/// Word-slice lengths that cover empty input, sub-lane tails, exact lane
+/// groups, and off-by-one straddles of the wide kernel's 4-word unroll.
+const WORD_LENS: [usize; 9] = [0, 1, 2, 3, 4, 5, 7, 16, 129];
+
+/// f64 lengths covering empty, sub-lane, exact-lane and ragged shapes for
+/// both the 4-wide and 8-wide accumulator groupings.
+const F64_LENS: [usize; 10] = [0, 1, 2, 3, 5, 7, 8, 9, 64, 101];
+
+#[test]
+fn word_primitives_match_scalar_bit_for_bit() {
+    let scalar = kernels::get(KernelId::Scalar);
+    let mut rng = Xoshiro256pp::new(0xBEEF);
+    for &len in &WORD_LENS {
+        for round in 0..4 {
+            let a = random_words(len, &mut rng);
+            let b = random_words(len, &mut rng);
+            let w = random_words(len, &mut rng);
+            let mut want_and = vec![0u64; len];
+            let mut want_mux = vec![0u64; len];
+            scalar.and_words(&a, &b, &mut want_and);
+            scalar.mux_words(&w, &a, &b, &mut want_mux);
+            let want_pop = scalar.popcount_words(&a);
+            let want_and_pop = scalar.and_popcount(&a, &b);
+            for id in KernelId::ALL {
+                let kern = kernels::get(id);
+                let mut got = vec![0u64; len];
+                kern.and_words(&a, &b, &mut got);
+                assert_eq!(got, want_and, "{id} and_words len={len} round={round}");
+                kern.mux_words(&w, &a, &b, &mut got);
+                assert_eq!(got, want_mux, "{id} mux_words len={len} round={round}");
+                assert_eq!(
+                    kern.popcount_words(&a),
+                    want_pop,
+                    "{id} popcount len={len} round={round}"
+                );
+                assert_eq!(
+                    kern.and_popcount(&a, &b),
+                    want_and_pop,
+                    "{id} and_popcount len={len} round={round}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_and_matmul_row_match_scalar_bit_for_bit() {
+    let scalar = kernels::get(KernelId::Scalar);
+    let mut rng = Xoshiro256pp::new(0xD07);
+    for &q in &F64_LENS {
+        for &r in &[0usize, 1, 3, 8, 9, 17] {
+            let arow = random_f64s(q, &mut rng);
+            let bt = random_f64s(r * q, &mut rng);
+            let mut want = vec![0.0f64; r];
+            scalar.matmul_row(&arow, &bt, &mut want);
+            let want_dot = if q <= bt.len() {
+                scalar.dot(&arow, &bt[..q])
+            } else {
+                0.0
+            };
+            for id in KernelId::ALL {
+                let kern = kernels::get(id);
+                let mut got = vec![0.0f64; r];
+                kern.matmul_row(&arow, &bt, &mut got);
+                // Exact equality, not approx: the contract is strict
+                // index-order accumulation per output cell.
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{id} matmul_row q={q} r={r}"
+                );
+                if q <= bt.len() {
+                    assert_eq!(
+                        kern.dot(&arow, &bt[..q]).to_bits(),
+                        want_dot.to_bits(),
+                        "{id} dot q={q}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn round_row_applies_per_element_counter_hash_identically() {
+    // A rounding closure with a data-dependent result pins both the hash
+    // argument (counter_hash(seed, j)) and the visit order per element.
+    let mut rng = Xoshiro256pp::new(0x5EED);
+    for &len in &F64_LENS {
+        for seed in [0u64, 7, 0xFFFF_FFFF_FFFF_0001] {
+            let base = random_f64s(len, &mut rng);
+            let mut want = base.clone();
+            for (j, v) in want.iter_mut().enumerate() {
+                let u = counter_hash(seed, j as u64);
+                *v = (*v * 8.0).floor() / 8.0 + (u >> 40) as f64 * 1e-9;
+            }
+            for id in KernelId::ALL {
+                let mut got = base.clone();
+                kernels::get(id).round_row(
+                    &mut |v, u| (v * 8.0).floor() / 8.0 + (u >> 40) as f64 * 1e-9,
+                    &mut got,
+                    seed,
+                );
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{id} round_row len={len} seed={seed}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn public_paths_are_invariant_under_the_global_kernel_switch() {
+    // Drive the dispatching call sites themselves (BitSeq ops, Matrix
+    // matmul) under each global selection; restore auto afterwards.
+    let mut seq_results: Vec<(Vec<u64>, Vec<u64>, u64, u64)> = Vec::new();
+    let mut mat_results: Vec<Vec<f64>> = Vec::new();
+    for id in KernelId::ALL {
+        kernels::select(id);
+        let mut rng2 = Xoshiro256pp::new(0xACE);
+        let n = 1000;
+        let a = BitSeq::from_fn(n, |_| rng2.bernoulli(0.37));
+        let b = BitSeq::from_fn(n, |_| rng2.bernoulli(0.81));
+        let w = BitSeq::from_fn(n, |_| rng2.bernoulli(0.50));
+        seq_results.push((
+            a.and(&b).words().to_vec(),
+            w.mux(&a, &b).words().to_vec(),
+            a.count_ones(),
+            a.and_count(&b),
+        ));
+        let p = Matrix::random_uniform(9, 13, -1.0, 1.0, &mut Xoshiro256pp::new(4));
+        let q = Matrix::random_uniform(13, 7, -1.0, 1.0, &mut Xoshiro256pp::new(5));
+        mat_results.push(p.matmul(&q).data().to_vec());
+    }
+    for r in &seq_results[1..] {
+        assert_eq!(r, &seq_results[0], "BitSeq ops vary with the global kernel");
+    }
+    for m in &mat_results[1..] {
+        assert_eq!(
+            m.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            mat_results[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "Matrix::matmul varies with the global kernel"
+        );
+    }
+    kernels::select(kernels::auto_detect());
+}

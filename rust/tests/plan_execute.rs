@@ -217,6 +217,53 @@ fn prepared_stochastic_distribution_matches_over_trials() {
 }
 
 #[test]
+fn forward_is_bit_identical_across_kernels_for_every_scheme() {
+    // The kernel layer's contract: every scheme's rounding bits are pure
+    // counter-hash functions of their coordinates and every kernel keeps
+    // per-cell accumulation order, so the full quantized forward pass —
+    // not just deterministic mode — is bitwise invariant under the
+    // process-global kernel switch, for both the direct and the prepared
+    // (plan-cached) path. A plan built under one kernel must also execute
+    // identically under another.
+    use dither::kernels::{self, KernelId};
+    let (mlp, x, ranges) = toy(3, 8);
+    for mode in SchemeId::ALL {
+        for variant in Variant::ALL {
+            let cfg = QuantInferenceConfig {
+                bits: 4,
+                mode,
+                variant,
+                seed: 13,
+            };
+            let mut direct: Vec<Vec<f64>> = Vec::new();
+            let mut planned: Vec<Vec<f64>> = Vec::new();
+            for id in KernelId::ALL {
+                kernels::select(id);
+                direct.push(quantized_forward(&mlp, &x, &ranges, &cfg).data().to_vec());
+                let prepared = PreparedModel::prepare(&mlp, 4, mode, variant, 21);
+                planned.push(prepared.forward(&mlp, &x, &ranges, 13).data().to_vec());
+            }
+            // Cross-kernel plan execution: prepare under scalar, run wide.
+            kernels::select(KernelId::Scalar);
+            let prepared = PreparedModel::prepare(&mlp, 4, mode, variant, 21);
+            kernels::select(KernelId::Wide);
+            let crossed = prepared.forward(&mlp, &x, &ranges, 13).data().to_vec();
+            kernels::select(kernels::auto_detect());
+            for d in &direct[1..] {
+                assert_eq!(d, &direct[0], "{mode:?}/{variant:?} direct varies with kernel");
+            }
+            for p in &planned[1..] {
+                assert_eq!(p, &planned[0], "{mode:?}/{variant:?} planned varies with kernel");
+            }
+            assert_eq!(
+                crossed, planned[0],
+                "{mode:?}/{variant:?} scalar-built plan must execute identically under wide"
+            );
+        }
+    }
+}
+
+#[test]
 fn prepared_forward_is_reproducible_per_seed() {
     let (mlp, x, ranges) = toy(3, 5);
     for mode in SchemeId::PAPER {

@@ -23,6 +23,14 @@
 //! connection, matching out-of-order replies back to their requests by
 //! the echoed id and verifying each against the same reference engine.
 //!
+//! `--expect-traces` asserts the observability contract end to end: the
+//! server (or proxy) must have been started with `--trace-rate 1.0` and a
+//! `--trace-buffer` at least the request count, and after the run every
+//! completed request's timeline must be retrievable via `{"cmd":"trace"}`.
+//! `--scrape-metrics` scrapes `{"cmd":"metrics"}` and checks the
+//! Prometheus exposition is well-formed (plus, on a traced run, that at
+//! least one per-stage span histogram is populated).
+//!
 //! `--proxy` drives a cluster front tier instead of a single server: the
 //! per-connection shard-stability check is skipped (the proxy routes each
 //! request by its configuration key, so one connection's replies come
@@ -106,6 +114,8 @@ fn main() -> Result<()> {
     let train_n = args.parse_or("train-n", 2000usize);
     let seed = args.parse_or("seed", 7u64);
     let expect_fidelity = args.flag("expect-fidelity");
+    let expect_traces = args.flag("expect-traces");
+    let scrape_metrics = args.flag("scrape-metrics");
     let pipelined = args.flag("pipelined");
     let proxy = args.flag("proxy");
     let backends: Vec<String> = args.parse_list_or("backends", Vec::new());
@@ -126,6 +136,7 @@ fn main() -> Result<()> {
 
     let violations: Mutex<Vec<String>> = Mutex::new(Vec::new());
     let completed = AtomicU64::new(0);
+    let completed_ids: Mutex<HashSet<u64>> = Mutex::new(HashSet::new());
     let overloaded_retries = AtomicU64::new(0);
     let per_client = requests.div_ceil(clients);
 
@@ -145,6 +156,7 @@ fn main() -> Result<()> {
             let workload = &workload;
             let violations = &violations;
             let completed = &completed;
+            let completed_ids = &completed_ids;
             let overloaded_retries = &overloaded_retries;
             let addr = addr.clone();
             scope.spawn(move || {
@@ -158,6 +170,7 @@ fn main() -> Result<()> {
                         reference,
                         violations,
                         completed,
+                        completed_ids,
                         overloaded_retries,
                         proxy,
                     )
@@ -170,6 +183,7 @@ fn main() -> Result<()> {
                         reference,
                         violations,
                         completed,
+                        completed_ids,
                         overloaded_retries,
                         proxy,
                     )
@@ -276,8 +290,93 @@ fn main() -> Result<()> {
             backends.len()
         );
     }
+    // --expect-traces: the server was started sampling everything
+    // (--trace-rate 1.0) with a ring at least as large as the run, so
+    // every completed request's timeline is still retrievable.
+    if expect_traces {
+        let dump = fetch_traces(&addr)?;
+        let have: HashSet<u64> = dump
+            .get("traces")
+            .and_then(Json::as_arr)
+            .map(|ts| {
+                ts.iter()
+                    .filter_map(|t| t.get("id").and_then(Json::as_f64).map(|v| v as u64))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let want = completed_ids.lock().unwrap();
+        let missing: Vec<u64> =
+            want.iter().copied().filter(|id| !have.contains(id)).collect();
+        if want.is_empty() || !missing.is_empty() {
+            eprintln!(
+                "FAIL: {} of {} completed requests have no retrievable trace \
+                 (first missing ids: {:?}) — was the server started with \
+                 --trace-rate 1.0 and --trace-buffer >= the request count?",
+                missing.len(),
+                want.len(),
+                &missing[..missing.len().min(10)]
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "traces: all {} completed requests retrievable from the ring \
+             ({} resident timelines)",
+            want.len(),
+            have.len()
+        );
+    }
+    // --scrape-metrics: the Prometheus surface must be well-formed text
+    // exposition carrying the core serving families — and, on a traced
+    // run, at least one populated per-stage span histogram.
+    if scrape_metrics {
+        let text = fetch_metrics(&addr)?;
+        if let Err(e) = dither::trace::check_exposition(&text) {
+            eprintln!("FAIL: metrics exposition is malformed: {e}");
+            std::process::exit(1);
+        }
+        for family in ["dither_requests_total", "dither_latency_us_bucket"] {
+            if !text.contains(family) {
+                eprintln!("FAIL: metrics exposition lacks {family}");
+                std::process::exit(1);
+            }
+        }
+        if expect_traces && !text.contains("dither_stage_duration_us_bucket") {
+            eprintln!("FAIL: a traced run must expose at least one stage histogram");
+            std::process::exit(1);
+        }
+        println!(
+            "metrics: well-formed Prometheus exposition ({} bytes)",
+            text.len()
+        );
+    }
     println!("PASS: {done} mixed-scheme requests, zero incorrect replies");
     Ok(())
+}
+
+/// Scrape the full trace ring (`{"cmd":"trace"}`, no filters) as raw JSON
+/// — through the proxy this is the stitched cross-process reply.
+fn fetch_traces(addr: &str) -> Result<Json> {
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    writeln!(writer, "{{\"cmd\":\"trace\"}}")?;
+    writer.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(Json::parse(line.trim())?)
+}
+
+/// Scrape `{"cmd":"metrics"}` and unwrap the exposition text.
+fn fetch_metrics(addr: &str) -> Result<String> {
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    writeln!(writer, "{{\"cmd\":\"metrics\"}}")?;
+    writer.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    dither::coordinator::parse_metrics_reply(line.trim())
+        .map_err(|e| format!("bad metrics reply: {e}").into())
 }
 
 /// Total shadow samples across a stats reply's fidelity cells.
@@ -303,6 +402,7 @@ fn run_client(
     reference: &Engine,
     violations: &Mutex<Vec<String>>,
     completed: &AtomicU64,
+    completed_ids: &Mutex<HashSet<u64>>,
     overloaded_retries: &AtomicU64,
     proxy: bool,
 ) -> Result<()> {
@@ -347,6 +447,7 @@ fn run_client(
             violations.lock().unwrap().push(v);
         }
         completed.fetch_add(1, Ordering::Relaxed);
+        completed_ids.lock().unwrap().insert(id);
     }
     Ok(())
 }
@@ -365,6 +466,7 @@ fn run_client_pipelined(
     reference: &Engine,
     violations: &Mutex<Vec<String>>,
     completed: &AtomicU64,
+    completed_ids: &Mutex<HashSet<u64>>,
     overloaded_retries: &AtomicU64,
     proxy: bool,
 ) -> Result<()> {
@@ -477,6 +579,7 @@ fn run_client_pipelined(
         }
         done += 1;
         completed.fetch_add(1, Ordering::Relaxed);
+        completed_ids.lock().unwrap().insert(id);
     }
     Ok(())
 }

@@ -212,7 +212,7 @@ fn main() {
     let mut serving = Vec::new();
     let mut lockstep_k_rps = 0.0f64;
     for (port, shards) in [(18011u16, 1usize), (18012, k_shards)] {
-        let rps = serving_throughput(port, shards, clients, requests, &ds, 1);
+        let rps = serving_throughput(port, shards, clients, requests, &ds, 1, 0.0);
         let name = format!("e2e/serving/shards={shards}/k=4/dither");
         let throughput = format_count(rps);
         println!("{name:<56} {throughput:>12}/s  ({requests} reqs, {clients} clients)");
@@ -246,7 +246,7 @@ fn main() {
     // batch-friendly load — batches actually form instead of serving a
     // procession of singletons.
     let window = 32usize;
-    let pipelined_rps = serving_throughput(18013, k_shards, clients, requests, &ds, window);
+    let pipelined_rps = serving_throughput(18013, k_shards, clients, requests, &ds, window, 0.0);
     let name = format!("e2e/serving_pipelined/shards={k_shards}/k=4/dither/window={window}");
     let throughput = format_count(pipelined_rps);
     println!("{name:<56} {throughput:>12}/s  ({requests} reqs, {clients} clients)");
@@ -279,6 +279,56 @@ fn main() {
         ("speedup", Json::Num(pipeline_speedup)),
     ]));
 
+    // ---- tracing overhead ----------------------------------------------
+    // The same pipelined serving shape under three sampling rates. Rate 0
+    // must sit within noise of the untraced pipelined number above
+    // (`Tracer::begin` takes no clock reads when disabled); 0.01 is the
+    // production-ish rate; 1.0 bounds the worst case, with every request
+    // building a full span timeline and churning the ring buffer.
+    let mut trace_meas: Vec<(f64, f64)> = Vec::new();
+    for (port, rate) in [(18018u16, 0.0f64), (18019, 0.01), (18020, 1.0)] {
+        let rps = serving_throughput(port, k_shards, clients, requests, &ds, window, rate);
+        let name = format!(
+            "e2e/trace_overhead/rate={rate}/shards={k_shards}/k=4/dither/window={window}"
+        );
+        println!(
+            "{name:<56} {:>12}/s  ({requests} reqs, {clients} clients)",
+            format_count(rps)
+        );
+        trace_meas.push((rate, rps));
+        serving.push(Json::obj(vec![
+            ("name", Json::Str(name)),
+            ("trace_rate", Json::Num(rate)),
+            ("shards", Json::Num(k_shards as f64)),
+            ("requests", Json::Num(requests as f64)),
+            ("clients", Json::Num(clients as f64)),
+            ("window", Json::Num(window as f64)),
+            ("items_per_s", Json::Num(rps)),
+        ]));
+    }
+    let rate0_rps = trace_meas.first().map_or(0.0, |&(_, r)| r);
+    let rate1_rps = trace_meas.last().map_or(0.0, |&(_, r)| r);
+    if rate1_rps > 0.0 && pipelined_rps > 0.0 {
+        println!(
+            "trace overhead: rate 0 at {:.2}x of untraced, rate 1.0 at {:.2}x of rate 0",
+            rate0_rps / pipelined_rps,
+            rate1_rps / rate0_rps.max(1e-9)
+        );
+    }
+    serving.push(Json::obj(vec![
+        (
+            "name",
+            Json::Str(format!("e2e/trace_overhead_vs_untraced/shards={k_shards}")),
+        ),
+        ("untraced_items_per_s", Json::Num(pipelined_rps)),
+        ("rate0_items_per_s", Json::Num(rate0_rps)),
+        ("rate1_items_per_s", Json::Num(rate1_rps)),
+        (
+            "rate0_ratio",
+            Json::Num(if pipelined_rps > 0.0 { rate0_rps / pipelined_rps } else { 0.0 }),
+        ),
+    ]));
+
     // ---- proxy over 2 backends vs direct -------------------------------
     // Same mixed-key workload (k ∈ {2,4,8} per client, so the hash ring
     // actually spreads keys over both backends) against (a) one direct
@@ -307,6 +357,9 @@ fn main() {
         probe_interval_ms: 200,
         probe_timeout_ms: 2_000,
         max_backoff_ms: 1_000,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
     };
     let proxy = std::thread::spawn(move || run_proxy(&proxy_cfg));
     assert!(wait_ready(proxy_addr, Duration::from_secs(60)), "proxy up");
@@ -399,6 +452,9 @@ fn server_cfg(addr: &str, shards: usize) -> ServerConfig {
         plan_cache_mb: 64,
         max_inflight: 512,
         reply_timeout_ms: 120_000,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
     }
 }
 
@@ -459,6 +515,7 @@ fn drive_mixed(addr: &str, clients: usize, requests: usize, ds: &Dataset, window
 /// the measured requests/second (excluding startup/teardown). `window` is
 /// how many requests each connection keeps in flight: 1 is the lockstep
 /// discipline (write, then wait for the reply), larger values pipeline.
+#[allow(clippy::too_many_arguments)]
 fn serving_throughput(
     port: u16,
     shards: usize,
@@ -466,6 +523,7 @@ fn serving_throughput(
     requests: usize,
     ds: &Dataset,
     window: usize,
+    trace_rate: f64,
 ) -> f64 {
     let addr = format!("127.0.0.1:{port}");
     let cfg = ServerConfig {
@@ -481,6 +539,11 @@ fn serving_throughput(
         plan_cache_mb: 64,
         max_inflight: 64,
         reply_timeout_ms: 120_000,
+        trace_rate,
+        trace_slow_us: 0,
+        // Big enough that ring eviction churn is part of the measured
+        // cost, small enough to stay bounded at rate 1.0.
+        trace_buffer: 1_024,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 

@@ -20,8 +20,10 @@
 //! ([`crate::cluster::health`]) reconnects with backoff.
 
 use crate::coordinator::protocol::{
-    format_overloaded, parse_hello, parse_stats, response_id, HelloInfo, StatsSummary,
+    format_overloaded, format_trace_query, parse_hello, parse_stats, parse_traces, response_id,
+    HelloInfo, StatsSummary, TraceQuery,
 };
+use crate::trace::{Stage, Trace, TraceBuilder, Tracer};
 use crate::util::json::Json;
 use crate::util::threadpool::WorkerPool;
 use std::collections::HashMap;
@@ -30,7 +32,7 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Why a forward was refused. The caller answers the client itself (the
 /// request was never submitted upstream, so no reply will arrive).
@@ -49,6 +51,10 @@ pub enum ForwardError {
 struct Route {
     client_id: u64,
     tx: Sender<String>,
+    /// Sampled requests carry their proxy-side trace builder with the
+    /// submission instant; the reader stamps [`Stage::UpstreamWait`]
+    /// (submit → completion) and commits the trace on reply arrival.
+    trace: Option<(Box<TraceBuilder>, Instant)>,
 }
 
 /// The live pooled connection: the write half plus the negotiated window.
@@ -82,6 +88,9 @@ pub struct Backend {
     readers: Mutex<WorkerPool>,
     /// Proxy-wide stop flag (readers poll it between read timeouts).
     stop: Arc<AtomicBool>,
+    /// The proxy's shared tracer: every backend commits its finished
+    /// proxy-side timelines into the same ring.
+    tracer: Arc<Tracer>,
     // Scrape counters.
     forwarded: AtomicU64,
     reconnects: AtomicU64,
@@ -90,13 +99,15 @@ pub struct Backend {
 
 impl Backend {
     /// Handle for the backend at `addr`, initially down (the health
-    /// monitor probes it up). `cap` bounds the in-flight window.
+    /// monitor probes it up). `cap` bounds the in-flight window; `tracer`
+    /// is the proxy-wide ring that finished proxy-side timelines land in.
     pub fn new(
         id: usize,
         addr: String,
         cap: usize,
         io_timeout: Duration,
         stop: Arc<AtomicBool>,
+        tracer: Arc<Tracer>,
     ) -> Backend {
         Backend {
             id,
@@ -112,6 +123,7 @@ impl Backend {
             schemes: Mutex::new(Vec::new()),
             readers: Mutex::new(WorkerPool::new()),
             stop,
+            tracer,
             forwarded: AtomicU64::new(0),
             reconnects: AtomicU64::new(0),
             lost: AtomicU64::new(0),
@@ -183,12 +195,16 @@ impl Backend {
     /// line; its `id` is rewritten to a proxy-unique upstream id before
     /// the send and the original `client_id` is recorded so the reader can
     /// tag the completion back. `reply` is the client connection's writer
-    /// channel.
+    /// channel. `trace` is the request's proxy-side trace builder (if
+    /// sampled): a successful submit takes it into the pending table so
+    /// the reader can close the timeline; on refusal it stays with the
+    /// caller for fail-over or commit.
     pub fn forward(
         &self,
         req: &Json,
         client_id: u64,
         reply: &Sender<String>,
+        trace: &mut Option<Box<TraceBuilder>>,
     ) -> Result<(), ForwardError> {
         if !self.is_healthy() {
             return Err(ForwardError::Down);
@@ -203,11 +219,13 @@ impl Backend {
             return Err(ForwardError::Busy);
         }
         let upstream_id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let submitted = trace.take().map(|b| (b, Instant::now()));
         self.pending.lock().unwrap().insert(
             upstream_id,
             Route {
                 client_id,
                 tx: reply.clone(),
+                trace: submitted,
             },
         );
         let mut line = req.clone();
@@ -218,7 +236,10 @@ impl Backend {
             // Undo this request first so the caller's error reply is the
             // only answer its client sees, then abandon the connection
             // (draining everyone else's pendings with retryable replies).
-            self.pending.lock().unwrap().remove(&upstream_id);
+            // The trace builder returns to the caller for the fail-over.
+            if let Some(route) = self.pending.lock().unwrap().remove(&upstream_id) {
+                *trace = route.trace.map(|(b, _)| b);
+            }
             self.inflight.fetch_sub(1, Ordering::AcqRel);
             self.abandon(conn);
             return Err(ForwardError::Down);
@@ -292,6 +313,22 @@ impl Backend {
         parse_stats(&line).ok()
     }
 
+    /// Scrape the backend's trace ring over a short-lived connection —
+    /// the fan-out side of the proxy's stitched `{"cmd":"trace"}` reply.
+    /// `None` means down/unresponsive within the timeout (the stitched
+    /// reply simply omits that backend's timelines).
+    pub fn fetch_traces(&self, query: &TraceQuery) -> Option<Vec<Trace>> {
+        let stream = self.dial().ok()?;
+        stream.set_read_timeout(Some(self.io_timeout)).ok()?;
+        let mut reader = BufReader::new(stream.try_clone().ok()?);
+        let mut writer = stream;
+        writeln!(writer, "{}", format_trace_query(query)).ok()?;
+        writer.flush().ok()?;
+        let mut line = String::new();
+        reader.read_line(&mut line).ok()?;
+        parse_traces(&line).ok()
+    }
+
     /// Tear the backend down for proxy shutdown: abandon the connection
     /// (answering every pending reply) and join the reader threads.
     pub fn shutdown(&self) {
@@ -320,6 +357,17 @@ impl Backend {
             self.lost.fetch_add(1, Ordering::Relaxed);
             self.inflight.fetch_sub(1, Ordering::AcqRel);
             let _ = route.tx.send(format_overloaded(route.client_id));
+            // The request died with the connection — commit its timeline
+            // anyway (noted, so a trace query shows where it was lost).
+            if let Some((mut builder, submitted)) = route.trace {
+                builder.span_noted(
+                    Stage::UpstreamWait,
+                    submitted,
+                    Instant::now(),
+                    Some("abandoned".to_string()),
+                );
+                self.tracer.finish(builder);
+            }
         }
     }
 
@@ -419,6 +467,10 @@ fn reader_loop(backend: &Arc<Backend>, stream: TcpStream, epoch: u64) {
         if let Some(route) = route {
             backend.inflight.fetch_sub(1, Ordering::AcqRel);
             let _ = route.tx.send(rewrite_reply_id(trimmed, route.client_id));
+            if let Some((mut builder, submitted)) = route.trace {
+                builder.span(Stage::UpstreamWait, submitted, Instant::now());
+                backend.tracer.finish(builder);
+            }
         }
     }
     backend.teardown(epoch);
@@ -430,12 +482,17 @@ mod tests {
     use std::sync::mpsc::channel;
 
     fn backend() -> Arc<Backend> {
+        backend_tracing(crate::trace::TraceConfig::default())
+    }
+
+    fn backend_tracing(trace: crate::trace::TraceConfig) -> Arc<Backend> {
         Arc::new(Backend::new(
             0,
             "127.0.0.1:1".to_string(), // nothing listens here
             4,
             Duration::from_millis(100),
             Arc::new(AtomicBool::new(false)),
+            Arc::new(Tracer::new(trace)),
         ))
     }
 
@@ -444,7 +501,7 @@ mod tests {
         let b = backend();
         let (tx, rx) = channel();
         let req = Json::obj(vec![("id", Json::Num(7.0))]);
-        assert_eq!(b.forward(&req, 7, &tx), Err(ForwardError::Down));
+        assert_eq!(b.forward(&req, 7, &tx, &mut None), Err(ForwardError::Down));
         assert!(rx.try_recv().is_err(), "refused forwards must not reply");
         assert_eq!(b.forwarded(), 0);
         // Connecting to a dead address fails and leaves the backend down.
@@ -462,6 +519,7 @@ mod tests {
             Route {
                 client_id: 9,
                 tx: tx.clone(),
+                trace: None,
             },
         );
         b.inflight.fetch_add(1, Ordering::AcqRel);
@@ -472,6 +530,40 @@ mod tests {
         assert_eq!(b.inflight(), 0, "abandon releases window slots");
         assert_eq!(b.lost(), 1);
         assert!(!b.is_healthy());
+    }
+
+    #[test]
+    fn abandon_commits_inflight_traces_with_an_abandoned_note() {
+        // A sampled request whose backend dies mid-flight must still land
+        // in the proxy's trace ring, with UpstreamWait noted "abandoned".
+        let b = backend_tracing(crate::trace::TraceConfig {
+            rate: 1.0,
+            slow_us: 0,
+            buffer: 8,
+        });
+        let (tx, rx) = channel();
+        let mut builder = b.tracer.begin(55).expect("rate 1.0 samples everything");
+        builder.span_since(Stage::Route, Instant::now());
+        b.pending.lock().unwrap().insert(
+            7,
+            Route {
+                client_id: 55,
+                tx: tx.clone(),
+                trace: Some((builder, Instant::now())),
+            },
+        );
+        b.inflight.fetch_add(1, Ordering::AcqRel);
+        b.mark_down();
+        let line = rx.recv().unwrap();
+        assert!(line.contains("\"overloaded\":true"), "{line}");
+        let traces = b.tracer.query(0, None, None, 0);
+        assert_eq!(traces.len(), 1, "abandoned trace must be committed");
+        let wait = traces[0]
+            .spans
+            .iter()
+            .find(|s| s.stage == Stage::UpstreamWait)
+            .expect("abandon stamps UpstreamWait");
+        assert_eq!(wait.note.as_deref(), Some("abandoned"));
     }
 
     #[test]

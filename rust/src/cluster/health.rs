@@ -9,8 +9,10 @@
 //! marking it up, so routed traffic always has somewhere to go the moment
 //! the verdict flips. A failed probe marks the backend down immediately —
 //! abandoning its pooled connection answers every pending reply with a
-//! retryable `overloaded` line — and doubles the probe interval up to
-//! `max_backoff` so a long-dead backend is not hammered.
+//! retryable `overloaded` line (sampled requests' proxy-side timelines
+//! are still committed, with their upstream wait noted `abandoned`, so a
+//! trace query shows where in-flight work died) — and doubles the probe
+//! interval up to `max_backoff` so a long-dead backend is not hammered.
 //!
 //! Routing reacts through [`crate::cluster::ring::HashRing::route_where`]:
 //! keys owned by a down backend deterministically fail over to the next
@@ -109,6 +111,7 @@ mod tests {
                     4,
                     Duration::from_millis(50),
                     stop.clone(),
+                    Arc::new(crate::trace::Tracer::new(crate::trace::TraceConfig::default())),
                 ))
             })
             .collect();

@@ -37,14 +37,32 @@
 //! reduction the backends use shard-to-shard — the cluster-wide
 //! estimator view. Proxy-tier counters ride in a `proxy` sub-object.
 //! `{"cmd":"shutdown"}` stops the **proxy only**; backends keep serving.
+//!
+//! Observability: the proxy runs its own [`Tracer`] (`--trace-rate`,
+//! `--trace-slow-us`, `--trace-buffer`). A sampled request gets a
+//! proxy-side timeline — `route` (ring lookup), `forward` (request
+//! rewrite), `upstream_wait` (submit → completion) — and its context
+//! rides upstream in the request line's `"trace"` field, so the backend
+//! records the same trace id (proto 3; older backends ignore the field).
+//! `{"cmd":"trace"}` then stitches: the proxy's own matching timelines
+//! are returned with each backend's same-id timelines attached as an
+//! `"upstream"` array (tagged with the serving backend's address), and
+//! backend timelines whose proxy-side context is gone are appended
+//! standalone. `{"cmd":"metrics"}` (and a raw `GET /metrics` line)
+//! serves the merged cluster view in Prometheus text exposition format,
+//! plus proxy-tier counters, per-backend gauges, and the proxy tracer's
+//! stage histograms.
 
 use crate::cluster::backend::{Backend, ForwardError};
 use crate::cluster::health::{health_loop, HealthPolicy};
 use crate::cluster::ring::{HashRing, DEFAULT_REPLICAS};
-use crate::coordinator::metrics::{percentile_from_buckets, BUCKETS};
+use crate::coordinator::metrics::{approx_sum_us, bucket_upper, percentile_from_buckets, BUCKETS};
 use crate::coordinator::protocol::{
-    format_error, format_hello, format_overloaded, line_id, FidelityCell, StatsSummary,
+    format_error, format_hello, format_metrics_reply, format_overloaded, line_id, FidelityCell,
+    StatsSummary, TraceQuery,
 };
+use crate::coordinator::server::http_metrics_response;
+use crate::trace::{decode_wire, PromText, Stage, Trace, TraceConfig, Tracer};
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 use crate::util::threadpool::WorkerPool;
@@ -74,6 +92,14 @@ pub struct ProxyConfig {
     pub probe_timeout_ms: u64,
     /// Probe backoff ceiling for dead backends, in milliseconds.
     pub max_backoff_ms: u64,
+    /// Fraction of requests that get a proxy-side trace timeline
+    /// (`--trace-rate`; 0 disables sampling).
+    pub trace_rate: f64,
+    /// Promote any request at least this slow (µs) into the trace ring,
+    /// sampled or not (`--trace-slow-us`; 0 disables promotion).
+    pub trace_slow_us: u64,
+    /// Completed-trace ring capacity (`--trace-buffer`).
+    pub trace_buffer: usize,
 }
 
 impl Default for ProxyConfig {
@@ -86,6 +112,9 @@ impl Default for ProxyConfig {
             probe_interval_ms: 500,
             probe_timeout_ms: 2_000,
             max_backoff_ms: 8_000,
+            trace_rate: 0.0,
+            trace_slow_us: 0,
+            trace_buffer: 256,
         }
     }
 }
@@ -103,6 +132,9 @@ struct Cluster {
     /// Client reply lines delivered, and the flushes they coalesced into.
     flushed_lines: AtomicU64,
     flushes: AtomicU64,
+    /// The proxy tier's own tracer: route/forward/upstream-wait timelines
+    /// land here (backends finish them on reply arrival).
+    tracer: Arc<Tracer>,
 }
 
 impl Cluster {
@@ -125,6 +157,11 @@ pub fn run_proxy(cfg: &ProxyConfig) -> Result<()> {
     listener.set_nonblocking(true)?;
     let stop = Arc::new(AtomicBool::new(false));
     let io_timeout = Duration::from_millis(cfg.probe_timeout_ms.max(100));
+    let tracer = Arc::new(Tracer::new(TraceConfig {
+        rate: cfg.trace_rate,
+        slow_us: cfg.trace_slow_us,
+        buffer: cfg.trace_buffer,
+    }));
     let backends: Vec<Arc<Backend>> = cfg
         .backends
         .iter()
@@ -136,6 +173,7 @@ pub fn run_proxy(cfg: &ProxyConfig) -> Result<()> {
                 cfg.backend_inflight.max(1),
                 io_timeout,
                 stop.clone(),
+                tracer.clone(),
             ))
         })
         .collect();
@@ -148,6 +186,7 @@ pub fn run_proxy(cfg: &ProxyConfig) -> Result<()> {
         errors: AtomicU64::new(0),
         flushed_lines: AtomicU64::new(0),
         flushes: AtomicU64::new(0),
+        tracer,
     });
     let policy = HealthPolicy {
         interval: Duration::from_millis(cfg.probe_interval_ms.max(10)),
@@ -299,6 +338,12 @@ fn client_read_loop(
             line.clear();
             continue;
         }
+        // Raw Prometheus scrape: answer with an HTTP response and close
+        // (same fast path as the backend server).
+        if trimmed.starts_with("GET ") {
+            let _ = tx.send(http_metrics_response(&proxy_metrics_text(cluster)));
+            break;
+        }
         let mut stop = false;
         let sent = match Json::parse(trimmed) {
             Ok(json) => match json.get("cmd").and_then(Json::as_str) {
@@ -325,6 +370,8 @@ fn client_read_loop(
                     ))
                 }
                 Some("stats") => tx.send(merged_stats_json(cluster)),
+                Some("trace") => tx.send(stitched_traces_json(cluster, &json)),
+                Some("metrics") => tx.send(format_metrics_reply(&proxy_metrics_text(cluster))),
                 Some("shutdown") => {
                     cluster.stop.store(true, Ordering::Release);
                     stop = true;
@@ -385,6 +432,14 @@ fn advertised_schemes(cluster: &Cluster) -> Vec<String> {
 /// forward, and fail over once if the pooled connection died between the
 /// health check and the submit. Window-full backpressure and all-down
 /// both answer `overloaded` — retryable by design.
+///
+/// Sampled requests (proxy tracer, or an upstream `"trace"` tag the
+/// client supplied) get a proxy-side timeline: `route` around the ring
+/// lookup, `forward` around the request rewrite, and `upstream_wait`
+/// stamped by the backend reader on completion. The context propagates
+/// upstream in the forwarded line's `"trace"` field so the serving
+/// backend records the same trace id. A request the proxy bounces
+/// (`overloaded`) commits its partial timeline immediately.
 fn dispatch(
     cluster: &Arc<Cluster>,
     json: &Json,
@@ -402,13 +457,47 @@ fn dispatch(
         .and_then(Json::as_f64)
         .map(|v| v as u64)
         .unwrap_or(0);
+    let mut trace = match json.get("trace").and_then(Json::as_str).and_then(decode_wire) {
+        Some((id, flags)) => cluster.tracer.adopt(client_id, id, flags),
+        None => cluster.tracer.begin(client_id),
+    };
+    let route_start = trace.as_ref().map(|_| Instant::now());
     let key = route_key(json);
     let healthy = |m: usize| cluster.backends[m].is_healthy();
-    let Some(owner) = cluster.ring.route_where(&key, healthy) else {
+    let owner = cluster.ring.route_where(&key, healthy);
+    if let Some(b) = trace.as_deref_mut() {
+        b.span_since(Stage::Route, route_start.unwrap());
+        let model = json.get("model").and_then(Json::as_str).unwrap_or("digits_linear");
+        let scheme = json
+            .get("scheme")
+            .or_else(|| json.get("mode"))
+            .and_then(Json::as_str)
+            .unwrap_or("auto");
+        let k = json.get("k").and_then(Json::as_usize).unwrap_or(0) as u32;
+        b.annotate(model, scheme, k);
+    }
+    let Some(owner) = owner else {
         cluster.overloaded.fetch_add(1, Ordering::Relaxed);
+        if let Some(b) = trace.take() {
+            cluster.tracer.finish(b);
+        }
         return tx.send(format_overloaded(client_id));
     };
-    match cluster.backends[owner].forward(json, client_id, tx) {
+    // Propagate the trace context upstream: the forwarded line carries
+    // our wire tag (proto 3 — a pre-trace backend just ignores it).
+    let tagged = trace.as_ref().map(|b| {
+        let forward_start = Instant::now();
+        let mut line = json.clone();
+        if let Json::Obj(fields) = &mut line {
+            fields.insert("trace".to_string(), Json::Str(b.wire_tag()));
+        }
+        (line, forward_start)
+    });
+    let req = tagged.as_ref().map_or(json, |(line, _)| line);
+    if let (Some(b), Some((_, start))) = (trace.as_deref_mut(), tagged.as_ref()) {
+        b.span_since(Stage::Forward, *start);
+    }
+    let sent = match cluster.backends[owner].forward(req, client_id, tx, &mut trace) {
         Ok(()) => Ok(()),
         Err(ForwardError::Busy) => {
             // Backpressure stays on the key's owner: spilling a hot key
@@ -418,9 +507,11 @@ fn dispatch(
         }
         Err(ForwardError::Down) => {
             // The pooled connection died after the health check; fail
-            // over once to the key's deterministic successor.
+            // over once to the key's deterministic successor. The trace
+            // builder survived the refusal and follows the retry.
             let next = cluster.ring.route_where(&key, |m| m != owner && healthy(m));
-            let forwarded = next.map(|m| cluster.backends[m].forward(json, client_id, tx));
+            let forwarded =
+                next.map(|m| cluster.backends[m].forward(req, client_id, tx, &mut trace));
             match forwarded {
                 Some(Ok(())) => Ok(()),
                 _ => {
@@ -429,27 +520,44 @@ fn dispatch(
                 }
             }
         }
+    };
+    // A bounced request never reaches a backend reader: commit whatever
+    // timeline it accumulated so trace queries still see it.
+    if let Some(b) = trace.take() {
+        cluster.tracer.finish(b);
     }
+    sent
 }
 
-/// Scrape every healthy backend and merge into one `stats` JSON line (see
-/// the module docs for the merge semantics). The scrape is fresh rather
-/// than reusing the health prober's last fetch — operators (and the CI
-/// sum checks) expect point-in-time counters, not probe-interval-stale
-/// ones — and concurrent, so one slow backend costs one probe timeout,
-/// not one per backend.
-fn merged_stats_json(cluster: &Cluster) -> String {
-    let healthy: Vec<&Arc<Backend>> = cluster.backends.iter().filter(|b| b.is_healthy()).collect();
-    let summaries: Vec<StatsSummary> = std::thread::scope(|scope| {
-        let fetches: Vec<_> = healthy
-            .iter()
-            .map(|b| scope.spawn(move || b.fetch_stats()))
-            .collect();
-        fetches
-            .into_iter()
-            .filter_map(|f| f.join().ok().flatten())
-            .collect()
-    });
+/// The merged cluster-wide view of a set of backend `stats` summaries —
+/// the shared substrate of the JSON `stats` merge and the Prometheus
+/// `metrics` exposition. Pure over the summaries (no sockets), so the
+/// merge semantics — bucket-wise histogram sums, the legacy bucket-less
+/// percentile fallback, per-cell window and fidelity reductions — are
+/// directly testable.
+struct MergedStats {
+    /// Counters summed; percentiles resolved (merged-histogram values,
+    /// kept an upper bound by any legacy backend's own percentiles).
+    total: StatsSummary,
+    /// Per-shard request counts concatenated in backend order.
+    per_shard: Vec<f64>,
+    /// Bucket-wise sum of the lifetime latency histograms.
+    bucket_sum: Vec<u64>,
+    /// Merged recent-window cells keyed as `stats.recent` keys them
+    /// (scheme wire names and `model/k=K`).
+    recent: BTreeMap<String, (u64, Vec<u64>)>,
+    /// Fidelity cells merged per `(model, scheme, k)` via parallel
+    /// Welford.
+    cells: BTreeMap<(String, String, u32), FidelityCell>,
+    /// Backend kernel consensus: agreed label, `"mixed"`, or `None` when
+    /// no backend reported one.
+    kernel: Option<String>,
+    /// Summaries that went into the merge.
+    reporting: usize,
+}
+
+/// Merge backend `stats` summaries (see the module docs for semantics).
+fn merge_summaries(summaries: &[StatsSummary]) -> MergedStats {
     let mut total = StatsSummary::default();
     let mut per_shard: Vec<f64> = Vec::new();
     let mut cells: BTreeMap<(String, String, u32), FidelityCell> = BTreeMap::new();
@@ -459,7 +567,8 @@ fn merged_stats_json(cluster: &Cluster) -> String {
     let mut any_buckets = false;
     let mut legacy = (0.0f64, 0.0f64, 0.0f64); // (p50, p95, p99) maxima
     let mut recent: BTreeMap<String, (u64, Vec<u64>)> = BTreeMap::new();
-    for s in &summaries {
+    let mut kernel: Option<String> = None;
+    for s in summaries {
         total.requests += s.requests;
         total.errors += s.errors;
         total.rejected += s.rejected;
@@ -505,6 +614,14 @@ fn merged_stats_json(cluster: &Cluster) -> String {
                 .and_modify(|have| have.estimate.merge(&cell.estimate))
                 .or_insert_with(|| cell.clone());
         }
+        // Kernel consensus: agreed label, "mixed" when backends differ.
+        if let Some(k) = &s.kernel {
+            kernel = Some(match kernel {
+                None => k.clone(),
+                Some(have) if have == *k => have,
+                Some(_) => "mixed".to_string(),
+            });
+        }
     }
     // True cluster percentiles from the merged histogram; any legacy
     // (bucket-less) backend's own percentiles keep the result an upper
@@ -517,6 +634,49 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         total.p95_us = total.p95_us.max(percentile_from_buckets(&bucket_sum, 0.95));
         total.p99_us = total.p99_us.max(percentile_from_buckets(&bucket_sum, 0.99));
     }
+    MergedStats {
+        total,
+        per_shard,
+        bucket_sum,
+        recent,
+        cells,
+        kernel,
+        reporting: summaries.len(),
+    }
+}
+
+/// Scrape every healthy backend's `stats` concurrently. Fresh rather
+/// than reusing the health prober's last fetch — operators (and the CI
+/// sum checks) expect point-in-time counters, not probe-interval-stale
+/// ones — and concurrent, so one slow backend costs one probe timeout,
+/// not one per backend.
+fn scrape_stats(cluster: &Cluster) -> Vec<StatsSummary> {
+    let healthy: Vec<&Arc<Backend>> = cluster.backends.iter().filter(|b| b.is_healthy()).collect();
+    std::thread::scope(|scope| {
+        let fetches: Vec<_> = healthy
+            .iter()
+            .map(|b| scope.spawn(move || b.fetch_stats()))
+            .collect();
+        fetches
+            .into_iter()
+            .filter_map(|f| f.join().ok().flatten())
+            .collect()
+    })
+}
+
+/// Scrape every healthy backend and merge into one `stats` JSON line (see
+/// the module docs for the merge semantics).
+fn merged_stats_json(cluster: &Cluster) -> String {
+    let summaries = scrape_stats(cluster);
+    let m = merge_summaries(&summaries);
+    let MergedStats {
+        total,
+        per_shard,
+        bucket_sum,
+        recent,
+        cells,
+        ..
+    } = &m;
     let mean_batch = if total.batches == 0 {
         0.0
     } else {
@@ -549,18 +709,10 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         .collect();
     // The cluster-wide kernel label: the backends' when they agree,
     // "mixed" when they differ, the proxy's own build when none reported.
-    let mut kernel: Option<String> = None;
-    for s in &summaries {
-        if let Some(k) = &s.kernel {
-            kernel = Some(match kernel {
-                None => k.clone(),
-                Some(have) if have == *k => have,
-                Some(_) => "mixed".to_string(),
-            });
-        }
-    }
-    let kernel =
-        kernel.unwrap_or_else(|| crate::kernels::active_id().name().to_string());
+    let kernel = m
+        .kernel
+        .clone()
+        .unwrap_or_else(|| crate::kernels::active_id().name().to_string());
     let recent_json: BTreeMap<String, Json> = recent
         .iter()
         .map(|(scheme, (requests, buckets))| {
@@ -585,7 +737,7 @@ fn merged_stats_json(cluster: &Cluster) -> String {
     let proxy = Json::obj(vec![
         ("backends", Json::Num(cluster.backends.len() as f64)),
         ("healthy", Json::Num(cluster.healthy_count() as f64)),
-        ("reporting", Json::Num(summaries.len() as f64)),
+        ("reporting", Json::Num(m.reporting as f64)),
         ("overloaded", Json::Num(cluster.overloaded.load(Ordering::Relaxed) as f64)),
         ("errors", Json::Num(cluster.errors.load(Ordering::Relaxed) as f64)),
         ("uptime_s", Json::Num(uptime)),
@@ -626,8 +778,327 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         ("uptime_s", Json::Num(total.uptime_s)),
         ("throughput_rps", Json::Num(throughput)),
         ("shards", Json::Num(total.shards as f64)),
-        ("per_shard_requests", Json::nums(&per_shard)),
+        ("per_shard_requests", Json::nums(per_shard)),
         ("proxy", proxy),
+    ])
+    .to_string()
+}
+
+/// The proxy's Prometheus text exposition (the `{"cmd":"metrics"}` verb
+/// and the raw `GET /metrics` fast path): the merged cluster-wide
+/// counters, latency and recent-window histograms, and fidelity gauges —
+/// structurally the same families the backend tier exposes — plus
+/// proxy-tier counters, per-backend gauges, and the proxy tracer's own
+/// counters and stage histograms.
+fn proxy_metrics_text(cluster: &Cluster) -> String {
+    let summaries = scrape_stats(cluster);
+    let m = merge_summaries(&summaries);
+    let mut p = PromText::new();
+    p.scalar(
+        "dither_requests_total",
+        "counter",
+        "Completed requests (cluster-wide)",
+        m.total.requests as f64,
+    );
+    p.scalar(
+        "dither_errors_total",
+        "counter",
+        "Protocol and execution errors (cluster-wide)",
+        m.total.errors as f64,
+    );
+    p.scalar(
+        "dither_rejected_total",
+        "counter",
+        "Overload rejections (cluster-wide)",
+        m.total.rejected as f64,
+    );
+    p.scalar(
+        "dither_timeouts_total",
+        "counter",
+        "Watchdog-answered requests (cluster-wide)",
+        m.total.timeouts as f64,
+    );
+    p.scalar(
+        "dither_batches_total",
+        "counter",
+        "Executed batches (cluster-wide)",
+        m.total.batches as f64,
+    );
+    p.scalar(
+        "dither_batched_requests_total",
+        "counter",
+        "Requests served inside batches (cluster-wide)",
+        m.total.batched_requests as f64,
+    );
+    p.scalar(
+        "dither_uptime_seconds",
+        "gauge",
+        "Proxy uptime",
+        cluster.started.elapsed().as_secs_f64(),
+    );
+    p.family(
+        "dither_kernel_info",
+        "gauge",
+        "Cluster kernel consensus (value is always 1)",
+    );
+    let kernel = m
+        .kernel
+        .clone()
+        .unwrap_or_else(|| crate::kernels::active_id().name().to_string());
+    p.sample("dither_kernel_info", &[("kernel", &kernel)], 1.0);
+    p.family(
+        "dither_latency_us",
+        "histogram",
+        "Cluster-wide end-to-end request latency",
+    );
+    p.histogram_series(
+        "dither_latency_us",
+        &[],
+        &m.bucket_sum,
+        m.total.latency_sum_us,
+        bucket_upper,
+    );
+    // Same labeled split as the backend tier: scheme cells as
+    // {scheme="..."}, (model, k) cells as {model="...",k="..."}.
+    if m.recent.values().any(|(count, _)| *count > 0) {
+        p.family(
+            "dither_recent_latency_us",
+            "histogram",
+            "Rotating-window request latency per scheme and per (model, k), cluster-wide",
+        );
+        for (key, (count, buckets)) in &m.recent {
+            if *count == 0 {
+                continue;
+            }
+            match key.split_once("/k=") {
+                Some((model, k)) => p.histogram_series(
+                    "dither_recent_latency_us",
+                    &[("model", model), ("k", k)],
+                    buckets,
+                    approx_sum_us(buckets),
+                    bucket_upper,
+                ),
+                None => p.histogram_series(
+                    "dither_recent_latency_us",
+                    &[("scheme", key)],
+                    buckets,
+                    approx_sum_us(buckets),
+                    bucket_upper,
+                ),
+            }
+        }
+    }
+    if !m.cells.is_empty() {
+        p.family(
+            "dither_fidelity_samples",
+            "gauge",
+            "Shadow samples per (model, scheme, k), cluster-wide",
+        );
+        for cell in m.cells.values() {
+            let k = cell.k.to_string();
+            p.sample(
+                "dither_fidelity_samples",
+                &[("model", &cell.model), ("scheme", cell.scheme.wire_name()), ("k", &k)],
+                cell.estimate.samples as f64,
+            );
+        }
+        p.family(
+            "dither_fidelity_bias",
+            "gauge",
+            "Mean signed logit error per (model, scheme, k), cluster-wide",
+        );
+        for cell in m.cells.values() {
+            let k = cell.k.to_string();
+            p.sample(
+                "dither_fidelity_bias",
+                &[("model", &cell.model), ("scheme", cell.scheme.wire_name()), ("k", &k)],
+                cell.estimate.bias,
+            );
+        }
+        p.family(
+            "dither_fidelity_mse",
+            "gauge",
+            "Mean squared logit error per (model, scheme, k), cluster-wide",
+        );
+        for cell in m.cells.values() {
+            let k = cell.k.to_string();
+            p.sample(
+                "dither_fidelity_mse",
+                &[("model", &cell.model), ("scheme", cell.scheme.wire_name()), ("k", &k)],
+                cell.estimate.mse(),
+            );
+        }
+    }
+    // Proxy tier: cluster shape, bounce counters, per-backend gauges.
+    p.scalar(
+        "dither_proxy_backends",
+        "gauge",
+        "Configured backends",
+        cluster.backends.len() as f64,
+    );
+    p.scalar(
+        "dither_proxy_healthy_backends",
+        "gauge",
+        "Backends passing health probes",
+        cluster.healthy_count() as f64,
+    );
+    p.scalar(
+        "dither_proxy_reporting_backends",
+        "gauge",
+        "Backends that answered the merge scrape",
+        m.reporting as f64,
+    );
+    p.scalar(
+        "dither_proxy_overloaded_total",
+        "counter",
+        "Requests the proxy bounced (no live backend or window full)",
+        cluster.overloaded.load(Ordering::Relaxed) as f64,
+    );
+    p.scalar(
+        "dither_proxy_errors_total",
+        "counter",
+        "Lines the proxy itself failed (bad JSON, unknown cmd)",
+        cluster.errors.load(Ordering::Relaxed) as f64,
+    );
+    let per_backend: [(&str, &str, &str, fn(&Backend) -> f64); 5] = [
+        ("dither_proxy_forwarded_total", "counter", "Requests forwarded per backend", |b| {
+            b.forwarded() as f64
+        }),
+        ("dither_proxy_lost_total", "counter", "Pending replies abandoned per backend", |b| {
+            b.lost() as f64
+        }),
+        (
+            "dither_proxy_reconnects_total",
+            "counter",
+            "Pooled-connection (re)establishments per backend",
+            |b| b.reconnects() as f64,
+        ),
+        ("dither_proxy_inflight", "gauge", "Forwarded-but-unanswered requests per backend", |b| {
+            b.inflight() as f64
+        }),
+        ("dither_proxy_backend_up", "gauge", "Per-backend health verdict (1 = up)", |b| {
+            if b.is_healthy() {
+                1.0
+            } else {
+                0.0
+            }
+        }),
+    ];
+    for (name, kind, help, value) in per_backend {
+        p.family(name, kind, help);
+        for b in &cluster.backends {
+            p.sample(name, &[("backend", b.addr())], value(b));
+        }
+    }
+    p.scalar(
+        "dither_traces_begun_total",
+        "counter",
+        "Proxy trace contexts handed out (sampled + speculative)",
+        cluster.tracer.begun() as f64,
+    );
+    p.scalar(
+        "dither_traces_committed_total",
+        "counter",
+        "Proxy traces committed to the ring buffer",
+        cluster.tracer.committed() as f64,
+    );
+    p.scalar(
+        "dither_traces_slow_total",
+        "counter",
+        "Proxy traces promoted by the slow threshold",
+        cluster.tracer.slow_promoted() as f64,
+    );
+    p.scalar(
+        "dither_traces_evicted_total",
+        "counter",
+        "Proxy traces evicted from the full ring buffer",
+        cluster.tracer.evicted() as f64,
+    );
+    p.scalar(
+        "dither_traces_resident",
+        "gauge",
+        "Completed proxy traces resident in the ring buffer",
+        cluster.tracer.resident() as f64,
+    );
+    p.stage_histograms(&cluster.tracer.stage_snapshots());
+    p.finish()
+}
+
+/// The trace-query filters of a raw `{"cmd":"trace"}` line (the proxy
+/// parses request lines itself rather than through `parse_message`).
+fn trace_query_of(json: &Json) -> TraceQuery {
+    TraceQuery {
+        min_us: json
+            .get("min_us")
+            .and_then(Json::as_f64)
+            .map(|v| v.max(0.0) as u64)
+            .unwrap_or(0),
+        model: json.get("model").and_then(Json::as_str).map(str::to_string),
+        scheme: json.get("scheme").and_then(Json::as_str).map(str::to_string),
+        limit: json.get("limit").and_then(Json::as_usize).unwrap_or(0),
+    }
+}
+
+/// Stitch proxy-side timelines with backend dumps: each proxy trace
+/// gains an `"upstream"` array of the same-id backend timelines (each
+/// tagged with the serving backend's address), and backend timelines
+/// whose proxy-side context is gone — evicted from the proxy ring, or
+/// promoted only upstream — are appended standalone so nothing the
+/// cluster retained is hidden. `limit` caps the stitched list (0 = no
+/// cap). Pure (no sockets): the stitching semantics are directly
+/// testable.
+fn stitch(local: &[Trace], upstream: &[(String, Vec<Trace>)], limit: usize) -> Vec<Json> {
+    let mut by_id: BTreeMap<u64, Vec<Json>> = BTreeMap::new();
+    for (addr, traces) in upstream {
+        for t in traces {
+            let mut j = t.to_json();
+            if let Json::Obj(fields) = &mut j {
+                fields.insert("backend".to_string(), Json::Str(addr.clone()));
+            }
+            by_id.entry(t.trace_id).or_default().push(j);
+        }
+    }
+    let mut out: Vec<Json> = Vec::new();
+    for t in local {
+        let mut j = t.to_json();
+        if let Json::Obj(fields) = &mut j {
+            if let Some(ups) = by_id.remove(&t.trace_id) {
+                fields.insert("upstream".to_string(), Json::Arr(ups));
+            }
+        }
+        out.push(j);
+    }
+    for (_, ups) in by_id {
+        out.extend(ups);
+    }
+    if limit > 0 {
+        out.truncate(limit);
+    }
+    out
+}
+
+/// Answer a cluster-level `{"cmd":"trace"}` query: the proxy's own ring
+/// filtered by the query, every healthy backend's ring fanned out to
+/// concurrently, and the results stitched into cross-process timelines
+/// (see [`stitch`]).
+fn stitched_traces_json(cluster: &Cluster, json: &Json) -> String {
+    let q = trace_query_of(json);
+    let local = cluster.tracer.query(q.min_us, q.model.as_deref(), q.scheme.as_deref(), q.limit);
+    let healthy: Vec<&Arc<Backend>> = cluster.backends.iter().filter(|b| b.is_healthy()).collect();
+    let upstream: Vec<(String, Vec<Trace>)> = std::thread::scope(|scope| {
+        let fetches: Vec<_> = healthy
+            .iter()
+            .map(|b| scope.spawn(|| b.fetch_traces(&q).map(|ts| (b.addr().to_string(), ts))))
+            .collect();
+        fetches
+            .into_iter()
+            .filter_map(|f| f.join().ok().flatten())
+            .collect()
+    });
+    let stitched = stitch(&local, &upstream, q.limit);
+    Json::obj(vec![
+        ("count", Json::Num(stitched.len() as f64)),
+        ("traces", Json::Arr(stitched)),
     ])
     .to_string()
 }
@@ -664,5 +1135,130 @@ mod tests {
         let cfg = ProxyConfig::default();
         let err = run_proxy(&cfg).unwrap_err().to_string();
         assert!(err.contains("hash ring cannot be empty"), "{err}");
+    }
+
+    fn trace(id: u64, model: &str) -> Trace {
+        Trace {
+            trace_id: id,
+            request_id: id,
+            model: model.to_string(),
+            scheme: "dither".to_string(),
+            k: 4,
+            shard: None,
+            total_us: 100,
+            sampled: true,
+            slow: false,
+            spans: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn stitch_attaches_upstream_timelines_and_keeps_orphans() {
+        let local = vec![trace(0xA, "digits_linear"), trace(0xB, "digits_linear")];
+        let upstream = vec![
+            ("127.0.0.1:7801".to_string(), vec![trace(0xA, "digits_linear")]),
+            ("127.0.0.1:7802".to_string(), vec![trace(0xC, "fashion_mlp")]),
+        ];
+        let out = stitch(&local, &upstream, 0);
+        assert_eq!(out.len(), 3, "2 proxy traces + 1 orphaned backend trace");
+        // Trace 0xA carries its backend timeline, tagged with the address.
+        let a = &out[0];
+        let ups = a.get("upstream").and_then(Json::as_arr).expect("stitched upstream array");
+        assert_eq!(ups.len(), 1);
+        assert_eq!(
+            ups[0].get("backend").and_then(Json::as_str),
+            Some("127.0.0.1:7801"),
+            "upstream timeline names its serving backend"
+        );
+        // Trace 0xB matched nothing upstream: no upstream array.
+        assert!(out[1].get("upstream").is_none());
+        // The orphan (0xC) rides standalone, still backend-tagged.
+        assert_eq!(out[2].get("backend").and_then(Json::as_str), Some("127.0.0.1:7802"));
+        // The limit caps the stitched list.
+        assert_eq!(stitch(&local, &upstream, 1).len(), 1);
+        // Stitched output still round-trips through the reply parser.
+        let line = Json::obj(vec![
+            ("count", Json::Num(out.len() as f64)),
+            ("traces", Json::Arr(out)),
+        ])
+        .to_string();
+        let parsed = crate::coordinator::protocol::parse_traces(&line).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0].trace_id, 0xA);
+    }
+
+    #[test]
+    fn trace_query_of_reads_filters_and_defaults() {
+        let json = Json::parse(
+            "{\"cmd\":\"trace\",\"min_us\":250,\"model\":\"fashion_mlp\",\
+             \"scheme\":\"tpdf\",\"limit\":5}",
+        )
+        .unwrap();
+        let q = trace_query_of(&json);
+        assert_eq!(q.min_us, 250);
+        assert_eq!(q.model.as_deref(), Some("fashion_mlp"));
+        assert_eq!(q.scheme.as_deref(), Some("tpdf"));
+        assert_eq!(q.limit, 5);
+        let bare = Json::parse("{\"cmd\":\"trace\"}").unwrap();
+        assert_eq!(trace_query_of(&bare), TraceQuery::default());
+    }
+
+    #[test]
+    fn bucketless_backends_keep_percentiles_as_upper_bounds() {
+        // A legacy (bucket-less) backend contributes its own percentiles;
+        // a histogram backend contributes buckets. The merge must take the
+        // max of the two views, and an empty merge must stay finite zeros.
+        let empty = merge_summaries(&[]);
+        assert_eq!(empty.total.p99_us, 0.0);
+        assert_eq!(empty.reporting, 0);
+        assert!(empty.bucket_sum.iter().all(|&b| b == 0));
+
+        let legacy = StatsSummary {
+            requests: 10,
+            p50_us: 400.0,
+            p95_us: 900.0,
+            p99_us: 9_000.0,
+            ..StatsSummary::default()
+        };
+        let mut bucketed = StatsSummary {
+            requests: 10,
+            latency_buckets: vec![0; BUCKETS],
+            kernel: Some("wide".to_string()),
+            ..StatsSummary::default()
+        };
+        bucketed.latency_buckets[3] = 10; // all ten requests in 4..=7 µs
+        let m = merge_summaries(&[legacy.clone(), bucketed.clone()]);
+        assert_eq!(m.total.requests, 20);
+        assert_eq!(
+            m.total.p99_us, 9_000.0,
+            "legacy percentile dominates the merged-histogram estimate"
+        );
+        assert!(m.total.p50_us >= 400.0);
+        assert_eq!(m.kernel.as_deref(), Some("wide"));
+        // Histogram-only merge: percentiles come from the summed buckets.
+        let hist_only = merge_summaries(std::slice::from_ref(&bucketed));
+        assert_eq!(hist_only.total.p99_us, crate::coordinator::metrics::bucket_upper(3) as f64);
+        // Legacy-only merge: no buckets at all, percentiles are the maxima.
+        let legacy_only = merge_summaries(std::slice::from_ref(&legacy));
+        assert_eq!(legacy_only.total.p50_us, 400.0);
+        assert_eq!(legacy_only.total.p99_us, 9_000.0);
+    }
+
+    #[test]
+    fn kernel_consensus_reports_mixed_fleets() {
+        let wide = StatsSummary {
+            kernel: Some("wide".to_string()),
+            ..StatsSummary::default()
+        };
+        let scalar = StatsSummary {
+            kernel: Some("scalar".to_string()),
+            ..StatsSummary::default()
+        };
+        assert_eq!(
+            merge_summaries(&[wide.clone(), wide.clone()]).kernel.as_deref(),
+            Some("wide")
+        );
+        assert_eq!(merge_summaries(&[wide, scalar]).kernel.as_deref(), Some("mixed"));
+        assert_eq!(merge_summaries(&[StatsSummary::default()]).kernel, None);
     }
 }

@@ -32,11 +32,22 @@
 //! placeholder key and resolve to a concrete `(scheme, k)` once per
 //! drained batch ([`BatchKey::is_auto`]), so adjacent auto requests under
 //! a pipelined flood coalesce onto one engine call.
+//!
+//! **Tracing**: a traced request carries its [`TraceBuilder`] inside
+//! [`Pending`] (one `Option<Box<_>>`, so untraced queues pay a pointer).
+//! The worker stamps queue-wait, batch-assembly and auto-resolution
+//! spans, fans the engine's batch-level plan/kernel/shadow intervals out
+//! to every traced member (the kernel span is noted
+//! `"<kernel>/<scheme>"`), then times serialization and the writer
+//! handoff before handing the finished builder to the shard pool's
+//! [`Tracer`]. All clock reads are gated on the batch actually containing
+//! a traced request, so `--trace-rate 0` adds no timing work.
 
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::protocol::{format_error, format_response, InferenceRequest};
 use crate::rounding::SchemeId;
+use crate::trace::{BatchStageTimes, Stage, TraceBuilder, Tracer};
 use crate::train::ModelSpec;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -294,6 +305,9 @@ pub struct Pending {
     pub respond_to: ReplyTo,
     /// Enqueue time (for latency accounting).
     pub enqueued: Instant,
+    /// In-flight trace context (`None` for the untraced common case).
+    /// Moves with the request — span recording needs no lock.
+    pub trace: Option<Box<TraceBuilder>>,
 }
 
 /// Batch key: requests with equal keys can share one executable call.
@@ -570,27 +584,39 @@ fn resolve_auto(
 /// close). `shard` tags response lines so clients can observe the
 /// routing; when a `watchdog` is installed, every batch's replies are
 /// registered just before the engine call so a wedged call answers
-/// `timeout` instead of holding its window slots forever.
+/// `timeout` instead of holding its window slots forever. Traced requests
+/// (see [`Pending::trace`]) accumulate their queue/assemble/engine-stage
+/// spans here and finish into `tracer`.
 pub fn worker_loop(
     batcher: &Batcher,
     engine: &Engine,
     metrics: &ShardMetrics,
+    tracer: &Tracer,
     shard: usize,
     watchdog: Option<&ReplyWatchdog>,
 ) {
-    while let Some((key, batch)) = batcher.next_batch() {
+    while let Some((key, mut batch)) = batcher.next_batch() {
         metrics.record_batch(batch.len());
         let size = batch.len();
+        // Every clock read below is gated on this: an untraced batch
+        // (the whole workload at --trace-rate 0) takes no timestamps.
+        let traced = batch.iter().any(|p| p.trace.is_some());
+        let drained = traced.then(Instant::now);
         let (scheme, k) = if key.is_auto() {
             match resolve_auto(&key.model, &batch, metrics) {
                 Ok(choice) => choice,
                 Err(e) => {
-                    for p in batch {
+                    for mut p in batch {
                         metrics.record_error();
                         let id = p.req.id;
+                        let trace = p.trace.take();
                         // An unknown model family never resolves, no
                         // matter how often the client retries.
                         p.respond_to.send(format_error(id, &e, false));
+                        if let Some(mut b) = trace {
+                            b.set_shard(shard);
+                            tracer.finish(b);
+                        }
                     }
                     continue;
                 }
@@ -598,18 +624,63 @@ pub fn worker_loop(
         } else {
             (key.scheme, key.k)
         };
+        let resolved = traced.then(Instant::now);
         if let Some(watchdog) = watchdog {
             watchdog.register(&batch);
         }
+        if let (Some(drained), Some(resolved)) = (drained, resolved) {
+            let sealed = Instant::now();
+            for p in batch.iter_mut() {
+                if let Some(b) = p.trace.as_deref_mut() {
+                    b.span(Stage::Queue, p.enqueued, drained);
+                    if key.is_auto() {
+                        b.span(Stage::AutoResolve, drained, resolved);
+                    }
+                    b.span(Stage::Assemble, drained, sealed);
+                    b.annotate(&key.model, scheme.wire_name(), k);
+                    b.set_shard(shard);
+                }
+            }
+        }
+        let model_slot = ModelSpec::from_name(&key.model).map_or(usize::MAX, |s| s.index());
+        let mut stage_times = BatchStageTimes::default();
         let result = {
             let pixel_refs: Vec<&[f64]> = batch.iter().map(|p| p.req.pixels.as_slice()).collect();
-            engine.infer_batch(&key.model, k, scheme, &pixel_refs)
+            engine.infer_batch_timed(
+                &key.model,
+                k,
+                scheme,
+                &pixel_refs,
+                traced.then_some(&mut stage_times),
+            )
         };
         match result {
             Ok(outputs) => {
-                for (p, out) in batch.into_iter().zip(outputs) {
+                let kernel_note = traced.then(|| {
+                    format!(
+                        "{}/{}",
+                        crate::kernels::active_id().name(),
+                        scheme.wire_name()
+                    )
+                });
+                for (mut p, out) in batch.into_iter().zip(outputs) {
                     let latency_us = p.enqueued.elapsed().as_micros() as u64;
-                    metrics.record_request(scheme, latency_us);
+                    metrics.record_request(scheme, model_slot, k, latency_us);
+                    let mut trace = p.trace.take();
+                    if let Some(b) = trace.as_deref_mut() {
+                        // Batch-level engine stages: shared work, so every
+                        // member's timeline shows the same intervals.
+                        if let Some((s, e)) = stage_times.plan {
+                            b.span(Stage::Plan, s, e);
+                        }
+                        if let Some((s, e)) = stage_times.kernel {
+                            b.span_noted(Stage::Kernel, s, e, kernel_note.clone());
+                        }
+                        if let Some((s, e)) = stage_times.shadow {
+                            b.span(Stage::Shadow, s, e);
+                        }
+                    }
+                    let serialize_at = trace.as_ref().map(|_| Instant::now());
                     let line = format_response(
                         p.req.id,
                         out.pred,
@@ -621,15 +692,27 @@ pub fn worker_loop(
                         shard,
                         p.req.auto,
                     );
+                    if let (Some(b), Some(at)) = (trace.as_deref_mut(), serialize_at) {
+                        b.span_since(Stage::Serialize, at);
+                    }
+                    let flush_at = trace.as_ref().map(|_| Instant::now());
                     p.respond_to.send(line);
+                    if let (Some(mut b), Some(at)) = (trace, flush_at) {
+                        b.span_since(Stage::Flush, at);
+                        tracer.finish(b);
+                    }
                 }
             }
             Err(e) => {
-                for p in batch {
+                for mut p in batch {
                     metrics.record_error();
                     let id = p.req.id;
+                    let trace = p.trace.take();
                     // Engine rejections (bad model/width) are permanent.
                     p.respond_to.send(format_error(id, &e.to_string(), false));
+                    if let Some(b) = trace {
+                        tracer.finish(b);
+                    }
                 }
             }
         }
@@ -667,6 +750,7 @@ mod tests {
                 req: req(model, k, mode, id),
                 respond_to: ReplyTo::new(id, tx),
                 enqueued: Instant::now(),
+                trace: None,
             },
             rx,
         )
@@ -902,6 +986,7 @@ mod tests {
             req: req("digits_linear", 4, SchemeId::Dither, 31),
             respond_to: reply,
             enqueued: Instant::now(),
+            trace: None,
         };
         dog.register(std::slice::from_ref(&p));
         assert_eq!(dog.outstanding(), 1);
@@ -977,6 +1062,7 @@ mod tests {
                 req: r,
                 respond_to: ReplyTo::new(id, tx),
                 enqueued: Instant::now(),
+                trace: None,
             })
             .unwrap();
             receivers.push(rx);

@@ -31,12 +31,14 @@ use crate::fidelity::{FidelityShard, ShadowSampler};
 use crate::linalg::{Matrix, Variant};
 use crate::nn::{quantized_forward, PlanKey, PreparedModel, QuantInferenceConfig};
 use crate::rounding::SchemeId;
+use crate::trace::BatchStageTimes;
 use crate::train::{ModelSpec, Zoo, ZooModel};
 use crate::util::error::Result;
 use crate::{bail, err};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Default per-engine plan-cache byte budget (64 MiB). The full prewarm
 /// grid (2 models × 3 schemes × the default bit widths) is well under
@@ -385,6 +387,22 @@ impl Engine {
         mode: SchemeId,
         pixels: &[&[f64]],
     ) -> Result<Vec<InferenceOutput>> {
+        self.infer_batch_timed(model, k, mode, pixels, None)
+    }
+
+    /// [`Engine::infer_batch`] with optional stage timing: when the shard
+    /// worker is carrying at least one traced request, it passes a
+    /// [`BatchStageTimes`] here and the engine stamps the plan / kernel /
+    /// shadow intervals it spent on this batch. With `None` (the
+    /// trace-rate-0 path) no clock is read beyond the untimed baseline.
+    pub fn infer_batch_timed(
+        &self,
+        model: &str,
+        k: u32,
+        mode: SchemeId,
+        pixels: &[&[f64]],
+        timings: Option<&mut BatchStageTimes>,
+    ) -> Result<Vec<InferenceOutput>> {
         if pixels.is_empty() {
             return Ok(Vec::new());
         }
@@ -394,13 +412,23 @@ impl Engine {
         // mirror keeps the planned hot path off the cache lock here.
         if self.plan_cache_capacity == 0 {
             self.plans.lock().unwrap().misses += 1;
-            return self.infer_batch_unplanned(model, k, mode, pixels);
+            return self.infer_unplanned_inner(model, k, mode, pixels, timings);
         }
         let (state, x) = self.marshal(model, k, pixels)?;
         let cfg = self.batch_config(k, mode);
+        let timing = timings.is_some();
+        let t_plan = timing.then(Instant::now);
         let prepared = self.prepared_for(&cfg.plan_key(model), &state.mlp);
+        let t_kernel = timing.then(Instant::now);
         let logits_matrix = prepared.forward(&state.mlp, &x, &state.ranges, cfg.seed);
+        let t_shadow = timing.then(Instant::now);
         self.shadow_observe(model, k, mode, state, &x, &logits_matrix);
+        if let Some(t) = timings {
+            let end = Instant::now();
+            t.plan = Some((t_plan.unwrap(), t_kernel.unwrap()));
+            t.kernel = Some((t_kernel.unwrap(), t_shadow.unwrap()));
+            t.shadow = self.shadow.enabled().then_some((t_shadow.unwrap(), end));
+        }
         Ok(Engine::read_back(&logits_matrix))
     }
 
@@ -416,16 +444,38 @@ impl Engine {
         mode: SchemeId,
         pixels: &[&[f64]],
     ) -> Result<Vec<InferenceOutput>> {
+        self.infer_unplanned_inner(model, k, mode, pixels, None)
+    }
+
+    /// The unplanned forward with optional stage timing. Plan and kernel
+    /// work are fused inside [`quantized_forward`], so the whole call is
+    /// stamped as the kernel interval and no plan span is reported.
+    fn infer_unplanned_inner(
+        &self,
+        model: &str,
+        k: u32,
+        mode: SchemeId,
+        pixels: &[&[f64]],
+        timings: Option<&mut BatchStageTimes>,
+    ) -> Result<Vec<InferenceOutput>> {
         if pixels.is_empty() {
             return Ok(Vec::new());
         }
         let (state, x) = self.marshal(model, k, pixels)?;
         let cfg = self.batch_config(k, mode);
+        let timing = timings.is_some();
+        let t_kernel = timing.then(Instant::now);
         let logits_matrix = quantized_forward(&state.mlp, &x, &state.ranges, &cfg);
+        let t_shadow = timing.then(Instant::now);
         // The baseline path feeds the fidelity estimators exactly like
         // the planned path, so A/B serving (plan cache capped at 0) keeps
         // `stats.fidelity` and the auto controller alive.
         self.shadow_observe(model, k, mode, state, &x, &logits_matrix);
+        if let Some(t) = timings {
+            let end = Instant::now();
+            t.kernel = Some((t_kernel.unwrap(), t_shadow.unwrap()));
+            t.shadow = self.shadow.enabled().then_some((t_shadow.unwrap(), end));
+        }
         Ok(Engine::read_back(&logits_matrix))
     }
 }
@@ -682,6 +732,39 @@ mod tests {
             .unwrap();
         let stats = engine.plan_cache_stats();
         assert_eq!((stats.hits, stats.misses), (1, 0), "prewarmed config must hit");
+    }
+
+    #[test]
+    fn timed_batches_report_stage_intervals() {
+        let engine = tiny_engine();
+        let px = vec![0.3f64; 784];
+        let rows: Vec<&[f64]> = vec![&px];
+        let mut times = BatchStageTimes::default();
+        engine
+            .infer_batch_timed("digits_linear", 4, SchemeId::Dither, &rows, Some(&mut times))
+            .unwrap();
+        let (ps, pe) = times.plan.expect("plan interval on the planned path");
+        let (ks, ke) = times.kernel.expect("kernel interval");
+        assert!(pe >= ps && ke >= ks);
+        assert!(ks >= pe, "kernel starts after planning ends");
+        assert!(times.shadow.is_none(), "shadow interval only when sampling is on");
+        // The unplanned baseline (capacity 0) fuses planning into the
+        // kernel interval and stamps shadow when sampling runs.
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let sink = Arc::new(crate::fidelity::FidelityShard::new());
+        let baseline = Engine::with_plan_cache(zoo, 7, 0).with_shadow(1.0, sink);
+        let mut times = BatchStageTimes::default();
+        baseline
+            .infer_batch_timed("digits_linear", 4, SchemeId::Dither, &rows, Some(&mut times))
+            .unwrap();
+        assert!(times.plan.is_none(), "no separate plan stage without a cache");
+        assert!(times.kernel.is_some());
+        assert!(times.shadow.is_some(), "shadow interval stamped at rate 1.0");
+        // The untimed entry point leaves no residue and still serves.
+        let out = engine
+            .infer_batch("digits_linear", 4, SchemeId::Dither, &rows)
+            .unwrap();
+        assert_eq!(out.len(), 1);
     }
 
     #[test]

@@ -12,19 +12,27 @@
 //!   planning, long-run drift);
 //! * **recent** — rotating wall-clock windows ([`WINDOW_SLOTS`] slots of
 //!   [`WINDOW_SECS`] each, ~one minute total), kept *per rounding scheme*
-//!   over every registered scheme, so `stats` reports what p50/p99 look
-//!   like right now for each scheme's traffic rather than a lifetime
-//!   aggregate that stale load shapes dominate.
+//!   over every registered scheme **and per `(model, k)` cell** over the
+//!   bounded fidelity label space ([`MODEL_SLOTS`] × [`MAX_K`]), so
+//!   `stats` reports what p50/p99 look like right now for each scheme's
+//!   and each configuration's traffic rather than a lifetime aggregate
+//!   that stale load shapes dominate.
+//!
+//! Everything `stats` knows is also rendered as Prometheus text
+//! exposition by [`Metrics::prometheus`] (the `{"cmd":"metrics"}` verb),
+//! including the request tracer's per-stage span-duration histograms.
 
 //! The registry also owns each shard's fidelity estimators
 //! ([`FidelityShard`]): the engine's shadow path writes into them on the
 //! shard worker thread, and `stats` merges every shard's
 //! `(model, scheme, k)` Welford cells into the `fidelity` block.
 
-use crate::fidelity::{FidelityEstimate, FidelityShard, MAX_K};
+use crate::fidelity::{FidelityEstimate, FidelityShard, MAX_K, MODEL_SLOTS};
 use crate::rounding::SchemeId;
+use crate::trace::{PromText, Tracer};
 use crate::train::ModelSpec;
 use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -130,6 +138,9 @@ pub struct ShardMetrics {
     latency_buckets: [AtomicU64; BUCKETS],
     started: Instant,
     windows: [SchemeWindows; SchemeId::COUNT],
+    /// Rotating windows per `(model, k)` cell over the bounded fidelity
+    /// label space, indexed `model_slot * MAX_K + (k - 1)`.
+    model_k_windows: Vec<SchemeWindows>,
     /// Shadow-sampling error estimators, written by this shard's engine.
     fidelity: Arc<FidelityShard>,
 }
@@ -163,6 +174,9 @@ impl ShardMetrics {
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             started: Instant::now(),
             windows: std::array::from_fn(|_| SchemeWindows::new()),
+            model_k_windows: (0..MODEL_SLOTS * MAX_K as usize)
+                .map(|_| SchemeWindows::new())
+                .collect(),
             fidelity: Arc::new(FidelityShard::new()),
         }
     }
@@ -179,13 +193,21 @@ impl ShardMetrics {
         self.started.elapsed().as_secs() / WINDOW_SECS + 1
     }
 
-    /// Record one completed request of the given scheme with its
-    /// end-to-end latency.
-    pub fn record_request(&self, mode: SchemeId, latency_us: u64) {
+    /// Record one completed request — its scheme, the `(model, k)`
+    /// configuration that served it, and its end-to-end latency.
+    /// `model_slot` is [`ModelSpec::index`]; an out-of-range slot or `k`
+    /// still counts toward the totals and the scheme window, it just
+    /// skips the per-configuration cell.
+    pub fn record_request(&self, mode: SchemeId, model_slot: usize, k: u32, latency_us: u64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
         self.latency_buckets[bucket_index(latency_us)].fetch_add(1, Ordering::Relaxed);
-        self.windows[mode.slot()].record(self.current_epoch(), latency_us);
+        let epoch = self.current_epoch();
+        self.windows[mode.slot()].record(epoch, latency_us);
+        if model_slot < MODEL_SLOTS && (1..=MAX_K).contains(&k) {
+            self.model_k_windows[model_slot * MAX_K as usize + (k as usize - 1)]
+                .record(epoch, latency_us);
+        }
     }
 
     /// Record a protocol or execution error.
@@ -247,11 +269,17 @@ impl ShardMetrics {
         for (mode, (count, buckets)) in SCHEME_ORDER.iter().zip(acc.recent.iter_mut()) {
             self.windows[mode.slot()].fold_recent(epoch, count, buckets);
         }
+        for (w, (count, buckets)) in self.model_k_windows.iter().zip(acc.recent_model_k.iter_mut())
+        {
+            w.fold_recent(epoch, count, buckets);
+        }
     }
 }
 
-/// Map a latency to its log₂ bucket.
-fn bucket_index(latency_us: u64) -> usize {
+/// Map a latency to its log₂ bucket. Public because the request tracer's
+/// per-stage duration histograms share this bucketing, so one exposition
+/// surface serves both.
+pub fn bucket_index(latency_us: u64) -> usize {
     ((u64::BITS - latency_us.leading_zeros()) as usize).min(BUCKETS - 1)
 }
 
@@ -267,11 +295,17 @@ pub fn bucket_upper(index: usize) -> u64 {
 /// Percentile estimate from a log₂ histogram (upper bucket edge). Takes any
 /// bucket slice so wire-parsed histograms (whose length is whatever the
 /// backend sent) merge without fixed-size conversion.
+///
+/// Degenerate inputs answer 0 rather than garbage: an empty slice or a
+/// zero total has no percentile, and a junk `p` (NaN / out of `0..=1`)
+/// is clamped before ranking, so the answer always names a bucket that
+/// actually holds mass.
 pub fn percentile_from_buckets(buckets: &[u64], p: f64) -> f64 {
     let total: u64 = buckets.iter().sum();
-    if total == 0 {
+    if buckets.is_empty() || total == 0 {
         return 0.0;
     }
+    let p = if p.is_finite() { p.clamp(0.0, 1.0) } else { 0.0 };
     let rank = ((total as f64) * p).ceil().max(1.0) as u64;
     let mut seen = 0u64;
     for (i, &count) in buckets.iter().enumerate() {
@@ -280,12 +314,39 @@ pub fn percentile_from_buckets(buckets: &[u64], p: f64) -> f64 {
             return bucket_upper(i) as f64;
         }
     }
-    bucket_upper(BUCKETS - 1) as f64
+    // Unreachable once p is clamped (rank <= total), but cap at the
+    // slice's own last bucket rather than BUCKETS-1 so a short wire
+    // histogram can never answer beyond its own range.
+    bucket_upper(buckets.len() - 1) as f64
 }
 
 /// Bucket counts as a JSON array of numbers.
 fn buckets_json(buckets: &[u64]) -> Json {
     Json::Arr(buckets.iter().map(|&b| Json::Num(b as f64)).collect())
+}
+
+/// One `stats.recent` cell: count, window percentiles, raw buckets.
+fn recent_cell_json(count: u64, buckets: &[u64]) -> Json {
+    Json::obj(vec![
+        ("requests", Json::Num(count as f64)),
+        ("p50_us", Json::Num(percentile_from_buckets(buckets, 0.50))),
+        ("p99_us", Json::Num(percentile_from_buckets(buckets, 0.99))),
+        // Raw window buckets: the cluster proxy sums these across
+        // backends for true cluster percentiles.
+        ("buckets", buckets_json(buckets)),
+    ])
+}
+
+/// Total duration implied by a log₂ histogram, using upper bucket edges
+/// (a deliberate overestimate; windows keep no exact sum). Exposition
+/// `_sum` samples for window histograms use this — the cluster proxy's
+/// merged exposition included.
+pub(crate) fn approx_sum_us(buckets: &[u64]) -> f64 {
+    buckets
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| c as f64 * bucket_upper(i) as f64)
+        .sum()
 }
 
 struct Merged {
@@ -302,6 +363,9 @@ struct Merged {
     buckets: [u64; BUCKETS],
     /// Recent-window (count, buckets) per scheme, in [`SCHEME_ORDER`].
     recent: [(u64, [u64; BUCKETS]); SchemeId::COUNT],
+    /// Recent-window (count, buckets) per `(model, k)` cell, indexed
+    /// `model_slot * MAX_K + (k - 1)`.
+    recent_model_k: Vec<(u64, [u64; BUCKETS])>,
 }
 
 // Manual impl: `Default` is not derivable for arrays longer than 32.
@@ -320,6 +384,7 @@ impl Default for Merged {
             latency_sum_us: 0,
             buckets: [0; BUCKETS],
             recent: [(0, [0; BUCKETS]); SchemeId::COUNT],
+            recent_model_k: vec![(0, [0; BUCKETS]); MODEL_SLOTS * MAX_K as usize],
         }
     }
 }
@@ -364,14 +429,60 @@ impl Metrics {
         self.shards.iter().map(|s| s.requests()).sum()
     }
 
-    /// Snapshot as a JSON line (the `stats` command response), merging all
-    /// shards. Includes the recent per-scheme rotating-window percentiles
-    /// alongside the lifetime histogram.
-    pub fn snapshot_json(&self) -> String {
+    /// Merge every shard's counters and windows.
+    fn merged(&self) -> Merged {
         let mut m = Merged::default();
         for shard in &self.shards {
             shard.fold_into(&mut m);
         }
+        m
+    }
+
+    /// Merge every shard's fidelity estimators; only observed
+    /// `(model, scheme, k)` cells are returned (the label space is
+    /// bounded, but an empty cell says nothing an operator needs).
+    fn fidelity_cells(&self) -> Vec<(ModelSpec, SchemeId, u32, FidelityEstimate)> {
+        let mut cells = Vec::new();
+        for spec in ModelSpec::ALL {
+            for k in 1..=MAX_K {
+                for mode in SCHEME_ORDER {
+                    let mut est = FidelityEstimate::default();
+                    for shard in &self.shards {
+                        est.merge(&shard.fidelity().estimate(spec.index(), mode, k));
+                    }
+                    if est.samples > 0 {
+                        cells.push((spec, mode, k, est));
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// The merged recent-window cells keyed as the `stats.recent` object:
+    /// one `"<scheme>"` entry per registered scheme, plus one
+    /// `"<model>/k=<K>"` entry per `(model, k)` cell that saw traffic.
+    fn recent_cells(m: &Merged) -> BTreeMap<String, (u64, [u64; BUCKETS])> {
+        let mut cells = BTreeMap::new();
+        for (mode, (count, buckets)) in SCHEME_ORDER.iter().zip(&m.recent) {
+            cells.insert(mode.wire_name().to_string(), (*count, *buckets));
+        }
+        for (slot, spec) in ModelSpec::ALL.into_iter().enumerate() {
+            for k in 1..=MAX_K {
+                let (count, buckets) = m.recent_model_k[slot * MAX_K as usize + (k as usize - 1)];
+                if count > 0 {
+                    cells.insert(format!("{}/k={k}", spec.name()), (count, buckets));
+                }
+            }
+        }
+        cells
+    }
+
+    /// Snapshot as a JSON line (the `stats` command response), merging all
+    /// shards. Includes the recent per-scheme and per-`(model, k)`
+    /// rotating-window percentiles alongside the lifetime histogram.
+    pub fn snapshot_json(&self) -> String {
+        let m = self.merged();
         let mean_batch = if m.batches == 0 {
             0.0
         } else {
@@ -389,48 +500,24 @@ impl Metrics {
             0.0
         };
         let per_shard: Vec<f64> = self.shards.iter().map(|s| s.requests() as f64).collect();
-        // Merge every shard's (model, scheme, k) Welford cells; only
-        // observed configurations are emitted (the label space is bounded,
-        // but an empty cell says nothing an operator needs).
-        let mut fidelity = Vec::new();
-        for spec in ModelSpec::ALL {
-            for k in 1..=MAX_K {
-                for mode in SCHEME_ORDER {
-                    let mut est = FidelityEstimate::default();
-                    for shard in &self.shards {
-                        est.merge(&shard.fidelity().estimate(spec.index(), mode, k));
-                    }
-                    if est.samples == 0 {
-                        continue;
-                    }
-                    fidelity.push(Json::obj(vec![
-                        ("model", Json::Str(spec.name().to_string())),
-                        ("scheme", Json::Str(mode.to_string())),
-                        ("k", Json::Num(f64::from(k))),
-                        ("samples", Json::Num(est.samples as f64)),
-                        ("bias", Json::Num(est.bias)),
-                        ("mse", Json::Num(est.mse())),
-                        ("variance", Json::Num(est.variance())),
-                    ]));
-                }
-            }
-        }
-        let recent: Vec<(&str, Json)> = SCHEME_ORDER
-            .iter()
-            .zip(&m.recent)
-            .map(|(mode, (count, buckets))| {
-                (
-                    mode.wire_name(),
-                    Json::obj(vec![
-                        ("requests", Json::Num(*count as f64)),
-                        ("p50_us", Json::Num(percentile_from_buckets(buckets, 0.50))),
-                        ("p99_us", Json::Num(percentile_from_buckets(buckets, 0.99))),
-                        // Raw window buckets: the cluster proxy sums these
-                        // across backends for true cluster percentiles.
-                        ("buckets", buckets_json(buckets)),
-                    ]),
-                )
+        let fidelity: Vec<Json> = self
+            .fidelity_cells()
+            .into_iter()
+            .map(|(spec, mode, k, est)| {
+                Json::obj(vec![
+                    ("model", Json::Str(spec.name().to_string())),
+                    ("scheme", Json::Str(mode.to_string())),
+                    ("k", Json::Num(f64::from(k))),
+                    ("samples", Json::Num(est.samples as f64)),
+                    ("bias", Json::Num(est.bias)),
+                    ("mse", Json::Num(est.mse())),
+                    ("variance", Json::Num(est.variance())),
+                ])
             })
+            .collect();
+        let recent: BTreeMap<String, Json> = Self::recent_cells(&m)
+            .into_iter()
+            .map(|(key, (count, buckets))| (key, recent_cell_json(count, &buckets)))
             .collect();
         Json::obj(vec![
             ("kernel", Json::Str(crate::kernels::active_id().name().to_string())),
@@ -450,7 +537,7 @@ impl Metrics {
             // Raw lifetime log₂ buckets (bucket i = [2^(i-1), 2^i) µs).
             ("latency_buckets", buckets_json(&m.buckets)),
             ("recent_window_s", Json::Num((WINDOW_SECS * WINDOW_SLOTS as u64) as f64)),
-            ("recent", Json::obj(recent)),
+            ("recent", Json::Obj(recent)),
             ("fidelity", Json::Arr(fidelity)),
             ("uptime_s", Json::Num(uptime)),
             ("throughput_rps", Json::Num(throughput)),
@@ -458,6 +545,216 @@ impl Metrics {
             ("per_shard_requests", Json::nums(&per_shard)),
         ])
         .to_string()
+    }
+
+    /// Prometheus text exposition (the `{"cmd":"metrics"}` verb): every
+    /// counter `stats` reports, the lifetime and recent-window latency
+    /// histograms, fidelity gauges per observed `(model, scheme, k)`,
+    /// the tracer's own counters, and the per-stage span-duration
+    /// histograms.
+    pub fn prometheus(&self, tracer: &Tracer) -> String {
+        let m = self.merged();
+        let mut p = PromText::new();
+        p.scalar(
+            "dither_requests_total",
+            "counter",
+            "Completed requests",
+            m.requests as f64,
+        );
+        p.scalar(
+            "dither_errors_total",
+            "counter",
+            "Protocol and execution errors",
+            m.errors as f64,
+        );
+        p.scalar(
+            "dither_rejected_total",
+            "counter",
+            "Overload rejections",
+            m.rejected as f64,
+        );
+        p.scalar(
+            "dither_timeouts_total",
+            "counter",
+            "Watchdog-answered requests",
+            m.timeouts as f64,
+        );
+        p.scalar(
+            "dither_deprecated_fields_total",
+            "counter",
+            "Requests using deprecated wire fields",
+            m.deprecated_fields as f64,
+        );
+        p.scalar(
+            "dither_batches_total",
+            "counter",
+            "Executed batches",
+            m.batches as f64,
+        );
+        p.scalar(
+            "dither_batched_requests_total",
+            "counter",
+            "Requests served inside batches",
+            m.batched_requests as f64,
+        );
+        p.scalar(
+            "dither_writer_flushes_total",
+            "counter",
+            "Writer-side coalesced flushes",
+            m.writer_flushes as f64,
+        );
+        p.scalar(
+            "dither_writer_flushed_lines_total",
+            "counter",
+            "Reply lines delivered across coalesced flushes",
+            m.writer_flushed_lines as f64,
+        );
+        p.scalar(
+            "dither_uptime_seconds",
+            "gauge",
+            "Process uptime",
+            self.started.elapsed().as_secs_f64(),
+        );
+        p.scalar(
+            "dither_shards",
+            "gauge",
+            "Serving shards in the process",
+            self.shards.len() as f64,
+        );
+        p.family(
+            "dither_kernel_info",
+            "gauge",
+            "Active compute kernel (value is always 1)",
+        );
+        p.sample(
+            "dither_kernel_info",
+            &[("kernel", crate::kernels::active_id().name())],
+            1.0,
+        );
+        p.family(
+            "dither_shard_requests_total",
+            "counter",
+            "Completed requests per shard",
+        );
+        for (i, shard) in self.shards.iter().enumerate() {
+            let label = i.to_string();
+            p.sample(
+                "dither_shard_requests_total",
+                &[("shard", &label)],
+                shard.requests() as f64,
+            );
+        }
+        p.family(
+            "dither_latency_us",
+            "histogram",
+            "Lifetime end-to-end request latency",
+        );
+        p.histogram_series(
+            "dither_latency_us",
+            &[],
+            &m.buckets,
+            m.latency_sum_us as f64,
+            bucket_upper,
+        );
+        // One labeled series per recent-window cell that saw traffic —
+        // scheme cells as {scheme="..."}, (model, k) cells split back
+        // into {model="...",k="..."}.
+        let recent = Self::recent_cells(&m);
+        if recent.values().any(|(count, _)| *count > 0) {
+            p.family(
+                "dither_recent_latency_us",
+                "histogram",
+                "Rotating-window request latency per scheme and per (model, k)",
+            );
+            for (key, (count, buckets)) in &recent {
+                if *count == 0 {
+                    continue;
+                }
+                match key.split_once("/k=") {
+                    Some((model, k)) => p.histogram_series(
+                        "dither_recent_latency_us",
+                        &[("model", model), ("k", k)],
+                        buckets,
+                        approx_sum_us(buckets),
+                        bucket_upper,
+                    ),
+                    None => p.histogram_series(
+                        "dither_recent_latency_us",
+                        &[("scheme", key)],
+                        buckets,
+                        approx_sum_us(buckets),
+                        bucket_upper,
+                    ),
+                }
+            }
+        }
+        let fidelity = self.fidelity_cells();
+        if !fidelity.is_empty() {
+            let families: [(&str, &str, fn(&FidelityEstimate) -> f64); 3] = [
+                (
+                    "dither_fidelity_samples",
+                    "Shadow samples per (model, scheme, k)",
+                    |est| est.samples as f64,
+                ),
+                (
+                    "dither_fidelity_bias",
+                    "Mean signed logit error per (model, scheme, k)",
+                    |est| est.bias,
+                ),
+                (
+                    "dither_fidelity_mse",
+                    "Mean squared logit error per (model, scheme, k)",
+                    FidelityEstimate::mse,
+                ),
+            ];
+            for (name, help, value) in families {
+                p.family(name, "gauge", help);
+                for (spec, mode, k, est) in &fidelity {
+                    let k_label = k.to_string();
+                    p.sample(
+                        name,
+                        &[
+                            ("model", spec.name()),
+                            ("scheme", mode.wire_name()),
+                            ("k", &k_label),
+                        ],
+                        value(est),
+                    );
+                }
+            }
+        }
+        p.scalar(
+            "dither_traces_begun_total",
+            "counter",
+            "Trace contexts handed out (sampled + speculative)",
+            tracer.begun() as f64,
+        );
+        p.scalar(
+            "dither_traces_committed_total",
+            "counter",
+            "Traces committed to the ring buffer",
+            tracer.committed() as f64,
+        );
+        p.scalar(
+            "dither_traces_slow_total",
+            "counter",
+            "Traces promoted by the slow threshold",
+            tracer.slow_promoted() as f64,
+        );
+        p.scalar(
+            "dither_traces_evicted_total",
+            "counter",
+            "Traces evicted from the full ring buffer",
+            tracer.evicted() as f64,
+        );
+        p.scalar(
+            "dither_traces_resident",
+            "gauge",
+            "Completed traces resident in the ring buffer",
+            tracer.resident() as f64,
+        );
+        p.stage_histograms(&tracer.stage_snapshots());
+        p.finish()
     }
 }
 
@@ -482,7 +779,7 @@ mod tests {
     fn records_and_snapshots() {
         let m = Metrics::new(2);
         for i in 0..100u64 {
-            m.shard((i % 2) as usize).record_request(SchemeId::Dither, i * 10);
+            m.shard((i % 2) as usize).record_request(SchemeId::Dither, 0, 4, i * 10);
         }
         m.shard(0).record_batch(8);
         m.shard(1).record_batch(4);
@@ -507,9 +804,9 @@ mod tests {
     fn recent_section_is_per_scheme() {
         let m = Metrics::new(2);
         for _ in 0..40 {
-            m.shard(0).record_request(SchemeId::Dither, 100);
+            m.shard(0).record_request(SchemeId::Dither, 0, 4, 100);
         }
-        m.shard(1).record_request(SchemeId::Deterministic, 1_000_000);
+        m.shard(1).record_request(SchemeId::Deterministic, 1, 8, 1_000_000);
         let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
         assert_eq!(json.get("recent_window_s").unwrap().as_f64(), Some(60.0));
         let recent = json.get("recent").expect("recent section");
@@ -531,7 +828,7 @@ mod tests {
     fn snapshot_carries_kernel_and_raw_buckets() {
         let m = Metrics::new(2);
         for i in 0..30u64 {
-            m.shard((i % 2) as usize).record_request(SchemeId::Dither, i * 50);
+            m.shard((i % 2) as usize).record_request(SchemeId::Dither, 0, 4, i * 50);
         }
         let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
         let kernel = json.get("kernel").unwrap().as_str().unwrap();
@@ -652,9 +949,105 @@ mod tests {
     }
 
     #[test]
+    fn recent_includes_model_k_cells() {
+        let m = Metrics::new(2);
+        for _ in 0..40 {
+            m.shard(0).record_request(SchemeId::Dither, 0, 4, 100);
+        }
+        m.shard(1).record_request(SchemeId::Dither, 1, 8, 1_000_000);
+        // Out-of-range labels count toward totals but skip the cell.
+        m.shard(0).record_request(SchemeId::Dither, 99, 4, 5);
+        m.shard(0).record_request(SchemeId::Dither, 0, 99, 5);
+        let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
+        let recent = json.get("recent").expect("recent section");
+        let digits = recent.get("digits_linear/k=4").expect("digits k=4 cell");
+        assert_eq!(digits.get("requests").unwrap().as_f64(), Some(40.0));
+        assert!(digits.get("p99_us").unwrap().as_f64().unwrap() < 1000.0);
+        let fashion = recent.get("fashion_mlp/k=8").expect("fashion k=8 cell");
+        assert_eq!(fashion.get("requests").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            fashion.get("buckets").unwrap().as_f64_vec().unwrap().len(),
+            BUCKETS
+        );
+        // Cells with no traffic are not emitted at all.
+        assert!(recent.get("digits_linear/k=2").is_none());
+        assert_eq!(json.get("requests").unwrap().as_f64(), Some(43.0));
+    }
+
+    #[test]
+    fn percentile_answers_sanely_at_the_edges() {
+        // Empty slice and zero mass: no percentile, answer 0.
+        assert_eq!(percentile_from_buckets(&[], 0.99), 0.0);
+        assert_eq!(percentile_from_buckets(&[0, 0, 0], 0.5), 0.0);
+        // A single bucket holding all mass answers that bucket's upper
+        // edge for every p.
+        let mut one = [0u64; 8];
+        one[3] = 1000;
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile_from_buckets(&one, p), bucket_upper(3) as f64);
+        }
+        // Junk p is clamped, never a fall-off-the-end garbage answer.
+        assert_eq!(percentile_from_buckets(&one, f64::NAN), bucket_upper(3) as f64);
+        assert_eq!(percentile_from_buckets(&one, -2.0), bucket_upper(3) as f64);
+        assert_eq!(percentile_from_buckets(&one, 42.0), bucket_upper(3) as f64);
+        // A short wire slice can never answer beyond its own last bucket.
+        assert!(percentile_from_buckets(&[5, 5], 1.0) <= bucket_upper(1) as f64);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed_and_complete() {
+        use crate::trace::{check_exposition, Stage, TraceConfig, Tracer};
+        let m = Metrics::new(2);
+        for i in 0..20u64 {
+            m.shard((i % 2) as usize).record_request(SchemeId::Dither, 0, 4, i * 100);
+        }
+        m.shard(0).record_error();
+        m.shard(0).fidelity().record(0, SchemeId::Dither, 4, 0.5);
+        let tracer = Tracer::new(TraceConfig {
+            rate: 1.0,
+            slow_us: 0,
+            buffer: 4,
+        });
+        let mut b = tracer.begin(1).unwrap();
+        let now = std::time::Instant::now();
+        b.span(Stage::Kernel, now, now);
+        tracer.finish(b);
+        let text = m.prometheus(&tracer);
+        check_exposition(&text).expect("well-formed exposition");
+        assert!(text.contains("dither_requests_total 20"), "{text}");
+        assert!(text.contains("dither_errors_total 1"), "{text}");
+        assert!(text.contains("# TYPE dither_latency_us histogram"), "{text}");
+        assert!(text.contains("dither_latency_us_bucket{le=\"+Inf\"} 20"), "{text}");
+        assert!(
+            text.contains("dither_recent_latency_us_bucket{scheme=\"dither\",le=\"+Inf\"} 20"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dither_recent_latency_us_bucket{model=\"digits_linear\",k=\"4\""),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "dither_fidelity_mse{model=\"digits_linear\",scheme=\"dither\",k=\"4\"}"
+            ),
+            "{text}"
+        );
+        assert!(text.contains("dither_shard_requests_total{shard=\"0\"} 10"), "{text}");
+        assert!(
+            text.contains("dither_stage_duration_us_bucket{stage=\"kernel\""),
+            "span histograms must reach the exposition: {text}"
+        );
+        assert!(text.contains("dither_traces_committed_total 1"), "{text}");
+        // An idle process still exposes a valid (family-bearing) surface.
+        let idle = Metrics::new(1);
+        let idle_tracer = Tracer::new(TraceConfig::default());
+        check_exposition(&idle.prometheus(&idle_tracer)).expect("idle exposition");
+    }
+
+    #[test]
     fn shard_indexing_wraps() {
         let m = Metrics::new(3);
-        m.shard(5).record_request(SchemeId::Stochastic, 1); // 5 % 3 == 2
+        m.shard(5).record_request(SchemeId::Stochastic, 0, 4, 1); // 5 % 3 == 2
         assert_eq!(m.shard(2).requests(), 1);
         assert_eq!(m.total_requests(), 1);
     }

@@ -6,7 +6,9 @@
 //! dynamic batcher ([`shard`], [`batcher`]), the model zoo + numeric glue
 //! ([`engine`]), per-shard lock-free serving metrics ([`metrics`]), and
 //! the threaded TCP front-end with hash-routed connections and graceful
-//! shutdown ([`server`]).
+//! shutdown ([`server`]). Observability rides alongside: per-request span
+//! timelines through [`crate::trace`] (the `trace` wire verb) and a
+//! Prometheus text exposition (the `metrics` verb / raw `GET /metrics`).
 //!
 //! Per-request rounding configuration is the point: a client can A/B
 //! deterministic vs stochastic vs dither rounding at any bit width against
@@ -24,9 +26,10 @@ pub use batcher::{Batcher, Pending, ReplyDeadline, ReplyTo, ReplyWatchdog, Submi
 pub use engine::{Engine, InferenceOutput};
 pub use metrics::{bucket_upper, percentile_from_buckets, Metrics, ShardMetrics, BUCKETS};
 pub use protocol::{
-    format_error, format_hello, format_overloaded, format_request, format_request_auto,
-    format_response, line_id, parse_message, parse_stats, response_id, FidelityCell,
-    InferenceRequest, Message, Reassembler, RecentCell, StatsSummary,
+    format_error, format_hello, format_metrics_reply, format_overloaded, format_request,
+    format_request_auto, format_response, format_trace_query, format_traces, line_id,
+    parse_message, parse_metrics_reply, parse_stats, parse_traces, response_id, FidelityCell,
+    InferenceRequest, Message, Reassembler, RecentCell, StatsSummary, TraceQuery,
 };
 pub use server::{ping, serve, wait_ready, ServerConfig, WRITER_CONTROL_SLACK};
 pub use shard::{ShardConfig, ShardPool};

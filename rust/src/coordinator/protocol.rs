@@ -22,7 +22,16 @@
 //!  "latency_us": 412, "batch": 8, "shard": 2}
 //! ```
 //! Control: `{"cmd": "ping"}`, `{"cmd": "hello"}` (feature handshake),
-//! `{"cmd": "stats"}`, `{"cmd": "shutdown"}`.
+//! `{"cmd": "stats"}`, `{"cmd": "trace"}` (query the slow/sampled trace
+//! ring, filters `min_us` / `model` / `scheme` / `limit`),
+//! `{"cmd": "metrics"}` (Prometheus text exposition wrapped in one JSON
+//! line), `{"cmd": "shutdown"}`.
+//!
+//! **Tracing (protocol v3)**: a request line may carry
+//! `"trace": "<16-hex id>:<flags>"` — a trace context propagated by the
+//! cluster proxy so one request's timeline stitches across processes.
+//! Servers that predate v3 ignore the field; a malformed tag downgrades
+//! to "no trace" rather than rejecting the request.
 //!
 //! **Errors**: every failure reply has one shape, across the server, the
 //! cluster proxy, and the watchdog alike:
@@ -38,8 +47,8 @@
 //! come back in *completion* order, not submission order. The `id` echo
 //! on every reply (successes, errors, and overloads alike) is what lets a
 //! client match them up; [`Reassembler`] is the client-side helper. The
-//! `{"cmd":"hello"}` handshake (protocol v2) advertises the feature set,
-//! the server's per-connection in-flight window, `"proto": 2`, and
+//! `{"cmd":"hello"}` handshake (protocol v3) advertises the feature set,
+//! the server's per-connection in-flight window, `"proto": 3`, and
 //! `"schemes": [...]` — the registered rounding schemes this endpoint can
 //! serve; clients that never send it can keep the old lockstep discipline
 //! (one request, then one reply) unchanged.
@@ -70,8 +79,88 @@ pub struct InferenceRequest {
     pub deprecated_mode: bool,
     /// Per-request MSE budget (auto requests only).
     pub max_mse: Option<f64>,
+    /// Upstream trace context `(trace_id, flags)` from the `"trace"`
+    /// wire field (protocol v3; `None` when absent or malformed).
+    pub trace: Option<(u64, u8)>,
     /// Flattened image pixels.
     pub pixels: Vec<f64>,
+}
+
+/// Filters for a `{"cmd":"trace"}` ring-buffer query. All optional: the
+/// zero value ([`TraceQuery::default`]) returns every resident trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceQuery {
+    /// Only traces with `total_us >= min_us`.
+    pub min_us: u64,
+    /// Only traces for this model family.
+    pub model: Option<String>,
+    /// Only traces served by this scheme (wire name).
+    pub scheme: Option<String>,
+    /// At most this many traces, newest first (0 = no cap).
+    pub limit: usize,
+}
+
+/// Build a `{"cmd":"trace"}` query line — the client side the cluster
+/// proxy also uses when it fans a trace query out to its backends.
+pub fn format_trace_query(q: &TraceQuery) -> String {
+    let mut pairs = vec![("cmd", Json::Str("trace".to_string()))];
+    if q.min_us > 0 {
+        pairs.push(("min_us", Json::Num(q.min_us as f64)));
+    }
+    if let Some(model) = &q.model {
+        pairs.push(("model", Json::Str(model.clone())));
+    }
+    if let Some(scheme) = &q.scheme {
+        pairs.push(("scheme", Json::Str(scheme.clone())));
+    }
+    if q.limit > 0 {
+        pairs.push(("limit", Json::Num(q.limit as f64)));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Build a `{"cmd":"trace"}` reply line: the matching traces (newest
+/// first) plus their count. The proxy emits the same shape with each
+/// proxy trace carrying an `"upstream"` array of backend timelines.
+pub fn format_traces(traces: &[crate::trace::Trace]) -> String {
+    Json::obj(vec![
+        (
+            "traces",
+            Json::Arr(traces.iter().map(crate::trace::Trace::to_json).collect()),
+        ),
+        ("count", Json::Num(traces.len() as f64)),
+    ])
+    .to_string()
+}
+
+/// Parse a `{"cmd":"trace"}` reply back into traces — the proxy re-parses
+/// backend dumps with this to stitch cluster timelines, and clients use
+/// it to inspect what the ring retained. Individual malformed records are
+/// skipped (same downgrade-not-reject stance as the `"trace"` field).
+pub fn parse_traces(line: &str) -> Result<Vec<crate::trace::Trace>, String> {
+    let json = Json::parse(line.trim()).map_err(|e| e.to_string())?;
+    let arr = json
+        .get("traces")
+        .and_then(Json::as_arr)
+        .ok_or("reply has no 'traces' array")?;
+    Ok(arr.iter().filter_map(crate::trace::Trace::from_json).collect())
+}
+
+/// Wrap a Prometheus text exposition into the one-line JSON reply of the
+/// `{"cmd":"metrics"}` verb (the newline-delimited protocol cannot carry
+/// the multi-line exposition raw; JSON string escaping does it for free).
+pub fn format_metrics_reply(exposition: &str) -> String {
+    Json::obj(vec![("metrics", Json::Str(exposition.to_string()))]).to_string()
+}
+
+/// Unwrap a `{"cmd":"metrics"}` reply back into the exposition text.
+pub fn parse_metrics_reply(line: &str) -> Result<String, String> {
+    Json::parse(line.trim())
+        .map_err(|e| e.to_string())?
+        .get("metrics")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| "reply has no 'metrics' field".to_string())
 }
 
 /// A parsed incoming message.
@@ -86,6 +175,10 @@ pub enum Message {
     Hello,
     /// Metrics snapshot request.
     Stats,
+    /// Query the slow/sampled trace ring buffer.
+    Trace(TraceQuery),
+    /// Prometheus text exposition request.
+    Metrics,
     /// Graceful shutdown.
     Shutdown,
 }
@@ -98,6 +191,23 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
             "ping" => Ok(Message::Ping),
             "hello" => Ok(Message::Hello),
             "stats" => Ok(Message::Stats),
+            "trace" => Ok(Message::Trace(TraceQuery {
+                min_us: json
+                    .get("min_us")
+                    .and_then(Json::as_f64)
+                    .map(|v| v.max(0.0) as u64)
+                    .unwrap_or(0),
+                model: json
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                scheme: json
+                    .get("scheme")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                limit: json.get("limit").and_then(Json::as_usize).unwrap_or(0),
+            })),
+            "metrics" => Ok(Message::Metrics),
             "shutdown" => Ok(Message::Shutdown),
             other => Err(format!("unknown cmd {other:?}")),
         };
@@ -155,6 +265,12 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
     if pixels.len() != 784 {
         return Err(format!("expected 784 pixels, got {}", pixels.len()));
     }
+    // Malformed tags downgrade to "no trace": observability must never
+    // fail a request that would otherwise serve.
+    let trace = json
+        .get("trace")
+        .and_then(Json::as_str)
+        .and_then(crate::trace::decode_wire);
     Ok(Message::Infer(InferenceRequest {
         id,
         model,
@@ -163,6 +279,7 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
         auto,
         deprecated_mode,
         max_mse,
+        trace,
         pixels,
     }))
 }
@@ -251,7 +368,9 @@ pub fn format_overloaded(id: u64) -> String {
     .to_string()
 }
 
-/// Handshake response (protocol v2): advertises the pipelined protocol,
+/// Handshake response (protocol v3 — v2 plus the `"trace"` request
+/// field and the `trace` / `metrics` verbs): advertises the pipelined
+/// protocol,
 /// the server's per-connection in-flight window (requests beyond it are
 /// answered `overloaded` immediately), the rounding schemes this
 /// endpoint serves — the server passes the registry's list, the cluster
@@ -262,7 +381,7 @@ pub fn format_overloaded(id: u64) -> String {
 pub fn format_hello(max_inflight: usize, schemes: &[&str], kernel: &str) -> String {
     Json::obj(vec![
         ("hello", Json::Bool(true)),
-        ("proto", Json::Num(2.0)),
+        ("proto", Json::Num(3.0)),
         (
             "features",
             Json::Arr(vec![Json::Str("pipelined".to_string())]),
@@ -658,10 +777,89 @@ mod tests {
             Ok(Message::Stats)
         ));
         assert!(matches!(
+            parse_message("{\"cmd\":\"metrics\"}"),
+            Ok(Message::Metrics)
+        ));
+        assert!(matches!(
             parse_message("{\"cmd\":\"shutdown\"}"),
             Ok(Message::Shutdown)
         ));
         assert!(parse_message("{\"cmd\":\"nope\"}").is_err());
+    }
+
+    #[test]
+    fn trace_query_roundtrips_through_the_wire() {
+        // Bare query: every filter at its zero value.
+        match parse_message("{\"cmd\":\"trace\"}").unwrap() {
+            Message::Trace(q) => assert_eq!(q, TraceQuery::default()),
+            other => panic!("wrong message {other:?}"),
+        }
+        let q = TraceQuery {
+            min_us: 500,
+            model: Some("fashion_mlp".to_string()),
+            scheme: Some("tpdf".to_string()),
+            limit: 16,
+        };
+        match parse_message(&format_trace_query(&q)).unwrap() {
+            Message::Trace(parsed) => assert_eq!(parsed, q),
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_and_metrics_replies_roundtrip() {
+        use crate::trace::{Span, Stage, Trace};
+        let trace = Trace {
+            trace_id: 0xFEED_F00D,
+            request_id: 7,
+            model: "digits_linear".to_string(),
+            scheme: "dither".to_string(),
+            k: 4,
+            shard: Some(1),
+            total_us: 900,
+            sampled: true,
+            slow: false,
+            spans: vec![Span {
+                stage: Stage::Kernel,
+                start_us: 100,
+                dur_us: 600,
+                note: Some("wide/dither".to_string()),
+            }],
+        };
+        let line = format_traces(std::slice::from_ref(&trace));
+        assert!(Json::parse(&line).unwrap().get("count").unwrap().as_f64() == Some(1.0));
+        assert_eq!(parse_traces(&line).unwrap(), vec![trace]);
+        assert_eq!(parse_traces("{\"traces\":[]}").unwrap(), Vec::new());
+        assert!(parse_traces("{\"pong\":true}").is_err());
+        // Metrics replies carry the multi-line exposition in one JSON line.
+        let exposition = "# HELP x y\n# TYPE x counter\nx 1\n";
+        let reply = format_metrics_reply(exposition);
+        assert!(!reply.contains('\n'), "reply must stay one line: {reply}");
+        assert_eq!(parse_metrics_reply(&reply).unwrap(), exposition);
+        assert!(parse_metrics_reply("{\"pong\":true}").is_err());
+    }
+
+    #[test]
+    fn trace_field_parses_and_downgrades_when_malformed() {
+        let tag = crate::trace::encode_wire(0xDEAD_BEEF, 1);
+        let line = sample_request(4)
+            .replace("\"id\": 42,", &format!("\"id\": 42, \"trace\": \"{tag}\","));
+        match parse_message(&line).unwrap() {
+            Message::Infer(r) => assert_eq!(r.trace, Some((0xDEAD_BEEF, 1))),
+            other => panic!("wrong message {other:?}"),
+        }
+        // Untagged requests and malformed tags both come through as None —
+        // a bad trace tag must never fail an otherwise valid request.
+        match parse_message(&sample_request(4)).unwrap() {
+            Message::Infer(r) => assert_eq!(r.trace, None),
+            other => panic!("wrong message {other:?}"),
+        }
+        let junk = sample_request(4)
+            .replace("\"id\": 42,", "\"id\": 42, \"trace\": \"not-a-tag\",");
+        match parse_message(&junk).unwrap() {
+            Message::Infer(r) => assert_eq!(r.trace, None),
+            other => panic!("wrong message {other:?}"),
+        }
     }
 
     #[test]
@@ -788,7 +986,7 @@ mod tests {
         let line = format_hello(32, &zoo, "wide");
         let json = Json::parse(&line).unwrap();
         assert_eq!(json.get("hello").unwrap().as_bool(), Some(true));
-        assert_eq!(json.get("proto").unwrap().as_f64(), Some(2.0));
+        assert_eq!(json.get("proto").unwrap().as_f64(), Some(3.0));
         assert_eq!(json.get("max_inflight").unwrap().as_f64(), Some(32.0));
         assert_eq!(json.get("kernel").unwrap().as_str(), Some("wide"));
         let features = json.get("features").unwrap().as_arr().unwrap();
@@ -796,7 +994,7 @@ mod tests {
             .iter()
             .any(|f| f.as_str() == Some("pipelined")));
         let info = parse_hello(&line).unwrap();
-        assert_eq!(info.proto, 2);
+        assert_eq!(info.proto, 3);
         assert_eq!(info.max_inflight, 32);
         assert_eq!(info.schemes, zoo, "hello advertises the full registry");
         assert_eq!(info.kernel.as_deref(), Some("wide"));

@@ -35,10 +35,11 @@
 use crate::coordinator::batcher::{Pending, ReplyTo, SubmitError};
 use crate::coordinator::metrics::{Metrics, ShardMetrics};
 use crate::coordinator::protocol::{
-    format_error, format_hello, format_overloaded, line_id, parse_message, InferenceRequest,
-    Message,
+    format_error, format_hello, format_metrics_reply, format_overloaded, format_traces, line_id,
+    parse_message, InferenceRequest, Message,
 };
 use crate::coordinator::shard::{ShardConfig, ShardPool};
+use crate::trace::{Stage, TraceConfig};
 use crate::train::Zoo;
 use crate::util::error::{Context, Result};
 use crate::util::threadpool::WorkerPool;
@@ -102,6 +103,16 @@ pub struct ServerConfig {
     /// unanswered this long after its batch dispatched is answered
     /// `timeout` (releasing its window slot). 0 disables the watchdog.
     pub reply_timeout_ms: u64,
+    /// Fraction of admitted requests sampled for end-to-end tracing
+    /// (`--trace-rate`; 0 disables sampling).
+    pub trace_rate: f64,
+    /// Slow-trace promotion threshold in µs (`--trace-slow-us`): any
+    /// request at least this slow is traced regardless of sampling.
+    /// 0 disables promotion.
+    pub trace_slow_us: u64,
+    /// Completed-trace ring-buffer capacity (`--trace-buffer`; 0 disables
+    /// tracing entirely).
+    pub trace_buffer: usize,
 }
 
 impl Default for ServerConfig {
@@ -119,6 +130,9 @@ impl Default for ServerConfig {
             plan_cache_mb: 64,
             max_inflight: 64,
             reply_timeout_ms: 120_000,
+            trace_rate: 0.0,
+            trace_slow_us: 0,
+            trace_buffer: 256,
         }
     }
 }
@@ -142,6 +156,11 @@ impl ServerConfig {
             shadow_rate: self.shadow_rate,
             plan_cache_bytes: self.plan_cache_mb << 20,
             reply_timeout: Duration::from_millis(self.reply_timeout_ms),
+            trace: TraceConfig {
+                rate: self.trace_rate,
+                slow_us: self.trace_slow_us,
+                buffer: self.trace_buffer,
+            },
         }
     }
 }
@@ -428,6 +447,16 @@ fn read_loop(
             line.clear();
             continue;
         }
+        // Raw HTTP scrape support: a real Prometheus server speaks
+        // `GET /metrics HTTP/1.1`, not newline JSON. Serve one exposition
+        // response and close, like any HTTP/1.0 endpoint would.
+        if trimmed.starts_with("GET ") {
+            let _ = tx.send(http_metrics_response(&metrics.prometheus(pool.tracer())));
+            break;
+        }
+        // Clock reads for the parse span only happen when tracing can
+        // observe them (`--trace-rate 0 --trace-slow-us 0` reads none).
+        let parse_start = pool.tracer().enabled().then(Instant::now);
         let mut stop = false;
         let sent = match parse_message(trimmed) {
             Ok(Message::Ping) => tx.send("{\"pong\":true}".to_string()),
@@ -437,14 +466,33 @@ fn read_loop(
                 crate::kernels::active_id().name(),
             )),
             Ok(Message::Stats) => tx.send(metrics.snapshot_json()),
+            Ok(Message::Trace(q)) => {
+                let tracer = pool.tracer();
+                tx.send(format_traces(&tracer.query(
+                    q.min_us,
+                    q.model.as_deref(),
+                    q.scheme.as_deref(),
+                    q.limit,
+                )))
+            }
+            Ok(Message::Metrics) => {
+                tx.send(format_metrics_reply(&metrics.prometheus(pool.tracer())))
+            }
             Ok(Message::Shutdown) => {
                 pool.close();
                 stop = true;
                 tx.send("{\"stopping\":true}".to_string())
             }
-            Ok(Message::Infer(req)) => {
-                handle_infer(req, shard, pool, &shard_metrics, &inflight, max_inflight, tx)
-            }
+            Ok(Message::Infer(req)) => handle_infer(
+                req,
+                shard,
+                pool,
+                &shard_metrics,
+                &inflight,
+                max_inflight,
+                parse_start,
+                tx,
+            ),
             Err(e) => {
                 shard_metrics.record_error();
                 // Echo the id when the malformed line carried one, so a
@@ -464,13 +512,26 @@ fn read_loop(
     Ok(())
 }
 
+/// A minimal HTTP/1.0 response carrying the Prometheus exposition, for
+/// scrapers that speak `GET /metrics` at the TCP port instead of the
+/// `{"cmd":"metrics"}` verb. Shared by the server and the cluster proxy.
+pub(crate) fn http_metrics_response(body: &str) -> String {
+    format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
 /// Dispatch one inference request: enforce the in-flight window and
 /// submit to the shard's batcher. Auto-precision requests keep their
 /// parse-time placeholder key — the shard worker resolves the concrete
 /// `(scheme, k)` once per drained batch, so adjacent auto requests
 /// coalesce onto one engine call. Never blocks on the reply — completion
 /// flows back through the [`ReplyTo`] into the connection's writer
-/// channel.
+/// channel. Admitted requests get their trace context here (a local
+/// sampling decision, or adoption of a proxy-propagated `"trace"` tag)
+/// with the parse and admit spans already stamped.
 #[allow(clippy::too_many_arguments)]
 fn handle_infer(
     req: InferenceRequest,
@@ -479,16 +540,32 @@ fn handle_infer(
     shard_metrics: &Arc<ShardMetrics>,
     inflight: &Arc<AtomicUsize>,
     max_inflight: usize,
+    parse_start: Option<Instant>,
     tx: &SyncSender<String>,
 ) -> std::result::Result<(), SendError<String>> {
     // Deprecated-alias telemetry: counted per use, before any outcome.
     if req.deprecated_mode {
         shard_metrics.record_deprecated_field();
     }
+    let admit_start = parse_start.is_some().then(Instant::now);
     // Window first: a bounced request only needs its id echoed back.
     if inflight.load(Ordering::Acquire) >= max_inflight {
         shard_metrics.record_rejected();
         return tx.send(format_overloaded(req.id));
+    }
+    // Only *admitted* requests get a trace context; upstream-propagated
+    // tags keep the proxy's sampling decision (and trace id).
+    let tracer = pool.tracer();
+    let mut trace = match req.trace {
+        Some((id, flags)) => tracer.adopt(req.id, id, flags),
+        None => tracer.begin(req.id),
+    };
+    if let Some(b) = trace.as_deref_mut() {
+        let admitted = Instant::now();
+        if let (Some(parse), Some(admit)) = (parse_start, admit_start) {
+            b.span(Stage::Parse, parse, admit);
+            b.span(Stage::Admit, admit, admitted);
+        }
     }
     let respond_to = ReplyTo::new(req.id, tx.clone())
         .with_window(inflight.clone())
@@ -499,6 +576,7 @@ fn handle_infer(
             req,
             respond_to,
             enqueued: Instant::now(),
+            trace,
         },
     );
     match submitted {

@@ -18,6 +18,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::linalg::Variant;
 use crate::nn::PlanKey;
 use crate::rounding::SchemeId;
+use crate::trace::{TraceConfig, Tracer};
 use crate::train::Zoo;
 use crate::util::rng::counter_hash;
 use crate::util::threadpool::WorkerPool;
@@ -49,6 +50,10 @@ pub struct ShardConfig {
     /// Reply-watchdog deadline per dispatched batch (zero disables the
     /// watchdog).
     pub reply_timeout: Duration,
+    /// Request-tracing policy (`--trace-rate` / `--trace-slow-us` /
+    /// `--trace-buffer`); the pool owns one [`Tracer`] shared by every
+    /// shard worker and the connection readers.
+    pub trace: TraceConfig,
 }
 
 /// K running serving shards plus their routing table.
@@ -60,6 +65,9 @@ pub struct ShardPool {
     /// sweeping until every shard worker has drained.
     watchdog: Option<Arc<ReplyWatchdog>>,
     sweeper: Mutex<WorkerPool>,
+    /// The process tracer: sampling decisions at admission (connection
+    /// readers), span finishing in the shard workers, `trace` queries.
+    tracer: Arc<Tracer>,
 }
 
 impl ShardPool {
@@ -91,6 +99,7 @@ impl ShardPool {
             let dog = dog.clone();
             sweeper.spawn("dither-reply-watchdog".to_string(), move || dog.run());
         }
+        let tracer = Arc::new(Tracer::new(cfg.trace.clone()));
         let mut batchers = Vec::with_capacity(shards);
         for i in 0..shards {
             let batcher = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait, cfg.queue_cap));
@@ -124,6 +133,7 @@ impl ShardPool {
             });
             let b = batcher.clone();
             let dog = watchdog.clone();
+            let shard_tracer = tracer.clone();
             workers.spawn(format!("dither-shard-{i}"), move || {
                 // Stop the batcher even if the worker panics: routed
                 // requests then get an immediate "shutting down" reply
@@ -135,7 +145,7 @@ impl ShardPool {
                     }
                 }
                 let _guard = StopOnExit(b.clone());
-                worker_loop(&b, &engine, &shard_metrics, i, dog.as_deref());
+                worker_loop(&b, &engine, &shard_metrics, &shard_tracer, i, dog.as_deref());
             });
             batchers.push(batcher);
         }
@@ -144,12 +154,20 @@ impl ShardPool {
             workers: Mutex::new(workers),
             watchdog,
             sweeper: Mutex::new(sweeper),
+            tracer,
         }
     }
 
     /// The pool's reply watchdog, when one is running.
     pub fn watchdog(&self) -> Option<&Arc<ReplyWatchdog>> {
         self.watchdog.as_ref()
+    }
+
+    /// The pool's shared tracer (sampling, the trace ring, per-stage
+    /// histograms). Always present; disabled configurations hand out no
+    /// builders.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     /// Number of shards.
@@ -213,6 +231,10 @@ mod tests {
     use crate::coordinator::batcher::ReplyTo;
 
     fn pool(shards: usize) -> (ShardPool, Metrics) {
+        pool_tracing(shards, TraceConfig::default())
+    }
+
+    fn pool_tracing(shards: usize, trace: TraceConfig) -> (ShardPool, Metrics) {
         let cfg = ShardConfig {
             shards,
             max_batch: 8,
@@ -223,6 +245,7 @@ mod tests {
             shadow_rate: 0.5,
             plan_cache_bytes: crate::coordinator::engine::DEFAULT_PLAN_CACHE_BYTES,
             reply_timeout: Duration::from_secs(120),
+            trace,
         };
         let metrics = Metrics::new(shards);
         let zoo = Arc::new(Zoo::load(200, 7));
@@ -246,6 +269,7 @@ mod tests {
                 },
                 respond_to: ReplyTo::new(id, tx),
                 enqueued: Instant::now(),
+                trace: None,
             },
             rx,
         )
@@ -292,5 +316,57 @@ mod tests {
         // logit errors into their metrics-owned fidelity estimators.
         let shadowed: u64 = (0..2).map(|i| metrics.shard(i).fidelity().total_samples()).sum();
         assert!(shadowed > 0, "shadow sampling must record logit errors");
+    }
+
+    #[test]
+    fn traced_requests_record_full_timelines_into_the_pool_tracer() {
+        use crate::trace::Stage;
+        let (pool, _metrics) = pool_tracing(
+            1,
+            TraceConfig {
+                rate: 1.0,
+                slow_us: 0,
+                buffer: 64,
+            },
+        );
+        let tracer = pool.tracer().clone();
+        assert!(tracer.enabled());
+        let mut receivers = Vec::new();
+        for id in 0..4u64 {
+            let (mut p, rx) = infer_pending(id);
+            p.trace = tracer.begin(id);
+            assert!(p.trace.is_some(), "rate 1.0 samples every request");
+            pool.submit(0, p).unwrap();
+            receivers.push(rx);
+        }
+        pool.close();
+        for rx in receivers {
+            rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        }
+        assert_eq!(pool.join(), 0);
+        assert_eq!(tracer.committed(), 4);
+        let traces = tracer.query(0, Some("digits_linear"), Some("dither"), 0);
+        assert_eq!(traces.len(), 4);
+        for trace in &traces {
+            assert_eq!(trace.shard, Some(0));
+            assert_eq!(trace.k, 4);
+            let stages: Vec<Stage> = trace.spans.iter().map(|s| s.stage).collect();
+            for want in [
+                Stage::Queue,
+                Stage::Assemble,
+                Stage::Plan,
+                Stage::Kernel,
+                Stage::Serialize,
+                Stage::Flush,
+            ] {
+                assert!(stages.contains(&want), "missing {want:?} in {stages:?}");
+            }
+            let kernel = trace.spans.iter().find(|s| s.stage == Stage::Kernel).unwrap();
+            let note = kernel.note.as_deref().expect("kernel span is noted");
+            assert!(note.ends_with("/dither"), "{note}");
+        }
+        // Stage histograms saw every span; the ring respects filters.
+        assert!(!tracer.stage_snapshots().is_empty());
+        assert!(tracer.query(0, Some("no_such_model"), None, 0).is_empty());
     }
 }

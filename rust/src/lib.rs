@@ -28,6 +28,10 @@
 //! * [`fidelity`] — online fidelity telemetry: shadow sampling against the
 //!   exact f64 forward pass, streaming bias/MSE estimators per
 //!   `(model, scheme, k)`, and the `"scheme":"auto"` precision controller.
+//! * [`trace`] — end-to-end request tracing: sampled span timelines
+//!   through proxy → shard → kernel, a slow-trace ring buffer behind
+//!   `{"cmd":"trace"}`, and the Prometheus text exposition behind
+//!   `{"cmd":"metrics"}`.
 //! * [`runtime`] — execution-environment descriptor + the AOT artifact
 //!   manifest emitted by the Python pipeline.
 //! * [`experiments`] — regenerators for every figure and table in the paper.
@@ -61,5 +65,6 @@ pub mod linalg;
 pub mod nn;
 pub mod rounding;
 pub mod runtime;
+pub mod trace;
 pub mod train;
 pub mod util;

@@ -82,6 +82,13 @@ SERVE FLAGS:
     --reply-timeout-ms N  watchdog deadline for an accepted request (120000;
                       0 disables): a reply still outstanding past it is
                       answered 'timeout' and releases its window slot
+    --trace-rate F    fraction of admitted requests that record a full
+                      span timeline (0; deterministic counter-hash
+                      sampling, so replays sample identically)
+    --trace-slow-us N promote any request at least this slow (µs) into
+                      the trace ring, sampled or not (0 = off)
+    --trace-buffer N  completed-trace ring capacity, queryable via
+                      {\"cmd\":\"trace\"} (256; 0 disables tracing)
 
 PROXY FLAGS:
     --addr HOST:PORT  listen address (127.0.0.1:7900)
@@ -93,6 +100,15 @@ PROXY FLAGS:
     --probe-ms N      health-probe interval in ms (500)
     --probe-timeout-ms N  probe/connect/handshake timeout in ms (2000)
     --max-backoff-ms N    probe backoff ceiling for dead backends (8000)
+    --trace-rate F    proxy-side trace sampling (0); sampled requests
+                      propagate their context to the serving backend and
+                      {\"cmd\":\"trace\"} returns stitched cross-process
+                      timelines
+    --trace-slow-us N promote any request at least this slow (µs) (0)
+    --trace-buffer N  proxy trace-ring capacity (256; 0 disables)
+
+Both serve and proxy answer {\"cmd\":\"metrics\"} (and a raw
+'GET /metrics' line) with a Prometheus text exposition.
 
 INFER FLAGS:
     --model NAME      digits_linear | fashion_mlp (digits_linear)
@@ -232,6 +248,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         plan_cache_mb: args.parse_or("plan-cache-mb", 64usize),
         max_inflight: args.parse_or("max-inflight", 64usize),
         reply_timeout_ms: args.parse_or("reply-timeout-ms", 120_000u64),
+        trace_rate: args.parse_or("trace-rate", 0.0f64),
+        trace_slow_us: args.parse_or("trace-slow-us", 0u64),
+        trace_buffer: args.parse_or("trace-buffer", 256usize),
     };
     serve(&cfg)
 }
@@ -252,6 +271,9 @@ fn cmd_proxy(args: &Args) -> Result<()> {
         probe_interval_ms: args.parse_or("probe-ms", 500u64),
         probe_timeout_ms: args.parse_or("probe-timeout-ms", 2_000u64),
         max_backoff_ms: args.parse_or("max-backoff-ms", 8_000u64),
+        trace_rate: args.parse_or("trace-rate", 0.0f64),
+        trace_slow_us: args.parse_or("trace-slow-us", 0u64),
+        trace_buffer: args.parse_or("trace-buffer", 256usize),
     };
     run_proxy(&cfg)
 }

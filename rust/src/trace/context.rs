@@ -1,0 +1,415 @@
+//! Per-request trace context: the 64-bit trace id, the span timeline a
+//! request accumulates as it moves through the serving pipeline, and the
+//! wire encoding the cluster proxy uses to propagate the context upstream.
+//!
+//! Ownership is the concurrency story. A [`TraceBuilder`] is created by
+//! whichever tier admits the request (the backend's connection reader or
+//! the proxy's dispatcher) and then *moves* with the request — into the
+//! batcher's `Pending`, across the queue to the shard worker, or into the
+//! proxy's pending-reply table. Exactly one thread owns it at any moment,
+//! so span recording is plain `Vec` pushes against a monotonic clock: no
+//! lock, no atomics, no allocation beyond the spans themselves. Only the
+//! finished, immutable [`Trace`] ever crosses into shared state (the
+//! bounded ring in [`crate::trace::ring`]).
+
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// One pipeline stage a span can measure. Backend stages cover the full
+/// request lifecycle inside a `serve` process; the last three are stamped
+/// by the cluster proxy on its own timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Reading + validating the request line (backend connection reader).
+    Parse,
+    /// In-flight window admission check.
+    Admit,
+    /// Queue wait: submit until the shard worker drained the request.
+    Queue,
+    /// Batch assembly: drain until the batch was sealed for execution.
+    Assemble,
+    /// Auto-precision resolution (`"scheme":"auto"` batches only).
+    AutoResolve,
+    /// Plan-cache lookup, or the plan build a miss pays for.
+    Plan,
+    /// The quantized forward pass (tagged with the active kernel id and
+    /// the scheme via the span note).
+    Kernel,
+    /// Shadow sampling: the exact f64 re-run feeding fidelity estimators.
+    Shadow,
+    /// Response serialization.
+    Serialize,
+    /// Handoff to the connection writer (the reply leaves the worker).
+    Flush,
+    /// Proxy: consistent-hash routing decision.
+    Route,
+    /// Proxy: the upstream submit on the pooled pipelined connection.
+    Forward,
+    /// Proxy: waiting for the backend's out-of-order completion.
+    UpstreamWait,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order (backend stages first, proxy last).
+    pub const ALL: [Stage; 13] = [
+        Stage::Parse,
+        Stage::Admit,
+        Stage::Queue,
+        Stage::Assemble,
+        Stage::AutoResolve,
+        Stage::Plan,
+        Stage::Kernel,
+        Stage::Shadow,
+        Stage::Serialize,
+        Stage::Flush,
+        Stage::Route,
+        Stage::Forward,
+        Stage::UpstreamWait,
+    ];
+
+    /// Number of distinct stages.
+    pub const COUNT: usize = Stage::ALL.len();
+
+    /// Stable dense index (histogram slot).
+    pub fn slot(self) -> usize {
+        self as usize
+    }
+
+    /// Wire / exposition name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Admit => "admit",
+            Stage::Queue => "queue",
+            Stage::Assemble => "assemble",
+            Stage::AutoResolve => "auto_resolve",
+            Stage::Plan => "plan",
+            Stage::Kernel => "kernel",
+            Stage::Shadow => "shadow",
+            Stage::Serialize => "serialize",
+            Stage::Flush => "flush",
+            Stage::Route => "route",
+            Stage::Forward => "forward",
+            Stage::UpstreamWait => "upstream_wait",
+        }
+    }
+
+    /// Inverse of [`Stage::name`] (used when re-parsing trace dumps).
+    pub fn from_name(name: &str) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|s| s.name() == name)
+    }
+}
+
+/// One measured interval on a trace's timeline. Offsets are microseconds
+/// since the trace's own monotonic origin — timelines from different
+/// processes are therefore *not* directly comparable, which is why
+/// cluster stitching keeps per-process span lists side by side instead of
+/// interleaving them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    /// Which pipeline stage this span measures.
+    pub stage: Stage,
+    /// Start offset in µs since the trace origin.
+    pub start_us: u64,
+    /// Duration in µs.
+    pub dur_us: u64,
+    /// Optional annotation (the kernel span carries `"<kernel>/<scheme>"`).
+    pub note: Option<String>,
+}
+
+impl Span {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("stage", Json::Str(self.stage.name().to_string())),
+            ("start_us", Json::Num(self.start_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+        ];
+        if let Some(note) = &self.note {
+            fields.push(("note", Json::Str(note.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(json: &Json) -> Option<Span> {
+        Some(Span {
+            stage: Stage::from_name(json.get("stage")?.as_str()?)?,
+            start_us: json.get("start_us")?.as_f64()? as u64,
+            dur_us: json.get("dur_us")?.as_f64()? as u64,
+            note: json.get("note").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+/// Wire flag bit: the request was sampled at admission (as opposed to
+/// being carried only for slow-trace promotion).
+pub const FLAG_SAMPLED: u8 = 1;
+
+/// Encode a trace context for the request line: `"<16-hex-id>:<flags>"`.
+/// Proto-3 proxies attach this under the `"trace"` key; older backends
+/// simply ignore the unknown field.
+pub fn encode_wire(id: u64, flags: u8) -> String {
+    format!("{id:016x}:{flags}")
+}
+
+/// Decode a `"trace"` request field. Returns `None` for anything
+/// malformed — an unparseable tag downgrades the request to untraced
+/// rather than rejecting it, mirroring how pre-proto-3 backends treat the
+/// whole field.
+pub fn decode_wire(tag: &str) -> Option<(u64, u8)> {
+    let (id_hex, flags) = tag.split_once(':')?;
+    if id_hex.len() != 16 {
+        return None;
+    }
+    let id = u64::from_str_radix(id_hex, 16).ok()?;
+    let flags = flags.parse::<u8>().ok()?;
+    Some((id, flags))
+}
+
+/// Batch-level stage timings the engine reports back to the shard worker
+/// (plan lookup/build, kernel execute, shadow sampling). The worker fans
+/// them out to every traced request in the batch — the stages are shared
+/// batch work, so each member's timeline shows the same interval.
+#[derive(Debug, Default)]
+pub struct BatchStageTimes {
+    /// Plan-cache lookup (or the build a miss paid for).
+    pub plan: Option<(Instant, Instant)>,
+    /// The quantized forward pass.
+    pub kernel: Option<(Instant, Instant)>,
+    /// The exact f64 shadow re-run (only when shadow sampling ran).
+    pub shadow: Option<(Instant, Instant)>,
+}
+
+/// An in-flight trace: owned by exactly one pipeline stage at a time (see
+/// the module docs), accumulating spans until the owning tier hands it to
+/// [`crate::trace::Tracer::finish`].
+#[derive(Debug)]
+pub struct TraceBuilder {
+    id: u64,
+    sampled: bool,
+    t0: Instant,
+    request_id: u64,
+    model: String,
+    scheme: String,
+    k: u32,
+    shard: Option<usize>,
+    spans: Vec<Span>,
+}
+
+impl TraceBuilder {
+    /// Fresh trace rooted at "now" on this process's monotonic clock.
+    /// Boxed because it rides inside queued requests — one pointer of
+    /// overhead for untraced paths' data structures.
+    pub fn new(id: u64, sampled: bool, request_id: u64) -> Box<TraceBuilder> {
+        Box::new(TraceBuilder {
+            id,
+            sampled,
+            t0: Instant::now(),
+            request_id,
+            model: String::new(),
+            scheme: String::new(),
+            k: 0,
+            shard: None,
+            spans: Vec::with_capacity(8),
+        })
+    }
+
+    /// The 64-bit trace id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Whether the admission decision sampled this request (slow-only
+    /// traces carry `false` until promotion at finish).
+    pub fn sampled(&self) -> bool {
+        self.sampled
+    }
+
+    /// The wire tag (`"<id>:<flags>"`) a proxy attaches when forwarding.
+    pub fn wire_tag(&self) -> String {
+        encode_wire(self.id, if self.sampled { FLAG_SAMPLED } else { 0 })
+    }
+
+    /// Record one span from explicit start/end instants (both clamped to
+    /// the trace origin, so a span can never start before its trace).
+    pub fn span(&mut self, stage: Stage, start: Instant, end: Instant) {
+        self.span_noted(stage, start, end, None);
+    }
+
+    /// [`TraceBuilder::span`] with an annotation (kernel id, scheme, ...).
+    pub fn span_noted(
+        &mut self,
+        stage: Stage,
+        start: Instant,
+        end: Instant,
+        note: Option<String>,
+    ) {
+        let start_us = start.saturating_duration_since(self.t0).as_micros() as u64;
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        self.spans.push(Span {
+            stage,
+            start_us,
+            dur_us,
+            note,
+        });
+    }
+
+    /// Record a span that ends now.
+    pub fn span_since(&mut self, stage: Stage, start: Instant) {
+        self.span(stage, start, Instant::now());
+    }
+
+    /// Stamp what the request resolved to (model family, concrete scheme
+    /// and bit width — for auto requests, the controller's choice).
+    pub fn annotate(&mut self, model: &str, scheme: &str, k: u32) {
+        self.model = model.to_string();
+        self.scheme = scheme.to_string();
+        self.k = k;
+    }
+
+    /// Stamp which shard served the request.
+    pub fn set_shard(&mut self, shard: usize) {
+        self.shard = Some(shard);
+    }
+
+    /// Microseconds elapsed since the trace origin.
+    pub fn elapsed_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// Seal the builder into an immutable [`Trace`] record (called by the
+    /// tracer; `slow` is the promotion verdict it computed).
+    pub(crate) fn seal(self: Box<TraceBuilder>, total_us: u64, slow: bool) -> Trace {
+        Trace {
+            trace_id: self.id,
+            request_id: self.request_id,
+            model: self.model,
+            scheme: self.scheme,
+            k: self.k,
+            shard: self.shard,
+            total_us,
+            sampled: self.sampled,
+            slow,
+            spans: self.spans,
+        }
+    }
+}
+
+/// A completed, immutable trace as stored in the ring buffer and emitted
+/// by the `{"cmd":"trace"}` verb.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// 64-bit trace id (shared across tiers for one request).
+    pub trace_id: u64,
+    /// The request id at the tier that recorded this timeline (the
+    /// client's id at the proxy; the possibly-rewritten upstream id on a
+    /// backend).
+    pub request_id: u64,
+    /// Model family the request resolved to (empty if it failed early).
+    pub model: String,
+    /// Concrete scheme served (auto requests record the resolved choice).
+    pub scheme: String,
+    /// Concrete bit width served.
+    pub k: u32,
+    /// Serving shard, when the request reached one.
+    pub shard: Option<usize>,
+    /// End-to-end latency at this tier, µs.
+    pub total_us: u64,
+    /// Sampled at admission.
+    pub sampled: bool,
+    /// Promoted by the slow-trace threshold.
+    pub slow: bool,
+    /// The timeline (µs offsets from this tier's trace origin).
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    /// JSON form (one element of the `{"cmd":"trace"}` reply's `traces`).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("trace_id", Json::Str(format!("{:016x}", self.trace_id))),
+            ("id", Json::Num(self.request_id as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("k", Json::Num(f64::from(self.k))),
+            ("total_us", Json::Num(self.total_us as f64)),
+            ("sampled", Json::Bool(self.sampled)),
+            ("slow", Json::Bool(self.slow)),
+            (
+                "spans",
+                Json::Arr(self.spans.iter().map(Span::to_json).collect()),
+            ),
+        ];
+        if let Some(shard) = self.shard {
+            fields.push(("shard", Json::Num(shard as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse one trace back out of its JSON form (the proxy re-parses
+    /// backend trace dumps to stitch cluster timelines). `None` for
+    /// anything that does not look like a trace record.
+    pub fn from_json(json: &Json) -> Option<Trace> {
+        let spans = json
+            .get("spans")?
+            .as_arr()?
+            .iter()
+            .map(Span::from_json)
+            .collect::<Option<Vec<Span>>>()?;
+        Some(Trace {
+            trace_id: u64::from_str_radix(json.get("trace_id")?.as_str()?, 16).ok()?,
+            request_id: json.get("id")?.as_f64()? as u64,
+            model: json.get("model")?.as_str()?.to_string(),
+            scheme: json.get("scheme")?.as_str()?.to_string(),
+            k: json.get("k")?.as_f64()? as u32,
+            shard: json.get("shard").and_then(Json::as_f64).map(|s| s as usize),
+            total_us: json.get("total_us")?.as_f64()? as u64,
+            sampled: json.get("sampled")?.as_bool()?,
+            slow: json.get("slow")?.as_bool()?,
+            spans,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_roundtrip_and_slots_are_dense() {
+        for (i, stage) in Stage::ALL.into_iter().enumerate() {
+            assert_eq!(stage.slot(), i);
+            assert_eq!(Stage::from_name(stage.name()), Some(stage));
+        }
+        assert_eq!(Stage::from_name("no_such_stage"), None);
+    }
+
+    #[test]
+    fn wire_tag_roundtrips_and_rejects_garbage() {
+        for (id, flags) in [(0u64, 0u8), (1, 1), (u64::MAX, 255), (0xDEAD_BEEF, 1)] {
+            assert_eq!(decode_wire(&encode_wire(id, flags)), Some((id, flags)));
+        }
+        for bad in ["", "xyz", "12:1", "deadbeef:1", ":1", "0123456789abcdef:",
+            "0123456789abcdef:999", "0123456789abcdeg:1", "0123456789abcdef"]
+        {
+            assert_eq!(decode_wire(bad), None, "{bad:?} must not decode");
+        }
+    }
+
+    #[test]
+    fn builder_seals_into_a_json_roundtrippable_trace() {
+        let mut b = TraceBuilder::new(0xABCD, true, 42);
+        let t = Instant::now();
+        b.span(Stage::Parse, t, t);
+        b.span_noted(Stage::Kernel, t, t, Some("wide/dither".to_string()));
+        b.annotate("digits_linear", "dither", 4);
+        b.set_shard(3);
+        let trace = b.seal(123, false);
+        assert_eq!(trace.trace_id, 0xABCD);
+        assert_eq!(trace.request_id, 42);
+        assert_eq!(trace.shard, Some(3));
+        assert_eq!(trace.spans.len(), 2);
+        assert_eq!(trace.spans[1].note.as_deref(), Some("wide/dither"));
+        let parsed = Trace::from_json(&trace.to_json()).expect("roundtrip");
+        assert_eq!(parsed, trace);
+    }
+}

@@ -1,0 +1,288 @@
+//! Prometheus text-exposition rendering: a tiny zero-dep builder for the
+//! `{"cmd":"metrics"}` verb (and the raw `GET /metrics` fast path), plus
+//! the well-formedness checker the smoke tests and `load_gen` assert
+//! with.
+//!
+//! The builder emits the [text exposition format]: one `# HELP` / `# TYPE`
+//! pair per metric family followed by its samples, histograms in the
+//! standard `_bucket{le="..."}` / `_sum` / `_count` convention with
+//! cumulative counts and a `+Inf` bucket. Both the backend server and the
+//! cluster proxy render through this type, so the two tiers' surfaces
+//! stay structurally identical.
+//!
+//! [text exposition format]: https://prometheus.io/docs/instrumenting/exposition_formats/
+
+use crate::trace::ring::{stage_bucket_upper, StageSnapshot};
+use std::fmt::Write as _;
+
+/// Incremental Prometheus text-exposition builder.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+/// A label set: `(name, value)` pairs rendered as `{a="x",b="y"}`.
+pub type Labels<'a> = &'a [(&'a str, &'a str)];
+
+fn write_labels(out: &mut String, labels: Labels<'_>) {
+    if labels.is_empty() {
+        return;
+    }
+    out.push('{');
+    for (i, (name, value)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{name}=\"");
+        for c in value.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out.push('}');
+}
+
+fn write_value(out: &mut String, value: f64) {
+    if value.fract() == 0.0 && value.abs() < 1e15 {
+        let _ = write!(out, "{}", value as i64);
+    } else {
+        let _ = write!(out, "{value}");
+    }
+}
+
+impl PromText {
+    /// Empty exposition.
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// Open a metric family: one `# HELP` + `# TYPE` header pair.
+    /// `kind` is `counter`, `gauge`, or `histogram`.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    /// One sample line for the most recently opened family.
+    pub fn sample(&mut self, name: &str, labels: Labels<'_>, value: f64) {
+        self.out.push_str(name);
+        write_labels(&mut self.out, labels);
+        self.out.push(' ');
+        write_value(&mut self.out, value);
+        self.out.push('\n');
+    }
+
+    /// A single-sample counter or gauge family.
+    pub fn scalar(&mut self, name: &str, kind: &str, help: &str, value: f64) {
+        self.family(name, kind, help);
+        self.sample(name, &[], value);
+    }
+
+    /// Histogram samples from a log₂ bucket slice (edges via
+    /// [`crate::coordinator::metrics::bucket_upper`]): cumulative
+    /// `_bucket{le=...}` lines, `+Inf`, `_sum`, `_count`. Empty buckets
+    /// are skipped (the counts are cumulative, so nothing is lost) to
+    /// keep the surface compact. Call [`PromText::family`] with kind
+    /// `histogram` first when emitting several labeled series under one
+    /// family.
+    pub fn histogram_series(
+        &mut self,
+        name: &str,
+        labels: Labels<'_>,
+        buckets: &[u64],
+        sum: f64,
+        upper: impl Fn(usize) -> u64,
+    ) {
+        let bucket_name = format!("{name}_bucket");
+        let les: Vec<String> = (0..buckets.len()).map(|i| upper(i).to_string()).collect();
+        let mut cumulative = 0u64;
+        for (i, &count) in buckets.iter().enumerate() {
+            cumulative += count;
+            if count == 0 {
+                continue;
+            }
+            let mut with_le: Vec<(&str, &str)> = labels.to_vec();
+            with_le.push(("le", &les[i]));
+            self.sample(&bucket_name, &with_le, cumulative as f64);
+        }
+        let mut with_inf: Vec<(&str, &str)> = labels.to_vec();
+        with_inf.push(("le", "+Inf"));
+        self.sample(&bucket_name, &with_inf, cumulative as f64);
+        self.sample(&format!("{name}_sum"), labels, sum);
+        self.sample(&format!("{name}_count"), labels, cumulative as f64);
+    }
+
+    /// The per-stage span-duration histogram family every tier exposes
+    /// (`dither_stage_duration_us{stage="..."}`).
+    pub fn stage_histograms(&mut self, snapshots: &[StageSnapshot]) {
+        if snapshots.is_empty() {
+            return;
+        }
+        self.family(
+            "dither_stage_duration_us",
+            "histogram",
+            "Per-stage span durations from the request tracer",
+        );
+        for snap in snapshots {
+            self.histogram_series(
+                "dither_stage_duration_us",
+                &[("stage", snap.stage.name())],
+                &snap.buckets,
+                snap.sum_us as f64,
+                stage_bucket_upper,
+            );
+        }
+    }
+
+    /// The finished exposition text.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Structural well-formedness check over an exposition text: every line
+/// is a comment or a `name{labels} value` sample with a parseable value
+/// and balanced label quoting, and every sample's family was declared by
+/// a preceding `# TYPE` line. Returns the first offending line.
+pub fn check_exposition(text: &str) -> Result<(), String> {
+    let mut typed: Vec<String> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next().unwrap_or("");
+            let kind = parts.next().unwrap_or("");
+            if name.is_empty() || !matches!(kind, "counter" | "gauge" | "histogram") {
+                return Err(format!("bad TYPE line: {line}"));
+            }
+            typed.push(name.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // Sample line: name[{labels}] value
+        let (series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("no value separator: {line}"))?;
+        value
+            .parse::<f64>()
+            .map_err(|_| format!("unparseable value: {line}"))?;
+        let name = match series.split_once('{') {
+            Some((name, labels)) => {
+                if !labels.ends_with('}') || labels.matches('"').count() % 2 != 0 {
+                    return Err(format!("unbalanced labels: {line}"));
+                }
+                name
+            }
+            None => series,
+        };
+        let base = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|base| typed.iter().any(|t| t == base))
+            .unwrap_or(name);
+        if !typed.iter().any(|t| t == base) {
+            return Err(format!("sample without TYPE declaration: {line}"));
+        }
+    }
+    if typed.is_empty() {
+        return Err("no metric families".to_string());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::ring::{TraceConfig, Tracer};
+    use crate::trace::Stage;
+    use std::time::Instant;
+
+    #[test]
+    fn scalars_and_labels_render_and_validate() {
+        let mut p = PromText::new();
+        p.scalar("dither_requests_total", "counter", "Requests served", 42.0);
+        p.family("dither_fidelity_mse", "gauge", "Measured MSE");
+        p.sample(
+            "dither_fidelity_mse",
+            &[("model", "digits_linear"), ("scheme", "dither"), ("k", "4")],
+            0.125,
+        );
+        let text = p.finish();
+        assert!(text.contains("# TYPE dither_requests_total counter"));
+        assert!(text.contains("dither_requests_total 42\n"));
+        assert!(text.contains(
+            "dither_fidelity_mse{model=\"digits_linear\",scheme=\"dither\",k=\"4\"} 0.125"
+        ));
+        check_exposition(&text).expect("well-formed");
+    }
+
+    #[test]
+    fn histogram_emits_cumulative_buckets_inf_sum_count() {
+        let mut p = PromText::new();
+        p.family("dither_latency_us", "histogram", "Request latency");
+        let mut buckets = vec![0u64; 8];
+        buckets[2] = 3;
+        buckets[5] = 1;
+        p.histogram_series(
+            "dither_latency_us",
+            &[],
+            &buckets,
+            99.0,
+            crate::coordinator::metrics::bucket_upper,
+        );
+        let text = p.finish();
+        assert!(text.contains("dither_latency_us_bucket{le=\"3\"} 3"), "{text}");
+        assert!(text.contains("dither_latency_us_bucket{le=\"31\"} 4"), "{text}");
+        assert!(text.contains("dither_latency_us_bucket{le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("dither_latency_us_sum 99"), "{text}");
+        assert!(text.contains("dither_latency_us_count 4"), "{text}");
+        check_exposition(&text).expect("well-formed");
+    }
+
+    #[test]
+    fn stage_family_renders_from_a_live_tracer() {
+        let t = Tracer::new(TraceConfig {
+            rate: 1.0,
+            slow_us: 0,
+            buffer: 4,
+        });
+        let mut b = t.begin(1).unwrap();
+        let now = Instant::now();
+        b.span(Stage::Kernel, now, now);
+        t.finish(b);
+        let mut p = PromText::new();
+        p.stage_histograms(&t.stage_snapshots());
+        let text = p.finish();
+        assert!(
+            text.contains("dither_stage_duration_us_bucket{stage=\"kernel\",le=\"+Inf\"} 1"),
+            "{text}"
+        );
+        check_exposition(&text).expect("well-formed");
+    }
+
+    #[test]
+    fn checker_rejects_malformed_text() {
+        assert!(check_exposition("").is_err(), "empty text has no families");
+        assert!(check_exposition("orphan_sample 1\n").is_err());
+        assert!(
+            check_exposition("# TYPE x counter\nx notanumber\n").is_err(),
+            "value must parse"
+        );
+        assert!(
+            check_exposition("# TYPE x counter\nx{a=\"b} 1\n").is_err(),
+            "unbalanced quotes"
+        );
+        assert!(check_exposition("# TYPE x wrongkind\nx 1\n").is_err());
+        assert!(check_exposition("# TYPE x counter\nx{a=\"b\"} 1\n").is_ok());
+    }
+}

@@ -1,0 +1,36 @@
+//! End-to-end request tracing: span timelines through proxy → shard →
+//! kernel, a slow-trace ring buffer, and the Prometheus exposition
+//! surface.
+//!
+//! Aggregate telemetry (`stats` counters, latency histograms, fidelity
+//! cells) says *that* p99 moved; this subsystem says *why one request was
+//! slow*. Each admitted request gets a trace context — a 64-bit trace id
+//! plus a deterministic `counter_hash`-based sampling decision at
+//! `--trace-rate`, with always-on promotion for requests exceeding
+//! `--trace-slow-us` — and accumulates spans as it moves through the
+//! pipeline: parse, window admit, queue wait, batch assembly, auto
+//! resolution, plan-cache lookup/build, kernel execute (tagged with the
+//! active kernel id and scheme), shadow sampling, serialization, and the
+//! writer handoff. The cluster proxy stamps its own route / forward /
+//! upstream-wait spans and propagates the context upstream in the request
+//! line (`"trace":"<id:flags>"`, proto 3 — older backends ignore the
+//! field), so a cluster-level `{"cmd":"trace"}` query stitches
+//! cross-process timelines under one trace id.
+//!
+//! * [`context`] — the trace id, the span vocabulary ([`Stage`]), the
+//!   wire tag, and the ownership-based lock-free recording story;
+//! * [`ring`] — the per-process [`Tracer`]: sampling, per-stage duration
+//!   histograms, and the bounded ring buffer behind `{"cmd":"trace"}`;
+//! * [`export`] — the zero-dep Prometheus text-exposition builder behind
+//!   `{"cmd":"metrics"}` on both tiers, plus the well-formedness checker
+//!   the smoke tests scrape with.
+
+pub mod context;
+pub mod export;
+pub mod ring;
+
+pub use context::{
+    decode_wire, encode_wire, BatchStageTimes, Span, Stage, Trace, TraceBuilder, FLAG_SAMPLED,
+};
+pub use export::{check_exposition, PromText};
+pub use ring::{stage_bucket_upper, StageSnapshot, TraceConfig, Tracer};

@@ -1,0 +1,447 @@
+//! The per-process tracer: the sampling decision, the per-stage duration
+//! histograms behind the `metrics` exposition, and the bounded ring
+//! buffer of completed traces the `{"cmd":"trace"}` verb queries.
+//!
+//! Sampling is the same stateless hash test the shadow sampler uses —
+//! `counter_hash(SALT, n) < rate · 2⁶⁴` over an admission counter — so
+//! which requests are traced is deterministic for a replayed workload and
+//! free of aliasing with periodic traffic. Requests that miss the sample
+//! are still carried when a slow-trace threshold is configured: their
+//! spans are recorded speculatively and committed only if the finished
+//! request exceeded `--trace-slow-us` (always-on promotion for outliers).
+//!
+//! The ring is a bounded `VecDeque` behind a mutex. Only *committed*
+//! traces and `trace` queries ever touch it — span recording itself is
+//! lock-free by ownership (see [`crate::trace::context`]) — so at the
+//! default 1% sample rate the lock is taken about once per hundred
+//! requests, far off the hot path. Per-stage histograms are relaxed
+//! atomics, same discipline as [`crate::coordinator::metrics`].
+
+use crate::coordinator::metrics::{bucket_index, bucket_upper, BUCKETS};
+use crate::trace::context::{Trace, TraceBuilder};
+use crate::trace::Stage;
+use crate::util::rng::counter_hash;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Fixed salt for the trace-sampling decision (a different stream from
+/// the shadow sampler's, so tracing and shadowing pick independent
+/// request subsets at equal rates).
+const TRACE_SALT: u64 = 0x7_7ACE;
+
+/// Fixed salt for deriving trace ids from the admission counter.
+const ID_SALT: u64 = 0x1D_5EED;
+
+/// Tracing configuration (the `--trace-rate` / `--trace-slow-us` /
+/// `--trace-buffer` flags).
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Fraction of admitted requests sampled for tracing (clamped to
+    /// `0..=1`; NaN disables sampling).
+    pub rate: f64,
+    /// Slow-trace promotion threshold in µs (0 disables promotion).
+    pub slow_us: u64,
+    /// Ring-buffer capacity in completed traces (0 keeps nothing).
+    pub buffer: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            rate: 0.0,
+            slow_us: 0,
+            buffer: 256,
+        }
+    }
+}
+
+/// One stage's duration histogram: log₂ buckets plus sum/count, updated
+/// with relaxed atomics by whichever thread finishes a trace.
+struct StageHist {
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl StageHist {
+    fn new() -> StageHist {
+        StageHist {
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn record(&self, dur_us: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(dur_us, Ordering::Relaxed);
+        self.buckets[bucket_index(dur_us)].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A snapshot of one stage's duration histogram.
+#[derive(Clone, Debug)]
+pub struct StageSnapshot {
+    /// The stage.
+    pub stage: Stage,
+    /// Spans recorded.
+    pub count: u64,
+    /// Total duration across those spans, µs.
+    pub sum_us: u64,
+    /// log₂ duration buckets (edges via
+    /// [`crate::coordinator::metrics::bucket_upper`]).
+    pub buckets: Vec<u64>,
+}
+
+/// The per-process tracer: sampling, stage histograms, and the ring.
+pub struct Tracer {
+    cfg: TraceConfig,
+    /// `rate · 2⁶⁴`, the admission acceptance threshold.
+    threshold: u64,
+    counter: AtomicU64,
+    begun: AtomicU64,
+    committed: AtomicU64,
+    slow_promoted: AtomicU64,
+    evicted: AtomicU64,
+    stages: Vec<StageHist>,
+    ring: Mutex<VecDeque<Trace>>,
+}
+
+impl Tracer {
+    /// Tracer from a configuration (rates clamped like the shadow
+    /// sampler's).
+    pub fn new(cfg: TraceConfig) -> Tracer {
+        let rate = if cfg.rate.is_nan() {
+            0.0
+        } else {
+            cfg.rate.clamp(0.0, 1.0)
+        };
+        let cfg = TraceConfig { rate, ..cfg };
+        Tracer {
+            threshold: (rate * 18446744073709551616.0) as u64,
+            counter: AtomicU64::new(0),
+            begun: AtomicU64::new(0),
+            committed: AtomicU64::new(0),
+            slow_promoted: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            stages: (0..Stage::COUNT).map(|_| StageHist::new()).collect(),
+            ring: Mutex::new(VecDeque::new()),
+            cfg,
+        }
+    }
+
+    /// The active configuration (post-clamping).
+    pub fn config(&self) -> &TraceConfig {
+        &self.cfg
+    }
+
+    /// True when any request can ever produce a trace.
+    pub fn enabled(&self) -> bool {
+        self.cfg.buffer > 0 && (self.cfg.rate > 0.0 || self.cfg.slow_us > 0)
+    }
+
+    /// Admission decision for a locally originated request: `None` means
+    /// the request carries no trace at all (the common case at low
+    /// rates); `Some` is a live builder — sampled, or speculative when
+    /// only the slow threshold can commit it.
+    pub fn begin(&self, request_id: u64) -> Option<Box<TraceBuilder>> {
+        if !self.enabled() {
+            return None;
+        }
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        let sampled = self.cfg.rate >= 1.0
+            || (self.cfg.rate > 0.0 && counter_hash(TRACE_SALT, n) < self.threshold);
+        if !sampled && self.cfg.slow_us == 0 {
+            return None;
+        }
+        self.begun.fetch_add(1, Ordering::Relaxed);
+        Some(TraceBuilder::new(
+            counter_hash(ID_SALT ^ std::process::id() as u64, n),
+            sampled,
+            request_id,
+        ))
+    }
+
+    /// Adopt a trace context propagated from an upstream tier (the proxy's
+    /// `"trace":"<id:flags>"` request field). The upstream sampling
+    /// decision is honored regardless of this process's own rate, so a
+    /// cluster traces coherently end to end; an unsampled tag still gets
+    /// a speculative builder when slow promotion is on.
+    pub fn adopt(&self, request_id: u64, id: u64, flags: u8) -> Option<Box<TraceBuilder>> {
+        if self.cfg.buffer == 0 {
+            return None;
+        }
+        let sampled = flags & crate::trace::context::FLAG_SAMPLED != 0;
+        if !sampled && self.cfg.slow_us == 0 {
+            return None;
+        }
+        self.begun.fetch_add(1, Ordering::Relaxed);
+        Some(TraceBuilder::new(id, sampled, request_id))
+    }
+
+    /// Finish a trace: feed every span into the per-stage histograms,
+    /// decide slow promotion, and commit sampled/promoted timelines to
+    /// the ring (evicting the oldest past capacity).
+    pub fn finish(&self, builder: Box<TraceBuilder>) {
+        let total_us = builder.elapsed_us();
+        let slow = self.cfg.slow_us > 0 && total_us >= self.cfg.slow_us;
+        let commit = builder.sampled() || slow;
+        let trace = builder.seal(total_us, slow);
+        for span in &trace.spans {
+            self.stages[span.stage.slot()].record(span.dur_us);
+        }
+        if !commit {
+            return;
+        }
+        if slow {
+            self.slow_promoted.fetch_add(1, Ordering::Relaxed);
+        }
+        self.committed.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap();
+        ring.push_back(trace);
+        while ring.len() > self.cfg.buffer {
+            ring.pop_front();
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Query the ring, newest first. `model`/`scheme` filter exactly on
+    /// the recorded labels; `min_us` keeps traces at least that slow;
+    /// `limit` caps the result (0 means no cap).
+    pub fn query(
+        &self,
+        min_us: u64,
+        model: Option<&str>,
+        scheme: Option<&str>,
+        limit: usize,
+    ) -> Vec<Trace> {
+        let ring = self.ring.lock().unwrap();
+        let mut out = Vec::new();
+        for trace in ring.iter().rev() {
+            if trace.total_us < min_us {
+                continue;
+            }
+            if model.is_some_and(|m| trace.model != m) {
+                continue;
+            }
+            if scheme.is_some_and(|s| trace.scheme != s) {
+                continue;
+            }
+            out.push(trace.clone());
+            if limit > 0 && out.len() >= limit {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Completed traces currently resident in the ring.
+    pub fn resident(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// Builders handed out (sampled + speculative).
+    pub fn begun(&self) -> u64 {
+        self.begun.load(Ordering::Relaxed)
+    }
+
+    /// Traces committed to the ring over the process lifetime.
+    pub fn committed(&self) -> u64 {
+        self.committed.load(Ordering::Relaxed)
+    }
+
+    /// Traces committed only because they crossed the slow threshold.
+    pub fn slow_promoted(&self) -> u64 {
+        self.slow_promoted.load(Ordering::Relaxed)
+    }
+
+    /// Traces evicted from the full ring.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot every stage histogram that has recorded at least one span.
+    pub fn stage_snapshots(&self) -> Vec<StageSnapshot> {
+        Stage::ALL
+            .into_iter()
+            .filter_map(|stage| {
+                let hist = &self.stages[stage.slot()];
+                let count = hist.count.load(Ordering::Relaxed);
+                if count == 0 {
+                    return None;
+                }
+                Some(StageSnapshot {
+                    stage,
+                    count,
+                    sum_us: hist.sum_us.load(Ordering::Relaxed),
+                    buckets: hist
+                        .buckets
+                        .iter()
+                        .map(|b| b.load(Ordering::Relaxed))
+                        .collect(),
+                })
+            })
+            .collect()
+    }
+}
+
+/// Upper edge of a stage-histogram bucket — re-exported next to
+/// [`StageSnapshot`] so exposition code does not need the metrics module.
+pub fn stage_bucket_upper(index: usize) -> u64 {
+    bucket_upper(index)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn tracer(rate: f64, slow_us: u64, buffer: usize) -> Tracer {
+        Tracer::new(TraceConfig {
+            rate,
+            slow_us,
+            buffer,
+        })
+    }
+
+    fn finish_one(t: &Tracer, request_id: u64) -> bool {
+        match t.begin(request_id) {
+            Some(mut b) => {
+                let now = Instant::now();
+                b.span(Stage::Parse, now, now);
+                b.annotate("digits_linear", "dither", 4);
+                t.finish(b);
+                true
+            }
+            None => false,
+        }
+    }
+
+    #[test]
+    fn rate_zero_without_slow_threshold_traces_nothing() {
+        let t = tracer(0.0, 0, 64);
+        assert!(!t.enabled());
+        for i in 0..100 {
+            assert!(!finish_one(&t, i));
+        }
+        assert_eq!((t.begun(), t.committed(), t.resident()), (0, 0, 0));
+    }
+
+    #[test]
+    fn rate_one_traces_everything_and_ring_is_bounded() {
+        let t = tracer(1.0, 0, 8);
+        for i in 0..20 {
+            assert!(finish_one(&t, i));
+        }
+        assert_eq!(t.committed(), 20);
+        assert_eq!(t.resident(), 8, "ring bounded at --trace-buffer");
+        assert_eq!(t.evicted(), 12);
+        // Newest first, and the oldest 12 were evicted.
+        let traces = t.query(0, None, None, 0);
+        assert_eq!(traces.len(), 8);
+        assert_eq!(traces[0].request_id, 19);
+        assert_eq!(traces[7].request_id, 12);
+    }
+
+    #[test]
+    fn sampling_fraction_tracks_rate_deterministically() {
+        let t = tracer(0.25, 0, 100_000);
+        let n = 1000;
+        let hits = (0..n).filter(|&i| finish_one(&t, i)).count();
+        // The hash stream is fixed: the count is an exact constant near
+        // rate·n (locks TRACE_SALT).
+        assert!(
+            (200..=300).contains(&hits),
+            "sampled {hits}/{n} at rate 0.25"
+        );
+        let again = tracer(0.25, 0, 100_000);
+        let hits2 = (0..n).filter(|&i| finish_one(&again, i)).count();
+        assert_eq!(hits, hits2, "sampling must be deterministic");
+    }
+
+    #[test]
+    fn slow_promotion_commits_unsampled_outliers() {
+        let t = tracer(0.0, 1, 64); // every >=1µs request promotes
+        assert!(t.enabled());
+        let mut b = t.begin(5).expect("speculative builder at rate 0");
+        assert!(!b.sampled());
+        let start = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        b.span(Stage::Kernel, start, Instant::now());
+        t.finish(b);
+        assert_eq!(t.committed(), 1);
+        assert_eq!(t.slow_promoted(), 1);
+        let traces = t.query(0, None, None, 0);
+        assert!(traces[0].slow && !traces[0].sampled);
+        // A fast request at the same settings records histograms but does
+        // not commit.
+        let fast = tracer(0.0, u64::MAX, 64);
+        let mut b = fast.begin(6).expect("speculative builder");
+        let now = Instant::now();
+        b.span(Stage::Parse, now, now);
+        fast.finish(b);
+        assert_eq!(fast.committed(), 0);
+        assert_eq!(fast.stage_snapshots().len(), 1, "histograms still fed");
+    }
+
+    #[test]
+    fn query_filters_compose() {
+        let t = tracer(1.0, 0, 64);
+        for (i, (model, scheme)) in [
+            ("digits_linear", "dither"),
+            ("digits_linear", "sr2"),
+            ("fashion_mlp", "dither"),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let mut b = t.begin(i as u64).unwrap();
+            b.annotate(model, scheme, 4);
+            t.finish(b);
+        }
+        assert_eq!(t.query(0, Some("digits_linear"), None, 0).len(), 2);
+        assert_eq!(t.query(0, None, Some("dither"), 0).len(), 2);
+        assert_eq!(t.query(0, Some("fashion_mlp"), Some("dither"), 0).len(), 1);
+        assert_eq!(t.query(0, Some("no_such"), None, 0).len(), 0);
+        assert_eq!(t.query(u64::MAX, None, None, 0).len(), 0, "min_us filters");
+        assert_eq!(t.query(0, None, None, 1).len(), 1, "limit caps");
+    }
+
+    #[test]
+    fn adopt_honors_upstream_sampling_over_local_rate() {
+        let t = tracer(0.0, 0, 64);
+        // Locally disabled, but an upstream-sampled tag must still trace.
+        let b = t.adopt(9, 0xFEED, crate::trace::context::FLAG_SAMPLED);
+        let b = b.expect("upstream-sampled context adopted");
+        assert_eq!(b.id(), 0xFEED);
+        assert!(b.sampled());
+        t.finish(b);
+        assert_eq!(t.committed(), 1);
+        // An unsampled tag with no slow threshold is dropped.
+        assert!(t.adopt(9, 0xFEED, 0).is_none());
+        // buffer 0 disables adoption entirely.
+        let off = tracer(1.0, 1000, 0);
+        assert!(off.adopt(9, 1, 1).is_none());
+        assert!(!off.enabled());
+    }
+
+    #[test]
+    fn stage_histograms_accumulate_durations() {
+        let t = tracer(1.0, 0, 4);
+        let mut b = t.begin(1).unwrap();
+        let start = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        b.span(Stage::Queue, start, Instant::now());
+        b.span(Stage::Kernel, start, Instant::now());
+        t.finish(b);
+        let snaps = t.stage_snapshots();
+        assert_eq!(snaps.len(), 2);
+        for snap in snaps {
+            assert_eq!(snap.count, 1);
+            assert!(snap.sum_us >= 1000, "{:?} sum {}", snap.stage, snap.sum_us);
+            assert_eq!(snap.buckets.iter().sum::<u64>(), 1);
+        }
+        assert_eq!(stage_bucket_upper(0), 0);
+    }
+}

@@ -7,6 +7,14 @@
 //! re-routing with no lost accepted ids on live backends, a restarted
 //! backend is probed back up, and the proxy's `stats` merges backend
 //! counters and `fidelity` blocks (sums match the per-backend scrapes).
+//!
+//! Observability rides the same topology: the proxy samples every request
+//! (`trace_rate` 1.0) and propagates the context upstream, the backends
+//! run adoption-only (local rate 0 — every backend ring entry descends
+//! from a proxy trace id), and after the kill → mark-down → re-route
+//! cycle the stitched `{"cmd":"trace"}` reply must name the backend that
+//! actually served each timeline. Both tiers' `{"cmd":"metrics"}`
+//! expositions must be well-formed Prometheus text.
 
 use dither::cluster::{run_proxy, ProxyConfig};
 use dither::coordinator::{format_request, format_request_auto, serve, wait_ready, ServerConfig};
@@ -39,6 +47,13 @@ fn backend_cfg(addr: &str) -> ServerConfig {
         plan_cache_mb: 64,
         max_inflight: 64,
         reply_timeout_ms: 120_000,
+        // Adoption-only tracing: the backends never self-sample (rate 0,
+        // slow 0) but keep a ring, so every entry they hold was adopted
+        // from a proxy-propagated `"trace"` tag — each backend ring id is
+        // guaranteed to stitch back to a proxy timeline.
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 512,
     }
 }
 
@@ -121,10 +136,10 @@ fn drive_cases(
             .is_some_and(|f| f.iter().any(|v| v.as_str() == Some("pipelined"))),
         "{line}"
     );
-    // Protocol v2 holds at both tiers: the backend advertises its
-    // registry, the proxy the intersection across healthy backends —
-    // same-build backends, so the full zoo either way.
-    assert_eq!(hello.get("proto").and_then(Json::as_f64), Some(2.0), "{line}");
+    // Protocol v3 (trace propagation) holds at both tiers: the backend
+    // advertises its registry, the proxy the intersection across healthy
+    // backends — same-build backends, so the full zoo either way.
+    assert_eq!(hello.get("proto").and_then(Json::as_f64), Some(3.0), "{line}");
     let advertised = hello.get("schemes").and_then(Json::as_arr).expect("schemes list");
     for mode in SchemeId::ALL {
         assert!(
@@ -234,6 +249,33 @@ fn fetch_stats(addr: &str) -> Json {
     Json::parse(line.trim()).expect("stats json")
 }
 
+/// One-shot request/reply over a fresh connection: send `cmd`, return the
+/// raw reply line (the `trace` / `metrics` verbs both answer in one line).
+fn query_line(addr: &str, cmd: &str) -> String {
+    let stream = TcpStream::connect(addr).expect("connect for query");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{cmd}").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line
+}
+
+/// The stage names of a JSON timeline's spans, in recorded order.
+fn stage_names(timeline: &Json) -> Vec<String> {
+    timeline
+        .get("spans")
+        .and_then(Json::as_arr)
+        .map(|spans| {
+            spans
+                .iter()
+                .filter_map(|s| s.get("stage").and_then(Json::as_str).map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
 fn shutdown_server(addr: &str) {
     let stream = TcpStream::connect(addr).expect("connect for shutdown");
     let mut reader = BufReader::new(stream.try_clone().unwrap());
@@ -293,6 +335,11 @@ fn proxy_over_two_backends_routes_survives_kill_and_merges_stats() {
         probe_interval_ms: 100,
         probe_timeout_ms: 1_500,
         max_backoff_ms: 400,
+        // Sample everything: each proxied request must yield a stitched
+        // cross-process timeline.
+        trace_rate: 1.0,
+        trace_slow_us: 0,
+        trace_buffer: 2_048,
     };
     let proxy = std::thread::spawn(move || run_proxy(&proxy_cfg));
     // The proxy answers `pong` only once a backend is probed healthy.
@@ -424,6 +471,60 @@ fn proxy_over_two_backends_routes_survives_kill_and_merges_stats() {
     let rerouted = drive_cases(PROXY, &cases, &digits, &fashion, None);
     check_wave(&rerouted, &cases, Some(&reference));
 
+    // Stitched tracing across the kill: wave 4 ran survivor-only at full
+    // proxy sampling, so the newest proxy timelines carry route/forward
+    // spans and stitch to an upstream timeline recorded by the backend
+    // that actually served them — backend 1, the only healthy one. The
+    // backend runs adoption-only (local rate 0), so its ring must hold
+    // exactly those propagated trace ids.
+    {
+        let line = query_line(PROXY, "{\"cmd\":\"trace\",\"limit\":16}");
+        let reply = Json::parse(line.trim()).expect("stitched trace json");
+        let traces = reply.get("traces").and_then(Json::as_arr).expect("traces array");
+        assert!(!traces.is_empty(), "{line}");
+        let direct = query_line(BACKEND1, "{\"cmd\":\"trace\"}");
+        let direct = Json::parse(direct.trim()).expect("backend trace json");
+        let backend_ids: Vec<&str> = direct
+            .get("traces")
+            .and_then(Json::as_arr)
+            .expect("backend traces array")
+            .iter()
+            .filter_map(|t| t.get("trace_id").and_then(Json::as_str))
+            .collect();
+        let mut stitched = 0usize;
+        for t in traces {
+            assert!(stage_names(t).iter().any(|s| s == "route"), "{t}");
+            let Some(upstream) = t.get("upstream").and_then(Json::as_arr) else {
+                // A retryable bounce under the inflight cap commits a
+                // proxy-side-only timeline — legitimate, just not stitched.
+                continue;
+            };
+            let id = t.get("trace_id").and_then(Json::as_str).expect("trace id");
+            assert!(
+                stage_names(t).iter().any(|s| s == "upstream_wait"),
+                "a stitched timeline must carry the proxy's upstream wait: {t}"
+            );
+            for up in upstream {
+                assert_eq!(
+                    up.get("backend").and_then(Json::as_str),
+                    Some(BACKEND1),
+                    "survivor-only wave must be served by backend 1: {up}"
+                );
+                assert_eq!(up.get("trace_id").and_then(Json::as_str), Some(id), "{up}");
+                let up_stages = stage_names(up);
+                for want in ["parse", "admit", "queue", "assemble", "kernel", "serialize"] {
+                    assert!(up_stages.iter().any(|s| s == want), "missing {want} span: {up}");
+                }
+                assert!(
+                    backend_ids.contains(&id),
+                    "backend ring must hold adopted id {id}"
+                );
+                stitched += 1;
+            }
+        }
+        assert!(stitched > 0, "no stitched cross-process timeline: {line}");
+    }
+
     // Recovery: restart backend 2 on the same address; the health probe
     // marks it back up and its keys return home.
     let b2b = std::thread::spawn(|| serve(&backend_cfg(BACKEND2)));
@@ -432,6 +533,45 @@ fn proxy_over_two_backends_routes_survives_kill_and_merges_stats() {
     assert_eq!(up.get("shards").and_then(Json::as_f64), Some(2.0), "{up}");
     let recovered = drive_cases(PROXY, &cases, &digits, &fashion, None);
     check_wave(&recovered, &cases, Some(&reference));
+
+    // Tracing survives the recovery: the restarted backend (fresh ring)
+    // adopts propagated contexts again, so the newest stitched timelines
+    // name only live backends — and at least one stitches.
+    {
+        let line = query_line(PROXY, "{\"cmd\":\"trace\",\"limit\":16}");
+        let reply = Json::parse(line.trim()).expect("stitched trace json");
+        let traces = reply.get("traces").and_then(Json::as_arr).expect("traces array");
+        let mut stitched = 0usize;
+        for t in traces {
+            for up in t.get("upstream").and_then(Json::as_arr).into_iter().flatten() {
+                let addr = up.get("backend").and_then(Json::as_str);
+                assert!(
+                    addr == Some(BACKEND1) || addr == Some(BACKEND2),
+                    "stitched backend must be a live member: {up}"
+                );
+                stitched += 1;
+            }
+        }
+        assert!(stitched > 0, "post-recovery wave must stitch: {line}");
+    }
+
+    // Both tiers serve a well-formed Prometheus exposition over the same
+    // socket protocol; the proxy's carries its cluster-only families.
+    {
+        let line = query_line(PROXY, "{\"cmd\":\"metrics\"}");
+        let text =
+            dither::coordinator::parse_metrics_reply(line.trim()).expect("proxy metrics reply");
+        dither::trace::check_exposition(&text).expect("well-formed proxy exposition");
+        assert!(text.contains("dither_proxy_backends"), "{text}");
+        assert!(text.contains("dither_traces_committed_total"), "{text}");
+        assert!(text.contains("dither_requests_total"), "{text}");
+        let line = query_line(BACKEND1, "{\"cmd\":\"metrics\"}");
+        let text =
+            dither::coordinator::parse_metrics_reply(line.trim()).expect("backend metrics reply");
+        dither::trace::check_exposition(&text).expect("well-formed backend exposition");
+        assert!(text.contains("dither_requests_total"), "{text}");
+        assert!(text.contains("dither_stage_duration_us_bucket"), "{text}");
+    }
 
     // Shutdown: proxy first (tears down its backend pools), then the
     // backends directly — proxy shutdown must not touch them.

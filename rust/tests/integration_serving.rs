@@ -103,6 +103,11 @@ fn tcp_server_end_to_end_sharded() {
         plan_cache_mb: 64,
         max_inflight: 64,
         reply_timeout_ms: 120_000,
+        // Trace everything: the verb checks below assert the full wave is
+        // queryable from the ring.
+        trace_rate: 1.0,
+        trace_slow_us: 0,
+        trace_buffer: 128,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 
@@ -261,6 +266,61 @@ fn tcp_server_end_to_end_sharded() {
     }
     assert!(shadow_samples > 0.0, "{line}");
 
+    // Windowed per-(model, k) cells ride in stats.recent alongside the
+    // per-scheme cells (this connection served digits_linear at k=4).
+    let recent = stats.get("recent").expect("recent section");
+    assert!(recent.get("dither").is_some(), "{line}");
+    let model_cell = recent.get("digits_linear/k=4").expect("per-(model,k) window cell");
+    assert!(
+        model_cell.get("requests").unwrap().as_f64().unwrap() >= 1.0,
+        "{line}"
+    );
+
+    // Trace ring: at rate 1.0 every request above is queryable, each
+    // with a full span timeline naming its serving stage breakdown.
+    writeln!(writer, "{{\"cmd\":\"trace\",\"model\":\"digits_linear\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let traces = dither::coordinator::parse_traces(&line).expect("trace reply");
+    assert!(
+        traces.len() >= 5,
+        "rate-1.0 sampling must retain the request wave: {line}"
+    );
+    for t in &traces {
+        assert_eq!(t.model, "digits_linear");
+        assert!(t.sampled);
+        assert!(t.shard.is_some(), "server-side traces name their shard");
+        let stages: Vec<&str> = t.spans.iter().map(|s| s.stage.name()).collect();
+        for stage in ["parse", "admit", "queue", "assemble", "kernel", "serialize", "flush"] {
+            assert!(stages.contains(&stage), "missing {stage} span: {stages:?}");
+        }
+        let kernel_span = t.spans.iter().find(|s| s.stage.name() == "kernel").unwrap();
+        let note = kernel_span.note.as_deref().expect("kernel span notes kernel/scheme");
+        assert!(note.ends_with(&format!("/{}", t.scheme)), "{note} vs {}", t.scheme);
+    }
+    // Filters compose: an impossible min_us returns nothing.
+    writeln!(writer, "{{\"cmd\":\"trace\",\"min_us\":999999999}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"count\":0"), "{line}");
+
+    // Metrics verb: a well-formed Prometheus exposition carrying the
+    // same counters stats reports, plus tracer families.
+    writeln!(writer, "{{\"cmd\":\"metrics\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let exposition = dither::coordinator::parse_metrics_reply(&line).expect("metrics reply");
+    dither::trace::check_exposition(&exposition).expect("well-formed exposition");
+    for family in [
+        "dither_requests_total",
+        "dither_latency_us_bucket",
+        "dither_recent_latency_us_bucket",
+        "dither_traces_committed_total",
+        "dither_stage_duration_us_bucket",
+    ] {
+        assert!(exposition.contains(family), "missing {family}:\n{exposition}");
+    }
+
     // Graceful shutdown: ack, then the server joins cleanly.
     writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
     line.clear();
@@ -287,6 +347,9 @@ fn tcp_requests_pipeline_across_connections() {
         plan_cache_mb: 64,
         max_inflight: 64,
         reply_timeout_ms: 120_000,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     assert!(
@@ -364,6 +427,9 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
         plan_cache_mb: 64,
         max_inflight: 32,
         reply_timeout_ms: 120_000,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     let ds = Dataset::synthesize(Task::Digits, 8, 0xF1F0);
@@ -411,8 +477,9 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
         "{line2}"
     );
     assert_eq!(hello.get("max_inflight").unwrap().as_f64(), Some(32.0), "{line2}");
-    // Protocol v2: the handshake advertises the registered scheme zoo.
-    assert_eq!(hello.get("proto").unwrap().as_f64(), Some(2.0), "{line2}");
+    // Protocol v3: trace-context propagation (the "trace" request field
+    // and the trace/metrics verbs) on top of the v2 scheme zoo.
+    assert_eq!(hello.get("proto").unwrap().as_f64(), Some(3.0), "{line2}");
     // The handshake names the process-global kernel selected above.
     assert_eq!(hello.get("kernel").unwrap().as_str(), Some("wide"), "{line2}");
     let advertised = hello.get("schemes").unwrap().as_arr().unwrap();
@@ -493,6 +560,9 @@ fn pipelined_shutdown_mid_stream_drains_accepted_ids() {
         plan_cache_mb: 64,
         max_inflight: 64,
         reply_timeout_ms: 120_000,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     let ds = Dataset::synthesize(Task::Digits, 8, 0xD0D0);
@@ -566,6 +636,9 @@ fn exceeding_inflight_window_is_overloaded_with_offending_id() {
         plan_cache_mb: 0,
         max_inflight: 2,
         reply_timeout_ms: 120_000,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     let ds = Dataset::synthesize(Task::Digits, 4, 0xBEEF);

@@ -651,6 +651,142 @@ fn prop_protocol_any_response_permutation_reassembles_by_id() {
     );
 }
 
+#[test]
+fn prop_trace_wire_tag_roundtrip_and_malformed_downgrade() {
+    // The proto-3 `"trace":"<id:flags>"` request field: encode → decode is
+    // lossless for every id/flag combination, and anything malformed
+    // decodes to None (downgrade to untraced, never reject or panic).
+    use dither::trace::{decode_wire, encode_wire, FLAG_SAMPLED};
+    struct TagGen;
+    impl Gen for TagGen {
+        type Item = (u64, u8);
+        fn gen(&self, rng: &mut Xoshiro256pp) -> (u64, u8) {
+            let flags = if rng.bernoulli(0.5) { FLAG_SAMPLED } else { 0 };
+            (rng.below(u64::MAX), flags)
+        }
+    }
+    check(&TagGen, |&(id, flags)| {
+        decode_wire(&encode_wire(id, flags)) == Some((id, flags))
+    });
+    for bad in [
+        "",
+        ":",
+        "0123:1",                // id not 16 hex digits
+        "0123456789abcdeg:1",    // non-hex digit
+        "0123456789abcdef",      // no flags separator
+        "0123456789abcdef:",     // empty flags
+        "0123456789abcdef:256",  // flags overflow u8
+        "0123456789abcdef:1:1",  // trailing junk in flags
+        " 0123456789abcdef:1",   // leading space
+    ] {
+        assert_eq!(decode_wire(bad), None, "{bad:?} must downgrade");
+    }
+}
+
+#[test]
+fn prop_trace_reply_roundtrip_through_format_and_parse() {
+    // A committed Trace survives to_json → from_json exactly, and a full
+    // `{"cmd":"trace"}` reply line (format_traces) parses back to the same
+    // records (parse_traces) — the contract the proxy's cross-process
+    // stitcher rests on.
+    use dither::coordinator::{format_traces, parse_traces};
+    use dither::trace::{Span, Stage, Trace};
+    struct TraceGen;
+    impl Gen for TraceGen {
+        type Item = Vec<Trace>;
+        fn gen(&self, rng: &mut Xoshiro256pp) -> Vec<Trace> {
+            (0..rng.below(5))
+                .map(|_| {
+                    let spans = (0..rng.below(8))
+                        .map(|i| Span {
+                            stage: Stage::ALL[rng.below(Stage::COUNT as u64) as usize],
+                            start_us: rng.below(1 << 40),
+                            dur_us: rng.below(1 << 30),
+                            note: rng.bernoulli(0.3).then(|| format!("wide/dither-{i}")),
+                        })
+                        .collect();
+                    let model = ["digits_linear", "fashion_mlp", ""][rng.below(3) as usize];
+                    let scheme = SchemeId::ALL[rng.below(SchemeId::COUNT as u64) as usize];
+                    Trace {
+                        trace_id: rng.below(u64::MAX),
+                        request_id: rng.below(1 << 48),
+                        model: model.to_string(),
+                        scheme: scheme.wire_name().to_string(),
+                        k: 1 + rng.below(16) as u32,
+                        shard: rng.bernoulli(0.5).then(|| rng.below(16) as usize),
+                        total_us: rng.below(1 << 40),
+                        sampled: rng.bernoulli(0.8),
+                        slow: rng.bernoulli(0.2),
+                        spans,
+                    }
+                })
+                .collect()
+        }
+    }
+    check(&TraceGen, |traces| {
+        traces
+            .iter()
+            .all(|t| Trace::from_json(&t.to_json()).as_ref() == Some(t))
+            && parse_traces(&format_traces(traces)) == Ok(traces.clone())
+    });
+}
+
+#[test]
+fn prop_trace_query_roundtrip_through_parse_message() {
+    // format_trace_query → parse_message preserves every filter — and the
+    // zero query (all filters elided off the wire) parses to the default.
+    use dither::coordinator::{format_trace_query, parse_message, Message, TraceQuery};
+    struct QueryGen;
+    impl Gen for QueryGen {
+        type Item = TraceQuery;
+        fn gen(&self, rng: &mut Xoshiro256pp) -> TraceQuery {
+            TraceQuery {
+                min_us: rng.below(1 << 32),
+                model: rng.bernoulli(0.5).then(|| "digits_linear".to_string()),
+                scheme: rng.bernoulli(0.5).then(|| {
+                    SchemeId::ALL[rng.below(SchemeId::COUNT as u64) as usize]
+                        .wire_name()
+                        .to_string()
+                }),
+                limit: rng.below(1 << 16) as usize,
+            }
+        }
+    }
+    check(&QueryGen, |q| match parse_message(&format_trace_query(q)) {
+        Ok(Message::Trace(parsed)) => parsed == *q,
+        _ => false,
+    });
+}
+
+#[test]
+fn prop_metrics_reply_roundtrip_escapes_arbitrary_expositions() {
+    // The `{"cmd":"metrics"}` reply carries a multi-line Prometheus text
+    // body through the newline-delimited protocol via JSON string
+    // escaping: any text — newlines, quotes, backslashes — survives the
+    // wrap/unwrap exactly and never spills onto a second wire line.
+    use dither::coordinator::{format_metrics_reply, parse_metrics_reply};
+    struct TextGen;
+    impl Gen for TextGen {
+        type Item = String;
+        fn gen(&self, rng: &mut Xoshiro256pp) -> String {
+            let len = rng.below(400) as usize;
+            (0..len)
+                .map(|_| match rng.below(6) {
+                    0 => '\n',
+                    1 => '"',
+                    2 => '\\',
+                    3 => '{',
+                    _ => (rng.below(95) as u8 + 32) as char,
+                })
+                .collect()
+        }
+    }
+    check(&TextGen, |text| {
+        let line = format_metrics_reply(text);
+        !line.contains('\n') && parse_metrics_reply(&line) == Ok(text.clone())
+    });
+}
+
 /// Generator for cluster hash-ring shapes: (member count, virtual nodes
 /// per member).
 fn ring_shape() -> Pair<RangeUsize, RangeUsize> {

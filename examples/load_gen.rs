@@ -31,6 +31,13 @@
 //! Prometheus exposition is well-formed (plus, on a traced run, that at
 //! least one per-stage span histogram is populated).
 //!
+//! `--expect-auto-slo` closes the measured-cost SLO loop end to end:
+//! after warming one `(model, k)` recent-latency window with concrete
+//! traffic, latency-only auto requests must resolve, and dual-budget
+//! (`max_mse` + `max_latency_us`) autos must come back tagged
+//! `"measured": true` — proof the server priced them against live
+//! latency windows rather than the static cost walk.
+//!
 //! `--proxy` drives a cluster front tier instead of a single server: the
 //! per-connection shard-stability check is skipped (the proxy routes each
 //! request by its configuration key, so one connection's replies come
@@ -48,7 +55,7 @@
 //! same cached zoo weights; with matching `--train-n`/`--seed` it retrains
 //! identical weights even without the cache).
 
-use dither::coordinator::{format_request, wait_ready, Engine};
+use dither::coordinator::{format_request, format_request_auto_slo, wait_ready, Engine};
 use dither::data::{Dataset, Task};
 use dither::rounding::SchemeId;
 use dither::util::cli::Args;
@@ -115,6 +122,7 @@ fn main() -> Result<()> {
     let seed = args.parse_or("seed", 7u64);
     let expect_fidelity = args.flag("expect-fidelity");
     let expect_traces = args.flag("expect-traces");
+    let expect_auto_slo = args.flag("expect-auto-slo");
     let scrape_metrics = args.flag("scrape-metrics");
     let pipelined = args.flag("pipelined");
     let proxy = args.flag("proxy");
@@ -325,6 +333,15 @@ fn main() -> Result<()> {
             have.len()
         );
     }
+    // --expect-auto-slo: the measured-cost SLO loop must be closed — see
+    // the module doc. Runs after the main sweep so the recent-latency
+    // windows are already rich with mixed traffic.
+    if expect_auto_slo {
+        if let Err(e) = run_auto_slo(&addr, &workload) {
+            eprintln!("FAIL: auto-SLO loop: {e}");
+            std::process::exit(1);
+        }
+    }
     // --scrape-metrics: the Prometheus surface must be well-formed text
     // exposition carrying the core serving families — and, on a traced
     // run, at least one populated per-stage span histogram.
@@ -350,6 +367,89 @@ fn main() -> Result<()> {
         );
     }
     println!("PASS: {done} mixed-scheme requests, zero incorrect replies");
+    Ok(())
+}
+
+/// One lockstep request/reply exchange, parsed.
+fn roundtrip(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    req: &str,
+) -> Result<Json> {
+    writeln!(writer, "{req}")?;
+    writer.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(Json::parse(line.trim())?)
+}
+
+/// Drive the `--expect-auto-slo` contract on one lockstep connection:
+/// warm the `(digits_linear, k=2)` dither latency window past the
+/// controller's measured threshold, check a latency-only auto resolves,
+/// then require 8 consecutive dual-budget autos tagged `"measured": true`
+/// once the server's auto-view refresher has folded the warm windows.
+fn run_auto_slo(addr: &str, workload: &Workload) -> Result<()> {
+    const WARMUP: u64 = 64;
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for i in 0..WARMUP {
+        let pixels = workload.digits.images.row(i as usize % workload.digits.len());
+        let req = format_request(900_000 + i, "digits_linear", 2, SchemeId::Dither, pixels);
+        let resp = roundtrip(&mut writer, &mut reader, &req)?;
+        if resp.get("error").is_some() {
+            return Err(format!("auto-slo warmup request failed: {resp}").into());
+        }
+    }
+    let pixels = workload.digits.images.row(0);
+    // A latency-only budget is a complete auto request on its own.
+    let lat_only =
+        format_request_auto_slo(900_100, "digits_linear", None, Some(5_000_000), pixels);
+    let resp = roundtrip(&mut writer, &mut reader, &lat_only)?;
+    if resp.get("error").is_some() || resp.get("auto").and_then(Json::as_bool) != Some(true) {
+        return Err(format!("latency-only auto did not resolve: {resp}").into());
+    }
+    // Dual-budget autos: always structurally valid, and measured once the
+    // refresher (50 ms cadence) has folded the warm windows.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut id = 900_200u64;
+    let mut measured_streak = 0usize;
+    while measured_streak < 8 {
+        let req = format_request_auto_slo(
+            id,
+            "digits_linear",
+            Some(1e9),
+            Some(5_000_000),
+            pixels,
+        );
+        id += 1;
+        let resp = roundtrip(&mut writer, &mut reader, &req)?;
+        if resp.get("error").is_some() || resp.get("auto").and_then(Json::as_bool) != Some(true)
+        {
+            return Err(format!("dual-budget auto failed: {resp}").into());
+        }
+        let scheme_ok = resp
+            .get("scheme")
+            .and_then(Json::as_str)
+            .is_some_and(|s| s.parse::<SchemeId>().is_ok());
+        let k = resp.get("k").and_then(Json::as_f64).unwrap_or(0.0);
+        if !scheme_ok || !(1.0..=16.0).contains(&k) {
+            return Err(format!("auto reply lacks a servable (scheme, k): {resp}").into());
+        }
+        if resp.get("measured").and_then(Json::as_bool) == Some(true) {
+            measured_streak += 1;
+        } else {
+            measured_streak = 0;
+            if Instant::now() > deadline {
+                return Err("dual-budget autos never resolved from live measurements"
+                    .to_string()
+                    .into());
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    println!("auto-slo: latency-only autos resolve; 8 consecutive dual-budget autos measured");
     Ok(())
 }
 

@@ -11,7 +11,9 @@
 use dither::cluster::{run_proxy, ProxyConfig};
 use dither::coordinator::{format_request, ping, serve, wait_ready, Engine, ServerConfig};
 use dither::data::{Dataset, Task};
-use dither::fidelity::FidelityShard;
+use dither::fidelity::{
+    choose_slo, FidelityShard, LatencyView, SloBudget, LATENCY_MIN_SAMPLES,
+};
 use dither::rounding::SchemeId;
 use dither::train::{ModelSpec, Zoo};
 use dither::util::benchmark::{black_box, format_count, Bench};
@@ -201,8 +203,63 @@ fn main() {
             ("samples", Json::Num(est.samples as f64)),
         ]));
     }
+    let measured_table = sweep_shadowed.fidelity_table();
     drop(sweep_engine);
     drop(sweep_shadowed);
+
+    // ---- auto SLO resolution: the measured-cost controller -------------
+    // Price the same dual-budget auto request against two synthetic
+    // recent-latency phases over the *measured* fidelity table from the
+    // shadowed sweep above: when dither measures fast the controller
+    // serves it; when dither measures slow the identical budgets redirect
+    // elsewhere. The bench entries are the per-request resolution cost —
+    // the controller has to stay negligible next to one matmul.
+    let slo_budget = SloBudget {
+        max_mse: Some(1e9),
+        max_latency_us: Some(10_000),
+    };
+    let slo_slot = ModelSpec::DigitsLinear.index();
+    let mut auto_entries: Vec<Json> = Vec::new();
+    let mut phase_schemes: Vec<String> = Vec::new();
+    for (phase, dither_us, det_us) in
+        [("dither_fast", 120u64, 90_000u64), ("dither_slow", 90_000, 120)]
+    {
+        let mut view = LatencyView::empty();
+        view.set_scheme(SchemeId::Dither, LATENCY_MIN_SAMPLES, dither_us);
+        view.set_model_k(slo_slot, 4, LATENCY_MIN_SAMPLES, dither_us);
+        view.set_scheme(SchemeId::Deterministic, LATENCY_MIN_SAMPLES, det_us);
+        view.set_model_k(slo_slot, 1, LATENCY_MIN_SAMPLES, det_us);
+        let name = format!("e2e/auto_slo/resolve/{phase}/digits_linear");
+        bench.bench_items(&name, 1.0, || {
+            black_box(choose_slo(&measured_table, &view, slo_slot, slo_budget))
+        });
+        let choice = choose_slo(&measured_table, &view, slo_slot, slo_budget);
+        println!(
+            "auto_slo {phase}: ({}, k={}) measured={} predicted_latency_us={:?}",
+            choice.scheme,
+            choice.k,
+            choice.any_measured(),
+            choice.predicted_latency_us
+        );
+        phase_schemes.push(choice.scheme.to_string());
+        auto_entries.push(Json::obj(vec![
+            (
+                "name",
+                Json::Str(format!("e2e/auto_slo/choice/{phase}/digits_linear")),
+            ),
+            ("scheme", Json::Str(choice.scheme.to_string())),
+            ("k", Json::Num(f64::from(choice.k))),
+            ("measured", Json::Bool(choice.any_measured())),
+            (
+                "predicted_latency_us",
+                Json::Num(choice.predicted_latency_us.map_or(-1.0, |v| v as f64)),
+            ),
+        ]));
+    }
+    assert_ne!(
+        phase_schemes[0], phase_schemes[1],
+        "the latency phases must steer the auto choice away from the static walk"
+    );
 
     // ---- TCP serving throughput: 1 shard vs K shards -------------------
     // All lockstep (window 1): each connection waits for every reply.
@@ -429,6 +486,7 @@ fn main() {
         ("overhead_x", Json::Num(overhead)),
     ]));
     all.extend(zoo_entries);
+    all.extend(auto_entries);
     all.extend(serving);
     std::fs::create_dir_all("results").expect("results dir");
     std::fs::write("results/bench_e2e.json", Json::Arr(all).to_string())

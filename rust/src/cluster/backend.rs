@@ -578,6 +578,7 @@ mod tests {
             2,
             1,
             false,
+            false,
         );
         let rewritten = rewrite_reply_id(&reply, 12);
         assert_eq!(rewritten, reply.replace("\"id\":981", "\"id\":12"));

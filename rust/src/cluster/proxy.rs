@@ -606,6 +606,9 @@ fn merge_summaries(summaries: &[StatsSummary]) -> MergedStats {
         total.shards += s.shards;
         total.writer_flushes += s.writer_flushes;
         total.writer_flushed_lines += s.writer_flushed_lines;
+        total.recent_dropped += s.recent_dropped;
+        total.auto_slo_requests += s.auto_slo_requests;
+        total.auto_measured += s.auto_measured;
         per_shard.extend_from_slice(&s.per_shard_requests);
         for cell in &s.fidelity {
             let slot = (cell.model.clone(), cell.scheme.wire_name().to_string(), cell.k);
@@ -774,6 +777,9 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         ("recent", Json::Obj(recent_json)),
         ("writer_flushes", Json::Num(total.writer_flushes as f64)),
         ("writer_flushed_lines", Json::Num(total.writer_flushed_lines as f64)),
+        ("recent_dropped", Json::Num(total.recent_dropped as f64)),
+        ("auto_slo_requests", Json::Num(total.auto_slo_requests as f64)),
+        ("auto_measured", Json::Num(total.auto_measured as f64)),
         ("fidelity", Json::Arr(fidelity)),
         ("uptime_s", Json::Num(total.uptime_s)),
         ("throughput_rps", Json::Num(throughput)),
@@ -829,6 +835,24 @@ fn proxy_metrics_text(cluster: &Cluster) -> String {
         "counter",
         "Requests served inside batches (cluster-wide)",
         m.total.batched_requests as f64,
+    );
+    p.scalar(
+        "dither_recent_dropped_total",
+        "counter",
+        "Samples dropped from per-(model, k) recent windows (cluster-wide)",
+        m.total.recent_dropped as f64,
+    );
+    p.scalar(
+        "dither_auto_slo_requests_total",
+        "counter",
+        "Auto requests resolved under a latency budget (cluster-wide)",
+        m.total.auto_slo_requests as f64,
+    );
+    p.scalar(
+        "dither_auto_measured_total",
+        "counter",
+        "Auto requests resolved from live measurements (cluster-wide)",
+        m.total.auto_measured as f64,
     );
     p.scalar(
         "dither_uptime_seconds",

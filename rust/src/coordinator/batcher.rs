@@ -31,7 +31,11 @@
 //! **Auto batches**: `"scheme":"auto"` requests queue under their `k = 0`
 //! placeholder key and resolve to a concrete `(scheme, k)` once per
 //! drained batch ([`BatchKey::is_auto`]), so adjacent auto requests under
-//! a pipelined flood coalesce onto one engine call.
+//! a pipelined flood coalesce onto one engine call. Resolution prices
+//! candidates against the process's merged [`AutoView`] snapshot (the
+//! strictest member budget on each axis), echoes `"measured": true` when
+//! the choice came from live measurements, and answers a batch carrying
+//! no budget at all with a non-retryable error.
 //!
 //! **Tracing**: a traced request carries its [`TraceBuilder`] inside
 //! [`Pending`] (one `Option<Box<_>>`, so untraced queues pay a pointer).
@@ -46,6 +50,7 @@
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::protocol::{format_error, format_response, InferenceRequest};
+use crate::fidelity::{choose_slo, AutoChoice, AutoSnapshot, AutoView, SloBudget};
 use crate::rounding::SchemeId;
 use crate::trace::{BatchStageTimes, Stage, TraceBuilder, Tracer};
 use crate::train::ModelSpec;
@@ -560,23 +565,46 @@ impl Batcher {
     }
 }
 
-/// Resolve an auto-precision batch once, against this shard's live
-/// estimators: the strictest member budget picks the cheapest
-/// `(scheme, k)` the measurements (or the paper-shape prior) can justify,
-/// so every request in the drained batch shares one engine call. Batch
-/// granularity is the point — under a pipelined flood, adjacent auto
-/// requests no longer read estimator state mid-drain and split onto
+/// Resolve an auto-precision batch once, against the process's merged
+/// [`AutoSnapshot`]: the strictest member budget on each axis (minimum
+/// `max_mse`, minimum `max_latency_us`) picks the cheapest `(scheme, k)`
+/// the measurements (or the paper-shape prior and static cost order) can
+/// justify, so every request in the drained batch shares one engine call.
+/// Batch granularity is the point — under a pipelined flood, adjacent
+/// auto requests no longer read estimator state mid-drain and split onto
 /// different keys.
+///
+/// A batch in which no member carries a budget on either axis is a
+/// resolution error, not an unbounded walk: folding `max_mse` over zero
+/// members used to yield `INFINITY` and silently serve the cheapest
+/// candidate. The protocol layer rejects budget-less autos, so reaching
+/// that state here means a hand-built [`Pending`]; it is answered with a
+/// non-retryable error. An absent axis is only treated as unbounded when
+/// the other axis is present.
 fn resolve_auto(
     model: &str,
     batch: &[Pending],
-    metrics: &ShardMetrics,
-) -> Result<(SchemeId, u32), String> {
+    snapshot: &AutoSnapshot,
+) -> Result<AutoChoice, String> {
     let spec = ModelSpec::from_name(model)
         .ok_or_else(|| format!("unknown model family {model:?}"))?;
-    let budget = batch.iter().filter_map(|p| p.req.max_mse).fold(f64::INFINITY, f64::min);
-    let choice = crate::fidelity::choose(metrics.fidelity(), spec.index(), budget);
-    Ok((choice.scheme, choice.k))
+    let max_mse = batch
+        .iter()
+        .filter_map(|p| p.req.max_mse)
+        .fold(None, |acc: Option<f64>, b| Some(acc.map_or(b, |a| a.min(b))));
+    let max_latency_us = batch.iter().filter_map(|p| p.req.max_latency_us).min();
+    if max_mse.is_none() && max_latency_us.is_none() {
+        return Err(
+            "auto batch carries no 'max_mse' or 'max_latency_us' budget on any member"
+                .to_string(),
+        );
+    }
+    Ok(choose_slo(
+        &snapshot.estimates,
+        &snapshot.latency,
+        spec.index(),
+        SloBudget { max_mse, max_latency_us },
+    ))
 }
 
 /// One shard's batching worker loop: pull → resolve (auto batches) →
@@ -586,12 +614,16 @@ fn resolve_auto(
 /// registered just before the engine call so a wedged call answers
 /// `timeout` instead of holding its window slots forever. Traced requests
 /// (see [`Pending::trace`]) accumulate their queue/assemble/engine-stage
-/// spans here and finish into `tracer`.
+/// spans here and finish into `tracer`. Auto batches resolve against the
+/// latest [`AutoView`] snapshot (merged across shards by the pool's
+/// refresher), so every worker of one process converges on the same view
+/// of measured latency and fidelity.
 pub fn worker_loop(
     batcher: &Batcher,
     engine: &Engine,
     metrics: &ShardMetrics,
     tracer: &Tracer,
+    auto_view: &AutoView,
     shard: usize,
     watchdog: Option<&ReplyWatchdog>,
 ) {
@@ -602,16 +634,27 @@ pub fn worker_loop(
         // (the whole workload at --trace-rate 0) takes no timestamps.
         let traced = batch.iter().any(|p| p.trace.is_some());
         let drained = traced.then(Instant::now);
-        let (scheme, k) = if key.is_auto() {
-            match resolve_auto(&key.model, &batch, metrics) {
-                Ok(choice) => choice,
+        let (scheme, k, measured) = if key.is_auto() {
+            let snapshot = auto_view.load();
+            match resolve_auto(&key.model, &batch, &snapshot) {
+                Ok(choice) => {
+                    let slo_members =
+                        batch.iter().filter(|p| p.req.max_latency_us.is_some()).count() as u64;
+                    let measured = choice.any_measured();
+                    metrics.record_auto_resolution(
+                        slo_members,
+                        if measured { batch.len() as u64 } else { 0 },
+                    );
+                    (choice.scheme, choice.k, measured)
+                }
                 Err(e) => {
                     for mut p in batch {
                         metrics.record_error();
                         let id = p.req.id;
                         let trace = p.trace.take();
-                        // An unknown model family never resolves, no
-                        // matter how often the client retries.
+                        // An unknown model family (or a budget-less
+                        // batch) never resolves, no matter how often the
+                        // client retries.
                         p.respond_to.send(format_error(id, &e, false));
                         if let Some(mut b) = trace {
                             b.set_shard(shard);
@@ -622,7 +665,7 @@ pub fn worker_loop(
                 }
             }
         } else {
-            (key.scheme, key.k)
+            (key.scheme, key.k, false)
         };
         let resolved = traced.then(Instant::now);
         if let Some(watchdog) = watchdog {
@@ -691,6 +734,7 @@ pub fn worker_loop(
                         size,
                         shard,
                         p.req.auto,
+                        measured,
                     );
                     if let (Some(b), Some(at)) = (trace.as_deref_mut(), serialize_at) {
                         b.span_since(Stage::Serialize, at);
@@ -734,6 +778,8 @@ mod tests {
             auto: false,
             deprecated_mode: false,
             max_mse: None,
+            max_latency_us: None,
+            trace: None,
             pixels: vec![0.0; 784],
         }
     }
@@ -1072,24 +1118,61 @@ mod tests {
         let (key, batch) = b.next_batch().unwrap();
         assert!(key.is_auto());
         assert_eq!(batch.len(), 3, "adjacent auto requests form one batch");
-        // Per-batch resolution: strictest member budget, cold estimators
+        // Per-batch resolution: strictest member budget, cold snapshot
         // → the paper-shape prior picks the cheapest feasible k, and the
         // whole batch lands on that single (scheme, k).
         let metrics = crate::coordinator::metrics::Metrics::new(1);
-        let (scheme, k) = resolve_auto("digits_linear", &batch, &metrics.shard(0)).unwrap();
+        let snapshot = metrics.handle().auto_snapshot();
+        let choice = resolve_auto("digits_linear", &batch, &snapshot).unwrap();
         let strictest = crate::fidelity::choose(
             metrics.shard(0).fidelity(),
             crate::train::ModelSpec::DigitsLinear.index(),
             0.5,
         );
-        assert_eq!((scheme, k), (strictest.scheme, strictest.k));
-        assert!(k >= 1, "resolution must produce a servable bit width");
+        assert_eq!((choice.scheme, choice.k), (strictest.scheme, strictest.k));
+        assert!(choice.k >= 1, "resolution must produce a servable bit width");
+        assert!(!choice.any_measured(), "cold snapshot cannot claim a measured choice");
         // The concrete k=4 request stayed behind under its own key.
         let (key2, batch2) = b.next_batch().unwrap();
         assert!(!key2.is_auto());
         assert_eq!(batch2[0].req.id, 9);
         // Unknown models fail resolution with a per-batch error.
-        assert!(resolve_auto("nope", &batch, &metrics.shard(0)).is_err());
+        assert!(resolve_auto("nope", &batch, &snapshot).is_err());
+    }
+
+    #[test]
+    fn budget_less_auto_batches_error_and_latency_only_batches_resolve() {
+        // A batch where no member carries a budget on either axis is
+        // unreachable through the protocol (parse rejects it), so a
+        // hand-built one must surface as an explicit resolution error —
+        // not fold to an INFINITY mse budget and silently serve the
+        // cheapest candidate.
+        let snapshot = AutoSnapshot::default();
+        let make = |id: u64, max_latency_us: Option<u64>| {
+            let (tx, rx) = sync_channel(8);
+            let mut r = req("digits_linear", 0, SchemeId::Dither, id);
+            r.auto = true;
+            r.max_latency_us = max_latency_us;
+            (
+                Pending {
+                    req: r,
+                    respond_to: ReplyTo::new(id, tx),
+                    enqueued: Instant::now(),
+                    trace: None,
+                },
+                rx,
+            )
+        };
+        let (p, _rx) = make(1, None);
+        let err = resolve_auto("digits_linear", std::slice::from_ref(&p), &snapshot).unwrap_err();
+        assert!(err.contains("budget"), "error must name the missing budget: {err}");
+        // A latency-only member makes the batch resolvable: the mse axis
+        // is then legitimately unbounded, and a cold view reduces to the
+        // static cost walk's cheapest candidate.
+        let (p, _rx) = make(2, Some(5_000));
+        let choice = resolve_auto("digits_linear", std::slice::from_ref(&p), &snapshot).unwrap();
+        assert_eq!((choice.scheme, choice.k), (SchemeId::Deterministic, 1));
+        assert!(!choice.any_measured());
     }
 
     #[test]

@@ -232,6 +232,14 @@ impl Engine {
         &self.fidelity
     }
 
+    /// A merged, point-in-time copy of this engine's fidelity estimators,
+    /// in the table form the SLO controller resolves against. Offline
+    /// consumers (benches, replay tooling) snapshot once and price many
+    /// budgets deterministically against it.
+    pub fn fidelity_table(&self) -> crate::fidelity::EstimateTable {
+        crate::fidelity::EstimateTable::from_shard(&self.fidelity)
+    }
+
     /// Configured shadow-sampling fraction.
     pub fn shadow_rate(&self) -> f64 {
         self.shadow.rate()

@@ -27,7 +27,9 @@
 //! shard worker thread, and `stats` merges every shard's
 //! `(model, scheme, k)` Welford cells into the `fidelity` block.
 
-use crate::fidelity::{FidelityEstimate, FidelityShard, MAX_K, MODEL_SLOTS};
+use crate::fidelity::{
+    AutoSnapshot, EstimateTable, FidelityEstimate, FidelityShard, LatencyView, MAX_K, MODEL_SLOTS,
+};
 use crate::rounding::SchemeId;
 use crate::trace::{PromText, Tracer};
 use crate::train::ModelSpec;
@@ -51,11 +53,12 @@ const WINDOW_SLOTS: usize = 6;
 
 /// One rotating slot: a histogram stamped with the epoch it belongs to.
 /// Writers of a new epoch zero the slot *before* publishing the epoch
-/// stamp, so a concurrent scrape sees either the (excluded) stale epoch
-/// or an already-reset histogram — aged-out data can never be read back
-/// as current. Writers racing the reset can lose a handful of counts at
-/// a window boundary, which is acceptable for approximate recent-latency
-/// metrics (no lock on the hot path).
+/// stamp with `Release` (readers `Acquire` it), so a concurrent scrape
+/// sees either the (excluded) stale epoch or an already-reset histogram —
+/// aged-out data can never be read back as current. Writers racing the
+/// reset can lose a handful of counts at a window boundary, which is
+/// acceptable for approximate recent-latency metrics (no lock on the hot
+/// path).
 struct WindowSlot {
     /// Epoch stamp (0 = never written; live epochs start at 1).
     epoch: AtomicU64,
@@ -89,14 +92,16 @@ impl SchemeWindows {
     fn record(&self, epoch: u64, latency_us: u64) {
         let slot = &self.slots[(epoch % WINDOW_SLOTS as u64) as usize];
         if slot.epoch.load(Ordering::Relaxed) != epoch {
-            // Zero first, then publish the new epoch: until the store the
-            // slot still carries its stale (excluded) stamp, so a scrape
-            // never mixes aged-out buckets into the current window.
+            // Zero first, then publish the new epoch (`Release`, paired
+            // with the `Acquire` load in `fold_recent`): until the store
+            // the slot still carries its stale (excluded) stamp, and a
+            // scrape that observes the new stamp is guaranteed to see the
+            // zeroed histogram — aged-out buckets never fold as current.
             for b in &slot.buckets {
                 b.store(0, Ordering::Relaxed);
             }
             slot.count.store(0, Ordering::Relaxed);
-            slot.epoch.store(epoch, Ordering::Relaxed);
+            slot.epoch.store(epoch, Ordering::Release);
         }
         slot.count.fetch_add(1, Ordering::Relaxed);
         slot.buckets[bucket_index(latency_us)].fetch_add(1, Ordering::Relaxed);
@@ -106,7 +111,7 @@ impl SchemeWindows {
     /// into `count` + `buckets`.
     fn fold_recent(&self, now_epoch: u64, count: &mut u64, buckets: &mut [u64; BUCKETS]) {
         for slot in &self.slots {
-            let e = slot.epoch.load(Ordering::Relaxed);
+            let e = slot.epoch.load(Ordering::Acquire);
             if e != 0 && now_epoch.saturating_sub(e) < WINDOW_SLOTS as u64 {
                 *count += slot.count.load(Ordering::Relaxed);
                 for (acc, b) in buckets.iter_mut().zip(&slot.buckets) {
@@ -134,6 +139,16 @@ pub struct ShardMetrics {
     batched_requests: AtomicU64,
     writer_flushes: AtomicU64,
     writer_flushed_lines: AtomicU64,
+    /// Requests whose `(model, k)` label fell outside the bounded recent
+    /// window space (model slot ≥ [`MODEL_SLOTS`] or `k` out of range) —
+    /// counted instead of silently dropped, because every dropped sample
+    /// starves measured-cost auto resolution of signal.
+    recent_dropped: AtomicU64,
+    /// Auto requests that carried a latency budget (`max_latency_us`).
+    auto_slo_requests: AtomicU64,
+    /// Auto requests resolved from live measurements (a warm MSE cell or
+    /// a warm latency window) rather than priors and static order alone.
+    auto_measured: AtomicU64,
     latency_sum_us: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     started: Instant,
@@ -170,6 +185,9 @@ impl ShardMetrics {
             batched_requests: AtomicU64::new(0),
             writer_flushes: AtomicU64::new(0),
             writer_flushed_lines: AtomicU64::new(0),
+            recent_dropped: AtomicU64::new(0),
+            auto_slo_requests: AtomicU64::new(0),
+            auto_measured: AtomicU64::new(0),
             latency_sum_us: AtomicU64::new(0),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             started: Instant::now(),
@@ -197,17 +215,35 @@ impl ShardMetrics {
     /// configuration that served it, and its end-to-end latency.
     /// `model_slot` is [`ModelSpec::index`]; an out-of-range slot or `k`
     /// still counts toward the totals and the scheme window, it just
-    /// skips the per-configuration cell.
+    /// skips the per-configuration cell — and bumps `recent_dropped`, so
+    /// a zoo larger than [`MODEL_SLOTS`] starving measured-cost auto
+    /// resolution is visible instead of silent.
+    ///
+    /// The wall-clock epoch also drives the fidelity estimator's
+    /// freshness rotation: the same cadence that ages latency windows out
+    /// ages shadow-error cells out.
     pub fn record_request(&self, mode: SchemeId, model_slot: usize, k: u32, latency_us: u64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
         self.latency_buckets[bucket_index(latency_us)].fetch_add(1, Ordering::Relaxed);
         let epoch = self.current_epoch();
+        self.fidelity.advance_epoch(epoch);
         self.windows[mode.slot()].record(epoch, latency_us);
         if model_slot < MODEL_SLOTS && (1..=MAX_K).contains(&k) {
             self.model_k_windows[model_slot * MAX_K as usize + (k as usize - 1)]
                 .record(epoch, latency_us);
+        } else {
+            self.recent_dropped.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Record one resolved auto batch: `slo_members` of its members
+    /// carried a latency budget, and `measured_members` counts the
+    /// members whose choice was backed by live measurements
+    /// ([`crate::fidelity::AutoChoice::any_measured`]).
+    pub fn record_auto_resolution(&self, slo_members: u64, measured_members: u64) {
+        self.auto_slo_requests.fetch_add(slo_members, Ordering::Relaxed);
+        self.auto_measured.fetch_add(measured_members, Ordering::Relaxed);
     }
 
     /// Record a protocol or execution error.
@@ -261,6 +297,9 @@ impl ShardMetrics {
         acc.batched_requests += self.batched_requests.load(Ordering::Relaxed);
         acc.writer_flushes += self.writer_flushes.load(Ordering::Relaxed);
         acc.writer_flushed_lines += self.writer_flushed_lines.load(Ordering::Relaxed);
+        acc.recent_dropped += self.recent_dropped.load(Ordering::Relaxed);
+        acc.auto_slo_requests += self.auto_slo_requests.load(Ordering::Relaxed);
+        acc.auto_measured += self.auto_measured.load(Ordering::Relaxed);
         acc.latency_sum_us += self.latency_sum_us.load(Ordering::Relaxed);
         for (slot, bucket) in acc.buckets.iter_mut().zip(&self.latency_buckets) {
             *slot += bucket.load(Ordering::Relaxed);
@@ -359,6 +398,9 @@ struct Merged {
     batched_requests: u64,
     writer_flushes: u64,
     writer_flushed_lines: u64,
+    recent_dropped: u64,
+    auto_slo_requests: u64,
+    auto_measured: u64,
     latency_sum_us: u64,
     buckets: [u64; BUCKETS],
     /// Recent-window (count, buckets) per scheme, in [`SCHEME_ORDER`].
@@ -381,6 +423,9 @@ impl Default for Merged {
             batched_requests: 0,
             writer_flushes: 0,
             writer_flushed_lines: 0,
+            recent_dropped: 0,
+            auto_slo_requests: 0,
+            auto_measured: 0,
             latency_sum_us: 0,
             buckets: [0; BUCKETS],
             recent: [(0, [0; BUCKETS]); SchemeId::COUNT],
@@ -422,6 +467,14 @@ impl Metrics {
     /// Number of shard slots.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// A cheap clone-able handle onto the shard slots, for readers that
+    /// outlive the borrow — the shard pool's auto-snapshot refresher.
+    pub fn handle(&self) -> MetricsHandle {
+        MetricsHandle {
+            shards: self.shards.clone(),
+        }
     }
 
     /// Total requests completed across all shards.
@@ -529,6 +582,9 @@ impl Metrics {
             ("batches", Json::Num(m.batches as f64)),
             ("writer_flushes", Json::Num(m.writer_flushes as f64)),
             ("writer_flushed_lines", Json::Num(m.writer_flushed_lines as f64)),
+            ("recent_dropped", Json::Num(m.recent_dropped as f64)),
+            ("auto_slo_requests", Json::Num(m.auto_slo_requests as f64)),
+            ("auto_measured", Json::Num(m.auto_measured as f64)),
             ("mean_batch", Json::Num(mean_batch)),
             ("mean_us", Json::Num(mean_us)),
             ("p50_us", Json::Num(m.percentile_us(0.50))),
@@ -608,6 +664,24 @@ impl Metrics {
             "counter",
             "Reply lines delivered across coalesced flushes",
             m.writer_flushed_lines as f64,
+        );
+        p.scalar(
+            "dither_recent_dropped_total",
+            "counter",
+            "Latency samples outside the bounded (model, k) window space",
+            m.recent_dropped as f64,
+        );
+        p.scalar(
+            "dither_auto_slo_requests_total",
+            "counter",
+            "Auto requests carrying a max_latency_us budget",
+            m.auto_slo_requests as f64,
+        );
+        p.scalar(
+            "dither_auto_measured_total",
+            "counter",
+            "Auto requests resolved from live measurements",
+            m.auto_measured as f64,
         );
         p.scalar(
             "dither_uptime_seconds",
@@ -758,6 +832,70 @@ impl Metrics {
     }
 }
 
+/// The `MetricsHandle → LatencyView` seam the SLO controller reads
+/// through: a clone-able handle over every shard's counters that can fold
+/// the live fidelity estimators and recent latency windows into one
+/// merged, immutable [`AutoSnapshot`]. The shard pool refreshes one
+/// snapshot per process on a short cadence and publishes it via
+/// [`crate::fidelity::AutoView`], so all shards resolve auto requests
+/// against the same replayable view.
+#[derive(Clone, Debug)]
+pub struct MetricsHandle {
+    shards: Vec<Arc<ShardMetrics>>,
+}
+
+impl MetricsHandle {
+    /// Fold every shard's state into one [`AutoSnapshot`]: merged
+    /// `(model, scheme, k)` Welford cells, plus a `(samples, p50)`
+    /// recent-latency surface per `(model, k)` window and per scheme
+    /// window (each shard folded at its own current epoch, so aged-out
+    /// slots are excluded exactly as in `stats`).
+    pub fn auto_snapshot(&self) -> AutoSnapshot {
+        let mut estimates = EstimateTable::empty();
+        for shard in &self.shards {
+            estimates.merge_shard(shard.fidelity());
+        }
+        let mut latency = LatencyView::empty();
+        for model in 0..MODEL_SLOTS {
+            for k in 1..=MAX_K {
+                let i = model * MAX_K as usize + (k as usize - 1);
+                let mut count = 0u64;
+                let mut buckets = [0u64; BUCKETS];
+                for shard in &self.shards {
+                    shard.model_k_windows[i].fold_recent(
+                        shard.current_epoch(),
+                        &mut count,
+                        &mut buckets,
+                    );
+                }
+                if count > 0 {
+                    latency.set_model_k(
+                        model,
+                        k,
+                        count,
+                        percentile_from_buckets(&buckets, 0.50) as u64,
+                    );
+                }
+            }
+        }
+        for mode in SCHEME_ORDER {
+            let mut count = 0u64;
+            let mut buckets = [0u64; BUCKETS];
+            for shard in &self.shards {
+                shard.windows[mode.slot()].fold_recent(
+                    shard.current_epoch(),
+                    &mut count,
+                    &mut buckets,
+                );
+            }
+            if count > 0 {
+                latency.set_scheme(mode, count, percentile_from_buckets(&buckets, 0.50) as u64);
+            }
+        }
+        AutoSnapshot { estimates, latency }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -879,6 +1017,106 @@ mod tests {
     }
 
     #[test]
+    fn windows_fold_monotonically_within_one_epoch() {
+        // Record-vs-fold determinism inside a single epoch: every record
+        // raises the folded count by exactly one, folds with no writes in
+        // between are identical, and a pseudo-random record sequence over
+        // several epochs never makes a fold go backwards while the epoch
+        // stands still.
+        let w = SchemeWindows::new();
+        let mut state = 0x2545_F491_4F6C_DD1Du64;
+        let mut rng = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for epoch in 1..=3 * WINDOW_SLOTS as u64 {
+            let mut prev = 0u64;
+            for _ in 0..(rng() % 32) {
+                w.record(epoch, rng() % 100_000);
+                let mut count = 0u64;
+                let mut buckets = [0u64; BUCKETS];
+                w.fold_recent(epoch, &mut count, &mut buckets);
+                assert!(count > prev, "fold went backwards within epoch {epoch}");
+                assert_eq!(buckets.iter().sum::<u64>(), count, "bucket mass == count");
+                let mut again = 0u64;
+                let mut b2 = [0u64; BUCKETS];
+                w.fold_recent(epoch, &mut again, &mut b2);
+                assert_eq!((again, b2), (count, buckets), "idle folds must agree");
+                prev = count;
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_epoch_rotation_never_folds_aged_buckets() {
+        // The zero-then-publish discipline under a live writer: a scrape
+        // folding at epoch E must never see a bucket that only an aged-out
+        // epoch (≤ E − WINDOW_SLOTS) could have written. Each epoch
+        // records a latency that lands in a bucket unique within a cycle
+        // longer than the whole window span, so any cross-epoch
+        // contamination names a forbidden bucket.
+        use std::sync::atomic::AtomicBool;
+        const EPOCH_CYCLE: u64 = 36; // 6 × WINDOW_SLOTS: no aliasing in range
+        fn epoch_latency(e: u64) -> u64 {
+            1u64 << (e % EPOCH_CYCLE) // bucket (e % EPOCH_CYCLE) + 1 < BUCKETS
+        }
+        let w = Arc::new(SchemeWindows::new());
+        let published = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let (w, published, stop) =
+                (Arc::clone(&w), Arc::clone(&published), Arc::clone(&stop));
+            std::thread::spawn(move || {
+                let mut epoch = 1u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // Publish before recording: at any instant every
+                    // recorded epoch is ≤ the published one.
+                    published.store(epoch, Ordering::Release);
+                    for _ in 0..64 {
+                        w.record(epoch, epoch_latency(epoch));
+                    }
+                    epoch += 1;
+                }
+            })
+        };
+        let mut checked = 0u32;
+        let mut spins = 0u64;
+        while checked < 1_000 && spins < 50_000_000 {
+            spins += 1;
+            let before = published.load(Ordering::Acquire);
+            if before == 0 {
+                continue;
+            }
+            let mut count = 0u64;
+            let mut buckets = [0u64; BUCKETS];
+            w.fold_recent(before, &mut count, &mut buckets);
+            let after = published.load(Ordering::Acquire);
+            // Epochs legally foldable here span (before − WINDOW_SLOTS,
+            // after]; when that range fits inside one encoding cycle, any
+            // other bucket holding mass is aged-out data read as current.
+            let oldest = (before + 1).saturating_sub(WINDOW_SLOTS as u64).max(1);
+            if after - oldest >= EPOCH_CYCLE {
+                continue; // writer lapped the cycle mid-fold; skip
+            }
+            let allowed: std::collections::BTreeSet<usize> =
+                (oldest..=after).map(|e| bucket_index(epoch_latency(e))).collect();
+            for (i, &mass) in buckets.iter().enumerate() {
+                assert!(
+                    mass == 0 || allowed.contains(&i),
+                    "bucket {i} holds {mass} aged-out samples (fold at epoch \
+                     {before}, writer at {after})"
+                );
+            }
+            checked += 1;
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+        assert!(checked > 0, "the fold race was never exercised");
+    }
+
+    #[test]
     fn fidelity_block_merges_shards() {
         let m = Metrics::new(2);
         for _ in 0..10 {
@@ -972,6 +1210,51 @@ mod tests {
         // Cells with no traffic are not emitted at all.
         assert!(recent.get("digits_linear/k=2").is_none());
         assert_eq!(json.get("requests").unwrap().as_f64(), Some(43.0));
+        // The two out-of-space labels are counted, not silently dropped.
+        assert_eq!(json.get("recent_dropped").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn auto_counters_merge_on_scrape() {
+        let m = Metrics::new(2);
+        m.shard(0).record_auto_resolution(3, 4);
+        m.shard(1).record_auto_resolution(2, 0);
+        let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
+        assert_eq!(json.get("auto_slo_requests").unwrap().as_f64(), Some(5.0));
+        assert_eq!(json.get("auto_measured").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn auto_snapshot_folds_estimators_and_latency_windows() {
+        use crate::fidelity::{LATENCY_MIN_SAMPLES, MIN_SAMPLES};
+        let m = Metrics::new(2);
+        // Warm the (model 0, k=2) window and the dither scheme window
+        // across both shards; leave deterministic one sample short.
+        for i in 0..LATENCY_MIN_SAMPLES {
+            m.shard((i % 2) as usize).record_request(SchemeId::Dither, 0, 2, 100);
+        }
+        for _ in 0..LATENCY_MIN_SAMPLES - 1 {
+            m.shard(0).record_request(SchemeId::Deterministic, 1, 1, 50_000);
+        }
+        // Warm one MSE cell split across shards.
+        for i in 0..MIN_SAMPLES {
+            let e = if i % 2 == 0 { 0.5 } else { -0.5 };
+            m.shard((i % 2) as usize).fidelity().record(0, SchemeId::Dither, 2, e);
+        }
+        let snap = m.handle().auto_snapshot();
+        let est = snap.estimates.get(0, SchemeId::Dither, 2);
+        assert_eq!(est.samples, MIN_SAMPLES);
+        assert!((est.mse() - 0.25).abs() < 1e-12, "mse={}", est.mse());
+        let mk = snap.latency.model_k_latency(0, 2).expect("warm (model, k) window");
+        assert!(mk >= 100 && mk < 1000, "p50={mk}");
+        assert!(snap.latency.scheme_latency(SchemeId::Dither).is_some());
+        assert_eq!(
+            snap.latency.scheme_latency(SchemeId::Deterministic),
+            None,
+            "one sample short of LATENCY_MIN_SAMPLES stays cold"
+        );
+        // The snapshot is plain data: folding again reproduces it.
+        assert_eq!(snap, m.handle().auto_snapshot());
     }
 
     #[test]
@@ -1002,6 +1285,8 @@ mod tests {
             m.shard((i % 2) as usize).record_request(SchemeId::Dither, 0, 4, i * 100);
         }
         m.shard(0).record_error();
+        m.shard(0).record_request(SchemeId::Dither, 99, 4, 5); // out-of-space drop
+        m.shard(0).record_auto_resolution(2, 3);
         m.shard(0).fidelity().record(0, SchemeId::Dither, 4, 0.5);
         let tracer = Tracer::new(TraceConfig {
             rate: 1.0,
@@ -1014,12 +1299,15 @@ mod tests {
         tracer.finish(b);
         let text = m.prometheus(&tracer);
         check_exposition(&text).expect("well-formed exposition");
-        assert!(text.contains("dither_requests_total 20"), "{text}");
+        assert!(text.contains("dither_requests_total 21"), "{text}");
         assert!(text.contains("dither_errors_total 1"), "{text}");
+        assert!(text.contains("dither_recent_dropped_total 1"), "{text}");
+        assert!(text.contains("dither_auto_slo_requests_total 2"), "{text}");
+        assert!(text.contains("dither_auto_measured_total 3"), "{text}");
         assert!(text.contains("# TYPE dither_latency_us histogram"), "{text}");
-        assert!(text.contains("dither_latency_us_bucket{le=\"+Inf\"} 20"), "{text}");
+        assert!(text.contains("dither_latency_us_bucket{le=\"+Inf\"} 21"), "{text}");
         assert!(
-            text.contains("dither_recent_latency_us_bucket{scheme=\"dither\",le=\"+Inf\"} 20"),
+            text.contains("dither_recent_latency_us_bucket{scheme=\"dither\",le=\"+Inf\"} 21"),
             "{text}"
         );
         assert!(
@@ -1032,7 +1320,7 @@ mod tests {
             ),
             "{text}"
         );
-        assert!(text.contains("dither_shard_requests_total{shard=\"0\"} 10"), "{text}");
+        assert!(text.contains("dither_shard_requests_total{shard=\"0\"} 11"), "{text}");
         assert!(
             text.contains("dither_stage_duration_us_bucket{stage=\"kernel\""),
             "span histograms must reach the exposition: {text}"

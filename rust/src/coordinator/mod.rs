@@ -24,12 +24,15 @@ pub mod shard;
 
 pub use batcher::{Batcher, Pending, ReplyDeadline, ReplyTo, ReplyWatchdog, SubmitError};
 pub use engine::{Engine, InferenceOutput};
-pub use metrics::{bucket_upper, percentile_from_buckets, Metrics, ShardMetrics, BUCKETS};
+pub use metrics::{
+    bucket_upper, percentile_from_buckets, Metrics, MetricsHandle, ShardMetrics, BUCKETS,
+};
 pub use protocol::{
     format_error, format_hello, format_metrics_reply, format_overloaded, format_request,
-    format_request_auto, format_response, format_trace_query, format_traces, line_id,
-    parse_message, parse_metrics_reply, parse_stats, parse_traces, response_id, FidelityCell,
-    InferenceRequest, Message, Reassembler, RecentCell, StatsSummary, TraceQuery,
+    format_request_auto, format_request_auto_slo, format_response, format_trace_query,
+    format_traces, line_id, parse_message, parse_metrics_reply, parse_stats, parse_traces,
+    response_id, FidelityCell, InferenceRequest, Message, Reassembler, RecentCell, StatsSummary,
+    TraceQuery,
 };
 pub use server::{ping, serve, wait_ready, ServerConfig, WRITER_CONTROL_SLACK};
 pub use shard::{ShardConfig, ShardPool};

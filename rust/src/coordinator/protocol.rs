@@ -10,13 +10,18 @@
 //! accepted as an alias for `"scheme"` so older clients keep working, but
 //! each use is counted in `stats.deprecated_fields` and the alias will be
 //! removed in a future protocol revision.
-//! **Auto precision**: `"scheme": "auto"` (or `"k": 0`) plus a positive
-//! `"max_mse"` error budget asks the server to pick the cheapest
-//! `(scheme, k)` whose measured MSE meets the budget (see
+//! **Auto precision**: `"scheme": "auto"` (or `"k": 0`) plus at least one
+//! budget — a positive `"max_mse"` error budget, a `"max_latency_us"`
+//! latency SLO, or both — asks the server to pick the cheapest
+//! `(scheme, k)` meeting every budget, walking candidates by *measured*
+//! recent latency once the windows are warm (see
 //! [`crate::fidelity::controller`]); any concrete `scheme`/`k` in an auto
-//! request is ignored — the controller chooses both.
+//! request is ignored — the controller chooses both. A budget-less auto
+//! request is a non-retryable error.
 //! Response (every reply echoes the concrete `scheme` and `k` served;
-//! auto-resolved requests additionally carry `"auto": true`):
+//! auto-resolved requests additionally carry `"auto": true`, plus
+//! `"measured": true` when the choice was backed by live measurements
+//! rather than priors and static cost order):
 //! ```json
 //! {"id": 1, "pred": 7, "scheme": "dither", "k": 4, "logits": [...],
 //!  "latency_us": 412, "batch": 8, "shard": 2}
@@ -77,8 +82,12 @@ pub struct InferenceRequest {
     /// True when the scheme arrived via the deprecated `"mode"` request
     /// field — the server bumps `stats.deprecated_fields` per use.
     pub deprecated_mode: bool,
-    /// Per-request MSE budget (auto requests only).
+    /// Per-request MSE budget (auto requests only; at least one of
+    /// `max_mse` / `max_latency_us` is present on a parsed auto request).
     pub max_mse: Option<f64>,
+    /// Per-request latency SLO in microseconds against the measured
+    /// recent windows (auto requests only).
+    pub max_latency_us: Option<u64>,
     /// Upstream trace context `(trace_id, flags)` from the `"trace"`
     /// wire field (protocol v3; `None` when absent or malformed).
     pub trace: Option<(u64, u8)>,
@@ -237,17 +246,35 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
         None => return Err("missing 'k'".to_string()),
     };
     let auto = auto_scheme || k == 0;
-    let (scheme, k, max_mse) = if auto {
-        let budget = json
-            .get("max_mse")
-            .and_then(Json::as_f64)
-            .ok_or("\"scheme\":\"auto\" / \"k\":0 requires a 'max_mse' error budget")?;
-        if !budget.is_finite() || budget <= 0.0 {
-            return Err(format!("max_mse={budget} must be positive and finite"));
+    let (scheme, k, max_mse, max_latency_us) = if auto {
+        let max_mse = match json.get("max_mse").and_then(Json::as_f64) {
+            Some(budget) => {
+                if !budget.is_finite() || budget <= 0.0 {
+                    return Err(format!("max_mse={budget} must be positive and finite"));
+                }
+                Some(budget)
+            }
+            None => None,
+        };
+        let max_latency_us = match json.get("max_latency_us").and_then(Json::as_f64) {
+            Some(budget) => {
+                if !budget.is_finite() || budget < 1.0 {
+                    return Err(format!(
+                        "max_latency_us={budget} must be at least 1 microsecond"
+                    ));
+                }
+                Some(budget as u64)
+            }
+            None => None,
+        };
+        if max_mse.is_none() && max_latency_us.is_none() {
+            return Err("\"scheme\":\"auto\" / \"k\":0 requires a 'max_mse' or \
+                        'max_latency_us' budget"
+                .to_string());
         }
         // Placeholders: the server's precision controller overwrites both
         // before the request is batched.
-        (SchemeId::Dither, 0, Some(budget))
+        (SchemeId::Dither, 0, max_mse, max_latency_us)
     } else {
         if !(1..=16).contains(&k) {
             return Err(format!("k={k} out of range 1..=16"));
@@ -256,7 +283,7 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
             Some(s) => s.parse::<SchemeId>().map_err(|e| e.to_string())?,
             None => return Err("missing 'scheme'".to_string()),
         };
-        (scheme, k, None)
+        (scheme, k, None, None)
     };
     let pixels = json
         .get("pixels")
@@ -279,6 +306,7 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
         auto,
         deprecated_mode,
         max_mse,
+        max_latency_us,
         trace,
         pixels,
     }))
@@ -301,19 +329,42 @@ pub fn format_request(id: u64, model: &str, k: u32, scheme: SchemeId, pixels: &[
 /// Build an auto-precision request line: no `(scheme, k)`, just an MSE
 /// budget the server's controller satisfies as cheaply as it can.
 pub fn format_request_auto(id: u64, model: &str, max_mse: f64, pixels: &[f64]) -> String {
-    Json::obj(vec![
+    format_request_auto_slo(id, model, Some(max_mse), None, pixels)
+}
+
+/// Build an auto request line carrying any combination of SLO budgets: an
+/// error budget (`max_mse`), a latency budget (`max_latency_us`), or
+/// both. Passing neither builds a line the server rejects as a
+/// non-retryable error — tests use that spelling deliberately.
+pub fn format_request_auto_slo(
+    id: u64,
+    model: &str,
+    max_mse: Option<f64>,
+    max_latency_us: Option<u64>,
+    pixels: &[f64],
+) -> String {
+    let mut pairs = vec![
         ("id", Json::Num(id as f64)),
         ("model", Json::Str(model.to_string())),
         ("scheme", Json::Str("auto".to_string())),
-        ("max_mse", Json::Num(max_mse)),
-        ("pixels", Json::nums(pixels)),
-    ])
-    .to_string()
+    ];
+    if let Some(budget) = max_mse {
+        pairs.push(("max_mse", Json::Num(budget)));
+    }
+    if let Some(budget) = max_latency_us {
+        pairs.push(("max_latency_us", Json::Num(budget as f64)));
+    }
+    pairs.push(("pixels", Json::nums(pixels)));
+    Json::obj(pairs).to_string()
 }
 
 /// Successful inference response line. `scheme`/`k` are the concrete
 /// configuration that served the request; `auto` tags replies whose
-/// configuration the precision controller chose.
+/// configuration the precision controller chose, and `measured`
+/// additionally tags auto replies whose choice was backed by live
+/// measurements (a warm MSE cell or latency window) rather than priors
+/// and static cost order — ignored for non-auto replies, whose wire
+/// bytes stay identical to the pre-SLO protocol.
 #[allow(clippy::too_many_arguments)]
 pub fn format_response(
     id: u64,
@@ -325,6 +376,7 @@ pub fn format_response(
     batch: usize,
     shard: usize,
     auto: bool,
+    measured: bool,
 ) -> String {
     let mut pairs = vec![
         ("id", Json::Num(id as f64)),
@@ -338,6 +390,9 @@ pub fn format_response(
     ];
     if auto {
         pairs.push(("auto", Json::Bool(true)));
+        if measured {
+            pairs.push(("measured", Json::Bool(true)));
+        }
     }
     Json::obj(pairs).to_string()
 }
@@ -582,6 +637,13 @@ pub struct StatsSummary {
     pub writer_flushes: u64,
     /// Reply lines delivered across those flushes.
     pub writer_flushed_lines: u64,
+    /// Latency samples whose `(model, k)` label fell outside the bounded
+    /// recent-window space (dropped from measured-cost resolution).
+    pub recent_dropped: u64,
+    /// Auto requests that carried a `max_latency_us` budget.
+    pub auto_slo_requests: u64,
+    /// Auto requests resolved from live measurements.
+    pub auto_measured: u64,
     /// Compute kernel the server reported (`None` for older servers).
     pub kernel: Option<String>,
     /// Raw lifetime log₂ latency buckets (empty for older servers). When
@@ -680,6 +742,9 @@ pub fn parse_stats(line: &str) -> Result<StatsSummary, String> {
             .unwrap_or_default(),
         writer_flushes: count("writer_flushes"),
         writer_flushed_lines: count("writer_flushed_lines"),
+        recent_dropped: count("recent_dropped"),
+        auto_slo_requests: count("auto_slo_requests"),
+        auto_measured: count("auto_measured"),
         kernel: json
             .get("kernel")
             .and_then(Json::as_str)
@@ -898,7 +963,8 @@ mod tests {
 
     #[test]
     fn response_roundtrip() {
-        let line = format_response(7, 3, SchemeId::Dither, 4, &[0.1, 0.9], 250, 4, 2, false);
+        let line =
+            format_response(7, 3, SchemeId::Dither, 4, &[0.1, 0.9], 250, 4, 2, false, false);
         let json = Json::parse(&line).unwrap();
         assert_eq!(json.get("id").unwrap().as_f64(), Some(7.0));
         assert_eq!(json.get("pred").unwrap().as_f64(), Some(3.0));
@@ -907,12 +973,26 @@ mod tests {
         assert_eq!(json.get("batch").unwrap().as_f64(), Some(4.0));
         assert_eq!(json.get("shard").unwrap().as_f64(), Some(2.0));
         assert!(json.get("auto").is_none(), "fixed requests carry no auto tag");
-        let auto = format_response(8, 1, SchemeId::Deterministic, 2, &[0.5], 10, 1, 0, true);
+        let auto =
+            format_response(8, 1, SchemeId::Deterministic, 2, &[0.5], 10, 1, 0, true, false);
         let json = Json::parse(&auto).unwrap();
         assert_eq!(json.get("auto").unwrap().as_bool(), Some(true));
         assert_eq!(json.get("k").unwrap().as_f64(), Some(2.0));
+        assert!(
+            json.get("measured").is_none(),
+            "prior-resolved auto replies carry no measured tag"
+        );
+        let warm =
+            format_response(8, 1, SchemeId::Deterministic, 2, &[0.5], 10, 1, 0, true, true);
+        let json = Json::parse(&warm).unwrap();
+        assert_eq!(json.get("measured").unwrap().as_bool(), Some(true));
+        // `measured` is meaningless without `auto`: the wire bytes of a
+        // fixed-configuration reply never change.
+        let fixed =
+            format_response(7, 3, SchemeId::Dither, 4, &[0.1, 0.9], 250, 4, 2, false, true);
+        assert_eq!(fixed, line, "non-auto replies must stay bit-identical");
         // Zoo schemes ride the same response shape.
-        let zoo = format_response(9, 2, SchemeId::SrVb, 3, &[0.5], 10, 1, 0, false);
+        let zoo = format_response(9, 2, SchemeId::SrVb, 3, &[0.5], 10, 1, 0, false, false);
         let json = Json::parse(&zoo).unwrap();
         assert_eq!(json.get("scheme").unwrap().as_str(), Some("srvb"));
     }
@@ -957,12 +1037,58 @@ mod tests {
             }
             other => panic!("wrong message {other:?}"),
         }
-        // Auto without a budget, or with a junk budget, is rejected.
+        // Auto without any budget, or with a junk budget, is rejected.
         let no_budget = line.replace(",\"max_mse\":0.25", "");
         assert!(parse_message(&no_budget).is_err());
         for bad in ["-1", "0", "1e999"] {
             let junk = line.replace("\"max_mse\":0.25", &format!("\"max_mse\":{bad}"));
             assert!(parse_message(&junk).is_err(), "max_mse={bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn auto_latency_budgets_parse_and_validate() {
+        let pixels: Vec<f64> = (0..784).map(|i| i as f64 / 784.0).collect();
+        // Latency-only: legal since the SLO protocol revision.
+        let lat_only = format_request_auto_slo(21, "digits_linear", None, Some(2500), &pixels);
+        match parse_message(&lat_only).unwrap() {
+            Message::Infer(r) => {
+                assert!(r.auto);
+                assert_eq!(r.max_mse, None);
+                assert_eq!(r.max_latency_us, Some(2500));
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        // Both budgets together.
+        let both =
+            format_request_auto_slo(22, "digits_linear", Some(0.25), Some(900), &pixels);
+        match parse_message(&both).unwrap() {
+            Message::Infer(r) => {
+                assert_eq!(r.max_mse, Some(0.25));
+                assert_eq!(r.max_latency_us, Some(900));
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        // The mse-only builder is the slo builder with one axis absent.
+        assert_eq!(
+            format_request_auto(13, "fashion_mlp", 0.25, &pixels),
+            format_request_auto_slo(13, "fashion_mlp", Some(0.25), None, &pixels)
+        );
+        // Budget-less autos and junk latency budgets are rejected; a junk
+        // latency budget is rejected even when a valid max_mse rides along.
+        let neither = format_request_auto_slo(23, "digits_linear", None, None, &pixels);
+        assert!(parse_message(&neither).is_err());
+        for bad in ["-5", "0", "0.2", "1e999"] {
+            let junk = both.replace("\"max_latency_us\":900", &format!("\"max_latency_us\":{bad}"));
+            assert!(
+                parse_message(&junk).is_err(),
+                "max_latency_us={bad} must be rejected"
+            );
+        }
+        // A fixed-configuration request ignores the SLO fields entirely.
+        match parse_message(&sample_request(4)).unwrap() {
+            Message::Infer(r) => assert_eq!(r.max_latency_us, None),
+            other => panic!("wrong message {other:?}"),
         }
     }
 
@@ -1020,7 +1146,7 @@ mod tests {
     #[test]
     fn reassembler_matches_by_id_and_rejects_duplicates() {
         let mut r = Reassembler::new();
-        let a = format_response(3, 1, SchemeId::Dither, 4, &[0.5], 10, 1, 0, false);
+        let a = format_response(3, 1, SchemeId::Dither, 4, &[0.5], 10, 1, 0, false, false);
         let b = format_overloaded(9);
         assert!(r.is_empty());
         assert_eq!(r.insert(&b).unwrap(), 9);

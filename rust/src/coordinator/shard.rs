@@ -15,6 +15,7 @@ use crate::coordinator::batcher::{
 };
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
+use crate::fidelity::AutoView;
 use crate::linalg::Variant;
 use crate::nn::PlanKey;
 use crate::rounding::SchemeId;
@@ -22,8 +23,16 @@ use crate::trace::{TraceConfig, Tracer};
 use crate::train::Zoo;
 use crate::util::rng::counter_hash;
 use crate::util::threadpool::WorkerPool;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// How often the pool's refresher thread merges every shard's estimators
+/// and recent-latency windows into a fresh [`AutoView`] snapshot. Short
+/// enough that a latency regression redirects auto traffic within a
+/// fraction of one metrics window, long enough to keep the merge off the
+/// request hot path.
+const AUTO_VIEW_REFRESH: Duration = Duration::from_millis(50);
 
 /// Shard-pool policy.
 #[derive(Clone, Debug)]
@@ -68,6 +77,12 @@ pub struct ShardPool {
     /// The process tracer: sampling decisions at admission (connection
     /// readers), span finishing in the shard workers, `trace` queries.
     tracer: Arc<Tracer>,
+    /// The merged auto-resolution snapshot every shard worker prices
+    /// `"scheme":"auto"` batches against, refreshed by the pool's
+    /// refresher thread so all shards converge on one view.
+    auto_view: Arc<AutoView>,
+    /// Stops the auto-view refresher at [`ShardPool::join`].
+    refresher_stop: Arc<AtomicBool>,
 }
 
 impl ShardPool {
@@ -100,6 +115,24 @@ impl ShardPool {
             sweeper.spawn("dither-reply-watchdog".to_string(), move || dog.run());
         }
         let tracer = Arc::new(Tracer::new(cfg.trace.clone()));
+        // One merged auto view per process: seeded synchronously (the
+        // first auto batch never races an empty snapshot), then refreshed
+        // on the sweeper pool until join. Workers read it lock-cheap per
+        // auto batch, so a shard's choices track what *every* shard has
+        // measured, not just its own estimators.
+        let metrics_handle = metrics.handle();
+        let auto_view = Arc::new(AutoView::new(metrics_handle.auto_snapshot()));
+        let refresher_stop = Arc::new(AtomicBool::new(false));
+        {
+            let view = auto_view.clone();
+            let stop = refresher_stop.clone();
+            sweeper.spawn("dither-auto-view".to_string(), move || {
+                while !stop.load(Ordering::Acquire) {
+                    std::thread::sleep(AUTO_VIEW_REFRESH);
+                    view.store(metrics_handle.auto_snapshot());
+                }
+            });
+        }
         let mut batchers = Vec::with_capacity(shards);
         for i in 0..shards {
             let batcher = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait, cfg.queue_cap));
@@ -134,6 +167,7 @@ impl ShardPool {
             let b = batcher.clone();
             let dog = watchdog.clone();
             let shard_tracer = tracer.clone();
+            let shard_view = auto_view.clone();
             workers.spawn(format!("dither-shard-{i}"), move || {
                 // Stop the batcher even if the worker panics: routed
                 // requests then get an immediate "shutting down" reply
@@ -145,7 +179,15 @@ impl ShardPool {
                     }
                 }
                 let _guard = StopOnExit(b.clone());
-                worker_loop(&b, &engine, &shard_metrics, &shard_tracer, i, dog.as_deref());
+                worker_loop(
+                    &b,
+                    &engine,
+                    &shard_metrics,
+                    &shard_tracer,
+                    &shard_view,
+                    i,
+                    dog.as_deref(),
+                );
             });
             batchers.push(batcher);
         }
@@ -155,7 +197,15 @@ impl ShardPool {
             watchdog,
             sweeper: Mutex::new(sweeper),
             tracer,
+            auto_view,
+            refresher_stop,
         }
+    }
+
+    /// The pool's merged auto-resolution view (shared with every shard
+    /// worker and refreshed every [`AUTO_VIEW_REFRESH`]).
+    pub fn auto_view(&self) -> &Arc<AutoView> {
+        &self.auto_view
     }
 
     /// The pool's reply watchdog, when one is running.
@@ -215,6 +265,7 @@ impl ShardPool {
         if let Some(dog) = &self.watchdog {
             dog.stop();
         }
+        self.refresher_stop.store(true, Ordering::Release);
         panicked + self.sweeper.lock().unwrap().join_all()
     }
 }
@@ -265,6 +316,8 @@ mod tests {
                     auto: false,
                     deprecated_mode: false,
                     max_mse: None,
+                    max_latency_us: None,
+                    trace: None,
                     pixels: vec![0.3; 784],
                 },
                 respond_to: ReplyTo::new(id, tx),
@@ -368,5 +421,109 @@ mod tests {
         // Stage histograms saw every span; the ring respects filters.
         assert!(!tracer.stage_snapshots().is_empty());
         assert!(tracer.query(0, Some("no_such_model"), None, 0).is_empty());
+    }
+
+    /// The closed SLO loop, end to end: a cold pool resolves a
+    /// dual-budget auto request by the static cost walk; after injected
+    /// per-scheme latency measurements make that pick blow the latency
+    /// budget, the refresher folds the skew into the shared [`AutoView`]
+    /// and the very same request redirects to a measured, feasible
+    /// `(scheme, k)` — echoed on the wire with `"measured": true`.
+    #[test]
+    fn measured_latency_skew_redirects_auto_resolution() {
+        use crate::fidelity::LATENCY_MIN_SAMPLES;
+        let (pool, metrics) = pool(1);
+
+        let auto_pending = |id: u64| {
+            let (tx, rx) = sync_channel(8);
+            (
+                Pending {
+                    req: InferenceRequest {
+                        id,
+                        model: "digits_linear".to_string(),
+                        k: 0,
+                        scheme: SchemeId::Dither,
+                        auto: true,
+                        deprecated_mode: false,
+                        max_mse: Some(1e9),
+                        max_latency_us: Some(10_000),
+                        trace: None,
+                        pixels: vec![0.3; 784],
+                    },
+                    respond_to: ReplyTo::new(id, tx),
+                    enqueued: Instant::now(),
+                    trace: None,
+                },
+                rx,
+            )
+        };
+        let ask = |id: u64| -> Json {
+            let (p, rx) = auto_pending(id);
+            pool.submit(0, p).unwrap();
+            let line = rx.recv_timeout(Duration::from_secs(30)).expect("auto reply");
+            Json::parse(&line).expect("valid response json")
+        };
+
+        // Cold view: both budgets present, nothing measured — the static
+        // cost walk serves its cheapest candidate, unmarked as measured.
+        let cold = ask(1);
+        assert_eq!(cold.get("scheme").unwrap().as_str(), Some("deterministic"));
+        assert_eq!(cold.get("k").unwrap().as_f64(), Some(1.0));
+        assert_eq!(cold.get("auto").unwrap().as_bool(), Some(true));
+        assert!(cold.get("measured").is_none(), "cold choices are not measured");
+        // Non-auto traffic is byte-compatible with the pre-SLO wire: no
+        // auto/measured tags appear on a concrete-key reply.
+        let (p, rx) = infer_pending(2);
+        pool.submit(0, p).unwrap();
+        let line = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(!line.contains("\"auto\"") && !line.contains("\"measured\""), "{line}");
+
+        // Inject the skew straight into the shard's recent windows: the
+        // deterministic scheme measures far over the 10 ms budget, dither
+        // measures well under it. The deterministic samples ride an
+        // out-of-range model slot, so they also exercise the
+        // recent_dropped accounting for per-(model, k) cells.
+        let shard = metrics.shard(0);
+        for _ in 0..(LATENCY_MIN_SAMPLES * 8) {
+            shard.record_request(SchemeId::Deterministic, usize::MAX, 1, 50_000);
+            shard.record_request(SchemeId::Dither, 0, 2, 100);
+        }
+
+        // Within a few refresher ticks every shard prices the same skew,
+        // and the identical request redirects off the static walk.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut id = 10u64;
+        let redirected = loop {
+            let json = ask(id);
+            id += 1;
+            let scheme = json.get("scheme").unwrap().as_str().unwrap().to_string();
+            if scheme != "deterministic" {
+                break json;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "auto resolution never picked up the measured latency skew"
+            );
+            std::thread::sleep(Duration::from_millis(25));
+        };
+        assert_eq!(
+            redirected.get("scheme").unwrap().as_str(),
+            Some("dither"),
+            "the only fast measured scheme must win the walk"
+        );
+        assert_eq!(redirected.get("auto").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            redirected.get("measured").unwrap().as_bool(),
+            Some(true),
+            "a measurement-driven choice must be echoed as measured"
+        );
+        pool.close();
+        assert_eq!(pool.join(), 0);
+        // The out-of-range model slot rode every injected deterministic
+        // sample into the dropped counter, and the stats scrape shows it.
+        let stats = metrics.snapshot_json();
+        assert!(stats.contains("\"recent_dropped\":"), "{stats}");
+        assert!(!stats.contains("\"recent_dropped\":0,"), "{stats}");
+        assert!(stats.contains("\"auto_slo_requests\":"), "{stats}");
     }
 }

@@ -1,31 +1,41 @@
-//! Adaptive precision controller: turn a per-request error budget into a
-//! concrete `(scheme, k)` serving configuration.
+//! Adaptive precision controller: turn a per-request SLO into a concrete
+//! `(scheme, k)` serving configuration.
 //!
-//! A `"scheme":"auto"` request carries a `max_mse` budget instead of a
-//! hand-picked configuration. The controller walks the candidate grid in
-//! **cost order** (lowest bit width first; at equal width the paper's
-//! trio in cheap-first order — deterministic needs no randomness, dither
-//! one table lookup per element, stochastic a hash per element — then the
-//! literature zoo) and picks the first candidate whose *predicted* MSE
-//! meets the budget. Every registered scheme is a candidate, so the whole
-//! zoo competes in auto resolution.
+//! A `"scheme":"auto"` request carries a `max_mse` error budget, a
+//! `max_latency_us` latency budget, or both, instead of a hand-picked
+//! configuration. The controller walks the candidate grid in **measured
+//! cost order**: candidates ranked by their measured recent latency (the
+//! per-`(model, k)` and per-scheme serving windows, combined through
+//! [`LatencyView`]), with the static cost order — lowest bit width first;
+//! at equal width the paper's trio in cheap-first order (deterministic
+//! needs no randomness, dither one table lookup per element, stochastic a
+//! hash per element), then the literature zoo — as the cold-start
+//! tiebreak. The first candidate that satisfies every budget wins, so a
+//! fully cold process behaves exactly like the historic static walk and a
+//! warm one serves the cheapest configuration *as measured*, not as
+//! assumed. Every registered scheme is a candidate, so the whole zoo
+//! competes in auto resolution.
 //!
-//! The prediction for a candidate is the shard's measured shadow-sampling
-//! estimate once it has accrued [`MIN_SAMPLES`] logit errors, and each
-//! scheme's own [`crate::rounding::Rounding::mse_prior`] before that —
-//! `Θ(1/N²)` shapes for the deterministic/dithered schemes, `Ω(1/N)` for
-//! the stochastic family, in the quantizer resolution `N = 2^k − 1`
+//! The MSE prediction for a candidate is the measured shadow-sampling
+//! estimate once its cell has accrued [`MIN_SAMPLES`] logit errors, and
+//! each scheme's own [`crate::rounding::Rounding::mse_prior`] before that
+//! — `Θ(1/N²)` shapes for the deterministic/dithered schemes, `Ω(1/N)`
+//! for the stochastic family, in the quantizer resolution `N = 2^k − 1`
 //! (§II-C/§VII — the prior only has to rank candidates sanely until real
 //! measurements take over; El Arar 2022 and Xia 2020 both show the true
 //! constants are workload-dependent, which is exactly what the online
 //! estimator captures).
 //!
-//! The choice is a pure function of `(budget, estimator state)` — no
-//! randomness, no clocks — so replaying traffic against the same
-//! estimator state reproduces every auto decision.
+//! The choice is a pure function of `(budget, estimate table, latency
+//! view)` — no randomness, no clocks — so replaying traffic against the
+//! same snapshot ([`AutoSnapshot`]) reproduces every auto decision. The
+//! serving stack refreshes one merged snapshot per process on a short
+//! cadence (see `coordinator::shard`), published through [`AutoView`], so
+//! every shard converges to the same auto view.
 
-use crate::fidelity::estimator::{FidelityShard, MAX_K};
+use crate::fidelity::estimator::{EstimateTable, FidelityShard, MAX_K, MODEL_SLOTS};
 use crate::rounding::SchemeId;
+use std::sync::{Arc, Mutex};
 
 /// Shadow samples a `(model, scheme, k)` cell needs before its measured
 /// MSE replaces the prior (≈ a few dozen shadowed requests at 10 logits
@@ -33,9 +43,23 @@ use crate::rounding::SchemeId;
 /// configurations of measurements for long).
 pub const MIN_SAMPLES: u64 = 256;
 
+/// Latency samples a recent window needs before its percentile counts as
+/// a measurement; below this the candidate is latency-cold and keeps its
+/// static-order position (a handful of requests must not reorder the
+/// walk on noise).
+pub const LATENCY_MIN_SAMPLES: u64 = 32;
+
 /// Contraction length assumed by the prior (the models' 784-wide input
 /// layer dominates every forward pass).
 const PRIOR_CONTRACTION: f64 = 784.0;
+
+/// In the infeasible-budget fallback, a prior-only candidate displaces a
+/// measured one only when the prior is decisively better — more than this
+/// factor below the measured MSE. At comparable predicted MSE the
+/// measured candidate wins: priors are optimistic by construction
+/// (contraction-averaged), so trusting one over a live measurement it
+/// merely edges out re-serves exactly the stale-prior bug this guards.
+const FALLBACK_PRIOR_MARGIN: f64 = 4.0;
 
 /// Candidate schemes in ascending serving-cost order at a fixed `k`: the
 /// paper's trio first (cheapest machinery wins budget ties exactly as
@@ -59,9 +83,176 @@ pub struct AutoChoice {
     pub k: u32,
     /// The MSE prediction the choice was based on.
     pub predicted_mse: f64,
-    /// True when the prediction came from shadow measurements rather than
-    /// the prior.
+    /// True when the MSE prediction came from shadow measurements rather
+    /// than the prior.
     pub measured: bool,
+    /// The measured recent-latency estimate the choice was priced at
+    /// (`None` when the candidate was latency-cold).
+    pub predicted_latency_us: Option<u64>,
+}
+
+impl AutoChoice {
+    /// True when any axis of the choice was backed by live measurements
+    /// (a warm MSE cell or a warm latency window) — what the reply's
+    /// `"measured"` flag echoes.
+    pub fn any_measured(&self) -> bool {
+        self.measured || self.predicted_latency_us.is_some()
+    }
+}
+
+/// The per-request SLO an auto request carries: at least one axis must be
+/// present (the protocol rejects budget-less autos).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloBudget {
+    /// Error budget: highest acceptable predicted MSE. `None` means
+    /// unbounded — only legal alongside a latency budget.
+    pub max_mse: Option<f64>,
+    /// Latency budget in microseconds against the measured recent
+    /// windows. Latency-cold candidates pass optimistically (cold-start
+    /// must be able to serve).
+    pub max_latency_us: Option<u64>,
+}
+
+impl SloBudget {
+    /// An error-only budget (the historic auto request shape).
+    pub fn mse(max_mse: f64) -> SloBudget {
+        SloBudget {
+            max_mse: Some(max_mse),
+            max_latency_us: None,
+        }
+    }
+}
+
+/// A snapshot of the measured recent-latency surface the controller walks:
+/// one `(samples, p50_us)` pair per `(model, k)` serving window and one
+/// per scheme window. Plain data — built by the coordinator's metrics
+/// (`MetricsHandle::auto_snapshot`) from the raw rotating windows, merged
+/// across shards at fold time, then handed to [`choose_slo`] by value so
+/// the choice stays replayable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyView {
+    /// `(samples, p50_us)` per model slot × k (flat, `MODEL_SLOTS × MAX_K`).
+    model_k: Vec<(u64, u64)>,
+    /// `(samples, p50_us)` per registered scheme slot.
+    schemes: Vec<(u64, u64)>,
+}
+
+impl Default for LatencyView {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl LatencyView {
+    /// A view with every window cold — the cold-start walk is exactly the
+    /// static cost order.
+    pub fn empty() -> LatencyView {
+        LatencyView {
+            model_k: vec![(0, 0); MODEL_SLOTS * MAX_K as usize],
+            schemes: vec![(0, 0); SchemeId::COUNT],
+        }
+    }
+
+    fn mk_index(model: usize, k: u32) -> Option<usize> {
+        if model >= MODEL_SLOTS || !(1..=MAX_K).contains(&k) {
+            return None;
+        }
+        Some(model * MAX_K as usize + (k - 1) as usize)
+    }
+
+    /// Set one `(model, k)` window's fold (out-of-space labels ignored).
+    pub fn set_model_k(&mut self, model: usize, k: u32, samples: u64, p50_us: u64) {
+        if let Some(i) = LatencyView::mk_index(model, k) {
+            self.model_k[i] = (samples, p50_us);
+        }
+    }
+
+    /// Set one scheme window's fold.
+    pub fn set_scheme(&mut self, mode: SchemeId, samples: u64, p50_us: u64) {
+        self.schemes[mode.slot()] = (samples, p50_us);
+    }
+
+    /// Measured p50 for a `(model, k)` window, `None` until it has
+    /// [`LATENCY_MIN_SAMPLES`] samples.
+    pub fn model_k_latency(&self, model: usize, k: u32) -> Option<u64> {
+        let (n, p50) = LatencyView::mk_index(model, k).map(|i| self.model_k[i])?;
+        (n >= LATENCY_MIN_SAMPLES).then_some(p50)
+    }
+
+    /// Measured p50 for a scheme window, `None` until warm.
+    pub fn scheme_latency(&self, mode: SchemeId) -> Option<u64> {
+        let (n, p50) = self.schemes[mode.slot()];
+        (n >= LATENCY_MIN_SAMPLES).then_some(p50)
+    }
+
+    /// The composite measured-latency estimate for one candidate: the
+    /// worse of its `(model, k)` window and its scheme window (either
+    /// alone when only one is warm, `None` when both are cold). Taking
+    /// the max is conservative: a candidate is only priced fast when
+    /// nothing measured about it says slow.
+    pub fn latency_estimate(&self, model: usize, mode: SchemeId, k: u32) -> Option<u64> {
+        match (self.model_k_latency(model, k), self.scheme_latency(mode)) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        }
+    }
+}
+
+/// The merged per-process snapshot auto resolution prices against:
+/// estimates and latency folded across every shard at one instant.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AutoSnapshot {
+    /// Merged `(model, scheme, k)` error estimates.
+    pub estimates: EstimateTable,
+    /// Merged recent-latency surface.
+    pub latency: LatencyView,
+}
+
+impl AutoSnapshot {
+    /// A fully cold snapshot (process start: priors and static order).
+    pub fn empty() -> AutoSnapshot {
+        AutoSnapshot::default()
+    }
+}
+
+/// The shared, periodically refreshed [`AutoSnapshot`] all shards of one
+/// process resolve against. Readers clone an `Arc` under a short lock;
+/// the refresher swaps in a new snapshot wholesale, so a resolution never
+/// sees a half-updated view.
+#[derive(Debug)]
+pub struct AutoView {
+    current: Mutex<Arc<AutoSnapshot>>,
+}
+
+impl Default for AutoView {
+    fn default() -> Self {
+        AutoView::new(AutoSnapshot::empty())
+    }
+}
+
+impl AutoView {
+    /// A view seeded with `snapshot`.
+    pub fn new(snapshot: AutoSnapshot) -> AutoView {
+        AutoView {
+            current: Mutex::new(Arc::new(snapshot)),
+        }
+    }
+
+    /// The current snapshot (cheap: one `Arc` clone under the lock).
+    pub fn load(&self) -> Arc<AutoSnapshot> {
+        self.current
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Publish a fresh snapshot.
+    pub fn store(&self, snapshot: AutoSnapshot) {
+        *self
+            .current
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner) = Arc::new(snapshot);
+    }
 }
 
 /// Prior MSE of a `(scheme, k)` candidate: per-logit error of a `q`-long
@@ -77,8 +268,8 @@ pub fn prior_mse(mode: SchemeId, k: u32) -> f64 {
         .mse_prior(step, PRIOR_CONTRACTION)
 }
 
-/// Predicted MSE for one candidate: measured estimate once warm, prior
-/// until then. Returns `(mse, measured)`.
+/// Predicted MSE for one candidate against a live shard: measured
+/// estimate once warm, prior until then. Returns `(mse, measured)`.
 pub fn predicted_mse(
     shard: &FidelityShard,
     model: usize,
@@ -93,36 +284,92 @@ pub fn predicted_mse(
     }
 }
 
-/// Pick the cheapest `(scheme, k)` whose predicted MSE meets `max_mse`.
+/// In the infeasible-budget fallback, is `c` a better least-bad answer
+/// than `b`? Same measurement axis: lower predicted MSE wins (strictly —
+/// ties keep the earlier, cheaper-walking candidate). Across axes the
+/// measured candidate wins unless the prior undercuts it by more than
+/// [`FALLBACK_PRIOR_MARGIN`].
+fn fallback_better(c: &AutoChoice, b: &AutoChoice) -> bool {
+    match (c.measured, b.measured) {
+        (true, false) => c.predicted_mse < b.predicted_mse * FALLBACK_PRIOR_MARGIN,
+        (false, true) => c.predicted_mse * FALLBACK_PRIOR_MARGIN < b.predicted_mse,
+        _ => c.predicted_mse < b.predicted_mse,
+    }
+}
+
+/// Resolve one auto request against a snapshot: walk the candidate grid
+/// in measured-latency order (static cost order breaking cold and equal
+/// ties) and pick the first candidate meeting every budget.
 ///
-/// When no candidate meets the budget (it is tighter than anything the
-/// grid can deliver, or non-finite), the most accurate candidate wins —
-/// ties broken toward the cheaper one, so the result is still
-/// deterministic given the estimator state.
-pub fn choose(shard: &FidelityShard, model: usize, max_mse: f64) -> AutoChoice {
-    let mut best: Option<AutoChoice> = None;
+/// When no candidate meets the budgets (the error budget is tighter than
+/// anything the grid can deliver, or non-finite), the most accurate
+/// candidate wins — measured cells preferred over comparable priors (see
+/// [`fallback_better`]), remaining ties broken toward the cheaper walk
+/// position — so the result is still deterministic given the snapshot.
+pub fn choose_slo(
+    table: &EstimateTable,
+    view: &LatencyView,
+    model: usize,
+    budget: SloBudget,
+) -> AutoChoice {
+    // The full grid with its walk key: measured latency first (cold =
+    // u64::MAX, i.e. after every measured candidate), static rank second.
+    let mut grid: Vec<(u64, usize, AutoChoice)> =
+        Vec::with_capacity(MAX_K as usize * COST_ORDER.len());
+    let mut rank = 0usize;
     for k in 1..=MAX_K {
         for &mode in &COST_ORDER {
-            let (mse, measured) = predicted_mse(shard, model, mode, k);
-            let candidate = AutoChoice {
+            let est = table.get(model, mode, k);
+            let (mse, measured) = if est.samples >= MIN_SAMPLES {
+                (est.mse(), true)
+            } else {
+                (prior_mse(mode, k), false)
+            };
+            let latency = view.latency_estimate(model, mode, k);
+            let choice = AutoChoice {
                 scheme: mode,
                 k,
                 predicted_mse: mse,
                 measured,
+                predicted_latency_us: latency,
             };
-            if mse <= max_mse {
-                return candidate;
-            }
-            let better = match &best {
-                None => true,
-                Some(b) => mse < b.predicted_mse,
-            };
-            if better {
-                best = Some(candidate);
-            }
+            grid.push((latency.unwrap_or(u64::MAX), rank, choice));
+            rank += 1;
+        }
+    }
+    grid.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    // An absent error budget is only legal alongside a latency budget
+    // (enforced at parse and resolve time); infinity is then correct.
+    let mse_budget = budget.max_mse.unwrap_or(f64::INFINITY);
+    let mut best: Option<AutoChoice> = None;
+    for &(_, _, c) in &grid {
+        let latency_ok = match (budget.max_latency_us, c.predicted_latency_us) {
+            (Some(budget_us), Some(measured_us)) => measured_us <= budget_us,
+            // No latency budget, or a latency-cold candidate: pass — a
+            // cold start must be able to serve under any budget.
+            _ => true,
+        };
+        if latency_ok && c.predicted_mse <= mse_budget {
+            return c;
+        }
+        if best.as_ref().is_none_or(|b| fallback_better(&c, b)) {
+            best = Some(c);
         }
     }
     best.expect("the candidate grid is never empty")
+}
+
+/// Pick the cheapest `(scheme, k)` whose predicted MSE meets `max_mse`
+/// against one live shard with no latency view — the historic error-only
+/// entry point ([`choose_slo`] with a cold latency surface, so the walk
+/// is exactly the static cost order).
+pub fn choose(shard: &FidelityShard, model: usize, max_mse: f64) -> AutoChoice {
+    choose_slo(
+        &EstimateTable::from_shard(shard),
+        &LatencyView::empty(),
+        model,
+        SloBudget::mse(max_mse),
+    )
 }
 
 #[cfg(test)]
@@ -154,6 +401,7 @@ mod tests {
         let c = choose(&shard, 0, 1e12);
         assert_eq!((c.scheme, c.k), (SchemeId::Deterministic, 1));
         assert!(!c.measured);
+        assert_eq!(c.predicted_latency_us, None);
     }
 
     #[test]
@@ -212,5 +460,136 @@ mod tests {
             (SchemeId::Deterministic, 1),
             "crossing MIN_SAMPLES must flip the cell to measured"
         );
+    }
+
+    #[test]
+    fn infeasible_fallback_prefers_measured_over_comparable_prior() {
+        // Regression for the one-axis fallback compare: under an
+        // impossible budget the old walk returned the candidate with the
+        // lowest *predicted* MSE, so the grid's most optimistic cold
+        // prior beat a live measurement it only marginally undercut. The
+        // fixed fallback keeps the measured candidate at comparable
+        // predicted MSE.
+        let shard = FidelityShard::new();
+        let best_prior = COST_ORDER
+            .iter()
+            .map(|&m| prior_mse(m, MAX_K))
+            .fold(f64::INFINITY, f64::min);
+        // Warm one cell to 1.5× the best prior on the grid: worse than
+        // the prior on the raw axis, comparable under the margin.
+        let err = (1.5 * best_prior).sqrt();
+        for i in 0..MIN_SAMPLES {
+            let signed = if i % 2 == 0 { err } else { -err };
+            shard.record(0, SchemeId::Dither, MAX_K, signed);
+        }
+        let c = choose(&shard, 0, 1e-300);
+        assert_eq!(
+            (c.scheme, c.k, c.measured),
+            (SchemeId::Dither, MAX_K, true),
+            "stale-prior candidate won the fallback again: {c:?}"
+        );
+        assert!((c.predicted_mse - 1.5 * best_prior).abs() < best_prior * 0.01);
+    }
+
+    #[test]
+    fn latency_budget_walks_measured_candidates_first() {
+        // Cold estimates, warm latency: deterministic measured slow, the
+        // dither scheme window and the (model 0, k=2) window measured
+        // fast. A latency-budgeted request must skip the statically
+        // cheapest (deterministic) candidate for the measured-fast one.
+        let table = EstimateTable::empty();
+        let mut view = LatencyView::empty();
+        view.set_model_k(0, 2, LATENCY_MIN_SAMPLES, 100);
+        view.set_scheme(SchemeId::Dither, LATENCY_MIN_SAMPLES, 100);
+        view.set_scheme(SchemeId::Deterministic, LATENCY_MIN_SAMPLES, 50_000);
+        let budget = SloBudget {
+            max_mse: Some(1e9),
+            max_latency_us: Some(10_000),
+        };
+        let c = choose_slo(&table, &view, 0, budget);
+        assert_eq!(c.scheme, SchemeId::Dither, "{c:?}");
+        assert_eq!(c.predicted_latency_us, Some(100), "{c:?}");
+        assert!(c.any_measured());
+        // Below the warm threshold the same numbers change nothing: the
+        // walk is static again and deterministic k=1 wins.
+        let mut cold = LatencyView::empty();
+        cold.set_scheme(SchemeId::Deterministic, LATENCY_MIN_SAMPLES - 1, 50_000);
+        let c = choose_slo(&table, &cold, 0, budget);
+        assert_eq!((c.scheme, c.k), (SchemeId::Deterministic, 1), "{c:?}");
+        assert_eq!(c.predicted_latency_us, None);
+    }
+
+    #[test]
+    fn latency_only_budget_serves_from_a_cold_start() {
+        // max_mse absent is legal when a latency budget is present; on a
+        // fully cold snapshot the walk is the static order and the
+        // cheapest candidate serves (cold candidates pass the latency
+        // check optimistically).
+        let snap = AutoSnapshot::empty();
+        let budget = SloBudget {
+            max_mse: None,
+            max_latency_us: Some(500),
+        };
+        let c = choose_slo(&snap.estimates, &snap.latency, 0, budget);
+        assert_eq!((c.scheme, c.k), (SchemeId::Deterministic, 1));
+        assert!(!c.any_measured());
+    }
+
+    #[test]
+    fn cold_view_reduces_to_the_static_cost_walk() {
+        // With an empty latency view, choose_slo over an error budget is
+        // exactly the historic static walk for any budget.
+        let shard = FidelityShard::new();
+        for i in 0..MIN_SAMPLES {
+            let signed = if i % 2 == 0 { 0.05 } else { -0.05 };
+            shard.record(0, SchemeId::Tpdf, 3, signed);
+        }
+        let table = EstimateTable::from_shard(&shard);
+        let view = LatencyView::empty();
+        for budget in [1e12, 10.0, 1e-2, 1e-4, 1e-7, 1e-12] {
+            let a = choose(&shard, 0, budget);
+            let b = choose_slo(&table, &view, 0, SloBudget::mse(budget));
+            assert_eq!(a, b, "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn replaying_budgets_against_a_snapshot_reproduces_every_choice() {
+        // The determinism contract auto resolution rests on: a choice is
+        // a pure function of (budget, snapshot), so replaying a traffic
+        // mix against the same snapshotted estimator + latency view
+        // reproduces every decision — and rebuilding the snapshot from
+        // the unchanged shard changes nothing either.
+        let shard = FidelityShard::new();
+        for i in 0..MIN_SAMPLES {
+            let e = ((i * 37 + 11) % 100) as f64 / 500.0 - 0.1;
+            shard.record(0, SchemeId::Dither, 4, e);
+            shard.record(0, SchemeId::Stochastic, 2, e * 3.0);
+        }
+        let mut view = LatencyView::empty();
+        view.set_model_k(0, 2, 64, 180);
+        view.set_model_k(0, 4, 64, 420);
+        view.set_scheme(SchemeId::Dither, 64, 200);
+        view.set_scheme(SchemeId::Stochastic, 64, 900);
+        let table = EstimateTable::from_shard(&shard);
+        // A deterministic pseudo-random budget mix over both axes.
+        let budgets: Vec<SloBudget> = (0..200u64)
+            .map(|i| {
+                let h = i.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17);
+                SloBudget {
+                    max_mse: (h % 3 != 0).then(|| 10f64.powi((h % 13) as i32 - 9)),
+                    max_latency_us: (h % 3 != 1).then_some(10 + (h % 2000)),
+                }
+            })
+            .collect();
+        let first: Vec<AutoChoice> =
+            budgets.iter().map(|&b| choose_slo(&table, &view, 0, b)).collect();
+        let replay: Vec<AutoChoice> =
+            budgets.iter().map(|&b| choose_slo(&table, &view, 0, b)).collect();
+        assert_eq!(first, replay);
+        let rebuilt = EstimateTable::from_shard(&shard);
+        let again: Vec<AutoChoice> =
+            budgets.iter().map(|&b| choose_slo(&rebuilt, &view, 0, b)).collect();
+        assert_eq!(first, again);
     }
 }

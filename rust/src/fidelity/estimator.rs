@@ -10,15 +10,28 @@
 //! no allocation and no lock — the same hot-path discipline as the
 //! latency windows in `coordinator::metrics`.
 //!
+//! **Freshness.** Every `(model, scheme, k)` label owns [`EPOCH_SLOTS`]
+//! rotating Welford cells, mirroring the epoch discipline of the
+//! coordinator's recent-latency windows: the writer stamps each cell with
+//! the epoch it was (re)started in, readers fold only cells whose stamp is
+//! within the live window, and an aged-out cell is zeroed before its new
+//! stamp is published. Epochs are supplied by the caller
+//! ([`FidelityShard::advance_epoch`] — the serving metrics advance them on
+//! its wall-clock cadence), so the estimator itself stays clock-free and
+//! deterministic under test. A shard whose epoch is never advanced behaves
+//! exactly like the pre-epoch estimator: everything lands in one cell and
+//! nothing ever ages out.
+//!
 //! Concurrency contract: each cell has **one writer** (the shard's batch
 //! worker, which is the only thread that runs the engine's shadow path)
 //! and any number of readers (`stats` scrapes). The writer updates
-//! mean/m2 first and publishes the new count last, so readers see either
-//! the previous consistent triple or a slightly torn one — acceptable for
-//! approximate telemetry, exactly like the rotating latency windows. If
-//! multiple writers ever race (standalone engines driven from several
-//! threads), updates are lost but never corrupted: every field is a whole
-//! atomic word.
+//! mean/m2 first and publishes the new count last — and on an epoch
+//! rollover zeroes the moments before publishing the new stamp — so
+//! readers see either the previous consistent triple or a slightly torn
+//! one — acceptable for approximate telemetry, exactly like the rotating
+//! latency windows. If multiple writers ever race (standalone engines
+//! driven from several threads), updates are lost but never corrupted:
+//! every field is a whole atomic word.
 
 use crate::rounding::SchemeId;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,13 +43,23 @@ pub const MODEL_SLOTS: usize = 4;
 /// Highest tracked quantizer bit width (matches the servable `k` range).
 pub const MAX_K: u32 = 16;
 
+/// Rotating epoch cells per label: a measurement stays live for this many
+/// epochs after the one it was recorded in, then ages out — the same
+/// window depth as the coordinator's recent-latency slots, so the
+/// measured-MSE and measured-latency views of a configuration go stale
+/// together.
+pub const EPOCH_SLOTS: usize = 6;
+
 /// Number of registered rounding schemes (every zoo scheme gets cells).
 const SCHEMES: usize = SchemeId::COUNT;
 
 /// One Welford accumulator: count, running mean, and the sum of squared
-/// deviations (`m2`), each stored as a whole atomic word (f64 bits).
+/// deviations (`m2`), each stored as a whole atomic word (f64 bits), plus
+/// the epoch stamp that scopes its lifetime.
 #[derive(Debug)]
 struct Cell {
+    /// Epoch this cell was last (re)started in; 0 = never written.
+    epoch: AtomicU64,
     n: AtomicU64,
     mean: AtomicU64,
     m2: AtomicU64,
@@ -45,6 +68,7 @@ struct Cell {
 impl Cell {
     fn new() -> Cell {
         Cell {
+            epoch: AtomicU64::new(0),
             n: AtomicU64::new(0),
             mean: AtomicU64::new(0),
             m2: AtomicU64::new(0),
@@ -107,9 +131,13 @@ impl FidelityEstimate {
     }
 }
 
-/// One shard's fidelity table: a Welford cell per `(model, scheme, k)`.
+/// One shard's fidelity table: [`EPOCH_SLOTS`] rotating Welford cells per
+/// `(model, scheme, k)`.
 #[derive(Debug)]
 pub struct FidelityShard {
+    /// Current epoch (starts at 1 so a stamp of 0 always means "never
+    /// written"); advanced monotonically by [`FidelityShard::advance_epoch`].
+    epoch: AtomicU64,
     cells: Vec<Cell>,
 }
 
@@ -123,31 +151,57 @@ impl FidelityShard {
     /// Fresh zeroed table covering the full bounded label space.
     pub fn new() -> FidelityShard {
         FidelityShard {
-            cells: (0..MODEL_SLOTS * SCHEMES * MAX_K as usize)
+            epoch: AtomicU64::new(1),
+            cells: (0..MODEL_SLOTS * SCHEMES * MAX_K as usize * EPOCH_SLOTS)
                 .map(|_| Cell::new())
                 .collect(),
         }
     }
 
-    /// Flat cell index; `None` when the label is outside the bounded
-    /// space (unknown model slot or unservable bit width).
+    /// Flat index of a label's first epoch cell; `None` when the label is
+    /// outside the bounded space (unknown model slot or unservable bit
+    /// width).
     fn index(model: usize, mode: SchemeId, k: u32) -> Option<usize> {
         if model >= MODEL_SLOTS || !(1..=MAX_K).contains(&k) {
             return None;
         }
-        Some(
-            model * SCHEMES * MAX_K as usize + mode.slot() * MAX_K as usize + (k - 1) as usize,
-        )
+        let label =
+            model * SCHEMES * MAX_K as usize + mode.slot() * MAX_K as usize + (k - 1) as usize;
+        Some(label * EPOCH_SLOTS)
+    }
+
+    /// Advance the shard's epoch to `now_epoch` (monotonic — an older
+    /// value is ignored). The serving metrics call this on their
+    /// wall-clock cadence; standalone engines that never call it keep the
+    /// initial epoch and age nothing out.
+    pub fn advance_epoch(&self, now_epoch: u64) {
+        self.epoch.fetch_max(now_epoch.max(1), Ordering::Relaxed);
+    }
+
+    /// The shard's current epoch (test/telemetry visibility).
+    pub fn current_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
     }
 
     /// Record one shadow-sampled logit error (quantized − exact) for the
     /// configuration. Out-of-space labels are dropped silently (the label
     /// space is bounded by construction; this is a belt-and-braces guard).
     pub fn record(&self, model: usize, mode: SchemeId, k: u32, err: f64) {
-        let Some(i) = FidelityShard::index(model, mode, k) else {
+        let Some(base) = FidelityShard::index(model, mode, k) else {
             return;
         };
-        let cell = &self.cells[i];
+        let e = self.epoch.load(Ordering::Relaxed);
+        let cell = &self.cells[base + (e % EPOCH_SLOTS as u64) as usize];
+        if cell.epoch.load(Ordering::Relaxed) != e {
+            // The slot last served an aged-out epoch: zero the moments
+            // first, publish the new stamp last, so a reader that sees the
+            // new stamp also sees the reset (or later single-writer
+            // updates under it) — never stale moments under a fresh stamp.
+            cell.mean.store(0, Ordering::Relaxed);
+            cell.m2.store(0, Ordering::Relaxed);
+            cell.n.store(0, Ordering::Release);
+            cell.epoch.store(e, Ordering::Release);
+        }
         let n = cell.n.load(Ordering::Relaxed);
         let mean = f64::from_bits(cell.mean.load(Ordering::Relaxed));
         let m2 = f64::from_bits(cell.m2.load(Ordering::Relaxed));
@@ -162,24 +216,103 @@ impl FidelityShard {
         cell.n.store(n1, Ordering::Release);
     }
 
-    /// Snapshot one cell (approximate under concurrent writes; see the
-    /// module docs).
+    /// Snapshot one label: the parallel-Welford fold of its live epoch
+    /// cells (approximate under concurrent writes; see the module docs).
     pub fn estimate(&self, model: usize, mode: SchemeId, k: u32) -> FidelityEstimate {
-        let Some(i) = FidelityShard::index(model, mode, k) else {
-            return FidelityEstimate::default();
+        let mut out = FidelityEstimate::default();
+        let Some(base) = FidelityShard::index(model, mode, k) else {
+            return out;
         };
-        let cell = &self.cells[i];
-        let n = cell.n.load(Ordering::Acquire);
-        FidelityEstimate {
-            samples: n,
-            bias: f64::from_bits(cell.mean.load(Ordering::Relaxed)),
-            m2: f64::from_bits(cell.m2.load(Ordering::Relaxed)),
+        let now = self.epoch.load(Ordering::Relaxed);
+        for cell in &self.cells[base..base + EPOCH_SLOTS] {
+            let e = cell.epoch.load(Ordering::Acquire);
+            if e == 0 || now.saturating_sub(e) >= EPOCH_SLOTS as u64 {
+                continue; // never written, or aged out of the live window
+            }
+            let n = cell.n.load(Ordering::Acquire);
+            out.merge(&FidelityEstimate {
+                samples: n,
+                bias: f64::from_bits(cell.mean.load(Ordering::Relaxed)),
+                m2: f64::from_bits(cell.m2.load(Ordering::Relaxed)),
+            });
+        }
+        out
+    }
+
+    /// Total live logit errors recorded across every cell.
+    pub fn total_samples(&self) -> u64 {
+        let now = self.epoch.load(Ordering::Relaxed);
+        self.cells
+            .iter()
+            .filter(|c| {
+                let e = c.epoch.load(Ordering::Acquire);
+                e != 0 && now.saturating_sub(e) < EPOCH_SLOTS as u64
+            })
+            .map(|c| c.n.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+/// A point-in-time snapshot of a whole fidelity table — one
+/// [`FidelityEstimate`] per `(model, scheme, k)` label — mergeable across
+/// shards. This is what the auto controller prices candidates against: a
+/// plain value with no atomics, so a choice replayed against the same
+/// table is bit-for-bit reproducible.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EstimateTable {
+    cells: Vec<FidelityEstimate>,
+}
+
+impl Default for EstimateTable {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl EstimateTable {
+    /// A table with every label empty (cold — every candidate prices at
+    /// its prior).
+    pub fn empty() -> EstimateTable {
+        EstimateTable {
+            cells: vec![FidelityEstimate::default(); MODEL_SLOTS * SCHEMES * MAX_K as usize],
         }
     }
 
-    /// Total logit errors recorded across every cell.
+    /// Snapshot one shard's live estimates.
+    pub fn from_shard(shard: &FidelityShard) -> EstimateTable {
+        let mut table = EstimateTable::empty();
+        table.merge_shard(shard);
+        table
+    }
+
+    /// Fold another shard's live estimates in (parallel Welford per
+    /// label) — the per-process merged view is the fold over all shards.
+    pub fn merge_shard(&mut self, shard: &FidelityShard) {
+        for model in 0..MODEL_SLOTS {
+            for mode in SchemeId::ALL {
+                for k in 1..=MAX_K {
+                    let i = model * SCHEMES * MAX_K as usize
+                        + mode.slot() * MAX_K as usize
+                        + (k - 1) as usize;
+                    self.cells[i].merge(&shard.estimate(model, mode, k));
+                }
+            }
+        }
+    }
+
+    /// The estimate for one label (empty for out-of-space labels).
+    pub fn get(&self, model: usize, mode: SchemeId, k: u32) -> FidelityEstimate {
+        if model >= MODEL_SLOTS || !(1..=MAX_K).contains(&k) {
+            return FidelityEstimate::default();
+        }
+        let i =
+            model * SCHEMES * MAX_K as usize + mode.slot() * MAX_K as usize + (k - 1) as usize;
+        self.cells[i].clone()
+    }
+
+    /// Total samples across every label.
     pub fn total_samples(&self) -> u64 {
-        self.cells.iter().map(|c| c.n.load(Ordering::Relaxed)).sum()
+        self.cells.iter().map(|c| c.samples).sum()
     }
 }
 
@@ -254,5 +387,66 @@ mod tests {
         let mut empty = FidelityEstimate::default();
         empty.merge(&direct);
         assert_eq!(empty, direct);
+    }
+
+    #[test]
+    fn epochs_age_out_stale_measurements() {
+        let shard = FidelityShard::new();
+        shard.record(0, SchemeId::Dither, 4, 2.0);
+        assert_eq!(shard.estimate(0, SchemeId::Dither, 4).samples, 1);
+        // Still live at the edge of the window…
+        shard.advance_epoch(EPOCH_SLOTS as u64);
+        assert_eq!(shard.estimate(0, SchemeId::Dither, 4).samples, 1);
+        // …gone one epoch past it, for both the label and the totals.
+        shard.advance_epoch(EPOCH_SLOTS as u64 + 1);
+        assert_eq!(shard.estimate(0, SchemeId::Dither, 4).samples, 0);
+        assert_eq!(shard.total_samples(), 0);
+        // A fresh recording in the new epoch reclaims the slot: only the
+        // new data folds, with no residue of the aged-out moments.
+        shard.record(0, SchemeId::Dither, 4, -1.0);
+        let est = shard.estimate(0, SchemeId::Dither, 4);
+        assert_eq!((est.samples, est.bias), (1, -1.0));
+    }
+
+    #[test]
+    fn live_epochs_fold_together_and_epoch_is_monotonic() {
+        let shard = FidelityShard::new();
+        let errs: Vec<f64> = (0..40).map(|i| (i as f64 * 0.31).cos()).collect();
+        // Spread the recordings over 4 adjacent epochs.
+        for (i, &e) in errs.iter().enumerate() {
+            shard.advance_epoch(1 + (i / 10) as u64);
+            shard.record(0, SchemeId::Gauss, 3, e);
+        }
+        // Retreating the clock is ignored (monotonic epochs).
+        shard.advance_epoch(1);
+        assert_eq!(shard.current_epoch(), 4);
+        let est = shard.estimate(0, SchemeId::Gauss, 3);
+        assert_eq!(est.samples, errs.len() as u64);
+        let mean: f64 = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!((est.bias - mean).abs() < 1e-9, "{} vs {mean}", est.bias);
+    }
+
+    #[test]
+    fn estimate_table_snapshots_and_merges_shards() {
+        let a = FidelityShard::new();
+        let b = FidelityShard::new();
+        for i in 0..50 {
+            let e = (i as f64 * 0.13).sin();
+            if i % 2 == 0 {
+                a.record(1, SchemeId::Sr2, 6, e);
+            } else {
+                b.record(1, SchemeId::Sr2, 6, e);
+            }
+        }
+        let mut table = EstimateTable::from_shard(&a);
+        table.merge_shard(&b);
+        let mut direct = a.estimate(1, SchemeId::Sr2, 6);
+        direct.merge(&b.estimate(1, SchemeId::Sr2, 6));
+        assert_eq!(table.get(1, SchemeId::Sr2, 6), direct);
+        assert_eq!(table.total_samples(), 50);
+        // Out-of-space lookups answer empty, and an empty table is cold
+        // everywhere.
+        assert_eq!(table.get(MODEL_SLOTS, SchemeId::Sr2, 6).samples, 0);
+        assert_eq!(EstimateTable::empty().total_samples(), 0);
     }
 }

@@ -15,14 +15,24 @@
 //!   per-logit errors by the engine's shadow path and merged across
 //!   shards on every `stats` scrape;
 //! * [`controller`] — the **adaptive precision controller** behind the
-//!   `"scheme":"auto"` request mode: given a `max_mse` budget it picks
-//!   the cheapest `(scheme, k)` whose measured MSE meets it, falling back
-//!   to a paper-shape prior until enough shadow samples accrue.
+//!   `"scheme":"auto"` request mode: given a `max_mse` error budget, a
+//!   `max_latency_us` latency budget, or both, it walks candidates in
+//!   measured recent-latency order (static cost order as the cold-start
+//!   tiebreak) and picks the first `(scheme, k)` meeting every budget,
+//!   falling back to a paper-shape prior until enough shadow samples
+//!   accrue. Estimator cells rotate over wall-clock epochs so a workload
+//!   shift can't leave stale errors dominating, and every shard of one
+//!   process resolves against a periodically merged [`AutoView`] snapshot.
 
 pub mod controller;
 pub mod estimator;
 pub mod sampler;
 
-pub use controller::{choose, predicted_mse, prior_mse, AutoChoice, MIN_SAMPLES};
-pub use estimator::{FidelityEstimate, FidelityShard, MAX_K, MODEL_SLOTS};
+pub use controller::{
+    choose, choose_slo, predicted_mse, prior_mse, AutoChoice, AutoSnapshot, AutoView,
+    LatencyView, SloBudget, LATENCY_MIN_SAMPLES, MIN_SAMPLES,
+};
+pub use estimator::{
+    EstimateTable, FidelityEstimate, FidelityShard, EPOCH_SLOTS, MAX_K, MODEL_SLOTS,
+};
 pub use sampler::ShadowSampler;

@@ -399,8 +399,11 @@ fn prop_protocol_auto_request_roundtrip() {
 #[test]
 fn prop_protocol_auto_and_k_zero_shapes_accepted_exactly() {
     // The auto-request acceptance surface: `"scheme":"auto"` (k optional
-    // and ignored) and `"k":0` (scheme ignored) both require a positive
-    // finite max_mse; everything else follows the fixed-request rules.
+    // and ignored) and `"k":0` (scheme ignored) both require at least one
+    // budget — a positive finite max_mse, a positive integral
+    // max_latency_us, or both — and every present budget must be valid;
+    // everything else follows the fixed-request rules (budget fields
+    // ignored).
     use dither::coordinator::{parse_message, Message};
     const K_SPELL: [&str; 4] = ["", "\"k\":0,", "\"k\":4,", "\"k\":99,"];
     const SCHEME_SPELL: [&str; 3] = ["auto", "dither", "fuzzy"];
@@ -411,31 +414,48 @@ fn prop_protocol_auto_and_k_zero_shapes_accepted_exactly() {
         "\"max_mse\":0.25,",
         "\"max_mse\":1e999,",
     ];
+    const LATENCY_SPELL: [&str; 4] = [
+        "",
+        "\"max_latency_us\":2500,",
+        "\"max_latency_us\":0,",
+        "\"max_latency_us\":-3,",
+    ];
     check(
         &Pair(
             Pair(RangeUsize { lo: 0, hi: 3 }, RangeUsize { lo: 0, hi: 2 }),
-            RangeUsize { lo: 0, hi: 4 },
+            Pair(RangeUsize { lo: 0, hi: 4 }, RangeUsize { lo: 0, hi: 3 }),
         ),
-        |&((k_kind, scheme_kind), budget_kind)| {
+        |&((k_kind, scheme_kind), (budget_kind, lat_kind))| {
             let pixels = vec!["0.5"; 784].join(",");
             let line = format!(
-                "{{\"id\":9,{}{}\"scheme\":\"{}\",\"pixels\":[{}]}}",
-                K_SPELL[k_kind], BUDGET_SPELL[budget_kind], SCHEME_SPELL[scheme_kind], pixels
+                "{{\"id\":9,{}{}{}\"scheme\":\"{}\",\"pixels\":[{}]}}",
+                K_SPELL[k_kind],
+                BUDGET_SPELL[budget_kind],
+                LATENCY_SPELL[lat_kind],
+                SCHEME_SPELL[scheme_kind],
+                pixels
             );
             let auto = scheme_kind == 0 || k_kind == 1;
             let should_parse = if auto {
-                budget_kind == 3 // a positive finite budget is required
+                // Every present budget must be valid, and at least one
+                // axis must be present (a budget-less auto has no
+                // resolvable meaning).
+                let mse_ok = budget_kind == 0 || budget_kind == 3;
+                let lat_ok = lat_kind == 0 || lat_kind == 1;
+                mse_ok && lat_ok && (budget_kind == 3 || lat_kind == 1)
             } else {
                 // Fixed request: k must be present and in range, and the
-                // scheme spelling valid; the budget field is ignored.
+                // scheme spelling valid; the budget fields are ignored.
                 k_kind == 2 && scheme_kind == 1
             };
             match parse_message(&line) {
                 Ok(Message::Infer(r)) => {
                     should_parse
                         && r.auto == auto
-                        && (!auto || r.max_mse == Some(0.25))
-                        && (auto || (r.k == 4 && r.max_mse.is_none()))
+                        && (!auto || r.max_mse == (budget_kind == 3).then_some(0.25))
+                        && (!auto || r.max_latency_us == (lat_kind == 1).then_some(2500))
+                        && (auto
+                            || (r.k == 4 && r.max_mse.is_none() && r.max_latency_us.is_none()))
                 }
                 Ok(_) => false,
                 Err(_) => !should_parse,
@@ -461,6 +481,7 @@ fn prop_protocol_response_shapes_echo_their_id() {
         batch: usize,
         shard: usize,
         auto: bool,
+        measured: bool,
         kind: usize,
     }
     impl Gen for RespGen {
@@ -475,6 +496,7 @@ fn prop_protocol_response_shapes_echo_their_id() {
                 batch: 1 + rng.below(64) as usize,
                 shard: rng.below(16) as usize,
                 auto: rng.bernoulli(0.5),
+                measured: rng.bernoulli(0.5),
                 kind: rng.below(3) as usize,
             }
         }
@@ -486,6 +508,7 @@ fn prop_protocol_response_shapes_echo_their_id() {
                 let logits: Vec<f64> = (0..10).map(|j| c.id as f64 * 0.5 + j as f64).collect();
                 format_response(
                     c.id, c.pred, mode, c.k, &logits, c.latency, c.batch, c.shard, c.auto,
+                    c.measured,
                 )
             }
             1 => format_error(c.id, "some \"quoted\" failure\nwith newline", false),
@@ -506,6 +529,10 @@ fn prop_protocol_response_shapes_echo_their_id() {
                     && parsed.get("batch").and_then(Json::as_f64) == Some(c.batch as f64)
                     && parsed.get("shard").and_then(Json::as_f64) == Some(c.shard as f64)
                     && parsed.get("auto").and_then(Json::as_bool) == c.auto.then_some(true)
+                    // "measured" only ever rides an auto reply: the
+                    // non-auto wire shape is frozen.
+                    && parsed.get("measured").and_then(Json::as_bool)
+                        == (c.auto && c.measured).then_some(true)
                     && parsed.get("error").is_none()
             }
             1 => {
@@ -616,6 +643,7 @@ fn prop_protocol_any_response_permutation_reassembles_by_id() {
                         i as u64 * 7 + 1,
                         1,
                         0,
+                        false,
                         false,
                     ),
                     1 => format_error(id, &format!("err-{i}"), i % 2 == 0),

@@ -38,6 +38,13 @@
 //! `"measured": true` — proof the server priced them against live
 //! latency windows rather than the static cost walk.
 //!
+//! `--watch` opens a live `{"cmd":"watch"}` subscription before driving
+//! traffic and reports what it streamed; `--expect-events` additionally
+//! fails the run unless the stream was well-formed (strictly increasing
+//! sequence numbers) and carried at least one `alert_fired` event —
+//! pair it with a server started under a breachable SLO
+//! (`--slo-p99-us 1 --slo-eval-ms 100`).
+//!
 //! `--proxy` drives a cluster front tier instead of a single server: the
 //! per-connection shard-stability check is skipped (the proxy routes each
 //! request by its configuration key, so one connection's replies come
@@ -55,8 +62,12 @@
 //! same cached zoo weights; with matching `--train-n`/`--seed` it retrains
 //! identical weights even without the cache).
 
-use dither::coordinator::{format_request, format_request_auto_slo, wait_ready, Engine};
+use dither::coordinator::{
+    format_request, format_request_auto_slo, format_watch, parse_watch_ack, wait_ready, Engine,
+    WatchQuery,
+};
 use dither::data::{Dataset, Task};
+use dither::obs::{parse_event_line, Event, EventKind};
 use dither::rounding::SchemeId;
 use dither::util::cli::Args;
 use dither::util::error::Result;
@@ -64,8 +75,8 @@ use dither::util::json::Json;
 use std::collections::{HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Every registered scheme: cycling through this drives at least one
@@ -124,6 +135,8 @@ fn main() -> Result<()> {
     let expect_traces = args.flag("expect-traces");
     let expect_auto_slo = args.flag("expect-auto-slo");
     let scrape_metrics = args.flag("scrape-metrics");
+    let expect_events = args.flag("expect-events");
+    let watch = args.flag("watch") || expect_events;
     let pipelined = args.flag("pipelined");
     let proxy = args.flag("proxy");
     let backends: Vec<String> = args.parse_list_or("backends", Vec::new());
@@ -134,6 +147,11 @@ fn main() -> Result<()> {
         eprintln!("FAIL: server at {addr} never became ready");
         std::process::exit(1);
     }
+
+    // The watcher subscribes before any traffic so SLO alerts fired by
+    // the run itself are guaranteed to be in-stream (delivery starts at
+    // the next published event; there is no replay).
+    let watcher = if watch { Some(start_watcher(&addr)?) } else { None };
 
     println!("load_gen: building reference engine (train_n={train_n}, seed={seed}) ...");
     let reference = Engine::new(train_n, seed);
@@ -366,8 +384,140 @@ fn main() -> Result<()> {
             text.len()
         );
     }
+    // --watch / --expect-events: tear the subscription down and check
+    // what it streamed. The alert may fire a tick or two after the last
+    // request completes, so --expect-events waits bounded for it.
+    if let Some(w) = watcher {
+        if expect_events {
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while Instant::now() < deadline {
+                let fired = w
+                    .events
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .any(|e| e.kind == EventKind::AlertFired);
+                if fired {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+        w.stop.store(true, Ordering::Relaxed);
+        let _ = w.handle.join();
+        let events = w.events.lock().unwrap();
+        println!(
+            "watch: subscription {} streamed {} events",
+            w.watch_id,
+            events.len()
+        );
+        if expect_events {
+            if events.is_empty() {
+                eprintln!(
+                    "FAIL: --expect-events streamed nothing — was the server \
+                     started with a breachable SLO (--slo-p99-us 1 --slo-eval-ms 100)?"
+                );
+                std::process::exit(1);
+            }
+            if !events.windows(2).all(|p| p[0].seq < p[1].seq) {
+                eprintln!("FAIL: event stream sequence numbers are not strictly increasing");
+                std::process::exit(1);
+            }
+            if !events.iter().any(|e| e.kind == EventKind::AlertFired) {
+                eprintln!(
+                    "FAIL: --expect-events requires an alert_fired event; kinds seen: {:?}",
+                    events
+                        .iter()
+                        .map(|e| e.kind.wire_name())
+                        .collect::<HashSet<_>>()
+                );
+                std::process::exit(1);
+            }
+            println!("watch: stream well-formed, SLO alert observed");
+        }
+    }
     println!("PASS: {done} mixed-scheme requests, zero incorrect replies");
     Ok(())
+}
+
+/// A live watch subscription: the subscribing connection's drain thread
+/// plus the events it has collected so far.
+struct Watcher {
+    stop: Arc<AtomicBool>,
+    events: Arc<Mutex<Vec<Event>>>,
+    handle: std::thread::JoinHandle<()>,
+    watch_id: u64,
+}
+
+/// Subscribe to everything the server (or proxy) journals and collect
+/// the stream on a background thread until stopped.
+fn start_watcher(addr: &str) -> Result<Watcher> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "{}", format_watch(&WatchQuery::default()))?;
+    writer.flush()?;
+    let mut line = String::new();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let watch_id = loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Err("watch connection closed before the ack".to_string().into()),
+            Ok(_) => {
+                break parse_watch_ack(line.trim())
+                    .map_err(|e| format!("bad watch ack: {e}"))?
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if Instant::now() > deadline {
+                    return Err("watch ack timed out".to_string().into());
+                }
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let events = Arc::new(Mutex::new(Vec::new()));
+    let (stop2, events2) = (stop.clone(), events.clone());
+    let handle = std::thread::spawn(move || {
+        let mut line = String::new();
+        while !stop2.load(Ordering::Relaxed) {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) => break,
+                Ok(_) => {
+                    if let Some((_, ev)) = parse_event_line(&line) {
+                        events2.lock().unwrap().push(ev);
+                    }
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(Watcher {
+        stop,
+        events,
+        handle,
+        watch_id,
+    })
 }
 
 /// One lockstep request/reply exchange, parsed.

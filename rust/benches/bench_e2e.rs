@@ -9,7 +9,10 @@
 //! smoke run). Results are written to `results/bench_e2e.json`.
 
 use dither::cluster::{run_proxy, ProxyConfig};
-use dither::coordinator::{format_request, ping, serve, wait_ready, Engine, ServerConfig};
+use dither::coordinator::{
+    format_request, format_watch, parse_watch_ack, ping, serve, wait_ready, Engine, ServerConfig,
+    WatchQuery,
+};
 use dither::data::{Dataset, Task};
 use dither::fidelity::{
     choose_slo, FidelityShard, LatencyView, SloBudget, LATENCY_MIN_SAMPLES,
@@ -21,6 +24,7 @@ use dither::util::json::Json;
 use dither::util::threadpool::num_threads;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -386,6 +390,56 @@ fn main() {
         ),
     ]));
 
+    // ---- watch subscription overhead -----------------------------------
+    // The same pipelined serving shape with N live `{"cmd":"watch"}`
+    // subscriptions attached and a deliberately breaching SLO evaluator
+    // publishing burn-rate events throughout. Events are control-plane
+    // transitions, not per-request records, so subscribers must sit within
+    // noise of the unwatched run — the acceptance bound is < 5% at one
+    // subscriber.
+    let mut watch_meas: Vec<(usize, f64)> = Vec::new();
+    for (port, subs) in [(18021u16, 0usize), (18022, 1), (18023, 8)] {
+        let rps = watched_throughput(port, k_shards, clients, requests, &ds, window, subs);
+        let name = format!(
+            "e2e/watch_overhead/subscribers={subs}/shards={k_shards}/k=4/dither/window={window}"
+        );
+        println!(
+            "{name:<56} {:>12}/s  ({requests} reqs, {clients} clients)",
+            format_count(rps)
+        );
+        watch_meas.push((subs, rps));
+        serving.push(Json::obj(vec![
+            ("name", Json::Str(name)),
+            ("watch_subscribers", Json::Num(subs as f64)),
+            ("shards", Json::Num(k_shards as f64)),
+            ("requests", Json::Num(requests as f64)),
+            ("clients", Json::Num(clients as f64)),
+            ("window", Json::Num(window as f64)),
+            ("items_per_s", Json::Num(rps)),
+        ]));
+    }
+    let watch_base = watch_meas[0].1;
+    if watch_base > 0.0 {
+        println!(
+            "watch overhead: 1 subscriber at {:.3}x of none, 8 subscribers at {:.3}x",
+            watch_meas[1].1 / watch_base,
+            watch_meas[2].1 / watch_base
+        );
+    }
+    serving.push(Json::obj(vec![
+        (
+            "name",
+            Json::Str(format!("e2e/watch_overhead_ratio/shards={k_shards}")),
+        ),
+        ("subs0_items_per_s", Json::Num(watch_base)),
+        ("subs1_items_per_s", Json::Num(watch_meas[1].1)),
+        ("subs8_items_per_s", Json::Num(watch_meas[2].1)),
+        (
+            "subs1_ratio",
+            Json::Num(if watch_base > 0.0 { watch_meas[1].1 / watch_base } else { 0.0 }),
+        ),
+    ]));
+
     // ---- proxy over 2 backends vs direct -------------------------------
     // Same mixed-key workload (k ∈ {2,4,8} per client, so the hash ring
     // actually spreads keys over both backends) against (a) one direct
@@ -513,6 +567,10 @@ fn server_cfg(addr: &str, shards: usize) -> ServerConfig {
         trace_rate: 0.0,
         trace_slow_us: 0,
         trace_buffer: 256,
+        slo_p99_us: 0,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 0,
     }
 }
 
@@ -602,6 +660,10 @@ fn serving_throughput(
         // Big enough that ring eviction churn is part of the measured
         // cost, small enough to stay bounded at rate 1.0.
         trace_buffer: 1_024,
+        slo_p99_us: 0,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 0,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 
@@ -667,6 +729,142 @@ fn serving_throughput(
     writeln!(writer, "{{\"cmd\":\"shutdown\"}}").expect("shutdown");
     let mut line = String::new();
     let _ = reader.read_line(&mut line);
+    server.join().expect("server thread").expect("server exits cleanly");
+
+    (per_client * clients) as f64 / elapsed
+}
+
+/// One live watch subscription against `addr`, drained on its own thread
+/// until `stop` flips. The ack is awaited synchronously, so the
+/// subscription provably exists before the measured window starts.
+struct BenchWatcher {
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<u64>,
+}
+
+fn attach_watcher(addr: &str) -> BenchWatcher {
+    let stream = TcpStream::connect(addr).expect("watch connect");
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "{}", format_watch(&WatchQuery::default())).expect("subscribe");
+    // A read timeout can fire mid-line; read_line keeps accumulating into
+    // the same buffer until the full ack lands.
+    let mut line = String::new();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => panic!("watch connection closed before ack"),
+            Ok(_) => break,
+            Err(_) => assert!(Instant::now() < deadline, "watch ack never arrived"),
+        }
+    }
+    parse_watch_ack(line.trim()).expect("watch ack");
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        let mut events = 0u64;
+        let mut buf = String::new();
+        while !stop2.load(Ordering::Acquire) {
+            match reader.read_line(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => {
+                    events += 1;
+                    buf.clear();
+                }
+                Err(_) => {}
+            }
+        }
+        events
+    });
+    BenchWatcher { stop, handle }
+}
+
+/// Pipelined serving throughput with `watchers` live watch subscriptions
+/// attached and a deliberately breaching SLO evaluator (1 µs p99 budget)
+/// publishing events for the whole run — the live ops plane switched on.
+/// Same traffic discipline as [`serving_throughput`].
+#[allow(clippy::too_many_arguments)]
+fn watched_throughput(
+    port: u16,
+    shards: usize,
+    clients: usize,
+    requests: usize,
+    ds: &Dataset,
+    window: usize,
+    watchers: usize,
+) -> f64 {
+    let addr = format!("127.0.0.1:{port}");
+    let cfg = ServerConfig {
+        addr: addr.clone(),
+        shards,
+        max_batch: 32,
+        max_wait_us: 500,
+        queue_cap: 1024,
+        train_n: TRAIN_N,
+        seed: 7,
+        prewarm_bits: vec![4],
+        shadow_rate: 0.0,
+        plan_cache_mb: 64,
+        max_inflight: 64,
+        reply_timeout_ms: 120_000,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
+        // Unmeetable budget: the evaluator fires (and holds) the burn-rate
+        // alert under load, so watchers receive real event traffic.
+        slo_p99_us: 1,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 100,
+    };
+    let server = std::thread::spawn(move || serve(&cfg));
+    assert!(wait_ready(&addr, Duration::from_secs(120)), "watched server up");
+    let subs: Vec<BenchWatcher> = (0..watchers).map(|_| attach_watcher(&addr)).collect();
+
+    let per_client = requests.div_ceil(clients);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = addr.clone();
+            let img = ds.images.row(c % ds.len());
+            scope.spawn(move || {
+                let stream = TcpStream::connect(&addr).expect("connect");
+                stream.set_nodelay(true).ok();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let req = format_request(c as u64, "digits_linear", 4, SchemeId::Dither, img);
+                let mut line = String::new();
+                let mut sent = 0usize;
+                let mut recvd = 0usize;
+                while recvd < per_client {
+                    while sent < per_client && sent - recvd < window {
+                        writeln!(writer, "{req}").expect("send");
+                        sent += 1;
+                    }
+                    writer.flush().expect("flush");
+                    line.clear();
+                    reader.read_line(&mut line).expect("recv");
+                    assert!(!line.contains("\"error\""), "{line}");
+                    recvd += 1;
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut delivered = 0u64;
+    for watcher in subs {
+        watcher.stop.store(true, Ordering::Release);
+        delivered += watcher.handle.join().expect("watcher thread");
+    }
+    if watchers > 0 {
+        println!(
+            "watch_overhead subscribers={watchers}: {delivered} event lines delivered during the run"
+        );
+    }
+    shutdown_addr(&addr);
     server.join().expect("server thread").expect("server exits cleanly");
 
     (per_client * clients) as f64 / elapsed

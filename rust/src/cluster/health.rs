@@ -19,6 +19,8 @@
 //! live member and return home on mark-up (minimal remapping both ways).
 
 use crate::cluster::backend::Backend;
+use crate::obs::{EventKind, Journal, Severity};
+use crate::util::rng::{counter_hash, u64_to_unit_f64};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -44,19 +46,44 @@ impl Default for HealthPolicy {
     }
 }
 
+/// Deterministic probe jitter: scale `base` by a factor in `[0.75, 1.25)`
+/// derived from a counter hash, so a fleet of proxies (or one proxy's
+/// backends after a mass outage) never converges on synchronized probe
+/// storms. Counter-hash derivation keeps runs reproducible — the same
+/// `(seed, probe index)` always yields the same schedule.
+fn jittered(base: Duration, seed: u64, counter: u64) -> Duration {
+    let unit = u64_to_unit_f64(counter_hash(seed, counter));
+    base.mul_f64(0.75 + 0.5 * unit)
+}
+
+/// Hash seed for probe jitter; arbitrary but fixed so schedules are
+/// stable across restarts.
+const JITTER_SEED: u64 = 0x6a69_7474_6572; // "jitter"
+
 /// Run the monitor until `stop` is set: probe each backend on its own
 /// schedule, mark up/down, and back off on failures. Blocks — the proxy
-/// runs it on a dedicated thread.
-pub fn health_loop(backends: &[Arc<Backend>], policy: &HealthPolicy, stop: &AtomicBool) {
+/// runs it on a dedicated thread. Mark-down/mark-up transitions are
+/// published to `journal` ([`EventKind::BackendDown`] /
+/// [`EventKind::BackendUp`]) when one is supplied.
+pub fn health_loop(
+    backends: &[Arc<Backend>],
+    policy: &HealthPolicy,
+    stop: &AtomicBool,
+    journal: Option<&Journal>,
+) {
     let interval = policy.interval.max(Duration::from_millis(10));
     let mut next = vec![Instant::now(); backends.len()];
     let mut backoff = vec![interval; backends.len()];
+    // Per-backend probe counters feed the jitter hash; offsetting by the
+    // backend index de-phases the very first rescheduling too.
+    let mut probes: Vec<u64> = (0..backends.len() as u64).collect();
     while !stop.load(Ordering::Acquire) {
         let now = Instant::now();
         for (i, backend) in backends.iter().enumerate() {
             if now < next[i] {
                 continue;
             }
+            probes[i] = probes[i].wrapping_add(backends.len() as u64);
             if backend.fetch_stats().is_some() && backend.ensure_connected() {
                 let was_down = !backend.is_healthy();
                 backend.mark_up();
@@ -66,9 +93,19 @@ pub fn health_loop(backends: &[Arc<Backend>], policy: &HealthPolicy, stop: &Atom
                         backend.id(),
                         backend.addr()
                     );
+                    if let Some(journal) = journal {
+                        journal.publish(
+                            Severity::Info,
+                            EventKind::BackendUp,
+                            &[
+                                ("backend", &backend.id().to_string()),
+                                ("addr", backend.addr()),
+                            ],
+                        );
+                    }
                 }
                 backoff[i] = interval;
-                next[i] = now + interval;
+                next[i] = now + jittered(interval, JITTER_SEED, probes[i]);
             } else {
                 let was_up = backend.is_healthy();
                 backend.mark_down();
@@ -78,8 +115,18 @@ pub fn health_loop(backends: &[Arc<Backend>], policy: &HealthPolicy, stop: &Atom
                         backend.id(),
                         backend.addr()
                     );
+                    if let Some(journal) = journal {
+                        journal.publish(
+                            Severity::Warn,
+                            EventKind::BackendDown,
+                            &[
+                                ("backend", &backend.id().to_string()),
+                                ("addr", backend.addr()),
+                            ],
+                        );
+                    }
                 }
-                next[i] = now + backoff[i];
+                next[i] = now + jittered(backoff[i], JITTER_SEED, probes[i]);
                 backoff[i] = backoff[i].saturating_mul(2).min(policy.max_backoff.max(interval));
             }
         }
@@ -122,12 +169,41 @@ mod tests {
         };
         let stop2 = stop.clone();
         let list = backends.clone();
-        let monitor = std::thread::spawn(move || health_loop(&list, &policy, &stop2));
+        // Backends start down; pre-mark them up so the monitor's first
+        // failed probe is an up → down *transition* and hits the journal.
+        for b in &backends {
+            b.mark_up();
+        }
+        let journal = Arc::new(Journal::default());
+        let journal2 = journal.clone();
+        let monitor =
+            std::thread::spawn(move || health_loop(&list, &policy, &stop2, Some(&journal2)));
         std::thread::sleep(Duration::from_millis(150));
         stop.store(true, Ordering::Release);
         monitor.join().unwrap();
         for b in &backends {
             assert!(!b.is_healthy(), "unreachable backend must stay down");
         }
+        // Each backend was pre-marked up, so its first failed probe is a
+        // transition and must hit the journal exactly once.
+        let downs = journal
+            .recent(16)
+            .iter()
+            .filter(|e| e.kind == EventKind::BackendDown)
+            .count();
+        assert_eq!(downs, 2, "one BackendDown event per backend");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let base = Duration::from_millis(1_000);
+        for c in 0..64u64 {
+            let j = jittered(base, JITTER_SEED, c);
+            assert_eq!(j, jittered(base, JITTER_SEED, c), "same inputs, same jitter");
+            assert!(j >= Duration::from_millis(750), "floor is -25%: {j:?}");
+            assert!(j < Duration::from_millis(1_250), "ceiling is +25%: {j:?}");
+        }
+        // The whole point: consecutive probes do not share a schedule.
+        assert_ne!(jittered(base, JITTER_SEED, 1), jittered(base, JITTER_SEED, 2));
     }
 }

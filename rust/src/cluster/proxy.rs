@@ -58,16 +58,18 @@ use crate::cluster::health::{health_loop, HealthPolicy};
 use crate::cluster::ring::{HashRing, DEFAULT_REPLICAS};
 use crate::coordinator::metrics::{approx_sum_us, bucket_upper, percentile_from_buckets, BUCKETS};
 use crate::coordinator::protocol::{
-    format_error, format_hello, format_metrics_reply, format_overloaded, line_id, FidelityCell,
-    StatsSummary, TraceQuery,
+    format_error, format_hello, format_metrics_reply, format_overloaded, format_unwatch_ack,
+    format_watch, format_watch_ack, line_id, parse_message, parse_watch_ack, FidelityCell,
+    Message, StatsSummary, TraceQuery, WatchQuery, PROTO_VERSION,
 };
 use crate::coordinator::server::http_metrics_response;
+use crate::obs::{self, parse_event_line, Event, EventKind, Journal, Severity, Subscription};
 use crate::trace::{decode_wire, PromText, Stage, Trace, TraceConfig, Tracer};
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 use crate::util::threadpool::WorkerPool;
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader};
+use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -135,6 +137,14 @@ struct Cluster {
     /// The proxy tier's own tracer: route/forward/upstream-wait timelines
     /// land here (backends finish them on reply arrival).
     tracer: Arc<Tracer>,
+    /// The proxy's own event journal: local lifecycle and health events
+    /// plus every healthy backend's stream stitched in (each stitched
+    /// event tagged with its `backend` id). Cluster-level watches and the
+    /// merged alert gauges serve from here.
+    journal: Arc<Journal>,
+    /// Process start in Unix seconds, echoed as `start_time` in merged
+    /// stats (mirrors the backend tier).
+    start_unix: u64,
 }
 
 impl Cluster {
@@ -187,7 +197,21 @@ pub fn run_proxy(cfg: &ProxyConfig) -> Result<()> {
         flushed_lines: AtomicU64::new(0),
         flushes: AtomicU64::new(0),
         tracer,
+        journal: Arc::new(Journal::default()),
+        start_unix: std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0),
     });
+    cluster.journal.publish(
+        Severity::Info,
+        EventKind::ProcessStart,
+        &[
+            ("tier", "proxy"),
+            ("kernel", crate::kernels::active_id().name()),
+            ("backends", &cfg.backends.len().to_string()),
+        ],
+    );
     let policy = HealthPolicy {
         interval: Duration::from_millis(cfg.probe_interval_ms.max(10)),
         timeout: io_timeout,
@@ -198,7 +222,16 @@ pub fn run_proxy(cfg: &ProxyConfig) -> Result<()> {
         let cluster = cluster.clone();
         let stop = stop.clone();
         service.spawn("dither-proxy-health".to_string(), move || {
-            health_loop(&cluster.backends, &policy, &stop);
+            health_loop(&cluster.backends, &policy, &stop, Some(&cluster.journal));
+        });
+    }
+    // One stitcher per backend: a persistent watch subscription whose
+    // events land in the proxy journal tagged with the backend id, so a
+    // single cluster-level watch observes the whole fleet.
+    for idx in 0..cluster.backends.len() {
+        let cluster = cluster.clone();
+        service.spawn(format!("dither-proxy-watch-{idx}"), move || {
+            watch_stitch_loop(&cluster, idx);
         });
     }
     println!(
@@ -302,6 +335,117 @@ fn client_writer(stream: TcpStream, rx: Receiver<String>, alive: &AtomicBool, cl
     });
 }
 
+/// Stream-stitcher for one backend: while the backend is healthy, hold a
+/// dedicated watch subscription against it and re-publish everything it
+/// emits into the proxy's journal. A dead backend (or a dropped stream)
+/// is re-dialed once health probes mark it up again; the backend journal
+/// streams live events only (no replay), so a re-subscribe can never
+/// duplicate what an earlier session already stitched.
+fn watch_stitch_loop(cluster: &Cluster, idx: usize) {
+    let id_label = cluster.backends[idx].id().to_string();
+    while !cluster.stop.load(Ordering::Acquire) {
+        if !cluster.backends[idx].is_healthy() {
+            std::thread::sleep(Duration::from_millis(100));
+            continue;
+        }
+        if stitch_session(cluster, idx, &id_label).is_none() {
+            // The stream died while the proxy is still running: brief
+            // pause before the redial so a flapping backend is not
+            // hammered (health probes gate the retry anyway).
+            std::thread::sleep(Duration::from_millis(200));
+        }
+    }
+}
+
+/// One watch session against backend `idx`: dial, subscribe to every
+/// event, and stitch the stream until it dies (`None`) or the proxy
+/// stops (`Some(())`).
+fn stitch_session(cluster: &Cluster, idx: usize, id_label: &str) -> Option<()> {
+    use std::net::ToSocketAddrs;
+    let backend = &cluster.backends[idx];
+    let dial_timeout = Duration::from_secs(2);
+    let sock = backend.addr().to_socket_addrs().ok()?.next()?;
+    let stream = TcpStream::connect_timeout(&sock, dial_timeout).ok()?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(250)))
+        .ok()?;
+    let mut writer = stream.try_clone().ok()?;
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "{}", format_watch(&WatchQuery::default())).ok()?;
+    let mut line = String::new();
+    let mut acked = false;
+    let ack_deadline = Instant::now() + dial_timeout;
+    loop {
+        if cluster.stop.load(Ordering::Acquire) {
+            return Some(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return None,
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if !acked && Instant::now() > ack_deadline {
+                    return None; // backend never acked the subscription
+                }
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return None,
+        }
+        if !acked {
+            if parse_watch_ack(line.trim()).is_err() {
+                return None; // proto-3 backend or refused subscription
+            }
+            acked = true;
+            continue;
+        }
+        if let Some((_sub, event)) = parse_event_line(&line) {
+            stitch_event(cluster, id_label, event);
+        }
+    }
+}
+
+/// Fold one backend event into the proxy journal, tagged with its
+/// backend id. Backend alert transitions go through the proxy's own
+/// alert set instead of being copied verbatim: `set_alert` keeps the
+/// cluster-wide active set deduplicated per (alert, labels, backend) and
+/// publishes the proxy's own fired/cleared transition events, so a
+/// re-subscribed or flapping stream cannot double-fire a gauge.
+fn stitch_event(cluster: &Cluster, id_label: &str, mut event: Event) {
+    event
+        .labels
+        .insert("backend".to_string(), id_label.to_string());
+    match event.kind {
+        EventKind::AlertFired | EventKind::AlertCleared => {
+            let name = event
+                .labels
+                .get("alert")
+                .cloned()
+                .unwrap_or_else(|| "unknown".to_string());
+            let labels: Vec<(&str, &str)> = event
+                .labels
+                .iter()
+                .filter(|(k, _)| k.as_str() != "alert")
+                .map(|(k, v)| (k.as_str(), v.as_str()))
+                .collect();
+            cluster
+                .journal
+                .set_alert(&name, &labels, event.kind == EventKind::AlertFired);
+        }
+        _ => {
+            cluster
+                .journal
+                .publish_owned(event.severity, event.kind, event.labels);
+        }
+    }
+}
+
 /// Reader half: parse each line once, answer control locally, route
 /// inference upstream.
 fn client_read_loop(
@@ -312,9 +456,23 @@ fn client_read_loop(
 ) -> Result<()> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    // This connection's live cluster-level watch subscriptions; the
+    // channel to the writer is unbounded, so the pump below never blocks
+    // the reader.
+    let mut watches: Vec<Arc<Subscription>> = Vec::new();
+    let mut result: Result<()> = Ok(());
     loop {
         if !writer_alive.load(Ordering::Acquire) {
             break;
+        }
+        // Deliver pending stitched events; read-timeout ticks keep this
+        // pumping even on an idle connection.
+        for sub in &watches {
+            while let Some(event_line) = sub.pop() {
+                if tx.send(event_line).is_err() {
+                    break;
+                }
+            }
         }
         match reader.read_line(&mut line) {
             Ok(0) => break,
@@ -331,7 +489,10 @@ fn client_read_loop(
                 continue;
             }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e.into()),
+            Err(e) => {
+                result = Err(e.into());
+                break;
+            }
         }
         let trimmed = line.trim();
         if trimmed.is_empty() {
@@ -372,6 +533,47 @@ fn client_read_loop(
                 Some("stats") => tx.send(merged_stats_json(cluster)),
                 Some("trace") => tx.send(stitched_traces_json(cluster, &json)),
                 Some("metrics") => tx.send(format_metrics_reply(&proxy_metrics_text(cluster))),
+                // Cluster-level watches subscribe to the proxy journal:
+                // local lifecycle + health events plus every backend's
+                // stitched stream, one subscription for the whole fleet.
+                Some("watch") => match parse_message(trimmed) {
+                    Ok(Message::Watch(q)) => {
+                        let sub = cluster.journal.subscribe(
+                            q.severity.unwrap_or(Severity::Info),
+                            q.kinds,
+                            0,
+                        );
+                        let ack = format_watch_ack(sub.id());
+                        watches.push(sub);
+                        tx.send(ack)
+                    }
+                    Err(e) => {
+                        cluster.errors.fetch_add(1, Ordering::Relaxed);
+                        tx.send(format_error(0, &e, false))
+                    }
+                    Ok(_) => {
+                        cluster.errors.fetch_add(1, Ordering::Relaxed);
+                        tx.send(format_error(0, "bad watch line", false))
+                    }
+                },
+                Some("unwatch") => match parse_message(trimmed) {
+                    Ok(Message::Unwatch(id)) => {
+                        // Only this connection's own subscriptions can be
+                        // torn down.
+                        let removed = watches.iter().any(|s| s.id() == id)
+                            && cluster.journal.unsubscribe(id);
+                        watches.retain(|s| s.id() != id);
+                        tx.send(format_unwatch_ack(id, removed))
+                    }
+                    Err(e) => {
+                        cluster.errors.fetch_add(1, Ordering::Relaxed);
+                        tx.send(format_error(0, &e, false))
+                    }
+                    Ok(_) => {
+                        cluster.errors.fetch_add(1, Ordering::Relaxed);
+                        tx.send(format_error(0, "bad unwatch line", false))
+                    }
+                },
                 Some("shutdown") => {
                     cluster.stop.store(true, Ordering::Release);
                     stop = true;
@@ -396,7 +598,12 @@ fn client_read_loop(
             break;
         }
     }
-    Ok(())
+    // Tear down this connection's subscriptions on every exit path so
+    // the journal stops queueing events for a dead watcher.
+    for sub in &watches {
+        cluster.journal.unsubscribe(sub.id());
+    }
+    result
 }
 
 /// Schemes servable cluster-wide: the intersection of what every healthy
@@ -756,6 +963,14 @@ fn merged_stats_json(cluster: &Cluster) -> String {
             "writer_flushed_lines",
             Json::Num(cluster.flushed_lines.load(Ordering::Relaxed) as f64),
         ),
+        (
+            "events_published",
+            Json::Num(cluster.journal.published() as f64),
+        ),
+        (
+            "alerts_active",
+            Json::Num(cluster.journal.active_alerts().len() as f64),
+        ),
     ]);
     Json::obj(vec![
         ("kernel", Json::Str(kernel)),
@@ -782,6 +997,7 @@ fn merged_stats_json(cluster: &Cluster) -> String {
         ("auto_measured", Json::Num(total.auto_measured as f64)),
         ("fidelity", Json::Arr(fidelity)),
         ("uptime_s", Json::Num(total.uptime_s)),
+        ("start_time", Json::Num(cluster.start_unix as f64)),
         ("throughput_rps", Json::Num(throughput)),
         ("shards", Json::Num(total.shards as f64)),
         ("per_shard_requests", Json::nums(per_shard)),
@@ -1045,6 +1261,15 @@ fn proxy_metrics_text(cluster: &Cluster) -> String {
         cluster.tracer.resident() as f64,
     );
     p.stage_histograms(&cluster.tracer.stage_snapshots());
+    // The proxy journal's event/alert families (cluster-wide: stitched
+    // backend streams included) and the proxy's own build identity.
+    cluster.journal.append_prometheus(&mut p);
+    obs::append_build_info(
+        &mut p,
+        &format!("{}", PROTO_VERSION as u32),
+        crate::kernels::active_id().name(),
+        &crate::rounding::SchemeRegistry::global().wire_names().join(","),
+    );
     p.finish()
 }
 

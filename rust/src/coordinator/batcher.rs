@@ -51,6 +51,7 @@ use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::ShardMetrics;
 use crate::coordinator::protocol::{format_error, format_response, InferenceRequest};
 use crate::fidelity::{choose_slo, AutoChoice, AutoSnapshot, AutoView, SloBudget};
+use crate::obs::{EventKind, Journal, Severity};
 use crate::rounding::SchemeId;
 use crate::trace::{BatchStageTimes, Stage, TraceBuilder, Tracer};
 use crate::train::ModelSpec;
@@ -617,7 +618,12 @@ fn resolve_auto(
 /// spans here and finish into `tracer`. Auto batches resolve against the
 /// latest [`AutoView`] snapshot (merged across shards by the pool's
 /// refresher), so every worker of one process converges on the same view
-/// of measured latency and fidelity.
+/// of measured latency and fidelity. When a `journal` is installed, auto
+/// resolutions that move a model to a new `(scheme, k)` operating point
+/// publish a [`EventKind::SchemeSwitch`] event, and budget-infeasible
+/// resolutions bump the shard's `auto_infeasible` counter (the SLO
+/// evaluator turns movement there into events off the hot path).
+#[allow(clippy::too_many_arguments)]
 pub fn worker_loop(
     batcher: &Batcher,
     engine: &Engine,
@@ -626,7 +632,14 @@ pub fn worker_loop(
     auto_view: &AutoView,
     shard: usize,
     watchdog: Option<&ReplyWatchdog>,
+    journal: Option<&Journal>,
 ) {
+    // Per-worker memory of the last resolved operating point per model:
+    // scheme switches are detected here (no shared state, so two shards
+    // may each announce the same fleet-wide move — acceptable for an
+    // ops signal, free for the hot path).
+    let mut last_choice: std::collections::HashMap<String, (SchemeId, u32)> =
+        std::collections::HashMap::new();
     while let Some((key, mut batch)) = batcher.next_batch() {
         metrics.record_batch(batch.len());
         let size = batch.len();
@@ -645,6 +658,28 @@ pub fn worker_loop(
                         slo_members,
                         if measured { batch.len() as u64 } else { 0 },
                     );
+                    if !choice.feasible {
+                        metrics.record_auto_infeasible();
+                    }
+                    if let Some(journal) = journal {
+                        let prev = last_choice
+                            .insert(key.model.clone(), (choice.scheme, choice.k));
+                        if let Some((from_scheme, from_k)) = prev {
+                            if (from_scheme, from_k) != (choice.scheme, choice.k) {
+                                journal.publish(
+                                    Severity::Info,
+                                    EventKind::SchemeSwitch,
+                                    &[
+                                        ("model", &key.model),
+                                        ("from_scheme", from_scheme.wire_name()),
+                                        ("from_k", &from_k.to_string()),
+                                        ("to_scheme", choice.scheme.wire_name()),
+                                        ("to_k", &choice.k.to_string()),
+                                    ],
+                                );
+                            }
+                        }
+                    }
                     (choice.scheme, choice.k, measured)
                 }
                 Err(e) => {

@@ -61,6 +61,7 @@ struct PlanCache {
     entries: VecDeque<(PlanKey, Arc<PreparedModel>, usize)>,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 impl PlanCache {
@@ -71,6 +72,7 @@ impl PlanCache {
             entries: VecDeque::new(),
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
     }
 
@@ -99,6 +101,7 @@ impl PlanCache {
                 break;
             };
             self.bytes -= evicted;
+            self.evictions += 1;
         }
     }
 }
@@ -110,6 +113,9 @@ pub struct PlanCacheStats {
     pub hits: u64,
     /// Lookups that built fresh plans.
     pub misses: u64,
+    /// Entries shed by the byte-budget LRU since startup — the SLO
+    /// evaluator's eviction-storm signal differences this.
+    pub evictions: u64,
     /// Resident entries.
     pub len: usize,
     /// Accumulated `memory_bytes` of resident entries.
@@ -214,6 +220,7 @@ impl Engine {
         PlanCacheStats {
             hits: cache.hits,
             misses: cache.misses,
+            evictions: cache.evictions,
             len: cache.entries.len(),
             bytes: cache.bytes,
             capacity_bytes: cache.capacity_bytes,
@@ -578,6 +585,7 @@ mod tests {
         let stats = engine.plan_cache_stats();
         assert_eq!(stats.misses, 4, "evicted configuration must rebuild");
         assert_eq!(stats.len, 2);
+        assert!(stats.evictions >= 2, "LRU sheds must be counted: {stats:?}");
         engine
             .infer_batch("digits_linear", 4, SchemeId::Deterministic, &rows)
             .unwrap();

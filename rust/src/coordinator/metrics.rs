@@ -149,6 +149,10 @@ pub struct ShardMetrics {
     /// Auto requests resolved from live measurements (a warm MSE cell or
     /// a warm latency window) rather than priors and static order alone.
     auto_measured: AtomicU64,
+    /// Auto batches whose declared budgets no candidate could satisfy —
+    /// the controller served the least-bad fallback. The SLO evaluator
+    /// turns movement here into `auto_infeasible` journal events.
+    auto_infeasible: AtomicU64,
     latency_sum_us: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     started: Instant,
@@ -188,6 +192,7 @@ impl ShardMetrics {
             recent_dropped: AtomicU64::new(0),
             auto_slo_requests: AtomicU64::new(0),
             auto_measured: AtomicU64::new(0),
+            auto_infeasible: AtomicU64::new(0),
             latency_sum_us: AtomicU64::new(0),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             started: Instant::now(),
@@ -246,6 +251,12 @@ impl ShardMetrics {
         self.auto_measured.fetch_add(measured_members, Ordering::Relaxed);
     }
 
+    /// Record one auto batch resolved against budgets no candidate could
+    /// satisfy ([`crate::fidelity::AutoChoice::feasible`] was false).
+    pub fn record_auto_infeasible(&self) {
+        self.auto_infeasible.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record a protocol or execution error.
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
@@ -300,6 +311,7 @@ impl ShardMetrics {
         acc.recent_dropped += self.recent_dropped.load(Ordering::Relaxed);
         acc.auto_slo_requests += self.auto_slo_requests.load(Ordering::Relaxed);
         acc.auto_measured += self.auto_measured.load(Ordering::Relaxed);
+        acc.auto_infeasible += self.auto_infeasible.load(Ordering::Relaxed);
         acc.latency_sum_us += self.latency_sum_us.load(Ordering::Relaxed);
         for (slot, bucket) in acc.buckets.iter_mut().zip(&self.latency_buckets) {
             *slot += bucket.load(Ordering::Relaxed);
@@ -401,6 +413,7 @@ struct Merged {
     recent_dropped: u64,
     auto_slo_requests: u64,
     auto_measured: u64,
+    auto_infeasible: u64,
     latency_sum_us: u64,
     buckets: [u64; BUCKETS],
     /// Recent-window (count, buckets) per scheme, in [`SCHEME_ORDER`].
@@ -426,6 +439,7 @@ impl Default for Merged {
             recent_dropped: 0,
             auto_slo_requests: 0,
             auto_measured: 0,
+            auto_infeasible: 0,
             latency_sum_us: 0,
             buckets: [0; BUCKETS],
             recent: [(0, [0; BUCKETS]); SchemeId::COUNT],
@@ -448,6 +462,9 @@ impl Merged {
 pub struct Metrics {
     shards: Vec<Arc<ShardMetrics>>,
     started: Instant,
+    /// Wall-clock start (unix seconds), echoed in `stats` so operators
+    /// and the cluster proxy can tell restarts from counter resets.
+    start_unix: u64,
 }
 
 impl Metrics {
@@ -456,7 +473,16 @@ impl Metrics {
         Metrics {
             shards: (0..num_shards.max(1)).map(|_| Arc::new(ShardMetrics::new())).collect(),
             started: Instant::now(),
+            start_unix: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
         }
+    }
+
+    /// Wall-clock process start (unix seconds).
+    pub fn start_unix(&self) -> u64 {
+        self.start_unix
     }
 
     /// Shard `i`'s counters (shared handle).
@@ -585,6 +611,8 @@ impl Metrics {
             ("recent_dropped", Json::Num(m.recent_dropped as f64)),
             ("auto_slo_requests", Json::Num(m.auto_slo_requests as f64)),
             ("auto_measured", Json::Num(m.auto_measured as f64)),
+            ("auto_infeasible", Json::Num(m.auto_infeasible as f64)),
+            ("start_time", Json::Num(self.start_unix as f64)),
             ("mean_batch", Json::Num(mean_batch)),
             ("mean_us", Json::Num(mean_us)),
             ("p50_us", Json::Num(m.percentile_us(0.50))),
@@ -682,6 +710,12 @@ impl Metrics {
             "counter",
             "Auto requests resolved from live measurements",
             m.auto_measured as f64,
+        );
+        p.scalar(
+            "dither_auto_infeasible_total",
+            "counter",
+            "Auto batches resolved against infeasible budgets",
+            m.auto_infeasible as f64,
         );
         p.scalar(
             "dither_uptime_seconds",
@@ -893,6 +927,28 @@ impl MetricsHandle {
             }
         }
         AutoSnapshot { estimates, latency }
+    }
+
+    /// Fold the lifetime counters the SLO evaluator differences tick to
+    /// tick. Tracer and plan-cache counters live elsewhere; the caller
+    /// (the shard pool's evaluator thread) fills `slow_promoted` and
+    /// `plan_evictions` before handing the sample over.
+    pub fn slo_sample(&self) -> crate::obs::SloSample {
+        let mut s = crate::obs::SloSample {
+            latency_buckets: vec![0u64; BUCKETS],
+            ..crate::obs::SloSample::default()
+        };
+        for shard in &self.shards {
+            s.requests += shard.requests.load(Ordering::Relaxed);
+            s.errors += shard.errors.load(Ordering::Relaxed);
+            s.rejected += shard.rejected.load(Ordering::Relaxed);
+            s.timeouts += shard.timeouts.load(Ordering::Relaxed);
+            s.auto_infeasible += shard.auto_infeasible.load(Ordering::Relaxed);
+            for (acc, b) in s.latency_buckets.iter_mut().zip(&shard.latency_buckets) {
+                *acc += b.load(Ordering::Relaxed);
+            }
+        }
+        s
     }
 }
 
@@ -1219,9 +1275,36 @@ mod tests {
         let m = Metrics::new(2);
         m.shard(0).record_auto_resolution(3, 4);
         m.shard(1).record_auto_resolution(2, 0);
+        m.shard(0).record_auto_infeasible();
+        m.shard(1).record_auto_infeasible();
         let json = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
         assert_eq!(json.get("auto_slo_requests").unwrap().as_f64(), Some(5.0));
         assert_eq!(json.get("auto_measured").unwrap().as_f64(), Some(4.0));
+        assert_eq!(json.get("auto_infeasible").unwrap().as_f64(), Some(2.0));
+        // Wall-clock start is echoed (and sane: after 2020, i.e. not 0).
+        assert!(json.get("start_time").unwrap().as_f64().unwrap() > 1.5e9);
+    }
+
+    #[test]
+    fn slo_sample_folds_lifetime_counters() {
+        let m = Metrics::new(2);
+        for i in 0..10u64 {
+            m.shard((i % 2) as usize).record_request(SchemeId::Dither, 0, 4, 100);
+        }
+        m.shard(0).record_error();
+        m.shard(1).record_rejected();
+        m.shard(0).record_timeout();
+        m.shard(1).record_auto_infeasible();
+        let s = m.handle().slo_sample();
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.auto_infeasible, 1);
+        assert_eq!(s.latency_buckets.len(), BUCKETS);
+        assert_eq!(s.latency_buckets.iter().sum::<u64>(), 10);
+        // Tracer- and engine-owned counters stay for the caller to fill.
+        assert_eq!((s.slow_promoted, s.plan_evictions), (0, 0));
     }
 
     #[test]

@@ -30,9 +30,10 @@ pub use metrics::{
 pub use protocol::{
     format_error, format_hello, format_metrics_reply, format_overloaded, format_request,
     format_request_auto, format_request_auto_slo, format_response, format_trace_query,
-    format_traces, line_id, parse_message, parse_metrics_reply, parse_stats, parse_traces,
-    response_id, FidelityCell, InferenceRequest, Message, Reassembler, RecentCell, StatsSummary,
-    TraceQuery,
+    format_traces, format_unwatch, format_unwatch_ack, format_watch, format_watch_ack, line_id,
+    parse_message, parse_metrics_reply, parse_stats, parse_traces, parse_watch_ack, response_id,
+    FidelityCell, InferenceRequest, Message, Reassembler, RecentCell, StatsSummary, TraceQuery,
+    WatchQuery, PROTO_VERSION,
 };
 pub use server::{ping, serve, wait_ready, ServerConfig, WRITER_CONTROL_SLACK};
 pub use shard::{ShardConfig, ShardPool};

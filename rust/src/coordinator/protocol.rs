@@ -30,7 +30,23 @@
 //! `{"cmd": "stats"}`, `{"cmd": "trace"}` (query the slow/sampled trace
 //! ring, filters `min_us` / `model` / `scheme` / `limit`),
 //! `{"cmd": "metrics"}` (Prometheus text exposition wrapped in one JSON
-//! line), `{"cmd": "shutdown"}`.
+//! line), `{"cmd": "watch"}` / `{"cmd": "unwatch"}` (event
+//! subscriptions, below), `{"cmd": "shutdown"}`. Control verbs are
+//! answered outside the in-flight window — monitoring keeps working
+//! during overload, which is exactly when it matters.
+//!
+//! **Events (protocol v4)**: `{"cmd":"watch"}` registers a long-lived
+//! per-connection subscription to the process's ops-event journal, with
+//! optional filters `"severity"` (minimum: `info`/`warn`/`error`) and
+//! `"kinds"` (array of event-kind wire names). The server acks with
+//! `{"subscribed":true,"watch":<id>}` and then streams matching events as
+//! out-of-order lines `{"watch":<id>,"event":{...}}` interleaved with
+//! replies on the same connection (see [`crate::obs`] for the event
+//! shape and the bounded drop-oldest delivery queue semantics).
+//! `{"cmd":"unwatch","watch":<id>}` tears one subscription down
+//! (`{"unwatched":<id>,"removed":bool}`); disconnect tears all down.
+//! Delivery is stream-only — no replay — so a re-subscribing client can
+//! never observe a duplicate event.
 //!
 //! **Tracing (protocol v3)**: a request line may carry
 //! `"trace": "<16-hex id>:<flags>"` — a trace context propagated by the
@@ -52,16 +68,22 @@
 //! come back in *completion* order, not submission order. The `id` echo
 //! on every reply (successes, errors, and overloads alike) is what lets a
 //! client match them up; [`Reassembler`] is the client-side helper. The
-//! `{"cmd":"hello"}` handshake (protocol v3) advertises the feature set,
-//! the server's per-connection in-flight window, `"proto": 3`, and
+//! `{"cmd":"hello"}` handshake (protocol v4) advertises the feature set,
+//! the server's per-connection in-flight window, `"proto": 4`, and
 //! `"schemes": [...]` — the registered rounding schemes this endpoint can
 //! serve; clients that never send it can keep the old lockstep discipline
 //! (one request, then one reply) unchanged.
 
 use crate::fidelity::FidelityEstimate;
+use crate::obs::{EventKind, Severity};
 use crate::rounding::SchemeId;
 use crate::util::json::Json;
 use std::collections::HashMap;
+
+/// Current protocol revision: v4 = v3 (trace propagation) plus the
+/// `watch`/`unwatch` event-subscription verbs and the `"events"` feature
+/// flag in the `hello` reply.
+pub const PROTO_VERSION: f64 = 4.0;
 
 /// A parsed inference request.
 #[derive(Clone, Debug)]
@@ -172,6 +194,78 @@ pub fn parse_metrics_reply(line: &str) -> Result<String, String> {
         .ok_or_else(|| "reply has no 'metrics' field".to_string())
 }
 
+/// Filters for a `{"cmd":"watch"}` event subscription. The zero value
+/// ([`WatchQuery::default`]) subscribes to every event.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WatchQuery {
+    /// Minimum severity delivered (`None` = everything).
+    pub severity: Option<Severity>,
+    /// Only these event kinds (empty = all kinds).
+    pub kinds: Vec<EventKind>,
+}
+
+/// Build a `{"cmd":"watch"}` subscription line — also the client side the
+/// cluster proxy uses against its backends.
+pub fn format_watch(q: &WatchQuery) -> String {
+    let mut pairs = vec![("cmd", Json::Str("watch".to_string()))];
+    if let Some(severity) = q.severity {
+        pairs.push(("severity", Json::Str(severity.wire_name().to_string())));
+    }
+    if !q.kinds.is_empty() {
+        pairs.push((
+            "kinds",
+            Json::Arr(
+                q.kinds
+                    .iter()
+                    .map(|k| Json::Str(k.wire_name().to_string()))
+                    .collect(),
+            ),
+        ));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Build the `{"cmd":"watch"}` ack: `{"subscribed":true,"watch":<id>}`.
+pub fn format_watch_ack(id: u64) -> String {
+    Json::obj(vec![
+        ("subscribed", Json::Bool(true)),
+        ("watch", Json::Num(id as f64)),
+    ])
+    .to_string()
+}
+
+/// Parse a watch ack back into the subscription id.
+pub fn parse_watch_ack(line: &str) -> Result<u64, String> {
+    let json = Json::parse(line.trim()).map_err(|e| e.to_string())?;
+    if json.get("subscribed").and_then(Json::as_bool) != Some(true) {
+        return Err(format!("not a watch ack: {line}"));
+    }
+    json.get("watch")
+        .and_then(Json::as_f64)
+        .map(|v| v as u64)
+        .ok_or_else(|| format!("watch ack without id: {line}"))
+}
+
+/// Build a `{"cmd":"unwatch"}` line for subscription `id`.
+pub fn format_unwatch(id: u64) -> String {
+    Json::obj(vec![
+        ("cmd", Json::Str("unwatch".to_string())),
+        ("watch", Json::Num(id as f64)),
+    ])
+    .to_string()
+}
+
+/// Build the unwatch ack: `{"unwatched":<id>,"removed":bool}` —
+/// `removed` says whether the id named a live subscription (unwatch is
+/// idempotent, a stale id is not an error).
+pub fn format_unwatch_ack(id: u64, removed: bool) -> String {
+    Json::obj(vec![
+        ("unwatched", Json::Num(id as f64)),
+        ("removed", Json::Bool(removed)),
+    ])
+    .to_string()
+}
+
 /// A parsed incoming message.
 #[derive(Clone, Debug)]
 pub enum Message {
@@ -188,6 +282,10 @@ pub enum Message {
     Trace(TraceQuery),
     /// Prometheus text exposition request.
     Metrics,
+    /// Subscribe this connection to the ops-event journal (protocol v4).
+    Watch(WatchQuery),
+    /// Tear down one of this connection's subscriptions by id.
+    Unwatch(u64),
     /// Graceful shutdown.
     Shutdown,
 }
@@ -217,6 +315,31 @@ pub fn parse_message(line: &str) -> Result<Message, String> {
                 limit: json.get("limit").and_then(Json::as_usize).unwrap_or(0),
             })),
             "metrics" => Ok(Message::Metrics),
+            "watch" => {
+                let severity = match json.get("severity").and_then(Json::as_str) {
+                    Some(s) => Some(
+                        Severity::from_wire(s)
+                            .ok_or_else(|| format!("unknown severity {s:?}"))?,
+                    ),
+                    None => None,
+                };
+                let mut kinds = Vec::new();
+                for v in json.get("kinds").and_then(Json::as_arr).unwrap_or(&[]) {
+                    let name = v.as_str().ok_or("non-string entry in 'kinds'")?;
+                    kinds.push(
+                        EventKind::from_wire(name)
+                            .ok_or_else(|| format!("unknown event kind {name:?}"))?,
+                    );
+                }
+                Ok(Message::Watch(WatchQuery { severity, kinds }))
+            }
+            "unwatch" => {
+                let id = json
+                    .get("watch")
+                    .and_then(Json::as_f64)
+                    .ok_or("unwatch without a 'watch' id")? as u64;
+                Ok(Message::Unwatch(id))
+            }
             "shutdown" => Ok(Message::Shutdown),
             other => Err(format!("unknown cmd {other:?}")),
         };
@@ -423,9 +546,9 @@ pub fn format_overloaded(id: u64) -> String {
     .to_string()
 }
 
-/// Handshake response (protocol v3 — v2 plus the `"trace"` request
-/// field and the `trace` / `metrics` verbs): advertises the pipelined
-/// protocol,
+/// Handshake response (protocol v4 — v3 plus the `watch`/`unwatch`
+/// event-subscription verbs, advertised as the `"events"` feature):
+/// advertises the pipelined protocol,
 /// the server's per-connection in-flight window (requests beyond it are
 /// answered `overloaded` immediately), the rounding schemes this
 /// endpoint serves — the server passes the registry's list, the cluster
@@ -436,10 +559,13 @@ pub fn format_overloaded(id: u64) -> String {
 pub fn format_hello(max_inflight: usize, schemes: &[&str], kernel: &str) -> String {
     Json::obj(vec![
         ("hello", Json::Bool(true)),
-        ("proto", Json::Num(3.0)),
+        ("proto", Json::Num(PROTO_VERSION)),
         (
             "features",
-            Json::Arr(vec![Json::Str("pipelined".to_string())]),
+            Json::Arr(vec![
+                Json::Str("pipelined".to_string()),
+                Json::Str("events".to_string()),
+            ]),
         ),
         ("max_inflight", Json::Num(max_inflight as f64)),
         (
@@ -1112,15 +1238,19 @@ mod tests {
         let line = format_hello(32, &zoo, "wide");
         let json = Json::parse(&line).unwrap();
         assert_eq!(json.get("hello").unwrap().as_bool(), Some(true));
-        assert_eq!(json.get("proto").unwrap().as_f64(), Some(3.0));
+        assert_eq!(json.get("proto").unwrap().as_f64(), Some(4.0));
         assert_eq!(json.get("max_inflight").unwrap().as_f64(), Some(32.0));
         assert_eq!(json.get("kernel").unwrap().as_str(), Some("wide"));
         let features = json.get("features").unwrap().as_arr().unwrap();
         assert!(features
             .iter()
             .any(|f| f.as_str() == Some("pipelined")));
+        assert!(
+            features.iter().any(|f| f.as_str() == Some("events")),
+            "v4 advertises the watch verbs: {line}"
+        );
         let info = parse_hello(&line).unwrap();
-        assert_eq!(info.proto, 3);
+        assert_eq!(info.proto, 4);
         assert_eq!(info.max_inflight, 32);
         assert_eq!(info.schemes, zoo, "hello advertises the full registry");
         assert_eq!(info.kernel.as_deref(), Some("wide"));
@@ -1131,6 +1261,39 @@ mod tests {
         assert_eq!(legacy.schemes, vec!["deterministic", "dither", "stochastic"]);
         assert_eq!(legacy.kernel, None);
         assert!(parse_hello("{\"pong\":true}").is_err());
+    }
+
+    #[test]
+    fn watch_and_unwatch_roundtrip_through_the_wire() {
+        // Bare watch: no filters.
+        match parse_message("{\"cmd\":\"watch\"}").unwrap() {
+            Message::Watch(q) => assert_eq!(q, WatchQuery::default()),
+            other => panic!("wrong message {other:?}"),
+        }
+        let q = WatchQuery {
+            severity: Some(Severity::Warn),
+            kinds: vec![EventKind::BackendDown, EventKind::AlertFired],
+        };
+        match parse_message(&format_watch(&q)).unwrap() {
+            Message::Watch(parsed) => assert_eq!(parsed, q),
+            other => panic!("wrong message {other:?}"),
+        }
+        // Unknown filter values are rejected, not silently widened.
+        assert!(parse_message("{\"cmd\":\"watch\",\"severity\":\"loud\"}").is_err());
+        assert!(parse_message("{\"cmd\":\"watch\",\"kinds\":[\"nope\"]}").is_err());
+        assert!(parse_message("{\"cmd\":\"watch\",\"kinds\":[7]}").is_err());
+        // Unwatch needs its id.
+        match parse_message(&format_unwatch(9)).unwrap() {
+            Message::Unwatch(id) => assert_eq!(id, 9),
+            other => panic!("wrong message {other:?}"),
+        }
+        assert!(parse_message("{\"cmd\":\"unwatch\"}").is_err());
+        // Acks round-trip.
+        assert_eq!(parse_watch_ack(&format_watch_ack(3)).unwrap(), 3);
+        assert!(parse_watch_ack("{\"pong\":true}").is_err());
+        let ack = Json::parse(&format_unwatch_ack(3, true)).unwrap();
+        assert_eq!(ack.get("unwatched").unwrap().as_f64(), Some(3.0));
+        assert_eq!(ack.get("removed").unwrap().as_bool(), Some(true));
     }
 
     #[test]

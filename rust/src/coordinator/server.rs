@@ -35,11 +35,13 @@
 use crate::coordinator::batcher::{Pending, ReplyTo, SubmitError};
 use crate::coordinator::metrics::{Metrics, ShardMetrics};
 use crate::coordinator::protocol::{
-    format_error, format_hello, format_metrics_reply, format_overloaded, format_traces, line_id,
-    parse_message, InferenceRequest, Message,
+    format_error, format_hello, format_metrics_reply, format_overloaded, format_traces,
+    format_unwatch_ack, format_watch_ack, line_id, parse_message, InferenceRequest, Message,
+    PROTO_VERSION,
 };
 use crate::coordinator::shard::{ShardConfig, ShardPool};
-use crate::trace::{Stage, TraceConfig};
+use crate::obs::{self, EventKind, Journal, Severity, SloPolicy, Subscription};
+use crate::trace::{PromText, Stage, TraceConfig};
 use crate::train::Zoo;
 use crate::util::error::{Context, Result};
 use crate::util::threadpool::WorkerPool;
@@ -113,6 +115,18 @@ pub struct ServerConfig {
     /// Completed-trace ring-buffer capacity (`--trace-buffer`; 0 disables
     /// tracing entirely).
     pub trace_buffer: usize,
+    /// SLO latency budget in µs for burn-rate alerting
+    /// (`--slo-p99-us`; 0 disables the latency alert).
+    pub slo_p99_us: u64,
+    /// SLO error-rate threshold — errors + timeouts per request — for
+    /// burn-rate alerting (`--slo-error-rate`; 0 disables).
+    pub slo_error_rate: f64,
+    /// Measured-MSE alert envelope as a multiple of the analytic prior
+    /// per `(model, scheme, k)` (`--slo-mse-factor`; 0 disables).
+    pub slo_mse_factor: f64,
+    /// SLO evaluator tick in milliseconds (`--slo-eval-ms`; 0 disables
+    /// the evaluator thread entirely).
+    pub slo_eval_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -133,6 +147,14 @@ impl Default for ServerConfig {
             trace_rate: 0.0,
             trace_slow_us: 0,
             trace_buffer: 256,
+            slo_p99_us: 0,
+            slo_error_rate: 0.0,
+            // Fidelity drift is the silent failure mode this system exists
+            // to prevent, so the MSE envelope alert defaults on; latency
+            // and error-rate budgets are deployment-specific and default
+            // off.
+            slo_mse_factor: 8.0,
+            slo_eval_ms: 1_000,
         }
     }
 }
@@ -160,6 +182,12 @@ impl ServerConfig {
                 rate: self.trace_rate,
                 slow_us: self.trace_slow_us,
                 buffer: self.trace_buffer,
+            },
+            slo: SloPolicy {
+                p99_us: self.slo_p99_us,
+                error_rate: self.slo_error_rate,
+                mse_factor: self.slo_mse_factor,
+                eval_ms: self.slo_eval_ms,
             },
         }
     }
@@ -194,7 +222,16 @@ pub fn serve(cfg: &ServerConfig) -> Result<()> {
             shard_cfg.prewarm_bits
         );
     }
-    let pool = Arc::new(ShardPool::start(&shard_cfg, zoo, &metrics));
+    let journal = Arc::new(Journal::default());
+    journal.publish(
+        Severity::Info,
+        EventKind::ProcessStart,
+        &[
+            ("kernel", crate::kernels::active_id().name()),
+            ("schemes", &scheme_names()),
+        ],
+    );
+    let pool = Arc::new(ShardPool::start(&shard_cfg, zoo, &metrics, journal));
     println!(
         "dither-serve listening on {} ({} shards, max_batch={}, queue_cap={}, kernel={})",
         cfg.addr,
@@ -413,15 +450,42 @@ fn read_loop(
     // here (via ReplyTo::with_window), decremented by each ReplyTo as its
     // reply or cancellation goes out; this thread is the only
     // incrementer, so the window check below cannot race over the bound.
+    // Control verbs (ping/hello/stats/trace/metrics/watch/unwatch) never
+    // touch the window — they stay answerable even at `max_inflight=1`
+    // with the lone slot pinned by a slow request.
     let inflight = Arc::new(AtomicUsize::new(0));
+    // This connection's live journal subscriptions. Their queues fill on
+    // the publisher side; this loop is the only drain.
+    let mut watches: Vec<Arc<Subscription>> = Vec::new();
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    let mut result: Result<()> = Ok(());
     loop {
         // Writer gone (socket closed or write timed out): abandon the
         // connection instead of feeding the engine from a dead client.
         // Checked every iteration — read timeout ticks land here too.
         if !writer_alive.load(Ordering::Acquire) {
             break;
+        }
+        // Push pending watch events toward the writer. `try_send` keeps
+        // the reader from blocking on its own reply funnel: when the
+        // channel is full the line goes back to the front of its
+        // subscription queue and delivery resumes on a later iteration
+        // (the 250 ms read timeout guarantees pump progress even on an
+        // otherwise idle connection).
+        'pump: for sub in &watches {
+            while let Some(event_line) = sub.pop() {
+                match tx.try_send(event_line) {
+                    Ok(()) => {}
+                    Err(std::sync::mpsc::TrySendError::Full(l)) => {
+                        sub.requeue_front(l);
+                        break 'pump;
+                    }
+                    // Writer exited; the alive check above ends the
+                    // connection next iteration.
+                    Err(std::sync::mpsc::TrySendError::Disconnected(_)) => break 'pump,
+                }
+            }
         }
         // `read_line` appends, so a partial line survives a timeout tick
         // and completes on the next read.
@@ -440,7 +504,10 @@ fn read_loop(
                 continue;
             }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e.into()),
+            Err(e) => {
+                result = Err(e.into());
+                break;
+            }
         }
         let trimmed = line.trim();
         if trimmed.is_empty() {
@@ -451,7 +518,7 @@ fn read_loop(
         // `GET /metrics HTTP/1.1`, not newline JSON. Serve one exposition
         // response and close, like any HTTP/1.0 endpoint would.
         if trimmed.starts_with("GET ") {
-            let _ = tx.send(http_metrics_response(&metrics.prometheus(pool.tracer())));
+            let _ = tx.send(http_metrics_response(&exposition(metrics, pool)));
             break;
         }
         // Clock reads for the parse span only happen when tracing can
@@ -475,8 +542,22 @@ fn read_loop(
                     q.limit,
                 )))
             }
-            Ok(Message::Metrics) => {
-                tx.send(format_metrics_reply(&metrics.prometheus(pool.tracer())))
+            Ok(Message::Metrics) => tx.send(format_metrics_reply(&exposition(metrics, pool))),
+            Ok(Message::Watch(q)) => {
+                let sub =
+                    pool.journal()
+                        .subscribe(q.severity.unwrap_or(Severity::Info), q.kinds, 0);
+                let ack = format_watch_ack(sub.id());
+                watches.push(sub);
+                tx.send(ack)
+            }
+            Ok(Message::Unwatch(id)) => {
+                // Only this connection's own subscriptions can be torn
+                // down — a connection cannot unwatch someone else's id.
+                let removed =
+                    watches.iter().any(|s| s.id() == id) && pool.journal().unsubscribe(id);
+                watches.retain(|s| s.id() != id);
+                tx.send(format_unwatch_ack(id, removed))
             }
             Ok(Message::Shutdown) => {
                 pool.close();
@@ -509,7 +590,38 @@ fn read_loop(
             break;
         }
     }
-    Ok(())
+    // Tear down this connection's subscriptions on every exit path so
+    // the journal stops queueing events for a dead watcher.
+    for sub in &watches {
+        pool.journal().unsubscribe(sub.id());
+    }
+    result
+}
+
+/// Comma-joined wire names of every registered rounding scheme, for the
+/// build-info gauge and the process-start event.
+fn scheme_names() -> String {
+    crate::rounding::SchemeRegistry::global()
+        .wire_names()
+        .join(",")
+}
+
+/// The full Prometheus exposition for this process: the request/engine
+/// families from [`Metrics::prometheus`] plus the journal's event and
+/// alert families and the build-identity gauges. Served on both the
+/// `GET /metrics` fast path and the `{"cmd":"metrics"}` verb.
+fn exposition(metrics: &Metrics, pool: &ShardPool) -> String {
+    let mut text = metrics.prometheus(pool.tracer());
+    let mut extra = PromText::new();
+    pool.journal().append_prometheus(&mut extra);
+    obs::append_build_info(
+        &mut extra,
+        &format!("{}", PROTO_VERSION as u32),
+        crate::kernels::active_id().name(),
+        &scheme_names(),
+    );
+    text.push_str(&extra.finish());
+    text
 }
 
 /// A minimal HTTP/1.0 response carrying the Prometheus exposition, for

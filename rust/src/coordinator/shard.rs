@@ -15,17 +15,18 @@ use crate::coordinator::batcher::{
 };
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
-use crate::fidelity::AutoView;
+use crate::fidelity::{prior_mse, AutoSnapshot, AutoView, MAX_K};
 use crate::linalg::Variant;
 use crate::nn::PlanKey;
+use crate::obs::{Journal, MseCell, SloEvaluator, SloPolicy};
 use crate::rounding::SchemeId;
 use crate::trace::{TraceConfig, Tracer};
-use crate::train::Zoo;
+use crate::train::{ModelSpec, Zoo};
 use crate::util::rng::counter_hash;
 use crate::util::threadpool::WorkerPool;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How often the pool's refresher thread merges every shard's estimators
 /// and recent-latency windows into a fresh [`AutoView`] snapshot. Short
@@ -33,6 +34,11 @@ use std::time::Duration;
 /// fraction of one metrics window, long enough to keep the merge off the
 /// request hot path.
 const AUTO_VIEW_REFRESH: Duration = Duration::from_millis(50);
+
+/// How often the SLO evaluator thread checks the stop flag between
+/// ticks, so a 1 s `--slo-eval-ms` cadence never holds shutdown hostage
+/// for a full tick.
+const SLO_POLL: Duration = Duration::from_millis(25);
 
 /// Shard-pool policy.
 #[derive(Clone, Debug)]
@@ -63,6 +69,10 @@ pub struct ShardConfig {
     /// `--trace-buffer`); the pool owns one [`Tracer`] shared by every
     /// shard worker and the connection readers.
     pub trace: TraceConfig,
+    /// Declared SLOs (`--slo-p99-us` / `--slo-error-rate` /
+    /// `--slo-mse-factor` / `--slo-eval-ms`); when enabled the pool runs
+    /// one burn-rate evaluator thread publishing into the journal.
+    pub slo: SloPolicy,
 }
 
 /// K running serving shards plus their routing table.
@@ -81,15 +91,27 @@ pub struct ShardPool {
     /// `"scheme":"auto"` batches against, refreshed by the pool's
     /// refresher thread so all shards converge on one view.
     auto_view: Arc<AutoView>,
-    /// Stops the auto-view refresher at [`ShardPool::join`].
+    /// Stops the auto-view refresher and the SLO evaluator at
+    /// [`ShardPool::join`].
     refresher_stop: Arc<AtomicBool>,
+    /// The process event journal: shard workers publish scheme switches,
+    /// the SLO evaluator publishes burn-rate alerts, and the server's
+    /// watch connections subscribe.
+    journal: Arc<Journal>,
 }
 
 impl ShardPool {
     /// Spawn `cfg.shards` worker shards over a shared model zoo. Each
     /// shard gets its own engine (decorrelated seed stream) and the
-    /// matching [`Metrics`] slot.
-    pub fn start(cfg: &ShardConfig, zoo: Arc<Zoo>, metrics: &Metrics) -> ShardPool {
+    /// matching [`Metrics`] slot. The pool shares `journal` with every
+    /// worker and, when `cfg.slo` is enabled, spawns the burn-rate
+    /// evaluator thread publishing into it.
+    pub fn start(
+        cfg: &ShardConfig,
+        zoo: Arc<Zoo>,
+        metrics: &Metrics,
+        journal: Arc<Journal>,
+    ) -> ShardPool {
         let shards = cfg.shards.max(1);
         // Zoo-level prewarming: build the hot configurations' weight plans
         // once and hand shared Arcs to every shard's cache, so the first
@@ -134,6 +156,7 @@ impl ShardPool {
             });
         }
         let mut batchers = Vec::with_capacity(shards);
+        let mut engines: Vec<Arc<Engine>> = Vec::with_capacity(shards);
         for i in 0..shards {
             let batcher = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait, cfg.queue_cap));
             let shard_metrics = metrics.shard(i);
@@ -164,10 +187,12 @@ impl ShardPool {
                     variant: Variant::Separate,
                 })
             });
+            engines.push(engine.clone());
             let b = batcher.clone();
             let dog = watchdog.clone();
             let shard_tracer = tracer.clone();
             let shard_view = auto_view.clone();
+            let shard_journal = journal.clone();
             workers.spawn(format!("dither-shard-{i}"), move || {
                 // Stop the batcher even if the worker panics: routed
                 // requests then get an immediate "shutting down" reply
@@ -187,9 +212,42 @@ impl ShardPool {
                     &shard_view,
                     i,
                     dog.as_deref(),
+                    Some(&shard_journal),
                 );
             });
             batchers.push(batcher);
+        }
+        // The SLO evaluator rides the sweeper pool like the auto-view
+        // refresher: one thread per process, stopped at join. Each tick
+        // it folds lifetime counters + the fidelity snapshot into the
+        // journal's alert set — the hot path never publishes for these.
+        if cfg.slo.enabled() {
+            let policy = cfg.slo;
+            let stop = refresher_stop.clone();
+            let handle = metrics.handle();
+            let slo_tracer = tracer.clone();
+            let slo_engines = engines.clone();
+            let slo_journal = journal.clone();
+            sweeper.spawn("dither-slo-eval".to_string(), move || {
+                let mut eval = SloEvaluator::new(policy);
+                let tick = Duration::from_millis(policy.eval_ms.max(1));
+                let mut last = Instant::now();
+                while !stop.load(Ordering::Acquire) {
+                    std::thread::sleep(SLO_POLL.min(tick));
+                    if last.elapsed() < tick {
+                        continue;
+                    }
+                    last = Instant::now();
+                    let mut sample = handle.slo_sample();
+                    sample.slow_promoted = slo_tracer.slow_promoted();
+                    sample.plan_evictions = slo_engines
+                        .iter()
+                        .map(|e| e.plan_cache_stats().evictions)
+                        .sum();
+                    let cells = mse_cells(&handle.auto_snapshot());
+                    eval.observe(sample, &cells, &slo_journal);
+                }
+            });
         }
         ShardPool {
             batchers,
@@ -199,7 +257,14 @@ impl ShardPool {
             tracer,
             auto_view,
             refresher_stop,
+            journal,
         }
+    }
+
+    /// The process event journal shared with every worker and the SLO
+    /// evaluator; the server's watch connections subscribe to it.
+    pub fn journal(&self) -> &Arc<Journal> {
+        &self.journal
     }
 
     /// The pool's merged auto-resolution view (shared with every shard
@@ -257,6 +322,11 @@ impl ShardPool {
         self.batchers[0].is_shutting_down()
     }
 
+    /// Number of events published to the pool's journal so far.
+    pub fn events_published(&self) -> u64 {
+        self.journal.published()
+    }
+
     /// Join every shard worker; returns how many panicked. The watchdog
     /// sweeper keeps running until the workers have drained (their final
     /// batches deserve timeout coverage too), then stops and joins.
@@ -268,6 +338,31 @@ impl ShardPool {
         self.refresher_stop.store(true, Ordering::Release);
         panicked + self.sweeper.lock().unwrap().join_all()
     }
+}
+
+/// Flatten the fidelity snapshot into the evaluator's [`MseCell`] rows:
+/// every observed `(model, scheme, k)` cell with its measured MSE and
+/// the scheme's prior envelope attached.
+fn mse_cells(snapshot: &AutoSnapshot) -> Vec<MseCell> {
+    let mut cells = Vec::new();
+    for spec in ModelSpec::ALL {
+        for mode in SchemeId::ALL {
+            for k in 1..=MAX_K {
+                let est = snapshot.estimates.get(spec.index(), mode, k);
+                if est.samples > 0 {
+                    cells.push(MseCell {
+                        model: spec.name().to_string(),
+                        scheme: mode.wire_name().to_string(),
+                        k,
+                        mse: est.mse(),
+                        samples: est.samples,
+                        prior: prior_mse(mode, k),
+                    });
+                }
+            }
+        }
+    }
+    cells
 }
 
 #[cfg(test)]
@@ -297,10 +392,11 @@ mod tests {
             plan_cache_bytes: crate::coordinator::engine::DEFAULT_PLAN_CACHE_BYTES,
             reply_timeout: Duration::from_secs(120),
             trace,
+            slo: SloPolicy::disabled(),
         };
         let metrics = Metrics::new(shards);
         let zoo = Arc::new(Zoo::load(200, 7));
-        let pool = ShardPool::start(&cfg, zoo, &metrics);
+        let pool = ShardPool::start(&cfg, zoo, &metrics, Arc::new(Journal::default()));
         (pool, metrics)
     }
 
@@ -525,5 +621,87 @@ mod tests {
         assert!(stats.contains("\"recent_dropped\":"), "{stats}");
         assert!(!stats.contains("\"recent_dropped\":0,"), "{stats}");
         assert!(stats.contains("\"auto_slo_requests\":"), "{stats}");
+        // The redirect moved digits_linear to a new operating point, and
+        // the worker journaled the switch with both endpoints labeled.
+        let switch = pool
+            .journal()
+            .recent(64)
+            .into_iter()
+            .find(|e| e.kind == crate::obs::EventKind::SchemeSwitch)
+            .expect("auto redirect must journal a scheme switch");
+        assert_eq!(
+            switch.labels.get("to_scheme").map(String::as_str),
+            Some("dither"),
+            "{switch:?}"
+        );
+        assert_eq!(
+            switch.labels.get("from_scheme").map(String::as_str),
+            Some("deterministic"),
+            "{switch:?}"
+        );
+    }
+
+    /// The evaluator thread end to end: a 1 µs p99 budget that any real
+    /// traffic breaches must raise `latency_p99` on the pool's journal
+    /// within a few ticks, and clear it once traffic stops and the fast
+    /// window drains.
+    #[test]
+    fn slo_evaluator_thread_fires_and_clears_alerts() {
+        use crate::obs::EventKind;
+        let cfg = ShardConfig {
+            shards: 1,
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+            queue_cap: 64,
+            seed: 7,
+            prewarm_bits: vec![4],
+            shadow_rate: 0.0,
+            plan_cache_bytes: crate::coordinator::engine::DEFAULT_PLAN_CACHE_BYTES,
+            reply_timeout: Duration::from_secs(120),
+            trace: TraceConfig::default(),
+            slo: SloPolicy {
+                p99_us: 1,
+                error_rate: 0.0,
+                mse_factor: 0.0,
+                eval_ms: 20,
+            },
+        };
+        let metrics = Metrics::new(1);
+        let zoo = Arc::new(Zoo::load(200, 7));
+        let journal = Arc::new(Journal::default());
+        let pool = ShardPool::start(&cfg, zoo, &metrics, journal.clone());
+        // Keep traffic flowing until the alert fires: the baseline tick
+        // may land after any single burst, so breaches must keep
+        // appearing in fresh per-tick deltas.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut id = 0u64;
+        while journal.active_alerts().is_empty() {
+            assert!(
+                Instant::now() < deadline,
+                "latency_p99 never fired: {:?}",
+                journal.recent(16)
+            );
+            let (p, rx) = infer_pending(id);
+            id += 1;
+            pool.submit(0, p).unwrap();
+            rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            journal.active_alerts()[0].get("alert").map(String::as_str),
+            Some("latency_p99")
+        );
+        // No further traffic: the fast window drains and the alert clears.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while !journal.active_alerts().is_empty() {
+            assert!(Instant::now() < deadline, "alert never cleared");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let kinds: Vec<EventKind> = journal.recent(64).iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&EventKind::AlertFired), "{kinds:?}");
+        assert!(kinds.contains(&EventKind::AlertCleared), "{kinds:?}");
+        assert!(pool.events_published() >= 2);
+        pool.close();
+        assert_eq!(pool.join(), 0);
     }
 }

@@ -89,6 +89,10 @@ pub struct AutoChoice {
     /// The measured recent-latency estimate the choice was priced at
     /// (`None` when the candidate was latency-cold).
     pub predicted_latency_us: Option<u64>,
+    /// False when no candidate met every declared budget and this choice
+    /// is the least-bad fallback — the SLO evaluator's
+    /// `auto_infeasible` signal counts these.
+    pub feasible: bool,
 }
 
 impl AutoChoice {
@@ -332,6 +336,7 @@ pub fn choose_slo(
                 predicted_mse: mse,
                 measured,
                 predicted_latency_us: latency,
+                feasible: true,
             };
             grid.push((latency.unwrap_or(u64::MAX), rank, choice));
             rank += 1;
@@ -356,7 +361,9 @@ pub fn choose_slo(
             best = Some(c);
         }
     }
-    best.expect("the candidate grid is never empty")
+    let mut fallback = best.expect("the candidate grid is never empty");
+    fallback.feasible = false;
+    fallback
 }
 
 /// Pick the cheapest `(scheme, k)` whose predicted MSE meets `max_mse`
@@ -401,6 +408,7 @@ mod tests {
         let c = choose(&shard, 0, 1e12);
         assert_eq!((c.scheme, c.k), (SchemeId::Deterministic, 1));
         assert!(!c.measured);
+        assert!(c.feasible);
         assert_eq!(c.predicted_latency_us, None);
     }
 
@@ -411,10 +419,13 @@ mod tests {
         let tight = choose(&shard, 0, 1e-4);
         assert!(tight.k > loose.k, "tight {tight:?} vs loose {loose:?}");
         assert!(tight.predicted_mse <= 1e-4);
-        // An impossible budget falls back to the most accurate candidate.
+        // An impossible budget falls back to the most accurate candidate,
+        // flagged infeasible; satisfiable budgets are flagged feasible.
         let impossible = choose(&shard, 0, 1e-12);
         assert_eq!(impossible.k, MAX_K);
         assert!(impossible.predicted_mse > 1e-12);
+        assert!(!impossible.feasible);
+        assert!(loose.feasible && tight.feasible);
     }
 
     #[test]
@@ -488,6 +499,7 @@ mod tests {
             (SchemeId::Dither, MAX_K, true),
             "stale-prior candidate won the fallback again: {c:?}"
         );
+        assert!(!c.feasible, "fallback choices must be flagged infeasible");
         assert!((c.predicted_mse - 1.5 * best_prior).abs() < best_prior * 0.01);
     }
 

@@ -32,6 +32,9 @@
 //!   through proxy → shard → kernel, a slow-trace ring buffer behind
 //!   `{"cmd":"trace"}`, and the Prometheus text exposition behind
 //!   `{"cmd":"metrics"}`.
+//! * [`obs`] — the live ops plane: a bounded structured event journal,
+//!   push-based `{"cmd":"watch"}` subscriptions (protocol v4), and the
+//!   dual-window SLO burn-rate evaluator behind `dither_alert_active`.
 //! * [`runtime`] — execution-environment descriptor + the AOT artifact
 //!   manifest emitted by the Python pipeline.
 //! * [`experiments`] — regenerators for every figure and table in the paper.
@@ -63,6 +66,7 @@ pub mod fidelity;
 pub mod kernels;
 pub mod linalg;
 pub mod nn;
+pub mod obs;
 pub mod rounding;
 pub mod runtime;
 pub mod trace;

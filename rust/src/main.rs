@@ -89,6 +89,15 @@ SERVE FLAGS:
                       the trace ring, sampled or not (0 = off)
     --trace-buffer N  completed-trace ring capacity, queryable via
                       {\"cmd\":\"trace\"} (256; 0 disables tracing)
+    --slo-p99-us N    latency SLO budget in µs for burn-rate alerting
+                      (0 = no latency alert)
+    --slo-error-rate F  error-rate SLO threshold, errors+timeouts per
+                      request (0 = no error alert)
+    --slo-mse-factor F  measured-MSE alert envelope as a multiple of the
+                      analytic prior per (model, scheme, k) (8; 0 = off)
+    --slo-eval-ms N   SLO evaluator tick in ms (1000; 0 disables the
+                      evaluator thread). Alerts stream to watchers and
+                      export as dither_alert_active gauges.
 
 PROXY FLAGS:
     --addr HOST:PORT  listen address (127.0.0.1:7900)
@@ -108,7 +117,9 @@ PROXY FLAGS:
     --trace-buffer N  proxy trace-ring capacity (256; 0 disables)
 
 Both serve and proxy answer {\"cmd\":\"metrics\"} (and a raw
-'GET /metrics' line) with a Prometheus text exposition.
+'GET /metrics' line) with a Prometheus text exposition, and stream
+structured ops events to {\"cmd\":\"watch\"} subscribers (the proxy
+stitches every backend's stream into its cluster-wide journal).
 
 INFER FLAGS:
     --model NAME      digits_linear | fashion_mlp (digits_linear)
@@ -251,6 +262,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         trace_rate: args.parse_or("trace-rate", 0.0f64),
         trace_slow_us: args.parse_or("trace-slow-us", 0u64),
         trace_buffer: args.parse_or("trace-buffer", 256usize),
+        slo_p99_us: args.parse_or("slo-p99-us", 0u64),
+        slo_error_rate: args.parse_or("slo-error-rate", 0.0f64),
+        slo_mse_factor: args.parse_or("slo-mse-factor", 8.0f64),
+        slo_eval_ms: args.parse_or("slo-eval-ms", 1_000u64),
     };
     serve(&cfg)
 }

@@ -1,0 +1,652 @@
+//! Bounded per-process event journal with push-based watch subscriptions.
+//!
+//! The journal is the ops-plane sibling of [`crate::trace::Tracer`]: a
+//! bounded ring of structured [`Event`]s (overload onset/clear, backend
+//! mark-down/up, watchdog timeouts, slow-trace promotions, plan-cache
+//! eviction storms, auto-resolution infeasibility, scheme switches, SLO
+//! alert transitions) each carrying a per-process monotonic timestamp, a
+//! [`Severity`], and a small label map. Publication is cheap — one short
+//! ring lock plus a fan-out over registered [`Subscription`]s — and the
+//! journal never blocks the publisher: subscriber queues are bounded and
+//! drop-oldest, counting what they shed.
+//!
+//! Subscriptions back the `{"cmd":"watch"}` protocol verb (proto v4):
+//! each live watch holds one [`Subscription`] whose queued lines the
+//! owning connection's reader loop pumps into the shared writer channel.
+//! Delivery is therefore stream-only — a subscriber sees events published
+//! *after* it registered, never a replay — which is what makes cluster
+//! re-subscription after a backend bounce duplicate-free by construction.
+//!
+//! The journal also owns the process's **active-alert set**: the SLO
+//! evaluator flips alerts through [`Journal::set_alert`], which publishes
+//! [`EventKind::AlertFired`] / [`EventKind::AlertCleared`] transitions and
+//! feeds the `dither_alert_active` gauge family rendered by
+//! [`Journal::append_prometheus`].
+
+use crate::trace::PromText;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default journal ring capacity (events retained for inspection).
+pub const DEFAULT_JOURNAL_CAP: usize = 1024;
+
+/// Default per-subscriber queue bound (lines pending delivery).
+pub const DEFAULT_SUB_QUEUE: usize = 256;
+
+/// Event severity, ordered `Info < Warn < Error` so a subscription's
+/// minimum-severity filter is a plain comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Routine lifecycle signal (process start, overload cleared, ...).
+    Info,
+    /// Degradation worth an operator's glance (overload onset, alert).
+    Warn,
+    /// Losing work or failing a declared objective (watchdog timeout).
+    Error,
+}
+
+impl Severity {
+    /// Wire name (`info` / `warn` / `error`).
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+
+    /// Parse a wire name back to a severity.
+    pub fn from_wire(name: &str) -> Option<Severity> {
+        match name {
+            "info" => Some(Severity::Info),
+            "warn" => Some(Severity::Warn),
+            "error" => Some(Severity::Error),
+            _ => None,
+        }
+    }
+}
+
+/// What happened. The set is closed on purpose: every kind is a signal
+/// an operator can subscribe to by name, and the wire names are part of
+/// protocol v4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// Process came up (labels: kernel, schemes).
+    ProcessStart,
+    /// Queue backpressure started rejecting work (labels: rejected).
+    OverloadOnset,
+    /// Backpressure drained — no rejects for several evaluator ticks.
+    OverloadClear,
+    /// Cluster health monitor marked a backend down (labels: backend).
+    BackendDown,
+    /// Cluster health monitor probed a backend back up (labels: backend).
+    BackendUp,
+    /// Reply watchdog expired in-flight requests (labels: count).
+    WatchdogTimeout,
+    /// Tracer promoted slow requests past the sampling gate (labels: count).
+    SlowPromotion,
+    /// Plan cache churned hard inside one window (labels: evictions).
+    PlanEvictStorm,
+    /// Auto resolution could not satisfy a declared budget (labels: count).
+    AutoInfeasible,
+    /// Auto resolution moved a model to a new (scheme, k) operating point.
+    SchemeSwitch,
+    /// An SLO burn-rate alert started firing (labels: alert + context).
+    AlertFired,
+    /// A previously firing SLO alert stopped (labels: alert + context).
+    AlertCleared,
+}
+
+impl EventKind {
+    /// Every kind, in wire order (drives filters and property tests).
+    pub const ALL: [EventKind; 12] = [
+        EventKind::ProcessStart,
+        EventKind::OverloadOnset,
+        EventKind::OverloadClear,
+        EventKind::BackendDown,
+        EventKind::BackendUp,
+        EventKind::WatchdogTimeout,
+        EventKind::SlowPromotion,
+        EventKind::PlanEvictStorm,
+        EventKind::AutoInfeasible,
+        EventKind::SchemeSwitch,
+        EventKind::AlertFired,
+        EventKind::AlertCleared,
+    ];
+
+    /// Wire name of this kind.
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            EventKind::ProcessStart => "process_start",
+            EventKind::OverloadOnset => "overload_onset",
+            EventKind::OverloadClear => "overload_clear",
+            EventKind::BackendDown => "backend_down",
+            EventKind::BackendUp => "backend_up",
+            EventKind::WatchdogTimeout => "watchdog_timeout",
+            EventKind::SlowPromotion => "slow_promotion",
+            EventKind::PlanEvictStorm => "plan_evict_storm",
+            EventKind::AutoInfeasible => "auto_infeasible",
+            EventKind::SchemeSwitch => "scheme_switch",
+            EventKind::AlertFired => "alert_fired",
+            EventKind::AlertCleared => "alert_cleared",
+        }
+    }
+
+    /// Parse a wire name back to a kind.
+    pub fn from_wire(name: &str) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.wire_name() == name)
+    }
+}
+
+/// One journal entry. `seq` is a per-process dense sequence number (a
+/// subscriber observing a gap knows exactly how many events it missed)
+/// and `t_us` is microseconds since the journal was created — monotonic
+/// within a process, never wall-clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    /// Dense per-journal sequence number, starting at 1.
+    pub seq: u64,
+    /// Microseconds since journal creation (monotonic clock).
+    pub t_us: u64,
+    /// Severity class.
+    pub severity: Severity,
+    /// What happened.
+    pub kind: EventKind,
+    /// Key/value context labels (model, backend, alert name, counts...).
+    pub labels: BTreeMap<String, String>,
+}
+
+impl Event {
+    /// Wire shape: `{"seq":N,"t_us":N,"severity":"...","kind":"...",
+    /// "labels":{...}}`.
+    pub fn to_json(&self) -> Json {
+        let labels: BTreeMap<String, Json> = self
+            .labels
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect();
+        Json::obj(vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("t_us", Json::Num(self.t_us as f64)),
+            ("severity", Json::Str(self.severity.wire_name().to_string())),
+            ("kind", Json::Str(self.kind.wire_name().to_string())),
+            ("labels", Json::Obj(labels)),
+        ])
+    }
+
+    /// Parse the wire shape back. Unknown severities/kinds reject the
+    /// whole event (a v4 peer never emits them).
+    pub fn from_json(v: &Json) -> Option<Event> {
+        let seq = v.get("seq").and_then(Json::as_f64)? as u64;
+        let t_us = v.get("t_us").and_then(Json::as_f64)? as u64;
+        let severity = Severity::from_wire(v.get("severity").and_then(Json::as_str)?)?;
+        let kind = EventKind::from_wire(v.get("kind").and_then(Json::as_str)?)?;
+        let mut labels = BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("labels") {
+            for (k, val) in m {
+                labels.insert(k.clone(), val.as_str()?.to_string());
+            }
+        }
+        Some(Event {
+            seq,
+            t_us,
+            severity,
+            kind,
+            labels,
+        })
+    }
+}
+
+/// One live watch: a bounded queue of pre-formatted event lines plus the
+/// filters that decide which published events it receives. Created by
+/// [`Journal::subscribe`]; the owning connection pumps [`Subscription::pop`]
+/// into its writer and tears down with [`Journal::unsubscribe`].
+#[derive(Debug)]
+pub struct Subscription {
+    id: u64,
+    min_severity: Severity,
+    /// Empty = all kinds.
+    kinds: Vec<EventKind>,
+    cap: usize,
+    queue: Mutex<VecDeque<String>>,
+    dropped: AtomicU64,
+}
+
+impl Subscription {
+    /// Subscription id — the `"watch"` tag on every delivered line.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Does `event` pass this subscription's filters?
+    pub fn matches(&self, event: &Event) -> bool {
+        event.severity >= self.min_severity
+            && (self.kinds.is_empty() || self.kinds.contains(&event.kind))
+    }
+
+    /// Queue one formatted line, shedding the oldest if full.
+    fn offer(&self, line: String) {
+        let mut q = self.queue.lock().unwrap();
+        if q.len() >= self.cap {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(line);
+    }
+
+    /// Take the oldest pending line, if any.
+    pub fn pop(&self) -> Option<String> {
+        self.queue.lock().unwrap().pop_front()
+    }
+
+    /// Put a line back at the *front* of the queue — the pump does this
+    /// when the shared writer channel is momentarily full, so delivery
+    /// order is preserved across backoff.
+    pub fn requeue_front(&self, line: String) {
+        self.queue.lock().unwrap().push_front(line);
+    }
+
+    /// Lines shed by the bounded queue since subscription.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Lines currently queued.
+    pub fn pending(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+}
+
+/// Format one delivered watch line: `{"watch":<sub id>,"event":{...}}`.
+/// Cluster-stitched deliveries carry their backend in the event labels.
+pub fn format_event_line(sub_id: u64, event: &Event) -> String {
+    Json::obj(vec![
+        ("watch", Json::Num(sub_id as f64)),
+        ("event", event.to_json()),
+    ])
+    .to_string()
+}
+
+/// Parse a delivered watch line back into `(subscription id, event)`.
+/// Returns `None` for any other line (replies interleave on the wire).
+pub fn parse_event_line(line: &str) -> Option<(u64, Event)> {
+    let v = Json::parse(line.trim()).ok()?;
+    let sub = v.get("watch").and_then(Json::as_f64)? as u64;
+    let event = Event::from_json(v.get("event")?)?;
+    Some((sub, event))
+}
+
+/// The per-process event journal: bounded ring + subscriber fan-out +
+/// active-alert set. Shared as `Arc<Journal>` between the publishing
+/// sides (evaluator thread, batcher workers, health monitor) and the
+/// serving sides (watch connections, `stats`, Prometheus).
+#[derive(Debug)]
+pub struct Journal {
+    origin: Instant,
+    cap: usize,
+    next_seq: AtomicU64,
+    published: AtomicU64,
+    evicted: AtomicU64,
+    dropped: AtomicU64,
+    next_sub: AtomicU64,
+    ring: Mutex<VecDeque<Event>>,
+    watchers: Mutex<Vec<Arc<Subscription>>>,
+    alerts: Mutex<BTreeMap<String, BTreeMap<String, String>>>,
+}
+
+impl Default for Journal {
+    fn default() -> Self {
+        Journal::new(DEFAULT_JOURNAL_CAP)
+    }
+}
+
+impl Journal {
+    /// A journal retaining at most `cap` events.
+    pub fn new(cap: usize) -> Journal {
+        Journal {
+            origin: Instant::now(),
+            cap: cap.max(1),
+            next_seq: AtomicU64::new(1),
+            published: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            next_sub: AtomicU64::new(1),
+            ring: Mutex::new(VecDeque::new()),
+            watchers: Mutex::new(Vec::new()),
+            alerts: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Publish an event built from borrowed label pairs.
+    pub fn publish(&self, severity: Severity, kind: EventKind, labels: &[(&str, &str)]) -> u64 {
+        self.publish_owned(
+            severity,
+            kind,
+            labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+        )
+    }
+
+    /// Publish an event with an owned label map (the proxy's stitcher
+    /// re-publishes parsed backend events through this). Returns the
+    /// assigned sequence number.
+    pub fn publish_owned(
+        &self,
+        severity: Severity,
+        kind: EventKind,
+        labels: BTreeMap<String, String>,
+    ) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let event = Event {
+            seq,
+            t_us: self.origin.elapsed().as_micros() as u64,
+            severity,
+            kind,
+            labels,
+        };
+        {
+            let mut ring = self.ring.lock().unwrap();
+            ring.push_back(event.clone());
+            while ring.len() > self.cap {
+                ring.pop_front();
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.published.fetch_add(1, Ordering::Relaxed);
+        let watchers = self.watchers.lock().unwrap();
+        for sub in watchers.iter() {
+            if sub.matches(&event) {
+                let before = sub.dropped();
+                sub.offer(format_event_line(sub.id, &event));
+                self.dropped
+                    .fetch_add(sub.dropped() - before, Ordering::Relaxed);
+            }
+        }
+        seq
+    }
+
+    /// Register a watch. `kinds` empty means all kinds; `cap` 0 takes
+    /// [`DEFAULT_SUB_QUEUE`]. Delivery starts with the next published
+    /// event — no replay.
+    pub fn subscribe(
+        &self,
+        min_severity: Severity,
+        kinds: Vec<EventKind>,
+        cap: usize,
+    ) -> Arc<Subscription> {
+        let sub = Arc::new(Subscription {
+            id: self.next_sub.fetch_add(1, Ordering::Relaxed),
+            min_severity,
+            kinds,
+            cap: if cap == 0 { DEFAULT_SUB_QUEUE } else { cap },
+            queue: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        });
+        self.watchers.lock().unwrap().push(Arc::clone(&sub));
+        sub
+    }
+
+    /// Remove a watch by id. Idempotent; returns whether it was live.
+    pub fn unsubscribe(&self, id: u64) -> bool {
+        let mut watchers = self.watchers.lock().unwrap();
+        let before = watchers.len();
+        watchers.retain(|s| s.id != id);
+        watchers.len() != before
+    }
+
+    /// Flip an alert's active state. A `false → true` transition
+    /// publishes [`EventKind::AlertFired`] (severity warn) and a
+    /// `true → false` transition [`EventKind::AlertCleared`] (info);
+    /// anything else is a no-op. `name` plus `labels` identify the alert
+    /// instance (e.g. `mse` + model/scheme/k). Returns whether the state
+    /// transitioned.
+    pub fn set_alert(&self, name: &str, labels: &[(&str, &str)], active: bool) -> bool {
+        let mut owned: BTreeMap<String, String> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        owned.insert("alert".to_string(), name.to_string());
+        let key = owned
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let transitioned = {
+            let mut alerts = self.alerts.lock().unwrap();
+            if active {
+                alerts.insert(key, owned.clone()).is_none()
+            } else {
+                alerts.remove(&key).is_some()
+            }
+        };
+        if transitioned {
+            let (sev, kind) = if active {
+                (Severity::Warn, EventKind::AlertFired)
+            } else {
+                (Severity::Info, EventKind::AlertCleared)
+            };
+            self.publish_owned(sev, kind, owned);
+        }
+        transitioned
+    }
+
+    /// Currently firing alerts, as their full label maps (each includes
+    /// its `alert` name label).
+    pub fn active_alerts(&self) -> Vec<BTreeMap<String, String>> {
+        self.alerts.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Newest `limit` retained events, newest first.
+    pub fn recent(&self, limit: usize) -> Vec<Event> {
+        let ring = self.ring.lock().unwrap();
+        ring.iter().rev().take(limit).cloned().collect()
+    }
+
+    /// Total events published.
+    pub fn published(&self) -> u64 {
+        self.published.load(Ordering::Relaxed)
+    }
+
+    /// Events evicted from the bounded ring.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Lines shed across all subscriber queues.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Live subscription count.
+    pub fn subscribers(&self) -> usize {
+        self.watchers.lock().unwrap().len()
+    }
+
+    /// Render the journal's Prometheus families: event counters, watch
+    /// gauges, and one `dither_alert_active` sample per firing alert.
+    pub fn append_prometheus(&self, p: &mut PromText) {
+        p.scalar(
+            "dither_events_total",
+            "counter",
+            "Structured ops events published to the journal",
+            self.published() as f64,
+        );
+        p.scalar(
+            "dither_events_dropped_total",
+            "counter",
+            "Watch lines shed by bounded subscriber queues",
+            self.dropped() as f64,
+        );
+        p.scalar(
+            "dither_watch_subscribers",
+            "gauge",
+            "Live watch subscriptions",
+            self.subscribers() as f64,
+        );
+        p.family(
+            "dither_alert_active",
+            "gauge",
+            "SLO burn-rate alerts currently firing (1 per active alert)",
+        );
+        for labels in self.active_alerts() {
+            let pairs: Vec<(&str, &str)> = labels
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.as_str()))
+                .collect();
+            p.sample("dither_alert_active", &pairs, 1.0);
+        }
+    }
+}
+
+/// Render the `dither_build_info` gauge (value 1, identity as labels)
+/// plus nothing else — both tiers call this next to their uptime gauge.
+pub fn append_build_info(p: &mut PromText, proto: &str, kernel: &str, schemes: &str) {
+    p.family(
+        "dither_build_info",
+        "gauge",
+        "Build identity: crate version, protocol, kernel, scheme registry",
+    );
+    p.sample(
+        "dither_build_info",
+        &[
+            ("version", env!("CARGO_PKG_VERSION")),
+            ("proto", proto),
+            ("kernel", kernel),
+            ("schemes", schemes),
+        ],
+        1.0,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::check_exposition;
+
+    fn ev(j: &Journal, sev: Severity, kind: EventKind) -> u64 {
+        j.publish(sev, kind, &[("model", "digits_linear")])
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_evictions() {
+        let j = Journal::new(4);
+        for _ in 0..10 {
+            ev(&j, Severity::Info, EventKind::SlowPromotion);
+        }
+        assert_eq!(j.published(), 10);
+        assert_eq!(j.evicted(), 6);
+        let recent = j.recent(16);
+        assert_eq!(recent.len(), 4);
+        // Newest first, dense seqs.
+        assert_eq!(recent[0].seq, 10);
+        assert_eq!(recent[3].seq, 7);
+        assert!(recent[0].t_us >= recent[3].t_us, "monotonic timestamps");
+    }
+
+    #[test]
+    fn subscription_filters_by_severity_and_kind() {
+        let j = Journal::new(16);
+        let warn_only = j.subscribe(Severity::Warn, vec![], 8);
+        let kind_only = j.subscribe(Severity::Info, vec![EventKind::BackendDown], 8);
+        ev(&j, Severity::Info, EventKind::SlowPromotion);
+        ev(&j, Severity::Warn, EventKind::OverloadOnset);
+        ev(&j, Severity::Error, EventKind::BackendDown);
+        assert_eq!(warn_only.pending(), 2, "info filtered out");
+        assert_eq!(kind_only.pending(), 1, "only backend_down passes");
+        let line = kind_only.pop().unwrap();
+        let (sub, event) = parse_event_line(&line).expect("watch line parses");
+        assert_eq!(sub, kind_only.id());
+        assert_eq!(event.kind, EventKind::BackendDown);
+        assert_eq!(event.labels.get("model").map(String::as_str), Some("digits_linear"));
+    }
+
+    #[test]
+    fn bounded_queue_drops_oldest_and_counts() {
+        let j = Journal::new(16);
+        let sub = j.subscribe(Severity::Info, vec![], 2);
+        for _ in 0..5 {
+            ev(&j, Severity::Info, EventKind::SlowPromotion);
+        }
+        assert_eq!(sub.pending(), 2);
+        assert_eq!(sub.dropped(), 3);
+        assert_eq!(j.dropped(), 3);
+        // The survivors are the *newest* two events.
+        let (_, first) = parse_event_line(&sub.pop().unwrap()).unwrap();
+        assert_eq!(first.seq, 4, "oldest lines were shed");
+    }
+
+    #[test]
+    fn unsubscribe_stops_delivery() {
+        let j = Journal::new(16);
+        let sub = j.subscribe(Severity::Info, vec![], 8);
+        assert_eq!(j.subscribers(), 1);
+        assert!(j.unsubscribe(sub.id()));
+        assert!(!j.unsubscribe(sub.id()), "idempotent");
+        ev(&j, Severity::Error, EventKind::WatchdogTimeout);
+        assert_eq!(sub.pending(), 0);
+        assert_eq!(j.subscribers(), 0);
+    }
+
+    #[test]
+    fn event_json_round_trips() {
+        let j = Journal::new(4);
+        j.publish(
+            Severity::Warn,
+            EventKind::SchemeSwitch,
+            &[("model", "fashion_mlp"), ("to_scheme", "sr2"), ("to_k", "4")],
+        );
+        let event = j.recent(1).pop().unwrap();
+        let back = Event::from_json(&event.to_json()).expect("round trip");
+        assert_eq!(back, event);
+    }
+
+    #[test]
+    fn alert_transitions_publish_fire_and_clear_once() {
+        let j = Journal::new(16);
+        let labels = [("model", "digits_linear"), ("scheme", "dither"), ("k", "4")];
+        assert!(j.set_alert("mse", &labels, true));
+        assert!(!j.set_alert("mse", &labels, true), "already firing");
+        assert_eq!(j.active_alerts().len(), 1);
+        assert!(j.set_alert("mse", &labels, false));
+        assert!(!j.set_alert("mse", &labels, false), "already clear");
+        assert!(j.active_alerts().is_empty());
+        let kinds: Vec<EventKind> = j.recent(8).iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec![EventKind::AlertCleared, EventKind::AlertFired]);
+    }
+
+    #[test]
+    fn prometheus_families_render_and_validate() {
+        let j = Journal::new(16);
+        j.set_alert("latency_p99", &[("budget_us", "1000")], true);
+        ev(&j, Severity::Info, EventKind::ProcessStart);
+        let mut p = PromText::new();
+        j.append_prometheus(&mut p);
+        append_build_info(&mut p, "4", "scalar", "deterministic,dither");
+        let text = p.finish();
+        check_exposition(&text).expect("well-formed");
+        assert!(text.contains("dither_events_total 2"), "{text}");
+        assert!(
+            text.contains("dither_alert_active{alert=\"latency_p99\",budget_us=\"1000\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("dither_build_info{version="), "{text}");
+    }
+
+    #[test]
+    fn requeue_front_preserves_order() {
+        let j = Journal::new(16);
+        let sub = j.subscribe(Severity::Info, vec![], 8);
+        ev(&j, Severity::Info, EventKind::SlowPromotion);
+        ev(&j, Severity::Info, EventKind::SlowPromotion);
+        let first = sub.pop().unwrap();
+        sub.requeue_front(first.clone());
+        assert_eq!(sub.pop().as_ref(), Some(&first));
+        let (_, second) = parse_event_line(&sub.pop().unwrap()).unwrap();
+        assert_eq!(second.seq, 2);
+    }
+}

@@ -1,0 +1,35 @@
+//! Live ops plane: the structured event journal, push-based watch
+//! subscriptions, and SLO burn-rate alerting.
+//!
+//! Traces (PR 8) answer *why was this request slow* and the fidelity
+//! controller (PR 9) *schedules* precision against declared budgets;
+//! this subsystem is the third leg — it *tells an operator when the
+//! paper's Θ(1/N²)-vs-Θ(1/N) economics stop holding in production*,
+//! without anyone polling.
+//!
+//! * [`journal`] — the bounded per-process [`Journal`] of structured
+//!   [`Event`]s, the [`Subscription`] fan-out behind the `{"cmd":"watch"}`
+//!   verb (protocol v4), the active-alert set, and the
+//!   `dither_alert_active` / `dither_build_info` Prometheus families;
+//! * [`slo`] — the dual-window [`SloEvaluator`]: lifetime-counter deltas
+//!   and the fidelity snapshot folded into burn-rate alerts (p99 vs
+//!   budget, error rate vs threshold, measured MSE vs the scheme's prior
+//!   envelope) plus delta-derived journal events.
+//!
+//! Both tiers own one journal each. The backend's evaluator thread
+//! publishes into its local journal; the cluster proxy subscribes to
+//! every healthy backend's journal over the wire and stitches the
+//! streams (tagged with the originating backend) into its own, so a
+//! single cluster-level watch observes the whole fleet.
+
+pub mod journal;
+pub mod slo;
+
+pub use journal::{
+    append_build_info, format_event_line, parse_event_line, Event, EventKind, Journal, Severity,
+    Subscription, DEFAULT_JOURNAL_CAP, DEFAULT_SUB_QUEUE,
+};
+pub use slo::{
+    MseCell, SloEvaluator, SloPolicy, SloSample, FAST_TICKS, MSE_MIN_SAMPLES, OVERLOAD_CLEAR_TICKS,
+    PLAN_EVICT_STORM, SLOW_TICKS,
+};

@@ -1,0 +1,531 @@
+//! SLO burn-rate evaluation: fold lifetime counters, latency histograms,
+//! and the fidelity controller's measured-MSE snapshot into journal
+//! events and active alerts.
+//!
+//! The evaluator runs on a slow tick (default 1 s, `--slo-eval-ms`) far
+//! off the request hot path. Each tick it takes one **cumulative**
+//! [`SloSample`], differences it against the previous tick, and keeps the
+//! per-tick deltas in a bounded window. Alerts use the classic
+//! dual-window burn-rate shape: a *fast* window (last [`FAST_TICKS`]
+//! ticks) and a *slow* window (last [`SLOW_TICKS`]) must **both** breach
+//! for an alert to fire — a single hiccup inside an otherwise healthy
+//! slow window stays quiet — and a firing alert clears as soon as the
+//! fast window is clean again, so recovery is observed promptly.
+//!
+//! Three alert families, each disabled when its budget is zero:
+//!
+//! * `latency_p99` — p99 recomputed from the windowed log₂ histogram
+//!   deltas vs the declared `--slo-p99-us` budget;
+//! * `error_rate` — (errors + timeouts) / requests vs `--slo-error-rate`;
+//! * `mse` — per `(model, scheme, k)` cell with enough shadow samples:
+//!   measured MSE vs `--slo-mse-factor ×` the scheme's dither-prior
+//!   envelope (the Θ(1/N²) economics of the paper; a cell drifting past
+//!   the envelope means the deterministic-stochastic tradeoff stopped
+//!   paying for itself).
+//!
+//! The same tick also converts counter deltas into discrete journal
+//! events (overload onset/clear with hysteresis, watchdog timeouts,
+//! slow-trace promotions, plan-cache eviction storms, infeasible auto
+//! resolutions) so the hot path never publishes for these itself.
+
+use crate::coordinator::metrics::percentile_from_buckets;
+use crate::obs::journal::{EventKind, Journal, Severity};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Fast burn-rate window, in evaluator ticks.
+pub const FAST_TICKS: usize = 5;
+
+/// Slow burn-rate window, in evaluator ticks.
+pub const SLOW_TICKS: usize = 30;
+
+/// Consecutive reject-free ticks before overload is declared cleared.
+pub const OVERLOAD_CLEAR_TICKS: u32 = 3;
+
+/// Plan-cache evictions inside one tick that count as a storm.
+pub const PLAN_EVICT_STORM: u64 = 16;
+
+/// Shadow samples a fidelity cell needs before its MSE is alertable
+/// (mirrors the controller's trust threshold).
+pub const MSE_MIN_SAMPLES: u64 = 256;
+
+/// Consecutive breaching ticks before an `mse` alert fires (and clean
+/// ticks before it clears) — shadow sampling is noisy at the margin.
+pub const MSE_STREAK: u32 = 2;
+
+/// Declared service-level objectives. A zero field disables that alert
+/// family; [`SloPolicy::disabled`] disables the evaluator entirely.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    /// p99 latency budget in microseconds (0 = off).
+    pub p99_us: u64,
+    /// Highest acceptable (errors + timeouts) / requests (0.0 = off).
+    pub error_rate: f64,
+    /// Measured-MSE alarm threshold as a multiple of the scheme's prior
+    /// envelope (0.0 = off).
+    pub mse_factor: f64,
+    /// Evaluator tick interval in milliseconds (0 = evaluator off).
+    pub eval_ms: u64,
+}
+
+impl SloPolicy {
+    /// Everything off — no evaluator thread is spawned.
+    pub fn disabled() -> SloPolicy {
+        SloPolicy {
+            p99_us: 0,
+            error_rate: 0.0,
+            mse_factor: 0.0,
+            eval_ms: 0,
+        }
+    }
+
+    /// Should an evaluator run at all?
+    pub fn enabled(&self) -> bool {
+        self.eval_ms > 0
+            && (self.p99_us > 0 || self.error_rate > 0.0 || self.mse_factor > 0.0)
+    }
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy::disabled()
+    }
+}
+
+/// One tick's **cumulative** lifetime counters; the evaluator does the
+/// differencing. Collected from `MetricsHandle`, the tracer, and the
+/// per-shard plan caches.
+#[derive(Clone, Debug, Default)]
+pub struct SloSample {
+    /// Requests completed.
+    pub requests: u64,
+    /// Server-side errors.
+    pub errors: u64,
+    /// Requests bounced with `overloaded`.
+    pub rejected: u64,
+    /// Watchdog-expired requests.
+    pub timeouts: u64,
+    /// Tracer slow-promotions.
+    pub slow_promoted: u64,
+    /// Plan-cache evictions.
+    pub plan_evictions: u64,
+    /// Budget-infeasible auto resolutions.
+    pub auto_infeasible: u64,
+    /// Lifetime log₂ latency histogram (length [`crate::coordinator::BUCKETS`]).
+    pub latency_buckets: Vec<u64>,
+}
+
+/// One measured-MSE cell from the fidelity snapshot, with its prior
+/// envelope already attached by the caller (keeps this module decoupled
+/// from the controller's types).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MseCell {
+    /// Model family wire name.
+    pub model: String,
+    /// Rounding scheme wire name.
+    pub scheme: String,
+    /// Bit width.
+    pub k: u32,
+    /// Measured shadow MSE.
+    pub mse: f64,
+    /// Shadow samples behind the estimate.
+    pub samples: u64,
+    /// Prior MSE envelope for this (scheme, k).
+    pub prior: f64,
+}
+
+/// Per-tick deltas derived from consecutive [`SloSample`]s.
+#[derive(Clone, Debug, Default)]
+struct Delta {
+    requests: u64,
+    errors: u64,
+    rejected: u64,
+    timeouts: u64,
+    latency_buckets: Vec<u64>,
+}
+
+/// The dual-window burn-rate evaluator. Pure state machine: feed it one
+/// cumulative sample per tick via [`SloEvaluator::observe`] and it
+/// publishes events / flips alerts on the journal it is handed — no
+/// threads, no clocks, so tests drive it tick by tick.
+#[derive(Debug)]
+pub struct SloEvaluator {
+    policy: SloPolicy,
+    last: Option<SloSample>,
+    window: VecDeque<Delta>,
+    latency_active: bool,
+    error_active: bool,
+    overload: bool,
+    overload_clean: u32,
+    mse_streaks: BTreeMap<(String, String, u32), u32>,
+    mse_active: BTreeMap<(String, String, u32), bool>,
+}
+
+impl SloEvaluator {
+    /// Evaluator for `policy`.
+    pub fn new(policy: SloPolicy) -> SloEvaluator {
+        SloEvaluator {
+            policy,
+            last: None,
+            window: VecDeque::new(),
+            latency_active: false,
+            error_active: false,
+            overload: false,
+            overload_clean: 0,
+            mse_streaks: BTreeMap::new(),
+            mse_active: BTreeMap::new(),
+        }
+    }
+
+    /// The policy this evaluator enforces.
+    pub fn policy(&self) -> &SloPolicy {
+        &self.policy
+    }
+
+    /// Fold one tick: difference `sample` against the previous tick,
+    /// emit delta-derived events, and re-evaluate every alert family.
+    /// The first call only establishes the baseline.
+    pub fn observe(&mut self, sample: SloSample, cells: &[MseCell], journal: &Journal) {
+        let Some(prev) = self.last.take() else {
+            self.last = Some(sample);
+            return;
+        };
+        let delta = Delta {
+            requests: sample.requests.saturating_sub(prev.requests),
+            errors: sample.errors.saturating_sub(prev.errors),
+            rejected: sample.rejected.saturating_sub(prev.rejected),
+            timeouts: sample.timeouts.saturating_sub(prev.timeouts),
+            latency_buckets: sample
+                .latency_buckets
+                .iter()
+                .zip(prev.latency_buckets.iter().chain(std::iter::repeat(&0)))
+                .map(|(c, p)| c.saturating_sub(*p))
+                .collect(),
+        };
+        self.delta_events(&sample, &prev, &delta, journal);
+        self.last = Some(sample);
+        self.window.push_back(delta);
+        while self.window.len() > SLOW_TICKS {
+            self.window.pop_front();
+        }
+        self.latency_alert(journal);
+        self.error_alert(journal);
+        self.mse_alerts(cells, journal);
+    }
+
+    /// Discrete events from this tick's counter movement.
+    fn delta_events(&mut self, cur: &SloSample, prev: &SloSample, delta: &Delta, journal: &Journal) {
+        if delta.rejected > 0 {
+            self.overload_clean = 0;
+            if !self.overload {
+                self.overload = true;
+                journal.publish(
+                    Severity::Warn,
+                    EventKind::OverloadOnset,
+                    &[("rejected", &delta.rejected.to_string())],
+                );
+            }
+        } else if self.overload {
+            self.overload_clean += 1;
+            if self.overload_clean >= OVERLOAD_CLEAR_TICKS {
+                self.overload = false;
+                self.overload_clean = 0;
+                journal.publish(Severity::Info, EventKind::OverloadClear, &[]);
+            }
+        }
+        if delta.timeouts > 0 {
+            journal.publish(
+                Severity::Error,
+                EventKind::WatchdogTimeout,
+                &[("count", &delta.timeouts.to_string())],
+            );
+        }
+        let promoted = cur.slow_promoted.saturating_sub(prev.slow_promoted);
+        if promoted > 0 {
+            journal.publish(
+                Severity::Info,
+                EventKind::SlowPromotion,
+                &[("count", &promoted.to_string())],
+            );
+        }
+        let evictions = cur.plan_evictions.saturating_sub(prev.plan_evictions);
+        if evictions >= PLAN_EVICT_STORM {
+            journal.publish(
+                Severity::Warn,
+                EventKind::PlanEvictStorm,
+                &[("evictions", &evictions.to_string())],
+            );
+        }
+        let infeasible = cur.auto_infeasible.saturating_sub(prev.auto_infeasible);
+        if infeasible > 0 {
+            journal.publish(
+                Severity::Warn,
+                EventKind::AutoInfeasible,
+                &[("count", &infeasible.to_string())],
+            );
+        }
+    }
+
+    /// Summed bucket deltas plus request/error totals over the last
+    /// `ticks` window entries.
+    fn window_totals(&self, ticks: usize) -> (Vec<u64>, u64, u64) {
+        let mut buckets: Vec<u64> = Vec::new();
+        let (mut requests, mut errors) = (0u64, 0u64);
+        for d in self.window.iter().rev().take(ticks) {
+            requests += d.requests;
+            errors += d.errors + d.timeouts;
+            if buckets.len() < d.latency_buckets.len() {
+                buckets.resize(d.latency_buckets.len(), 0);
+            }
+            for (acc, v) in buckets.iter_mut().zip(d.latency_buckets.iter()) {
+                *acc += v;
+            }
+        }
+        (buckets, requests, errors)
+    }
+
+    fn latency_alert(&mut self, journal: &Journal) {
+        if self.policy.p99_us == 0 {
+            return;
+        }
+        let breach = |ticks: usize| {
+            let (buckets, _, _) = self.window_totals(ticks);
+            buckets.iter().sum::<u64>() > 0
+                && percentile_from_buckets(&buckets, 0.99) > self.policy.p99_us as f64
+        };
+        let fast = breach(FAST_TICKS);
+        let active = if self.latency_active { fast } else { fast && breach(SLOW_TICKS) };
+        if active != self.latency_active {
+            self.latency_active = active;
+            journal.set_alert(
+                "latency_p99",
+                &[("budget_us", &self.policy.p99_us.to_string())],
+                active,
+            );
+        }
+    }
+
+    fn error_alert(&mut self, journal: &Journal) {
+        if self.policy.error_rate <= 0.0 {
+            return;
+        }
+        let breach = |ticks: usize| {
+            let (_, requests, errors) = self.window_totals(ticks);
+            requests > 0 && errors as f64 / requests as f64 > self.policy.error_rate
+        };
+        let fast = breach(FAST_TICKS);
+        let active = if self.error_active { fast } else { fast && breach(SLOW_TICKS) };
+        if active != self.error_active {
+            self.error_active = active;
+            journal.set_alert(
+                "error_rate",
+                &[("threshold", &format!("{}", self.policy.error_rate))],
+                active,
+            );
+        }
+    }
+
+    fn mse_alerts(&mut self, cells: &[MseCell], journal: &Journal) {
+        if self.policy.mse_factor <= 0.0 {
+            return;
+        }
+        for cell in cells {
+            if cell.samples < MSE_MIN_SAMPLES || cell.prior <= 0.0 {
+                continue;
+            }
+            let key = (cell.model.clone(), cell.scheme.clone(), cell.k);
+            let breach = cell.mse > self.policy.mse_factor * cell.prior;
+            let streak = self.mse_streaks.entry(key.clone()).or_insert(0);
+            let active = self.mse_active.entry(key.clone()).or_insert(false);
+            // One streak counter serves both directions: consecutive
+            // breaching ticks arm the alert, consecutive clean ticks
+            // disarm it.
+            if breach != *active {
+                *streak += 1;
+            } else {
+                *streak = 0;
+            }
+            if *streak >= MSE_STREAK {
+                *streak = 0;
+                *active = breach;
+                let k = cell.k.to_string();
+                journal.set_alert(
+                    "mse",
+                    &[
+                        ("model", &cell.model),
+                        ("scheme", &cell.scheme),
+                        ("k", &k),
+                    ],
+                    breach,
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> SloPolicy {
+        SloPolicy {
+            p99_us: 1_000,
+            error_rate: 0.1,
+            mse_factor: 8.0,
+            eval_ms: 100,
+        }
+    }
+
+    /// Cumulative sample where every one of `n` requests landed in the
+    /// histogram bucket holding `latency_us`.
+    fn sample(requests: u64, errors: u64, latency_us: u64) -> SloSample {
+        let mut buckets = vec![0u64; crate::coordinator::BUCKETS];
+        let idx = (64 - latency_us.max(1).leading_zeros() as usize).saturating_sub(1);
+        buckets[idx.min(crate::coordinator::BUCKETS - 1)] = requests;
+        SloSample {
+            requests,
+            errors,
+            latency_buckets: buckets,
+            ..SloSample::default()
+        }
+    }
+
+    fn alert_names(j: &Journal) -> Vec<String> {
+        j.active_alerts()
+            .iter()
+            .map(|a| a["alert"].clone())
+            .collect()
+    }
+
+    #[test]
+    fn disabled_policy_reports_disabled() {
+        assert!(!SloPolicy::disabled().enabled());
+        assert!(policy().enabled());
+        assert!(!SloPolicy { eval_ms: 0, ..policy() }.enabled());
+    }
+
+    #[test]
+    fn latency_alert_fires_on_sustained_breach_and_clears() {
+        let j = Journal::new(64);
+        let mut e = SloEvaluator::new(policy());
+        // Baseline, then slow traffic: every tick's p99 lands way past
+        // the 1 ms budget.
+        let mut total = 0u64;
+        e.observe(sample(total, 0, 50_000), &[], &j);
+        for _ in 0..3 {
+            total += 100;
+            e.observe(sample(total, 0, 50_000), &[], &j);
+        }
+        assert_eq!(alert_names(&j), vec!["latency_p99"]);
+        // Traffic stops: fast window drains to zero counts → clear.
+        for _ in 0..FAST_TICKS + 1 {
+            e.observe(sample(total, 0, 50_000), &[], &j);
+        }
+        assert!(alert_names(&j).is_empty(), "{:?}", j.recent(16));
+        let kinds: Vec<EventKind> = j.recent(16).iter().map(|ev| ev.kind).collect();
+        assert!(kinds.contains(&EventKind::AlertFired));
+        assert!(kinds.contains(&EventKind::AlertCleared));
+    }
+
+    #[test]
+    fn fast_latency_is_quiet_within_budget() {
+        let j = Journal::new(64);
+        let mut e = SloEvaluator::new(policy());
+        let mut total = 0u64;
+        for _ in 0..10 {
+            total += 100;
+            e.observe(sample(total, 0, 100), &[], &j);
+        }
+        assert!(alert_names(&j).is_empty());
+    }
+
+    #[test]
+    fn error_rate_alert_uses_dual_window() {
+        let j = Journal::new(64);
+        let mut e = SloEvaluator::new(policy());
+        let (mut reqs, mut errs) = (0u64, 0u64);
+        e.observe(sample(reqs, errs, 100), &[], &j);
+        for _ in 0..4 {
+            reqs += 100;
+            errs += 50; // 50% error rate, budget is 10%
+            e.observe(sample(reqs, errs, 100), &[], &j);
+        }
+        assert!(alert_names(&j).contains(&"error_rate".to_string()));
+        // Healthy traffic pushes the fast-window rate back under budget.
+        for _ in 0..FAST_TICKS + 1 {
+            reqs += 1_000;
+            e.observe(sample(reqs, errs, 100), &[], &j);
+        }
+        assert!(!alert_names(&j).contains(&"error_rate".to_string()));
+    }
+
+    #[test]
+    fn mse_alert_needs_samples_and_a_streak() {
+        let j = Journal::new(64);
+        let mut e = SloEvaluator::new(policy());
+        let hot = |samples: u64| MseCell {
+            model: "digits_linear".to_string(),
+            scheme: "dither".to_string(),
+            k: 4,
+            mse: 100.0,
+            samples,
+            prior: 1.0,
+        };
+        let mut reqs = 0u64;
+        e.observe(sample(reqs, 0, 100), &[hot(1)], &j);
+        for _ in 0..4 {
+            reqs += 10;
+            e.observe(sample(reqs, 0, 100), &[hot(1)], &j);
+        }
+        assert!(alert_names(&j).is_empty(), "undersampled cell never alerts");
+        for _ in 0..MSE_STREAK {
+            reqs += 10;
+            e.observe(sample(reqs, 0, 100), &[hot(10_000)], &j);
+        }
+        assert_eq!(alert_names(&j), vec!["mse"]);
+        // Back inside the envelope for the clear streak.
+        let cool = MseCell { mse: 0.5, ..hot(10_000) };
+        for _ in 0..MSE_STREAK {
+            reqs += 10;
+            e.observe(sample(reqs, 0, 100), &[cool.clone()], &j);
+        }
+        assert!(alert_names(&j).is_empty());
+    }
+
+    #[test]
+    fn delta_counters_become_events_with_overload_hysteresis() {
+        let j = Journal::new(64);
+        let mut e = SloEvaluator::new(policy());
+        let mut s = sample(10, 0, 100);
+        e.observe(s.clone(), &[], &j);
+        s.requests += 10;
+        s.rejected = 5;
+        s.timeouts = 1;
+        s.slow_promoted = 2;
+        s.plan_evictions = PLAN_EVICT_STORM;
+        s.auto_infeasible = 3;
+        e.observe(s.clone(), &[], &j);
+        let kinds: Vec<EventKind> = j.recent(16).iter().map(|ev| ev.kind).collect();
+        for want in [
+            EventKind::OverloadOnset,
+            EventKind::WatchdogTimeout,
+            EventKind::SlowPromotion,
+            EventKind::PlanEvictStorm,
+            EventKind::AutoInfeasible,
+        ] {
+            assert!(kinds.contains(&want), "missing {want:?} in {kinds:?}");
+        }
+        // No further rejects: clear only after the hysteresis streak.
+        for _ in 0..OVERLOAD_CLEAR_TICKS {
+            s.requests += 10;
+            e.observe(s.clone(), &[], &j);
+        }
+        let kinds: Vec<EventKind> = j.recent(4).iter().map(|ev| ev.kind).collect();
+        assert_eq!(kinds[0], EventKind::OverloadClear, "{kinds:?}");
+        let onsets = j
+            .recent(64)
+            .iter()
+            .filter(|ev| ev.kind == EventKind::OverloadOnset)
+            .count();
+        assert_eq!(onsets, 1, "hysteresis: one onset for one episode");
+    }
+}

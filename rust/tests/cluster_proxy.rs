@@ -17,8 +17,12 @@
 //! expositions must be well-formed Prometheus text.
 
 use dither::cluster::{run_proxy, ProxyConfig};
-use dither::coordinator::{format_request, format_request_auto, serve, wait_ready, ServerConfig};
+use dither::coordinator::{
+    format_request, format_request_auto, format_unwatch, format_watch, parse_metrics_reply,
+    parse_watch_ack, serve, wait_ready, ServerConfig, WatchQuery,
+};
 use dither::data::{Dataset, Task};
+use dither::obs::{parse_event_line, Event, EventKind};
 use dither::rounding::SchemeId;
 use dither::util::json::Json;
 use std::collections::HashMap;
@@ -54,6 +58,12 @@ fn backend_cfg(addr: &str) -> ServerConfig {
         trace_rate: 0.0,
         trace_slow_us: 0,
         trace_buffer: 512,
+        // SLO alerting off by default; the alert-routing test overrides
+        // these with an unmeetable budget via struct update syntax.
+        slo_p99_us: 0,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 0,
     }
 }
 
@@ -136,10 +146,18 @@ fn drive_cases(
             .is_some_and(|f| f.iter().any(|v| v.as_str() == Some("pipelined"))),
         "{line}"
     );
-    // Protocol v3 (trace propagation) holds at both tiers: the backend
-    // advertises its registry, the proxy the intersection across healthy
-    // backends — same-build backends, so the full zoo either way.
-    assert_eq!(hello.get("proto").and_then(Json::as_f64), Some(3.0), "{line}");
+    // Protocol v4 (watch/unwatch event subscriptions on top of the v3
+    // trace propagation) holds at both tiers: the backend advertises its
+    // registry, the proxy the intersection across healthy backends —
+    // same-build backends, so the full zoo either way.
+    assert_eq!(hello.get("proto").and_then(Json::as_f64), Some(4.0), "{line}");
+    assert!(
+        hello
+            .get("features")
+            .and_then(Json::as_arr)
+            .is_some_and(|f| f.iter().any(|v| v.as_str() == Some("events"))),
+        "both tiers must advertise the events feature: {line}"
+    );
     let advertised = hello.get("schemes").and_then(Json::as_arr).expect("schemes list");
     for mode in SchemeId::ALL {
         assert!(
@@ -300,10 +318,10 @@ fn fidelity_samples(stats: &Json) -> f64 {
 
 /// Poll the proxy's merged stats until `healthy` backends are reported
 /// (or panic after 60 s).
-fn wait_healthy(n: f64) -> Json {
+fn wait_healthy(proxy: &str, n: f64) -> Json {
     let deadline = Instant::now() + Duration::from_secs(60);
     loop {
-        let stats = fetch_stats(PROXY);
+        let stats = fetch_stats(proxy);
         let healthy = stats
             .get("proxy")
             .and_then(|p| p.get("healthy"))
@@ -463,7 +481,7 @@ fn proxy_over_two_backends_routes_survives_kill_and_merges_stats() {
     let under_kill = drive_cases(PROXY, &cases, &digits, &fashion, Some(BACKEND2));
     check_wave(&under_kill, &cases, Some(&reference));
     b2.join().unwrap().expect("backend 2 exits cleanly");
-    let down = wait_healthy(1.0);
+    let down = wait_healthy(PROXY, 1.0);
     assert_eq!(down.get("shards").and_then(Json::as_f64), Some(1.0), "{down}");
 
     // Wave 4 — steady state on the survivor: all keys now serve from
@@ -529,7 +547,7 @@ fn proxy_over_two_backends_routes_survives_kill_and_merges_stats() {
     // marks it back up and its keys return home.
     let b2b = std::thread::spawn(|| serve(&backend_cfg(BACKEND2)));
     assert!(wait_ready(BACKEND2, Duration::from_secs(120)), "backend 2 back up");
-    let up = wait_healthy(2.0);
+    let up = wait_healthy(PROXY, 2.0);
     assert_eq!(up.get("shards").and_then(Json::as_f64), Some(2.0), "{up}");
     let recovered = drive_cases(PROXY, &cases, &digits, &fashion, None);
     check_wave(&recovered, &cases, Some(&reference));
@@ -585,4 +603,270 @@ fn proxy_over_two_backends_routes_survives_kill_and_merges_stats() {
     shutdown_server(BACKEND2);
     b1.join().unwrap().expect("backend 1 exits cleanly");
     b2b.join().unwrap().expect("backend 2 restart exits cleanly");
+}
+
+// ---------------------------------------------------------------------------
+// Live ops plane: cluster-wide watch subscriptions and alert stitching.
+// ---------------------------------------------------------------------------
+
+/// Read one complete line from a timeout-armed socket. A read timeout can
+/// fire mid-line; partial data accumulates in `buf` across calls and the
+/// buffer is only drained once a full line lands.
+fn poll_line(reader: &mut BufReader<TcpStream>, buf: &mut String) -> Option<String> {
+    match reader.read_line(buf) {
+        Ok(0) | Err(_) => None,
+        Ok(_) => Some(std::mem::take(buf)),
+    }
+}
+
+/// A live watch subscription: the socket, its pending-line buffer, and
+/// the subscription id the server acked.
+struct WatchConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    buf: String,
+    id: u64,
+}
+
+/// Subscribe to everything `addr` journals (works against a backend and
+/// the proxy alike — same verb either way) and wait for the ack.
+fn open_watch(addr: &str) -> WatchConn {
+    let stream = TcpStream::connect(addr).expect("connect for watch");
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    writeln!(writer, "{}", format_watch(&WatchQuery::default())).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let id = loop {
+        assert!(Instant::now() < deadline, "watch ack never arrived from {addr}");
+        if let Some(ack) = poll_line(&mut reader, &mut buf) {
+            break parse_watch_ack(ack.trim()).expect("watch ack");
+        }
+    };
+    WatchConn { reader, writer, buf, id }
+}
+
+impl WatchConn {
+    /// One non-blocking-ish poll: a parsed event if a full line landed.
+    fn poll_event(&mut self) -> Option<Event> {
+        let line = poll_line(&mut self.reader, &mut self.buf)?;
+        let (sub, event) = parse_event_line(line.trim())?;
+        assert_eq!(sub, self.id, "event tagged with the subscription id: {line}");
+        Some(event)
+    }
+
+    /// Collect streamed events until `pred` matches one (the match is the
+    /// last element of the returned vec) or the deadline panics.
+    fn wait_for(&mut self, what: &str, secs: u64, mut pred: impl FnMut(&Event) -> bool) -> Vec<Event> {
+        let deadline = Instant::now() + Duration::from_secs(secs);
+        let mut seen = Vec::new();
+        loop {
+            if let Some(event) = self.poll_event() {
+                let hit = pred(&event);
+                seen.push(event);
+                if hit {
+                    return seen;
+                }
+            }
+            assert!(Instant::now() < deadline, "{what}; events so far: {seen:?}");
+        }
+    }
+
+    /// Tear the subscription down and wait for the `unwatched` ack
+    /// (skipping any event lines still in flight).
+    fn unwatch(mut self) {
+        writeln!(self.writer, "{}", format_unwatch(self.id)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            assert!(Instant::now() < deadline, "unwatch ack never arrived");
+            if let Some(line) = poll_line(&mut self.reader, &mut self.buf) {
+                if line.contains("\"unwatched\"") {
+                    assert!(line.contains("\"removed\":true"), "{line}");
+                    return;
+                }
+            }
+        }
+    }
+}
+
+const BACKEND3: &str = "127.0.0.1:17993";
+const BACKEND4: &str = "127.0.0.1:17994";
+const PROXY2: &str = "127.0.0.1:17995";
+
+#[test]
+fn cluster_watch_survives_backend_kill_and_recovery() {
+    let b1 = std::thread::spawn(|| serve(&backend_cfg(BACKEND3)));
+    let b2 = std::thread::spawn(|| serve(&backend_cfg(BACKEND4)));
+    assert!(wait_ready(BACKEND3, Duration::from_secs(120)), "backend 3 up");
+    assert!(wait_ready(BACKEND4, Duration::from_secs(120)), "backend 4 up");
+    let proxy_cfg = ProxyConfig {
+        addr: PROXY2.to_string(),
+        backends: vec![BACKEND3.to_string(), BACKEND4.to_string()],
+        replicas: 64,
+        backend_inflight: 32,
+        probe_interval_ms: 100,
+        probe_timeout_ms: 1_500,
+        max_backoff_ms: 400,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
+    };
+    let proxy = std::thread::spawn(move || run_proxy(&proxy_cfg));
+    assert!(wait_ready(PROXY2, Duration::from_secs(60)), "proxy up");
+    wait_healthy(PROXY2, 2.0);
+
+    // One cluster-wide subscription watches the whole kill → mark-down →
+    // recovery cycle.
+    let mut watch = open_watch(PROXY2);
+
+    shutdown_server(BACKEND4);
+    b2.join().unwrap().expect("backend 4 exits cleanly");
+    let down_events = watch.wait_for("no BackendDown for the killed backend", 60, |e| {
+        e.kind == EventKind::BackendDown
+            && e.labels.get("addr").map(String::as_str) == Some(BACKEND4)
+    });
+
+    let b2b = std::thread::spawn(|| serve(&backend_cfg(BACKEND4)));
+    assert!(wait_ready(BACKEND4, Duration::from_secs(120)), "backend 4 back up");
+    let up_events = watch.wait_for("no BackendUp after the recovery", 60, |e| {
+        e.kind == EventKind::BackendUp
+            && e.labels.get("addr").map(String::as_str) == Some(BACKEND4)
+    });
+
+    // The uninterrupted subscription saw the whole cycle in order:
+    // journal seqs strictly increase across the stitcher's re-subscribe,
+    // which also rules out duplicated events.
+    let seqs: Vec<u64> = down_events.iter().chain(up_events.iter()).map(|e| e.seq).collect();
+    assert!(
+        seqs.windows(2).all(|w| w[0] < w[1]),
+        "event seqs must strictly increase (ordered, duplicate-free): {seqs:?}"
+    );
+
+    // The cluster surface exposes the watch-plane counters: shed-line
+    // drops and the live subscriber gauge (exactly our one watch).
+    let line = query_line(PROXY2, "{\"cmd\":\"metrics\"}");
+    let text = parse_metrics_reply(line.trim()).expect("proxy metrics reply");
+    dither::trace::check_exposition(&text).expect("well-formed proxy exposition");
+    assert!(text.contains("dither_events_dropped_total"), "{text}");
+    assert!(text.contains("dither_watch_subscribers 1"), "{text}");
+    assert!(text.contains("dither_events_total"), "{text}");
+
+    watch.unwatch();
+    shutdown_server(PROXY2);
+    proxy.join().unwrap().expect("proxy exits cleanly");
+    shutdown_server(BACKEND3);
+    shutdown_server(BACKEND4);
+    b1.join().unwrap().expect("backend 3 exits cleanly");
+    b2b.join().unwrap().expect("backend 4 restart exits cleanly");
+}
+
+const BACKEND5: &str = "127.0.0.1:17996";
+const BACKEND6: &str = "127.0.0.1:17997";
+const PROXY3: &str = "127.0.0.1:17998";
+
+#[test]
+fn slo_breach_alert_reaches_direct_and_cluster_watches_then_clears() {
+    // A 1 µs latency budget: every served request breaches, so traffic
+    // injects the SLO breach and stopping it clears the fast window.
+    let slo_cfg = |addr: &str| ServerConfig {
+        slo_p99_us: 1,
+        slo_eval_ms: 25,
+        shadow_rate: 0.0,
+        ..backend_cfg(addr)
+    };
+    let cfg5 = slo_cfg(BACKEND5);
+    let cfg6 = slo_cfg(BACKEND6);
+    let b1 = std::thread::spawn(move || serve(&cfg5));
+    let b2 = std::thread::spawn(move || serve(&cfg6));
+    assert!(wait_ready(BACKEND5, Duration::from_secs(120)), "backend 5 up");
+    assert!(wait_ready(BACKEND6, Duration::from_secs(120)), "backend 6 up");
+    let proxy_cfg = ProxyConfig {
+        addr: PROXY3.to_string(),
+        backends: vec![BACKEND5.to_string(), BACKEND6.to_string()],
+        replicas: 64,
+        backend_inflight: 32,
+        probe_interval_ms: 100,
+        probe_timeout_ms: 1_500,
+        max_backoff_ms: 400,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
+    };
+    let proxy = std::thread::spawn(move || run_proxy(&proxy_cfg));
+    assert!(wait_ready(PROXY3, Duration::from_secs(60)), "proxy up");
+    wait_healthy(PROXY3, 2.0);
+
+    // Both vantage points subscribe before any traffic: one watch direct
+    // on the breaching backend, one cluster-wide on the proxy.
+    let mut direct_watch = open_watch(BACKEND5);
+    let mut cluster_watch = open_watch(PROXY3);
+
+    // Breach: serial traffic straight at backend 5 until its own watch
+    // streams the burn-rate alert.
+    let digits = Dataset::synthesize(Task::Digits, 4, 0xD17E);
+    let stream = TcpStream::connect(BACKEND5).expect("traffic connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut id = 0u64;
+    let mut fired = Vec::new();
+    while fired.is_empty() {
+        assert!(Instant::now() < deadline, "backend latency alert never fired");
+        id += 1;
+        writeln!(
+            writer,
+            "{}",
+            format_request(id, "digits_linear", 4, SchemeId::Dither, digits.images.row(0))
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        if let Some(event) = direct_watch.poll_event() {
+            if event.kind == EventKind::AlertFired {
+                fired.push(event);
+            }
+        }
+    }
+    assert_eq!(
+        fired[0].labels.get("alert").map(String::as_str),
+        Some("latency_p99"),
+        "{:?}",
+        fired[0]
+    );
+
+    // The same breach must reach the cluster watch as a proxy-journal
+    // alert transition stitched from the backend stream, tagged with the
+    // originating backend id.
+    let stitched = cluster_watch.wait_for("stitched AlertFired never reached the proxy", 60, |e| {
+        e.kind == EventKind::AlertFired
+            && e.labels.get("alert").map(String::as_str) == Some("latency_p99")
+    });
+    assert!(
+        stitched.last().unwrap().labels.contains_key("backend"),
+        "stitched alert must carry the backend tag: {:?}",
+        stitched.last().unwrap()
+    );
+
+    // Clear: stop the traffic; the fast window drains on the backend and
+    // the clear propagates to both watches.
+    direct_watch.wait_for("backend latency alert never cleared", 60, |e| {
+        e.kind == EventKind::AlertCleared
+            && e.labels.get("alert").map(String::as_str) == Some("latency_p99")
+    });
+    cluster_watch.wait_for("stitched AlertCleared never reached the proxy", 60, |e| {
+        e.kind == EventKind::AlertCleared
+            && e.labels.get("alert").map(String::as_str) == Some("latency_p99")
+    });
+
+    direct_watch.unwatch();
+    cluster_watch.unwatch();
+    shutdown_server(PROXY3);
+    proxy.join().unwrap().expect("proxy exits cleanly");
+    shutdown_server(BACKEND5);
+    shutdown_server(BACKEND6);
+    b1.join().unwrap().expect("backend 5 exits cleanly");
+    b2.join().unwrap().expect("backend 6 exits cleanly");
 }

@@ -4,9 +4,11 @@
 //! under `artifacts/weights/`).
 
 use dither::coordinator::{
-    format_request, format_request_auto, serve, wait_ready, Engine, Reassembler, ServerConfig,
+    format_request, format_request_auto, format_unwatch, format_watch, parse_watch_ack, serve,
+    wait_ready, Engine, Reassembler, ServerConfig, WatchQuery,
 };
 use dither::data::{Dataset, Task};
+use dither::obs::{parse_event_line, EventKind};
 use dither::rounding::SchemeId;
 use dither::train::Zoo;
 use dither::util::json::Json;
@@ -108,6 +110,10 @@ fn tcp_server_end_to_end_sharded() {
         trace_rate: 1.0,
         trace_slow_us: 0,
         trace_buffer: 128,
+        slo_p99_us: 0,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 0,
     };
     let server = std::thread::spawn(move || serve(&cfg));
 
@@ -350,6 +356,10 @@ fn tcp_requests_pipeline_across_connections() {
         trace_rate: 0.0,
         trace_slow_us: 0,
         trace_buffer: 256,
+        slo_p99_us: 0,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 0,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     assert!(
@@ -430,6 +440,10 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
         trace_rate: 0.0,
         trace_slow_us: 0,
         trace_buffer: 256,
+        slo_p99_us: 0,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 0,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     let ds = Dataset::synthesize(Task::Digits, 8, 0xF1F0);
@@ -477,9 +491,13 @@ fn pipelined_connection_one_reply_per_id_bit_identical_to_lockstep() {
         "{line2}"
     );
     assert_eq!(hello.get("max_inflight").unwrap().as_f64(), Some(32.0), "{line2}");
-    // Protocol v3: trace-context propagation (the "trace" request field
-    // and the trace/metrics verbs) on top of the v2 scheme zoo.
-    assert_eq!(hello.get("proto").unwrap().as_f64(), Some(3.0), "{line2}");
+    // Protocol v4: the watch/unwatch event-subscription verbs on top of
+    // the v3 trace propagation and the v2 scheme zoo.
+    assert_eq!(hello.get("proto").unwrap().as_f64(), Some(4.0), "{line2}");
+    assert!(
+        features.iter().any(|f| f.as_str() == Some("events")),
+        "proto 4 must advertise the events feature: {line2}"
+    );
     // The handshake names the process-global kernel selected above.
     assert_eq!(hello.get("kernel").unwrap().as_str(), Some("wide"), "{line2}");
     let advertised = hello.get("schemes").unwrap().as_arr().unwrap();
@@ -563,6 +581,10 @@ fn pipelined_shutdown_mid_stream_drains_accepted_ids() {
         trace_rate: 0.0,
         trace_slow_us: 0,
         trace_buffer: 256,
+        slo_p99_us: 0,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 0,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     let ds = Dataset::synthesize(Task::Digits, 8, 0xD0D0);
@@ -639,6 +661,10 @@ fn exceeding_inflight_window_is_overloaded_with_offending_id() {
         trace_rate: 0.0,
         trace_slow_us: 0,
         trace_buffer: 256,
+        slo_p99_us: 0,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 0,
     };
     let server = std::thread::spawn(move || serve(&cfg));
     let ds = Dataset::synthesize(Task::Digits, 4, 0xBEEF);
@@ -721,6 +747,243 @@ fn exceeding_inflight_window_is_overloaded_with_offending_id() {
         stats.get("rejected").unwrap().as_f64().unwrap() >= 6.0,
         "window rejections must be counted: {line}"
     );
+
+    writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    server.join().unwrap().expect("server exits cleanly");
+}
+
+#[test]
+fn control_verbs_bypass_the_inflight_window() {
+    let addr = "127.0.0.1:17986";
+    let cfg = ServerConfig {
+        addr: addr.to_string(),
+        shards: 1,
+        max_batch: 32,
+        // Long linger: the accepted request pins the lone window slot for
+        // the whole exchange below.
+        max_wait_us: 500_000,
+        queue_cap: 64,
+        train_n: TRAIN_N,
+        seed: 7,
+        prewarm_bits: vec![4],
+        shadow_rate: 0.0,
+        plan_cache_mb: 64,
+        max_inflight: 1,
+        reply_timeout_ms: 120_000,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
+        slo_p99_us: 0,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 0,
+    };
+    let server = std::thread::spawn(move || serve(&cfg));
+    let ds = Dataset::synthesize(Task::Digits, 4, 0xFACE);
+
+    let stream = connect_when_up(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+
+    // One accepted request fills the window and lingers in its batch; a
+    // second is bounced. Every control verb sent while the slot is pinned
+    // must still be answered — none of them consume window slots.
+    writeln!(
+        writer,
+        "{}",
+        format_request(1, "digits_linear", 4, SchemeId::Dither, ds.images.row(0))
+    )
+    .unwrap();
+    writeln!(
+        writer,
+        "{}",
+        format_request(2, "digits_linear", 6, SchemeId::Dither, ds.images.row(1))
+    )
+    .unwrap();
+    writeln!(writer, "{{\"cmd\":\"ping\"}}").unwrap();
+    writeln!(writer, "{{\"cmd\":\"stats\"}}").unwrap();
+    writeln!(writer, "{{\"cmd\":\"trace\"}}").unwrap();
+    writeln!(writer, "{{\"cmd\":\"metrics\"}}").unwrap();
+    writeln!(writer, "{}", format_watch(&WatchQuery::default())).unwrap();
+    writer.flush().unwrap();
+
+    // Replies land in submission order (the infer lingers past them all):
+    // the bounce first, then each control ack.
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let bounce = Json::parse(line.trim()).expect("overloaded json");
+    assert_eq!(bounce.get("id").unwrap().as_f64(), Some(2.0), "{line}");
+    assert_eq!(bounce.get("overloaded").unwrap().as_bool(), Some(true), "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"), "ping at a full window: {line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"requests\""), "stats at a full window: {line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"count\""), "trace at a full window: {line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("dither_requests_total"), "metrics at a full window: {line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let watch_id = parse_watch_ack(line.trim()).expect("watch ack at a full window");
+    writeln!(writer, "{}", format_unwatch(watch_id)).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let ack = Json::parse(line.trim()).expect("unwatch ack json");
+    assert_eq!(ack.get("unwatched").unwrap().as_f64(), Some(watch_id as f64), "{line}");
+    assert_eq!(ack.get("removed").unwrap().as_bool(), Some(true), "{line}");
+
+    // The pinned request itself still completes once its batch fires.
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).expect("infer reply json");
+    assert_eq!(resp.get("id").unwrap().as_f64(), Some(1.0), "{line}");
+    assert!(resp.get("error").is_none(), "{line}");
+
+    writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    server.join().unwrap().expect("server exits cleanly");
+}
+
+#[test]
+fn slo_breach_fires_and_clears_through_a_watch() {
+    let addr = "127.0.0.1:17987";
+    let cfg = ServerConfig {
+        addr: addr.to_string(),
+        shards: 1,
+        max_batch: 8,
+        max_wait_us: 500,
+        queue_cap: 64,
+        train_n: TRAIN_N,
+        seed: 7,
+        prewarm_bits: vec![4],
+        shadow_rate: 0.0,
+        plan_cache_mb: 64,
+        max_inflight: 64,
+        reply_timeout_ms: 120_000,
+        trace_rate: 0.0,
+        trace_slow_us: 0,
+        trace_buffer: 256,
+        // A 1 µs latency budget: any served request breaches, so driving
+        // traffic injects the SLO breach and stopping it clears the fast
+        // window again.
+        slo_p99_us: 1,
+        slo_error_rate: 0.0,
+        slo_mse_factor: 0.0,
+        slo_eval_ms: 20,
+    };
+    let server = std::thread::spawn(move || serve(&cfg));
+    let ds = Dataset::synthesize(Task::Digits, 4, 0x51_0);
+
+    // Read one complete line from a timeout-armed socket. A timeout can
+    // fire mid-line; partial data stays accumulated in `buf` across calls
+    // and the buffer is only drained once a full line lands.
+    fn poll_line(reader: &mut BufReader<TcpStream>, buf: &mut String) -> Option<String> {
+        match reader.read_line(buf) {
+            Ok(0) | Err(_) => None,
+            Ok(_) => {
+                let line = std::mem::take(buf);
+                Some(line)
+            }
+        }
+    }
+
+    // Watcher connection, subscribed before any traffic.
+    let watch_stream = connect_when_up(addr);
+    watch_stream
+        .set_read_timeout(Some(Duration::from_millis(100)))
+        .unwrap();
+    let mut watch_writer = watch_stream.try_clone().unwrap();
+    let mut watch_reader = BufReader::new(watch_stream);
+    let mut wline = String::new();
+    writeln!(watch_writer, "{}", format_watch(&WatchQuery::default())).unwrap();
+    let ack_deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let watch_id = loop {
+        assert!(
+            std::time::Instant::now() < ack_deadline,
+            "watch ack never arrived"
+        );
+        if let Some(ack) = poll_line(&mut watch_reader, &mut wline) {
+            break parse_watch_ack(ack.trim()).expect("watch ack");
+        }
+    };
+
+    // Traffic connection: keep breaching until the alert streams out.
+    let stream = connect_when_up(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    let mut events = Vec::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let mut id = 0u64;
+    while !events
+        .iter()
+        .any(|(_, e): &(u64, dither::obs::Event)| e.kind == EventKind::AlertFired)
+    {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "latency alert never fired; events: {events:?}"
+        );
+        id += 1;
+        writeln!(
+            writer,
+            "{}",
+            format_request(id, "digits_linear", 4, SchemeId::Dither, ds.images.row(0))
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        if let Some(streamed) = poll_line(&mut watch_reader, &mut wline) {
+            if let Some(parsed) = parse_event_line(&streamed) {
+                assert_eq!(parsed.0, watch_id, "event tagged with the subscription id");
+                events.push(parsed);
+            }
+        }
+    }
+    let fired = events
+        .iter()
+        .find(|(_, e)| e.kind == EventKind::AlertFired)
+        .unwrap();
+    assert_eq!(
+        fired.1.labels.get("alert").map(String::as_str),
+        Some("latency_p99"),
+        "{:?}",
+        fired.1
+    );
+
+    // While the alert is active, the exposition must carry the gauge and
+    // the build-identity family.
+    writeln!(writer, "{{\"cmd\":\"metrics\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let exposition = dither::coordinator::parse_metrics_reply(&line).expect("metrics reply");
+    dither::trace::check_exposition(&exposition).expect("well-formed exposition");
+    for family in ["dither_alert_active", "dither_build_info", "dither_events_total"] {
+        assert!(exposition.contains(family), "missing {family}");
+    }
+
+    // Stop the traffic: the fast window drains and the alert clears.
+    let clear_deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Some(streamed) = poll_line(&mut watch_reader, &mut wline) {
+            if let Some((_, e)) = parse_event_line(&streamed) {
+                if e.kind == EventKind::AlertCleared {
+                    break;
+                }
+            }
+        }
+        assert!(
+            std::time::Instant::now() < clear_deadline,
+            "latency alert never cleared after traffic stopped"
+        );
+    }
 
     writeln!(writer, "{{\"cmd\":\"shutdown\"}}").unwrap();
     line.clear();

@@ -815,6 +815,92 @@ fn prop_metrics_reply_roundtrip_escapes_arbitrary_expositions() {
     });
 }
 
+#[test]
+fn prop_protocol_event_wire_roundtrip() {
+    // A journal event survives to_json → from_json exactly, and a full
+    // delivered watch line (format_event_line) parses back to the same
+    // (subscription id, event) — the contract both the cluster stitcher
+    // and every watch client rest on. Labels exercise JSON escaping.
+    use dither::obs::{format_event_line, parse_event_line, Event, EventKind, Severity};
+    use std::collections::BTreeMap;
+    struct EventGen;
+    impl Gen for EventGen {
+        type Item = (u64, Event);
+        fn gen(&self, rng: &mut Xoshiro256pp) -> (u64, Event) {
+            let severities = [Severity::Info, Severity::Warn, Severity::Error];
+            let mut labels = BTreeMap::new();
+            for i in 0..rng.below(5) {
+                let value: String = (0..rng.below(12))
+                    .map(|_| match rng.below(8) {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '{',
+                        _ => (rng.below(95) as u8 + 32) as char,
+                    })
+                    .collect();
+                labels.insert(format!("label-{i}"), value);
+            }
+            let event = Event {
+                seq: rng.below(1 << 48),
+                t_us: rng.below(1 << 48),
+                severity: severities[rng.below(3) as usize],
+                kind: EventKind::ALL[rng.below(EventKind::ALL.len() as u64) as usize],
+                labels,
+            };
+            (rng.below(1 << 32), event)
+        }
+    }
+    check(&EventGen, |(sub, event)| {
+        let line = format_event_line(*sub, event);
+        !line.contains('\n')
+            && Event::from_json(&event.to_json()).as_ref() == Some(event)
+            && parse_event_line(&line) == Some((*sub, event.clone()))
+    });
+}
+
+#[test]
+fn prop_protocol_watch_verbs_roundtrip_through_parse_message() {
+    // The v4 subscription verbs: format_watch → parse_message preserves
+    // every filter combination (and the zero query parses back to the
+    // default), format_unwatch carries its id, and both ack shapes echo
+    // exactly what the server granted.
+    use dither::coordinator::{
+        format_unwatch, format_unwatch_ack, format_watch, format_watch_ack, parse_message,
+        parse_watch_ack, Message, WatchQuery,
+    };
+    use dither::obs::{EventKind, Severity};
+    struct WatchGen;
+    impl Gen for WatchGen {
+        type Item = (WatchQuery, u64, bool);
+        fn gen(&self, rng: &mut Xoshiro256pp) -> (WatchQuery, u64, bool) {
+            let severities = [Severity::Info, Severity::Warn, Severity::Error];
+            let severity = rng
+                .bernoulli(0.7)
+                .then(|| severities[rng.below(3) as usize]);
+            let kinds = EventKind::ALL
+                .into_iter()
+                .filter(|_| rng.bernoulli(0.3))
+                .collect();
+            (WatchQuery { severity, kinds }, rng.below(1 << 32), rng.bernoulli(0.5))
+        }
+    }
+    check(&WatchGen, |(q, id, removed)| {
+        let watch_ok = match parse_message(&format_watch(q)) {
+            Ok(Message::Watch(parsed)) => parsed == *q,
+            _ => false,
+        };
+        let unwatch_ok = matches!(
+            parse_message(&format_unwatch(*id)),
+            Ok(Message::Unwatch(got)) if got == *id
+        );
+        let ack_ok = parse_watch_ack(&format_watch_ack(*id)) == Ok(*id);
+        let unack = Json::parse(&format_unwatch_ack(*id, *removed)).expect("unwatch ack json");
+        let unack_ok = unack.get("unwatched").and_then(Json::as_f64) == Some(*id as f64)
+            && unack.get("removed").and_then(Json::as_bool) == Some(*removed);
+        watch_ok && unwatch_ok && ack_ok && unack_ok
+    });
+}
+
 /// Generator for cluster hash-ring shapes: (member count, virtual nodes
 /// per member).
 fn ring_shape() -> Pair<RangeUsize, RangeUsize> {
